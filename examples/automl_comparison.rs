@@ -1,0 +1,27 @@
+//! Compare the two AutoML searchers (SMBO ~ Auto-Sklearn, GP ~ TPOT) and
+//! random search head-to-head on one dataset — the substrate the paper
+//! treats as the black box `A`.
+//!
+//!   cargo run --release --example automl_comparison [-- --dataset D6 --scale 0.05 --evals 16]
+
+use substrat::automl::{run_automl, AutoMlConfig, SearcherKind};
+use substrat::data::registry;
+use substrat::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let symbol = args.str_or("dataset", "D6");
+    let scale = args.f64_or("scale", 0.05);
+    let evals = args.usize_or("evals", 16);
+    let frame = registry::load(&symbol, scale, 7);
+    println!("dataset {symbol} {:?} ({} classes)", frame.shape(), frame.n_classes());
+    println!("{:<8} {:<34} {:>8} {:>9}", "searcher", "best pipeline", "cv acc", "time");
+    for searcher in [SearcherKind::Smbo, SearcherKind::Gp, SearcherKind::Random] {
+        let cfg = AutoMlConfig::new(searcher, evals, 7);
+        let res = run_automl(&frame, &cfg);
+        println!(
+            "{:<8} {:<34} {:>8.4} {:>8.2}s",
+            searcher.name(), res.best.describe(), res.best_cv, res.elapsed_s
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! Mini Figure-4/5 driver: sweep the DST size on one dataset and print
+//! the accuracy/time trade-off curve — the paper's §4.5 analysis at
+//! example scale.
+//!
+//!   cargo run --release --example dst_size_sweep [-- --dataset D3 --scale 0.05]
+
+use substrat::automl::SearcherKind;
+use substrat::experiments::fig4::{m_grid, n_grid};
+use substrat::experiments::{prepare, run_full, run_strategy, ExpConfig};
+use substrat::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = ExpConfig {
+        scale: args.f64_or("scale", 0.05),
+        reps: 1,
+        full_evals: args.usize_or("evals", 10),
+        searchers: vec![SearcherKind::Smbo],
+        datasets: vec![args.str_or("dataset", "D3")],
+        threads: 1,
+        ..Default::default()
+    };
+    let symbol = cfg.datasets[0].clone();
+    let prep = prepare(&symbol, &cfg, 0);
+    let full = run_full(&prep, SearcherKind::Smbo, &cfg, 0);
+    println!("{symbol} train {:?}, Full-AutoML acc={:.4} t={:.1}s", prep.train.shape(), full.test_acc, full.elapsed_s);
+    let (_, m0) = substrat::gendst::default_dst_size(prep.train.n_rows, prep.train.n_cols());
+
+    println!("\n-- n sweep (m=0.25M) --");
+    println!("{:<12} {:>8} {:>10} {:>10}", "n", "rows", "rel_acc", "time_red");
+    for (label, n) in n_grid(prep.train.n_rows) {
+        let rec = run_strategy(&prep, &symbol, "gendst", SearcherKind::Smbo, &full, &cfg, 0, Some((n, m0)));
+        println!("{label:<12} {n:>8} {:>10.4} {:>10.4}", rec.relative_accuracy(), rec.time_reduction());
+    }
+    let (n0, _) = substrat::gendst::default_dst_size(prep.train.n_rows, prep.train.n_cols());
+    println!("\n-- m sweep (n=sqrtN) --");
+    println!("{:<12} {:>8} {:>10} {:>10}", "m", "cols", "rel_acc", "time_red");
+    for (label, m) in m_grid(prep.train.n_cols()) {
+        let rec = run_strategy(&prep, &symbol, "gendst", SearcherKind::Smbo, &full, &cfg, 0, Some((n0, m)));
+        println!("{label:<12} {m:>8} {:>10.4} {:>10.4}", rec.relative_accuracy(), rec.time_reduction());
+    }
+}

@@ -1,0 +1,44 @@
+//! Quickstart: the SubStrat public API in ~30 lines.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Loads a small registry dataset, runs Full-AutoML, then SubStrat, and
+//! prints the paper's two metrics (time-reduction, relative-accuracy).
+
+use substrat::automl::{eval::fit_on_frame, run_automl, AutoMlConfig, SearcherKind};
+use substrat::baselines;
+use substrat::data::{registry, split, CodeMatrix};
+use substrat::measures::entropy::EntropyMeasure;
+use substrat::substrat::{run_substrat, SubStratConfig};
+use substrat::util::rng::Rng;
+use substrat::util::timer::Stopwatch;
+
+fn main() {
+    // 1. a dataset (D3 "car insurance" at 10% scale) + holdout split
+    let frame = registry::load("D3", 0.1, 42);
+    let mut rng = Rng::new(42);
+    let (train, test) = split::train_test_split(&frame, 0.25, &mut rng);
+    let codes = CodeMatrix::from_frame(&train);
+    println!("dataset {} -> train {:?} / test {:?}", frame.name, train.shape(), test.shape());
+
+    // 2. Full-AutoML reference: A(D, y) -> M*
+    let automl = AutoMlConfig::new(SearcherKind::Smbo, 12, 42);
+    let sw = Stopwatch::start();
+    let full = run_automl(&train, &automl);
+    let t_full = sw.elapsed_s();
+    let acc_full = fit_on_frame(&full.best, &train, &mut rng).accuracy_on(&test);
+    println!("Full-AutoML: {} acc={acc_full:.4} time={t_full:.2}s", full.best.describe());
+
+    // 3. SubStrat: Gen-DST subset -> AutoML on subset -> fine-tune
+    let strategy = baselines::by_name("gendst");
+    let run = run_substrat(
+        &train, &codes, &EntropyMeasure, strategy.as_ref(), &automl,
+        &SubStratConfig::default(),
+    );
+    let acc_sub = fit_on_frame(&run.final_config, &train, &mut rng).accuracy_on(&test);
+    println!("SubStrat:    {} acc={acc_sub:.4} time={:.2}s", run.final_config.describe(), run.total_time_s);
+
+    // 4. the paper's metrics
+    println!("time-reduction    = {:.1}%", 100.0 * (1.0 - run.total_time_s / t_full));
+    println!("relative-accuracy = {:.1}%", 100.0 * acc_sub / acc_full);
+}

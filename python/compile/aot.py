@@ -1,0 +1,72 @@
+"""AOT driver: lower every L2 graph in model.SPECS to HLO *text* and write
+artifacts/<name>.hlo.txt plus a manifest the rust runtime can sanity-check.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. Lowered with return_tuple=True; the rust side unwraps with
+Literal::to_tuple().
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import shapes
+from compile.model import SPECS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(s) -> str:
+    dt = {"float32": "f32", "int32": "i32"}[str(s.dtype)]
+    return f"{dt}[{','.join(str(d) for d in s.shape)}]"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = list(SPECS) if args.only is None else args.only.split(",")
+    manifest = []
+    for name in names:
+        fn, arg_specs = SPECS[name]
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_out = len(fn(*[jax.ShapeDtypeStruct(s.shape, s.dtype)
+                         for s in arg_specs])) if False else None
+        manifest.append((name, [_spec_str(s) for s in arg_specs]))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # tiny hand-rolled manifest (no json dep needed on the rust side)
+    man_path = os.path.join(args.out_dir, "manifest.txt")
+    with open(man_path, "w") as f:
+        f.write(f"# artifact manifest — shapes {shapes.N_PAD}x{shapes.M_PAD}"
+                f" K={shapes.K_BINS} B={shapes.B_BATCH} F={shapes.F_PAD}"
+                f" C={shapes.C_PAD} BATCH={shapes.BATCH}"
+                f" H={shapes.HIDDEN}\n")
+        for name, specs in manifest:
+            f.write(f"{name}: {' '.join(specs)}\n")
+    print(f"wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""L2: the jitted JAX compute graphs that get AOT-lowered to HLO text.
+
+Each public function here is one artifact (see aot.py's REGISTRY). All
+shapes are the fixed padded tiles from shapes.py; the rust runtime
+zero-pads real data and supplies masks. Every function returns a tuple —
+the lowering uses return_tuple=True, and the rust side unwraps with
+Literal::to_tuple().
+
+Functions fall into three groups:
+  * entropy_*      — Gen-DST fitness (calls the L1 Pallas kernel)
+  * logreg_* mlp_* — model-zoo train/predict steps (softmax CE, SGD + L2)
+  * kmeans_step    — Lloyd iteration for the KM baseline
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import shapes
+from compile.kernels.entropy import column_entropy
+
+
+# --------------------------------------------------------------------------
+# entropy / Gen-DST fitness
+# --------------------------------------------------------------------------
+
+def _entropy_scalar(codes, rmask, cmask):
+    h = column_entropy(codes, rmask)                      # (m,)
+    cmask = cmask.astype(jnp.float32)
+    return jnp.sum(h * cmask) / jnp.maximum(jnp.sum(cmask), 1.0)
+
+
+def entropy_subset(codes, rmask, cmask):
+    """Masked mean column entropy of one (N_PAD, M_PAD) code tile.
+
+    codes (N_PAD, M_PAD) i32; rmask (N_PAD,) f32; cmask (M_PAD,) f32.
+    Returns (H,) — scalar f32.
+    """
+    return (_entropy_scalar(codes, rmask, cmask),)
+
+
+def entropy_batch(codes, rmask, cmask):
+    """Fitness pre-image for a GA mini-batch: B candidates per PJRT call.
+
+    codes (B_BATCH, N_PAD, M_PAD) i32; rmask (B, N_PAD); cmask (B, M_PAD).
+    Returns (H,) with H (B_BATCH,) f32.
+    """
+    h = jax.lax.map(lambda t: _entropy_scalar(*t), (codes, rmask, cmask))
+    return (h,)
+
+
+def entropy_columns(codes, rmask):
+    """Per-column entropies of a full tile — used for H(D) column profiles
+    (information-gain style diagnostics and the fig4 sweeps).
+
+    codes (N_PAD, M_PAD) i32; rmask (N_PAD,) f32. Returns ((M_PAD,) f32,).
+    """
+    return (column_entropy(codes, rmask),)
+
+
+# --------------------------------------------------------------------------
+# logistic regression (softmax) — train step + predict
+# --------------------------------------------------------------------------
+
+def _ce_loss(logits, yoh, smask, cmask):
+    # mask padded classes to -1e9 so they get ~0 probability mass
+    logits = logits + (cmask - 1.0) * 1e9
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    per_row = -jnp.sum(yoh * logp, axis=-1) * smask
+    n = jnp.maximum(jnp.sum(smask), 1.0)
+    return jnp.sum(per_row) / n
+
+
+def logreg_train_step(x, yoh, smask, cmask, w, b, lr, l2):
+    """One full-batch SGD step of softmax regression.
+
+    x (BATCH, F_PAD) f32; yoh (BATCH, C_PAD) f32 one-hot; smask (BATCH,);
+    cmask (C_PAD,); w (F_PAD, C_PAD); b (C_PAD,); lr, l2 scalars.
+    Returns (w', b', loss).
+    """
+    def loss_fn(params):
+        w_, b_ = params
+        logits = x @ w_ + b_
+        data = _ce_loss(logits, yoh, smask, cmask)
+        reg = 0.5 * l2 * jnp.sum(w_ * w_)
+        return data + reg
+
+    loss, grads = jax.value_and_grad(loss_fn)((w, b))
+    gw, gb = grads
+    return (w - lr * gw, b - lr * gb, loss)
+
+
+def logreg_train_epoch(xb, yb, sb, cmask, w, b, lr, l2):
+    """EPOCH_TILES SGD steps in ONE call: scan over pre-batched tiles.
+
+    xb (EPOCH_TILES, BATCH, F_PAD); yb (EPOCH_TILES, BATCH, C_PAD);
+    sb (EPOCH_TILES, BATCH) sample masks (all-zero tiles are skipped via
+    masking); cmask (C_PAD,); w, b params; lr, l2 scalars.
+    Returns (w', b', mean_loss). Replaces EPOCH_TILES host<->XLA round
+    trips with one — the dominant cost of the per-batch path (§Perf).
+    """
+    def step(carry, tile):
+        w_, b_ = carry
+        x, yoh, smask = tile
+        def loss_fn(params):
+            w2, b2 = params
+            logits = x @ w2 + b2
+            data = _ce_loss(logits, yoh, smask, cmask)
+            return data + 0.5 * l2 * jnp.sum(w2 * w2)
+        loss, grads = jax.value_and_grad(loss_fn)((w_, b_))
+        gw, gb = grads
+        # all-padding tiles (sum smask == 0) must be a no-op
+        live = (jnp.sum(smask) > 0.0).astype(jnp.float32)
+        return (w_ - lr * live * gw, b_ - lr * live * gb), loss * live
+
+    (w_f, b_f), losses = jax.lax.scan(step, (w, b), (xb, yb, sb))
+    n_live = jnp.maximum(jnp.sum((jnp.sum(sb, axis=1) > 0.0)), 1.0)
+    return (w_f, b_f, jnp.sum(losses) / n_live)
+
+
+def logreg_predict(x, w, b, cmask):
+    """Masked logits for a batch. Returns ((BATCH, C_PAD) f32,)."""
+    logits = x @ w + b + (cmask - 1.0) * 1e9
+    return (logits,)
+
+
+# --------------------------------------------------------------------------
+# one-hidden-layer MLP — train step + predict
+# --------------------------------------------------------------------------
+
+def mlp_train_step(x, yoh, smask, cmask, w1, b1, w2, b2, lr, l2):
+    """One full-batch SGD step of a tanh MLP (F_PAD -> HIDDEN -> C_PAD).
+
+    Returns (w1', b1', w2', b2', loss).
+    """
+    def loss_fn(params):
+        w1_, b1_, w2_, b2_ = params
+        h = jnp.tanh(x @ w1_ + b1_)
+        logits = h @ w2_ + b2_
+        data = _ce_loss(logits, yoh, smask, cmask)
+        reg = 0.5 * l2 * (jnp.sum(w1_ * w1_) + jnp.sum(w2_ * w2_))
+        return data + reg
+
+    loss, grads = jax.value_and_grad(loss_fn)((w1, b1, w2, b2))
+    g1, gb1, g2, gb2 = grads
+    return (w1 - lr * g1, b1 - lr * gb1, w2 - lr * g2, b2 - lr * gb2, loss)
+
+
+def mlp_train_epoch(xb, yb, sb, cmask, w1, b1, w2, b2, lr, l2):
+    """MLP twin of logreg_train_epoch: EPOCH_TILES steps per call."""
+    def step(carry, tile):
+        w1_, b1_, w2_, b2_ = carry
+        x, yoh, smask = tile
+        def loss_fn(params):
+            a1, c1, a2, c2 = params
+            h = jnp.tanh(x @ a1 + c1)
+            logits = h @ a2 + c2
+            data = _ce_loss(logits, yoh, smask, cmask)
+            reg = 0.5 * l2 * (jnp.sum(a1 * a1) + jnp.sum(a2 * a2))
+            return data + reg
+        loss, grads = jax.value_and_grad(loss_fn)((w1_, b1_, w2_, b2_))
+        g1, gb1, g2, gb2 = grads
+        live = (jnp.sum(smask) > 0.0).astype(jnp.float32)
+        new = (
+            w1_ - lr * live * g1,
+            b1_ - lr * live * gb1,
+            w2_ - lr * live * g2,
+            b2_ - lr * live * gb2,
+        )
+        return new, loss * live
+
+    carry, losses = jax.lax.scan(step, (w1, b1, w2, b2), (xb, yb, sb))
+    w1_f, b1_f, w2_f, b2_f = carry
+    n_live = jnp.maximum(jnp.sum((jnp.sum(sb, axis=1) > 0.0)), 1.0)
+    return (w1_f, b1_f, w2_f, b2_f, jnp.sum(losses) / n_live)
+
+
+def mlp_predict(x, w1, b1, w2, b2, cmask):
+    """Masked logits. Returns ((BATCH, C_PAD) f32,)."""
+    h = jnp.tanh(x @ w1 + b1)
+    logits = h @ w2 + b2 + (cmask - 1.0) * 1e9
+    return (logits,)
+
+
+# --------------------------------------------------------------------------
+# k-means (Lloyd) step — KM baseline substrate
+# --------------------------------------------------------------------------
+
+def kmeans_step(points, pmask, centroids):
+    """One Lloyd iteration on padded points.
+
+    points (KM_POINTS, KM_DIM) f32; pmask (KM_POINTS,) f32;
+    centroids (KM_K, KM_DIM) f32. Padded points must be pushed far away by
+    the caller (or masked here): we add a large penalty so they never pull
+    centroids. Returns (new_centroids, assignments i32).
+    """
+    d2 = jnp.sum((points[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+    assign = jnp.argmin(d2, axis=1)
+    onehot = jax.nn.one_hot(assign, centroids.shape[0],
+                            dtype=jnp.float32) * pmask[:, None]
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ points
+    new_c = jnp.where(counts[:, None] > 0.0,
+                      sums / jnp.maximum(counts, 1.0)[:, None], centroids)
+    return (new_c, assign.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# example-arg specs (shared by aot.py and the pytest suite)
+# --------------------------------------------------------------------------
+
+def _f(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def _i(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.int32)
+
+
+S = shapes
+
+SPECS = {
+    "entropy_subset": (entropy_subset,
+                       [_i(S.N_PAD, S.M_PAD), _f(S.N_PAD), _f(S.M_PAD)]),
+    "entropy_batch": (entropy_batch,
+                      [_i(S.B_BATCH, S.N_PAD, S.M_PAD),
+                       _f(S.B_BATCH, S.N_PAD), _f(S.B_BATCH, S.M_PAD)]),
+    "entropy_columns": (entropy_columns, [_i(S.N_PAD, S.M_PAD), _f(S.N_PAD)]),
+    "logreg_train_step": (logreg_train_step,
+                          [_f(S.BATCH, S.F_PAD), _f(S.BATCH, S.C_PAD),
+                           _f(S.BATCH), _f(S.C_PAD),
+                           _f(S.F_PAD, S.C_PAD), _f(S.C_PAD), _f(), _f()]),
+    "logreg_train_epoch": (logreg_train_epoch,
+                           [_f(S.EPOCH_TILES, S.BATCH, S.F_PAD),
+                            _f(S.EPOCH_TILES, S.BATCH, S.C_PAD),
+                            _f(S.EPOCH_TILES, S.BATCH), _f(S.C_PAD),
+                            _f(S.F_PAD, S.C_PAD), _f(S.C_PAD), _f(), _f()]),
+    "logreg_predict": (logreg_predict,
+                       [_f(S.BATCH, S.F_PAD), _f(S.F_PAD, S.C_PAD),
+                        _f(S.C_PAD), _f(S.C_PAD)]),
+    "mlp_train_step": (mlp_train_step,
+                       [_f(S.BATCH, S.F_PAD), _f(S.BATCH, S.C_PAD),
+                        _f(S.BATCH), _f(S.C_PAD),
+                        _f(S.F_PAD, S.HIDDEN), _f(S.HIDDEN),
+                        _f(S.HIDDEN, S.C_PAD), _f(S.C_PAD), _f(), _f()]),
+    "mlp_train_epoch": (mlp_train_epoch,
+                        [_f(S.EPOCH_TILES, S.BATCH, S.F_PAD),
+                         _f(S.EPOCH_TILES, S.BATCH, S.C_PAD),
+                         _f(S.EPOCH_TILES, S.BATCH), _f(S.C_PAD),
+                         _f(S.F_PAD, S.HIDDEN), _f(S.HIDDEN),
+                         _f(S.HIDDEN, S.C_PAD), _f(S.C_PAD), _f(), _f()]),
+    "mlp_predict": (mlp_predict,
+                    [_f(S.BATCH, S.F_PAD), _f(S.F_PAD, S.HIDDEN),
+                     _f(S.HIDDEN), _f(S.HIDDEN, S.C_PAD), _f(S.C_PAD),
+                     _f(S.C_PAD)]),
+    "kmeans_step": (kmeans_step,
+                    [_f(S.KM_POINTS, S.KM_DIM), _f(S.KM_POINTS),
+                     _f(S.KM_K, S.KM_DIM)]),
+}

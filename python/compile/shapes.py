@@ -1,0 +1,31 @@
+"""Fixed AOT artifact shapes, shared between the python compile path and the
+rust runtime (mirrored in ``rust/src/runtime/shapes.rs`` — keep in sync).
+
+Every artifact is compiled once for these padded shapes; the rust side
+zero-pads real data and passes row/col/sample masks. Sizing rationale (see
+DESIGN.md §6): n = sqrt(N) <= 1000 for every Table-2 dataset (max N = 1M),
+m = ceil(0.25 * 123) = 31 for the widest dataset, so (1024, 32) covers all
+paper workloads with a single artifact.
+"""
+
+# --- entropy / Gen-DST fitness -------------------------------------------
+N_PAD = 1024      # max subset rows (sqrt(1M) = 1000 rounded up to a tile)
+M_PAD = 32        # max subset columns (0.25 * 123 = 31 rounded up)
+K_BINS = 64       # per-column value codes (quantile binning at ingest)
+B_BATCH = 16      # GA candidates evaluated per PJRT call
+M_BLK = 8         # pallas column-block (VMEM tile width)
+
+# --- model training (logreg / mlp) ----------------------------------------
+F_PAD = 128       # feature dim after padding (widest dataset: 123 columns)
+C_PAD = 16        # class dim after padding (max classes in Table 2: 10)
+BATCH = 256       # training mini-batch rows
+HIDDEN = 64       # MLP hidden width
+EPOCH_TILES = 16  # mini-batches scanned inside one train_epoch call —
+                  # one PJRT call trains on EPOCH_TILES*BATCH = 4096 rows
+                  # (order-of-magnitude fewer host<->XLA boundary
+                  # crossings than per-batch stepping; see §Perf)
+
+# --- k-means baseline ------------------------------------------------------
+KM_POINTS = 1024  # points per assignment call
+KM_DIM = 32       # point feature dim (column space padded)
+KM_K = 32         # max centroids

@@ -1,0 +1,200 @@
+"""L1 correctness: the Pallas entropy kernel vs the pure-jnp oracle and
+hand-computed ground truth, including the paper's worked Example 3.5.
+hypothesis sweeps shapes / bin counts / masks.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import shapes
+from compile.kernels.entropy import column_entropy
+from compile.kernels.ref import (column_entropy_ref, dataset_entropy_ref,
+                                 kmeans_step_ref)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def np_column_entropy(codes: np.ndarray, rmask: np.ndarray) -> np.ndarray:
+    """Third, numpy-only implementation (np.unique based) as ground truth."""
+    active = codes[rmask.astype(bool)]
+    out = []
+    for j in range(codes.shape[1]):
+        _, counts = np.unique(active[:, j], return_counts=True)
+        p = counts / counts.sum()
+        out.append(float(-(p * np.log2(p)).sum()))
+    return np.array(out, dtype=np.float32)
+
+
+def rand_case(rng, n, m, k_bins, frac_active):
+    codes = rng.integers(0, k_bins, size=(n, m)).astype(np.int32)
+    n_act = max(1, int(round(frac_active * n)))
+    rmask = np.zeros(n, dtype=np.float32)
+    rmask[rng.permutation(n)[:n_act]] = 1.0
+    return codes, rmask
+
+
+# --------------------------------------------------------------------------
+# fixed cases
+# --------------------------------------------------------------------------
+
+class TestFixed:
+    def test_uniform_two_values_is_one_bit(self):
+        codes = np.array([[0], [1]] * 8, dtype=np.int32)
+        codes = np.tile(codes, (1, shapes.M_BLK))
+        rmask = np.ones(16, dtype=np.float32)
+        h = column_entropy(jnp.asarray(codes), jnp.asarray(rmask), k_bins=4)
+        np.testing.assert_allclose(np.asarray(h), 1.0, rtol=1e-6)
+
+    def test_constant_column_zero_entropy(self):
+        codes = np.zeros((32, shapes.M_BLK), dtype=np.int32)
+        rmask = np.ones(32, dtype=np.float32)
+        h = column_entropy(jnp.asarray(codes), jnp.asarray(rmask), k_bins=8)
+        np.testing.assert_allclose(np.asarray(h), 0.0, atol=1e-7)
+
+    def test_uniform_k_values_is_log2k(self):
+        k = 8
+        codes = np.arange(64, dtype=np.int32).reshape(64, 1) % k
+        codes = np.tile(codes, (1, shapes.M_BLK))
+        rmask = np.ones(64, dtype=np.float32)
+        h = column_entropy(jnp.asarray(codes), jnp.asarray(rmask), k_bins=16)
+        np.testing.assert_allclose(np.asarray(h), math.log2(k), rtol=1e-6)
+
+    def test_row_mask_excludes_rows(self):
+        # active rows all hold 0; masked rows hold 1..k — entropy must be 0
+        codes = np.zeros((32, shapes.M_BLK), dtype=np.int32)
+        codes[16:] = 3
+        rmask = np.zeros(32, dtype=np.float32)
+        rmask[:16] = 1.0
+        h = column_entropy(jnp.asarray(codes), jnp.asarray(rmask), k_bins=8)
+        np.testing.assert_allclose(np.asarray(h), 0.0, atol=1e-7)
+
+    def test_paper_example_3_5_full_dataset(self):
+        """Table 1 flight-review dataset: H(D) = (2.65+1+1+1.4+0.97)/5."""
+        age = [25, 62, 25, 41, 27, 41, 20, 25, 13, 52]
+        gender = [1, 1, 0, 0, 1, 1, 0, 0, 0, 1]
+        dist = [460] * 5 + [1061] * 5
+        delay = [18, 0, 40, 0, 0, 0, 0, 51, 0, 0]
+        target = [1, 0, 1, 1, 1, 0, 0, 0, 1, 1]
+        cols = [age, gender, dist, delay, target]
+        # encode values to codes (any bijection works for entropy)
+        codes = np.zeros((10, shapes.M_BLK), dtype=np.int32)
+        for j, col in enumerate(cols):
+            uniq = {v: i for i, v in enumerate(dict.fromkeys(col))}
+            codes[:, j] = [uniq[v] for v in col]
+        rmask = np.ones(10, dtype=np.float32)
+        h = np.asarray(column_entropy(jnp.asarray(codes), jnp.asarray(rmask),
+                                      k_bins=16))
+        np.testing.assert_allclose(h[:5], [2.646, 1.0, 1.0, 1.357, 0.971],
+                                   atol=5e-3)
+        cmask = np.zeros(shapes.M_BLK, dtype=np.float32)
+        cmask[:5] = 1.0
+        hd = dataset_entropy_ref(jnp.asarray(codes), jnp.asarray(rmask),
+                                 jnp.asarray(cmask), 16)
+        assert abs(float(hd) - 1.395) < 5e-3
+
+    def test_paper_example_3_5_green_subset(self):
+        """d_green = rows (1,2,3,6,8), cols (Age, Delay, target): H ~ 1.42."""
+        age = [25, 62, 25, 41, 27, 41, 20, 25, 13, 52]
+        delay = [18, 0, 40, 0, 0, 0, 0, 51, 0, 0]
+        target = [1, 0, 1, 1, 1, 0, 0, 0, 1, 1]
+        rows = [0, 1, 2, 5, 7]
+        cols = [age, delay, target]
+        codes = np.zeros((5, shapes.M_BLK), dtype=np.int32)
+        for j, col in enumerate(cols):
+            sub = [col[i] for i in rows]
+            uniq = {v: i for i, v in enumerate(dict.fromkeys(sub))}
+            codes[:, j] = [uniq[v] for v in sub]
+        rmask = np.ones(5, dtype=np.float32)
+        h = np.asarray(column_entropy(jnp.asarray(codes), jnp.asarray(rmask),
+                                      k_bins=16))
+        # paper: (1.37 + 1.92 + 0.97) / 3 = 1.42
+        np.testing.assert_allclose(h[:3], [1.371, 1.922, 0.971], atol=5e-3)
+        assert abs(float(h[:3].mean()) - 1.42) < 5e-3
+
+
+# --------------------------------------------------------------------------
+# kernel vs oracle vs numpy — hypothesis sweep
+# --------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 200),
+    mb=st.integers(1, 4),
+    k_bins=st.sampled_from([2, 4, 16, 64]),
+    frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_and_numpy(n, mb, k_bins, frac, seed):
+    rng = np.random.default_rng(seed)
+    m = mb * shapes.M_BLK
+    codes, rmask = rand_case(rng, n, m, k_bins, frac)
+    got = np.asarray(column_entropy(jnp.asarray(codes), jnp.asarray(rmask),
+                                    k_bins=k_bins))
+    ref = np.asarray(column_entropy_ref(jnp.asarray(codes),
+                                        jnp.asarray(rmask), k_bins))
+    npy = np_column_entropy(codes, rmask)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, npy, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 100),
+    k_bins=st.sampled_from([2, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_entropy_invariant_under_code_relabeling(n, k_bins, seed):
+    """Entropy depends only on the frequency profile, not code identity."""
+    rng = np.random.default_rng(seed)
+    m = shapes.M_BLK
+    codes, rmask = rand_case(rng, n, m, k_bins, 1.0)
+    perm = rng.permutation(k_bins).astype(np.int32)
+    relabeled = perm[codes]
+    h1 = np.asarray(column_entropy(jnp.asarray(codes), jnp.asarray(rmask),
+                                   k_bins=k_bins))
+    h2 = np.asarray(column_entropy(jnp.asarray(relabeled),
+                                   jnp.asarray(rmask), k_bins=k_bins))
+    np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 100), seed=st.integers(0, 2**31 - 1))
+def test_entropy_bounded_by_log2_support(n, seed):
+    rng = np.random.default_rng(seed)
+    codes, rmask = rand_case(rng, n, shapes.M_BLK, 16, 1.0)
+    h = np.asarray(column_entropy(jnp.asarray(codes), jnp.asarray(rmask),
+                                  k_bins=16))
+    n_act = int(rmask.sum())
+    assert (h >= -1e-6).all()
+    assert (h <= math.log2(max(2, min(16, n_act))) + 1e-5).all()
+
+
+# --------------------------------------------------------------------------
+# kmeans oracle sanity (the artifact graph reuses the same formula)
+# --------------------------------------------------------------------------
+
+class TestKmeansRef:
+    def test_converged_fixture(self):
+        pts = np.array([[0.0, 0.0], [0.0, 1.0], [10.0, 10.0], [10.0, 11.0]],
+                       dtype=np.float32)
+        cent = np.array([[0.0, 0.5], [10.0, 10.5]], dtype=np.float32)
+        pmask = np.ones(4, dtype=np.float32)
+        new_c, assign = kmeans_step_ref(jnp.asarray(pts), jnp.asarray(pmask),
+                                        jnp.asarray(cent))
+        np.testing.assert_allclose(np.asarray(new_c), cent, atol=1e-6)
+        assert list(np.asarray(assign)) == [0, 0, 1, 1]
+
+    def test_masked_points_do_not_pull(self):
+        pts = np.array([[0.0, 0.0], [100.0, 100.0]], dtype=np.float32)
+        cent = np.array([[0.0, 0.0], [50.0, 50.0]], dtype=np.float32)
+        pmask = np.array([1.0, 0.0], dtype=np.float32)
+        new_c, _ = kmeans_step_ref(jnp.asarray(pts), jnp.asarray(pmask),
+                                   jnp.asarray(cent))
+        # centroid 1 has no active points -> unchanged
+        np.testing.assert_allclose(np.asarray(new_c)[1], cent[1], atol=1e-6)

@@ -1,0 +1,237 @@
+"""L2 correctness: train steps learn, predictions are masked, the batched
+entropy graph matches the scalar one, and every SPECS entry lowers to
+parseable HLO text.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import shapes as S
+from compile.aot import to_hlo_text
+from compile.kernels.ref import dataset_entropy_ref
+from compile.model import (SPECS, entropy_batch, entropy_subset,
+                           kmeans_step, logreg_predict, logreg_train_epoch,
+                           logreg_train_step, mlp_predict, mlp_train_epoch,
+                           mlp_train_step)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _blob_problem(rng, n_cls=3, sep=4.0):
+    """Linearly separable gaussian blobs in the padded feature space."""
+    x = np.zeros((S.BATCH, S.F_PAD), dtype=np.float32)
+    y = np.zeros(S.BATCH, dtype=np.int64)
+    centers = rng.normal(0, sep, size=(n_cls, 8)).astype(np.float32)
+    for i in range(S.BATCH):
+        c = i % n_cls
+        x[i, :8] = centers[c] + rng.normal(0, 1.0, 8)
+        y[i] = c
+    yoh = np.zeros((S.BATCH, S.C_PAD), dtype=np.float32)
+    yoh[np.arange(S.BATCH), y] = 1.0
+    smask = np.ones(S.BATCH, dtype=np.float32)
+    cmask = np.zeros(S.C_PAD, dtype=np.float32)
+    cmask[:n_cls] = 1.0
+    return x, y, yoh, smask, cmask
+
+
+class TestLogreg:
+    def test_loss_decreases_and_learns(self):
+        rng = np.random.default_rng(0)
+        x, y, yoh, smask, cmask = _blob_problem(rng)
+        w = np.zeros((S.F_PAD, S.C_PAD), dtype=np.float32)
+        b = np.zeros(S.C_PAD, dtype=np.float32)
+        losses = []
+        step = jax.jit(logreg_train_step)
+        for _ in range(60):
+            w, b, loss = step(x, yoh, smask, cmask, w, b,
+                              jnp.float32(0.5), jnp.float32(1e-4))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.5
+        (logits,) = logreg_predict(x, w, b, cmask)
+        acc = float((np.argmax(np.asarray(logits), axis=1) == y).mean())
+        assert acc > 0.9
+
+    def test_padded_classes_never_predicted(self):
+        rng = np.random.default_rng(1)
+        x, y, yoh, smask, cmask = _blob_problem(rng, n_cls=3)
+        w = rng.normal(0, 1, (S.F_PAD, S.C_PAD)).astype(np.float32)
+        b = rng.normal(0, 1, S.C_PAD).astype(np.float32)
+        (logits,) = logreg_predict(x, w, b, cmask)
+        pred = np.argmax(np.asarray(logits), axis=1)
+        assert (pred < 3).all()
+
+    def test_sample_mask_freezes_masked_rows_influence(self):
+        """Gradient with smask zeroing rows == gradient on those rows gone."""
+        rng = np.random.default_rng(2)
+        x, y, yoh, smask, cmask = _blob_problem(rng)
+        smask2 = smask.copy()
+        smask2[100:] = 0.0
+        w = rng.normal(0, 0.1, (S.F_PAD, S.C_PAD)).astype(np.float32)
+        b = np.zeros(S.C_PAD, dtype=np.float32)
+        w1, b1, _ = logreg_train_step(x, yoh, smask2, cmask, w, b,
+                                      jnp.float32(0.1), jnp.float32(0.0))
+        x3 = x.copy()
+        x3[100:] = 999.0  # garbage in masked rows must not matter
+        w2, b2, _ = logreg_train_step(x3, yoh, smask2, cmask, w, b,
+                                      jnp.float32(0.1), jnp.float32(0.0))
+        np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-5)
+
+    def test_l2_shrinks_weights(self):
+        rng = np.random.default_rng(3)
+        x, y, yoh, smask, cmask = _blob_problem(rng)
+        w = rng.normal(0, 1, (S.F_PAD, S.C_PAD)).astype(np.float32)
+        b = np.zeros(S.C_PAD, dtype=np.float32)
+        w_hi, _, _ = logreg_train_step(x, yoh, smask, cmask, w, b,
+                                       jnp.float32(0.1), jnp.float32(1.0))
+        w_lo, _, _ = logreg_train_step(x, yoh, smask, cmask, w, b,
+                                       jnp.float32(0.1), jnp.float32(0.0))
+        assert float(jnp.sum(w_hi ** 2)) < float(jnp.sum(w_lo ** 2))
+
+
+class TestMlp:
+    def test_learns_xor_like(self):
+        rng = np.random.default_rng(4)
+        x = np.zeros((S.BATCH, S.F_PAD), dtype=np.float32)
+        raw = rng.uniform(-1, 1, size=(S.BATCH, 2)).astype(np.float32)
+        x[:, :2] = raw
+        y = ((raw[:, 0] * raw[:, 1]) > 0).astype(np.int64)  # XOR quadrants
+        yoh = np.zeros((S.BATCH, S.C_PAD), dtype=np.float32)
+        yoh[np.arange(S.BATCH), y] = 1.0
+        smask = np.ones(S.BATCH, dtype=np.float32)
+        cmask = np.zeros(S.C_PAD, dtype=np.float32)
+        cmask[:2] = 1.0
+        w1 = (rng.normal(0, 0.5, (S.F_PAD, S.HIDDEN))).astype(np.float32)
+        b1 = np.zeros(S.HIDDEN, dtype=np.float32)
+        w2 = (rng.normal(0, 0.5, (S.HIDDEN, S.C_PAD))).astype(np.float32)
+        b2 = np.zeros(S.C_PAD, dtype=np.float32)
+        step = jax.jit(mlp_train_step)
+        for _ in range(300):
+            w1, b1, w2, b2, loss = step(x, yoh, smask, cmask, w1, b1, w2, b2,
+                                        jnp.float32(0.3), jnp.float32(1e-5))
+        (logits,) = mlp_predict(x, w1, b1, w2, b2, cmask)
+        acc = float((np.argmax(np.asarray(logits), axis=1) == y).mean())
+        assert acc > 0.9  # logreg cannot do this; the MLP must
+
+
+class TestEpochScan:
+    """The epoch-scan artifacts must equal EPOCH_TILES sequential steps."""
+
+    def _tiles(self, rng, n_live):
+        xb = np.zeros((S.EPOCH_TILES, S.BATCH, S.F_PAD), dtype=np.float32)
+        yb = np.zeros((S.EPOCH_TILES, S.BATCH, S.C_PAD), dtype=np.float32)
+        sb = np.zeros((S.EPOCH_TILES, S.BATCH), dtype=np.float32)
+        for t in range(n_live):
+            xb[t, :, :6] = rng.normal(0, 1, (S.BATCH, 6)).astype(np.float32)
+            cls = rng.integers(0, 2, S.BATCH)
+            yb[t, np.arange(S.BATCH), cls] = 1.0
+            sb[t, :] = 1.0
+        return xb, yb, sb
+
+    def test_logreg_epoch_equals_sequential_steps(self):
+        rng = np.random.default_rng(5)
+        xb, yb, sb = self._tiles(rng, S.EPOCH_TILES)
+        cmask = np.zeros(S.C_PAD, dtype=np.float32)
+        cmask[:2] = 1.0
+        w0 = rng.normal(0, 0.1, (S.F_PAD, S.C_PAD)).astype(np.float32)
+        b0 = np.zeros(S.C_PAD, dtype=np.float32)
+        lr, l2 = jnp.float32(0.1), jnp.float32(1e-4)
+        we, be, _ = logreg_train_epoch(xb, yb, sb, cmask, w0, b0, lr, l2)
+        w, b = w0, b0
+        for t in range(S.EPOCH_TILES):
+            w, b, _ = logreg_train_step(xb[t], yb[t], sb[t], cmask, w, b, lr, l2)
+        np.testing.assert_allclose(np.asarray(we), np.asarray(w),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(be), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_padding_tiles_are_noops(self):
+        rng = np.random.default_rng(6)
+        xb, yb, sb = self._tiles(rng, 3)  # only 3 live tiles
+        cmask = np.zeros(S.C_PAD, dtype=np.float32)
+        cmask[:2] = 1.0
+        w0 = rng.normal(0, 0.1, (S.F_PAD, S.HIDDEN)).astype(np.float32)
+        b0 = np.zeros(S.HIDDEN, dtype=np.float32)
+        w1 = rng.normal(0, 0.1, (S.HIDDEN, S.C_PAD)).astype(np.float32)
+        b1 = np.zeros(S.C_PAD, dtype=np.float32)
+        lr, l2 = jnp.float32(0.1), jnp.float32(0.0)
+        we = mlp_train_epoch(xb, yb, sb, cmask, w0, b0, w1, b1, lr, l2)
+        # sequential over the 3 live tiles only
+        p = (w0, b0, w1, b1)
+        for t in range(3):
+            out = mlp_train_step(xb[t], yb[t], sb[t], cmask, *p, lr, l2)
+            p = out[:4]
+        for got, want in zip(we[:4], p):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-5)
+
+
+class TestEntropyGraphs:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_batch_matches_scalar(self, seed):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, S.K_BINS,
+                             size=(S.B_BATCH, S.N_PAD, S.M_PAD)).astype(
+                                 np.int32)
+        rmask = (rng.uniform(size=(S.B_BATCH, S.N_PAD)) < 0.3).astype(
+            np.float32)
+        rmask[:, 0] = 1.0  # at least one active row
+        cmask = (rng.uniform(size=(S.B_BATCH, S.M_PAD)) < 0.5).astype(
+            np.float32)
+        cmask[:, 0] = 1.0
+        (hb,) = entropy_batch(codes, rmask, cmask)
+        for i in range(S.B_BATCH):
+            (hs,) = entropy_subset(codes[i], rmask[i], cmask[i])
+            assert abs(float(hb[i]) - float(hs)) < 1e-5
+
+    def test_scalar_matches_oracle(self):
+        rng = np.random.default_rng(7)
+        codes = rng.integers(0, S.K_BINS,
+                             size=(S.N_PAD, S.M_PAD)).astype(np.int32)
+        rmask = np.zeros(S.N_PAD, dtype=np.float32)
+        rmask[:100] = 1.0
+        cmask = np.zeros(S.M_PAD, dtype=np.float32)
+        cmask[:7] = 1.0
+        (h,) = entropy_subset(codes, rmask, cmask)
+        ref = dataset_entropy_ref(jnp.asarray(codes), jnp.asarray(rmask),
+                                  jnp.asarray(cmask), S.K_BINS)
+        assert abs(float(h) - float(ref)) < 1e-5
+
+
+class TestKmeansGraph:
+    def test_lloyd_reduces_inertia(self):
+        rng = np.random.default_rng(8)
+        pts = np.zeros((S.KM_POINTS, S.KM_DIM), dtype=np.float32)
+        pts[:, :2] = np.concatenate([
+            rng.normal(0, 1, (S.KM_POINTS // 2, 2)),
+            rng.normal(8, 1, (S.KM_POINTS - S.KM_POINTS // 2, 2)),
+        ]).astype(np.float32)
+        pmask = np.ones(S.KM_POINTS, dtype=np.float32)
+        cent = pts[rng.permutation(S.KM_POINTS)[:S.KM_K]].copy()
+
+        def inertia(c):
+            d2 = ((pts[:, None, :] - c[None]) ** 2).sum(-1)
+            return float(d2.min(axis=1).sum())
+
+        i0 = inertia(cent)
+        for _ in range(5):
+            cent, assign = kmeans_step(pts, pmask, cent)
+            cent = np.asarray(cent)
+        assert inertia(cent) < i0
+
+
+class TestAotLowering:
+    @pytest.mark.parametrize("name", sorted(SPECS))
+    def test_lowers_to_parseable_hlo_text(self, name):
+        fn, arg_specs = SPECS[name]
+        text = to_hlo_text(jax.jit(fn).lower(*arg_specs))
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # 64-bit ids are exactly what xla_extension 0.5.1 rejects — the
+        # text format carries no ids, so presence of text is the guarantee;
+        # still check it is non-trivial.
+        assert len(text) > 500

@@ -1,0 +1,28 @@
+//! cargo-bench driver regenerating the paper's Figure 4 DST-size heatmaps at a
+//! CI-sized scale (one cheap dataset, one rep). For publication-scale
+//! numbers use `substrat exp fig4` with the full defaults — this bench
+//! exists so `cargo bench` regenerates every paper artifact end to end.
+
+use std::path::PathBuf;
+use substrat::automl::SearcherKind;
+use substrat::experiments::{fig4, ExpConfig};
+use substrat::util::timer::Stopwatch;
+
+fn main() {
+    let cfg = ExpConfig {
+        scale: 0.05,
+        min_rows: 2_000,
+        max_rows: 4_000,
+        reps: 1,
+        full_evals: 6,
+        searchers: vec![SearcherKind::Smbo],
+        datasets: vec!["D2".into(), "D3".into()],
+        threads: 1,
+        out_dir: PathBuf::from("results/bench_fig4"),
+        ..Default::default()
+    };
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    let sw = Stopwatch::start();
+    let _ = fig4::run(&cfg);
+    println!("bench fig4 total: {:.2}s (quick mode)", sw.elapsed_s());
+}

@@ -1,0 +1,25 @@
+//! End-to-end Gen-DST benchmark at the paper's hyper-parameters
+//! (psi=30, phi=100) across dataset scales — the L3 §Perf instrument for
+//! the GA loop (allocation, selection, fitness caching).
+
+use substrat::data::{registry, CodeMatrix};
+use substrat::gendst::{default_dst_size, gen_dst, GenDstConfig};
+use substrat::measures::entropy::EntropyMeasure;
+use substrat::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    for (symbol, scale) in [("D2", 0.4), ("D3", 1.0), ("D1", 0.1)] {
+        let f = registry::load(symbol, scale, 7);
+        let codes = CodeMatrix::from_frame(&f);
+        let (n, m) = default_dst_size(f.n_rows, f.n_cols());
+        let cfg = GenDstConfig { seed: 1, ..Default::default() };
+        b.bench(
+            &format!("gen_dst {symbol} {}x{} -> ({n},{m})", f.n_rows, f.n_cols()),
+            || {
+                black_box(gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg));
+            },
+        );
+    }
+    println!("\n{}", b.markdown());
+}

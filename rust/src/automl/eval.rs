@@ -1,0 +1,153 @@
+//! Pipeline evaluation: fit the full pipeline (scaler → selector →
+//! model) per CV fold and return the mean validation accuracy. This is
+//! the expensive inner loop every AutoML searcher pays per configuration
+//! — and the cost that scales with dataset size, which is exactly what
+//! SubStrat attacks.
+
+use crate::data::{split, Frame, Matrix};
+use crate::models::preproc::{FittedScaler, FittedSelector};
+use crate::models::{accuracy, Classifier};
+use crate::automl::space::PipelineConfig;
+use crate::util::rng::Rng;
+
+/// A fully fitted pipeline, ready to predict on raw feature matrices.
+pub struct FittedPipeline {
+    pub config: PipelineConfig,
+    scaler: FittedScaler,
+    selector: FittedSelector,
+    model: Box<dyn Classifier>,
+}
+
+impl FittedPipeline {
+    pub fn predict(&self, x: &Matrix) -> Vec<u32> {
+        let xs = self.scaler.transform(x);
+        let xsel = self.selector.transform(&xs);
+        self.model.predict(&xsel)
+    }
+
+    pub fn accuracy_on(&self, frame: &Frame) -> f64 {
+        let (x, y) = frame.to_xy();
+        accuracy(&self.predict(&x), &y)
+    }
+}
+
+/// Fit a pipeline configuration on (x, y).
+pub fn fit_pipeline(
+    cfg: &PipelineConfig,
+    x: &Matrix,
+    y: &[u32],
+    n_classes: usize,
+    rng: &mut Rng,
+) -> FittedPipeline {
+    let scaler = FittedScaler::fit(cfg.scaler, x);
+    let xs = scaler.transform(x);
+    let selector = FittedSelector::fit(cfg.selector, &xs, y, n_classes);
+    let xsel = selector.transform(&xs);
+    let model = cfg.model.fit(&xsel, y, n_classes, rng);
+    FittedPipeline {
+        config: cfg.clone(),
+        scaler,
+        selector,
+        model,
+    }
+}
+
+/// Fit on a whole frame (final refit after the search picks a winner).
+pub fn fit_on_frame(cfg: &PipelineConfig, frame: &Frame, rng: &mut Rng) -> FittedPipeline {
+    let (x, y) = frame.to_xy();
+    fit_pipeline(cfg, &x, &y, frame.n_classes(), rng)
+}
+
+/// Mean stratified k-fold CV accuracy of a configuration on a frame.
+/// This is the searchers' objective.
+pub fn cv_score(cfg: &PipelineConfig, frame: &Frame, k_folds: usize, rng: &mut Rng) -> f64 {
+    let (x, y) = frame.to_xy();
+    let n_classes = frame.n_classes();
+    let folds = split::stratified_kfold(&y, k_folds, rng);
+    let mut accs = Vec::with_capacity(folds.len());
+    for (train_rows, valid_rows) in folds {
+        let (xt, yt) = gather(&x, &y, &train_rows);
+        let (xv, yv) = gather(&x, &y, &valid_rows);
+        if yt.is_empty() || yv.is_empty() {
+            continue;
+        }
+        let pipe = fit_pipeline(cfg, &xt, &yt, n_classes, rng);
+        accs.push(accuracy(&pipe.predict(&xv), &yv));
+    }
+    crate::util::stats::mean(&accs)
+}
+
+fn gather(x: &Matrix, y: &[u32], rows: &[u32]) -> (Matrix, Vec<u32>) {
+    let mut xm = Matrix::zeros(rows.len(), x.cols);
+    let mut ym = Vec::with_capacity(rows.len());
+    for (i, &r) in rows.iter().enumerate() {
+        xm.data[i * x.cols..(i + 1) * x.cols].copy_from_slice(x.row(r as usize));
+        ym.push(y[r as usize]);
+    }
+    (xm, ym)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+    use crate::models::preproc::{ScalerSpec, SelectorSpec};
+    use crate::models::ModelSpec;
+
+    fn tree_cfg() -> PipelineConfig {
+        PipelineConfig {
+            scaler: ScalerSpec::Standard,
+            selector: SelectorSpec::None,
+            model: ModelSpec::Tree {
+                max_depth: 8,
+                min_leaf: 2,
+            },
+        }
+    }
+
+    #[test]
+    fn cv_score_reasonable_on_learnable_data() {
+        let f = registry::load("D3", 0.08, 1); // linear, 800 rows
+        let mut rng = Rng::new(1);
+        let score = cv_score(&tree_cfg(), &f, 3, &mut rng);
+        assert!(score > 0.6, "tree should beat chance on D3: {score}");
+        assert!(score <= 1.0);
+    }
+
+    #[test]
+    fn fitted_pipeline_beats_chance_on_holdout() {
+        let f = registry::load("D3", 0.08, 2);
+        let mut rng = Rng::new(2);
+        let (train, test) = split::train_test_split(&f, 0.25, &mut rng);
+        let pipe = fit_on_frame(&tree_cfg(), &train, &mut rng);
+        let acc = pipe.accuracy_on(&test);
+        assert!(acc > 0.55, "holdout accuracy {acc}");
+    }
+
+    #[test]
+    fn selector_pipeline_transform_consistency() {
+        // pipeline with kbest must predict on matrices of original width
+        let f = registry::load("D3", 0.06, 3);
+        let mut rng = Rng::new(3);
+        let cfg = PipelineConfig {
+            scaler: ScalerSpec::MinMax,
+            selector: SelectorSpec::SelectKBest { frac: 0.4 },
+            model: ModelSpec::Tree {
+                max_depth: 6,
+                min_leaf: 2,
+            },
+        };
+        let pipe = fit_on_frame(&cfg, &f, &mut rng);
+        let (x, _) = f.to_xy();
+        let preds = pipe.predict(&x);
+        assert_eq!(preds.len(), f.n_rows);
+    }
+
+    #[test]
+    fn cv_score_deterministic_per_seed() {
+        let f = registry::load("D2", 0.05, 4);
+        let a = cv_score(&tree_cfg(), &f, 3, &mut Rng::new(7));
+        let b = cv_score(&tree_cfg(), &f, 3, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,166 @@
+//! Genetic-programming searcher — the TPOT stand-in (DESIGN.md §5): a GA
+//! over pipeline configurations with tournament selection, stage-wise
+//! crossover and hyper-parameter mutation, proposing one evaluation at a
+//! time (the run loop owns the budget).
+
+use crate::automl::space::{ConfigSpace, PipelineConfig};
+use crate::automl::Searcher;
+use crate::util::rng::Rng;
+
+pub struct GpSearch {
+    pub population: usize,
+    /// configs queued for evaluation in the current generation
+    queue: Vec<PipelineConfig>,
+    generation: usize,
+}
+
+impl GpSearch {
+    pub fn new(population: usize) -> GpSearch {
+        GpSearch {
+            population: population.max(4),
+            queue: Vec::new(),
+            generation: 0,
+        }
+    }
+
+    /// Tournament pick: best-of-3 from the evaluated history tail.
+    fn tournament<'h>(
+        &self,
+        history: &'h [(PipelineConfig, f64)],
+        rng: &mut Rng,
+    ) -> &'h PipelineConfig {
+        let pool = history.len().min(2 * self.population);
+        let tail = &history[history.len() - pool..];
+        let mut best: Option<&(PipelineConfig, f64)> = None;
+        for _ in 0..3 {
+            let cand = &tail[rng.usize_below(tail.len())];
+            if best.map_or(true, |b| cand.1 > b.1) {
+                best = Some(cand);
+            }
+        }
+        &best.unwrap().0
+    }
+}
+
+impl Default for GpSearch {
+    fn default() -> Self {
+        GpSearch::new(12)
+    }
+}
+
+impl Searcher for GpSearch {
+    fn propose(
+        &mut self,
+        history: &[(PipelineConfig, f64)],
+        space: &ConfigSpace,
+        rng: &mut Rng,
+    ) -> PipelineConfig {
+        if let Some(next) = self.queue.pop() {
+            return next;
+        }
+        if history.len() < self.population {
+            // generation 0: random init
+            return space.sample(rng);
+        }
+        // breed the next generation from the evaluated history
+        self.generation += 1;
+        let mut next: Vec<PipelineConfig> = Vec::with_capacity(self.population);
+        while next.len() < self.population {
+            let roll = rng.f64();
+            let child = if roll < 0.45 {
+                // crossover of two tournament winners
+                let a = self.tournament(history, rng).clone();
+                let b = self.tournament(history, rng).clone();
+                space.crossover(&a, &b, rng)
+            } else if roll < 0.9 {
+                // mutation of a tournament winner
+                let a = self.tournament(history, rng).clone();
+                space.mutate(&a, rng)
+            } else {
+                // fresh blood
+                space.sample(rng)
+            };
+            next.push(child);
+        }
+        self.queue = next;
+        self.queue.pop().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::preproc::{ScalerSpec, SelectorSpec};
+    use crate::models::ModelKind;
+
+    fn entry(kind: ModelKind, score: f64, rng: &mut Rng) -> (PipelineConfig, f64) {
+        let space = ConfigSpace::default();
+        let model = space.sample_model(kind, rng);
+        (
+            PipelineConfig {
+                scaler: ScalerSpec::None,
+                selector: SelectorSpec::None,
+                model,
+            },
+            score,
+        )
+    }
+
+    #[test]
+    fn random_during_init_generation() {
+        let mut gp = GpSearch::new(6);
+        let space = ConfigSpace::default();
+        let mut rng = Rng::new(1);
+        let c = gp.propose(&[], &space, &mut rng);
+        assert!(space.kinds.contains(&c.model.kind()));
+    }
+
+    #[test]
+    fn breeds_from_high_scoring_parents() {
+        let mut gp = GpSearch::new(8);
+        let space = ConfigSpace::default();
+        let mut rng = Rng::new(2);
+        // history: forest scores high, others low
+        let mut history = Vec::new();
+        for _ in 0..8 {
+            history.push(entry(ModelKind::Forest, 0.9 + rng.f64() * 0.05, &mut rng));
+            history.push(entry(ModelKind::Knn, 0.3, &mut rng));
+        }
+        let mut forest_children = 0;
+        for _ in 0..24 {
+            let c = gp.propose(&history, &space, &mut rng);
+            if c.model.kind() == ModelKind::Forest {
+                forest_children += 1;
+            }
+        }
+        assert!(
+            forest_children > 12,
+            "tournament not selecting winners: {forest_children}/24"
+        );
+    }
+
+    #[test]
+    fn queue_drains_one_generation_at_a_time() {
+        let mut gp = GpSearch::new(5);
+        let space = ConfigSpace::default();
+        let mut rng = Rng::new(3);
+        let history: Vec<_> = (0..6).map(|i| entry(ModelKind::Tree, 0.5 + i as f64 * 0.01, &mut rng)).collect();
+        let _ = gp.propose(&history, &space, &mut rng);
+        assert_eq!(gp.queue.len(), 4, "one popped from a fresh generation");
+        assert_eq!(gp.generation, 1);
+    }
+
+    #[test]
+    fn restricted_space_is_honored() {
+        let mut gp = GpSearch::new(4);
+        let space = ConfigSpace::restricted_to(ModelKind::Mlp);
+        let mut rng = Rng::new(4);
+        let history: Vec<_> = (0..4)
+            .map(|_| entry(ModelKind::Mlp, 0.8, &mut rng))
+            .collect();
+        for _ in 0..12 {
+            let c = gp.propose(&history, &space, &mut rng);
+            assert_eq!(c.model.kind(), ModelKind::Mlp);
+        }
+    }
+}

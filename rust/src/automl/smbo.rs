@@ -1,0 +1,182 @@
+//! SMBO searcher — the Auto-Sklearn stand-in (DESIGN.md §5): sequential
+//! model-based optimization with a distance-weighted kNN surrogate over
+//! encoded configurations and a distance exploration bonus (a cheap,
+//! dependency-free acquisition in the UCB family).
+//!
+//! Each proposal: score a candidate pool (random samples + mutations of
+//! the incumbents) with `surrogate_mean + kappa * nearest_distance` and
+//! evaluate the argmax for real.
+
+use crate::automl::space::{ConfigSpace, PipelineConfig};
+use crate::automl::Searcher;
+use crate::util::rng::Rng;
+
+pub struct SmboSearch {
+    /// random evaluations before the surrogate kicks in
+    pub n_init: usize,
+    /// candidate pool sizes
+    pub n_random_cands: usize,
+    pub n_local_cands: usize,
+    /// exploration weight
+    pub kappa: f64,
+    /// surrogate neighbourhood size
+    pub k_neighbors: usize,
+}
+
+impl Default for SmboSearch {
+    fn default() -> Self {
+        SmboSearch {
+            n_init: 8,
+            n_random_cands: 48,
+            n_local_cands: 24,
+            kappa: 0.4,
+            k_neighbors: 5,
+        }
+    }
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+impl SmboSearch {
+    /// Surrogate prediction: distance-weighted mean of the k nearest
+    /// evaluated configs, plus the distance to the nearest (exploration).
+    fn acquisition(
+        &self,
+        cand: &PipelineConfig,
+        encoded: &[(Vec<f64>, f64)],
+    ) -> f64 {
+        let e = ConfigSpace::encode(cand);
+        let mut d: Vec<(f64, f64)> = encoded
+            .iter()
+            .map(|(enc, score)| (dist2(&e, enc), *score))
+            .collect();
+        d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let k = self.k_neighbors.min(d.len());
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for &(dist, score) in &d[..k] {
+            let w = 1.0 / (dist + 1e-6);
+            num += w * score;
+            den += w;
+        }
+        let mean = num / den;
+        let nearest = d[0].0.sqrt();
+        mean + self.kappa * nearest
+    }
+}
+
+impl Searcher for SmboSearch {
+    fn propose(
+        &mut self,
+        history: &[(PipelineConfig, f64)],
+        space: &ConfigSpace,
+        rng: &mut Rng,
+    ) -> PipelineConfig {
+        if history.len() < self.n_init {
+            return space.sample(rng);
+        }
+        let encoded: Vec<(Vec<f64>, f64)> = history
+            .iter()
+            .map(|(c, s)| (ConfigSpace::encode(c), *s))
+            .collect();
+
+        // incumbents: top 3 by score
+        let mut order: Vec<usize> = (0..history.len()).collect();
+        order.sort_by(|&a, &b| history[b].1.partial_cmp(&history[a].1).unwrap());
+        let top: Vec<&PipelineConfig> = order.iter().take(3).map(|&i| &history[i].0).collect();
+
+        let mut best: Option<(f64, PipelineConfig)> = None;
+        for i in 0..(self.n_random_cands + self.n_local_cands) {
+            let cand = if i < self.n_random_cands {
+                space.sample(rng)
+            } else {
+                space.mutate(top[rng.usize_below(top.len())], rng)
+            };
+            let acq = self.acquisition(&cand, &encoded);
+            if best.as_ref().map_or(true, |(b, _)| acq > *b) {
+                best = Some((acq, cand));
+            }
+        }
+        best.unwrap().1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::preproc::{ScalerSpec, SelectorSpec};
+    use crate::models::{ModelKind, ModelSpec};
+
+    fn hist_entry(k: usize, score: f64) -> (PipelineConfig, f64) {
+        (
+            PipelineConfig {
+                scaler: ScalerSpec::None,
+                selector: SelectorSpec::None,
+                model: ModelSpec::Knn { k },
+            },
+            score,
+        )
+    }
+
+    #[test]
+    fn random_until_n_init() {
+        let mut s = SmboSearch::default();
+        let space = ConfigSpace::default();
+        let mut rng = Rng::new(1);
+        // with empty history it must not panic and must stay in space
+        let c = s.propose(&[], &space, &mut rng);
+        assert!(space.kinds.contains(&c.model.kind()));
+    }
+
+    #[test]
+    fn exploits_good_region_after_init() {
+        // history: knn configs score high, everything else low -> the
+        // surrogate should concentrate proposals around knn
+        let mut s = SmboSearch {
+            n_init: 4,
+            kappa: 0.05,
+            ..Default::default()
+        };
+        let space = ConfigSpace::default();
+        let mut rng = Rng::new(2);
+        let mut history = vec![
+            hist_entry(5, 0.95),
+            hist_entry(7, 0.94),
+            hist_entry(9, 0.96),
+        ];
+        // low scores for other families
+        history.push((
+            PipelineConfig {
+                scaler: ScalerSpec::None,
+                selector: SelectorSpec::None,
+                model: ModelSpec::Tree {
+                    max_depth: 4,
+                    min_leaf: 2,
+                },
+            },
+            0.3,
+        ));
+        let mut knn_hits = 0;
+        for _ in 0..20 {
+            let c = s.propose(&history, &space, &mut rng);
+            if c.model.kind() == ModelKind::Knn {
+                knn_hits += 1;
+            }
+        }
+        assert!(knn_hits >= 12, "surrogate not exploiting: {knn_hits}/20");
+    }
+
+    #[test]
+    fn respects_restricted_space() {
+        let mut s = SmboSearch::default();
+        let space = ConfigSpace::restricted_to(ModelKind::Nb);
+        let mut rng = Rng::new(3);
+        let history = vec![hist_entry(5, 0.9)]; // even with foreign history
+        for _ in 0..10 {
+            let c = s.propose(&history, &space, &mut rng);
+            assert_eq!(c.model.kind(), ModelKind::Nb);
+        }
+    }
+}

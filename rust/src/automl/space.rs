@@ -1,0 +1,352 @@
+//! The ML-pipeline configuration space: scaler × feature-selector ×
+//! model-family × hyper-parameters. Supports uniform sampling, local
+//! mutation, pipeline crossover (for the TPOT-like searcher), a numeric
+//! encoding (for the SMBO surrogate), and family restriction (the
+//! fine-tuning mechanism of paper §3.4).
+
+use crate::models::preproc::{ScalerSpec, SelectorSpec};
+use crate::models::{ModelKind, ModelSpec};
+use crate::util::rng::Rng;
+
+/// One ML pipeline configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    pub scaler: ScalerSpec,
+    pub selector: SelectorSpec,
+    pub model: ModelSpec,
+}
+
+impl PipelineConfig {
+    pub fn describe(&self) -> String {
+        let s = match self.scaler {
+            ScalerSpec::None => "none",
+            ScalerSpec::Standard => "std",
+            ScalerSpec::MinMax => "minmax",
+        };
+        let sel = match self.selector {
+            SelectorSpec::None => "none".to_string(),
+            SelectorSpec::VarianceThreshold { threshold } => format!("var({threshold:.1e})"),
+            SelectorSpec::SelectKBest { frac } => format!("kbest({frac:.2})"),
+        };
+        format!("[{s}|{sel}|{}]", self.model.describe())
+    }
+}
+
+/// The searchable space, optionally restricted to one model family.
+#[derive(Debug, Clone)]
+pub struct ConfigSpace {
+    pub kinds: Vec<ModelKind>,
+}
+
+fn log_uniform(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    (rng.range_f64(lo.ln(), hi.ln())).exp()
+}
+
+impl Default for ConfigSpace {
+    fn default() -> Self {
+        ConfigSpace {
+            kinds: ModelKind::all(),
+        }
+    }
+}
+
+impl ConfigSpace {
+    /// Restrict to one model family — the paper's fine-tuning constraint:
+    /// "only consider configurations that use the same ML model as M'".
+    pub fn restricted_to(kind: ModelKind) -> ConfigSpace {
+        ConfigSpace { kinds: vec![kind] }
+    }
+
+    pub fn is_restricted(&self) -> bool {
+        self.kinds.len() == 1
+    }
+
+    /// Uniform sample of a full pipeline configuration.
+    pub fn sample(&self, rng: &mut Rng) -> PipelineConfig {
+        let scaler = *rng.choose(&[ScalerSpec::None, ScalerSpec::Standard, ScalerSpec::MinMax]);
+        let selector = match rng.usize_below(3) {
+            0 => SelectorSpec::None,
+            1 => SelectorSpec::VarianceThreshold {
+                threshold: log_uniform(rng, 1e-4, 1e-1),
+            },
+            _ => SelectorSpec::SelectKBest {
+                frac: rng.range_f64(0.3, 1.0),
+            },
+        };
+        let model = self.sample_model(*rng.choose(&self.kinds), rng);
+        PipelineConfig {
+            scaler,
+            selector,
+            model,
+        }
+    }
+
+    /// Sample hyper-parameters for a fixed family.
+    pub fn sample_model(&self, kind: ModelKind, rng: &mut Rng) -> ModelSpec {
+        match kind {
+            ModelKind::Logreg => ModelSpec::Logreg {
+                lr: log_uniform(rng, 0.02, 1.0),
+                epochs: 8 + rng.usize_below(25),
+                l2: log_uniform(rng, 1e-6, 1e-2),
+            },
+            ModelKind::Mlp => ModelSpec::Mlp {
+                lr: log_uniform(rng, 0.02, 0.6),
+                epochs: 15 + rng.usize_below(45),
+                l2: log_uniform(rng, 1e-6, 1e-2),
+            },
+            ModelKind::Tree => ModelSpec::Tree {
+                max_depth: 2 + rng.usize_below(14),
+                min_leaf: 1 + rng.usize_below(24),
+            },
+            ModelKind::Forest => ModelSpec::Forest {
+                n_trees: 8 + rng.usize_below(56),
+                max_depth: 4 + rng.usize_below(12),
+                feat_frac: rng.range_f64(0.3, 1.0),
+            },
+            ModelKind::Knn => ModelSpec::Knn {
+                k: 1 + rng.usize_below(31),
+            },
+            ModelKind::Nb => ModelSpec::Nb {
+                smoothing: log_uniform(rng, 1e-10, 1e-3),
+            },
+        }
+    }
+
+    /// Local mutation: with prob 0.25 change a pipeline stage, else
+    /// perturb one hyper-parameter of the model (never leaves the space's
+    /// allowed families).
+    pub fn mutate(&self, cfg: &PipelineConfig, rng: &mut Rng) -> PipelineConfig {
+        let mut out = cfg.clone();
+        match rng.usize_below(4) {
+            0 => {
+                out.scaler =
+                    *rng.choose(&[ScalerSpec::None, ScalerSpec::Standard, ScalerSpec::MinMax]);
+            }
+            1 => {
+                out.selector = match rng.usize_below(3) {
+                    0 => SelectorSpec::None,
+                    1 => SelectorSpec::VarianceThreshold {
+                        threshold: log_uniform(rng, 1e-4, 1e-1),
+                    },
+                    _ => SelectorSpec::SelectKBest {
+                        frac: rng.range_f64(0.3, 1.0),
+                    },
+                };
+            }
+            _ => {
+                // hyper-parameter jitter within the same family, or (if the
+                // space allows several families) occasionally jump family
+                let jump = !self.is_restricted() && rng.bool_with(0.2);
+                if jump {
+                    out.model = self.sample_model(*rng.choose(&self.kinds), rng);
+                } else {
+                    out.model = perturb_model(&cfg.model, rng);
+                }
+            }
+        }
+        out
+    }
+
+    /// Pipeline crossover: child takes each stage from a random parent.
+    pub fn crossover(
+        &self,
+        a: &PipelineConfig,
+        b: &PipelineConfig,
+        rng: &mut Rng,
+    ) -> PipelineConfig {
+        PipelineConfig {
+            scaler: if rng.bool_with(0.5) { a.scaler } else { b.scaler },
+            selector: if rng.bool_with(0.5) { a.selector } else { b.selector },
+            model: if rng.bool_with(0.5) {
+                a.model.clone()
+            } else {
+                b.model.clone()
+            },
+        }
+    }
+
+    /// Numeric encoding for the SMBO surrogate: one-hot model family +
+    /// normalized hyper-parameters + pipeline stages.
+    pub fn encode(cfg: &PipelineConfig) -> Vec<f64> {
+        let mut v = vec![0f64; 6 + 3 + 2 + 3];
+        let kind_idx = match cfg.model.kind() {
+            ModelKind::Logreg => 0,
+            ModelKind::Mlp => 1,
+            ModelKind::Tree => 2,
+            ModelKind::Forest => 3,
+            ModelKind::Knn => 4,
+            ModelKind::Nb => 5,
+        };
+        v[kind_idx] = 1.0;
+        // model hyper-parameters (3 slots, family-specific normalization)
+        let h = &mut v[6..9];
+        match &cfg.model {
+            ModelSpec::Logreg { lr, epochs, l2 } | ModelSpec::Mlp { lr, epochs, l2 } => {
+                h[0] = (lr.ln() - (0.02f64).ln()) / ((1.0f64).ln() - (0.02f64).ln());
+                h[1] = *epochs as f64 / 60.0;
+                h[2] = (l2.ln() - (1e-6f64).ln()) / ((1e-2f64).ln() - (1e-6f64).ln());
+            }
+            ModelSpec::Tree { max_depth, min_leaf } => {
+                h[0] = *max_depth as f64 / 16.0;
+                h[1] = *min_leaf as f64 / 25.0;
+            }
+            ModelSpec::Forest {
+                n_trees,
+                max_depth,
+                feat_frac,
+            } => {
+                h[0] = *n_trees as f64 / 64.0;
+                h[1] = *max_depth as f64 / 16.0;
+                h[2] = *feat_frac;
+            }
+            ModelSpec::Knn { k } => {
+                h[0] = *k as f64 / 32.0;
+            }
+            ModelSpec::Nb { smoothing } => {
+                h[0] = (smoothing.ln() - (1e-10f64).ln()) / ((1e-3f64).ln() - (1e-10f64).ln());
+            }
+        }
+        // scaler one-hot-ish (2 slots)
+        match cfg.scaler {
+            ScalerSpec::None => {}
+            ScalerSpec::Standard => v[9] = 1.0,
+            ScalerSpec::MinMax => v[10] = 1.0,
+        }
+        // selector (3 slots: kind flags + param)
+        match cfg.selector {
+            SelectorSpec::None => {}
+            SelectorSpec::VarianceThreshold { threshold } => {
+                v[11] = 1.0;
+                v[13] = (threshold.ln() - (1e-4f64).ln()) / ((1e-1f64).ln() - (1e-4f64).ln());
+            }
+            SelectorSpec::SelectKBest { frac } => {
+                v[12] = 1.0;
+                v[13] = frac;
+            }
+        }
+        v
+    }
+}
+
+fn perturb_model(model: &ModelSpec, rng: &mut Rng) -> ModelSpec {
+    fn jitter(rng: &mut Rng, v: f64, lo: f64, hi: f64) -> f64 {
+        (v * (1.0 + 0.4 * (rng.f64() - 0.5))).clamp(lo, hi)
+    }
+    fn jitter_i(rng: &mut Rng, v: usize, lo: usize, hi: usize) -> usize {
+        let delta = rng.range_i64(-3, 3);
+        (v as i64 + delta).clamp(lo as i64, hi as i64) as usize
+    }
+    match model {
+        ModelSpec::Logreg { lr, epochs, l2 } => ModelSpec::Logreg {
+            lr: jitter(rng, *lr, 0.02, 1.0),
+            epochs: jitter_i(rng, *epochs, 8, 32),
+            l2: jitter(rng, *l2, 1e-6, 1e-2),
+        },
+        ModelSpec::Mlp { lr, epochs, l2 } => ModelSpec::Mlp {
+            lr: jitter(rng, *lr, 0.02, 0.6),
+            epochs: jitter_i(rng, *epochs, 15, 60),
+            l2: jitter(rng, *l2, 1e-6, 1e-2),
+        },
+        ModelSpec::Tree { max_depth, min_leaf } => ModelSpec::Tree {
+            max_depth: jitter_i(rng, *max_depth, 2, 16),
+            min_leaf: jitter_i(rng, *min_leaf, 1, 25),
+        },
+        ModelSpec::Forest {
+            n_trees,
+            max_depth,
+            feat_frac,
+        } => ModelSpec::Forest {
+            n_trees: jitter_i(rng, *n_trees, 8, 64),
+            max_depth: jitter_i(rng, *max_depth, 4, 16),
+            feat_frac: jitter(rng, *feat_frac, 0.3, 1.0),
+        },
+        ModelSpec::Knn { k } => ModelSpec::Knn {
+            k: jitter_i(rng, *k, 1, 32),
+        },
+        ModelSpec::Nb { smoothing } => ModelSpec::Nb {
+            smoothing: jitter(rng, *smoothing, 1e-10, 1e-3),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_prop;
+
+    #[test]
+    fn prop_sample_stays_in_space() {
+        let space = ConfigSpace::default();
+        check_prop("sampled configs valid", 200, |rng| {
+            let c = space.sample(rng);
+            assert!(space.kinds.contains(&c.model.kind()));
+            if let ModelSpec::Knn { k } = c.model {
+                assert!((1..=32).contains(&k));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_restricted_space_never_leaves_family() {
+        check_prop("restriction honored", 100, |rng| {
+            let space = ConfigSpace::restricted_to(ModelKind::Forest);
+            let mut c = space.sample(rng);
+            assert_eq!(c.model.kind(), ModelKind::Forest);
+            for _ in 0..20 {
+                c = space.mutate(&c, rng);
+                assert_eq!(c.model.kind(), ModelKind::Forest, "mutation escaped");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_crossover_child_components_from_parents() {
+        let space = ConfigSpace::default();
+        check_prop("crossover inherits", 100, |rng| {
+            let a = space.sample(rng);
+            let b = space.sample(rng);
+            let c = space.crossover(&a, &b, rng);
+            assert!(c.scaler == a.scaler || c.scaler == b.scaler);
+            assert!(c.model == a.model || c.model == b.model);
+        });
+    }
+
+    #[test]
+    fn encode_is_fixed_length_and_bounded() {
+        let space = ConfigSpace::default();
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let c = space.sample(&mut rng);
+            let e = ConfigSpace::encode(&c);
+            assert_eq!(e.len(), 14);
+            assert!(e.iter().all(|&x| (-0.01..=1.5).contains(&x)), "{e:?}");
+        }
+    }
+
+    #[test]
+    fn encode_distinguishes_families() {
+        let a = ConfigSpace::encode(&PipelineConfig {
+            scaler: ScalerSpec::None,
+            selector: SelectorSpec::None,
+            model: ModelSpec::Knn { k: 5 },
+        });
+        let b = ConfigSpace::encode(&PipelineConfig {
+            scaler: ScalerSpec::None,
+            selector: SelectorSpec::None,
+            model: ModelSpec::Tree {
+                max_depth: 5,
+                min_leaf: 2,
+            },
+        });
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mutate_changes_something_eventually() {
+        let space = ConfigSpace::default();
+        let mut rng = Rng::new(6);
+        let c = space.sample(&mut rng);
+        let changed = (0..50).any(|_| space.mutate(&c, &mut rng) != c);
+        assert!(changed);
+    }
+}

@@ -1,0 +1,295 @@
+//! Category D — clustering-based subset selection (paper §4.2): k-means
+//! rows to n clusters and columns to m clusters, picking the members
+//! closest to each centroid. Lloyd iterations execute through the
+//! AOT-compiled `kmeans_step` artifact on PJRT, streamed in
+//! KM_POINTS-sized tiles (mini-batch accumulation on the rust side).
+//!
+//! Documented approximation (DESIGN.md §5): the artifact carries KM_K=32
+//! centroid slots, so for n > 32 we cluster into 32 groups and take a
+//! per-cluster quota of nearest members instead of n singleton clusters —
+//! same selection principle, bounded artifact shape.
+
+use crate::baselines::{StrategyContext, StrategyOutcome, SubsetStrategy};
+use crate::data::Frame;
+use crate::gendst::Dst;
+use crate::runtime::models_exec::ModelsExec;
+use crate::runtime::shapes::{KM_DIM, KM_K, KM_POINTS};
+use crate::runtime::{self};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// far-away coordinate that disables unused centroid slots
+const FAR: f32 = 1e6;
+
+pub struct KmStrategy {
+    pub lloyd_iters: usize,
+}
+
+impl Default for KmStrategy {
+    fn default() -> Self {
+        KmStrategy { lloyd_iters: 4 }
+    }
+}
+
+/// Row embedding: up to KM_DIM highest-variance feature columns,
+/// z-scored. Returns (embedded points, used column indices).
+fn embed_rows(frame: &Frame) -> Vec<f32> {
+    let feats = frame.feature_indices();
+    let mut by_var: Vec<(u32, f64)> = feats
+        .iter()
+        .map(|&c| {
+            let v = &frame.columns[c as usize].values;
+            let m = v.iter().map(|&x| x as f64).sum::<f64>() / v.len().max(1) as f64;
+            let var = v.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>()
+                / v.len().max(1) as f64;
+            (c, var)
+        })
+        .collect();
+    by_var.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let used: Vec<u32> = by_var.iter().take(KM_DIM).map(|&(c, _)| c).collect();
+
+    let n = frame.n_rows;
+    let mut pts = vec![0f32; n * KM_DIM];
+    for (j, &c) in used.iter().enumerate() {
+        let col = &frame.columns[c as usize].values;
+        let m = col.iter().map(|&x| x as f64).sum::<f64>() / n.max(1) as f64;
+        let sd = (col.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n.max(1) as f64)
+            .sqrt()
+            .max(1e-9);
+        for r in 0..n {
+            pts[r * KM_DIM + j] = ((col[r] as f64 - m) / sd) as f32;
+        }
+    }
+    pts
+}
+
+/// Streaming Lloyd over `points` (row-major, KM_DIM wide): returns final
+/// centroids and per-point assignment. `k <= KM_K` active centroids.
+fn lloyd(
+    points: &[f32],
+    n_points: usize,
+    k: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> (Vec<f32>, Vec<u32>) {
+    let rt = runtime::thread_current().expect("PJRT runtime unavailable — run `make artifacts`");
+    let exec = ModelsExec::new(&rt);
+
+    // init: k random points, unused slots pushed far away
+    let mut centroids = vec![FAR; KM_K * KM_DIM];
+    for c in 0..k {
+        let r = rng.usize_below(n_points);
+        centroids[c * KM_DIM..(c + 1) * KM_DIM]
+            .copy_from_slice(&points[r * KM_DIM..(r + 1) * KM_DIM]);
+    }
+
+    let mut assign = vec![0u32; n_points];
+    for _it in 0..iters {
+        let mut sums = vec![0f64; k * KM_DIM];
+        let mut counts = vec![0u64; k];
+        let mut tile = vec![0f32; KM_POINTS * KM_DIM];
+        let mut pmask = vec![0f32; KM_POINTS];
+        let mut base = 0usize;
+        while base < n_points {
+            let take = KM_POINTS.min(n_points - base);
+            tile.fill(0.0);
+            pmask.fill(0.0);
+            tile[..take * KM_DIM]
+                .copy_from_slice(&points[base * KM_DIM..(base + take) * KM_DIM]);
+            pmask[..take].fill(1.0);
+            let (_, a) = exec
+                .kmeans_step(&tile, &pmask, &centroids)
+                .expect("kmeans_step artifact failed");
+            for i in 0..take {
+                let c = (a[i] as usize).min(k - 1);
+                assign[base + i] = c as u32;
+                counts[c] += 1;
+                for j in 0..KM_DIM {
+                    sums[c * KM_DIM + j] += points[(base + i) * KM_DIM + j] as f64;
+                }
+            }
+            base += take;
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..KM_DIM {
+                    centroids[c * KM_DIM + j] = (sums[c * KM_DIM + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    (centroids, assign)
+}
+
+/// Pick `want` member indices: per-cluster quotas of nearest-to-centroid
+/// members (cluster sizes pro-rated, remainders filled globally).
+fn pick_representatives(
+    points: &[f32],
+    assign: &[u32],
+    centroids: &[f32],
+    k: usize,
+    want: usize,
+) -> Vec<u32> {
+    let n = assign.len();
+    // distance of each point to its centroid
+    let mut by_cluster: Vec<Vec<(f32, u32)>> = vec![Vec::new(); k];
+    for i in 0..n {
+        let c = assign[i] as usize;
+        let mut d = 0f32;
+        for j in 0..KM_DIM {
+            let diff = points[i * KM_DIM + j] - centroids[c * KM_DIM + j];
+            d += diff * diff;
+        }
+        by_cluster[c].push((d, i as u32));
+    }
+    for members in by_cluster.iter_mut() {
+        members.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+    let mut picked: Vec<u32> = Vec::with_capacity(want);
+    // proportional quotas
+    let mut cursor = vec![0usize; k];
+    for c in 0..k {
+        let quota = (want * by_cluster[c].len()).div_euclid(n.max(1));
+        for &(_, i) in by_cluster[c].iter().take(quota) {
+            picked.push(i);
+            cursor[c] = quota;
+        }
+    }
+    // fill remainder round-robin by next-nearest members
+    let mut c = 0usize;
+    while picked.len() < want {
+        if cursor[c] < by_cluster[c].len() {
+            picked.push(by_cluster[c][cursor[c]].1);
+            cursor[c] += 1;
+        }
+        c = (c + 1) % k;
+        // safety: if all clusters exhausted (shouldn't happen), break
+        if cursor.iter().zip(&by_cluster).all(|(&u, m)| u >= m.len()) {
+            break;
+        }
+    }
+    picked.truncate(want);
+    picked
+}
+
+/// Public entry used by both KM and IG-KM: cluster rows, return `n`
+/// representative row indices.
+pub fn kmeans_rows(frame: &Frame, n: usize, lloyd_iters: usize, rng: &mut Rng) -> Vec<u32> {
+    let pts = embed_rows(frame);
+    let k = KM_K.min(n).max(1);
+    let (centroids, assign) = lloyd(&pts, frame.n_rows, k, lloyd_iters, rng);
+    pick_representatives(&pts, &assign, &centroids, k, n)
+}
+
+/// Cluster feature columns (embedded as KM_DIM sampled, z-scored row
+/// values) into m-1 groups; return the nearest column per group plus the
+/// target column.
+pub fn kmeans_cols(frame: &Frame, m: usize, lloyd_iters: usize, rng: &mut Rng) -> Vec<u32> {
+    let feats = frame.feature_indices();
+    let n_rows = frame.n_rows;
+    // sample KM_DIM row positions shared by all columns
+    let sample: Vec<usize> = (0..KM_DIM)
+        .map(|_| rng.usize_below(n_rows))
+        .collect();
+    let mut pts = vec![0f32; feats.len() * KM_DIM];
+    for (i, &c) in feats.iter().enumerate() {
+        let col = &frame.columns[c as usize].values;
+        let mvals: Vec<f64> = sample.iter().map(|&r| col[r] as f64).collect();
+        let mean = mvals.iter().sum::<f64>() / mvals.len() as f64;
+        let sd = (mvals.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / mvals.len() as f64)
+            .sqrt()
+            .max(1e-9);
+        for (j, &v) in mvals.iter().enumerate() {
+            pts[i * KM_DIM + j] = ((v - mean) / sd) as f32;
+        }
+    }
+    let k = (m - 1).clamp(1, KM_K.min(feats.len()));
+    let (centroids, assign) = lloyd(&pts, feats.len(), k, lloyd_iters, rng);
+    let reps = pick_representatives(&pts, &assign, &centroids, k, m - 1);
+    let mut cols: Vec<u32> = reps.iter().map(|&i| feats[i as usize]).collect();
+    cols.sort_unstable();
+    cols.dedup();
+    // pad with unused features if clustering collapsed
+    for &f in &feats {
+        if cols.len() >= m - 1 {
+            break;
+        }
+        if !cols.contains(&f) {
+            cols.push(f);
+        }
+    }
+    cols.push(frame.target as u32);
+    cols
+}
+
+impl SubsetStrategy for KmStrategy {
+    fn name(&self) -> &'static str {
+        "km"
+    }
+
+    fn find(&self, ctx: &StrategyContext) -> StrategyOutcome {
+        let sw = Stopwatch::start();
+        let mut rng = Rng::new(ctx.seed);
+        let rows = kmeans_rows(ctx.frame, ctx.n, self.lloyd_iters, &mut rng);
+        let cols = kmeans_cols(ctx.frame, ctx.m, self.lloyd_iters, &mut rng);
+        StrategyOutcome {
+            dst: Dst { rows, cols },
+            elapsed_s: sw.elapsed_s(),
+            evals: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_ctx;
+    use crate::data::{registry, CodeMatrix};
+    use crate::measures::entropy::EntropyMeasure;
+
+    #[test]
+    fn km_outputs_valid_dst() {
+        let f = registry::load("D3", 0.06, 8);
+        let codes = CodeMatrix::from_frame(&f);
+        let m = EntropyMeasure;
+        let ctx = test_ctx(&f, &codes, &m, 23);
+        let out = KmStrategy::default().find(&ctx);
+        out.dst.validate(f.n_rows, f.n_cols(), f.target).unwrap();
+        assert_eq!(out.dst.rows.len(), ctx.n);
+        assert_eq!(out.dst.cols.len(), ctx.m);
+    }
+
+    #[test]
+    fn representatives_cover_distinct_clusters() {
+        // two well-separated blobs: representatives must come from both
+        let mut pts = vec![0f32; 200 * KM_DIM];
+        for i in 0..200 {
+            let off = if i < 100 { -5.0 } else { 5.0 };
+            for j in 0..2 {
+                pts[i * KM_DIM + j] = off;
+            }
+        }
+        let assign: Vec<u32> = (0..200).map(|i| (i >= 100) as u32).collect();
+        let mut centroids = vec![0f32; KM_K * KM_DIM];
+        centroids[0] = -5.0;
+        centroids[1] = -5.0;
+        centroids[KM_DIM] = 5.0;
+        centroids[KM_DIM + 1] = 5.0;
+        let picked = pick_representatives(&pts, &assign, &centroids, 2, 10);
+        assert_eq!(picked.len(), 10);
+        let low = picked.iter().filter(|&&i| i < 100).count();
+        assert!(low >= 3 && low <= 7, "unbalanced picks: {low}/10");
+    }
+
+    #[test]
+    fn kmeans_rows_returns_distinct_indices() {
+        let f = registry::load("D2", 0.05, 9);
+        let mut rng = Rng::new(3);
+        let rows = kmeans_rows(&f, 40, 2, &mut rng);
+        let mut r = rows.clone();
+        r.sort_unstable();
+        r.dedup();
+        assert_eq!(r.len(), 40);
+        assert!(r.iter().all(|&x| (x as usize) < f.n_rows));
+    }
+}

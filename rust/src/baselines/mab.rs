@@ -1,0 +1,177 @@
+//! Category B — Multi-Arm Bandit (paper §4.2): row-arms and column-arms
+//! with ε-greedy exploration. Each round assembles a subset from the
+//! currently best-valued arms (with ε-probability random picks),
+//! evaluates the measure-preservation loss, and credits every arm used
+//! with the reward `-loss` (incremental mean update).
+
+use crate::baselines::{StrategyContext, StrategyOutcome, SubsetStrategy};
+use crate::gendst::{fitness::FitnessBackend, fitness::FitnessEval, Dst};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+pub struct MultiArmBandit {
+    pub rounds: usize,
+    pub epsilon: f64,
+}
+
+impl Default for MultiArmBandit {
+    fn default() -> Self {
+        MultiArmBandit {
+            rounds: 300,
+            epsilon: 0.15,
+        }
+    }
+}
+
+struct Arms {
+    value: Vec<f64>,
+    pulls: Vec<u32>,
+}
+
+impl Arms {
+    fn new(n: usize) -> Arms {
+        Arms {
+            value: vec![0.0; n],
+            pulls: vec![0; n],
+        }
+    }
+
+    /// Pick `k` distinct arms: each slot is ε-random, otherwise the best
+    /// unpicked arm by value estimate (unpulled arms count as optimistic).
+    fn pick(&self, k: usize, eps: f64, rng: &mut Rng, exclude: Option<u32>) -> Vec<u32> {
+        let n = self.value.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        // optimistic init: unpulled arms rank first, then by value
+        order.sort_by(|&a, &b| {
+            let ka = (self.pulls[a] == 0, self.value[a]);
+            let kb = (self.pulls[b] == 0, self.value[b]);
+            kb.partial_cmp(&ka).unwrap()
+        });
+        let mut picked: Vec<u32> = Vec::with_capacity(k);
+        let mut cursor = 0usize;
+        while picked.len() < k {
+            let cand = if rng.bool_with(eps) {
+                rng.u64_below(n as u64) as u32
+            } else {
+                // next best not yet picked
+                while cursor < n
+                    && (picked.contains(&(order[cursor] as u32))
+                        || Some(order[cursor] as u32) == exclude)
+                {
+                    cursor += 1;
+                }
+                if cursor >= n {
+                    rng.u64_below(n as u64) as u32
+                } else {
+                    order[cursor] as u32
+                }
+            };
+            if Some(cand) != exclude && !picked.contains(&cand) {
+                picked.push(cand);
+            }
+        }
+        picked
+    }
+
+    fn update(&mut self, arm: u32, reward: f64) {
+        let i = arm as usize;
+        self.pulls[i] += 1;
+        let n = self.pulls[i] as f64;
+        self.value[i] += (reward - self.value[i]) / n;
+    }
+}
+
+impl SubsetStrategy for MultiArmBandit {
+    fn name(&self) -> &'static str {
+        "mab"
+    }
+
+    fn find(&self, ctx: &StrategyContext) -> StrategyOutcome {
+        let sw = Stopwatch::start();
+        let mut rng = Rng::new(ctx.seed);
+        let mut eval = FitnessEval::new(ctx.frame, ctx.codes, ctx.measure, FitnessBackend::Native);
+        let target = ctx.frame.target as u32;
+
+        let mut row_arms = Arms::new(ctx.frame.n_rows);
+        let mut col_arms = Arms::new(ctx.frame.n_cols());
+
+        let mut best: Option<(f64, Dst)> = None;
+        for _round in 0..self.rounds {
+            let rows = row_arms.pick(ctx.n, self.epsilon, &mut rng, None);
+            let mut cols = col_arms.pick(ctx.m - 1, self.epsilon, &mut rng, Some(target));
+            cols.push(target);
+            let loss = eval.loss(&rows, &cols);
+            let reward = -loss;
+            for &r in &rows {
+                row_arms.update(r, reward);
+            }
+            for &c in &cols {
+                if c != target {
+                    col_arms.update(c, reward);
+                }
+            }
+            if best.as_ref().map_or(true, |(bl, _)| loss < *bl) {
+                best = Some((loss, Dst { rows, cols }));
+            }
+        }
+        let (_, dst) = best.unwrap();
+        StrategyOutcome {
+            dst,
+            elapsed_s: sw.elapsed_s(),
+            evals: eval.evals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_ctx;
+    use crate::data::{registry, CodeMatrix};
+    use crate::gendst::ops::random_candidate;
+    use crate::measures::entropy::EntropyMeasure;
+
+    #[test]
+    fn beats_mean_random_subset() {
+        let f = registry::load("D2", 0.05, 5);
+        let codes = CodeMatrix::from_frame(&f);
+        let m = EntropyMeasure;
+        let ctx = test_ctx(&f, &codes, &m, 11);
+        let out = MultiArmBandit::default().find(&ctx);
+        let mut eval = FitnessEval::new(&f, &codes, &m, FitnessBackend::Native);
+        let mab_loss = eval.loss(&out.dst.rows, &out.dst.cols);
+
+        let mut rng = Rng::new(77);
+        let mut rand_losses = Vec::new();
+        for _ in 0..50 {
+            let c = random_candidate(&f, ctx.n, ctx.m, &mut rng);
+            rand_losses.push(eval.loss(&c.rows, &c.cols));
+        }
+        let mean_rand = crate::util::stats::mean(&rand_losses);
+        assert!(mab_loss < mean_rand, "MAB {mab_loss} vs random {mean_rand}");
+    }
+
+    #[test]
+    fn arms_update_moves_value_toward_reward() {
+        let mut arms = Arms::new(3);
+        arms.update(0, -1.0);
+        arms.update(0, -3.0);
+        assert!((arms.value[0] + 2.0).abs() < 1e-12);
+        assert_eq!(arms.pulls[0], 2);
+    }
+
+    #[test]
+    fn pick_excludes_and_dedups() {
+        let mut rng = Rng::new(13);
+        let arms = Arms::new(10);
+        for _ in 0..20 {
+            let picked = arms.pick(5, 0.5, &mut rng, Some(3));
+            assert_eq!(picked.len(), 5);
+            assert!(!picked.contains(&3));
+            let mut p = picked.clone();
+            p.sort_unstable();
+            p.dedup();
+            assert_eq!(p.len(), 5);
+        }
+    }
+}

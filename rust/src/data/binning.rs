@@ -1,0 +1,221 @@
+//! Quantile binning: every column is encoded once at ingest into integer
+//! codes in `[0, K_BINS)`. The dataset-entropy measure (paper Def. 3.4)
+//! is a function of per-column *value frequencies*; binning makes that a
+//! dense fixed-size histogram, which is what lets the Pallas kernel treat
+//! entropy as a K-slot reduction (DESIGN.md §Hardware-Adaptation) and the
+//! native path use stack-allocated count arrays.
+//!
+//! Categorical columns keep their identity codes (rare categories beyond
+//! K_BINS-1 collapse into an "other" bin). Numeric columns get quantile
+//! (equi-depth) bins, which maximizes code entropy per column and matches
+//! how frequency-based entropy behaves on continuous data.
+
+use crate::data::Frame;
+
+/// Bin count — must equal `shapes.K_BINS` on the python side.
+pub const K_BINS: usize = 64;
+
+/// Column-major matrix of per-column value codes in `[0, k)`.
+#[derive(Debug, Clone)]
+pub struct CodeMatrix {
+    /// column-major: codes[col * n_rows + row]
+    codes: Vec<u16>,
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// number of distinct codes actually used, per column
+    pub cardinality: Vec<u16>,
+}
+
+impl CodeMatrix {
+    #[inline]
+    pub fn code(&self, row: usize, col: usize) -> u16 {
+        self.codes[col * self.n_rows + row]
+    }
+
+    /// Full column slice (all rows) — the hot path iterates these.
+    #[inline]
+    pub fn column(&self, col: usize) -> &[u16] {
+        &self.codes[col * self.n_rows..(col + 1) * self.n_rows]
+    }
+
+    /// Encode a frame: quantile-bin numeric columns, cap categorical ones.
+    pub fn from_frame(frame: &Frame) -> CodeMatrix {
+        let n_rows = frame.n_rows;
+        let n_cols = frame.n_cols();
+        let mut codes = vec![0u16; n_rows * n_cols];
+        let mut cardinality = vec![0u16; n_cols];
+        for (c, col) in frame.columns.iter().enumerate() {
+            let out = &mut codes[c * n_rows..(c + 1) * n_rows];
+            cardinality[c] = if col.categorical {
+                encode_categorical(&col.values, out)
+            } else {
+                encode_numeric(&col.values, out)
+            };
+        }
+        CodeMatrix {
+            codes,
+            n_rows,
+            n_cols,
+            cardinality,
+        }
+    }
+}
+
+/// Categorical: keep codes < K_BINS-1, collapse the tail into K_BINS-1.
+/// (Values are already small non-negative ints by Frame convention.)
+fn encode_categorical(values: &[f32], out: &mut [u16]) -> u16 {
+    let mut max_code = 0u16;
+    for (i, &v) in values.iter().enumerate() {
+        let code = (v as usize).min(K_BINS - 1) as u16;
+        out[i] = code;
+        max_code = max_code.max(code);
+    }
+    max_code + 1
+}
+
+/// Numeric: equi-depth bins from a sorted copy (sampled above 100k rows
+/// to bound ingest cost; equi-depth edges are robust to sampling).
+fn encode_numeric(values: &[f32], out: &mut [u16]) -> u16 {
+    const MAX_SORT: usize = 100_000;
+    let mut sample: Vec<f32> = if values.len() > MAX_SORT {
+        // deterministic stride sample
+        let stride = values.len() / MAX_SORT;
+        values.iter().step_by(stride.max(1)).copied().collect()
+    } else {
+        values.to_vec()
+    };
+    sample.retain(|v| v.is_finite());
+    if sample.is_empty() {
+        out.fill(0);
+        return 1;
+    }
+    sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // distinct-aware bin edges
+    let mut distinct: Vec<f32> = Vec::new();
+    for &v in &sample {
+        if distinct.last() != Some(&v) {
+            distinct.push(v);
+        }
+    }
+    let edges: Vec<f32> = if distinct.len() <= K_BINS {
+        // each distinct value gets its own code: edges are the distinct
+        // values above the smallest (code = #edges <= v)
+        distinct[1..].to_vec()
+    } else {
+        // equi-depth cut points, deduplicated (ties collapse bins)
+        let mut e: Vec<f32> = (1..K_BINS)
+            .map(|b| sample[(b * sample.len()) / K_BINS])
+            .collect();
+        e.dedup();
+        e
+    };
+
+    let mut max_code = 0u16;
+    for (i, &v) in values.iter().enumerate() {
+        // binary search: number of edges <= v
+        let code = edges.partition_point(|&e| e <= v) as u16;
+        out[i] = code;
+        max_code = max_code.max(code);
+    }
+    max_code + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Column;
+
+    fn frame_of(cols: Vec<Column>) -> Frame {
+        let n = cols[0].values.len();
+        let mut cols = cols;
+        cols.push(Column::categorical("y", vec![0.0; n]));
+        let t = cols.len() - 1;
+        Frame::new("t", cols, t)
+    }
+
+    #[test]
+    fn categorical_identity_codes() {
+        let f = frame_of(vec![Column::categorical(
+            "c",
+            vec![0.0, 2.0, 1.0, 2.0],
+        )]);
+        let cm = CodeMatrix::from_frame(&f);
+        assert_eq!(cm.column(0), &[0, 2, 1, 2]);
+        assert_eq!(cm.cardinality[0], 3);
+    }
+
+    #[test]
+    fn categorical_tail_collapses() {
+        let vals: Vec<f32> = (0..200).map(|i| i as f32).collect();
+        let f = frame_of(vec![Column::categorical("c", vals)]);
+        let cm = CodeMatrix::from_frame(&f);
+        assert!(cm.column(0).iter().all(|&c| (c as usize) < K_BINS));
+        assert_eq!(cm.cardinality[0] as usize, K_BINS);
+    }
+
+    #[test]
+    fn numeric_quantile_bins_are_balanced() {
+        // 64k distinct values -> 64 bins of ~1k each
+        let vals: Vec<f32> = (0..64_000).map(|i| i as f32).collect();
+        let f = frame_of(vec![Column::numeric("n", vals)]);
+        let cm = CodeMatrix::from_frame(&f);
+        let mut counts = [0usize; K_BINS];
+        for &c in cm.column(0) {
+            counts[c as usize] += 1;
+        }
+        let used: Vec<usize> = counts.iter().copied().filter(|&c| c > 0).collect();
+        assert!(used.len() >= K_BINS - 2, "used {} bins", used.len());
+        let (mn, mx) = (
+            *used.iter().min().unwrap() as f64,
+            *used.iter().max().unwrap() as f64,
+        );
+        assert!(mx / mn < 1.5, "unbalanced bins: {mn} vs {mx}");
+    }
+
+    #[test]
+    fn numeric_few_distinct_values_get_distinct_codes() {
+        let vals = vec![1.0f32, 5.0, 1.0, 5.0, 9.0, 9.0, 1.0, 5.0];
+        let f = frame_of(vec![Column::numeric("n", vals.clone())]);
+        let cm = CodeMatrix::from_frame(&f);
+        // same value -> same code, different value -> different code
+        let col = cm.column(0);
+        for i in 0..vals.len() {
+            for j in 0..vals.len() {
+                assert_eq!(vals[i] == vals[j], col[i] == col[j]);
+            }
+        }
+        assert_eq!(cm.cardinality[0], 3);
+    }
+
+    #[test]
+    fn constant_column_single_code() {
+        let f = frame_of(vec![Column::numeric("n", vec![7.0; 100])]);
+        let cm = CodeMatrix::from_frame(&f);
+        assert!(cm.column(0).iter().all(|&c| c == 0));
+        assert_eq!(cm.cardinality[0], 1);
+    }
+
+    #[test]
+    fn code_accessor_matches_column_major_layout() {
+        let f = frame_of(vec![
+            Column::categorical("a", vec![1.0, 2.0]),
+            Column::categorical("b", vec![3.0, 4.0]),
+        ]);
+        let cm = CodeMatrix::from_frame(&f);
+        assert_eq!(cm.code(0, 0), 1);
+        assert_eq!(cm.code(1, 0), 2);
+        assert_eq!(cm.code(0, 1), 3);
+        assert_eq!(cm.code(1, 1), 4);
+    }
+
+    #[test]
+    fn nan_values_do_not_crash() {
+        let f = frame_of(vec![Column::numeric(
+            "n",
+            vec![f32::NAN, 1.0, 2.0, f32::NAN],
+        )]);
+        let cm = CodeMatrix::from_frame(&f);
+        assert_eq!(cm.column(0).len(), 4);
+    }
+}

@@ -1,0 +1,277 @@
+//! Data substrate: a small columnar frame, quantile binning into integer
+//! codes (the representation the entropy measure and Gen-DST operate on),
+//! dense matrices for model training, and dataset splits.
+//!
+//! The paper's datasets are tabular classification sets with mixed
+//! numeric/categorical columns and a categorical target; `Frame` models
+//! exactly that.
+
+pub mod binning;
+pub mod registry;
+pub mod split;
+pub mod synth;
+
+pub use binning::{CodeMatrix, K_BINS};
+
+/// One column of a frame. Categorical columns store code values (0..k)
+/// as f32; numeric columns store raw values.
+#[derive(Debug, Clone)]
+pub struct Column {
+    pub name: String,
+    pub values: Vec<f32>,
+    pub categorical: bool,
+}
+
+impl Column {
+    pub fn numeric<S: Into<String>>(name: S, values: Vec<f32>) -> Column {
+        Column {
+            name: name.into(),
+            values,
+            categorical: false,
+        }
+    }
+
+    pub fn categorical<S: Into<String>>(name: S, values: Vec<f32>) -> Column {
+        Column {
+            name: name.into(),
+            values,
+            categorical: true,
+        }
+    }
+}
+
+/// A column-major tabular dataset with a designated categorical target.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub name: String,
+    pub columns: Vec<Column>,
+    /// index of the target column within `columns`
+    pub target: usize,
+    pub n_rows: usize,
+}
+
+/// Dense row-major f32 matrix for model training.
+#[derive(Debug, Clone)]
+pub struct Matrix {
+    pub data: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            data: vec![0.0; rows * cols],
+            rows,
+            cols,
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+impl Frame {
+    /// Build a frame; panics on ragged columns or bad target index.
+    pub fn new<S: Into<String>>(name: S, columns: Vec<Column>, target: usize) -> Frame {
+        assert!(!columns.is_empty(), "frame needs at least one column");
+        let n_rows = columns[0].values.len();
+        for c in &columns {
+            assert_eq!(c.values.len(), n_rows, "ragged column {:?}", c.name);
+        }
+        assert!(target < columns.len(), "target index out of range");
+        assert!(
+            columns[target].categorical,
+            "target column must be categorical"
+        );
+        Frame {
+            name: name.into(),
+            columns,
+            target,
+            n_rows,
+        }
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n_rows, self.n_cols())
+    }
+
+    /// Column indices excluding the target.
+    pub fn feature_indices(&self) -> Vec<u32> {
+        (0..self.n_cols() as u32)
+            .filter(|&c| c as usize != self.target)
+            .collect()
+    }
+
+    /// Class labels as 0-based integers.
+    pub fn labels(&self) -> Vec<u32> {
+        self.columns[self.target]
+            .values
+            .iter()
+            .map(|&v| v as u32)
+            .collect()
+    }
+
+    /// Number of target classes (max label + 1).
+    pub fn n_classes(&self) -> usize {
+        self.columns[self.target]
+            .values
+            .iter()
+            .fold(0u32, |m, &v| m.max(v as u32)) as usize
+            + 1
+    }
+
+    /// Materialize the data subset `D[rows, cols]` (paper Def. 3.1) as a
+    /// new frame. `cols` MUST contain the target column; the new frame's
+    /// target index points at its position inside `cols`.
+    pub fn subset(&self, rows: &[u32], cols: &[u32]) -> Frame {
+        let tpos = cols
+            .iter()
+            .position(|&c| c as usize == self.target)
+            .expect("subset columns must contain the target column");
+        let columns: Vec<Column> = cols
+            .iter()
+            .map(|&c| {
+                let src = &self.columns[c as usize];
+                Column {
+                    name: src.name.clone(),
+                    values: rows.iter().map(|&r| src.values[r as usize]).collect(),
+                    categorical: src.categorical,
+                }
+            })
+            .collect();
+        Frame::new(format!("{}[sub]", self.name), columns, tpos)
+    }
+
+    /// Project onto a subset of columns keeping all rows.
+    pub fn select_columns(&self, cols: &[u32]) -> Frame {
+        let rows: Vec<u32> = (0..self.n_rows as u32).collect();
+        self.subset(&rows, cols)
+    }
+
+    /// Feature matrix (target excluded) and labels for model training.
+    pub fn to_xy(&self) -> (Matrix, Vec<u32>) {
+        let feats = self.feature_indices();
+        let mut m = Matrix::zeros(self.n_rows, feats.len());
+        for (j, &c) in feats.iter().enumerate() {
+            let col = &self.columns[c as usize].values;
+            for r in 0..self.n_rows {
+                m.data[r * feats.len() + j] = col[r];
+            }
+        }
+        (m, self.labels())
+    }
+
+    /// Feature matrix restricted to the given rows.
+    pub fn to_xy_rows(&self, rows: &[u32]) -> (Matrix, Vec<u32>) {
+        let feats = self.feature_indices();
+        let mut m = Matrix::zeros(rows.len(), feats.len());
+        let labels_full = self.labels();
+        let mut labels = Vec::with_capacity(rows.len());
+        for (i, &r) in rows.iter().enumerate() {
+            for (j, &c) in feats.iter().enumerate() {
+                m.data[i * feats.len() + j] = self.columns[c as usize].values[r as usize];
+            }
+            labels.push(labels_full[r as usize]);
+        }
+        (m, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Frame {
+        Frame::new(
+            "toy",
+            vec![
+                Column::numeric("a", vec![1.0, 2.0, 3.0, 4.0]),
+                Column::numeric("b", vec![10.0, 20.0, 30.0, 40.0]),
+                Column::categorical("y", vec![0.0, 1.0, 0.0, 1.0]),
+            ],
+            2,
+        )
+    }
+
+    #[test]
+    fn shape_and_labels() {
+        let f = toy();
+        assert_eq!(f.shape(), (4, 3));
+        assert_eq!(f.labels(), vec![0, 1, 0, 1]);
+        assert_eq!(f.n_classes(), 2);
+        assert_eq!(f.feature_indices(), vec![0, 1]);
+    }
+
+    #[test]
+    fn subset_projects_rows_and_cols() {
+        let f = toy();
+        let d = f.subset(&[0, 2], &[0, 2]);
+        assert_eq!(d.shape(), (2, 2));
+        assert_eq!(d.columns[0].values, vec![1.0, 3.0]);
+        assert_eq!(d.target, 1);
+        assert_eq!(d.labels(), vec![0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must contain the target")]
+    fn subset_without_target_panics() {
+        let f = toy();
+        let _ = f.subset(&[0, 1], &[0, 1]);
+    }
+
+    #[test]
+    fn to_xy_excludes_target() {
+        let f = toy();
+        let (x, y) = f.to_xy();
+        assert_eq!((x.rows, x.cols), (4, 2));
+        assert_eq!(x.row(1), &[2.0, 20.0]);
+        assert_eq!(y, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn to_xy_rows_selects() {
+        let f = toy();
+        let (x, y) = f.to_xy_rows(&[3, 0]);
+        assert_eq!(x.row(0), &[4.0, 40.0]);
+        assert_eq!(x.row(1), &[1.0, 10.0]);
+        assert_eq!(y, vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_columns_panic() {
+        let _ = Frame::new(
+            "bad",
+            vec![
+                Column::numeric("a", vec![1.0]),
+                Column::categorical("y", vec![0.0, 1.0]),
+            ],
+            1,
+        );
+    }
+
+    #[test]
+    fn matrix_accessors() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(0), &[0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,168 @@
+//! Train/test splitting and stratified k-fold cross-validation indices —
+//! the evaluation substrate the AutoML framework relies on.
+
+use crate::data::Frame;
+use crate::util::rng::Rng;
+
+/// Shuffled stratified train/test split; `test_frac` in (0, 1).
+/// Stratification keeps class proportions in both halves, which matters
+/// for the small-n subsets Gen-DST produces.
+pub fn train_test_split(frame: &Frame, test_frac: f64, rng: &mut Rng) -> (Frame, Frame) {
+    assert!((0.0..1.0).contains(&test_frac) && test_frac > 0.0);
+    let labels = frame.labels();
+    let k = frame.n_classes();
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (i, &y) in labels.iter().enumerate() {
+        by_class[y as usize].push(i as u32);
+    }
+    let mut train_rows = Vec::new();
+    let mut test_rows = Vec::new();
+    for rows in by_class.iter_mut() {
+        rng.shuffle(rows);
+        let n_test = ((rows.len() as f64 * test_frac).round() as usize)
+            .min(rows.len().saturating_sub(1));
+        test_rows.extend_from_slice(&rows[..n_test]);
+        train_rows.extend_from_slice(&rows[n_test..]);
+    }
+    rng.shuffle(&mut train_rows);
+    rng.shuffle(&mut test_rows);
+    let all_cols: Vec<u32> = (0..frame.n_cols() as u32).collect();
+    (
+        frame.subset(&train_rows, &all_cols),
+        frame.subset(&test_rows, &all_cols),
+    )
+}
+
+/// Stratified k-fold index pairs (train_rows, valid_rows) over `labels`.
+/// Every row appears in exactly one validation fold.
+pub fn stratified_kfold(labels: &[u32], k_folds: usize, rng: &mut Rng) -> Vec<(Vec<u32>, Vec<u32>)> {
+    assert!(k_folds >= 2, "need at least 2 folds");
+    let n_classes = labels.iter().fold(0u32, |m, &y| m.max(y)) as usize + 1;
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); n_classes];
+    for (i, &y) in labels.iter().enumerate() {
+        by_class[y as usize].push(i as u32);
+    }
+    // assign each row a fold id, round-robin within its class
+    let mut fold_of = vec![0usize; labels.len()];
+    for rows in by_class.iter_mut() {
+        rng.shuffle(rows);
+        for (pos, &r) in rows.iter().enumerate() {
+            fold_of[r as usize] = pos % k_folds;
+        }
+    }
+    (0..k_folds)
+        .map(|f| {
+            let mut train = Vec::new();
+            let mut valid = Vec::new();
+            for (i, &fi) in fold_of.iter().enumerate() {
+                if fi == f {
+                    valid.push(i as u32);
+                } else {
+                    train.push(i as u32);
+                }
+            }
+            (train, valid)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Column;
+
+    fn frame(n: usize, n_classes: usize) -> Frame {
+        let mut rng = Rng::new(5);
+        let y: Vec<f32> = (0..n).map(|_| rng.usize_below(n_classes) as f32).collect();
+        Frame::new(
+            "t",
+            vec![
+                Column::numeric("x", (0..n).map(|i| i as f32).collect()),
+                Column::categorical("y", y),
+            ],
+            1,
+        )
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let f = frame(1000, 3);
+        let mut rng = Rng::new(1);
+        let (tr, te) = train_test_split(&f, 0.25, &mut rng);
+        assert_eq!(tr.n_rows + te.n_rows, 1000);
+        assert!((te.n_rows as f64 - 250.0).abs() < 10.0);
+        // partition: x values are unique ids; union must be complete
+        let mut ids: Vec<f32> = tr.columns[0]
+            .values
+            .iter()
+            .chain(te.columns[0].values.iter())
+            .copied()
+            .collect();
+        ids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ids, (0..1000).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_is_stratified() {
+        let f = frame(3000, 3);
+        let mut rng = Rng::new(2);
+        let (tr, te) = train_test_split(&f, 0.3, &mut rng);
+        for frame in [&tr, &te] {
+            let labels = frame.labels();
+            let mut counts = [0usize; 3];
+            for &y in &labels {
+                counts[y as usize] += 1;
+            }
+            let total: usize = counts.iter().sum();
+            for &c in &counts {
+                let frac = c as f64 / total as f64;
+                assert!((frac - 1.0 / 3.0).abs() < 0.06, "{counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn kfold_covers_every_row_once() {
+        let f = frame(501, 4);
+        let mut rng = Rng::new(3);
+        let folds = stratified_kfold(&f.labels(), 3, &mut rng);
+        assert_eq!(folds.len(), 3);
+        let mut seen = vec![0usize; 501];
+        for (train, valid) in &folds {
+            assert_eq!(train.len() + valid.len(), 501);
+            for &v in valid {
+                seen[v as usize] += 1;
+            }
+            // disjointness within one fold
+            for &v in valid {
+                assert!(!train.contains(&v));
+            }
+        }
+        assert!(seen.iter().all(|&s| s == 1), "validation coverage broken");
+    }
+
+    #[test]
+    fn kfold_strata_balanced() {
+        let f = frame(900, 3);
+        let mut rng = Rng::new(4);
+        let labels = f.labels();
+        for (_, valid) in stratified_kfold(&labels, 3, &mut rng) {
+            let mut counts = [0usize; 3];
+            for &v in &valid {
+                counts[labels[v as usize] as usize] += 1;
+            }
+            let total: usize = counts.iter().sum();
+            for &c in &counts {
+                assert!((c as f64 / total as f64 - 1.0 / 3.0).abs() < 0.08);
+            }
+        }
+    }
+
+    #[test]
+    fn split_deterministic_per_rng_seed() {
+        let f = frame(200, 2);
+        let (a, _) = train_test_split(&f, 0.2, &mut Rng::new(9));
+        let (b, _) = train_test_split(&f, 0.2, &mut Rng::new(9));
+        assert_eq!(a.columns[0].values, b.columns[0].values);
+    }
+}

@@ -1,0 +1,114 @@
+//! Figure 2 — per-dataset performance scatter: one (time-reduction,
+//! relative-accuracy) point per dataset per strategy, using the
+//! Auto-Sklearn-like searcher (the paper shows SMBO only and notes TPOT
+//! looks the same). Regenerate with `substrat exp fig2`.
+
+use crate::automl::SearcherKind;
+use crate::experiments::table4::collect_records;
+use crate::experiments::{paper_label, table4_strategy_names, ExpConfig, RunRecord};
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// Mean per-dataset points for every strategy.
+pub fn per_dataset_points(records: &[RunRecord]) -> Table {
+    let mut t = Table::new(vec![
+        "strategy",
+        "dataset",
+        "time_reduction",
+        "relative_accuracy",
+        "above_95",
+    ]);
+    for strategy in table4_strategy_names() {
+        let mut datasets: Vec<String> = records
+            .iter()
+            .filter(|r| r.strategy == strategy)
+            .map(|r| r.dataset.clone())
+            .collect();
+        datasets.sort();
+        datasets.dedup();
+        for d in datasets {
+            let rows: Vec<&RunRecord> = records
+                .iter()
+                .filter(|r| r.strategy == strategy && r.dataset == d)
+                .collect();
+            let tr = stats::mean(&rows.iter().map(|r| r.time_reduction()).collect::<Vec<_>>());
+            let ra = stats::mean(
+                &rows
+                    .iter()
+                    .map(|r| r.relative_accuracy())
+                    .collect::<Vec<_>>(),
+            );
+            t.push(vec![
+                paper_label(strategy).to_string(),
+                d,
+                format!("{tr:.4}"),
+                format!("{ra:.4}"),
+                (ra >= 0.95).to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Count of datasets above the 95% relative-accuracy bar per strategy
+/// (the paper's headline Figure-2 comparison: SubStrat 8/10 vs <=3/10).
+pub fn above_bar_counts(points: &Table) -> Table {
+    let mut t = Table::new(vec!["strategy", "datasets_above_95"]);
+    let mut strategies: Vec<String> = points.rows.iter().map(|r| r[0].clone()).collect();
+    strategies.dedup();
+    for s in strategies {
+        let n = points
+            .rows
+            .iter()
+            .filter(|r| r[0] == s && r[4] == "true")
+            .count();
+        t.push(vec![s, n.to_string()]);
+    }
+    t
+}
+
+pub fn run(cfg: &ExpConfig) -> (Table, Table) {
+    let mut cfg = cfg.clone();
+    cfg.searchers = vec![SearcherKind::Smbo];
+    let records = collect_records(&cfg, &table4_strategy_names());
+    let points = per_dataset_points(&records);
+    let counts = above_bar_counts(&points);
+    println!("\n=== Figure 2: per-dataset points (smbo) ===");
+    println!("{}", points.to_aligned());
+    println!("{}", counts.to_aligned());
+    let _ = points.write_csv(&cfg.out_dir.join("fig2_points.csv"));
+    let _ = counts.write_csv(&cfg.out_dir.join("fig2_above_bar.csv"));
+    (points, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_and_counts() {
+        let mk = |d: &str, strategy: &str, acc_sub: f64| RunRecord {
+            dataset: d.into(),
+            strategy: strategy.into(),
+            searcher: "smbo",
+            rep: 0,
+            time_full_s: 10.0,
+            time_sub_s: 2.0,
+            acc_full: 1.0,
+            acc_sub,
+            final_desc: String::new(),
+        };
+        let records = vec![
+            mk("D1", "gendst", 0.99),
+            mk("D2", "gendst", 0.90),
+            mk("D1", "km", 0.80),
+        ];
+        let points = per_dataset_points(&records);
+        assert_eq!(points.rows.len(), 3);
+        let counts = above_bar_counts(&points);
+        let substrat = counts.rows.iter().find(|r| r[0] == "SubStrat").unwrap();
+        assert_eq!(substrat[1], "1");
+        let km = counts.rows.iter().find(|r| r[0] == "KM").unwrap();
+        assert_eq!(km[1], "0");
+    }
+}

@@ -1,0 +1,185 @@
+//! Figure 3 — the SubStrat configuration skyline: alternative
+//! (DST-size, fine-tune-budget) settings of SubStrat traded off against
+//! IG-KM's settings in (time-reduction, relative-accuracy) space, keeping
+//! only Pareto-optimal points (the "skyline" operator the paper cites).
+//! Regenerate with `substrat exp fig3`.
+
+use crate::automl::SearcherKind;
+use crate::experiments::{prepare, run_full, run_strategy, ExpConfig};
+use crate::util::pool;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// One configuration variant to place on the plane.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub label: String,
+    pub strategy: &'static str,
+    /// multipliers on the default (sqrt(N), 0.25 M)
+    pub n_mult: f64,
+    pub m_mult: f64,
+    pub ft_frac: f64,
+}
+
+/// The variant grid: SubStrat settings 1..6 + IG-KM settings 1..3.
+pub fn variants() -> Vec<Variant> {
+    let mut v = Vec::new();
+    let substrat_grid: &[(f64, f64, f64)] = &[
+        (1.0, 1.0, 0.25),  // SubStrat-1: the paper default
+        (0.5, 0.6, 0.15),  // SubStrat-2: the fast one
+        (0.5, 1.0, 0.25),
+        (2.0, 1.0, 0.25),
+        (1.0, 2.0, 0.40),
+        (0.25, 0.6, 0.10),
+    ];
+    for (i, &(n_mult, m_mult, ft_frac)) in substrat_grid.iter().enumerate() {
+        v.push(Variant {
+            label: format!("SubStrat-{}", i + 1),
+            strategy: "gendst",
+            n_mult,
+            m_mult,
+            ft_frac,
+        });
+    }
+    let ig_grid: &[(f64, f64, f64)] = &[(1.0, 1.0, 0.25), (0.5, 0.6, 0.15), (2.0, 1.0, 0.25)];
+    for (i, &(n_mult, m_mult, ft_frac)) in ig_grid.iter().enumerate() {
+        v.push(Variant {
+            label: format!("IG-KM-{}", i + 1),
+            strategy: "ig-km",
+            n_mult,
+            m_mult,
+            ft_frac,
+        });
+    }
+    v
+}
+
+/// Keep only points not strictly dominated in (time_red, rel_acc).
+pub fn skyline(points: &[(String, f64, f64)]) -> Vec<(String, f64, f64)> {
+    points
+        .iter()
+        .filter(|(_, tr, ra)| {
+            !points
+                .iter()
+                .any(|(_, tr2, ra2)| tr2 >= tr && ra2 >= ra && (tr2 > tr || ra2 > ra))
+        })
+        .cloned()
+        .collect()
+}
+
+pub fn run(cfg: &ExpConfig) -> Table {
+    let mut cfg = cfg.clone();
+    cfg.searchers = vec![SearcherKind::Smbo];
+    let vars = variants();
+
+    #[derive(Clone)]
+    struct Cell {
+        symbol: String,
+        rep: usize,
+    }
+    let mut cells = Vec::new();
+    for symbol in &cfg.datasets {
+        for rep in 0..cfg.reps {
+            cells.push(Cell {
+                symbol: symbol.clone(),
+                rep,
+            });
+        }
+    }
+
+    // per cell: one Full-AutoML reference + every variant
+    let nested: Vec<Vec<(String, f64, f64)>> =
+        pool::parallel_map(&cells, cfg.threads, |_, cell| {
+            let prep = prepare(&cell.symbol, &cfg, cell.rep);
+            let full = run_full(&prep, SearcherKind::Smbo, &cfg, cell.rep);
+            let (n0, m0) = crate::gendst::default_dst_size(prep.train.n_rows, prep.train.n_cols());
+            vars.iter()
+                .map(|v| {
+                    let n = ((n0 as f64 * v.n_mult).round() as usize)
+                        .clamp(2, prep.train.n_rows);
+                    let m = ((m0 as f64 * v.m_mult).round() as usize)
+                        .clamp(2, prep.train.n_cols());
+                    let mut vcfg = cfg.clone();
+                    vcfg.ft_frac = v.ft_frac;
+                    let rec = run_strategy(
+                        &prep,
+                        &cell.symbol,
+                        v.strategy,
+                        SearcherKind::Smbo,
+                        &full,
+                        &vcfg,
+                        cell.rep,
+                        Some((n, m)),
+                    );
+                    (v.label.clone(), rec.time_reduction(), rec.relative_accuracy())
+                })
+                .collect()
+        });
+
+    // aggregate per variant label
+    let flat: Vec<(String, f64, f64)> = nested.into_iter().flatten().collect();
+    let mut points: Vec<(String, f64, f64)> = Vec::new();
+    for v in &vars {
+        let trs: Vec<f64> = flat
+            .iter()
+            .filter(|(l, _, _)| *l == v.label)
+            .map(|&(_, tr, _)| tr)
+            .collect();
+        let ras: Vec<f64> = flat
+            .iter()
+            .filter(|(l, _, _)| *l == v.label)
+            .map(|&(_, _, ra)| ra)
+            .collect();
+        points.push((v.label.clone(), stats::mean(&trs), stats::mean(&ras)));
+    }
+    let sky = skyline(&points);
+
+    let mut t = Table::new(vec!["config", "time_reduction", "relative_accuracy", "on_skyline"]);
+    for (label, tr, ra) in &points {
+        t.push(vec![
+            label.clone(),
+            format!("{tr:.4}"),
+            format!("{ra:.4}"),
+            sky.iter().any(|(l, _, _)| l == label).to_string(),
+        ]);
+    }
+    println!("\n=== Figure 3: SubStrat settings skyline ===");
+    println!("{}", t.to_aligned());
+    let _ = t.write_csv(&cfg.out_dir.join("fig3_skyline.csv"));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skyline_removes_dominated() {
+        let pts = vec![
+            ("a".to_string(), 0.8, 0.98),
+            ("b".to_string(), 0.9, 0.96),
+            ("c".to_string(), 0.7, 0.90), // dominated by both
+            ("d".to_string(), 0.85, 0.97),
+        ];
+        let sky = skyline(&pts);
+        let labels: Vec<&str> = sky.iter().map(|(l, _, _)| l.as_str()).collect();
+        assert!(labels.contains(&"a"));
+        assert!(labels.contains(&"b"));
+        assert!(labels.contains(&"d"));
+        assert!(!labels.contains(&"c"));
+    }
+
+    #[test]
+    fn variant_grid_has_default_first() {
+        let v = variants();
+        assert_eq!(v[0].label, "SubStrat-1");
+        assert_eq!(v[0].n_mult, 1.0);
+        assert!(v.iter().any(|x| x.strategy == "ig-km"));
+    }
+
+    #[test]
+    fn skyline_keeps_single_point() {
+        let pts = vec![("only".to_string(), 0.5, 0.5)];
+        assert_eq!(skyline(&pts).len(), 1);
+    }
+}

@@ -1,0 +1,152 @@
+//! Figure 4 — DST-size heatmaps: mean relative-accuracy (4a) and
+//! time-reduction (4b) over a grid of (n, m) choices spanning
+//! (log2 N, log2 M) to (N, M). Regenerate with `substrat exp fig4`.
+
+use crate::automl::SearcherKind;
+use crate::experiments::{prepare, run_full, run_strategy, ExpConfig};
+use crate::util::pool;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// Row-count grid labels (n axis), resolved per dataset.
+pub fn n_grid(n_rows: usize) -> Vec<(String, usize)> {
+    let nf = n_rows as f64;
+    let sqrt = nf.sqrt();
+    vec![
+        ("log2N".to_string(), (nf.log2().ceil() as usize).max(2)),
+        ("0.5*sqrtN".to_string(), (0.5 * sqrt) as usize),
+        ("sqrtN".to_string(), sqrt.ceil() as usize),
+        ("4*sqrtN".to_string(), (4.0 * sqrt) as usize),
+        ("0.25N".to_string(), (0.25 * nf) as usize),
+        ("N".to_string(), n_rows),
+    ]
+    .into_iter()
+    .map(|(l, n)| (l, n.clamp(2, n_rows)))
+    .collect()
+}
+
+/// Column-count grid labels (m axis), resolved per dataset.
+pub fn m_grid(n_cols: usize) -> Vec<(String, usize)> {
+    let mf = n_cols as f64;
+    vec![
+        ("log2M".to_string(), (mf.log2().ceil() as usize).max(2)),
+        ("0.1M".to_string(), (0.1 * mf).ceil() as usize),
+        ("0.25M".to_string(), (0.25 * mf).ceil() as usize),
+        ("0.5M".to_string(), (0.5 * mf).ceil() as usize),
+        ("M".to_string(), n_cols),
+    ]
+    .into_iter()
+    .map(|(l, m)| (l, m.clamp(2, n_cols)))
+    .collect()
+}
+
+/// Run the heatmap sweep; returns (rel-acc table, time-reduction table),
+/// cells averaged over datasets × reps.
+pub fn run(cfg: &ExpConfig) -> (Table, Table) {
+    let n_labels: Vec<String> = n_grid(10_000).into_iter().map(|(l, _)| l).collect();
+    let m_labels: Vec<String> = m_grid(20).into_iter().map(|(l, _)| l).collect();
+
+    #[derive(Clone)]
+    struct Cell {
+        symbol: String,
+        rep: usize,
+    }
+    let mut cells = Vec::new();
+    for symbol in &cfg.datasets {
+        for rep in 0..cfg.reps {
+            cells.push(Cell {
+                symbol: symbol.clone(),
+                rep,
+            });
+        }
+    }
+
+    // per (dataset, rep): one full reference + the whole grid
+    let nested: Vec<Vec<(usize, usize, f64, f64)>> =
+        pool::parallel_map(&cells, cfg.threads, |_, cell| {
+            let prep = prepare(&cell.symbol, cfg, cell.rep);
+            let full = run_full(&prep, SearcherKind::Smbo, cfg, cell.rep);
+            let ns = n_grid(prep.train.n_rows);
+            let ms = m_grid(prep.train.n_cols());
+            let mut out = Vec::new();
+            for (i, (_, n)) in ns.iter().enumerate() {
+                for (j, (_, m)) in ms.iter().enumerate() {
+                    let rec = run_strategy(
+                        &prep,
+                        &cell.symbol,
+                        "gendst",
+                        SearcherKind::Smbo,
+                        &full,
+                        cfg,
+                        cell.rep,
+                        Some((*n, *m)),
+                    );
+                    out.push((i, j, rec.relative_accuracy(), rec.time_reduction()));
+                }
+            }
+            out
+        });
+
+    let flat: Vec<(usize, usize, f64, f64)> = nested.into_iter().flatten().collect();
+    let mut header = vec!["n \\ m".to_string()];
+    header.extend(m_labels.iter().cloned());
+    let mut acc_t = Table::new(header.clone());
+    let mut time_t = Table::new(header);
+    for (i, nl) in n_labels.iter().enumerate() {
+        let mut acc_row = vec![nl.clone()];
+        let mut time_row = vec![nl.clone()];
+        for j in 0..m_labels.len() {
+            let ras: Vec<f64> = flat
+                .iter()
+                .filter(|&&(ci, cj, _, _)| ci == i && cj == j)
+                .map(|&(_, _, ra, _)| ra)
+                .collect();
+            let trs: Vec<f64> = flat
+                .iter()
+                .filter(|&&(ci, cj, _, _)| ci == i && cj == j)
+                .map(|&(_, _, _, tr)| tr)
+                .collect();
+            acc_row.push(format!("{:.3}", stats::mean(&ras)));
+            time_row.push(format!("{:.3}", stats::mean(&trs)));
+        }
+        acc_t.push(acc_row);
+        time_t.push(time_row);
+    }
+    println!("\n=== Figure 4a: relative accuracy heatmap ===");
+    println!("{}", acc_t.to_aligned());
+    println!("=== Figure 4b: time reduction heatmap ===");
+    println!("{}", time_t.to_aligned());
+    let _ = acc_t.write_csv(&cfg.out_dir.join("fig4a_rel_accuracy.csv"));
+    let _ = time_t.write_csv(&cfg.out_dir.join("fig4b_time_reduction.csv"));
+    (acc_t, time_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_are_monotone_and_bounded() {
+        let ns = n_grid(10_000);
+        for w in ns.windows(2) {
+            assert!(w[0].1 <= w[1].1, "{ns:?}");
+        }
+        assert_eq!(ns.last().unwrap().1, 10_000);
+        let ms = m_grid(23);
+        assert!(ms.iter().all(|&(_, m)| (2..=23).contains(&m)));
+        assert_eq!(ms.last().unwrap().1, 23);
+    }
+
+    #[test]
+    fn sqrt_cell_matches_paper_default() {
+        let ns = n_grid(1_000_000);
+        let sqrt_cell = ns.iter().find(|(l, _)| l == "sqrtN").unwrap();
+        assert_eq!(sqrt_cell.1, 1000);
+    }
+
+    #[test]
+    fn tiny_datasets_clamp() {
+        let ns = n_grid(4);
+        assert!(ns.iter().all(|&(_, n)| (2..=4).contains(&n)));
+    }
+}

@@ -1,0 +1,139 @@
+//! Figure 5 — the isolated effect of DST length and width: (5a) sweep n
+//! with m fixed at 0.25 M; (5b) sweep m with n fixed at sqrt(N). Error
+//! bars are 95% CIs over datasets × reps. Regenerate with
+//! `substrat exp fig5`.
+
+use crate::automl::SearcherKind;
+use crate::experiments::fig4::{m_grid, n_grid};
+use crate::experiments::{prepare, run_full, run_strategy, ExpConfig};
+use crate::util::pool;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// Sweep one axis; `axis` is "n" or "m".
+fn sweep(cfg: &ExpConfig, axis: &str) -> Table {
+    let labels: Vec<String> = if axis == "n" {
+        n_grid(10_000).into_iter().map(|(l, _)| l).collect()
+    } else {
+        m_grid(20).into_iter().map(|(l, _)| l).collect()
+    };
+
+    #[derive(Clone)]
+    struct Cell {
+        symbol: String,
+        rep: usize,
+    }
+    let mut cells = Vec::new();
+    for symbol in &cfg.datasets {
+        for rep in 0..cfg.reps {
+            cells.push(Cell {
+                symbol: symbol.clone(),
+                rep,
+            });
+        }
+    }
+
+    let axis_owned = axis.to_string();
+    let nested: Vec<Vec<(usize, f64, f64)>> = pool::parallel_map(&cells, cfg.threads, |_, cell| {
+        let prep = prepare(&cell.symbol, cfg, cell.rep);
+        let full = run_full(&prep, SearcherKind::Smbo, cfg, cell.rep);
+        let (n0, m0) = crate::gendst::default_dst_size(prep.train.n_rows, prep.train.n_cols());
+        let points: Vec<(usize, usize)> = if axis_owned == "n" {
+            n_grid(prep.train.n_rows)
+                .into_iter()
+                .map(|(_, n)| (n, m0))
+                .collect()
+        } else {
+            m_grid(prep.train.n_cols())
+                .into_iter()
+                .map(|(_, m)| (n0, m))
+                .collect()
+        };
+        points
+            .into_iter()
+            .enumerate()
+            .map(|(i, (n, m))| {
+                let rec = run_strategy(
+                    &prep,
+                    &cell.symbol,
+                    "gendst",
+                    SearcherKind::Smbo,
+                    &full,
+                    cfg,
+                    cell.rep,
+                    Some((n, m)),
+                );
+                (i, rec.relative_accuracy(), rec.time_reduction())
+            })
+            .collect()
+    });
+
+    let flat: Vec<(usize, f64, f64)> = nested.into_iter().flatten().collect();
+    let mut t = Table::new(vec![
+        "point",
+        "rel_accuracy",
+        "rel_accuracy_ci95",
+        "time_reduction",
+        "time_reduction_ci95",
+    ]);
+    for (i, label) in labels.iter().enumerate() {
+        let ras: Vec<f64> = flat
+            .iter()
+            .filter(|&&(ci, _, _)| ci == i)
+            .map(|&(_, ra, _)| ra)
+            .collect();
+        let trs: Vec<f64> = flat
+            .iter()
+            .filter(|&&(ci, _, _)| ci == i)
+            .map(|&(_, _, tr)| tr)
+            .collect();
+        t.push(vec![
+            label.clone(),
+            format!("{:.4}", stats::mean(&ras)),
+            format!("{:.4}", stats::ci95(&ras)),
+            format!("{:.4}", stats::mean(&trs)),
+            format!("{:.4}", stats::ci95(&trs)),
+        ]);
+    }
+    t
+}
+
+pub fn run(cfg: &ExpConfig) -> (Table, Table) {
+    let a = sweep(cfg, "n");
+    println!("\n=== Figure 5a: n sweep (m = 0.25M) ===");
+    println!("{}", a.to_aligned());
+    let b = sweep(cfg, "m");
+    println!("=== Figure 5b: m sweep (n = sqrt N) ===");
+    println!("{}", b.to_aligned());
+    let _ = a.write_csv(&cfg.out_dir.join("fig5a_n_sweep.csv"));
+    let _ = b.write_csv(&cfg.out_dir.join("fig5b_m_sweep.csv"));
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automl::SearcherKind;
+
+    #[test]
+    fn tiny_sweep_produces_all_points() {
+        let cfg = ExpConfig {
+            scale: 0.02,
+            reps: 1,
+            full_evals: 2,
+            searchers: vec![SearcherKind::Random],
+            datasets: vec!["D2".into()],
+            threads: 2,
+            out_dir: std::env::temp_dir().join("substrat_fig5_test"),
+            ..Default::default()
+        };
+        let t = sweep(&cfg, "m");
+        assert_eq!(t.rows.len(), m_grid(20).len());
+        // every row parses as numbers
+        for row in &t.rows {
+            let _: f64 = row[1].parse().unwrap();
+            let _: f64 = row[3].parse().unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    }
+}

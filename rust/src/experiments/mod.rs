@@ -1,0 +1,308 @@
+//! Experiment harness: the shared runner that measures, for a (dataset,
+//! strategy, AutoML searcher, repetition) cell, the paper's two metrics:
+//!
+//! * Time-Reduction = 1 − Time(M_sub) / Time(M*)
+//! * Relative-Accuracy = Acc(M_sub) / Acc(M*)
+//!
+//! where Time(M_sub) covers the entire SubStrat flow (subset search +
+//! AutoML on the subset + restricted fine-tune) and accuracies are
+//! measured on a held-out stratified test split. Each table/figure
+//! driver (table4, fig2, ...) layers aggregation on top of this runner.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table4;
+
+use std::path::PathBuf;
+
+use crate::automl::{eval::fit_on_frame, run_automl, AutoMlConfig, SearcherKind};
+use crate::baselines;
+use crate::data::{registry, split, CodeMatrix, Frame};
+use crate::measures::entropy::EntropyMeasure;
+use crate::substrat::{run_substrat, SubStratConfig};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// Experiment-wide parameters (CLI-settable).
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// row-count multiplier vs the paper's Table-2 shapes (1.0 = full)
+    pub scale: f64,
+    /// row floor after scaling (subsets of sqrt(N) rows need N large
+    /// enough for CV to rank model families; never exceeds the paper N)
+    pub min_rows: usize,
+    /// row cap after scaling (bounds the single-core cost of D10)
+    pub max_rows: usize,
+    /// repetitions per cell (paper: 5)
+    pub reps: usize,
+    /// full-AutoML evaluation budget (each = one CV'd pipeline fit)
+    pub full_evals: usize,
+    /// fine-tune budget fraction (paper: "restricted, much shorter")
+    pub ft_frac: f64,
+    pub searchers: Vec<SearcherKind>,
+    pub datasets: Vec<String>,
+    pub out_dir: PathBuf,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            scale: 0.15,
+            min_rows: 6_000,
+            max_rows: 15_000,
+            reps: 2,
+            full_evals: 14,
+            ft_frac: 0.2,
+            searchers: vec![SearcherKind::Smbo, SearcherKind::Gp],
+            datasets: registry::all_symbols().iter().map(|s| s.to_string()).collect(),
+            out_dir: PathBuf::from("results"),
+            threads: crate::util::pool::default_threads(),
+            seed: 20220,
+        }
+    }
+}
+
+/// The Full-AutoML reference for one (dataset, searcher, rep).
+pub struct FullRun {
+    pub elapsed_s: f64,
+    pub test_acc: f64,
+    pub best_desc: String,
+}
+
+/// One measured cell.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub dataset: String,
+    pub strategy: String,
+    pub searcher: &'static str,
+    pub rep: usize,
+    pub time_full_s: f64,
+    pub time_sub_s: f64,
+    pub acc_full: f64,
+    pub acc_sub: f64,
+    /// describe() of the final configuration M_sub (debug/analysis aid)
+    pub final_desc: String,
+}
+
+impl RunRecord {
+    pub fn time_reduction(&self) -> f64 {
+        1.0 - self.time_sub_s / self.time_full_s.max(1e-9)
+    }
+
+    pub fn relative_accuracy(&self) -> f64 {
+        self.acc_sub / self.acc_full.max(1e-9)
+    }
+}
+
+/// Prepared per-(dataset, rep) state shared by all strategies.
+pub struct Prepared {
+    pub train: Frame,
+    pub test: Frame,
+    pub codes: CodeMatrix,
+}
+
+/// Load + split + encode one dataset at the experiment scale, with the
+/// row floor/cap applied (the floor never exceeds the paper's own N).
+pub fn prepare(symbol: &str, cfg: &ExpConfig, rep: usize) -> Prepared {
+    let mut spec =
+        registry::spec_for(symbol, cfg.scale, cfg.seed ^ (rep as u64).wrapping_mul(0x9e37));
+    let paper_rows = registry::table2()
+        .into_iter()
+        .find(|d| d.symbol == symbol)
+        .map(|d| d.n_rows)
+        .unwrap_or(spec.n_rows);
+    spec.n_rows = spec
+        .n_rows
+        .max(cfg.min_rows.min(paper_rows))
+        .min(cfg.max_rows.max(2));
+    let frame = spec.generate();
+    let mut rng = Rng::new(cfg.seed ^ 0xabc ^ rep as u64);
+    let (train, test) = split::train_test_split(&frame, 0.25, &mut rng);
+    let codes = CodeMatrix::from_frame(&train);
+    Prepared { train, test, codes }
+}
+
+/// Run the Full-AutoML reference: `A(D, y) -> M*`, timed, tested.
+pub fn run_full(prep: &Prepared, searcher: SearcherKind, cfg: &ExpConfig, rep: usize) -> FullRun {
+    let sw = Stopwatch::start();
+    let automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ rep as u64);
+    let res = run_automl(&prep.train, &automl);
+    let mut rng = Rng::new(cfg.seed ^ 0x77 ^ rep as u64);
+    let pipe = fit_on_frame(&res.best, &prep.train, &mut rng);
+    let test_acc = pipe.accuracy_on(&prep.test);
+    FullRun {
+        elapsed_s: sw.elapsed_s(),
+        test_acc,
+        best_desc: res.best.describe(),
+    }
+}
+
+/// Run one strategy cell (strategy "substrat-nf" = Gen-DST without the
+/// fine-tune pass; every other name resolves via `baselines::by_name`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_strategy(
+    prep: &Prepared,
+    symbol: &str,
+    strategy_name: &str,
+    searcher: SearcherKind,
+    full: &FullRun,
+    cfg: &ExpConfig,
+    rep: usize,
+    dst_size: Option<(usize, usize)>,
+) -> RunRecord {
+    let (resolved, fine_tune) = match strategy_name {
+        "substrat-nf" => ("gendst", false),
+        other => (other, true),
+    };
+    let strategy = baselines::by_name(resolved);
+    let automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ 0x33 ^ rep as u64);
+    let sub_cfg = SubStratConfig {
+        dst_size,
+        fine_tune,
+        fine_tune_frac: cfg.ft_frac,
+        seed: cfg.seed ^ 0x44 ^ rep as u64,
+    };
+    let run = run_substrat(
+        &prep.train,
+        &prep.codes,
+        &EntropyMeasure,
+        strategy.as_ref(),
+        &automl,
+        &sub_cfg,
+    );
+    // final refit + holdout accuracy (outside the timed window, applied
+    // identically to Full-AutoML whose refit is also outside its window)
+    let mut rng = Rng::new(cfg.seed ^ 0x55 ^ rep as u64);
+    let pipe = fit_on_frame(&run.final_config, &prep.train, &mut rng);
+    let acc_sub = pipe.accuracy_on(&prep.test);
+
+    RunRecord {
+        dataset: symbol.to_string(),
+        strategy: strategy_name.to_string(),
+        searcher: searcher.name(),
+        rep,
+        time_full_s: full.elapsed_s,
+        time_sub_s: run.total_time_s,
+        acc_full: full.test_acc,
+        acc_sub,
+        final_desc: run.final_config.describe(),
+    }
+}
+
+/// All Table-4 strategy rows including the SubStrat-NF flag variant.
+pub fn table4_strategy_names() -> Vec<&'static str> {
+    let mut v = vec!["gendst", "substrat-nf"];
+    v.extend(baselines::table4_strategies().into_iter().filter(|&s| s != "gendst"));
+    v
+}
+
+/// Pretty strategy label matching the paper's names.
+pub fn paper_label(strategy: &str) -> &'static str {
+    match strategy {
+        "gendst" => "SubStrat",
+        "substrat-nf" => "SubStrat-NF",
+        "ig-km" => "IG-KM",
+        "ig-rand" => "IG-Rand",
+        "mab" => "MAB",
+        "km" => "KM",
+        "mc-100" => "MC-100",
+        "mc-100k" => "MC-100K",
+        "mc-24h" => "MC-24H",
+        "greedy-seq" => "Greedy-Seq",
+        "greedy-mult" => "Greedy-Mult",
+        _ => "?",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            scale: 0.02,
+            reps: 1,
+            full_evals: 3,
+            ft_frac: 0.34,
+            searchers: vec![SearcherKind::Random],
+            datasets: vec!["D2".into()],
+            threads: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn metrics_formulas() {
+        let r = RunRecord {
+            dataset: "D1".into(),
+            strategy: "gendst".into(),
+            searcher: "smbo",
+            rep: 0,
+            time_full_s: 10.0,
+            time_sub_s: 2.0,
+            acc_full: 0.9,
+            acc_sub: 0.88,
+            final_desc: String::new(),
+        };
+        assert!((r.time_reduction() - 0.8).abs() < 1e-12);
+        assert!((r.relative_accuracy() - 0.88 / 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn end_to_end_cell_runs() {
+        let cfg = tiny_cfg();
+        let prep = prepare("D2", &cfg, 0);
+        let full = run_full(&prep, SearcherKind::Random, &cfg, 0);
+        assert!(full.test_acc > 0.0 && full.elapsed_s > 0.0);
+        let rec = run_strategy(
+            &prep,
+            "D2",
+            "gendst",
+            SearcherKind::Random,
+            &full,
+            &cfg,
+            0,
+            None,
+        );
+        assert!(rec.time_sub_s > 0.0);
+        assert!(rec.acc_sub > 0.0);
+        // the subset flow must be faster than full AutoML here
+        assert!(rec.time_reduction() > 0.0, "no speedup: {rec:?}");
+    }
+
+    #[test]
+    fn nf_cell_runs_without_fine_tune() {
+        let cfg = tiny_cfg();
+        let prep = prepare("D2", &cfg, 0);
+        let full = run_full(&prep, SearcherKind::Random, &cfg, 0);
+        let rec = run_strategy(
+            &prep,
+            "D2",
+            "substrat-nf",
+            SearcherKind::Random,
+            &full,
+            &cfg,
+            0,
+            None,
+        );
+        assert_eq!(rec.strategy, "substrat-nf");
+    }
+
+    #[test]
+    fn table4_names_match_paper() {
+        let names = table4_strategy_names();
+        assert_eq!(names.len(), 8, "paper Table 4 has 8 rows: {names:?}");
+        assert!(names.contains(&"gendst") && names.contains(&"substrat-nf"));
+    }
+
+    #[test]
+    fn paper_labels_cover_all() {
+        for n in table4_strategy_names() {
+            assert_ne!(paper_label(n), "?", "{n}");
+        }
+    }
+}

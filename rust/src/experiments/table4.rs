@@ -1,0 +1,212 @@
+//! Table 4 — mean ± std Time-Reduction and Relative-Accuracy per
+//! strategy per AutoML searcher, aggregated over all datasets and
+//! repetitions. Regenerate with `substrat exp table4` or
+//! `cargo bench --bench bench_table4`.
+
+use crate::automl::SearcherKind;
+use crate::experiments::{
+    paper_label, prepare, run_full, run_strategy, table4_strategy_names, ExpConfig, RunRecord,
+};
+use crate::util::pool;
+use crate::util::stats;
+use crate::util::table::{pct, Table};
+
+/// Collect raw records for the given strategies across all experiment
+/// cells (parallel over dataset × rep × searcher; each worker thread owns
+/// its own PJRT runtime).
+pub fn collect_records(cfg: &ExpConfig, strategies: &[&str]) -> Vec<RunRecord> {
+    #[derive(Clone)]
+    struct Cell {
+        symbol: String,
+        rep: usize,
+        searcher: SearcherKind,
+    }
+    let mut cells = Vec::new();
+    for symbol in &cfg.datasets {
+        for rep in 0..cfg.reps {
+            for &searcher in &cfg.searchers {
+                cells.push(Cell {
+                    symbol: symbol.clone(),
+                    rep,
+                    searcher,
+                });
+            }
+        }
+    }
+    let total = cells.len();
+    let nested: Vec<Vec<RunRecord>> = pool::parallel_map(&cells, cfg.threads, |i, cell| {
+        eprintln!(
+            "[table4 {}/{}] {} rep{} {}",
+            i + 1,
+            total,
+            cell.symbol,
+            cell.rep,
+            cell.searcher.name()
+        );
+        let prep = prepare(&cell.symbol, cfg, cell.rep);
+        let full = run_full(&prep, cell.searcher, cfg, cell.rep);
+        strategies
+            .iter()
+            .map(|s| {
+                run_strategy(
+                    &prep,
+                    &cell.symbol,
+                    s,
+                    cell.searcher,
+                    &full,
+                    cfg,
+                    cell.rep,
+                    None,
+                )
+            })
+            .collect()
+    });
+    nested.into_iter().flatten().collect()
+}
+
+/// Aggregate records into the Table-4 layout.
+pub fn aggregate(records: &[RunRecord], cfg: &ExpConfig) -> Table {
+    let mut table = Table::new(vec![
+        "Algorithm",
+        "Searcher",
+        "Time Reduction",
+        "Rel. Acc.",
+        "cells",
+    ]);
+    for strategy in table4_strategy_names() {
+        for searcher in &cfg.searchers {
+            let rows: Vec<&RunRecord> = records
+                .iter()
+                .filter(|r| r.strategy == strategy && r.searcher == searcher.name())
+                .collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let tr: Vec<f64> = rows.iter().map(|r| r.time_reduction()).collect();
+            let ra: Vec<f64> = rows.iter().map(|r| r.relative_accuracy()).collect();
+            table.push(vec![
+                paper_label(strategy).to_string(),
+                searcher.name().to_string(),
+                pct(stats::mean(&tr), stats::std(&tr)),
+                pct(stats::mean(&ra), stats::std(&ra)),
+                rows.len().to_string(),
+            ]);
+        }
+    }
+    table
+}
+
+/// Raw records as CSV (for replotting / fig2 reuse).
+pub fn records_csv(records: &[RunRecord]) -> Table {
+    let mut t = Table::new(vec![
+        "dataset",
+        "strategy",
+        "searcher",
+        "rep",
+        "time_full_s",
+        "time_sub_s",
+        "acc_full",
+        "acc_sub",
+        "time_reduction",
+        "relative_accuracy",
+        "final_config",
+    ]);
+    for r in records {
+        t.push(vec![
+            r.dataset.clone(),
+            r.strategy.clone(),
+            r.searcher.to_string(),
+            r.rep.to_string(),
+            format!("{:.4}", r.time_full_s),
+            format!("{:.4}", r.time_sub_s),
+            format!("{:.4}", r.acc_full),
+            format!("{:.4}", r.acc_sub),
+            format!("{:.4}", r.time_reduction()),
+            format!("{:.4}", r.relative_accuracy()),
+            r.final_desc.clone(),
+        ]);
+    }
+    t
+}
+
+/// Full Table-4 driver: collect, aggregate, print, persist.
+pub fn run(cfg: &ExpConfig) -> (Vec<RunRecord>, Table) {
+    let strategies = table4_strategy_names();
+    let records = collect_records(cfg, &strategies);
+    let table = aggregate(&records, cfg);
+    println!("\n=== Table 4 (scale={}, reps={}, evals={}) ===", cfg.scale, cfg.reps, cfg.full_evals);
+    println!("{}", table.to_aligned());
+    let _ = records_csv(&records).write_csv(&cfg.out_dir.join("table4_records.csv"));
+    let _ = table.write_csv(&cfg.out_dir.join("table4.csv"));
+
+    // Figure 2 falls out of the same records (per-dataset smbo points) —
+    // no second sweep needed
+    let smbo_records: Vec<RunRecord> = records
+        .iter()
+        .filter(|r| r.searcher == "smbo")
+        .cloned()
+        .collect();
+    if !smbo_records.is_empty() {
+        let points = crate::experiments::fig2::per_dataset_points(&smbo_records);
+        let counts = crate::experiments::fig2::above_bar_counts(&points);
+        println!("=== Figure 2 (from the same records) ===");
+        println!("{}", counts.to_aligned());
+        let _ = points.write_csv(&cfg.out_dir.join("fig2_points.csv"));
+        let _ = counts.write_csv(&cfg.out_dir.join("fig2_above_bar.csv"));
+    }
+    (records, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_groups_correctly() {
+        let cfg = ExpConfig {
+            searchers: vec![SearcherKind::Smbo],
+            ..Default::default()
+        };
+        let mk = |strategy: &str, tr_time: f64| RunRecord {
+            dataset: "D1".into(),
+            strategy: strategy.into(),
+            searcher: "smbo",
+            rep: 0,
+            time_full_s: 10.0,
+            time_sub_s: tr_time,
+            acc_full: 1.0,
+            acc_sub: 0.9,
+            final_desc: String::new(),
+        };
+        let records = vec![mk("gendst", 2.0), mk("gendst", 4.0), mk("km", 1.0)];
+        let t = aggregate(&records, &cfg);
+        // gendst row: mean time reduction of 0.8 and 0.6 = 70%
+        let row = t
+            .rows
+            .iter()
+            .find(|r| r[0] == "SubStrat")
+            .expect("SubStrat row");
+        assert!(row[2].starts_with("70.00"), "{row:?}");
+        assert_eq!(row[4], "2");
+    }
+
+    #[test]
+    fn records_csv_layout() {
+        let r = RunRecord {
+            dataset: "D3".into(),
+            strategy: "mab".into(),
+            searcher: "gp",
+            rep: 1,
+            time_full_s: 5.0,
+            time_sub_s: 1.0,
+            acc_full: 0.8,
+            acc_sub: 0.72,
+            final_desc: String::new(),
+        };
+        let t = records_csv(&[r]);
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][0], "D3");
+        assert_eq!(t.rows[0][8], "0.8000");
+        assert_eq!(t.rows[0][9], "0.9000");
+    }
+}

@@ -1,0 +1,154 @@
+//! Fitness evaluation for Gen-DST: `f(G) = -L(r,c) = -|F(D[r,c]) - F(D)|`.
+//!
+//! Two backends:
+//! * `Native` — stack-histogram entropy (or any `DatasetMeasure`) on the
+//!   CPU; the fastest option on this testbed.
+//! * `Xla` — the AOT-compiled L1 Pallas kernel through PJRT, batched
+//!   B_BATCH candidates per call; this is the deployment path on
+//!   accelerator backends and is cross-checked against Native in the
+//!   integration tests (identical numerics within f32 tolerance).
+
+use crate::data::{CodeMatrix, Frame};
+use crate::measures::entropy::{self, EntropyMeasure};
+use crate::measures::DatasetMeasure;
+use crate::runtime::{self, entropy_exec::EntropyExec};
+
+use super::Candidate;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitnessBackend {
+    Native,
+    Xla,
+}
+
+pub struct FitnessEval<'a> {
+    frame: &'a Frame,
+    codes: &'a CodeMatrix,
+    measure: &'a dyn DatasetMeasure,
+    backend: FitnessBackend,
+    /// F(D), computed once
+    pub f_full: f64,
+    /// number of subset-measure evaluations performed
+    pub evals: usize,
+    /// whether the measure is entropy (enables the fast native path and
+    /// the XLA backend; other measures fall back to the generic path)
+    is_entropy: bool,
+}
+
+impl<'a> FitnessEval<'a> {
+    pub fn new(
+        frame: &'a Frame,
+        codes: &'a CodeMatrix,
+        measure: &'a dyn DatasetMeasure,
+        backend: FitnessBackend,
+    ) -> FitnessEval<'a> {
+        let is_entropy = measure.name() == EntropyMeasure.name();
+        let f_full = measure.of_full(frame, codes);
+        FitnessEval {
+            frame,
+            codes,
+            measure,
+            backend,
+            f_full,
+            evals: 0,
+            is_entropy,
+        }
+    }
+
+    /// L(r, c) for one subset.
+    pub fn loss(&mut self, rows: &[u32], cols: &[u32]) -> f64 {
+        self.evals += 1;
+        let f = match (self.backend, self.is_entropy) {
+            (FitnessBackend::Native, true) => entropy::subset_entropy(self.codes, rows, cols),
+            (FitnessBackend::Xla, true) => {
+                let rt = runtime::thread_current().expect("XLA runtime unavailable");
+                let mut exec = EntropyExec::new(&rt);
+                exec.subset_entropy(self.codes, rows, cols)
+                    .expect("entropy_subset artifact failed")
+            }
+            _ => self.measure.of_subset(self.frame, self.codes, rows, cols),
+        };
+        (f - self.f_full).abs()
+    }
+
+    /// Fill the cached loss of every candidate that lacks one. The XLA
+    /// backend batches candidates through the `entropy_batch` artifact.
+    pub fn fill_losses(&mut self, pop: &mut [Candidate]) {
+        match (self.backend, self.is_entropy) {
+            (FitnessBackend::Xla, true) => {
+                let pending: Vec<usize> = (0..pop.len())
+                    .filter(|&i| pop[i].loss.is_none())
+                    .collect();
+                if pending.is_empty() {
+                    return;
+                }
+                let rt = runtime::thread_current().expect("XLA runtime unavailable");
+                let mut exec = EntropyExec::new(&rt);
+                let subsets: Vec<(&[u32], &[u32])> = pending
+                    .iter()
+                    .map(|&i| (pop[i].rows.as_slice(), pop[i].cols.as_slice()))
+                    .collect();
+                let hs = exec
+                    .batch_entropy(self.codes, &subsets)
+                    .expect("entropy_batch artifact failed");
+                self.evals += pending.len();
+                for (&i, h) in pending.iter().zip(hs) {
+                    pop[i].loss = Some((h - self.f_full).abs());
+                }
+            }
+            _ => {
+                for cand in pop.iter_mut() {
+                    if cand.loss.is_none() {
+                        let l = self.loss(&cand.rows, &cand.cols);
+                        cand.loss = Some(l);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+
+    #[test]
+    fn loss_zero_for_full_dataset() {
+        let f = registry::load("D2", 0.05, 1);
+        let codes = CodeMatrix::from_frame(&f);
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Native);
+        let rows: Vec<u32> = (0..f.n_rows as u32).collect();
+        let cols: Vec<u32> = (0..f.n_cols() as u32).collect();
+        assert!(eval.loss(&rows, &cols) < 1e-12);
+        assert_eq!(eval.evals, 1);
+    }
+
+    #[test]
+    fn fill_losses_only_computes_missing() {
+        let f = registry::load("D2", 0.05, 1);
+        let codes = CodeMatrix::from_frame(&f);
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Native);
+        let mut rng = crate::util::rng::Rng::new(2);
+        let mut pop: Vec<Candidate> = (0..6)
+            .map(|_| crate::gendst::ops::random_candidate(&f, 10, 3, &mut rng))
+            .collect();
+        pop[0].loss = Some(0.5);
+        eval.fill_losses(&mut pop);
+        assert_eq!(eval.evals, 5, "cached loss recomputed");
+        assert!(pop.iter().all(|c| c.loss.is_some()));
+        assert_eq!(pop[0].loss, Some(0.5));
+    }
+
+    #[test]
+    fn generic_measure_path_works() {
+        let f = registry::load("D2", 0.05, 1);
+        let codes = CodeMatrix::from_frame(&f);
+        let m = crate::measures::other::PNormMeasure { p: 2.0 };
+        let mut eval = FitnessEval::new(&f, &codes, &m, FitnessBackend::Native);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let c = crate::gendst::ops::random_candidate(&f, 10, 3, &mut rng);
+        let l = eval.loss(&c.rows, &c.cols);
+        assert!(l.is_finite() && l >= 0.0);
+    }
+}

@@ -1,0 +1,329 @@
+//! Gen-DST (paper §3.3, Algorithm 1): a genetic algorithm that finds a
+//! measure-preserving data subset `d = D[r, c]` minimizing
+//! `L(r, c) = |F(D[r,c]) - F(D)|`.
+//!
+//! Candidate representation: `n` row-chromosomes + `m` column-chromosomes
+//! (index sets); the target column is pinned into every candidate and can
+//! never be mutated or crossed out (paper §3.1/§3.3).
+//!
+//! Deviation from the paper, documented: the paper's selection weight
+//! `p(G) = f(G) / Σ f(G')` is ill-defined for its own fitness
+//! `f(G) = -L(G) <= 0`; we use the standard shifted weight
+//! `w(G) = (max_pop_loss - loss(G)) + ε`, which preserves the intended
+//! ordering (fitter candidates sampled more often).
+
+pub mod fitness;
+pub mod ops;
+
+use crate::data::{CodeMatrix, Frame};
+use crate::measures::DatasetMeasure;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+use fitness::{FitnessBackend, FitnessEval};
+
+/// A data subset (paper Def. 3.1): row indices + column indices into the
+/// parent frame. `cols` always contains the parent's target column.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dst {
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+}
+
+impl Dst {
+    /// Validate invariants against a parent frame shape.
+    pub fn validate(&self, n_rows: usize, n_cols: usize, target: usize) -> Result<(), String> {
+        let mut r = self.rows.clone();
+        r.sort_unstable();
+        r.dedup();
+        if r.len() != self.rows.len() {
+            return Err("duplicate row indices".into());
+        }
+        if self.rows.iter().any(|&x| x as usize >= n_rows) {
+            return Err("row index out of range".into());
+        }
+        let mut c = self.cols.clone();
+        c.sort_unstable();
+        c.dedup();
+        if c.len() != self.cols.len() {
+            return Err("duplicate column indices".into());
+        }
+        if self.cols.iter().any(|&x| x as usize >= n_cols) {
+            return Err("column index out of range".into());
+        }
+        if !self.cols.contains(&(target as u32)) {
+            return Err("target column missing".into());
+        }
+        Ok(())
+    }
+}
+
+/// The paper's default DST size: `(sqrt(N), 0.25 * M)` (§3.2), clamped to
+/// valid ranges. `m` counts all subset columns including the target.
+pub fn default_dst_size(n_rows: usize, n_cols: usize) -> (usize, usize) {
+    let n = ((n_rows as f64).sqrt().ceil() as usize).clamp(2, n_rows);
+    let m = ((0.25 * n_cols as f64).ceil() as usize).clamp(2, n_cols);
+    (n, m)
+}
+
+/// Hyper-parameters (paper §4.2 defaults: ψ=30, φ=100, ξ=0.025, α=0.05,
+/// p_rc=0.9).
+#[derive(Debug, Clone)]
+pub struct GenDstConfig {
+    /// ψ — number of generations
+    pub generations: usize,
+    /// φ — population size
+    pub population: usize,
+    /// ξ — per-candidate mutation probability
+    pub mutation_prob: f64,
+    /// α — royalty fraction kept deterministically at selection
+    pub royalty_frac: f64,
+    /// p_rc — probability a mutation/cross-over acts on rows (vs columns)
+    pub p_rc: f64,
+    /// early-stop: minimum best-loss improvement per generation
+    pub convergence_eps: f64,
+    /// early-stop: generations without improvement tolerated
+    pub convergence_patience: usize,
+    pub backend: FitnessBackend,
+    pub seed: u64,
+}
+
+impl Default for GenDstConfig {
+    fn default() -> Self {
+        GenDstConfig {
+            generations: 30,
+            population: 100,
+            mutation_prob: 0.025,
+            royalty_frac: 0.05,
+            p_rc: 0.9,
+            convergence_eps: 1e-6,
+            convergence_patience: 5,
+            backend: FitnessBackend::Native,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a Gen-DST run.
+#[derive(Debug, Clone)]
+pub struct GenDstResult {
+    pub dst: Dst,
+    /// L(r, c) of the returned subset
+    pub loss: f64,
+    /// F(D) the search preserved
+    pub f_full: f64,
+    pub fitness_evals: usize,
+    pub generations_run: usize,
+    pub elapsed_s: f64,
+}
+
+/// One GA candidate with cached loss.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub loss: Option<f64>,
+}
+
+/// Run Gen-DST on `frame` for a subset of size (n, m).
+pub fn gen_dst(
+    frame: &Frame,
+    codes: &CodeMatrix,
+    measure: &dyn DatasetMeasure,
+    n: usize,
+    m: usize,
+    cfg: &GenDstConfig,
+) -> GenDstResult {
+    let sw = Stopwatch::start();
+    let n = n.clamp(1, frame.n_rows);
+    let m = m.clamp(2, frame.n_cols());
+    let target = frame.target as u32;
+    let mut rng = Rng::new(cfg.seed);
+    let mut eval = FitnessEval::new(frame, codes, measure, cfg.backend);
+
+    // P_0: φ random candidates, target pinned (Algorithm 1 line 4)
+    let mut pop: Vec<Candidate> = (0..cfg.population)
+        .map(|_| ops::random_candidate(frame, n, m, &mut rng))
+        .collect();
+    eval.fill_losses(&mut pop);
+
+    let mut best = pop
+        .iter()
+        .min_by(|a, b| a.loss.unwrap().partial_cmp(&b.loss.unwrap()).unwrap())
+        .unwrap()
+        .clone();
+    let mut stale = 0usize;
+    let mut generations_run = 0usize;
+
+    for _gen in 0..cfg.generations {
+        generations_run += 1;
+        // (1) mutation
+        for cand in pop.iter_mut() {
+            if rng.bool_with(cfg.mutation_prob) {
+                ops::mutate(cand, frame, target, cfg.p_rc, &mut rng);
+            }
+        }
+        // (2) cross-over over disjoint pairs
+        ops::crossover_population(&mut pop, frame, target, cfg.p_rc, &mut rng);
+        // (3) selection (royalty tournament)
+        eval.fill_losses(&mut pop);
+        pop = ops::select(&pop, cfg.royalty_frac, &mut rng);
+
+        // track global best (Algorithm 1 lines 10-12)
+        let gen_best = pop
+            .iter()
+            .min_by(|a, b| a.loss.unwrap().partial_cmp(&b.loss.unwrap()).unwrap())
+            .unwrap();
+        if gen_best.loss.unwrap() < best.loss.unwrap() - cfg.convergence_eps {
+            best = gen_best.clone();
+            stale = 0;
+        } else {
+            stale += 1;
+            if stale >= cfg.convergence_patience {
+                break; // converged (paper's stopping criterion)
+            }
+        }
+    }
+
+    let mut rows = best.rows.clone();
+    let mut cols = best.cols.clone();
+    rows.sort_unstable();
+    cols.sort_unstable();
+    GenDstResult {
+        dst: Dst { rows, cols },
+        loss: best.loss.unwrap(),
+        f_full: eval.f_full,
+        fitness_evals: eval.evals,
+        generations_run,
+        elapsed_s: sw.elapsed_s(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+    use crate::measures::entropy::EntropyMeasure;
+    use crate::util::prop::check_prop;
+
+    fn small_frame() -> (Frame, CodeMatrix) {
+        let f = registry::load("D2", 0.05, 11); // 765 x 5
+        let codes = CodeMatrix::from_frame(&f);
+        (f, codes)
+    }
+
+    #[test]
+    fn default_size_matches_paper_rule() {
+        assert_eq!(default_dst_size(10_000, 18), (100, 5));
+        assert_eq!(default_dst_size(1_000_000, 15), (1000, 4));
+        assert_eq!(default_dst_size(4, 3), (2, 2));
+    }
+
+    #[test]
+    fn result_dst_is_valid_and_better_than_random_mean() {
+        let (f, codes) = small_frame();
+        let (n, m) = default_dst_size(f.n_rows, f.n_cols());
+        let cfg = GenDstConfig {
+            generations: 10,
+            population: 40,
+            seed: 3,
+            ..Default::default()
+        };
+        let res = gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg);
+        res.dst.validate(f.n_rows, f.n_cols(), f.target).unwrap();
+        assert_eq!(res.dst.rows.len(), n);
+        assert_eq!(res.dst.cols.len(), m);
+
+        // GA must beat the average random candidate by a clear margin
+        let mut rng = Rng::new(99);
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Native);
+        let mut rand_losses = Vec::new();
+        for _ in 0..50 {
+            let c = ops::random_candidate(&f, n, m, &mut rng);
+            rand_losses.push(eval.loss(&c.rows, &c.cols));
+        }
+        let mean_rand = crate::util::stats::mean(&rand_losses);
+        assert!(
+            res.loss < mean_rand,
+            "GA loss {} not better than random mean {mean_rand}",
+            res.loss
+        );
+    }
+
+    #[test]
+    fn convergence_early_stops() {
+        let (f, codes) = small_frame();
+        let cfg = GenDstConfig {
+            generations: 1000,
+            population: 20,
+            convergence_patience: 3,
+            seed: 5,
+            ..Default::default()
+        };
+        let res = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &cfg);
+        assert!(
+            res.generations_run < 1000,
+            "never converged: {}",
+            res.generations_run
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (f, codes) = small_frame();
+        let cfg = GenDstConfig {
+            generations: 5,
+            population: 20,
+            seed: 7,
+            ..Default::default()
+        };
+        let a = gen_dst(&f, &codes, &EntropyMeasure, 20, 3, &cfg);
+        let b = gen_dst(&f, &codes, &EntropyMeasure, 20, 3, &cfg);
+        assert_eq!(a.dst, b.dst);
+        assert_eq!(a.loss, b.loss);
+    }
+
+    #[test]
+    fn prop_gen_dst_output_always_valid() {
+        let (f, codes) = small_frame();
+        check_prop("gen_dst output invariants", 10, |rng| {
+            let n = 2 + rng.usize_below(60);
+            let m = 2 + rng.usize_below(f.n_cols() - 1);
+            let cfg = GenDstConfig {
+                generations: 3,
+                population: 10,
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let res = gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg);
+            res.dst.validate(f.n_rows, f.n_cols(), f.target).unwrap();
+            assert_eq!(res.dst.rows.len(), n.min(f.n_rows));
+            assert_eq!(res.dst.cols.len(), m);
+            assert!(res.loss >= 0.0);
+        });
+    }
+
+    #[test]
+    fn dst_validate_catches_violations() {
+        let bad_dup = Dst {
+            rows: vec![1, 1],
+            cols: vec![0, 4],
+        };
+        assert!(bad_dup.validate(10, 5, 4).is_err());
+        let bad_target = Dst {
+            rows: vec![1, 2],
+            cols: vec![0, 1],
+        };
+        assert!(bad_target.validate(10, 5, 4).is_err());
+        let bad_range = Dst {
+            rows: vec![1, 99],
+            cols: vec![0, 4],
+        };
+        assert!(bad_range.validate(10, 5, 4).is_err());
+        let ok = Dst {
+            rows: vec![1, 2],
+            cols: vec![0, 4],
+        };
+        assert!(ok.validate(10, 5, 4).is_ok());
+    }
+}

@@ -1,0 +1,351 @@
+//! Genetic operators for Gen-DST (paper §3.3): mutation, cross-over and
+//! royalty-tournament selection, all preserving the candidate invariants
+//! (distinct indices, fixed sizes, target column pinned).
+
+use crate::data::Frame;
+use crate::gendst::Candidate;
+use crate::util::rng::Rng;
+
+/// Random candidate of size (n, m) with the target column pinned.
+pub fn random_candidate(frame: &Frame, n: usize, m: usize, rng: &mut Rng) -> Candidate {
+    let n = n.min(frame.n_rows);
+    let m = m.clamp(2, frame.n_cols());
+    let rows = rng.sample_distinct(frame.n_rows, n);
+    // sample m-1 feature columns, then append the target
+    let feats = frame.feature_indices();
+    let mut cols: Vec<u32> = rng
+        .sample_distinct(feats.len(), m - 1)
+        .into_iter()
+        .map(|i| feats[i as usize])
+        .collect();
+    cols.push(frame.target as u32);
+    Candidate {
+        rows,
+        cols,
+        loss: None,
+    }
+}
+
+/// Mutation (paper §3.3 op 1): with probability p_rc mutate a row index,
+/// otherwise a column index; exactly one gene is replaced by a fresh
+/// index not already present. The target column is never replaced.
+pub(crate) fn mutate(cand: &mut Candidate, frame: &Frame, target: u32, p_rc: f64, rng: &mut Rng) {
+    cand.loss = None;
+    if rng.bool_with(p_rc) {
+        // row mutation: |r ∩ r'| = n-1
+        if cand.rows.len() >= frame.n_rows {
+            return; // no fresh row exists
+        }
+        let slot = rng.usize_below(cand.rows.len());
+        loop {
+            let new = rng.u64_below(frame.n_rows as u64) as u32;
+            if !cand.rows.contains(&new) {
+                cand.rows[slot] = new;
+                break;
+            }
+        }
+    } else {
+        // column mutation: target cannot be mutated
+        let non_target: Vec<usize> = (0..cand.cols.len())
+            .filter(|&i| cand.cols[i] != target)
+            .collect();
+        if non_target.is_empty() || cand.cols.len() >= frame.n_cols() {
+            return;
+        }
+        let slot = *rng.choose(&non_target);
+        loop {
+            let new = rng.u64_below(frame.n_cols() as u64) as u32;
+            if !cand.cols.contains(&new) {
+                cand.cols[slot] = new;
+                break;
+            }
+        }
+    }
+}
+
+/// Merge `s` genes sampled from `a` with `len-s` sampled from `b`,
+/// de-duplicating and refilling randomly (paper footnote 3), optionally
+/// forcing `pin` to be present.
+fn cross_sets(
+    a: &[u32],
+    b: &[u32],
+    s: usize,
+    universe: usize,
+    pin: Option<u32>,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let len = a.len();
+    debug_assert_eq!(len, b.len());
+    let mut out: Vec<u32> = Vec::with_capacity(len);
+    let idx_a = rng.sample_distinct(len, s.min(len));
+    for &i in &idx_a {
+        out.push(a[i as usize]);
+    }
+    let idx_b = rng.sample_distinct(len, len - s.min(len));
+    for &i in &idx_b {
+        let v = b[i as usize];
+        if !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    // refill with random fresh indices until the size is restored
+    while out.len() < len {
+        let v = rng.u64_below(universe as u64) as u32;
+        if !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    // pin the target column, replacing a random non-pin gene if absent
+    if let Some(t) = pin {
+        if !out.contains(&t) {
+            let slot = rng.usize_below(out.len());
+            out[slot] = t;
+        }
+    }
+    out
+}
+
+/// Cross-over (paper §3.3 op 2) of a pair, producing two children: with
+/// probability p_rc cross the row sets, otherwise the column sets; the
+/// untouched chromosome is inherited from each parent respectively.
+pub(crate) fn crossover_pair(
+    a: &Candidate,
+    b: &Candidate,
+    frame: &Frame,
+    target: u32,
+    p_rc: f64,
+    rng: &mut Rng,
+) -> (Candidate, Candidate) {
+    if rng.bool_with(p_rc) {
+        // rows cross; columns inherited
+        let n = a.rows.len();
+        let s = if n <= 2 { 1 } else { 1 + rng.usize_below(n - 1) };
+        let r_ab = cross_sets(&a.rows, &b.rows, s, frame.n_rows, None, rng);
+        let r_ba = cross_sets(&b.rows, &a.rows, s, frame.n_rows, None, rng);
+        (
+            Candidate { rows: r_ab, cols: a.cols.clone(), loss: None },
+            Candidate { rows: r_ba, cols: b.cols.clone(), loss: None },
+        )
+    } else {
+        let m = a.cols.len();
+        let s = if m <= 2 { 1 } else { 1 + rng.usize_below(m - 1) };
+        let c_ab = cross_sets(&a.cols, &b.cols, s, frame.n_cols(), Some(target), rng);
+        let c_ba = cross_sets(&b.cols, &a.cols, s, frame.n_cols(), Some(target), rng);
+        (
+            Candidate { rows: a.rows.clone(), cols: c_ab, loss: None },
+            Candidate { rows: b.rows.clone(), cols: c_ba, loss: None },
+        )
+    }
+}
+
+/// Cross-over over the whole population: split into disjoint random
+/// pairs, replace each pair with its two children (paper §3.3).
+pub(crate) fn crossover_population(
+    pop: &mut Vec<Candidate>,
+    frame: &Frame,
+    target: u32,
+    p_rc: f64,
+    rng: &mut Rng,
+) {
+    let mut order: Vec<usize> = (0..pop.len()).collect();
+    rng.shuffle(&mut order);
+    let mut next: Vec<Candidate> = Vec::with_capacity(pop.len());
+    let mut i = 0;
+    while i + 1 < order.len() {
+        let (a, b) = (&pop[order[i]], &pop[order[i + 1]]);
+        let (ca, cb) = crossover_pair(a, b, frame, target, p_rc, rng);
+        next.push(ca);
+        next.push(cb);
+        i += 2;
+    }
+    if i < order.len() {
+        next.push(pop[order[i]].clone()); // odd one out survives unchanged
+    }
+    *pop = next;
+}
+
+/// Royalty-tournament selection (paper §3.3 op 3): keep the best
+/// `ceil(α·φ)` candidates deterministically; fill the remainder by
+/// fitness-weighted sampling with repetition. Losses must be filled.
+pub(crate) fn select(pop: &[Candidate], royalty_frac: f64, rng: &mut Rng) -> Vec<Candidate> {
+    let phi = pop.len();
+    let mut order: Vec<usize> = (0..phi).collect();
+    order.sort_by(|&a, &b| {
+        pop[a]
+            .loss
+            .unwrap()
+            .partial_cmp(&pop[b].loss.unwrap())
+            .unwrap()
+    });
+    let n_royal = ((royalty_frac * phi as f64).ceil() as usize).clamp(1, phi);
+    let mut next: Vec<Candidate> = order[..n_royal]
+        .iter()
+        .map(|&i| pop[i].clone())
+        .collect();
+
+    // shifted fitness weights (see mod.rs header for the deviation note)
+    let max_loss = pop
+        .iter()
+        .map(|c| c.loss.unwrap())
+        .fold(f64::MIN, f64::max);
+    let weights: Vec<f64> = pop
+        .iter()
+        .map(|c| (max_loss - c.loss.unwrap()) + 1e-9)
+        .collect();
+    while next.len() < phi {
+        let i = rng.weighted_index(&weights);
+        next.push(pop[i].clone());
+    }
+    next
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+    use crate::util::prop::check_prop;
+
+    fn frame() -> Frame {
+        registry::load("D3", 0.1, 13) // 1000 x 18
+    }
+
+    fn assert_valid(c: &Candidate, f: &Frame, n: usize, m: usize) {
+        let dst = crate::gendst::Dst {
+            rows: c.rows.clone(),
+            cols: c.cols.clone(),
+        };
+        dst.validate(f.n_rows, f.n_cols(), f.target)
+            .unwrap_or_else(|e| panic!("{e}: {dst:?}"));
+        assert_eq!(c.rows.len(), n);
+        assert_eq!(c.cols.len(), m);
+    }
+
+    #[test]
+    fn prop_random_candidate_valid() {
+        let f = frame();
+        check_prop("random candidate invariants", 100, |rng| {
+            let n = 1 + rng.usize_below(f.n_rows - 1);
+            let m = 2 + rng.usize_below(f.n_cols() - 2);
+            let c = random_candidate(&f, n, m, rng);
+            assert_valid(&c, &f, n, m);
+        });
+    }
+
+    #[test]
+    fn prop_mutation_preserves_invariants_and_changes_one_gene() {
+        let f = frame();
+        let target = f.target as u32;
+        check_prop("mutation invariants", 200, |rng| {
+            let (n, m) = (20, 5);
+            let mut c = random_candidate(&f, n, m, rng);
+            let before = c.clone();
+            mutate(&mut c, &f, target, 0.5, rng);
+            assert_valid(&c, &f, n, m);
+            // exactly one gene changed, in rows xor cols
+            let row_diff = c.rows.iter().filter(|r| !before.rows.contains(r)).count();
+            let col_diff = c.cols.iter().filter(|x| !before.cols.contains(x)).count();
+            assert_eq!(row_diff + col_diff, 1, "{row_diff}+{col_diff}");
+            assert!(c.loss.is_none(), "cache must be invalidated");
+        });
+    }
+
+    #[test]
+    fn mutation_never_touches_target() {
+        let f = frame();
+        let target = f.target as u32;
+        check_prop("target pinned under mutation", 200, |rng| {
+            let mut c = random_candidate(&f, 10, 4, rng);
+            for _ in 0..20 {
+                mutate(&mut c, &f, target, 0.0, rng); // always column mutation
+                assert!(c.cols.contains(&target));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_crossover_children_valid() {
+        let f = frame();
+        let target = f.target as u32;
+        check_prop("crossover invariants", 200, |rng| {
+            let (n, m) = (15, 6);
+            let a = random_candidate(&f, n, m, rng);
+            let b = random_candidate(&f, n, m, rng);
+            let (ca, cb) = crossover_pair(&a, &b, &f, target, 0.5, rng);
+            assert_valid(&ca, &f, n, m);
+            assert_valid(&cb, &f, n, m);
+        });
+    }
+
+    #[test]
+    fn crossover_children_inherit_parent_genes() {
+        let f = frame();
+        let target = f.target as u32;
+        let mut rng = Rng::new(31);
+        let a = random_candidate(&f, 50, 6, &mut rng);
+        let b = random_candidate(&f, 50, 6, &mut rng);
+        // force row crossover (p_rc = 1)
+        let (ca, _) = crossover_pair(&a, &b, &f, target, 1.0, &mut rng);
+        let parent_pool: Vec<u32> = a.rows.iter().chain(b.rows.iter()).copied().collect();
+        let inherited = ca.rows.iter().filter(|r| parent_pool.contains(r)).count();
+        assert!(
+            inherited >= ca.rows.len() - 2,
+            "children should mostly inherit: {inherited}/{}",
+            ca.rows.len()
+        );
+    }
+
+    #[test]
+    fn crossover_population_preserves_size() {
+        let f = frame();
+        let target = f.target as u32;
+        let mut rng = Rng::new(37);
+        for size in [2usize, 7, 20] {
+            let mut pop: Vec<Candidate> = (0..size)
+                .map(|_| random_candidate(&f, 10, 4, &mut rng))
+                .collect();
+            crossover_population(&mut pop, &f, target, 0.9, &mut rng);
+            assert_eq!(pop.len(), size);
+        }
+    }
+
+    #[test]
+    fn prop_selection_keeps_size_and_best() {
+        let f = frame();
+        check_prop("selection invariants", 100, |rng| {
+            let size = 5 + rng.usize_below(30);
+            let mut pop: Vec<Candidate> = (0..size)
+                .map(|_| random_candidate(&f, 10, 4, rng))
+                .collect();
+            for (i, c) in pop.iter_mut().enumerate() {
+                c.loss = Some(i as f64 * 0.1 + rng.f64() * 0.01);
+            }
+            let best_loss = pop
+                .iter()
+                .map(|c| c.loss.unwrap())
+                .fold(f64::MAX, f64::min);
+            let next = select(&pop, 0.1, rng);
+            assert_eq!(next.len(), size);
+            // the best candidate always survives (royalty >= 1)
+            assert!(next.iter().any(|c| c.loss.unwrap() == best_loss));
+        });
+    }
+
+    #[test]
+    fn selection_prefers_fit_candidates() {
+        let f = frame();
+        let mut rng = Rng::new(41);
+        let mut pop: Vec<Candidate> = (0..20)
+            .map(|_| random_candidate(&f, 10, 4, &mut rng))
+            .collect();
+        // candidate 0 has tiny loss, the rest huge
+        for (i, c) in pop.iter_mut().enumerate() {
+            c.loss = Some(if i == 0 { 0.001 } else { 10.0 });
+        }
+        let next = select(&pop, 0.05, &mut rng);
+        let n_best = next
+            .iter()
+            .filter(|c| c.loss.unwrap() == 0.001)
+            .count();
+        assert!(n_best > 10, "fit candidate under-sampled: {n_best}/20");
+    }
+}

@@ -1,0 +1,21 @@
+//! SubStrat: a subset-based strategy for faster AutoML (VLDB 2022) —
+//! full-system reproduction on a Rust + JAX + Pallas three-layer stack.
+//!
+//! Layer map (DESIGN.md):
+//! * L3 (this crate): Gen-DST genetic search, the AutoML substrate, the
+//!   10 baseline subset strategies, the SubStrat orchestrator, and the
+//!   experiment harness reproducing every table/figure in the paper.
+//! * L2/L1 (python/, build-time only): JAX graphs + the Pallas entropy
+//!   kernel, AOT-lowered to `artifacts/*.hlo.txt` and executed here via
+//!   PJRT (`runtime`).
+
+pub mod automl;
+pub mod baselines;
+pub mod data;
+pub mod experiments;
+pub mod gendst;
+pub mod measures;
+pub mod models;
+pub mod runtime;
+pub mod substrat;
+pub mod util;

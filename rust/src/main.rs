@@ -1,0 +1,231 @@
+//! `substrat` — CLI for the SubStrat reproduction.
+//!
+//! Subcommands:
+//!   datasets                      list the Table-2 registry
+//!   check                        load artifacts, cross-check XLA vs native
+//!   gendst   --dataset D1 [...]   run Gen-DST, print the subset + loss
+//!   automl   --dataset D1 [...]   run Full-AutoML
+//!   run      --dataset D1 --strategy gendst [...]   one SubStrat flow
+//!   exp      table4|fig2|fig3|fig4|fig5|all [...]   reproduce paper artifacts
+//!
+//! Common flags: --scale 0.05 --reps 3 --evals 16 --searchers smbo,gp
+//!               --datasets D1,D2 --out results --threads N --seed S
+
+use std::path::PathBuf;
+
+use substrat::automl::{run_automl, AutoMlConfig, SearcherKind};
+use substrat::baselines;
+use substrat::data::{registry, CodeMatrix};
+use substrat::experiments::{fig2, fig3, fig4, fig5, table4, ExpConfig};
+use substrat::gendst::{self, GenDstConfig};
+use substrat::measures::{self, entropy::EntropyMeasure};
+use substrat::runtime::{self, entropy_exec::EntropyExec};
+use substrat::substrat::{run_substrat, SubStratConfig};
+use substrat::util::cli::Args;
+use substrat::util::rng::Rng;
+
+fn exp_config(args: &Args) -> ExpConfig {
+    let defaults = ExpConfig::default();
+    ExpConfig {
+        scale: args.f64_or("scale", defaults.scale),
+        min_rows: args.usize_or("min-rows", defaults.min_rows),
+        max_rows: args.usize_or("max-rows", defaults.max_rows),
+        reps: args.usize_or("reps", defaults.reps),
+        full_evals: args.usize_or("evals", defaults.full_evals),
+        ft_frac: args.f64_or("ft-frac", defaults.ft_frac),
+        searchers: args
+            .list_or("searchers", &["smbo", "gp"])
+            .iter()
+            .map(|s| SearcherKind::by_name(s))
+            .collect(),
+        datasets: args.list_or("datasets", &registry::all_symbols()),
+        out_dir: PathBuf::from(args.str_or("out", "results")),
+        threads: args.usize_or("threads", defaults.threads),
+        seed: args.u64_or("seed", defaults.seed),
+    }
+}
+
+fn cmd_datasets() {
+    println!("Table 2 registry (synthetic equivalents, DESIGN.md §5):");
+    println!(
+        "{:<5} {:<26} {:>9} {:>9} {:>8}",
+        "sym", "domain", "rows", "cols", "classes"
+    );
+    for d in registry::table2() {
+        println!(
+            "{:<5} {:<26} {:>9} {:>9} {:>8}",
+            d.symbol, d.domain, d.n_rows, d.n_cols, d.n_classes
+        );
+    }
+}
+
+fn cmd_check() {
+    let rt = runtime::thread_current().expect("runtime");
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {:?}", rt.available());
+    // numeric cross-check: XLA entropy vs native on a registry dataset
+    let f = registry::load("D2", 0.02, 1);
+    let codes = CodeMatrix::from_frame(&f);
+    let mut rng = Rng::new(7);
+    let rows = rng.sample_distinct(f.n_rows, 64);
+    let cols: Vec<u32> = (0..f.n_cols() as u32).collect();
+    let native = substrat::measures::entropy::subset_entropy(&codes, &rows, &cols);
+    let mut exec = EntropyExec::new(&rt);
+    let xla = exec
+        .subset_entropy(&codes, &rows, &cols)
+        .expect("entropy_subset artifact");
+    println!(
+        "entropy native={native:.6} xla={xla:.6} |diff|={:.2e}",
+        (native - xla).abs()
+    );
+    assert!((native - xla).abs() < 1e-4, "XLA/native entropy mismatch");
+    println!("check OK");
+}
+
+fn cmd_gendst(args: &Args) {
+    let symbol = args.str_or("dataset", "D2");
+    let scale = args.f64_or("scale", 0.05);
+    let measure = measures::by_name(&args.str_or("measure", "entropy"));
+    let f = registry::load(&symbol, scale, args.u64_or("seed", 0));
+    let codes = CodeMatrix::from_frame(&f);
+    let (n, m) = gendst::default_dst_size(f.n_rows, f.n_cols());
+    let n = args.usize_or("n", n);
+    let m = args.usize_or("m", m);
+    let cfg = GenDstConfig {
+        generations: args.usize_or("generations", 30),
+        population: args.usize_or("population", 100),
+        seed: args.u64_or("seed", 0),
+        ..Default::default()
+    };
+    println!(
+        "{symbol} ({}x{}) -> DST ({n}x{m}), measure={}",
+        f.n_rows,
+        f.n_cols(),
+        measure.name()
+    );
+    let res = gendst::gen_dst(&f, &codes, measure.as_ref(), n, m, &cfg);
+    println!(
+        "loss={:.6} F(D)={:.4} evals={} generations={} time={:.2}s",
+        res.loss, res.f_full, res.fitness_evals, res.generations_run, res.elapsed_s
+    );
+    println!("cols: {:?}", res.dst.cols);
+}
+
+fn cmd_automl(args: &Args) {
+    let symbol = args.str_or("dataset", "D2");
+    let scale = args.f64_or("scale", 0.05);
+    let f = registry::load(&symbol, scale, args.u64_or("seed", 0));
+    let searcher = SearcherKind::by_name(&args.str_or("searcher", "smbo"));
+    let cfg = AutoMlConfig::new(searcher, args.usize_or("evals", 16), args.u64_or("seed", 0));
+    println!(
+        "AutoML({}) on {symbol} ({}x{})",
+        searcher.name(),
+        f.n_rows,
+        f.n_cols()
+    );
+    let res = run_automl(&f, &cfg);
+    println!(
+        "best={} cv={:.4} evals={} time={:.2}s",
+        res.best.describe(),
+        res.best_cv,
+        res.evals,
+        res.elapsed_s
+    );
+}
+
+fn cmd_run(args: &Args) {
+    let symbol = args.str_or("dataset", "D2");
+    let scale = args.f64_or("scale", 0.05);
+    let strategy_name = args.str_or("strategy", "gendst");
+    let f = registry::load(&symbol, scale, args.u64_or("seed", 0));
+    let codes = CodeMatrix::from_frame(&f);
+    let strategy = baselines::by_name(&strategy_name);
+    let searcher = SearcherKind::by_name(&args.str_or("searcher", "smbo"));
+    let automl = AutoMlConfig::new(searcher, args.usize_or("evals", 16), args.u64_or("seed", 0));
+    let cfg = SubStratConfig {
+        fine_tune: !args.flag("no-fine-tune"),
+        fine_tune_frac: args.f64_or("ft-frac", 0.15),
+        seed: args.u64_or("seed", 0),
+        ..Default::default()
+    };
+    let run = run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &cfg);
+    println!(
+        "strategy={strategy_name} subset=({}, {}) search={:.2}s",
+        run.outcome.dst.rows.len(),
+        run.outcome.dst.cols.len(),
+        run.outcome.elapsed_s
+    );
+    println!(
+        "M' = {} (cv {:.4}, {:.2}s)",
+        run.automl_sub.best.describe(),
+        run.automl_sub.best_cv,
+        run.automl_sub.elapsed_s
+    );
+    if let Some(ft) = &run.fine_tune {
+        println!(
+            "M_sub = {} (cv {:.4}, {:.2}s)",
+            ft.best.describe(),
+            ft.best_cv,
+            ft.elapsed_s
+        );
+    }
+    println!("total {:.2}s", run.total_time_s);
+}
+
+fn cmd_exp(args: &Args) {
+    let which = args
+        .positionals
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("table4");
+    let cfg = exp_config(args);
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    match which {
+        "table4" => {
+            table4::run(&cfg);
+        }
+        "fig2" => {
+            fig2::run(&cfg);
+        }
+        "fig3" => {
+            fig3::run(&cfg);
+        }
+        "fig4" => {
+            fig4::run(&cfg);
+        }
+        "fig5" => {
+            fig5::run(&cfg);
+        }
+        "all" => {
+            table4::run(&cfg);
+            fig2::run(&cfg);
+            fig3::run(&cfg);
+            fig4::run(&cfg);
+            fig5::run(&cfg);
+        }
+        other => {
+            eprintln!("unknown experiment {other:?} (table4|fig2|fig3|fig4|fig5|all)");
+            std::process::exit(2);
+        }
+    }
+    println!("CSV written under {:?}", cfg.out_dir);
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("datasets") => cmd_datasets(),
+        Some("check") => cmd_check(),
+        Some("gendst") => cmd_gendst(&args),
+        Some("automl") => cmd_automl(&args),
+        Some("run") => cmd_run(&args),
+        Some("exp") => cmd_exp(&args),
+        _ => {
+            eprintln!(
+                "usage: substrat <datasets|check|gendst|automl|run|exp> [flags]\n\
+                 see rust/src/main.rs header for flags"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Dataset entropy (paper Def. 3.4, sign-corrected per Example 3.5):
+//! the mean over columns of the Shannon entropy of each column's value
+//! frequency distribution. This is the native (CPU) twin of the L1
+//! Pallas kernel; `python/tests/test_kernel.py` pins both to the paper's
+//! worked example.
+
+use crate::data::binning::K_BINS;
+use crate::data::{CodeMatrix, Frame};
+use crate::measures::DatasetMeasure;
+
+/// Shannon entropy (bits) of a histogram with total count `n`.
+#[inline]
+pub fn entropy_of_counts(counts: &[u32], n: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let n = n as f64;
+    let mut h = 0.0;
+    for &c in counts {
+        if c > 0 {
+            let p = c as f64 / n;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// Entropy of one column over the given rows (stack histogram).
+#[inline]
+pub fn column_entropy(codes: &CodeMatrix, col: usize, rows: &[u32]) -> f64 {
+    let mut counts = [0u32; K_BINS];
+    let column = codes.column(col);
+    for &r in rows {
+        counts[column[r as usize] as usize] += 1;
+    }
+    entropy_of_counts(&counts, rows.len())
+}
+
+/// Entropy of one column over ALL rows (no index indirection — used for
+/// the one-time H(D) computation on large datasets).
+#[inline]
+pub fn column_entropy_full(codes: &CodeMatrix, col: usize) -> f64 {
+    let mut counts = [0u32; K_BINS];
+    for &c in codes.column(col) {
+        counts[c as usize] += 1;
+    }
+    entropy_of_counts(&counts, codes.n_rows)
+}
+
+/// Mean column entropy of the subset D[rows, cols].
+pub fn subset_entropy(codes: &CodeMatrix, rows: &[u32], cols: &[u32]) -> f64 {
+    if cols.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = cols
+        .iter()
+        .map(|&c| column_entropy(codes, c as usize, rows))
+        .sum();
+    sum / cols.len() as f64
+}
+
+/// Mean column entropy of the full dataset (one pass, no row indices).
+pub fn full_entropy(codes: &CodeMatrix) -> f64 {
+    if codes.n_cols == 0 {
+        return 0.0;
+    }
+    let sum: f64 = (0..codes.n_cols)
+        .map(|c| column_entropy_full(codes, c))
+        .sum();
+    sum / codes.n_cols as f64
+}
+
+/// Per-column entropies over all rows (column profile of D).
+pub fn column_profile(codes: &CodeMatrix) -> Vec<f64> {
+    (0..codes.n_cols)
+        .map(|c| column_entropy_full(codes, c))
+        .collect()
+}
+
+/// The paper's default measure.
+pub struct EntropyMeasure;
+
+impl DatasetMeasure for EntropyMeasure {
+    fn name(&self) -> &'static str {
+        "entropy"
+    }
+
+    fn of_subset(&self, _frame: &Frame, codes: &CodeMatrix, rows: &[u32], cols: &[u32]) -> f64 {
+        subset_entropy(codes, rows, cols)
+    }
+
+    fn of_full(&self, _frame: &Frame, codes: &CodeMatrix) -> f64 {
+        full_entropy(codes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Column, Frame};
+
+    /// The paper's Table 1 flight-review dataset.
+    pub fn paper_table1() -> Frame {
+        Frame::new(
+            "flight",
+            vec![
+                Column::numeric(
+                    "age",
+                    vec![25., 62., 25., 41., 27., 41., 20., 25., 13., 52.],
+                ),
+                Column::categorical("gender", vec![1., 1., 0., 0., 1., 1., 0., 0., 0., 1.]),
+                Column::numeric(
+                    "distance",
+                    vec![460., 460., 460., 460., 460., 1061., 1061., 1061., 1061., 1061.],
+                ),
+                Column::numeric("delay", vec![18., 0., 40., 0., 0., 0., 0., 51., 0., 0.]),
+                Column::categorical("satisfied", vec![1., 0., 1., 1., 1., 0., 0., 0., 1., 1.]),
+            ],
+            4,
+        )
+    }
+
+    #[test]
+    fn paper_example_3_5_full() {
+        // H(D) = (2.65 + 1 + 1 + 1.4 + 0.97) / 5 = 1.395
+        let f = paper_table1();
+        let codes = CodeMatrix::from_frame(&f);
+        let profile = column_profile(&codes);
+        let expect = [2.646, 1.0, 1.0, 1.357, 0.971];
+        for (got, want) in profile.iter().zip(expect) {
+            assert!((got - want).abs() < 5e-3, "{got} vs {want}");
+        }
+        assert!((full_entropy(&codes) - 1.395).abs() < 5e-3);
+    }
+
+    #[test]
+    fn paper_example_3_5_green_and_red_subsets() {
+        let f = paper_table1();
+        let codes = CodeMatrix::from_frame(&f);
+        // green: rows (1,2,3,6,8) 1-indexed, cols (age, delay, satisfied)
+        let green = subset_entropy(&codes, &[0, 1, 2, 5, 7], &[0, 3, 4]);
+        assert!((green - 1.42).abs() < 6e-3, "green={green}");
+        // red: rows (4,5,7,9,10), cols (gender, distance, satisfied)
+        let red = subset_entropy(&codes, &[3, 4, 6, 8, 9], &[1, 2, 4]);
+        assert!((red - 0.89).abs() < 2e-2, "red={red}");
+        // green preserves H(D)=1.395 better than red
+        let hd = full_entropy(&codes);
+        assert!((green - hd).abs() < (red - hd).abs());
+    }
+
+    #[test]
+    fn entropy_of_counts_cases() {
+        assert_eq!(entropy_of_counts(&[0, 0], 0), 0.0);
+        assert!((entropy_of_counts(&[5, 5], 10) - 1.0).abs() < 1e-12);
+        assert!((entropy_of_counts(&[10], 10)).abs() < 1e-12);
+        let h4 = entropy_of_counts(&[2, 2, 2, 2], 8);
+        assert!((h4 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subset_entropy_row_col_order_invariant() {
+        let f = paper_table1();
+        let codes = CodeMatrix::from_frame(&f);
+        let a = subset_entropy(&codes, &[0, 1, 2, 5, 7], &[0, 3, 4]);
+        let b = subset_entropy(&codes, &[7, 0, 5, 2, 1], &[4, 0, 3]);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_matches_subset_with_all_indices() {
+        let f = paper_table1();
+        let codes = CodeMatrix::from_frame(&f);
+        let rows: Vec<u32> = (0..10).collect();
+        let cols: Vec<u32> = (0..5).collect();
+        assert!((full_entropy(&codes) - subset_entropy(&codes, &rows, &cols)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_cols_zero() {
+        let f = paper_table1();
+        let codes = CodeMatrix::from_frame(&f);
+        assert_eq!(subset_entropy(&codes, &[0, 1], &[]), 0.0);
+    }
+}

@@ -1,0 +1,73 @@
+//! Dataset measures `F : D -> R` (paper §3.1). The paper's default is
+//! dataset entropy (Def. 3.4); §3.1 names p-norm, mean-correlation and
+//! coefficient-of-variation as alternatives, all implemented here so the
+//! Gen-DST optimizer stays measure-generic.
+
+pub mod entropy;
+pub mod other;
+
+use crate::data::{CodeMatrix, Frame};
+
+/// A dataset characteristic evaluated on a (rows, cols) subset view.
+/// Implementations must be pure and row/col-order invariant.
+pub trait DatasetMeasure: Sync {
+    fn name(&self) -> &'static str;
+
+    /// F(D[rows, cols]). `codes` is the binned view of `frame`; measures
+    /// choose which representation they need.
+    fn of_subset(&self, frame: &Frame, codes: &CodeMatrix, rows: &[u32], cols: &[u32]) -> f64;
+
+    /// F(D) — default: the full index sets.
+    fn of_full(&self, frame: &Frame, codes: &CodeMatrix) -> f64 {
+        let rows: Vec<u32> = (0..frame.n_rows as u32).collect();
+        let cols: Vec<u32> = (0..frame.n_cols() as u32).collect();
+        self.of_subset(frame, codes, &rows, &cols)
+    }
+}
+
+/// Construct a measure by CLI name.
+pub fn by_name(name: &str) -> Box<dyn DatasetMeasure> {
+    match name {
+        "entropy" => Box::new(entropy::EntropyMeasure),
+        "pnorm" => Box::new(other::PNormMeasure { p: 2.0 }),
+        "mean-correlation" => Box::new(other::MeanCorrelationMeasure),
+        "cv" => Box::new(other::CoefficientOfVariationMeasure),
+        other => panic!("unknown measure {other:?} (entropy|pnorm|mean-correlation|cv)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Column, Frame};
+
+    #[test]
+    fn by_name_resolves_all() {
+        for n in ["entropy", "pnorm", "mean-correlation", "cv"] {
+            assert_eq!(by_name(n).name(), n);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown measure")]
+    fn by_name_rejects_unknown() {
+        let _ = by_name("nope");
+    }
+
+    #[test]
+    fn of_full_equals_subset_with_all_indices() {
+        let f = Frame::new(
+            "t",
+            vec![
+                Column::numeric("a", vec![1.0, 2.0, 3.0, 4.0]),
+                Column::categorical("y", vec![0.0, 1.0, 0.0, 1.0]),
+            ],
+            1,
+        );
+        let codes = CodeMatrix::from_frame(&f);
+        let m = by_name("entropy");
+        let full = m.of_full(&f, &codes);
+        let sub = m.of_subset(&f, &codes, &[0, 1, 2, 3], &[0, 1]);
+        assert!((full - sub).abs() < 1e-12);
+    }
+}

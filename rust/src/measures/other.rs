@@ -1,0 +1,171 @@
+//! Alternative dataset measures named in paper §3.1: p-norm,
+//! mean-correlation, coefficient of variation. They operate on the raw
+//! frame values (not codes) since they are moment/shape statistics.
+
+use crate::data::{CodeMatrix, Frame};
+use crate::measures::DatasetMeasure;
+use crate::util::stats;
+
+fn subset_column(frame: &Frame, col: u32, rows: &[u32]) -> Vec<f64> {
+    let v = &frame.columns[col as usize].values;
+    rows.iter().map(|&r| v[r as usize] as f64).collect()
+}
+
+/// Mean per-column p-norm, normalized by row count so that subsets are
+/// comparable to the full dataset: (Σ|x|^p / n)^(1/p) averaged over cols.
+pub struct PNormMeasure {
+    pub p: f64,
+}
+
+impl DatasetMeasure for PNormMeasure {
+    fn name(&self) -> &'static str {
+        "pnorm"
+    }
+
+    fn of_subset(&self, frame: &Frame, _codes: &CodeMatrix, rows: &[u32], cols: &[u32]) -> f64 {
+        if cols.is_empty() || rows.is_empty() {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for &c in cols {
+            let xs = subset_column(frame, c, rows);
+            let s: f64 = xs.iter().map(|x| x.abs().powf(self.p)).sum();
+            total += (s / rows.len() as f64).powf(1.0 / self.p);
+        }
+        total / cols.len() as f64
+    }
+}
+
+/// Mean absolute pairwise Pearson correlation between the selected
+/// columns — captures the dataset's dependence structure.
+pub struct MeanCorrelationMeasure;
+
+impl DatasetMeasure for MeanCorrelationMeasure {
+    fn name(&self) -> &'static str {
+        "mean-correlation"
+    }
+
+    fn of_subset(&self, frame: &Frame, _codes: &CodeMatrix, rows: &[u32], cols: &[u32]) -> f64 {
+        if cols.len() < 2 || rows.len() < 2 {
+            return 0.0;
+        }
+        let columns: Vec<Vec<f64>> = cols
+            .iter()
+            .map(|&c| subset_column(frame, c, rows))
+            .collect();
+        let mut total = 0.0;
+        let mut pairs = 0usize;
+        for i in 0..columns.len() {
+            for j in (i + 1)..columns.len() {
+                total += stats::pearson(&columns[i], &columns[j]).abs();
+                pairs += 1;
+            }
+        }
+        total / pairs as f64
+    }
+}
+
+/// Mean per-column coefficient of variation (std/|mean|), clamped for
+/// near-zero means.
+pub struct CoefficientOfVariationMeasure;
+
+impl DatasetMeasure for CoefficientOfVariationMeasure {
+    fn name(&self) -> &'static str {
+        "cv"
+    }
+
+    fn of_subset(&self, frame: &Frame, _codes: &CodeMatrix, rows: &[u32], cols: &[u32]) -> f64 {
+        if cols.is_empty() || rows.len() < 2 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for &c in cols {
+            let xs = subset_column(frame, c, rows);
+            let m = stats::mean(&xs);
+            let s = stats::std(&xs);
+            total += s / m.abs().max(1e-9);
+        }
+        (total / cols.len() as f64).min(1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Column, Frame};
+
+    fn frame() -> (Frame, CodeMatrix) {
+        let f = Frame::new(
+            "t",
+            vec![
+                Column::numeric("a", vec![3.0, -4.0, 0.0, 5.0]),
+                Column::numeric("b", vec![1.0, 2.0, 3.0, 4.0]),
+                Column::numeric("c", vec![2.0, 4.0, 6.0, 8.0]), // 2*b
+                Column::categorical("y", vec![0.0, 1.0, 0.0, 1.0]),
+            ],
+            3,
+        );
+        let codes = CodeMatrix::from_frame(&f);
+        (f, codes)
+    }
+
+    #[test]
+    fn pnorm_hand_computed() {
+        let (f, codes) = frame();
+        let m = PNormMeasure { p: 2.0 };
+        // col a rows all: sqrt((9+16+0+25)/4) = sqrt(12.5)
+        let got = m.of_subset(&f, &codes, &[0, 1, 2, 3], &[0]);
+        assert!((got - 12.5f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pnorm_row_subset_differs() {
+        let (f, codes) = frame();
+        let m = PNormMeasure { p: 2.0 };
+        let full = m.of_subset(&f, &codes, &[0, 1, 2, 3], &[0]);
+        let sub = m.of_subset(&f, &codes, &[2], &[0]); // only the zero row
+        assert!(sub < full);
+    }
+
+    #[test]
+    fn correlation_detects_linear_dependence() {
+        let (f, codes) = frame();
+        let m = MeanCorrelationMeasure;
+        // b and c are perfectly correlated
+        let r = m.of_subset(&f, &codes, &[0, 1, 2, 3], &[1, 2]);
+        assert!((r - 1.0).abs() < 1e-9);
+        let degenerate = m.of_subset(&f, &codes, &[0, 1, 2, 3], &[1]);
+        assert_eq!(degenerate, 0.0);
+    }
+
+    #[test]
+    fn cv_zero_for_constant() {
+        let f = Frame::new(
+            "t",
+            vec![
+                Column::numeric("a", vec![5.0; 10]),
+                Column::categorical("y", vec![0.0; 10]),
+            ],
+            1,
+        );
+        let codes = CodeMatrix::from_frame(&f);
+        let m = CoefficientOfVariationMeasure;
+        assert!(m.of_subset(&f, &codes, &(0..10).collect::<Vec<_>>(), &[0]) < 1e-9);
+    }
+
+    #[test]
+    fn measures_are_subset_sensitive() {
+        // each alternative measure must distinguish at least some subsets
+        let (f, codes) = frame();
+        let rows_a: Vec<u32> = vec![0, 1];
+        let rows_b: Vec<u32> = vec![2, 3];
+        for m in [
+            &PNormMeasure { p: 2.0 } as &dyn DatasetMeasure,
+            &CoefficientOfVariationMeasure,
+        ] {
+            let a = m.of_subset(&f, &codes, &rows_a, &[0, 1]);
+            let b = m.of_subset(&f, &codes, &rows_b, &[0, 1]);
+            assert!((a - b).abs() > 1e-9, "{} cannot discriminate", m.name());
+        }
+    }
+}

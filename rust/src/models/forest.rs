@@ -1,0 +1,140 @@
+//! Random forest: bagged CART trees with per-tree feature subsampling,
+//! fitted in parallel over the thread pool.
+
+use crate::data::Matrix;
+use crate::models::tree::DecisionTree;
+use crate::models::Classifier;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    trees: Vec<DecisionTree>,
+    pub n_classes: usize,
+}
+
+impl RandomForest {
+    pub fn fit(
+        x: &Matrix,
+        y: &[u32],
+        n_classes: usize,
+        n_trees: usize,
+        max_depth: usize,
+        feat_frac: f64,
+        rng: &mut Rng,
+    ) -> RandomForest {
+        let n_trees = n_trees.max(1);
+        let n_feats = ((x.cols as f64 * feat_frac).ceil() as usize).clamp(1, x.cols);
+        // pre-derive one RNG per tree so the parallel fit is deterministic
+        let seeds: Vec<u64> = (0..n_trees).map(|_| rng.next_u64()).collect();
+        let trees = pool::parallel_map(&seeds, pool::default_threads(), |_, &seed| {
+            let mut trng = Rng::new(seed);
+            // bootstrap rows
+            let rows: Vec<u32> = (0..x.rows)
+                .map(|_| trng.u64_below(x.rows as u64) as u32)
+                .collect();
+            // feature subsample
+            let feats: Vec<usize> = trng
+                .sample_distinct(x.cols, n_feats)
+                .into_iter()
+                .map(|f| f as usize)
+                .collect();
+            fit_on_rows(x, y, n_classes, &rows, &feats, max_depth, &mut trng)
+        });
+        RandomForest { trees, n_classes }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+/// Fit one tree on a bootstrap sample: materialize the sampled rows so
+/// tree building sees a contiguous matrix (bootstrap indices repeat).
+fn fit_on_rows(
+    x: &Matrix,
+    y: &[u32],
+    n_classes: usize,
+    rows: &[u32],
+    feats: &[usize],
+    max_depth: usize,
+    rng: &mut Rng,
+) -> DecisionTree {
+    let mut xb = Matrix::zeros(rows.len(), x.cols);
+    let mut yb = Vec::with_capacity(rows.len());
+    for (i, &r) in rows.iter().enumerate() {
+        xb.data[i * x.cols..(i + 1) * x.cols].copy_from_slice(x.row(r as usize));
+        yb.push(y[r as usize]);
+    }
+    DecisionTree::fit(&xb, &yb, n_classes, max_depth, 2, Some(feats), rng)
+}
+
+impl Classifier for RandomForest {
+    fn predict(&self, x: &Matrix) -> Vec<u32> {
+        let mut votes = vec![0u32; x.rows * self.n_classes];
+        for t in &self.trees {
+            for r in 0..x.rows {
+                let c = t.predict_row(x.row(r)) as usize;
+                votes[r * self.n_classes + c] += 1;
+            }
+        }
+        (0..x.rows)
+            .map(|r| {
+                let v = &votes[r * self.n_classes..(r + 1) * self.n_classes];
+                let mut best = 0usize;
+                for (i, &cnt) in v.iter().enumerate() {
+                    if cnt > v[best] {
+                        best = i;
+                    }
+                }
+                best as u32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::accuracy;
+    use crate::models::testutil::{blobs, xor};
+
+    #[test]
+    fn learns_xor_better_than_stump() {
+        let (x, y) = xor(600, 21);
+        let mut rng = Rng::new(22);
+        let f = RandomForest::fit(&x, &y, 2, 20, 8, 1.0, &mut rng);
+        assert!(accuracy(&f.predict(&x), &y) > 0.9);
+        assert_eq!(f.n_trees(), 20);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = blobs(200, 3, 23);
+        let f1 = RandomForest::fit(&x, &y, 2, 8, 6, 0.7, &mut Rng::new(5));
+        let f2 = RandomForest::fit(&x, &y, 2, 8, 6, 0.7, &mut Rng::new(5));
+        assert_eq!(f1.predict(&x), f2.predict(&x));
+    }
+
+    #[test]
+    fn feat_frac_clamps() {
+        let (x, y) = blobs(100, 4, 24);
+        let mut rng = Rng::new(6);
+        // 0.0 and 2.0 both must not panic
+        let _ = RandomForest::fit(&x, &y, 2, 3, 4, 0.0, &mut rng);
+        let _ = RandomForest::fit(&x, &y, 2, 3, 4, 2.0, &mut rng);
+    }
+
+    #[test]
+    fn majority_vote_beats_single_tree_on_noise() {
+        let (x, y) = xor(400, 25);
+        let mut rng = Rng::new(7);
+        let single = RandomForest::fit(&x, &y, 2, 1, 4, 0.5, &mut rng);
+        let many = RandomForest::fit(&x, &y, 2, 30, 4, 0.5, &mut rng);
+        let (a1, a30) = (
+            accuracy(&single.predict(&x), &y),
+            accuracy(&many.predict(&x), &y),
+        );
+        assert!(a30 >= a1 - 0.02, "ensemble regressed: {a1} vs {a30}");
+    }
+}

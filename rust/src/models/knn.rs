@@ -1,0 +1,172 @@
+//! k-nearest-neighbours classifier (brute force, z-scored features,
+//! training set capped by reservoir sampling to bound prediction cost).
+
+use crate::data::Matrix;
+use crate::models::Classifier;
+use crate::util::rng::Rng;
+
+/// Cap on stored training rows (standard memory/latency bound; sampling
+/// is uniform so the decision boundary is preserved in distribution).
+const MAX_TRAIN: usize = 4096;
+
+#[derive(Debug, Clone)]
+pub struct KnnModel {
+    x: Matrix,
+    y: Vec<u32>,
+    k: usize,
+    n_classes: usize,
+    mean: Vec<f32>,
+    std: Vec<f32>,
+}
+
+impl KnnModel {
+    pub fn fit(x: &Matrix, y: &[u32], n_classes: usize, k: usize, rng: &mut Rng) -> KnnModel {
+        // column stats for z-scoring (distance comparability across scales)
+        let mut mean = vec![0f32; x.cols];
+        let mut std = vec![0f32; x.cols];
+        for j in 0..x.cols {
+            let mut s = 0f64;
+            for r in 0..x.rows {
+                s += x.get(r, j) as f64;
+            }
+            let m = s / x.rows.max(1) as f64;
+            let mut v = 0f64;
+            for r in 0..x.rows {
+                let d = x.get(r, j) as f64 - m;
+                v += d * d;
+            }
+            mean[j] = m as f32;
+            std[j] = ((v / x.rows.max(1) as f64).sqrt() as f32).max(1e-6);
+        }
+
+        // reservoir-sample rows if the training set is too large
+        let keep: Vec<u32> = if x.rows <= MAX_TRAIN {
+            (0..x.rows as u32).collect()
+        } else {
+            let mut res: Vec<u32> = (0..MAX_TRAIN as u32).collect();
+            for i in MAX_TRAIN..x.rows {
+                let j = rng.usize_below(i + 1);
+                if j < MAX_TRAIN {
+                    res[j] = i as u32;
+                }
+            }
+            res
+        };
+
+        let mut xs = Matrix::zeros(keep.len(), x.cols);
+        let mut ys = Vec::with_capacity(keep.len());
+        for (i, &r) in keep.iter().enumerate() {
+            for j in 0..x.cols {
+                xs.set(i, j, (x.get(r as usize, j) - mean[j]) / std[j]);
+            }
+            ys.push(y[r as usize]);
+        }
+        KnnModel {
+            x: xs,
+            y: ys,
+            k: k.clamp(1, keep.len()),
+            n_classes,
+            mean,
+            std,
+        }
+    }
+}
+
+impl Classifier for KnnModel {
+    fn predict(&self, x: &Matrix) -> Vec<u32> {
+        let mut out = Vec::with_capacity(x.rows);
+        // scratch: (distance, label) partial top-k via simple max-heap on a vec
+        for r in 0..x.rows {
+            let mut q: Vec<f32> = x.row(r).to_vec();
+            for j in 0..q.len() {
+                q[j] = (q[j] - self.mean[j]) / self.std[j];
+            }
+            // top-k smallest distances
+            let mut top: Vec<(f32, u32)> = Vec::with_capacity(self.k + 1);
+            for t in 0..self.x.rows {
+                let row = self.x.row(t);
+                let mut d = 0f32;
+                for j in 0..q.len().min(row.len()) {
+                    let diff = q[j] - row[j];
+                    d += diff * diff;
+                }
+                if top.len() < self.k {
+                    top.push((d, self.y[t]));
+                    if top.len() == self.k {
+                        top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                    }
+                } else if d < top[0].0 {
+                    top[0] = (d, self.y[t]);
+                    // restore "largest first" ordering
+                    let mut i = 0;
+                    while i + 1 < top.len() && top[i].0 < top[i + 1].0 {
+                        top.swap(i, i + 1);
+                        i += 1;
+                    }
+                }
+            }
+            let mut votes = vec![0u32; self.n_classes];
+            for &(_, c) in &top {
+                votes[c as usize] += 1;
+            }
+            let mut best = 0usize;
+            for (i, &v) in votes.iter().enumerate() {
+                if v > votes[best] {
+                    best = i;
+                }
+            }
+            out.push(best as u32);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::accuracy;
+    use crate::models::testutil::{blobs, xor};
+
+    #[test]
+    fn learns_blobs() {
+        let (x, y) = blobs(300, 3, 31);
+        let m = KnnModel::fit(&x, &y, 2, 5, &mut Rng::new(1));
+        assert!(accuracy(&m.predict(&x), &y) > 0.95);
+    }
+
+    #[test]
+    fn learns_xor_locally() {
+        let (x, y) = xor(800, 32);
+        let m = KnnModel::fit(&x, &y, 2, 7, &mut Rng::new(2));
+        assert!(accuracy(&m.predict(&x), &y) > 0.85);
+    }
+
+    #[test]
+    fn k1_memorizes_training_data() {
+        let (x, y) = blobs(100, 2, 33);
+        let m = KnnModel::fit(&x, &y, 2, 1, &mut Rng::new(3));
+        assert_eq!(m.predict(&x), y);
+    }
+
+    #[test]
+    fn training_cap_applies() {
+        let (x, y) = blobs(MAX_TRAIN + 500, 2, 34);
+        let m = KnnModel::fit(&x, &y, 2, 3, &mut Rng::new(4));
+        assert_eq!(m.x.rows, MAX_TRAIN);
+        // still accurate
+        assert!(accuracy(&m.predict(&x), &y) > 0.95);
+    }
+
+    #[test]
+    fn scale_invariance_via_zscoring() {
+        // one feature inflated 1000x must not dominate distance
+        let (x, y) = blobs(300, 2, 35);
+        let mut xs = x.clone();
+        for r in 0..xs.rows {
+            let v = xs.get(r, 1);
+            xs.set(r, 1, v * 1000.0);
+        }
+        let m = KnnModel::fit(&xs, &y, 2, 5, &mut Rng::new(5));
+        assert!(accuracy(&m.predict(&xs), &y) > 0.95);
+    }
+}

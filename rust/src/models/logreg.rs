@@ -1,0 +1,157 @@
+//! Softmax (multinomial logistic) regression trained through the
+//! AOT-compiled `logreg_train_step` artifact on PJRT — an XLA-backed
+//! member of the model zoo. Mini-batch SGD with L2; prediction uses the
+//! `logreg_predict` artifact and argmaxes on the rust side.
+
+use crate::data::Matrix;
+use crate::models::Classifier;
+use crate::runtime::models_exec::{class_mask, pack_batch, pack_epoch, LogregParams, ModelsExec};
+use crate::runtime::shapes::{BATCH, C_PAD, EPOCH_TILES, F_PAD};
+use crate::runtime::{self};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LogregModel {
+    params: LogregParams,
+    cmask: Vec<f32>,
+    n_classes: usize,
+}
+
+impl LogregModel {
+    pub fn fit(
+        x: &Matrix,
+        y: &[u32],
+        n_classes: usize,
+        lr: f64,
+        epochs: usize,
+        l2: f64,
+        rng: &mut Rng,
+    ) -> LogregModel {
+        assert!(x.cols <= F_PAD, "features {} exceed F_PAD {F_PAD}", x.cols);
+        assert!(n_classes <= C_PAD, "classes {n_classes} exceed C_PAD {C_PAD}");
+        let rt = runtime::thread_current()
+            .expect("PJRT runtime unavailable — run `make artifacts` first");
+        let exec = ModelsExec::new(&rt);
+        let mut params = LogregParams::zeros();
+        let cmask = class_mask(n_classes);
+        // hybrid dispatch (§Perf): the epoch artifact scans EPOCH_TILES
+        // fixed-shape batches per PJRT call — a huge win on large data
+        // (fewer host<->XLA crossings) but pure waste when the whole
+        // dataset fits one batch (the scan still runs all 16 tiles).
+        let mut order: Vec<usize> = (0..x.rows).collect();
+        if x.rows <= 2 * BATCH {
+            for _epoch in 0..epochs.max(1) {
+                rng.shuffle(&mut order);
+                for chunk in order.chunks(BATCH) {
+                    let batch = pack_batch(x, y, chunk).expect("pack_batch");
+                    exec.logreg_step(&mut params, &batch, &cmask, lr as f32, l2 as f32)
+                        .expect("logreg_train_step failed");
+                }
+            }
+        } else {
+            for _epoch in 0..epochs.max(1) {
+                rng.shuffle(&mut order);
+                for chunk in order.chunks(EPOCH_TILES * BATCH) {
+                    let epoch_stack = pack_epoch(x, y, chunk).expect("pack_epoch");
+                    exec.logreg_epoch(&mut params, &epoch_stack, &cmask, lr as f32, l2 as f32)
+                        .expect("logreg_train_epoch failed");
+                }
+            }
+        }
+        LogregModel {
+            params,
+            cmask,
+            n_classes,
+        }
+    }
+}
+
+/// Shared batched-predict helper: runs `predict_fn` per padded batch of
+/// feature rows and argmaxes the masked logits.
+pub(crate) fn predict_batched<F>(x: &Matrix, n_classes: usize, mut predict_fn: F) -> Vec<u32>
+where
+    F: FnMut(&[f32]) -> Vec<f32>,
+{
+    let mut out = Vec::with_capacity(x.rows);
+    let mut xb = vec![0f32; BATCH * F_PAD];
+    let mut r = 0usize;
+    while r < x.rows {
+        let take = BATCH.min(x.rows - r);
+        xb.fill(0.0);
+        for i in 0..take {
+            xb[i * F_PAD..i * F_PAD + x.cols].copy_from_slice(x.row(r + i));
+        }
+        let logits = predict_fn(&xb);
+        for i in 0..take {
+            let row = &logits[i * C_PAD..i * C_PAD + n_classes];
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            out.push(best as u32);
+        }
+        r += take;
+    }
+    out
+}
+
+impl Classifier for LogregModel {
+    fn predict(&self, x: &Matrix) -> Vec<u32> {
+        let rt = runtime::thread_current().expect("PJRT runtime unavailable");
+        let exec = ModelsExec::new(&rt);
+        predict_batched(x, self.n_classes, |xb| {
+            exec.logreg_predict(&self.params, xb, &self.cmask)
+                .expect("logreg_predict failed")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::accuracy;
+    use crate::models::testutil::{blobs, xor};
+
+    #[test]
+    fn learns_linearly_separable_blobs() {
+        let (x, y) = blobs(512, 4, 51);
+        let m = LogregModel::fit(&x, &y, 2, 0.5, 20, 1e-4, &mut Rng::new(1));
+        assert!(accuracy(&m.predict(&x), &y) > 0.95);
+    }
+
+    #[test]
+    fn multiclass_blobs() {
+        let mut rng = Rng::new(52);
+        let mut x = Matrix::zeros(600, 3);
+        let mut y = vec![0u32; 600];
+        for i in 0..600 {
+            let c = i % 3;
+            y[i] = c as u32;
+            for j in 0..3 {
+                let center = if j == c { 3.0 } else { 0.0 };
+                x.set(i, j, (center + rng.normal()) as f32);
+            }
+        }
+        let m = LogregModel::fit(&x, &y, 3, 0.5, 25, 1e-4, &mut Rng::new(2));
+        assert!(accuracy(&m.predict(&x), &y) > 0.9);
+    }
+
+    #[test]
+    fn fails_on_xor_as_expected() {
+        // the linear model CANNOT solve XOR — this asymmetry is what the
+        // family-selection dynamics in the experiments rely on
+        let (x, y) = xor(600, 53);
+        let m = LogregModel::fit(&x, &y, 2, 0.5, 25, 1e-4, &mut Rng::new(3));
+        let acc = accuracy(&m.predict(&x), &y);
+        assert!(acc < 0.7, "logreg should not crack XOR, got {acc}");
+    }
+
+    #[test]
+    fn predictions_never_exceed_class_range() {
+        let (x, y) = blobs(100, 2, 54);
+        let m = LogregModel::fit(&x, &y, 2, 0.3, 5, 1e-4, &mut Rng::new(4));
+        assert!(m.predict(&x).iter().all(|&p| p < 2));
+    }
+}

@@ -1,0 +1,106 @@
+//! One-hidden-layer tanh MLP trained through the AOT-compiled
+//! `mlp_train_step` artifact on PJRT. The nonlinear XLA-backed member of
+//! the model zoo — cracks interaction structure logreg cannot.
+
+use crate::data::Matrix;
+use crate::models::logreg::predict_batched;
+use crate::models::Classifier;
+use crate::runtime::models_exec::{class_mask, pack_batch, pack_epoch, MlpParams, ModelsExec};
+use crate::runtime::shapes::{BATCH, C_PAD, EPOCH_TILES, F_PAD};
+use crate::runtime::{self};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct MlpModel {
+    params: MlpParams,
+    cmask: Vec<f32>,
+    n_classes: usize,
+}
+
+impl MlpModel {
+    pub fn fit(
+        x: &Matrix,
+        y: &[u32],
+        n_classes: usize,
+        lr: f64,
+        epochs: usize,
+        l2: f64,
+        rng: &mut Rng,
+    ) -> MlpModel {
+        assert!(x.cols <= F_PAD, "features {} exceed F_PAD {F_PAD}", x.cols);
+        assert!(n_classes <= C_PAD, "classes {n_classes} exceed C_PAD {C_PAD}");
+        let rt = runtime::thread_current()
+            .expect("PJRT runtime unavailable — run `make artifacts` first");
+        let exec = ModelsExec::new(&rt);
+        let mut params = MlpParams::init(rng);
+        let cmask = class_mask(n_classes);
+        // hybrid dispatch: per-step for small data, epoch-scan for large
+        // (see logreg.rs / §Perf)
+        let mut order: Vec<usize> = (0..x.rows).collect();
+        if x.rows <= 2 * BATCH {
+            for _epoch in 0..epochs.max(1) {
+                rng.shuffle(&mut order);
+                for chunk in order.chunks(BATCH) {
+                    let batch = pack_batch(x, y, chunk).expect("pack_batch");
+                    exec.mlp_step(&mut params, &batch, &cmask, lr as f32, l2 as f32)
+                        .expect("mlp_train_step failed");
+                }
+            }
+        } else {
+            for _epoch in 0..epochs.max(1) {
+                rng.shuffle(&mut order);
+                for chunk in order.chunks(EPOCH_TILES * BATCH) {
+                    let epoch_stack = pack_epoch(x, y, chunk).expect("pack_epoch");
+                    exec.mlp_epoch(&mut params, &epoch_stack, &cmask, lr as f32, l2 as f32)
+                        .expect("mlp_train_epoch failed");
+                }
+            }
+        }
+        MlpModel {
+            params,
+            cmask,
+            n_classes,
+        }
+    }
+}
+
+impl Classifier for MlpModel {
+    fn predict(&self, x: &Matrix) -> Vec<u32> {
+        let rt = runtime::thread_current().expect("PJRT runtime unavailable");
+        let exec = ModelsExec::new(&rt);
+        predict_batched(x, self.n_classes, |xb| {
+            exec.mlp_predict(&self.params, xb, &self.cmask)
+                .expect("mlp_predict failed")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::accuracy;
+    use crate::models::testutil::{blobs, xor};
+
+    #[test]
+    fn learns_blobs() {
+        let (x, y) = blobs(400, 3, 61);
+        let m = MlpModel::fit(&x, &y, 2, 0.3, 30, 1e-5, &mut Rng::new(1));
+        assert!(accuracy(&m.predict(&x), &y) > 0.95);
+    }
+
+    #[test]
+    fn learns_xor_unlike_logreg() {
+        let (x, y) = xor(800, 62);
+        let m = MlpModel::fit(&x, &y, 2, 0.3, 120, 1e-5, &mut Rng::new(2));
+        let acc = accuracy(&m.predict(&x), &y);
+        assert!(acc > 0.85, "MLP must crack XOR, got {acc}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (x, y) = blobs(200, 2, 63);
+        let a = MlpModel::fit(&x, &y, 2, 0.2, 5, 1e-5, &mut Rng::new(9));
+        let b = MlpModel::fit(&x, &y, 2, 0.2, 5, 1e-5, &mut Rng::new(9));
+        assert_eq!(a.predict(&x), b.predict(&x));
+    }
+}

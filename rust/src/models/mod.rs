@@ -1,0 +1,217 @@
+//! Model zoo substrate — the pipeline components the AutoML framework
+//! searches over (stand-in for the scikit-learn estimators Auto-Sklearn
+//! and TPOT search; DESIGN.md §5).
+//!
+//! Six model families: logistic regression and MLP execute through the
+//! AOT-compiled L2 train-step artifacts on PJRT (`runtime::models_exec`);
+//! decision tree, random forest, kNN and Gaussian naive Bayes are pure
+//! rust. Plus scaling preprocessors and information-gain feature
+//! selection.
+
+pub mod forest;
+pub mod knn;
+pub mod logreg;
+pub mod mlp;
+pub mod nb;
+pub mod preproc;
+pub mod tree;
+
+use crate::data::Matrix;
+use crate::util::rng::Rng;
+
+/// A fitted classifier.
+pub trait Classifier: Send + Sync {
+    fn predict(&self, x: &Matrix) -> Vec<u32>;
+}
+
+/// Model family tag (the unit of the fine-tuning restriction, §3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Logreg,
+    Mlp,
+    Tree,
+    Forest,
+    Knn,
+    Nb,
+}
+
+impl ModelKind {
+    pub fn all() -> Vec<ModelKind> {
+        vec![
+            ModelKind::Logreg,
+            ModelKind::Mlp,
+            ModelKind::Tree,
+            ModelKind::Forest,
+            ModelKind::Knn,
+            ModelKind::Nb,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Logreg => "logreg",
+            ModelKind::Mlp => "mlp",
+            ModelKind::Tree => "tree",
+            ModelKind::Forest => "forest",
+            ModelKind::Knn => "knn",
+            ModelKind::Nb => "nb",
+        }
+    }
+}
+
+/// A model family with concrete hyper-parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSpec {
+    Logreg { lr: f64, epochs: usize, l2: f64 },
+    Mlp { lr: f64, epochs: usize, l2: f64 },
+    Tree { max_depth: usize, min_leaf: usize },
+    Forest { n_trees: usize, max_depth: usize, feat_frac: f64 },
+    Knn { k: usize },
+    Nb { smoothing: f64 },
+}
+
+impl ModelSpec {
+    pub fn kind(&self) -> ModelKind {
+        match self {
+            ModelSpec::Logreg { .. } => ModelKind::Logreg,
+            ModelSpec::Mlp { .. } => ModelKind::Mlp,
+            ModelSpec::Tree { .. } => ModelKind::Tree,
+            ModelSpec::Forest { .. } => ModelKind::Forest,
+            ModelSpec::Knn { .. } => ModelKind::Knn,
+            ModelSpec::Nb { .. } => ModelKind::Nb,
+        }
+    }
+
+    /// Fit on (x, y). `n_classes` is the label alphabet size; `rng` seeds
+    /// stochastic fits (forest bagging, SGD shuffling).
+    pub fn fit(
+        &self,
+        x: &Matrix,
+        y: &[u32],
+        n_classes: usize,
+        rng: &mut Rng,
+    ) -> Box<dyn Classifier> {
+        match self {
+            ModelSpec::Logreg { lr, epochs, l2 } => {
+                Box::new(logreg::LogregModel::fit(x, y, n_classes, *lr, *epochs, *l2, rng))
+            }
+            ModelSpec::Mlp { lr, epochs, l2 } => {
+                Box::new(mlp::MlpModel::fit(x, y, n_classes, *lr, *epochs, *l2, rng))
+            }
+            ModelSpec::Tree { max_depth, min_leaf } => Box::new(tree::DecisionTree::fit(
+                x,
+                y,
+                n_classes,
+                *max_depth,
+                *min_leaf,
+                None,
+                rng,
+            )),
+            ModelSpec::Forest {
+                n_trees,
+                max_depth,
+                feat_frac,
+            } => Box::new(forest::RandomForest::fit(
+                x, y, n_classes, *n_trees, *max_depth, *feat_frac, rng,
+            )),
+            ModelSpec::Knn { k } => Box::new(knn::KnnModel::fit(x, y, n_classes, *k, rng)),
+            ModelSpec::Nb { smoothing } => {
+                Box::new(nb::GaussianNb::fit(x, y, n_classes, *smoothing))
+            }
+        }
+    }
+
+    /// Compact display string, e.g. `forest(n=40,d=10,f=0.7)`.
+    pub fn describe(&self) -> String {
+        match self {
+            ModelSpec::Logreg { lr, epochs, l2 } => {
+                format!("logreg(lr={lr:.3},e={epochs},l2={l2:.1e})")
+            }
+            ModelSpec::Mlp { lr, epochs, l2 } => {
+                format!("mlp(lr={lr:.3},e={epochs},l2={l2:.1e})")
+            }
+            ModelSpec::Tree { max_depth, min_leaf } => {
+                format!("tree(d={max_depth},leaf={min_leaf})")
+            }
+            ModelSpec::Forest {
+                n_trees,
+                max_depth,
+                feat_frac,
+            } => format!("forest(n={n_trees},d={max_depth},f={feat_frac:.2})"),
+            ModelSpec::Knn { k } => format!("knn(k={k})"),
+            ModelSpec::Nb { smoothing } => format!("nb(s={smoothing:.1e})"),
+        }
+    }
+}
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[u32], truth: &[u32]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(truth).filter(|(a, b)| a == b).count();
+    hits as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Linearly separable 2-class blobs.
+    pub fn blobs(n: usize, d: usize, seed: u64) -> (Matrix, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, d);
+        let mut y = vec![0u32; n];
+        for i in 0..n {
+            let c = i % 2;
+            y[i] = c as u32;
+            for j in 0..d {
+                let center = if c == 0 { -2.0 } else { 2.0 };
+                x.set(i, j, (center + rng.normal()) as f32);
+            }
+        }
+        (x, y)
+    }
+
+    /// XOR-quadrant problem: not linearly separable.
+    pub fn xor(n: usize, seed: u64) -> (Matrix, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, 2);
+        let mut y = vec![0u32; n];
+        for i in 0..n {
+            let (a, b) = (rng.normal(), rng.normal());
+            x.set(i, 0, a as f32);
+            x.set(i, 1, b as f32);
+            y[i] = ((a * b) > 0.0) as u32;
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn kind_and_describe_roundtrip() {
+        let specs = [
+            ModelSpec::Logreg { lr: 0.1, epochs: 10, l2: 1e-4 },
+            ModelSpec::Mlp { lr: 0.1, epochs: 10, l2: 1e-4 },
+            ModelSpec::Tree { max_depth: 5, min_leaf: 2 },
+            ModelSpec::Forest { n_trees: 10, max_depth: 5, feat_frac: 0.5 },
+            ModelSpec::Knn { k: 5 },
+            ModelSpec::Nb { smoothing: 1e-9 },
+        ];
+        for s in &specs {
+            assert!(s.describe().starts_with(s.kind().name()));
+        }
+        assert_eq!(ModelKind::all().len(), 6);
+    }
+}

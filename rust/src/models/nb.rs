@@ -1,0 +1,174 @@
+//! Gaussian naive Bayes: per-class per-feature normal likelihoods with
+//! variance smoothing, log-space scoring.
+
+use crate::data::Matrix;
+use crate::models::Classifier;
+
+#[derive(Debug, Clone)]
+pub struct GaussianNb {
+    /// (n_classes, n_features) means / variances
+    mean: Vec<f64>,
+    var: Vec<f64>,
+    log_prior: Vec<f64>,
+    n_classes: usize,
+    n_features: usize,
+}
+
+impl GaussianNb {
+    pub fn fit(x: &Matrix, y: &[u32], n_classes: usize, smoothing: f64) -> GaussianNb {
+        let d = x.cols;
+        let mut count = vec![0usize; n_classes];
+        let mut mean = vec![0f64; n_classes * d];
+        let mut var = vec![0f64; n_classes * d];
+        for r in 0..x.rows {
+            let c = y[r] as usize;
+            count[c] += 1;
+            for j in 0..d {
+                mean[c * d + j] += x.get(r, j) as f64;
+            }
+        }
+        for c in 0..n_classes {
+            if count[c] > 0 {
+                for j in 0..d {
+                    mean[c * d + j] /= count[c] as f64;
+                }
+            }
+        }
+        for r in 0..x.rows {
+            let c = y[r] as usize;
+            for j in 0..d {
+                let diff = x.get(r, j) as f64 - mean[c * d + j];
+                var[c * d + j] += diff * diff;
+            }
+        }
+        // global max variance scales the smoothing floor (sklearn-style);
+        // additionally floor each class-variance at 1% of the feature's
+        // GLOBAL variance — classes with few samples on near-constant
+        // features otherwise get ~0 variance, their likelihood spikes, and
+        // the model predicts the rare class everywhere (below chance)
+        let mut max_var = 0f64;
+        for c in 0..n_classes {
+            for j in 0..d {
+                if count[c] > 0 {
+                    var[c * d + j] /= count[c] as f64;
+                }
+                max_var = max_var.max(var[c * d + j]);
+            }
+        }
+        let mut global_var = vec![0f64; d];
+        for j in 0..d {
+            let mut m = 0f64;
+            for r in 0..x.rows {
+                m += x.get(r, j) as f64;
+            }
+            m /= x.rows.max(1) as f64;
+            for r in 0..x.rows {
+                let diff = x.get(r, j) as f64 - m;
+                global_var[j] += diff * diff;
+            }
+            global_var[j] /= x.rows.max(1) as f64;
+        }
+        let floor = smoothing.max(1e-12) * max_var.max(1.0);
+        for c in 0..n_classes {
+            for j in 0..d {
+                let v = &mut var[c * d + j];
+                *v = (*v + floor).max(0.01 * global_var[j]);
+            }
+        }
+        let total: usize = count.iter().sum();
+        let log_prior: Vec<f64> = count
+            .iter()
+            .map(|&c| ((c.max(1)) as f64 / total.max(1) as f64).ln())
+            .collect();
+        GaussianNb {
+            mean,
+            var,
+            log_prior,
+            n_classes,
+            n_features: d,
+        }
+    }
+
+    fn log_likelihood(&self, row: &[f32], c: usize) -> f64 {
+        let d = self.n_features;
+        let mut ll = self.log_prior[c];
+        for j in 0..d {
+            let v = self.var[c * d + j];
+            let diff = row[j] as f64 - self.mean[c * d + j];
+            ll += -0.5 * ((2.0 * std::f64::consts::PI * v).ln() + diff * diff / v);
+        }
+        ll
+    }
+}
+
+impl Classifier for GaussianNb {
+    fn predict(&self, x: &Matrix) -> Vec<u32> {
+        (0..x.rows)
+            .map(|r| {
+                let row = x.row(r);
+                let mut best = (f64::MIN, 0u32);
+                for c in 0..self.n_classes {
+                    let ll = self.log_likelihood(row, c);
+                    if ll > best.0 {
+                        best = (ll, c as u32);
+                    }
+                }
+                best.1
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::accuracy;
+    use crate::models::testutil::blobs;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn learns_blobs() {
+        let (x, y) = blobs(400, 3, 41);
+        let m = GaussianNb::fit(&x, &y, 2, 1e-9);
+        assert!(accuracy(&m.predict(&x), &y) > 0.95);
+    }
+
+    #[test]
+    fn respects_priors_for_imbalanced_data() {
+        // 95% class 0 with identical features: prior should dominate
+        let mut x = Matrix::zeros(200, 1);
+        let mut rng = Rng::new(42);
+        let mut y = vec![0u32; 200];
+        for i in 0..200 {
+            x.set(i, 0, rng.normal() as f32);
+            y[i] = (i < 10) as u32 ^ 1; // 10 of class 0... invert: mostly 1
+        }
+        let m = GaussianNb::fit(&x, &y, 2, 1e-9);
+        let preds = m.predict(&x);
+        let ones = preds.iter().filter(|&&p| p == 1).count();
+        assert!(ones > 150, "prior ignored: {ones}/200");
+    }
+
+    #[test]
+    fn variance_smoothing_prevents_degenerate_likelihoods() {
+        // constant feature per class would give zero variance
+        let mut x = Matrix::zeros(20, 1);
+        let mut y = vec![0u32; 20];
+        for i in 0..20 {
+            let c = (i % 2) as u32;
+            y[i] = c;
+            x.set(i, 0, c as f32);
+        }
+        let m = GaussianNb::fit(&x, &y, 2, 1e-9);
+        let preds = m.predict(&x);
+        assert_eq!(preds, y, "separable constant features must classify");
+    }
+
+    #[test]
+    fn missing_class_does_not_panic() {
+        let (x, _) = blobs(50, 2, 43);
+        let y = vec![0u32; 50]; // class 1 never appears but n_classes = 2
+        let m = GaussianNb::fit(&x, &y, 2, 1e-9);
+        let _ = m.predict(&x);
+    }
+}

@@ -1,0 +1,317 @@
+//! Pipeline preprocessors: feature scaling and feature selection — the
+//! "data preprocessing / feature engineering" stages of the AutoML
+//! pipeline space (paper §1: pipelines = preprocessing + feature
+//! engineering + model + hyper-parameters).
+
+use crate::data::Matrix;
+use crate::measures::entropy::entropy_of_counts;
+
+/// Scaling choices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalerSpec {
+    None,
+    Standard,
+    MinMax,
+}
+
+/// Fitted scaler (per-column affine transform).
+#[derive(Debug, Clone)]
+pub struct FittedScaler {
+    shift: Vec<f32>,
+    scale: Vec<f32>,
+}
+
+impl FittedScaler {
+    pub fn fit(spec: ScalerSpec, x: &Matrix) -> FittedScaler {
+        let d = x.cols;
+        let mut shift = vec![0f32; d];
+        let mut scale = vec![1f32; d];
+        match spec {
+            ScalerSpec::None => {}
+            ScalerSpec::Standard => {
+                for j in 0..d {
+                    let mut s = 0f64;
+                    for r in 0..x.rows {
+                        s += x.get(r, j) as f64;
+                    }
+                    let m = s / x.rows.max(1) as f64;
+                    let mut v = 0f64;
+                    for r in 0..x.rows {
+                        let diff = x.get(r, j) as f64 - m;
+                        v += diff * diff;
+                    }
+                    let sd = (v / x.rows.max(1) as f64).sqrt().max(1e-9);
+                    shift[j] = m as f32;
+                    scale[j] = 1.0 / sd as f32;
+                }
+            }
+            ScalerSpec::MinMax => {
+                for j in 0..d {
+                    let mut mn = f32::MAX;
+                    let mut mx = f32::MIN;
+                    for r in 0..x.rows {
+                        let v = x.get(r, j);
+                        mn = mn.min(v);
+                        mx = mx.max(v);
+                    }
+                    let span = (mx - mn).max(1e-9);
+                    shift[j] = mn;
+                    scale[j] = 1.0 / span;
+                }
+            }
+        }
+        FittedScaler { shift, scale }
+    }
+
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let mut out = x.clone();
+        for r in 0..out.rows {
+            for j in 0..out.cols {
+                let v = (out.get(r, j) - self.shift[j]) * self.scale[j];
+                out.set(r, j, v);
+            }
+        }
+        out
+    }
+}
+
+/// Feature-selection choices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SelectorSpec {
+    None,
+    /// drop columns whose variance falls below `threshold`
+    VarianceThreshold { threshold: f64 },
+    /// keep the `frac` fraction of columns with highest information gain
+    SelectKBest { frac: f64 },
+}
+
+/// Fitted selector: the retained column indices.
+#[derive(Debug, Clone)]
+pub struct FittedSelector {
+    pub keep: Vec<usize>,
+}
+
+impl FittedSelector {
+    pub fn fit(spec: SelectorSpec, x: &Matrix, y: &[u32], n_classes: usize) -> FittedSelector {
+        let keep: Vec<usize> = match spec {
+            SelectorSpec::None => (0..x.cols).collect(),
+            SelectorSpec::VarianceThreshold { threshold } => {
+                let mut keep = Vec::new();
+                for j in 0..x.cols {
+                    let mut s = 0f64;
+                    for r in 0..x.rows {
+                        s += x.get(r, j) as f64;
+                    }
+                    let m = s / x.rows.max(1) as f64;
+                    let mut v = 0f64;
+                    for r in 0..x.rows {
+                        let diff = x.get(r, j) as f64 - m;
+                        v += diff * diff;
+                    }
+                    if v / x.rows.max(1) as f64 >= threshold {
+                        keep.push(j);
+                    }
+                }
+                if keep.is_empty() {
+                    keep.push(0); // never drop everything
+                }
+                keep
+            }
+            SelectorSpec::SelectKBest { frac } => {
+                let k = ((x.cols as f64 * frac).ceil() as usize).clamp(1, x.cols);
+                let mut scored: Vec<(usize, f64)> = (0..x.cols)
+                    .map(|j| (j, information_gain_column(x, j, y, n_classes)))
+                    .collect();
+                scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                let mut keep: Vec<usize> = scored[..k].iter().map(|&(j, _)| j).collect();
+                keep.sort_unstable();
+                keep
+            }
+        };
+        FittedSelector { keep }
+    }
+
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        if self.keep.len() == x.cols {
+            return x.clone();
+        }
+        let mut out = Matrix::zeros(x.rows, self.keep.len());
+        for r in 0..x.rows {
+            for (jj, &j) in self.keep.iter().enumerate() {
+                out.set(r, jj, x.get(r, j));
+            }
+        }
+        out
+    }
+}
+
+/// Information gain of a matrix column w.r.t. labels: IG = H(y) − H(y|x),
+/// with x equal-width binned into ≤16 bins (a matrix-level twin of the
+/// code-based IG in `baselines::ig` used by the IG baselines).
+pub fn information_gain_column(x: &Matrix, col: usize, y: &[u32], n_classes: usize) -> f64 {
+    const BINS: usize = 16;
+    let n = x.rows;
+    if n == 0 {
+        return 0.0;
+    }
+    let mut mn = f32::MAX;
+    let mut mx = f32::MIN;
+    for r in 0..n {
+        let v = x.get(r, col);
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    let span = (mx - mn).max(1e-9);
+    // joint histogram
+    let mut joint = vec![0u32; BINS * n_classes];
+    let mut label_counts = vec![0u32; n_classes];
+    let mut bin_counts = vec![0u32; BINS];
+    for r in 0..n {
+        let b = (((x.get(r, col) - mn) / span) * (BINS as f32 - 1.0)) as usize;
+        let c = y[r] as usize;
+        joint[b * n_classes + c] += 1;
+        label_counts[c] += 1;
+        bin_counts[b] += 1;
+    }
+    let h_y = entropy_of_counts(&label_counts, n);
+    let mut h_y_given_x = 0f64;
+    for b in 0..BINS {
+        if bin_counts[b] == 0 {
+            continue;
+        }
+        let hb = entropy_of_counts(
+            &joint[b * n_classes..(b + 1) * n_classes],
+            bin_counts[b] as usize,
+        );
+        h_y_given_x += (bin_counts[b] as f64 / n as f64) * hb;
+    }
+    (h_y - h_y_given_x).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::testutil::blobs;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn standard_scaler_zero_mean_unit_var() {
+        let (x, _) = blobs(500, 3, 71);
+        let s = FittedScaler::fit(ScalerSpec::Standard, &x);
+        let t = s.transform(&x);
+        for j in 0..3 {
+            let mut m = 0f64;
+            for r in 0..t.rows {
+                m += t.get(r, j) as f64;
+            }
+            m /= t.rows as f64;
+            assert!(m.abs() < 1e-4, "mean {m}");
+        }
+    }
+
+    #[test]
+    fn minmax_scaler_unit_interval() {
+        let (x, _) = blobs(300, 2, 72);
+        let s = FittedScaler::fit(ScalerSpec::MinMax, &x);
+        let t = s.transform(&x);
+        for j in 0..2 {
+            for r in 0..t.rows {
+                let v = t.get(r, j);
+                assert!((-1e-5..=1.0 + 1e-5).contains(&v), "{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn none_scaler_identity() {
+        let (x, _) = blobs(50, 2, 73);
+        let s = FittedScaler::fit(ScalerSpec::None, &x);
+        assert_eq!(s.transform(&x).data, x.data);
+    }
+
+    #[test]
+    fn scaler_applies_train_stats_to_test() {
+        let (x, _) = blobs(100, 1, 74);
+        let s = FittedScaler::fit(ScalerSpec::Standard, &x);
+        // transform of a different matrix must use x's stats
+        let mut other = Matrix::zeros(1, 1);
+        other.set(0, 0, 1000.0);
+        let t = s.transform(&other);
+        assert!(t.get(0, 0) > 100.0, "got {}", t.get(0, 0));
+    }
+
+    #[test]
+    fn variance_threshold_drops_constant_columns() {
+        let mut x = Matrix::zeros(100, 3);
+        let mut rng = Rng::new(75);
+        for r in 0..100 {
+            x.set(r, 0, rng.normal() as f32);
+            x.set(r, 1, 5.0); // constant
+            x.set(r, 2, rng.normal() as f32);
+        }
+        let y = vec![0u32; 100];
+        let sel = FittedSelector::fit(
+            SelectorSpec::VarianceThreshold { threshold: 0.01 },
+            &x,
+            &y,
+            1,
+        );
+        assert_eq!(sel.keep, vec![0, 2]);
+        assert_eq!(sel.transform(&x).cols, 2);
+    }
+
+    #[test]
+    fn kbest_prefers_informative_columns() {
+        // col 0 informative, col 1-2 noise
+        let mut x = Matrix::zeros(600, 3);
+        let mut y = vec![0u32; 600];
+        let mut rng = Rng::new(76);
+        for i in 0..600 {
+            let c = (i % 2) as u32;
+            y[i] = c;
+            x.set(i, 0, (c as f64 * 4.0 + rng.normal()) as f32);
+            x.set(i, 1, rng.normal() as f32);
+            x.set(i, 2, rng.normal() as f32);
+        }
+        let sel = FittedSelector::fit(SelectorSpec::SelectKBest { frac: 0.3 }, &x, &y, 2);
+        assert_eq!(sel.keep, vec![0]);
+    }
+
+    #[test]
+    fn ig_zero_for_independent_column() {
+        let mut x = Matrix::zeros(2000, 1);
+        let mut y = vec![0u32; 2000];
+        let mut rng = Rng::new(77);
+        for i in 0..2000 {
+            x.set(i, 0, rng.normal() as f32);
+            y[i] = rng.usize_below(2) as u32;
+        }
+        let ig = information_gain_column(&x, 0, &y, 2);
+        assert!(ig < 0.02, "independent column IG {ig}");
+    }
+
+    #[test]
+    fn ig_high_for_deterministic_column() {
+        let mut x = Matrix::zeros(500, 1);
+        let mut y = vec![0u32; 500];
+        for i in 0..500 {
+            y[i] = (i % 2) as u32;
+            x.set(i, 0, y[i] as f32 * 10.0);
+        }
+        let ig = information_gain_column(&x, 0, &y, 2);
+        assert!((ig - 1.0).abs() < 0.05, "deterministic IG {ig}");
+    }
+
+    #[test]
+    fn selector_never_empty() {
+        let x = Matrix::zeros(10, 2); // all constant
+        let y = vec![0u32; 10];
+        let sel = FittedSelector::fit(
+            SelectorSpec::VarianceThreshold { threshold: 1.0 },
+            &x,
+            &y,
+            1,
+        );
+        assert!(!sel.keep.is_empty());
+    }
+}

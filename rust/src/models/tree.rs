@@ -1,0 +1,314 @@
+//! CART decision tree (gini impurity, quantile candidate thresholds).
+//! The workhorse of the model zoo and the base learner of the forest.
+
+use crate::data::Matrix;
+use crate::models::Classifier;
+use crate::util::rng::Rng;
+
+/// max candidate split thresholds inspected per feature per node
+const MAX_THRESHOLDS: usize = 16;
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf {
+        class: u32,
+    },
+    Split {
+        feature: usize,
+        threshold: f32,
+        left: usize,  // node index
+        right: usize, // node index
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    nodes: Vec<Node>,
+    pub n_classes: usize,
+}
+
+fn gini(counts: &[u32], total: u32) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - counts
+        .iter()
+        .map(|&c| {
+            let p = c as f64 / t;
+            p * p
+        })
+        .sum::<f64>()
+}
+
+fn majority(counts: &[u32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &c) in counts.iter().enumerate() {
+        if c > counts[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+impl DecisionTree {
+    /// Fit on rows of (x, y). `features` optionally restricts the columns
+    /// considered at every node (used by the forest's per-tree feature
+    /// subsampling); `None` means all columns.
+    pub fn fit(
+        x: &Matrix,
+        y: &[u32],
+        n_classes: usize,
+        max_depth: usize,
+        min_leaf: usize,
+        features: Option<&[usize]>,
+        rng: &mut Rng,
+    ) -> DecisionTree {
+        let all_features: Vec<usize> = (0..x.cols).collect();
+        let feats: Vec<usize> = features.map(|f| f.to_vec()).unwrap_or(all_features);
+        let rows: Vec<u32> = (0..x.rows as u32).collect();
+        let mut tree = DecisionTree {
+            nodes: Vec::new(),
+            n_classes,
+        };
+        tree.build(x, y, &rows, &feats, max_depth.max(1), min_leaf.max(1), rng);
+        tree
+    }
+
+    fn class_counts(&self, y: &[u32], rows: &[u32]) -> Vec<u32> {
+        let mut counts = vec![0u32; self.n_classes];
+        for &r in rows {
+            counts[y[r as usize] as usize] += 1;
+        }
+        counts
+    }
+
+    /// Recursive node construction; returns the node index.
+    fn build(
+        &mut self,
+        x: &Matrix,
+        y: &[u32],
+        rows: &[u32],
+        feats: &[usize],
+        depth_left: usize,
+        min_leaf: usize,
+        rng: &mut Rng,
+    ) -> usize {
+        let counts = self.class_counts(y, rows);
+        let total = rows.len() as u32;
+        let node_gini = gini(&counts, total);
+        // stop: pure node, depth exhausted, or too small to split
+        if node_gini <= 1e-12 || depth_left == 0 || rows.len() < 2 * min_leaf {
+            let idx = self.nodes.len();
+            self.nodes.push(Node::Leaf {
+                class: majority(&counts),
+            });
+            return idx;
+        }
+
+        // best split over candidate thresholds
+        let mut best: Option<(usize, f32, f64)> = None; // (feat, thr, weighted gini)
+        for &f in feats {
+            let thresholds = candidate_thresholds(x, f, rows, rng);
+            for &thr in &thresholds {
+                let mut lc = vec![0u32; self.n_classes];
+                let mut rc = vec![0u32; self.n_classes];
+                let (mut ln, mut rn) = (0u32, 0u32);
+                for &r in rows {
+                    if x.get(r as usize, f) <= thr {
+                        lc[y[r as usize] as usize] += 1;
+                        ln += 1;
+                    } else {
+                        rc[y[r as usize] as usize] += 1;
+                        rn += 1;
+                    }
+                }
+                if (ln as usize) < min_leaf || (rn as usize) < min_leaf {
+                    continue;
+                }
+                let w = (ln as f64 * gini(&lc, ln) + rn as f64 * gini(&rc, rn))
+                    / total as f64;
+                if best.map_or(true, |(_, _, bw)| w < bw - 1e-12) {
+                    best = Some((f, thr, w));
+                }
+            }
+        }
+
+        match best {
+            Some((f, thr, w)) if w < node_gini - 1e-9 => {
+                let (left_rows, right_rows): (Vec<u32>, Vec<u32>) =
+                    rows.iter().partition(|&&r| x.get(r as usize, f) <= thr);
+                let idx = self.nodes.len();
+                self.nodes.push(Node::Leaf { class: 0 }); // placeholder
+                let left = self.build(x, y, &left_rows, feats, depth_left - 1, min_leaf, rng);
+                let right = self.build(x, y, &right_rows, feats, depth_left - 1, min_leaf, rng);
+                self.nodes[idx] = Node::Split {
+                    feature: f,
+                    threshold: thr,
+                    left,
+                    right,
+                };
+                idx
+            }
+            _ => {
+                let idx = self.nodes.len();
+                self.nodes.push(Node::Leaf {
+                    class: majority(&counts),
+                });
+                idx
+            }
+        }
+    }
+
+    pub fn predict_row(&self, row: &[f32]) -> u32 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { class } => return *class,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    i = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn rec(nodes: &[Node], i: usize) -> usize {
+            match &nodes[i] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + rec(nodes, *left).max(rec(nodes, *right)),
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            rec(&self.nodes, 0)
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Candidate thresholds: quantile cut points of the feature over a row
+/// sample (bounds split search to MAX_THRESHOLDS per feature per node).
+fn candidate_thresholds(x: &Matrix, feature: usize, rows: &[u32], rng: &mut Rng) -> Vec<f32> {
+    const SAMPLE: usize = 256;
+    let mut vals: Vec<f32> = if rows.len() > SAMPLE {
+        (0..SAMPLE)
+            .map(|_| x.get(rows[rng.usize_below(rows.len())] as usize, feature))
+            .collect()
+    } else {
+        rows.iter().map(|&r| x.get(r as usize, feature)).collect()
+    };
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.dedup();
+    if vals.len() <= 1 {
+        return Vec::new();
+    }
+    if vals.len() <= MAX_THRESHOLDS {
+        // midpoints between consecutive distinct values
+        return vals.windows(2).map(|w| (w[0] + w[1]) / 2.0).collect();
+    }
+    (1..=MAX_THRESHOLDS)
+        .map(|q| {
+            let idx = (q * (vals.len() - 1)) / (MAX_THRESHOLDS + 1);
+            vals[idx]
+        })
+        .collect()
+}
+
+impl Classifier for DecisionTree {
+    fn predict(&self, x: &Matrix) -> Vec<u32> {
+        (0..x.rows).map(|r| self.predict_row(x.row(r))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::testutil::{blobs, xor};
+    use crate::models::accuracy;
+
+    #[test]
+    fn learns_blobs_perfectly() {
+        let (x, y) = blobs(400, 3, 1);
+        let mut rng = Rng::new(2);
+        let t = DecisionTree::fit(&x, &y, 2, 6, 2, None, &mut rng);
+        assert!(accuracy(&t.predict(&x), &y) > 0.95);
+    }
+
+    #[test]
+    fn learns_xor() {
+        let (x, y) = xor(800, 3);
+        let mut rng = Rng::new(4);
+        let t = DecisionTree::fit(&x, &y, 2, 8, 2, None, &mut rng);
+        assert!(accuracy(&t.predict(&x), &y) > 0.9, "trees must crack XOR");
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let (x, y) = xor(500, 5);
+        let mut rng = Rng::new(6);
+        for d in [1usize, 2, 4] {
+            let t = DecisionTree::fit(&x, &y, 2, d, 1, None, &mut rng);
+            assert!(t.depth() <= d, "depth {} > {d}", t.depth());
+        }
+    }
+
+    #[test]
+    fn depth_zero_like_input_single_class() {
+        let (x, _) = blobs(50, 2, 7);
+        let y = vec![1u32; 50];
+        let mut rng = Rng::new(8);
+        let t = DecisionTree::fit(&x, &y, 2, 5, 1, None, &mut rng);
+        assert_eq!(t.n_nodes(), 1, "pure labels => single leaf");
+        assert!(t.predict(&x).iter().all(|&p| p == 1));
+    }
+
+    #[test]
+    fn min_leaf_limits_fragmentation() {
+        let (x, y) = xor(200, 9);
+        let mut rng = Rng::new(10);
+        let fine = DecisionTree::fit(&x, &y, 2, 12, 1, None, &mut rng);
+        let coarse = DecisionTree::fit(&x, &y, 2, 12, 40, None, &mut rng);
+        assert!(coarse.n_nodes() < fine.n_nodes());
+    }
+
+    #[test]
+    fn feature_restriction_is_honored() {
+        // only the uninformative feature allowed -> accuracy near chance
+        let (x, y) = blobs(400, 1, 11);
+        // add a noise column
+        let mut x2 = Matrix::zeros(400, 2);
+        let mut rng = Rng::new(12);
+        for r in 0..400 {
+            x2.set(r, 0, x.get(r, 0));
+            x2.set(r, 1, rng.normal() as f32);
+        }
+        let t = DecisionTree::fit(&x2, &y, 2, 6, 2, Some(&[1]), &mut rng);
+        let acc = accuracy(&t.predict(&x2), &y);
+        assert!(acc < 0.75, "noise-only tree should be weak, got {acc}");
+    }
+
+    #[test]
+    fn multiclass() {
+        let mut rng = Rng::new(13);
+        let mut x = Matrix::zeros(600, 2);
+        let mut y = vec![0u32; 600];
+        for i in 0..600 {
+            let c = i % 3;
+            y[i] = c as u32;
+            x.set(i, 0, (c as f64 * 4.0 + rng.normal()) as f32);
+            x.set(i, 1, rng.normal() as f32);
+        }
+        let t = DecisionTree::fit(&x, &y, 3, 6, 2, None, &mut rng);
+        assert!(accuracy(&t.predict(&x), &y) > 0.9);
+    }
+}

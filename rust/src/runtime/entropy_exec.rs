@@ -1,0 +1,151 @@
+//! Typed wrapper over the entropy artifacts: packs a data subset
+//! (code matrix + row/col index sets) into the fixed (N_PAD, M_PAD) tile
+//! with masks, executes on PJRT, and returns H(d).
+//!
+//! This is the XLA fitness backend for Gen-DST (`gendst::fitness`
+//! chooses between this and the native path; see DESIGN.md §7 for the
+//! CPU-vs-TPU trade-off).
+
+use anyhow::{ensure, Result};
+
+use crate::data::CodeMatrix;
+use crate::runtime::shapes::{B_BATCH, M_PAD, N_PAD};
+use crate::runtime::{arg_f32, arg_i32, to_vec_f32, XlaRuntime};
+
+/// Reusable packing buffers (avoid per-call allocation in the GA loop).
+pub struct EntropyExec<'rt> {
+    rt: &'rt XlaRuntime,
+    codes_buf: Vec<i32>,
+    rmask_buf: Vec<f32>,
+    cmask_buf: Vec<f32>,
+}
+
+impl<'rt> EntropyExec<'rt> {
+    pub fn new(rt: &'rt XlaRuntime) -> EntropyExec<'rt> {
+        EntropyExec {
+            rt,
+            codes_buf: vec![0; N_PAD * M_PAD],
+            rmask_buf: vec![0.0; N_PAD],
+            cmask_buf: vec![0.0; M_PAD],
+        }
+    }
+
+    fn pack_into(
+        codes: &CodeMatrix,
+        rows: &[u32],
+        cols: &[u32],
+        codes_buf: &mut [i32],
+        rmask_buf: &mut [f32],
+        cmask_buf: &mut [f32],
+    ) -> Result<()> {
+        ensure!(rows.len() <= N_PAD, "subset rows {} > N_PAD {N_PAD}", rows.len());
+        ensure!(cols.len() <= M_PAD, "subset cols {} > M_PAD {M_PAD}", cols.len());
+        codes_buf.fill(0);
+        rmask_buf.fill(0.0);
+        cmask_buf.fill(0.0);
+        for (j, &c) in cols.iter().enumerate() {
+            let col = codes.column(c as usize);
+            for (i, &r) in rows.iter().enumerate() {
+                // row-major (N_PAD, M_PAD) tile
+                codes_buf[i * M_PAD + j] = col[r as usize] as i32;
+            }
+        }
+        rmask_buf[..rows.len()].fill(1.0);
+        cmask_buf[..cols.len()].fill(1.0);
+        Ok(())
+    }
+
+    /// H(D[rows, cols]) through the `entropy_subset` artifact.
+    pub fn subset_entropy(
+        &mut self,
+        codes: &CodeMatrix,
+        rows: &[u32],
+        cols: &[u32],
+    ) -> Result<f64> {
+        Self::pack_into(
+            codes,
+            rows,
+            cols,
+            &mut self.codes_buf,
+            &mut self.rmask_buf,
+            &mut self.cmask_buf,
+        )?;
+        let out = self.rt.execute(
+            "entropy_subset",
+            &[
+                arg_i32(&self.codes_buf, &[N_PAD as i64, M_PAD as i64])?,
+                arg_f32(&self.rmask_buf, &[N_PAD as i64])?,
+                arg_f32(&self.cmask_buf, &[M_PAD as i64])?,
+            ],
+        )?;
+        Ok(to_vec_f32(&out[0])?[0] as f64)
+    }
+
+    /// Batched fitness: entropies for up to B_BATCH subsets in one call.
+    /// Returns one H per (rows, cols) pair, in order.
+    pub fn batch_entropy(
+        &mut self,
+        codes: &CodeMatrix,
+        subsets: &[(&[u32], &[u32])],
+    ) -> Result<Vec<f64>> {
+        ensure!(!subsets.is_empty(), "empty batch");
+        let mut out = Vec::with_capacity(subsets.len());
+        for chunk in subsets.chunks(B_BATCH) {
+            let mut codes_b = vec![0i32; B_BATCH * N_PAD * M_PAD];
+            let mut rmask_b = vec![0.0f32; B_BATCH * N_PAD];
+            let mut cmask_b = vec![0.0f32; B_BATCH * M_PAD];
+            for (b, (rows, cols)) in chunk.iter().enumerate() {
+                Self::pack_into(
+                    codes,
+                    rows,
+                    cols,
+                    &mut codes_b[b * N_PAD * M_PAD..(b + 1) * N_PAD * M_PAD],
+                    &mut rmask_b[b * N_PAD..(b + 1) * N_PAD],
+                    &mut cmask_b[b * M_PAD..(b + 1) * M_PAD],
+                )?;
+            }
+            // padded batch slots keep zero masks -> defined H=0, ignored
+            for b in chunk.len()..B_BATCH {
+                rmask_b[b * N_PAD] = 1.0;
+                cmask_b[b * M_PAD] = 1.0;
+            }
+            let res = self.rt.execute(
+                "entropy_batch",
+                &[
+                    arg_i32(&codes_b, &[B_BATCH as i64, N_PAD as i64, M_PAD as i64])?,
+                    arg_f32(&rmask_b, &[B_BATCH as i64, N_PAD as i64])?,
+                    arg_f32(&cmask_b, &[B_BATCH as i64, M_PAD as i64])?,
+                ],
+            )?;
+            let h = to_vec_f32(&res[0])?;
+            out.extend(h[..chunk.len()].iter().map(|&x| x as f64));
+        }
+        Ok(out)
+    }
+
+    /// Per-column entropies of up to N_PAD sampled rows (profile of D).
+    pub fn column_entropies(
+        &mut self,
+        codes: &CodeMatrix,
+        rows: &[u32],
+        cols: &[u32],
+    ) -> Result<Vec<f64>> {
+        Self::pack_into(
+            codes,
+            rows,
+            cols,
+            &mut self.codes_buf,
+            &mut self.rmask_buf,
+            &mut self.cmask_buf,
+        )?;
+        let out = self.rt.execute(
+            "entropy_columns",
+            &[
+                arg_i32(&self.codes_buf, &[N_PAD as i64, M_PAD as i64])?,
+                arg_f32(&self.rmask_buf, &[N_PAD as i64])?,
+            ],
+        )?;
+        let h = to_vec_f32(&out[0])?;
+        Ok(h[..cols.len()].iter().map(|&x| x as f64).collect())
+    }
+}

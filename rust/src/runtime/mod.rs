@@ -1,0 +1,181 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`), compile once per process-thread, execute from
+//! the rust hot path. Python never runs here.
+//!
+//! Threading: the `xla` crate's `PjRtClient` wraps an `Rc`, so a runtime
+//! instance is thread-confined. Worker threads that need XLA each create
+//! (or lazily clone-compile) their own `XlaRuntime` via `thread_current()`;
+//! compiled executables are cached per thread. For our workloads the
+//! compile cost (~tens of ms per small module) amortizes over thousands
+//! of `execute` calls.
+
+pub mod entropy_exec;
+pub mod models_exec;
+pub mod shapes;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A thread-confined PJRT CPU runtime with an executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Create a runtime reading artifacts from `dir`.
+    pub fn new<P: AsRef<Path>>(dir: P) -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            exes: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact directory: `$SUBSTRAT_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root (found by walking up from cwd).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("SUBSTRAT_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.txt").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    /// Load + compile an artifact by name (e.g. "entropy_subset"),
+    /// caching the compiled executable.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?} (run `make artifacts`)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact: returns the decomposed output tuple.
+    /// (All artifacts are lowered with return_tuple=True.)
+    ///
+    /// Inputs go through `buffer_from_host_buffer` + `execute_b` rather
+    /// than `execute::<Literal>`: the crate's literal-based execute path
+    /// leaks the device buffers it creates internally (~input size per
+    /// call — found empirically; see EXPERIMENTS.md §Perf), while
+    /// `PjRtBuffer`s we create ourselves are freed on drop.
+    pub fn execute(&self, name: &str, inputs: &[ArgView]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|a| match a {
+                ArgView::F32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(data, dims, None)
+                    .map_err(|e| anyhow!("uploading f32 input {dims:?}: {e:?}")),
+                ArgView::I32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer::<i32>(data, dims, None)
+                    .map_err(|e| anyhow!("uploading i32 input {dims:?}: {e:?}")),
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .with_context(|| format!("executing artifact {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("decomposing {name} output: {e:?}"))
+    }
+
+    /// Artifact names available on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter_map(|e| {
+                e.file_name()
+                    .to_str()
+                    .and_then(|n| n.strip_suffix(".hlo.txt").map(str::to_string))
+            })
+            .collect();
+        names.sort();
+        names
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+thread_local! {
+    static TL_RUNTIME: RefCell<Option<Rc<XlaRuntime>>> = const { RefCell::new(None) };
+}
+
+/// The calling thread's shared runtime (created on first use with the
+/// default artifact directory).
+pub fn thread_current() -> Result<Rc<XlaRuntime>> {
+    TL_RUNTIME.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some(rt) = slot.as_ref() {
+            return Ok(rt.clone());
+        }
+        let rt = Rc::new(XlaRuntime::new(XlaRuntime::default_dir())?);
+        *slot = Some(rt.clone());
+        Ok(rt)
+    })
+}
+
+/// A borrowed typed input for one artifact execution (uploaded as a
+/// device buffer; no intermediate Literal allocation).
+pub enum ArgView<'a> {
+    F32(&'a [f32], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+}
+
+/// f32 input view with shape checking.
+pub fn arg_f32<'a>(data: &'a [f32], dims: &[i64]) -> Result<ArgView<'a>> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "arg_f32: {} != {dims:?}", data.len());
+    Ok(ArgView::F32(data, dims.iter().map(|&d| d as usize).collect()))
+}
+
+/// i32 input view with shape checking.
+pub fn arg_i32<'a>(data: &'a [i32], dims: &[i64]) -> Result<ArgView<'a>> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "arg_i32: {} != {dims:?}", data.len());
+    Ok(ArgView::I32(data, dims.iter().map(|&d| d as usize).collect()))
+}
+
+/// Unpack a literal into a Vec<f32>.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Unpack a literal into a Vec<i32>.
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+}

@@ -1,0 +1,305 @@
+//! Typed wrappers over the model-training artifacts: logistic regression
+//! and MLP train/predict steps, and the k-means Lloyd step. These are the
+//! L2 graphs the model zoo's XLA-backed members call per mini-batch.
+//!
+//! Padding contract (DESIGN.md §6): features zero-padded to F_PAD,
+//! classes to C_PAD with a {0,1} class mask (padded logits get -1e9),
+//! rows to BATCH with a {0,1} sample mask.
+
+use anyhow::{ensure, Result};
+
+use crate::data::Matrix;
+use crate::runtime::shapes::{
+    BATCH, C_PAD, EPOCH_TILES, F_PAD, HIDDEN, KM_DIM, KM_K, KM_POINTS,
+};
+use crate::runtime::{arg_f32, to_vec_f32, to_vec_i32, XlaRuntime};
+
+/// Logistic-regression parameters (padded shapes).
+#[derive(Debug, Clone)]
+pub struct LogregParams {
+    pub w: Vec<f32>, // (F_PAD, C_PAD) row-major
+    pub b: Vec<f32>, // (C_PAD,)
+}
+
+impl LogregParams {
+    pub fn zeros() -> LogregParams {
+        LogregParams {
+            w: vec![0.0; F_PAD * C_PAD],
+            b: vec![0.0; C_PAD],
+        }
+    }
+}
+
+/// MLP parameters (padded shapes).
+#[derive(Debug, Clone)]
+pub struct MlpParams {
+    pub w1: Vec<f32>, // (F_PAD, HIDDEN)
+    pub b1: Vec<f32>, // (HIDDEN,)
+    pub w2: Vec<f32>, // (HIDDEN, C_PAD)
+    pub b2: Vec<f32>, // (C_PAD,)
+}
+
+impl MlpParams {
+    /// Small random init (He-ish scale for tanh).
+    pub fn init(rng: &mut crate::util::rng::Rng) -> MlpParams {
+        let s1 = (1.0 / F_PAD as f64).sqrt();
+        let s2 = (1.0 / HIDDEN as f64).sqrt();
+        MlpParams {
+            w1: (0..F_PAD * HIDDEN)
+                .map(|_| (rng.normal() * s1) as f32)
+                .collect(),
+            b1: vec![0.0; HIDDEN],
+            w2: (0..HIDDEN * C_PAD)
+                .map(|_| (rng.normal() * s2) as f32)
+                .collect(),
+            b2: vec![0.0; C_PAD],
+        }
+    }
+}
+
+/// One padded training batch: features, one-hot labels, masks.
+pub struct PackedBatch {
+    pub x: Vec<f32>,     // (BATCH, F_PAD)
+    pub yoh: Vec<f32>,   // (BATCH, C_PAD)
+    pub smask: Vec<f32>, // (BATCH,)
+}
+
+/// Pack rows `idx` of (x, y) into a padded batch. `n_cols <= F_PAD`.
+pub fn pack_batch(x: &Matrix, y: &[u32], idx: &[usize]) -> Result<PackedBatch> {
+    ensure!(x.cols <= F_PAD, "features {} > F_PAD {F_PAD}", x.cols);
+    ensure!(idx.len() <= BATCH, "batch {} > BATCH {BATCH}", idx.len());
+    let mut xb = vec![0.0f32; BATCH * F_PAD];
+    let mut yoh = vec![0.0f32; BATCH * C_PAD];
+    let mut smask = vec![0.0f32; BATCH];
+    for (i, &r) in idx.iter().enumerate() {
+        xb[i * F_PAD..i * F_PAD + x.cols].copy_from_slice(x.row(r));
+        let cls = (y[r] as usize).min(C_PAD - 1);
+        yoh[i * C_PAD + cls] = 1.0;
+        smask[i] = 1.0;
+    }
+    Ok(PackedBatch { x: xb, yoh, smask })
+}
+
+/// Class mask with the first `n_classes` slots active.
+pub fn class_mask(n_classes: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; C_PAD];
+    m[..n_classes.min(C_PAD)].fill(1.0);
+    m
+}
+
+/// A padded epoch tile-stack: EPOCH_TILES consecutive mini-batches fed to
+/// one `*_train_epoch` call. Unused tiles keep zero sample masks (no-op
+/// steps inside the scan).
+pub struct PackedEpoch {
+    pub x: Vec<f32>,     // (EPOCH_TILES, BATCH, F_PAD)
+    pub yoh: Vec<f32>,   // (EPOCH_TILES, BATCH, C_PAD)
+    pub smask: Vec<f32>, // (EPOCH_TILES, BATCH)
+}
+
+/// Pack up to EPOCH_TILES*BATCH row indices into one epoch stack.
+pub fn pack_epoch(x: &Matrix, y: &[u32], idx: &[usize]) -> Result<PackedEpoch> {
+    ensure!(x.cols <= F_PAD, "features {} > F_PAD {F_PAD}", x.cols);
+    ensure!(
+        idx.len() <= EPOCH_TILES * BATCH,
+        "epoch chunk {} > {}",
+        idx.len(),
+        EPOCH_TILES * BATCH
+    );
+    let mut xb = vec![0.0f32; EPOCH_TILES * BATCH * F_PAD];
+    let mut yoh = vec![0.0f32; EPOCH_TILES * BATCH * C_PAD];
+    let mut smask = vec![0.0f32; EPOCH_TILES * BATCH];
+    for (i, &r) in idx.iter().enumerate() {
+        xb[i * F_PAD..i * F_PAD + x.cols].copy_from_slice(x.row(r));
+        let cls = (y[r] as usize).min(C_PAD - 1);
+        yoh[i * C_PAD + cls] = 1.0;
+        smask[i] = 1.0;
+    }
+    Ok(PackedEpoch { x: xb, yoh, smask })
+}
+
+pub struct ModelsExec<'rt> {
+    rt: &'rt XlaRuntime,
+}
+
+impl<'rt> ModelsExec<'rt> {
+    pub fn new(rt: &'rt XlaRuntime) -> ModelsExec<'rt> {
+        ModelsExec { rt }
+    }
+
+    /// One SGD step; returns the loss. Parameters are updated in place.
+    pub fn logreg_step(
+        &self,
+        params: &mut LogregParams,
+        batch: &PackedBatch,
+        cmask: &[f32],
+        lr: f32,
+        l2: f32,
+    ) -> Result<f32> {
+        let out = self.rt.execute(
+            "logreg_train_step",
+            &[
+                arg_f32(&batch.x, &[BATCH as i64, F_PAD as i64])?,
+                arg_f32(&batch.yoh, &[BATCH as i64, C_PAD as i64])?,
+                arg_f32(&batch.smask, &[BATCH as i64])?,
+                arg_f32(cmask, &[C_PAD as i64])?,
+                arg_f32(&params.w, &[F_PAD as i64, C_PAD as i64])?,
+                arg_f32(&params.b, &[C_PAD as i64])?,
+                arg_f32(&[lr], &[])?,
+                arg_f32(&[l2], &[])?,
+            ],
+        )?;
+        params.w = to_vec_f32(&out[0])?;
+        params.b = to_vec_f32(&out[1])?;
+        Ok(to_vec_f32(&out[2])?[0])
+    }
+
+    /// EPOCH_TILES SGD steps in one PJRT call (see `pack_epoch`).
+    pub fn logreg_epoch(
+        &self,
+        params: &mut LogregParams,
+        epoch: &PackedEpoch,
+        cmask: &[f32],
+        lr: f32,
+        l2: f32,
+    ) -> Result<f32> {
+        let (t, b) = (EPOCH_TILES as i64, BATCH as i64);
+        let out = self.rt.execute(
+            "logreg_train_epoch",
+            &[
+                arg_f32(&epoch.x, &[t, b, F_PAD as i64])?,
+                arg_f32(&epoch.yoh, &[t, b, C_PAD as i64])?,
+                arg_f32(&epoch.smask, &[t, b])?,
+                arg_f32(cmask, &[C_PAD as i64])?,
+                arg_f32(&params.w, &[F_PAD as i64, C_PAD as i64])?,
+                arg_f32(&params.b, &[C_PAD as i64])?,
+                arg_f32(&[lr], &[])?,
+                arg_f32(&[l2], &[])?,
+            ],
+        )?;
+        params.w = to_vec_f32(&out[0])?;
+        params.b = to_vec_f32(&out[1])?;
+        Ok(to_vec_f32(&out[2])?[0])
+    }
+
+    /// Masked logits for a padded batch: (BATCH, C_PAD) row-major.
+    pub fn logreg_predict(
+        &self,
+        params: &LogregParams,
+        batch_x: &[f32],
+        cmask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let out = self.rt.execute(
+            "logreg_predict",
+            &[
+                arg_f32(batch_x, &[BATCH as i64, F_PAD as i64])?,
+                arg_f32(&params.w, &[F_PAD as i64, C_PAD as i64])?,
+                arg_f32(&params.b, &[C_PAD as i64])?,
+                arg_f32(cmask, &[C_PAD as i64])?,
+            ],
+        )?;
+        to_vec_f32(&out[0])
+    }
+
+    /// One SGD step for the MLP; returns the loss.
+    pub fn mlp_step(
+        &self,
+        params: &mut MlpParams,
+        batch: &PackedBatch,
+        cmask: &[f32],
+        lr: f32,
+        l2: f32,
+    ) -> Result<f32> {
+        let out = self.rt.execute(
+            "mlp_train_step",
+            &[
+                arg_f32(&batch.x, &[BATCH as i64, F_PAD as i64])?,
+                arg_f32(&batch.yoh, &[BATCH as i64, C_PAD as i64])?,
+                arg_f32(&batch.smask, &[BATCH as i64])?,
+                arg_f32(cmask, &[C_PAD as i64])?,
+                arg_f32(&params.w1, &[F_PAD as i64, HIDDEN as i64])?,
+                arg_f32(&params.b1, &[HIDDEN as i64])?,
+                arg_f32(&params.w2, &[HIDDEN as i64, C_PAD as i64])?,
+                arg_f32(&params.b2, &[C_PAD as i64])?,
+                arg_f32(&[lr], &[])?,
+                arg_f32(&[l2], &[])?,
+            ],
+        )?;
+        params.w1 = to_vec_f32(&out[0])?;
+        params.b1 = to_vec_f32(&out[1])?;
+        params.w2 = to_vec_f32(&out[2])?;
+        params.b2 = to_vec_f32(&out[3])?;
+        Ok(to_vec_f32(&out[4])?[0])
+    }
+
+    /// MLP twin of `logreg_epoch`.
+    pub fn mlp_epoch(
+        &self,
+        params: &mut MlpParams,
+        epoch: &PackedEpoch,
+        cmask: &[f32],
+        lr: f32,
+        l2: f32,
+    ) -> Result<f32> {
+        let (t, b) = (EPOCH_TILES as i64, BATCH as i64);
+        let out = self.rt.execute(
+            "mlp_train_epoch",
+            &[
+                arg_f32(&epoch.x, &[t, b, F_PAD as i64])?,
+                arg_f32(&epoch.yoh, &[t, b, C_PAD as i64])?,
+                arg_f32(&epoch.smask, &[t, b])?,
+                arg_f32(cmask, &[C_PAD as i64])?,
+                arg_f32(&params.w1, &[F_PAD as i64, HIDDEN as i64])?,
+                arg_f32(&params.b1, &[HIDDEN as i64])?,
+                arg_f32(&params.w2, &[HIDDEN as i64, C_PAD as i64])?,
+                arg_f32(&params.b2, &[C_PAD as i64])?,
+                arg_f32(&[lr], &[])?,
+                arg_f32(&[l2], &[])?,
+            ],
+        )?;
+        params.w1 = to_vec_f32(&out[0])?;
+        params.b1 = to_vec_f32(&out[1])?;
+        params.w2 = to_vec_f32(&out[2])?;
+        params.b2 = to_vec_f32(&out[3])?;
+        Ok(to_vec_f32(&out[4])?[0])
+    }
+
+    /// Masked MLP logits: (BATCH, C_PAD) row-major.
+    pub fn mlp_predict(
+        &self,
+        params: &MlpParams,
+        batch_x: &[f32],
+        cmask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let out = self.rt.execute(
+            "mlp_predict",
+            &[
+                arg_f32(batch_x, &[BATCH as i64, F_PAD as i64])?,
+                arg_f32(&params.w1, &[F_PAD as i64, HIDDEN as i64])?,
+                arg_f32(&params.b1, &[HIDDEN as i64])?,
+                arg_f32(&params.w2, &[HIDDEN as i64, C_PAD as i64])?,
+                arg_f32(&params.b2, &[C_PAD as i64])?,
+                arg_f32(cmask, &[C_PAD as i64])?,
+            ],
+        )?;
+        to_vec_f32(&out[0])
+    }
+
+    /// One Lloyd iteration on a padded point tile. Returns (new_centroids,
+    /// assignments). Inactive points (pmask=0) never pull centroids.
+    pub fn kmeans_step(
+        &self,
+        points: &[f32],    // (KM_POINTS, KM_DIM)
+        pmask: &[f32],     // (KM_POINTS,)
+        centroids: &[f32], // (KM_K, KM_DIM)
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let out = self.rt.execute(
+            "kmeans_step",
+            &[
+                arg_f32(points, &[KM_POINTS as i64, KM_DIM as i64])?,
+                arg_f32(pmask, &[KM_POINTS as i64])?,
+                arg_f32(centroids, &[KM_K as i64, KM_DIM as i64])?,
+            ],
+        )?;
+        Ok((to_vec_f32(&out[0])?, to_vec_i32(&out[1])?))
+    }
+}

@@ -1,0 +1,52 @@
+//! Mirror of `python/compile/shapes.py` — the fixed padded shapes every
+//! AOT artifact was compiled for. KEEP IN SYNC with the python side; the
+//! integration test `artifact_shapes_match_manifest` cross-checks these
+//! constants against `artifacts/manifest.txt` at test time.
+
+/// max subset rows per entropy tile (sqrt(1M) rounded up to a tile)
+pub const N_PAD: usize = 1024;
+/// max subset columns per entropy tile (0.25 * 123 rounded up)
+pub const M_PAD: usize = 32;
+/// per-column value codes (quantile binning at ingest)
+pub const K_BINS: usize = 64;
+/// GA candidates per batched entropy call
+pub const B_BATCH: usize = 16;
+
+/// feature dim after padding (widest dataset: 123 columns)
+pub const F_PAD: usize = 128;
+/// class dim after padding (max classes in Table 2: 10)
+pub const C_PAD: usize = 16;
+/// training mini-batch rows
+pub const BATCH: usize = 256;
+/// MLP hidden width
+pub const HIDDEN: usize = 64;
+/// mini-batches scanned inside one train_epoch call (one PJRT call
+/// trains EPOCH_TILES*BATCH = 4096 rows — see §Perf)
+pub const EPOCH_TILES: usize = 16;
+
+/// k-means tile: points per call / point dim / max centroids
+pub const KM_POINTS: usize = 1024;
+pub const KM_DIM: usize = 32;
+pub const KM_K: usize = 32;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_bins_matches_binning_substrate() {
+        assert_eq!(K_BINS, crate::data::binning::K_BINS);
+    }
+
+    #[test]
+    fn entropy_tile_covers_every_table2_dataset() {
+        for info in crate::data::registry::table2() {
+            let n = (info.n_rows as f64).sqrt().ceil() as usize;
+            let m = (0.25 * (info.n_cols as f64)).ceil() as usize;
+            assert!(n <= N_PAD, "{}: sqrt(N)={n} > N_PAD", info.symbol);
+            assert!(m <= M_PAD, "{}: 0.25M={m} > M_PAD", info.symbol);
+            assert!(info.n_cols - 1 <= F_PAD, "{} features", info.symbol);
+            assert!(info.n_classes <= C_PAD, "{} classes", info.symbol);
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! SubStrat orchestrator (paper §1.1 + §3.4) — the three-step strategy:
+//!
+//! 1. find a measure-preserving data subset `d` (Gen-DST by default; any
+//!    [`SubsetStrategy`] can be plugged in, which is how every baseline
+//!    gets the identical treatment);
+//! 2. run the AutoML tool on the subset: `A(d, y) -> M'`;
+//! 3. fine-tune: re-run a restricted, much shorter AutoML on the full
+//!    dataset, considering only the model family of `M'`, warm-started
+//!    from `M'` itself, producing `M_sub`.
+//!
+//! `SubStrat-NF` (paper category F) is step 3 switched off.
+
+use crate::automl::space::{ConfigSpace, PipelineConfig};
+use crate::automl::{run_automl, AutoMlConfig, AutoMlResult};
+use crate::baselines::{StrategyContext, StrategyOutcome, SubsetStrategy};
+use crate::data::{CodeMatrix, Frame};
+use crate::gendst::default_dst_size;
+use crate::measures::DatasetMeasure;
+use crate::util::timer::Stopwatch;
+
+/// SubStrat knobs on top of an AutoML configuration.
+#[derive(Clone)]
+pub struct SubStratConfig {
+    /// subset shape; None = the paper default (sqrt(N), 0.25 M)
+    pub dst_size: Option<(usize, usize)>,
+    /// run the restricted fine-tune pass (false = SubStrat-NF)
+    pub fine_tune: bool,
+    /// fine-tune budget as a fraction of the full AutoML eval budget
+    pub fine_tune_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for SubStratConfig {
+    fn default() -> Self {
+        SubStratConfig {
+            dst_size: None,
+            fine_tune: true,
+            fine_tune_frac: 0.15,
+            seed: 0,
+        }
+    }
+}
+
+/// Full cost/quality accounting of one SubStrat run.
+pub struct SubStratRun {
+    /// the subset used
+    pub outcome: StrategyOutcome,
+    /// intermediate AutoML on the subset (M')
+    pub automl_sub: AutoMlResult,
+    /// restricted fine-tune on the full data (None for SubStrat-NF)
+    pub fine_tune: Option<AutoMlResult>,
+    /// the final configuration M_sub
+    pub final_config: PipelineConfig,
+    /// end-to-end wall clock (subset search + AutoML + fine-tune)
+    pub total_time_s: f64,
+}
+
+/// Run the SubStrat flow with an arbitrary subset strategy.
+///
+/// `automl_cfg` describes the *full* AutoML tool `A` (searcher, budget,
+/// CV); SubStrat derives the subset and fine-tune runs from it.
+pub fn run_substrat(
+    frame: &Frame,
+    codes: &CodeMatrix,
+    measure: &dyn DatasetMeasure,
+    strategy: &dyn SubsetStrategy,
+    automl_cfg: &AutoMlConfig,
+    cfg: &SubStratConfig,
+) -> SubStratRun {
+    let sw = Stopwatch::start();
+    let (n, m) = cfg
+        .dst_size
+        .unwrap_or_else(|| default_dst_size(frame.n_rows, frame.n_cols()));
+
+    // step 1: the data subset
+    let ctx = StrategyContext {
+        frame,
+        codes,
+        measure,
+        n,
+        m,
+        seed: cfg.seed,
+    };
+    let outcome = strategy.find(&ctx);
+    let subset = frame.subset(&outcome.dst.rows, &outcome.dst.cols);
+
+    // step 2: AutoML on the subset -> M'
+    let mut sub_cfg = automl_cfg.clone();
+    sub_cfg.seed = automl_cfg.seed ^ 0x5b;
+    let automl_sub = run_automl(&subset, &sub_cfg);
+
+    // step 3: restricted fine-tune on the full dataset -> M_sub
+    let fine_tune = if cfg.fine_tune {
+        let mut ft_cfg = automl_cfg.clone();
+        ft_cfg.space = ConfigSpace::restricted_to(automl_sub.best.model.kind());
+        ft_cfg.max_evals = ((automl_cfg.max_evals as f64 * cfg.fine_tune_frac).round()
+            as usize)
+            .max(1);
+        ft_cfg.warm_start = vec![automl_sub.best.clone()];
+        ft_cfg.seed = automl_cfg.seed ^ 0xf1;
+        Some(run_automl(frame, &ft_cfg))
+    } else {
+        None
+    };
+
+    let final_config = fine_tune
+        .as_ref()
+        .map(|ft| ft.best.clone())
+        .unwrap_or_else(|| automl_sub.best.clone());
+
+    SubStratRun {
+        outcome,
+        automl_sub,
+        fine_tune,
+        final_config,
+        total_time_s: sw.elapsed_s(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automl::SearcherKind;
+    use crate::baselines;
+    use crate::data::registry;
+    use crate::measures::entropy::EntropyMeasure;
+
+    fn setup() -> (Frame, CodeMatrix) {
+        let f = registry::load("D2", 0.04, 17);
+        let codes = CodeMatrix::from_frame(&f);
+        (f, codes)
+    }
+
+    #[test]
+    fn full_flow_with_fine_tune() {
+        let (f, codes) = setup();
+        let strategy = baselines::by_name("gendst");
+        let automl = AutoMlConfig::new(SearcherKind::Random, 6, 1);
+        let cfg = SubStratConfig {
+            fine_tune_frac: 0.5,
+            ..Default::default()
+        };
+        let run = run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &cfg);
+        // fine-tune restricted to M' family and warm-started from it
+        let ft = run.fine_tune.as_ref().unwrap();
+        assert_eq!(ft.history[0].0, run.automl_sub.best);
+        for (c, _) in &ft.history {
+            assert_eq!(c.model.kind(), run.automl_sub.best.model.kind());
+        }
+        assert_eq!(ft.evals, 3);
+        assert_eq!(run.final_config, ft.best);
+        assert!(run.total_time_s > 0.0);
+    }
+
+    #[test]
+    fn nf_variant_skips_fine_tune() {
+        let (f, codes) = setup();
+        let strategy = baselines::by_name("gendst");
+        let automl = AutoMlConfig::new(SearcherKind::Random, 4, 2);
+        let cfg = SubStratConfig {
+            fine_tune: false,
+            ..Default::default()
+        };
+        let run = run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &cfg);
+        assert!(run.fine_tune.is_none());
+        assert_eq!(run.final_config, run.automl_sub.best);
+    }
+
+    #[test]
+    fn custom_dst_size_is_used() {
+        let (f, codes) = setup();
+        let strategy = baselines::by_name("mc-100");
+        let automl = AutoMlConfig::new(SearcherKind::Random, 3, 3);
+        let cfg = SubStratConfig {
+            dst_size: Some((25, 3)),
+            fine_tune: false,
+            ..Default::default()
+        };
+        let run = run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &cfg);
+        assert_eq!(run.outcome.dst.rows.len(), 25);
+        assert_eq!(run.outcome.dst.cols.len(), 3);
+    }
+
+    #[test]
+    fn works_with_baseline_strategies() {
+        let (f, codes) = setup();
+        for name in ["ig-rand", "mab"] {
+            let strategy = baselines::by_name(name);
+            let automl = AutoMlConfig::new(SearcherKind::Random, 3, 4);
+            let cfg = SubStratConfig {
+                fine_tune: true,
+                fine_tune_frac: 0.4,
+                ..Default::default()
+            };
+            let run =
+                run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &cfg);
+            assert!(run.fine_tune.is_some(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Criterion-like micro/throughput benchmark harness (criterion is not
+//! available offline). Each `cargo bench` target is a `harness = false`
+//! binary that drives this: auto-calibrated iteration counts, warmup,
+//! mean ± std per iteration, and a markdown/CSV report.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    /// optional items/second throughput if `items_per_iter` was set
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner: collects results, prints as it goes.
+pub struct Bench {
+    pub results: Vec<BenchResult>,
+    /// target measurement time per benchmark
+    pub target: Duration,
+    /// number of measured samples
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            results: Vec::new(),
+            target: Duration::from_secs(2),
+            samples: 10,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        let mut b = Bench::default();
+        // quick mode for CI / smoke runs
+        if std::env::var("BENCH_QUICK").is_ok() {
+            b.target = Duration::from_millis(200);
+            b.samples = 5;
+        }
+        b
+    }
+
+    /// Benchmark `f`, auto-calibrating the per-sample iteration count so a
+    /// sample takes ~target/samples. `f` should include its own per-iter
+    /// setup only if that setup is part of the measured contract.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Like `bench`, additionally reporting items/second throughput.
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items_per_iter: usize,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_with_items(name, Some(items_per_iter), &mut f)
+    }
+
+    fn bench_with_items(
+        &mut self,
+        name: &str,
+        items: Option<usize>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // calibrate: run once, estimate, pick iters per sample
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(20));
+        let per_sample = self.target / self.samples as u32;
+        let iters = ((per_sample.as_secs_f64() / once.as_secs_f64()).ceil()
+            as usize)
+            .clamp(1, 10_000_000);
+
+        // warmup
+        for _ in 0..(iters / 10).max(1) {
+            f();
+        }
+
+        let mut sample_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let mean_ns = stats::mean(&sample_ns);
+        let std_ns = stats::std(&sample_ns);
+        let throughput = items.map(|n| n as f64 / (mean_ns / 1e9));
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns,
+            std_ns,
+            throughput,
+        };
+        let tp = throughput
+            .map(|t| format!("  ({t:.0} items/s)"))
+            .unwrap_or_default();
+        println!(
+            "bench {:<44} {:>12} ± {:<10} x{}{}",
+            r.name,
+            fmt_ns(mean_ns),
+            fmt_ns(std_ns),
+            iters,
+            tp
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Render all results as a markdown table (pasted into EXPERIMENTS.md).
+    pub fn markdown(&self) -> String {
+        let mut out = String::from("| bench | mean | std | throughput |\n|---|---|---|---|\n");
+        for r in &self.results {
+            let tp = r
+                .throughput
+                .map(|t| format!("{t:.0}/s"))
+                .unwrap_or_else(|| "-".into());
+            out.push_str(&format!(
+                "| {} | {} | {} | {} |\n",
+                r.name,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.std_ns),
+                tp
+            ));
+        }
+        out
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (std::hint::black_box stabilized re-export for call sites).
+pub use std::hint::black_box;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench {
+            target: Duration::from_millis(50),
+            samples: 3,
+            results: vec![],
+        };
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let r = &b.results[0];
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn markdown_contains_rows() {
+        let mut b = Bench {
+            target: Duration::from_millis(20),
+            samples: 2,
+            results: vec![],
+        };
+        b.bench_throughput("tiny", 10, || {
+            black_box(1 + 1);
+        });
+        let md = b.markdown();
+        assert!(md.contains("tiny"));
+        assert!(md.contains("/s"));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal CLI argument parser (no `clap` offline): one subcommand,
+//! `--key value` options, and bare `--flag` switches.
+//!
+//! Grammar: `substrat <subcommand> [--key value | --flag]...`
+//! A token starting with `--` is a flag when the next token is absent or
+//! itself starts with `--`; otherwise it consumes the next token as its
+//! value. Everything else is a positional.
+
+use std::collections::{HashMap, HashSet};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    options: HashMap<String, String>,
+    flags: HashSet<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let tokens: Vec<String> = raw.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len()
+                    && !tokens[i + 1].starts_with("--")
+                {
+                    out.options.insert(name.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string());
+                }
+            } else {
+                out.positionals.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positionals.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains(name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        match self.options.get(name) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")),
+            None => default,
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        match self.options.get(name) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")),
+            None => default,
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        match self.options.get(name) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")),
+            None => default,
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.options.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("exp table4 --scale 0.1 --reps 3 --quiet");
+        assert_eq!(a.subcommand(), Some("exp"));
+        assert_eq!(a.positionals[1], "table4");
+        assert_eq!(a.f64_or("scale", 1.0), 0.1);
+        assert_eq!(a.usize_or("reps", 5), 3);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("run --dataset=D3 --strategy substrat");
+        assert_eq!(a.str_opt("dataset"), Some("D3"));
+        assert_eq!(a.str_or("strategy", "x"), "substrat");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("bench --release");
+        assert!(a.flag("release"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.str_opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("exp --datasets D1,D2,D3");
+        assert_eq!(a.list_or("datasets", &[]), vec!["D1", "D2", "D3"]);
+        assert_eq!(a.list_or("missing", &["all"]), vec!["all"]);
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let a = parse("run");
+        assert_eq!(a.f64_or("scale", 1.0), 1.0);
+        assert_eq!(a.str_or("out", "results"), "results");
+    }
+}

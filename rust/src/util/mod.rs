@@ -1,0 +1,12 @@
+//! Offline substrates: everything a production crate would normally pull
+//! from crates.io but which is unavailable in this environment (see
+//! DESIGN.md §3.11). Each module documents the crate it stands in for.
+
+pub mod bench; // ~criterion
+pub mod cli; // ~clap
+pub mod pool; // ~rayon scoped parallel map
+pub mod prop; // ~proptest
+pub mod rng; // ~rand + rand_xoshiro
+pub mod stats;
+pub mod table; // ~csv + comfy-table
+pub mod timer;

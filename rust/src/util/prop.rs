@@ -1,0 +1,88 @@
+//! Tiny property-based testing harness (proptest is not available
+//! offline). A property is a closure over a seeded [`Rng`]; we run it for
+//! many seeds and, on failure, re-raise with the offending seed so the
+//! case can be replayed deterministically:
+//!
+//! ```ignore
+//! check_prop("selection keeps population size", 200, |rng| {
+//!     let pop = random_population(rng);
+//!     assert_eq!(select(&pop, rng).len(), pop.len());
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `property` for `cases` seeds (0..cases, each hashed through the
+/// RNG seeding); panics with the failing seed embedded in the message.
+pub fn check_prop<F>(name: &str, cases: u64, property: F)
+where
+    F: Fn(&mut Rng) + std::panic::RefUnwindSafe,
+{
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(0x5EED_0000 ^ seed);
+            property(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property {name:?} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single seed (use after a failure report).
+pub fn replay_prop<F>(seed: u64, property: F)
+where
+    F: Fn(&mut Rng),
+{
+    let mut rng = Rng::new(0x5EED_0000 ^ seed);
+    property(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_prop("u64_below in range", 100, |rng| {
+            let n = 1 + rng.u64_below(1000);
+            assert!(rng.u64_below(n) < n);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let caught = std::panic::catch_unwind(|| {
+            check_prop("always fails", 5, |_rng| {
+                panic!("intentional");
+            });
+        });
+        let msg = match caught {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed 0"), "got: {msg}");
+        assert!(msg.contains("intentional"), "got: {msg}");
+    }
+
+    #[test]
+    fn replay_reproduces_stream() {
+        use std::cell::RefCell;
+        let first: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+        replay_prop(42, |rng| {
+            *first.borrow_mut() = (0..4).map(|_| rng.next_u64()).collect();
+        });
+        replay_prop(42, |rng| {
+            let again: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
+            assert_eq!(again, *first.borrow());
+        });
+    }
+}

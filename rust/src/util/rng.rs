@@ -1,0 +1,287 @@
+//! Deterministic PRNG substrate: xoshiro256** seeded via splitmix64.
+//!
+//! No external `rand` crate is available offline, and the experiments need
+//! reproducible streams that can be forked per worker thread, so we carry
+//! our own. xoshiro256** passes BigCrush and is the same generator family
+//! `rand_xoshiro` ships.
+
+/// xoshiro256** generator with convenience sampling methods.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second gaussian from Box-Muller
+    gauss: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed the generator; any u64 (including 0) is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss: None }
+    }
+
+    /// Derive an independent stream (for worker threads / repeated runs).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    #[inline]
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.u64_below(n as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.u64_below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (second value cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(g) = self.gauss.take() {
+            return g;
+        }
+        let (u1, u2) = (self.f64().max(1e-300), self.f64());
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices from `[0, n)` (Floyd's algorithm), unsorted.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n, "sample_distinct: k={k} > n={n}");
+        let mut chosen: Vec<u32> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.usize_below(j + 1) as u32;
+            if chosen.contains(&t) {
+                chosen.push(j as u32);
+            } else {
+                chosen.push(t);
+            }
+        }
+        self.shuffle(&mut chosen);
+        chosen
+    }
+
+    /// Uniformly pick a reference from a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_below(xs.len())]
+    }
+
+    /// Sample an index proportionally to non-negative weights.
+    /// Falls back to uniform when all weights are ~0.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 1e-12 {
+            return self.usize_below(weights.len());
+        }
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn u64_below_in_range_and_covers() {
+        let mut rng = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = rng.u64_below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_in_unit_interval_mean_half() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..20000).map(|_| rng.f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f64> = (0..40000).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_in_range() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let n = 1 + rng.usize_below(500);
+            let k = 1 + rng.usize_below(n);
+            let mut s = rng.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            assert!(s.iter().all(|&x| (x as usize) < n));
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), k, "duplicates for n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn sample_distinct_full_range() {
+        let mut rng = Rng::new(9);
+        let mut s = rng.sample_distinct(10, 10);
+        s.sort_unstable();
+        assert_eq!(s, (0..10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn weighted_index_prefers_heavy() {
+        let mut rng = Rng::new(13);
+        let w = [0.0, 0.0, 10.0, 0.1];
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            counts[rng.weighted_index(&w)] += 1;
+        }
+        assert!(counts[2] > 1800, "{counts:?}");
+        assert_eq!(counts[0] + counts[1], 0);
+    }
+
+    #[test]
+    fn weighted_index_all_zero_uniform() {
+        let mut rng = Rng::new(17);
+        let w = [0.0; 4];
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            counts[rng.weighted_index(&w)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 800), "{counts:?}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(23);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut a = Rng::new(29);
+        let mut b = a.fork();
+        let xa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xa, xb);
+    }
+}

@@ -1,0 +1,192 @@
+//! Small statistics toolkit for the experiment harness: means, sample
+//! std, 95% confidence intervals, harmonic mean (the paper's grid-search
+//! objective for hyper-parameters), medians and percentiles.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation; 0.0 for n < 2.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Two-sided t critical value at 95% for `df` degrees of freedom
+/// (table lookup + asymptote; exact enough for error bars).
+fn t95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262,
+        2.228, 2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101,
+        2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052,
+        2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        return f64::NAN;
+    }
+    if df <= 30 {
+        TABLE[df - 1]
+    } else {
+        1.96 + 2.5 / df as f64 // smooth approach to the normal quantile
+    }
+}
+
+/// Half-width of the 95% confidence interval of the mean (paper Fig. 5's
+/// error bars). 0.0 for fewer than two samples.
+pub fn ci95(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    t95(xs.len() - 1) * std(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Harmonic mean of non-negative values (0 if any value is ~0); used to
+/// balance time-reduction vs relative-accuracy in configuration search,
+/// as the paper's grid search does (§4.2).
+pub fn harmonic_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 1e-12) {
+        return 0.0;
+    }
+    xs.len() as f64 / xs.iter().map(|x| 1.0 / x).sum::<f64>()
+}
+
+/// p-th percentile (0..=100) by linear interpolation; NaN when empty.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median shortcut.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Index of the maximum value (first on ties); None when empty.
+pub fn argmax(xs: &[f64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if best.is_none() || x > xs[best.unwrap()] {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+/// Index of the minimum value (first on ties); None when empty.
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if best.is_none() || x < xs[best.unwrap()] {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+/// Pearson correlation of two equal-length slices; 0 on degenerate input.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let (mx, my) = (mean(xs), mean(ys));
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..xs.len() {
+        let (a, b) = (xs[i] - mx, ys[i] - my);
+        num += a * b;
+        dx += a * a;
+        dy += b * b;
+    }
+    if dx <= 1e-24 || dy <= 1e-24 {
+        return 0.0;
+    }
+    num / (dx.sqrt() * dy.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[1.0]), 0.0);
+        assert_eq!(ci95(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn ci95_matches_hand_computation() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        // std = sqrt(2.5), t(4) = 2.776
+        let expect = 2.776 * (2.5f64).sqrt() / (5.0f64).sqrt();
+        assert!((ci95(&xs) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn t95_monotone_to_normal() {
+        assert!(t95(1) > t95(5));
+        assert!(t95(5) > t95(30));
+        assert!((t95(10_000) - 1.96).abs() < 0.01);
+    }
+
+    #[test]
+    fn harmonic_mean_basic() {
+        assert!((harmonic_mean(&[1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((harmonic_mean(&[0.5, 1.0]) - (2.0 / 3.0)).abs() < 1e-12);
+        assert_eq!(harmonic_mean(&[0.0, 1.0]), 0.0);
+        assert!(harmonic_mean(&[0.9, 0.9]) > harmonic_mean(&[0.5, 1.0]));
+    }
+
+    #[test]
+    fn percentile_and_median() {
+        let xs = [3.0, 1.0, 2.0, 4.0];
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_argmin() {
+        let xs = [1.0, 5.0, 3.0, 5.0];
+        assert_eq!(argmax(&xs), Some(1));
+        assert_eq!(argmin(&xs), Some(0));
+        assert_eq!(argmax(&[]), None);
+    }
+
+    #[test]
+    fn pearson_perfect_and_none() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let zs = [5.0, 5.0, 5.0, 5.0];
+        assert_eq!(pearson(&xs, &zs), 0.0);
+    }
+}

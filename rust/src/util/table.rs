@@ -1,0 +1,189 @@
+//! CSV + aligned-text table output for the experiment harness. The bench
+//! binaries print paper-style rows to stdout and write CSVs under
+//! `results/` so figures can be re-plotted externally.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Escape a CSV field per RFC 4180 (quote when needed).
+fn csv_escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// A simple row-oriented table that can render as CSV or aligned text.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let fmt_row = |row: &[String]| {
+            row.iter()
+                .map(|f| csv_escape(f))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        out
+    }
+
+    /// Render with aligned columns for terminal output.
+    pub fn to_aligned(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, f) in row.iter().enumerate() {
+                widths[i] = widths[i].max(f.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |out: &mut String, row: &[String]| {
+            for (i, f) in row.iter().enumerate() {
+                let _ = write!(out, "{:<w$}  ", f, w = widths[i]);
+            }
+            let _ = writeln!(out);
+        };
+        fmt_row(&mut out, &self.header);
+        let total: usize = widths.iter().sum::<usize>() + 2 * ncol;
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            fmt_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Write CSV to `path`, creating parent directories.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Parse a CSV string produced by `Table::to_csv` (quoted-field aware);
+/// used by tests and by tools that post-process results.
+pub fn parse_csv(text: &str) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' if chars.peek() == Some(&'"') => {
+                    chars.next();
+                    field.push('"');
+                }
+                '"' => in_quotes = false,
+                _ => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => row.push(std::mem::take(&mut field)),
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                '\r' => {}
+                _ => field.push(c),
+            }
+        }
+    }
+    if !field.is_empty() || !row.is_empty() {
+        row.push(field);
+        rows.push(row);
+    }
+    rows
+}
+
+/// `mean ± std` percent formatting used throughout the paper's tables.
+pub fn pct(mean: f64, std: f64) -> String {
+    format!("{:.2} ± {:.2}%", 100.0 * mean, 100.0 * std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_with_quotes() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.push(vec!["x,y", "plain"]);
+        t.push(vec!["with \"quote\"", "2"]);
+        let parsed = parse_csv(&t.to_csv());
+        assert_eq!(parsed[0], vec!["a", "b"]);
+        assert_eq!(parsed[1], vec!["x,y", "plain"]);
+        assert_eq!(parsed[2], vec!["with \"quote\"", "2"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.push(vec!["only-one"]);
+    }
+
+    #[test]
+    fn aligned_render_contains_all() {
+        let mut t = Table::new(vec!["name", "score"]);
+        t.push(vec!["substrat", "0.98"]);
+        let s = t.to_aligned();
+        assert!(s.contains("substrat"));
+        assert!(s.contains("score"));
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.8110, 0.0127), "81.10 ± 1.27%");
+    }
+
+    #[test]
+    fn write_and_read_file() {
+        let mut t = Table::new(vec!["k", "v"]);
+        t.push(vec!["a", "1"]);
+        let dir = std::env::temp_dir().join("substrat_table_test");
+        let path = dir.join("t.csv");
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(parse_csv(&text)[1], vec!["a", "1"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

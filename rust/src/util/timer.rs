@@ -1,0 +1,183 @@
+//! Wall-clock accounting: stopwatches for the paper's Time(M*) vs
+//! Time(M_sub) metrics, and combined time/eval budgets for AutoML search
+//! and baseline subset strategies.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch; `elapsed_s` is what every experiment records.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// A search budget: stop after `max_evals` pipeline evaluations or after
+/// `max_time` of wall clock, whichever comes first. Either limit may be
+/// absent. This models the paper's "restricted, much shorter AutoML"
+/// fine-tuning run as well as the MC baselines' 100 / 100K / 24h budgets.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    pub max_evals: Option<usize>,
+    pub max_time: Option<Duration>,
+    evals: usize,
+    started: Instant,
+}
+
+impl Budget {
+    pub fn evals(n: usize) -> Budget {
+        Budget {
+            max_evals: Some(n),
+            max_time: None,
+            evals: 0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn time(d: Duration) -> Budget {
+        Budget {
+            max_evals: None,
+            max_time: Some(d),
+            evals: 0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn evals_and_time(n: usize, d: Duration) -> Budget {
+        Budget {
+            max_evals: Some(n),
+            max_time: Some(d),
+            evals: 0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn unlimited() -> Budget {
+        Budget {
+            max_evals: None,
+            max_time: None,
+            evals: 0,
+            started: Instant::now(),
+        }
+    }
+
+    /// Restart the clock (budgets are created ahead of the run).
+    pub fn reset(&mut self) {
+        self.evals = 0;
+        self.started = Instant::now();
+    }
+
+    /// Record one evaluation.
+    pub fn consume(&mut self) {
+        self.evals += 1;
+    }
+
+    pub fn evals_used(&self) -> usize {
+        self.evals
+    }
+
+    pub fn exhausted(&self) -> bool {
+        if let Some(m) = self.max_evals {
+            if self.evals >= m {
+                return true;
+            }
+        }
+        if let Some(t) = self.max_time {
+            if self.started.elapsed() >= t {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Remaining evaluations if eval-limited (for sizing loops).
+    pub fn remaining_evals(&self) -> Option<usize> {
+        self.max_evals.map(|m| m.saturating_sub(self.evals))
+    }
+
+    /// Derive a scaled-down budget (used by fine-tuning: a fraction of the
+    /// full AutoML budget, per paper §3.4).
+    pub fn scaled(&self, frac: f64) -> Budget {
+        Budget {
+            max_evals: self
+                .max_evals
+                .map(|m| ((m as f64 * frac).round() as usize).max(1)),
+            max_time: self.max_time.map(|t| t.mul_f64(frac)),
+            evals: 0,
+            started: Instant::now(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_budget_exhausts() {
+        let mut b = Budget::evals(3);
+        assert!(!b.exhausted());
+        b.consume();
+        b.consume();
+        assert!(!b.exhausted());
+        b.consume();
+        assert!(b.exhausted());
+        assert_eq!(b.evals_used(), 3);
+    }
+
+    #[test]
+    fn time_budget_exhausts() {
+        let mut b = Budget::time(Duration::from_millis(20));
+        assert!(!b.exhausted());
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.exhausted());
+        b.reset();
+        assert!(!b.exhausted());
+    }
+
+    #[test]
+    fn unlimited_never_exhausts() {
+        let mut b = Budget::unlimited();
+        for _ in 0..10_000 {
+            b.consume();
+        }
+        assert!(!b.exhausted());
+    }
+
+    #[test]
+    fn scaled_budget() {
+        let b = Budget::evals_and_time(100, Duration::from_secs(10));
+        let s = b.scaled(0.25);
+        assert_eq!(s.max_evals, Some(25));
+        assert_eq!(s.max_time, Some(Duration::from_millis(2500)));
+        let tiny = Budget::evals(2).scaled(0.1);
+        assert_eq!(tiny.max_evals, Some(1), "never scales to zero");
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_s() >= 0.004);
+    }
+}

@@ -1,0 +1,240 @@
+//! Integration tests across the three layers: AOT artifacts on PJRT vs
+//! the native substrate, Gen-DST on both fitness backends, and the full
+//! SubStrat flow. Requires `make artifacts` (the repo ships with the
+//! artifacts directory built).
+
+use substrat::automl::{run_automl, AutoMlConfig, SearcherKind};
+use substrat::baselines;
+use substrat::data::{registry, CodeMatrix};
+use substrat::gendst::fitness::{FitnessBackend, FitnessEval};
+use substrat::gendst::{gen_dst, GenDstConfig};
+use substrat::measures::entropy::{subset_entropy, EntropyMeasure};
+use substrat::runtime::entropy_exec::EntropyExec;
+use substrat::runtime::models_exec::{class_mask, pack_batch, LogregParams, ModelsExec};
+use substrat::runtime::{self, shapes};
+use substrat::substrat::{run_substrat, SubStratConfig};
+use substrat::util::rng::Rng;
+
+#[test]
+fn all_artifacts_load_and_compile() {
+    let rt = runtime::thread_current().expect("runtime");
+    for name in [
+        "entropy_subset",
+        "entropy_batch",
+        "entropy_columns",
+        "logreg_train_step",
+        "logreg_predict",
+        "mlp_train_step",
+        "mlp_predict",
+        "kmeans_step",
+    ] {
+        rt.load(name)
+            .unwrap_or_else(|e| panic!("artifact {name} failed: {e:?}"));
+    }
+}
+
+#[test]
+fn manifest_matches_shape_constants() {
+    let dir = runtime::XlaRuntime::default_dir();
+    let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+        .expect("artifacts/manifest.txt (run `make artifacts`)");
+    let header = manifest.lines().next().unwrap();
+    assert!(header.contains(&format!("{}x{}", shapes::N_PAD, shapes::M_PAD)), "{header}");
+    assert!(header.contains(&format!("K={}", shapes::K_BINS)), "{header}");
+    assert!(header.contains(&format!("B={}", shapes::B_BATCH)), "{header}");
+    assert!(header.contains(&format!("F={}", shapes::F_PAD)), "{header}");
+    assert!(header.contains(&format!("C={}", shapes::C_PAD)), "{header}");
+    assert!(manifest.contains(&format!(
+        "entropy_subset: i32[{},{}]",
+        shapes::N_PAD,
+        shapes::M_PAD
+    )));
+}
+
+#[test]
+fn xla_entropy_matches_native_across_random_subsets() {
+    let f = registry::load("D3", 0.08, 3);
+    let codes = CodeMatrix::from_frame(&f);
+    let rt = runtime::thread_current().unwrap();
+    let mut exec = EntropyExec::new(&rt);
+    let mut rng = Rng::new(5);
+    for _ in 0..12 {
+        let n = 2 + rng.usize_below(500);
+        let m = 2 + rng.usize_below(f.n_cols() - 2);
+        let rows = rng.sample_distinct(f.n_rows, n);
+        let mut cols = rng.sample_distinct(f.n_cols(), m);
+        if !cols.contains(&(f.target as u32)) {
+            cols[0] = f.target as u32;
+        }
+        let native = subset_entropy(&codes, &rows, &cols);
+        let xla = exec.subset_entropy(&codes, &rows, &cols).unwrap();
+        assert!(
+            (native - xla).abs() < 1e-4,
+            "mismatch at n={n} m={m}: {native} vs {xla}"
+        );
+    }
+}
+
+#[test]
+fn xla_batch_matches_singles() {
+    let f = registry::load("D2", 0.05, 4);
+    let codes = CodeMatrix::from_frame(&f);
+    let rt = runtime::thread_current().unwrap();
+    let mut exec = EntropyExec::new(&rt);
+    let mut rng = Rng::new(6);
+    // more subsets than one batch slot set to exercise chunking
+    let subsets: Vec<(Vec<u32>, Vec<u32>)> = (0..(shapes::B_BATCH + 3))
+        .map(|_| {
+            let rows = rng.sample_distinct(f.n_rows, 50);
+            let mut cols = rng.sample_distinct(f.n_cols(), 3);
+            if !cols.contains(&(f.target as u32)) {
+                cols[0] = f.target as u32;
+            }
+            (rows, cols)
+        })
+        .collect();
+    let refs: Vec<(&[u32], &[u32])> = subsets
+        .iter()
+        .map(|(r, c)| (r.as_slice(), c.as_slice()))
+        .collect();
+    let batch = exec.batch_entropy(&codes, &refs).unwrap();
+    assert_eq!(batch.len(), subsets.len());
+    for (i, (rows, cols)) in subsets.iter().enumerate() {
+        let single = exec.subset_entropy(&codes, rows, cols).unwrap();
+        assert!(
+            (batch[i] - single).abs() < 1e-5,
+            "slot {i}: {} vs {single}",
+            batch[i]
+        );
+    }
+}
+
+#[test]
+fn gendst_xla_backend_agrees_with_native() {
+    let f = registry::load("D2", 0.04, 7);
+    let codes = CodeMatrix::from_frame(&f);
+    let mk = |backend| GenDstConfig {
+        generations: 5,
+        population: 20,
+        backend,
+        seed: 11,
+        ..Default::default()
+    };
+    let native = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &mk(FitnessBackend::Native));
+    let xla = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &mk(FitnessBackend::Xla));
+    // identical seeds and near-identical numerics (f32 vs f64) must yield
+    // equally good subsets; allow tiny slack for tie-breaking divergence
+    assert!(
+        (native.loss - xla.loss).abs() < 5e-3,
+        "backend divergence: native {} vs xla {}",
+        native.loss,
+        xla.loss
+    );
+    xla.dst.validate(f.n_rows, f.n_cols(), f.target).unwrap();
+}
+
+#[test]
+fn xla_fitness_eval_matches_native_losses() {
+    let f = registry::load("D2", 0.04, 8);
+    let codes = CodeMatrix::from_frame(&f);
+    let mut nat = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Native);
+    let mut xla = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Xla);
+    let mut rng = Rng::new(9);
+    for _ in 0..6 {
+        let rows = rng.sample_distinct(f.n_rows, 40);
+        let mut cols = rng.sample_distinct(f.n_cols(), 3);
+        if !cols.contains(&(f.target as u32)) {
+            cols[0] = f.target as u32;
+        }
+        let a = nat.loss(&rows, &cols);
+        let b = xla.loss(&rows, &cols);
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn logreg_artifact_step_decreases_loss() {
+    let rt = runtime::thread_current().unwrap();
+    let exec = ModelsExec::new(&rt);
+    let mut rng = Rng::new(10);
+    // blobs in padded space
+    let mut x = substrat::data::Matrix::zeros(shapes::BATCH, 8);
+    let mut y = vec![0u32; shapes::BATCH];
+    for i in 0..shapes::BATCH {
+        let c = i % 2;
+        y[i] = c as u32;
+        for j in 0..8 {
+            x.set(i, j, ((c as f64 * 4.0 - 2.0) + rng.normal()) as f32);
+        }
+    }
+    let idx: Vec<usize> = (0..shapes::BATCH).collect();
+    let batch = pack_batch(&x, &y, &idx).unwrap();
+    let cmask = class_mask(2);
+    let mut params = LogregParams::zeros();
+    let first = exec
+        .logreg_step(&mut params, &batch, &cmask, 0.5, 0.0)
+        .unwrap();
+    let mut last = first;
+    for _ in 0..20 {
+        last = exec
+            .logreg_step(&mut params, &batch, &cmask, 0.5, 0.0)
+            .unwrap();
+    }
+    assert!(
+        last < first * 0.5,
+        "loss did not decrease: {first} -> {last}"
+    );
+}
+
+#[test]
+fn substrat_flow_beats_full_automl_on_time() {
+    let f = registry::load("D3", 0.3, 12); // 3000 x 18
+    let codes = CodeMatrix::from_frame(&f);
+    let automl_cfg = AutoMlConfig::new(SearcherKind::Smbo, 8, 5);
+
+    let sw = substrat::util::timer::Stopwatch::start();
+    let full = run_automl(&f, &automl_cfg);
+    let t_full = sw.elapsed_s();
+
+    let strategy = baselines::by_name("gendst");
+    let run = run_substrat(
+        &f,
+        &codes,
+        &EntropyMeasure,
+        strategy.as_ref(),
+        &automl_cfg,
+        &SubStratConfig::default(),
+    );
+    assert!(
+        run.total_time_s < t_full,
+        "substrat {} not faster than full {}",
+        run.total_time_s,
+        t_full
+    );
+    assert!(full.best_cv > 0.5);
+    assert!(run.automl_sub.best_cv > 0.0);
+}
+
+#[test]
+fn every_table4_strategy_completes_one_cell() {
+    use substrat::experiments::{prepare, run_full, run_strategy, ExpConfig};
+    let cfg = ExpConfig {
+        scale: 0.02,
+        min_rows: 1_200,
+        max_rows: 2_000,
+        reps: 1,
+        full_evals: 4,
+        searchers: vec![SearcherKind::Random],
+        datasets: vec!["D2".into()],
+        threads: 1,
+        out_dir: std::env::temp_dir().join("substrat_it"),
+        ..Default::default()
+    };
+    let prep = prepare("D2", &cfg, 0);
+    let full = run_full(&prep, SearcherKind::Random, &cfg, 0);
+    for s in substrat::experiments::table4_strategy_names() {
+        let rec = run_strategy(&prep, "D2", s, SearcherKind::Random, &full, &cfg, 0, None);
+        assert!(rec.acc_sub > 0.0, "{s} produced zero accuracy");
+        assert!(rec.time_sub_s > 0.0, "{s} not timed");
+    }
+}
