@@ -5,7 +5,9 @@
 //!   cargo bench --bench bench_entropy   (BENCH_QUICK=1 for smoke runs)
 
 use substrat::data::{registry, CodeMatrix};
-use substrat::measures::entropy::{full_entropy, subset_entropy};
+use substrat::measures::entropy::{
+    column_hist, entropy_of_counts, full_entropy, hist_swap_row, subset_entropy,
+};
 use substrat::runtime::{self, entropy_exec::EntropyExec};
 use substrat::util::bench::{black_box, Bench};
 use substrat::util::rng::Rng;
@@ -40,5 +42,29 @@ fn main() {
     b.bench("native full_entropy 13k x 23", || {
         black_box(full_entropy(&codes));
     });
+
+    // incremental-engine primitives: a cached row swap (O(1) hist delta
+    // + O(K) re-entropy) vs the O(n) from-scratch column rebuild it
+    // replaces in the Gen-DST fitness engine
+    for n in [114usize, 1000] {
+        let rows = rng.sample_distinct(f.n_rows, n);
+        let col0 = codes.column(0);
+        let mut hist = column_hist(&codes, 0, &rows);
+        let (old, new) = (rows[0], {
+            let mut v = 0u32;
+            while rows.contains(&v) {
+                v += 1;
+            }
+            v
+        });
+        b.bench_throughput(&format!("rebuild column_hist n={n}"), n, || {
+            black_box(column_hist(&codes, 0, &rows));
+        });
+        b.bench_throughput(&format!("delta hist_swap_row n={n}"), n, || {
+            hist_swap_row(&mut hist, col0, old, new);
+            hist_swap_row(&mut hist, col0, new, old); // restore
+            black_box(entropy_of_counts(&hist, n));
+        });
+    }
     println!("\n{}", b.markdown());
 }

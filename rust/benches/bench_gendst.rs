@@ -1,24 +1,39 @@
 //! End-to-end Gen-DST benchmark at the paper's hyper-parameters
 //! (psi=30, phi=100) across dataset scales — the L3 §Perf instrument for
-//! the GA loop (allocation, selection, fitness caching).
+//! the GA loop. Benches the serial from-scratch reference backend
+//! (`NaiveNative`, the seed's behavior) against the incremental +
+//! parallel engine (`Incremental`) on identical inputs and seeds; the
+//! two backends return identical results, so the delta is pure engine
+//! speed (histogram reuse + loss memo + parallel fills).
 
 use substrat::data::{registry, CodeMatrix};
+use substrat::gendst::fitness::FitnessBackend;
 use substrat::gendst::{default_dst_size, gen_dst, GenDstConfig};
 use substrat::measures::entropy::EntropyMeasure;
 use substrat::util::bench::{black_box, Bench};
 
 fn main() {
     let mut b = Bench::new();
-    for (symbol, scale) in [("D2", 0.4), ("D3", 1.0), ("D1", 0.1)] {
+    for (symbol, scale) in [("D2", 0.4), ("D2", 1.0), ("D3", 1.0), ("D1", 0.1)] {
         let f = registry::load(symbol, scale, 7);
         let codes = CodeMatrix::from_frame(&f);
         let (n, m) = default_dst_size(f.n_rows, f.n_cols());
-        let cfg = GenDstConfig { seed: 1, ..Default::default() };
-        b.bench(
-            &format!("gen_dst {symbol} {}x{} -> ({n},{m})", f.n_rows, f.n_cols()),
-            || {
+        let shape = format!("{symbol} {}x{} -> ({n},{m})", f.n_rows, f.n_cols());
+        for (tag, backend) in [
+            ("naive      ", FitnessBackend::NaiveNative),
+            ("incremental", FitnessBackend::Incremental),
+        ] {
+            let cfg = GenDstConfig { backend, seed: 1, ..Default::default() };
+            b.bench(&format!("gen_dst {tag} {shape}"), || {
                 black_box(gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg));
-            },
+            });
+        }
+        // context line: how much re-scoring the memo absorbed
+        let cfg = GenDstConfig { seed: 1, ..Default::default() };
+        let res = gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg);
+        println!(
+            "  [{shape}] evals={} memo_hits={} generations={}",
+            res.fitness_evals, res.memo_hits, res.generations_run
         );
     }
     println!("\n{}", b.markdown());

@@ -72,7 +72,8 @@ impl SubsetStrategy for GreedySeq {
     fn find(&self, ctx: &StrategyContext) -> StrategyOutcome {
         let sw = Stopwatch::start();
         let mut rng = Rng::new(ctx.seed);
-        let mut eval = FitnessEval::new(ctx.frame, ctx.codes, ctx.measure, FitnessBackend::Native);
+        let mut eval =
+            FitnessEval::new(ctx.frame, ctx.codes, ctx.measure, FitnessBackend::NaiveNative);
         let all_cols: Vec<u32> = (0..ctx.frame.n_cols() as u32).collect();
         let target = ctx.frame.target as u32;
 
@@ -117,7 +118,8 @@ impl SubsetStrategy for GreedyMult {
     fn find(&self, ctx: &StrategyContext) -> StrategyOutcome {
         let sw = Stopwatch::start();
         let mut rng = Rng::new(ctx.seed);
-        let mut eval = FitnessEval::new(ctx.frame, ctx.codes, ctx.measure, FitnessBackend::Native);
+        let mut eval =
+            FitnessEval::new(ctx.frame, ctx.codes, ctx.measure, FitnessBackend::NaiveNative);
         let target = ctx.frame.target as u32;
 
         // seed with one random row + the target column

@@ -89,7 +89,8 @@ impl SubsetStrategy for MultiArmBandit {
     fn find(&self, ctx: &StrategyContext) -> StrategyOutcome {
         let sw = Stopwatch::start();
         let mut rng = Rng::new(ctx.seed);
-        let mut eval = FitnessEval::new(ctx.frame, ctx.codes, ctx.measure, FitnessBackend::Native);
+        let mut eval =
+            FitnessEval::new(ctx.frame, ctx.codes, ctx.measure, FitnessBackend::NaiveNative);
         let target = ctx.frame.target as u32;
 
         let mut row_arms = Arms::new(ctx.frame.n_rows);
@@ -138,7 +139,7 @@ mod tests {
         let m = EntropyMeasure;
         let ctx = test_ctx(&f, &codes, &m, 11);
         let out = MultiArmBandit::default().find(&ctx);
-        let mut eval = FitnessEval::new(&f, &codes, &m, FitnessBackend::Native);
+        let mut eval = FitnessEval::new(&f, &codes, &m, FitnessBackend::NaiveNative);
         let mab_loss = eval.loss(&out.dst.rows, &out.dst.cols);
 
         let mut rng = Rng::new(77);

@@ -27,7 +27,8 @@ impl SubsetStrategy for MonteCarlo {
     fn find(&self, ctx: &StrategyContext) -> StrategyOutcome {
         let sw = Stopwatch::start();
         let mut rng = Rng::new(ctx.seed);
-        let mut eval = FitnessEval::new(ctx.frame, ctx.codes, ctx.measure, FitnessBackend::Native);
+        let mut eval =
+            FitnessEval::new(ctx.frame, ctx.codes, ctx.measure, FitnessBackend::NaiveNative);
 
         let mut budget = match self.time_mult_of_gendst {
             Some(mult) => {
@@ -87,7 +88,7 @@ mod tests {
         let codes = CodeMatrix::from_frame(&f);
         let m = EntropyMeasure;
         let ctx = test_ctx(&f, &codes, &m, 9);
-        let mut eval = FitnessEval::new(&f, &codes, &m, FitnessBackend::Native);
+        let mut eval = FitnessEval::new(&f, &codes, &m, FitnessBackend::NaiveNative);
 
         let small = MonteCarlo { max_evals: 10, time_mult_of_gendst: None }.find(&ctx);
         let large = MonteCarlo { max_evals: 500, time_mult_of_gendst: None }.find(&ctx);

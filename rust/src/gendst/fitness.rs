@@ -1,26 +1,177 @@
 //! Fitness evaluation for Gen-DST: `f(G) = -L(r,c) = -|F(D[r,c]) - F(D)|`.
 //!
-//! Two backends:
-//! * `Native` — stack-histogram entropy (or any `DatasetMeasure`) on the
-//!   CPU; the fastest option on this testbed.
+//! Three backends (DESIGN.md §4.4):
+//! * `Incremental` — the default engine. Every scored candidate carries a
+//!   [`CandidateCache`] (per-column histograms + per-column entropies) so
+//!   a row mutation is an O(m) delta update, a column mutation/crossover
+//!   rebuilds only the swapped columns in O(n) each, fresh candidates are
+//!   scored through [`parallel_map`], and a cross-generation loss memo
+//!   keyed by an order-independent subset hash skips re-scoring subsets
+//!   the engine has already seen. Produces bit-identical losses to
+//!   `NaiveNative` (integer histograms + identical summation order).
+//! * `NaiveNative` — the serial from-scratch reference path (stack
+//!   histograms per call); the incremental engine is property-tested
+//!   against it.
 //! * `Xla` — the AOT-compiled L1 Pallas kernel through PJRT, batched
 //!   B_BATCH candidates per call; this is the deployment path on
-//!   accelerator backends and is cross-checked against Native in the
-//!   integration tests (identical numerics within f32 tolerance).
+//!   accelerator backends and is cross-checked against the native paths
+//!   in the integration tests (identical numerics within f32 tolerance).
+//!
+//! Measures other than entropy fall back to a from-scratch path (serial
+//! for `NaiveNative`, parallel + memoized for `Incremental`).
 
+use std::collections::HashMap;
+
+use crate::data::binning::K_BINS;
 use crate::data::{CodeMatrix, Frame};
 use crate::measures::entropy::{self, EntropyMeasure};
 use crate::measures::DatasetMeasure;
 use crate::runtime::{self, entropy_exec::EntropyExec};
+use crate::util::hash::subset_key;
+use crate::util::pool::{self, parallel_map};
 
 use super::Candidate;
 
+/// Which engine scores candidates (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FitnessBackend {
-    Native,
+    /// Serial, from-scratch CPU reference path.
+    NaiveNative,
+    /// Incremental + parallel + memoized CPU engine (the default).
+    Incremental,
+    /// AOT Pallas entropy kernel on PJRT, batched per population.
     Xla,
 }
 
+/// Minimum `candidates x rows x cols` work volume before a fill fans out
+/// to worker threads; below this, thread spawn overhead dominates and the
+/// engine stays serial (results are identical either way).
+const PAR_MIN_WORK: usize = 1 << 16;
+
+/// Cached per-column fitness state of one candidate: the value-frequency
+/// histogram and Shannon entropy of every subset column over the
+/// candidate's row set.
+///
+/// The cache tolerates staleness explicitly rather than being rebuilt on
+/// every change: genetic operators *note* what changed (a pending row
+/// swap, an invalidated column slot) and [`FitnessEval::fill_losses`]
+/// reconciles lazily. Histograms are integer-exact, so arbitrarily long
+/// delta chains cannot drift.
+#[derive(Debug, Clone)]
+pub struct CandidateCache {
+    /// per-subset-column histogram over the candidate's rows
+    hists: Vec<[u32; K_BINS]>,
+    /// per-subset-column Shannon entropy (bits), aligned with `hists`
+    col_h: Vec<f64>,
+    /// slot-wise trust: `false` slots are rebuilt from scratch on refresh
+    valid: Vec<bool>,
+    /// row swaps `(old, new)` applied to the candidate's row set but not
+    /// yet to the histograms
+    pending: Vec<(u32, u32)>,
+}
+
+impl CandidateCache {
+    /// An all-invalid cache of `m` column slots (refresh builds it).
+    fn empty(m: usize) -> CandidateCache {
+        CandidateCache {
+            hists: vec![[0u32; K_BINS]; m],
+            col_h: vec![0.0; m],
+            valid: vec![false; m],
+            pending: Vec::new(),
+        }
+    }
+
+    /// Record a row swap (`old` left the row set, `new` entered it). The
+    /// histogram delta is applied at the next refresh — O(1) now, O(m)
+    /// then, instead of the O(n·m) rebuild a row change would naively
+    /// cost.
+    pub fn note_row_swap(&mut self, old: u32, new: u32) {
+        self.pending.push((old, new));
+    }
+
+    /// Record that the column in `slot` was replaced: that slot's
+    /// histogram is rebuilt (O(n)) at the next refresh; the other m-1
+    /// columns keep their cached state.
+    pub fn note_col_swap(&mut self, slot: usize) {
+        if slot < self.valid.len() {
+            self.valid[slot] = false;
+        }
+    }
+
+    /// Derive a child cache for a column-crossover child that inherits
+    /// this candidate's row set and part of its column set: matching
+    /// fully-valid columns are copied, swapped-in columns are marked for
+    /// O(n) rebuild. Returns `None` when nothing can be reused (pending
+    /// row swaps make the parent histograms unusable as-is).
+    pub fn project_cols(&self, parent_cols: &[u32], child_cols: &[u32]) -> Option<CandidateCache> {
+        if !self.pending.is_empty() || self.hists.len() != parent_cols.len() {
+            return None;
+        }
+        let mut out = CandidateCache::empty(child_cols.len());
+        let mut reused = 0usize;
+        for (j, &col) in child_cols.iter().enumerate() {
+            if let Some(i) = parent_cols.iter().position(|&p| p == col) {
+                if self.valid[i] {
+                    out.hists[j] = self.hists[i];
+                    out.col_h[j] = self.col_h[i];
+                    out.valid[j] = true;
+                    reused += 1;
+                }
+            }
+        }
+        if reused == 0 {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
+    /// Reconcile the cache with the candidate's current `(rows, cols)`:
+    /// apply pending row-swap deltas to every valid column (O(m) per
+    /// swap), rebuild invalidated columns from scratch (O(n) each), and
+    /// re-derive the touched per-column entropies.
+    pub fn refresh(&mut self, codes: &CodeMatrix, rows: &[u32], cols: &[u32]) {
+        if self.hists.len() != cols.len() {
+            // defensive: shape drifted (should not happen in the GA loop)
+            *self = CandidateCache::empty(cols.len());
+        }
+        let swapped = !self.pending.is_empty();
+        for &(old, new) in &self.pending {
+            for (j, &col) in cols.iter().enumerate() {
+                if self.valid[j] {
+                    entropy::hist_swap_row(
+                        &mut self.hists[j],
+                        codes.column(col as usize),
+                        old,
+                        new,
+                    );
+                }
+            }
+        }
+        self.pending.clear();
+        for (j, &col) in cols.iter().enumerate() {
+            if !self.valid[j] {
+                self.hists[j] = entropy::column_hist(codes, col as usize, rows);
+                self.col_h[j] = entropy::entropy_of_counts(&self.hists[j], rows.len());
+                self.valid[j] = true;
+            } else if swapped {
+                self.col_h[j] = entropy::entropy_of_counts(&self.hists[j], rows.len());
+            }
+        }
+    }
+
+    /// Mean column entropy — summed in column order so the result is
+    /// bit-identical to [`entropy::subset_entropy`] on the same subset.
+    pub fn mean_entropy(&self) -> f64 {
+        if self.col_h.is_empty() {
+            return 0.0;
+        }
+        self.col_h.iter().sum::<f64>() / self.col_h.len() as f64
+    }
+}
+
+/// The fitness engine: owns `F(D)`, the backend dispatch, the loss memo
+/// and the eval counters for one Gen-DST run (or one baseline strategy).
 pub struct FitnessEval<'a> {
     frame: &'a Frame,
     codes: &'a CodeMatrix,
@@ -28,14 +179,26 @@ pub struct FitnessEval<'a> {
     backend: FitnessBackend,
     /// F(D), computed once
     pub f_full: f64,
-    /// number of subset-measure evaluations performed
+    /// number of subset-measure evaluations actually performed
     pub evals: usize,
-    /// whether the measure is entropy (enables the fast native path and
-    /// the XLA backend; other measures fall back to the generic path)
+    /// evaluations skipped by loss memoization: cross-generation memo
+    /// hits plus de-duplicated identical subsets within one fill
+    pub memo_hits: usize,
+    /// worker threads for population fills: 0 = auto (all cores when the
+    /// work volume clears [`PAR_MIN_WORK`], serial otherwise)
+    pub threads: usize,
+    /// cross-generation loss memo keyed by the order-independent subset
+    /// hash ([`subset_key`]); per-engine, so it can never leak across
+    /// datasets or measures
+    memo: HashMap<(u64, u64), f64>,
+    /// whether the measure is entropy (enables the incremental cache and
+    /// the XLA backend; other measures use the generic fallback)
     is_entropy: bool,
 }
 
 impl<'a> FitnessEval<'a> {
+    /// Build an engine for `frame`/`codes` under `measure`; computes
+    /// `F(D)` once.
     pub fn new(
         frame: &'a Frame,
         codes: &'a CodeMatrix,
@@ -51,30 +214,56 @@ impl<'a> FitnessEval<'a> {
             backend,
             f_full,
             evals: 0,
+            memo_hits: 0,
+            threads: 0,
+            memo: HashMap::new(),
             is_entropy,
         }
     }
 
-    /// L(r, c) for one subset.
+    /// L(r, c) for one subset (from scratch; the `Incremental` backend
+    /// additionally consults and feeds the loss memo).
     pub fn loss(&mut self, rows: &[u32], cols: &[u32]) -> f64 {
+        let key = if self.backend == FitnessBackend::Incremental {
+            let key = subset_key(rows, cols);
+            if let Some(&l) = self.memo.get(&key) {
+                self.memo_hits += 1;
+                return l;
+            }
+            Some(key)
+        } else {
+            None
+        };
         self.evals += 1;
         let f = match (self.backend, self.is_entropy) {
-            (FitnessBackend::Native, true) => entropy::subset_entropy(self.codes, rows, cols),
             (FitnessBackend::Xla, true) => {
                 let rt = runtime::thread_current().expect("XLA runtime unavailable");
                 let mut exec = EntropyExec::new(&rt);
                 exec.subset_entropy(self.codes, rows, cols)
                     .expect("entropy_subset artifact failed")
             }
+            (_, true) => entropy::subset_entropy(self.codes, rows, cols),
             _ => self.measure.of_subset(self.frame, self.codes, rows, cols),
         };
-        (f - self.f_full).abs()
+        let l = (f - self.f_full).abs();
+        if let Some(key) = key {
+            self.memo.insert(key, l);
+        }
+        l
     }
 
-    /// Fill the cached loss of every candidate that lacks one. The XLA
-    /// backend batches candidates through the `entropy_batch` artifact.
+    /// Fill the cached loss of every candidate that lacks one.
+    ///
+    /// * `Incremental`: memo lookups first, then one parallel pass that
+    ///   refreshes stale caches / builds fresh ones; candidates already
+    ///   scored (loss present) are never touched.
+    /// * `Xla`: batches pending candidates through the `entropy_batch`
+    ///   artifact.
+    /// * `NaiveNative` (and non-entropy measures under it): the serial
+    ///   from-scratch reference loop.
     pub fn fill_losses(&mut self, pop: &mut [Candidate]) {
         match (self.backend, self.is_entropy) {
+            (FitnessBackend::Incremental, _) => self.fill_incremental(pop),
             (FitnessBackend::Xla, true) => {
                 let pending: Vec<usize> = (0..pop.len())
                     .filter(|&i| pop[i].loss.is_none())
@@ -106,18 +295,107 @@ impl<'a> FitnessEval<'a> {
             }
         }
     }
+
+    /// The incremental fill: memo pre-pass (including de-duplication of
+    /// identical subsets inside one population), then a parallel
+    /// refresh/build pass over the remainder.
+    fn fill_incremental(&mut self, pop: &mut [Candidate]) {
+        let mut to_compute: Vec<usize> = Vec::new();
+        let mut keys: Vec<(u64, u64)> = Vec::new();
+        // candidates whose subset duplicates an earlier pending one:
+        // (candidate index, position in `to_compute`)
+        let mut dups: Vec<(usize, usize)> = Vec::new();
+        let mut in_batch: HashMap<(u64, u64), usize> = HashMap::new();
+        for (i, cand) in pop.iter_mut().enumerate() {
+            if cand.loss.is_some() {
+                continue;
+            }
+            let key = subset_key(&cand.rows, &cand.cols);
+            if let Some(&l) = self.memo.get(&key) {
+                cand.loss = Some(l);
+                self.memo_hits += 1;
+            } else if let Some(&pos) = in_batch.get(&key) {
+                dups.push((i, pos));
+                self.memo_hits += 1;
+            } else {
+                in_batch.insert(key, to_compute.len());
+                to_compute.push(i);
+                keys.push(key);
+            }
+        }
+        if to_compute.is_empty() {
+            return;
+        }
+
+        let codes = self.codes;
+        let f_full = self.f_full;
+        let n_threads = self.fill_threads(&to_compute, pop);
+        let computed: Vec<(Option<CandidateCache>, f64)> = if self.is_entropy {
+            let snapshot: &[Candidate] = pop;
+            parallel_map(&to_compute, n_threads, |_, &i| {
+                let cand = &snapshot[i];
+                let mut cache = match &cand.cache {
+                    Some(c) => c.clone(),
+                    None => CandidateCache::empty(cand.cols.len()),
+                };
+                cache.refresh(codes, &cand.rows, &cand.cols);
+                let l = (cache.mean_entropy() - f_full).abs();
+                (Some(cache), l)
+            })
+        } else {
+            let frame = self.frame;
+            let measure = self.measure;
+            let snapshot: &[Candidate] = pop;
+            parallel_map(&to_compute, n_threads, |_, &i| {
+                let cand = &snapshot[i];
+                let f = measure.of_subset(frame, codes, &cand.rows, &cand.cols);
+                (None, (f - f_full).abs())
+            })
+        };
+        self.evals += to_compute.len();
+
+        let mut losses_by_pos: Vec<f64> = Vec::with_capacity(computed.len());
+        for ((&i, key), (cache, l)) in to_compute.iter().zip(&keys).zip(computed) {
+            pop[i].loss = Some(l);
+            pop[i].cache = cache;
+            self.memo.insert(*key, l);
+            losses_by_pos.push(l);
+        }
+        for (i, pos) in dups {
+            pop[i].loss = Some(losses_by_pos[pos]);
+        }
+    }
+
+    /// Resolve the worker-thread count for one fill (see `threads`).
+    fn fill_threads(&self, to_compute: &[usize], pop: &[Candidate]) -> usize {
+        if self.threads != 0 {
+            return self.threads;
+        }
+        let per_item = pop
+            .first()
+            .map(|c| c.rows.len() * c.cols.len().max(1))
+            .unwrap_or(0);
+        if to_compute.len().saturating_mul(per_item) < PAR_MIN_WORK {
+            1
+        } else {
+            pool::max_threads()
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::registry;
+    use crate::gendst::ops;
+    use crate::util::prop::check_prop;
+    use crate::util::rng::Rng;
 
     #[test]
     fn loss_zero_for_full_dataset() {
         let f = registry::load("D2", 0.05, 1);
         let codes = CodeMatrix::from_frame(&f);
-        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Native);
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::NaiveNative);
         let rows: Vec<u32> = (0..f.n_rows as u32).collect();
         let cols: Vec<u32> = (0..f.n_cols() as u32).collect();
         assert!(eval.loss(&rows, &cols) < 1e-12);
@@ -128,10 +406,10 @@ mod tests {
     fn fill_losses_only_computes_missing() {
         let f = registry::load("D2", 0.05, 1);
         let codes = CodeMatrix::from_frame(&f);
-        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Native);
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::NaiveNative);
         let mut rng = crate::util::rng::Rng::new(2);
         let mut pop: Vec<Candidate> = (0..6)
-            .map(|_| crate::gendst::ops::random_candidate(&f, 10, 3, &mut rng))
+            .map(|_| ops::random_candidate(&f, 10, 3, &mut rng))
             .collect();
         pop[0].loss = Some(0.5);
         eval.fill_losses(&mut pop);
@@ -145,10 +423,198 @@ mod tests {
         let f = registry::load("D2", 0.05, 1);
         let codes = CodeMatrix::from_frame(&f);
         let m = crate::measures::other::PNormMeasure { p: 2.0 };
-        let mut eval = FitnessEval::new(&f, &codes, &m, FitnessBackend::Native);
+        let mut eval = FitnessEval::new(&f, &codes, &m, FitnessBackend::NaiveNative);
         let mut rng = crate::util::rng::Rng::new(3);
-        let c = crate::gendst::ops::random_candidate(&f, 10, 3, &mut rng);
+        let c = ops::random_candidate(&f, 10, 3, &mut rng);
         let l = eval.loss(&c.rows, &c.cols);
         assert!(l.is_finite() && l >= 0.0);
+    }
+
+    #[test]
+    fn generic_measure_under_incremental_matches_naive() {
+        let f = registry::load("D2", 0.05, 1);
+        let codes = CodeMatrix::from_frame(&f);
+        let m = crate::measures::other::PNormMeasure { p: 2.0 };
+        let mut rng = crate::util::rng::Rng::new(4);
+        let mut pop: Vec<Candidate> = (0..12)
+            .map(|_| ops::random_candidate(&f, 15, 3, &mut rng))
+            .collect();
+        let mut pop2 = pop.clone();
+        let mut naive = FitnessEval::new(&f, &codes, &m, FitnessBackend::NaiveNative);
+        let mut inc = FitnessEval::new(&f, &codes, &m, FitnessBackend::Incremental);
+        naive.fill_losses(&mut pop);
+        inc.fill_losses(&mut pop2);
+        for (a, b) in pop.iter().zip(&pop2) {
+            assert_eq!(a.loss, b.loss);
+        }
+    }
+
+    /// Naive from-scratch loss of one candidate (the reference).
+    fn naive_loss(eval_full: f64, codes: &CodeMatrix, c: &Candidate) -> f64 {
+        (entropy::subset_entropy(codes, &c.rows, &c.cols) - eval_full).abs()
+    }
+
+    #[test]
+    fn prop_incremental_agrees_with_naive_across_mutation_chains() {
+        let f = registry::load("D3", 0.1, 13); // 1000 x 18
+        let codes = CodeMatrix::from_frame(&f);
+        let target = f.target as u32;
+        check_prop("incremental == naive over GA op chains", 25, |rng| {
+            let mut eval =
+                FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Incremental);
+            let mut pop: Vec<Candidate> = (0..6)
+                .map(|_| ops::random_candidate(&f, 25, 5, rng))
+                .collect();
+            eval.fill_losses(&mut pop);
+            for step in 0..20 {
+                // random GA op: mutate a candidate or cross a pair
+                if rng.bool_with(0.6) {
+                    let i = rng.usize_below(pop.len());
+                    ops::mutate(&mut pop[i], &f, target, rng.f64(), rng);
+                } else {
+                    let i = rng.usize_below(pop.len());
+                    let j = (i + 1 + rng.usize_below(pop.len() - 1)) % pop.len();
+                    let (ca, cb) =
+                        ops::crossover_pair(&pop[i], &pop[j], &f, target, rng.f64(), rng);
+                    pop[i] = ca;
+                    pop[j] = cb;
+                }
+                eval.fill_losses(&mut pop);
+                for (k, c) in pop.iter().enumerate() {
+                    let want = naive_loss(eval.f_full, &codes, c);
+                    let got = c.loss.unwrap();
+                    assert!(
+                        (got - want).abs() <= 1e-9,
+                        "step {step} cand {k}: incremental {got} vs naive {want}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn incremental_losses_bit_identical_to_naive_backend() {
+        let f = registry::load("D2", 0.1, 9);
+        let codes = CodeMatrix::from_frame(&f);
+        let mut rng = Rng::new(21);
+        let pop_src: Vec<Candidate> = (0..40)
+            .map(|_| ops::random_candidate(&f, 30, 3, &mut rng))
+            .collect();
+        let mut a = pop_src.clone();
+        let mut b = pop_src.clone();
+        let mut naive = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::NaiveNative);
+        let mut inc = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Incremental);
+        naive.fill_losses(&mut a);
+        inc.fill_losses(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.loss, y.loss, "losses must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn parallel_fill_matches_serial_fill() {
+        let f = registry::load("D3", 0.1, 5);
+        let codes = CodeMatrix::from_frame(&f);
+        let mut rng = Rng::new(33);
+        let pop_src: Vec<Candidate> = (0..64)
+            .map(|_| ops::random_candidate(&f, 40, 6, &mut rng))
+            .collect();
+        let mut serial = pop_src.clone();
+        let mut parallel = pop_src.clone();
+        let mut e1 = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Incremental);
+        e1.threads = 1;
+        let mut e4 = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Incremental);
+        e4.threads = 4;
+        e1.fill_losses(&mut serial);
+        e4.fill_losses(&mut parallel);
+        for (x, y) in serial.iter().zip(&parallel) {
+            assert_eq!(x.loss, y.loss, "thread count must not change results");
+        }
+    }
+
+    #[test]
+    fn memo_hits_on_identical_subset_and_counts() {
+        let f = registry::load("D2", 0.05, 6);
+        let codes = CodeMatrix::from_frame(&f);
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Incremental);
+        let mut rng = Rng::new(8);
+        let c = ops::random_candidate(&f, 12, 3, &mut rng);
+        // same subset content, different gene order, fresh loss slot
+        let mut shuffled = c.clone();
+        shuffled.rows.reverse();
+        shuffled.cols.rotate_left(1);
+        shuffled.loss = None;
+        shuffled.cache = None;
+        let mut pop = vec![c, shuffled];
+        eval.fill_losses(&mut pop);
+        assert_eq!(eval.evals, 1, "duplicate subset must not be re-scored");
+        assert_eq!(eval.memo_hits, 1);
+        assert_eq!(pop[0].loss, pop[1].loss);
+    }
+
+    #[test]
+    fn memo_never_serves_stale_loss_after_mutation() {
+        let f = registry::load("D3", 0.1, 19);
+        let codes = CodeMatrix::from_frame(&f);
+        let target = f.target as u32;
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Incremental);
+        let mut rng = Rng::new(55);
+        let mut pop = vec![ops::random_candidate(&f, 20, 5, &mut rng)];
+        let original = pop[0].clone();
+        eval.fill_losses(&mut pop);
+        let loss_before = pop[0].loss.unwrap();
+
+        // mutation clears the cached loss; the refill must be the fresh
+        // value of the NEW subset, not the memoized old one
+        for step in 0..10 {
+            ops::mutate(&mut pop[0], &f, target, 0.5, &mut rng);
+            assert!(pop[0].loss.is_none(), "mutation must clear the loss");
+            eval.fill_losses(&mut pop);
+            let want = naive_loss(eval.f_full, &codes, &pop[0]);
+            assert!(
+                (pop[0].loss.unwrap() - want).abs() <= 1e-9,
+                "stale memo value served at step {step}"
+            );
+        }
+
+        // ...while re-presenting the ORIGINAL subset (any gene order) must
+        // hit the memo and reproduce its loss exactly
+        let hits_before = eval.memo_hits;
+        let mut replay = original.clone();
+        replay.rows.reverse();
+        replay.loss = None;
+        replay.cache = None;
+        let mut pop2 = vec![replay];
+        eval.fill_losses(&mut pop2);
+        assert_eq!(eval.memo_hits, hits_before + 1, "memo should hit");
+        assert_eq!(pop2[0].loss, Some(loss_before));
+        assert!(
+            (pop2[0].loss.unwrap() - naive_loss(eval.f_full, &codes, &original)).abs() <= 1e-9
+        );
+    }
+
+    #[test]
+    fn column_crossover_children_reuse_parent_histograms() {
+        let f = registry::load("D3", 0.1, 23);
+        let codes = CodeMatrix::from_frame(&f);
+        let target = f.target as u32;
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Incremental);
+        let mut rng = Rng::new(61);
+        let mut pop: Vec<Candidate> = (0..2)
+            .map(|_| ops::random_candidate(&f, 30, 6, &mut rng))
+            .collect();
+        eval.fill_losses(&mut pop);
+        // force a column crossover (p_rc = 0): children inherit row sets
+        let (ca, cb) = ops::crossover_pair(&pop[0], &pop[1], &f, target, 0.0, &mut rng);
+        assert!(
+            ca.cache.is_some() || cb.cache.is_some(),
+            "column-crossover children should reuse parent histograms"
+        );
+        let mut children = vec![ca, cb];
+        eval.fill_losses(&mut children);
+        for c in &children {
+            let want = naive_loss(eval.f_full, &codes, c);
+            assert!((c.loss.unwrap() - want).abs() <= 1e-9);
+        }
     }
 }

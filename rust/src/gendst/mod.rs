@@ -6,11 +6,18 @@
 //! (index sets); the target column is pinned into every candidate and can
 //! never be mutated or crossed out (paper §3.1/§3.3).
 //!
-//! Deviation from the paper, documented: the paper's selection weight
-//! `p(G) = f(G) / Σ f(G')` is ill-defined for its own fitness
-//! `f(G) = -L(G) <= 0`; we use the standard shifted weight
-//! `w(G) = (max_pop_loss - loss(G)) + ε`, which preserves the intended
-//! ordering (fitter candidates sampled more often).
+//! Deviation from the paper, documented (also in DESIGN.md §6): the
+//! paper's selection weight `p(G) = f(G) / Σ f(G')` is ill-defined for
+//! its own fitness `f(G) = -L(G) <= 0`; we use the standard shifted
+//! weight `w(G) = (max_pop_loss - loss(G)) + ε`, which preserves the
+//! intended ordering (fitter candidates sampled more often).
+//!
+//! Fitness scoring runs on the incremental + parallel engine by default
+//! (see [`fitness`] and DESIGN.md §4.4); the serial from-scratch path is
+//! kept as [`fitness::FitnessBackend::NaiveNative`] and both are
+//! property-tested to agree bit-for-bit.
+
+#![warn(missing_docs)]
 
 pub mod fitness;
 pub mod ops;
@@ -26,7 +33,9 @@ use fitness::{FitnessBackend, FitnessEval};
 /// parent frame. `cols` always contains the parent's target column.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Dst {
+    /// row indices into the parent frame (distinct, unordered)
     pub rows: Vec<u32>,
+    /// column indices into the parent frame (distinct, includes target)
     pub cols: Vec<u32>,
 }
 
@@ -84,7 +93,13 @@ pub struct GenDstConfig {
     pub convergence_eps: f64,
     /// early-stop: generations without improvement tolerated
     pub convergence_patience: usize,
+    /// fitness engine (default: the incremental + parallel native engine)
     pub backend: FitnessBackend,
+    /// worker threads for population scoring: 0 = auto (all cores when
+    /// the fill is big enough to amortize spawning, serial otherwise).
+    /// The thread count never changes results.
+    pub threads: usize,
+    /// RNG seed; identical seeds give identical runs
     pub seed: u64,
 }
 
@@ -98,7 +113,8 @@ impl Default for GenDstConfig {
             p_rc: 0.9,
             convergence_eps: 1e-6,
             convergence_patience: 5,
-            backend: FitnessBackend::Native,
+            backend: FitnessBackend::Incremental,
+            threads: 0,
             seed: 0,
         }
     }
@@ -107,25 +123,57 @@ impl Default for GenDstConfig {
 /// Result of a Gen-DST run.
 #[derive(Debug, Clone)]
 pub struct GenDstResult {
+    /// the best subset found, indices sorted
     pub dst: Dst,
     /// L(r, c) of the returned subset
     pub loss: f64,
     /// F(D) the search preserved
     pub f_full: f64,
+    /// subset-measure evaluations actually computed
     pub fitness_evals: usize,
+    /// evaluations skipped by loss memoization (cross-generation memo
+    /// hits + in-population duplicate subsets)
+    pub memo_hits: usize,
+    /// generations executed before convergence or the ψ budget
     pub generations_run: usize,
+    /// wall-clock of the whole search
     pub elapsed_s: f64,
 }
 
-/// One GA candidate with cached loss.
+/// One GA candidate: row/column chromosomes, the cached loss, and the
+/// incremental engine's per-column fitness cache (histograms +
+/// entropies; `None` until the candidate is first scored by the
+/// incremental backend, or after an operation with no usable delta).
 #[derive(Debug, Clone)]
 pub struct Candidate {
+    /// row chromosome (distinct row indices, unordered)
     pub rows: Vec<u32>,
+    /// column chromosome (distinct column indices, target always present)
     pub cols: Vec<u32>,
+    /// cached L(rows, cols); `None` marks the candidate dirty
     pub loss: Option<f64>,
+    /// incremental fitness state (see [`fitness::CandidateCache`])
+    pub cache: Option<fitness::CandidateCache>,
 }
 
 /// Run Gen-DST on `frame` for a subset of size (n, m).
+///
+/// Deterministic per seed, for every backend and thread count; the
+/// `Incremental` and `NaiveNative` backends produce identical results.
+///
+/// ```
+/// use substrat::data::{registry, CodeMatrix};
+/// use substrat::gendst::{default_dst_size, gen_dst, GenDstConfig};
+/// use substrat::measures::entropy::EntropyMeasure;
+///
+/// let frame = registry::load("D2", 0.05, 0);
+/// let codes = CodeMatrix::from_frame(&frame);
+/// let (n, m) = default_dst_size(frame.n_rows, frame.n_cols());
+/// let cfg = GenDstConfig { generations: 3, population: 10, ..Default::default() };
+/// let res = gen_dst(&frame, &codes, &EntropyMeasure, n, m, &cfg);
+/// res.dst.validate(frame.n_rows, frame.n_cols(), frame.target).unwrap();
+/// assert!(res.loss >= 0.0);
+/// ```
 pub fn gen_dst(
     frame: &Frame,
     codes: &CodeMatrix,
@@ -140,6 +188,7 @@ pub fn gen_dst(
     let target = frame.target as u32;
     let mut rng = Rng::new(cfg.seed);
     let mut eval = FitnessEval::new(frame, codes, measure, cfg.backend);
+    eval.threads = cfg.threads;
 
     // P_0: φ random candidates, target pinned (Algorithm 1 line 4)
     let mut pop: Vec<Candidate> = (0..cfg.population)
@@ -194,6 +243,7 @@ pub fn gen_dst(
         loss: best.loss.unwrap(),
         f_full: eval.f_full,
         fitness_evals: eval.evals,
+        memo_hits: eval.memo_hits,
         generations_run,
         elapsed_s: sw.elapsed_s(),
     }
@@ -236,7 +286,7 @@ mod tests {
 
         // GA must beat the average random candidate by a clear margin
         let mut rng = Rng::new(99);
-        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Native);
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::NaiveNative);
         let mut rand_losses = Vec::new();
         for _ in 0..50 {
             let c = ops::random_candidate(&f, n, m, &mut rng);
@@ -281,6 +331,45 @@ mod tests {
         let b = gen_dst(&f, &codes, &EntropyMeasure, 20, 3, &cfg);
         assert_eq!(a.dst, b.dst);
         assert_eq!(a.loss, b.loss);
+    }
+
+    #[test]
+    fn incremental_backend_matches_naive_reference() {
+        let (f, codes) = small_frame();
+        let mk = |backend| GenDstConfig {
+            generations: 8,
+            population: 30,
+            backend,
+            seed: 3,
+            ..Default::default()
+        };
+        let naive = gen_dst(&f, &codes, &EntropyMeasure, 25, 3, &mk(FitnessBackend::NaiveNative));
+        let inc = gen_dst(&f, &codes, &EntropyMeasure, 25, 3, &mk(FitnessBackend::Incremental));
+        // identical RNG streams + bit-identical losses => identical runs
+        assert_eq!(naive.dst, inc.dst, "backends diverged");
+        assert!(
+            (naive.loss - inc.loss).abs() <= 1e-9,
+            "loss divergence: naive {} vs incremental {}",
+            naive.loss,
+            inc.loss
+        );
+        assert_eq!(naive.generations_run, inc.generations_run);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let (f, codes) = small_frame();
+        let mk = |threads| GenDstConfig {
+            generations: 6,
+            population: 24,
+            threads,
+            seed: 17,
+            ..Default::default()
+        };
+        let serial = gen_dst(&f, &codes, &EntropyMeasure, 25, 3, &mk(1));
+        let parallel = gen_dst(&f, &codes, &EntropyMeasure, 25, 3, &mk(4));
+        assert_eq!(serial.dst, parallel.dst);
+        assert_eq!(serial.loss, parallel.loss);
     }
 
     #[test]

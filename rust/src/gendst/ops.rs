@@ -23,12 +23,17 @@ pub fn random_candidate(frame: &Frame, n: usize, m: usize, rng: &mut Rng) -> Can
         rows,
         cols,
         loss: None,
+        cache: None,
     }
 }
 
 /// Mutation (paper §3.3 op 1): with probability p_rc mutate a row index,
 /// otherwise a column index; exactly one gene is replaced by a fresh
 /// index not already present. The target column is never replaced.
+///
+/// The cached loss is always cleared; a carried fitness cache is *not*
+/// dropped — the exact change is noted on it so the incremental engine
+/// can delta-update instead of rebuilding (DESIGN.md §4.4).
 pub(crate) fn mutate(cand: &mut Candidate, frame: &Frame, target: u32, p_rc: f64, rng: &mut Rng) {
     cand.loss = None;
     if rng.bool_with(p_rc) {
@@ -40,7 +45,11 @@ pub(crate) fn mutate(cand: &mut Candidate, frame: &Frame, target: u32, p_rc: f64
         loop {
             let new = rng.u64_below(frame.n_rows as u64) as u32;
             if !cand.rows.contains(&new) {
+                let old = cand.rows[slot];
                 cand.rows[slot] = new;
+                if let Some(cache) = cand.cache.as_mut() {
+                    cache.note_row_swap(old, new);
+                }
                 break;
             }
         }
@@ -57,6 +66,9 @@ pub(crate) fn mutate(cand: &mut Candidate, frame: &Frame, target: u32, p_rc: f64
             let new = rng.u64_below(frame.n_cols() as u64) as u32;
             if !cand.cols.contains(&new) {
                 cand.cols[slot] = new;
+                if let Some(cache) = cand.cache.as_mut() {
+                    cache.note_col_swap(slot);
+                }
                 break;
             }
         }
@@ -117,23 +129,29 @@ pub(crate) fn crossover_pair(
     rng: &mut Rng,
 ) -> (Candidate, Candidate) {
     if rng.bool_with(p_rc) {
-        // rows cross; columns inherited
+        // rows cross; columns inherited. The merged row sets share no
+        // clean delta with either parent, so children start cache-less.
         let n = a.rows.len();
         let s = if n <= 2 { 1 } else { 1 + rng.usize_below(n - 1) };
         let r_ab = cross_sets(&a.rows, &b.rows, s, frame.n_rows, None, rng);
         let r_ba = cross_sets(&b.rows, &a.rows, s, frame.n_rows, None, rng);
         (
-            Candidate { rows: r_ab, cols: a.cols.clone(), loss: None },
-            Candidate { rows: r_ba, cols: b.cols.clone(), loss: None },
+            Candidate { rows: r_ab, cols: a.cols.clone(), loss: None, cache: None },
+            Candidate { rows: r_ba, cols: b.cols.clone(), loss: None, cache: None },
         )
     } else {
+        // columns cross; each child keeps one parent's row set, so the
+        // histograms of columns inherited from THAT parent stay valid —
+        // only swapped-in columns need an O(n) rebuild (DESIGN.md §4.4).
         let m = a.cols.len();
         let s = if m <= 2 { 1 } else { 1 + rng.usize_below(m - 1) };
         let c_ab = cross_sets(&a.cols, &b.cols, s, frame.n_cols(), Some(target), rng);
         let c_ba = cross_sets(&b.cols, &a.cols, s, frame.n_cols(), Some(target), rng);
+        let cache_ab = a.cache.as_ref().and_then(|c| c.project_cols(&a.cols, &c_ab));
+        let cache_ba = b.cache.as_ref().and_then(|c| c.project_cols(&b.cols, &c_ba));
         (
-            Candidate { rows: a.rows.clone(), cols: c_ab, loss: None },
-            Candidate { rows: b.rows.clone(), cols: c_ba, loss: None },
+            Candidate { rows: a.rows.clone(), cols: c_ab, loss: None, cache: cache_ab },
+            Candidate { rows: b.rows.clone(), cols: c_ba, loss: None, cache: cache_ba },
         )
     }
 }

@@ -1,10 +1,16 @@
 //! SubStrat: a subset-based strategy for faster AutoML (VLDB 2022) —
 //! full-system reproduction on a Rust + JAX + Pallas three-layer stack.
 //!
-//! Layer map (DESIGN.md):
-//! * L3 (this crate): Gen-DST genetic search, the AutoML substrate, the
-//!   10 baseline subset strategies, the SubStrat orchestrator, and the
-//!   experiment harness reproducing every table/figure in the paper.
+//! Start with the repo-root `README.md` for the quickstart and
+//! `DESIGN.md` for the architecture; the layer map below is the short
+//! version of DESIGN.md §2.
+//!
+//! Layer map (DESIGN.md §2):
+//! * L3 (this crate): Gen-DST genetic search with the incremental +
+//!   parallel fitness engine ([`gendst::fitness`], DESIGN.md §4.4), the
+//!   AutoML substrate, the baseline subset strategies, the SubStrat
+//!   orchestrator, and the experiment harness reproducing every
+//!   table/figure in the paper.
 //! * L2/L1 (python/, build-time only): JAX graphs + the Pallas entropy
 //!   kernel, AOT-lowered to `artifacts/*.hlo.txt` and executed here via
 //!   PJRT (`runtime`).

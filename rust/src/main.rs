@@ -94,6 +94,7 @@ fn cmd_gendst(args: &Args) {
     let cfg = GenDstConfig {
         generations: args.usize_or("generations", 30),
         population: args.usize_or("population", 100),
+        threads: args.usize_or("threads", 0),
         seed: args.u64_or("seed", 0),
         ..Default::default()
     };
@@ -105,8 +106,8 @@ fn cmd_gendst(args: &Args) {
     );
     let res = gendst::gen_dst(&f, &codes, measure.as_ref(), n, m, &cfg);
     println!(
-        "loss={:.6} F(D)={:.4} evals={} generations={} time={:.2}s",
-        res.loss, res.f_full, res.fitness_evals, res.generations_run, res.elapsed_s
+        "loss={:.6} F(D)={:.4} evals={} memo_hits={} generations={} time={:.2}s",
+        res.loss, res.f_full, res.fitness_evals, res.memo_hits, res.generations_run, res.elapsed_s
     );
     println!("cols: {:?}", res.dst.cols);
 }

@@ -25,14 +25,34 @@ pub fn entropy_of_counts(counts: &[u32], n: usize) -> f64 {
     h
 }
 
-/// Entropy of one column over the given rows (stack histogram).
+/// Value-frequency histogram of one column over the given rows: the
+/// primitive the incremental Gen-DST fitness engine caches per candidate
+/// column (DESIGN.md §4.4). Full build is O(|rows|).
 #[inline]
-pub fn column_entropy(codes: &CodeMatrix, col: usize, rows: &[u32]) -> f64 {
+pub fn column_hist(codes: &CodeMatrix, col: usize, rows: &[u32]) -> [u32; K_BINS] {
     let mut counts = [0u32; K_BINS];
     let column = codes.column(col);
     for &r in rows {
         counts[column[r as usize] as usize] += 1;
     }
+    counts
+}
+
+/// Delta-update a cached column histogram after a row swap
+/// (`old_row` left the subset, `new_row` entered it): O(1) instead of an
+/// O(|rows|) rebuild. `hist` must currently count a row set containing
+/// `old_row` and not `new_row`; counts stay exact because they are
+/// integers (no float drift across arbitrarily long update chains).
+#[inline]
+pub fn hist_swap_row(hist: &mut [u32; K_BINS], column: &[u16], old_row: u32, new_row: u32) {
+    hist[column[old_row as usize] as usize] -= 1;
+    hist[column[new_row as usize] as usize] += 1;
+}
+
+/// Entropy of one column over the given rows (stack histogram).
+#[inline]
+pub fn column_entropy(codes: &CodeMatrix, col: usize, rows: &[u32]) -> f64 {
+    let counts = column_hist(codes, col, rows);
     entropy_of_counts(&counts, rows.len())
 }
 
@@ -47,7 +67,24 @@ pub fn column_entropy_full(codes: &CodeMatrix, col: usize) -> f64 {
     entropy_of_counts(&counts, codes.n_rows)
 }
 
-/// Mean column entropy of the subset D[rows, cols].
+/// Mean column entropy of the subset D[rows, cols] (paper Def. 3.4).
+///
+/// This is the from-scratch reference the incremental fitness engine is
+/// property-tested against; per-column entropies depend only on the
+/// index *sets*, so the result is row/column-order invariant.
+///
+/// ```
+/// use substrat::data::{registry, CodeMatrix};
+/// use substrat::measures::entropy::{full_entropy, subset_entropy};
+///
+/// let frame = registry::load("D2", 0.05, 0);
+/// let codes = CodeMatrix::from_frame(&frame);
+/// let rows: Vec<u32> = (0..frame.n_rows as u32).collect();
+/// let cols: Vec<u32> = (0..frame.n_cols() as u32).collect();
+/// // the full index sets reproduce F(D) exactly
+/// let h = subset_entropy(&codes, &rows, &cols);
+/// assert!((h - full_entropy(&codes)).abs() < 1e-12);
+/// ```
 pub fn subset_entropy(codes: &CodeMatrix, rows: &[u32], cols: &[u32]) -> f64 {
     if cols.is_empty() {
         return 0.0;
@@ -173,6 +210,36 @@ mod tests {
         let rows: Vec<u32> = (0..10).collect();
         let cols: Vec<u32> = (0..5).collect();
         assert!((full_entropy(&codes) - subset_entropy(&codes, &rows, &cols)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hist_swap_row_matches_rebuild() {
+        use crate::util::rng::Rng;
+        let f = paper_table1();
+        let codes = CodeMatrix::from_frame(&f);
+        let mut rng = Rng::new(17);
+        for _ in 0..200 {
+            let mut rows = rng.sample_distinct(10, 5);
+            let col = rng.usize_below(5);
+            let mut hist = column_hist(&codes, col, &rows);
+            // swap a member row for a fresh one, delta-update the hist
+            let slot = rng.usize_below(rows.len());
+            let new = loop {
+                let r = rng.u64_below(10) as u32;
+                if !rows.contains(&r) {
+                    break r;
+                }
+            };
+            let old = rows[slot];
+            rows[slot] = new;
+            hist_swap_row(&mut hist, codes.column(col), old, new);
+            assert_eq!(hist, column_hist(&codes, col, &rows));
+            // and the entropy from the delta-updated hist is bit-identical
+            assert_eq!(
+                entropy_of_counts(&hist, rows.len()),
+                column_entropy(&codes, col, &rows)
+            );
+        }
     }
 
     #[test]

@@ -3,6 +3,8 @@
 //! coefficient-of-variation as alternatives, all implemented here so the
 //! Gen-DST optimizer stays measure-generic.
 
+#![warn(missing_docs)]
+
 pub mod entropy;
 pub mod other;
 
@@ -11,6 +13,7 @@ use crate::data::{CodeMatrix, Frame};
 /// A dataset characteristic evaluated on a (rows, cols) subset view.
 /// Implementations must be pure and row/col-order invariant.
 pub trait DatasetMeasure: Sync {
+    /// Stable identifier used by [`by_name`] and the CLI.
     fn name(&self) -> &'static str;
 
     /// F(D[rows, cols]). `codes` is the binned view of `frame`; measures

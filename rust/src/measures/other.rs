@@ -14,6 +14,7 @@ fn subset_column(frame: &Frame, col: u32, rows: &[u32]) -> Vec<f64> {
 /// Mean per-column p-norm, normalized by row count so that subsets are
 /// comparable to the full dataset: (Σ|x|^p / n)^(1/p) averaged over cols.
 pub struct PNormMeasure {
+    /// the norm order (the paper's example uses p = 2)
     pub p: f64,
 }
 

@@ -1,0 +1,107 @@
+//! Order-independent subset hashing for the Gen-DST loss memo
+//! (DESIGN.md §4.4): a `(rows, cols)` pair must hash to the same key no
+//! matter how the index vectors are ordered, because GA candidates carry
+//! their genes in arbitrary (shuffled) order while the loss only depends
+//! on the index *sets*.
+//!
+//! The key is 128 bits built from two independent commutative
+//! accumulators (wrapping sum and xor of per-element mixes, finalized
+//! separately), which makes accidental collisions between distinct
+//! subsets astronomically unlikely — good enough for a memo whose worst
+//! failure is returning the loss of a colliding subset.
+
+/// One round of splitmix64 (golden-ratio increment + finalizer) — a
+/// cheap, well-distributed 64-bit mix. This is the crate's single
+/// definition of the splitmix64 constants; [`crate::util::rng`] seeding
+/// delegates here.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Domain tags so that row index `i` and column index `i` hash
+/// differently, and so the two accumulator streams are independent.
+const ROW_TAG: u64 = 0x524F_5753_0000_0001; // "ROWS"
+const COL_TAG: u64 = 0x434F_4C53_0000_0002; // "COLS"
+const STREAM_B: u64 = 0xA5A5_5A5A_C3C3_3C3C;
+
+/// 128-bit order-independent key of an index-set pair.
+///
+/// Properties (see the tests):
+/// * permutation-invariant in both `rows` and `cols`;
+/// * sensitive to swapping an element between the row and column sets;
+/// * sensitive to the set sizes (folded into the finalizer).
+pub fn subset_key(rows: &[u32], cols: &[u32]) -> (u64, u64) {
+    let mut sum = 0u64;
+    let mut xor = 0u64;
+    for &r in rows {
+        let h = mix64(r as u64 ^ ROW_TAG);
+        sum = sum.wrapping_add(h);
+        xor ^= mix64(h ^ STREAM_B);
+    }
+    for &c in cols {
+        let h = mix64(c as u64 ^ COL_TAG);
+        sum = sum.wrapping_add(h);
+        xor ^= mix64(h ^ STREAM_B);
+    }
+    let lens = ((rows.len() as u64) << 32) | cols.len() as u64;
+    (mix64(sum ^ lens), mix64(xor ^ mix64(lens)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn permutation_invariant() {
+        let a = subset_key(&[1, 2, 3, 4], &[0, 7, 9]);
+        let b = subset_key(&[4, 2, 1, 3], &[9, 0, 7]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn row_vs_col_membership_matters() {
+        let a = subset_key(&[1, 2, 3], &[4]);
+        let b = subset_key(&[1, 2, 4], &[3]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn element_change_changes_key() {
+        let a = subset_key(&[1, 2, 3], &[0, 4]);
+        let b = subset_key(&[1, 2, 5], &[0, 4]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn empty_sets_are_distinct_from_small_sets() {
+        assert_ne!(subset_key(&[], &[]), subset_key(&[0], &[]));
+        assert_ne!(subset_key(&[0], &[]), subset_key(&[], &[0]));
+    }
+
+    #[test]
+    fn no_collisions_across_random_distinct_subsets() {
+        let mut rng = Rng::new(71);
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..20_000 {
+            let n = 1 + rng.usize_below(30);
+            let m = 1 + rng.usize_below(8);
+            let mut rows = rng.sample_distinct(500, n);
+            let mut cols = rng.sample_distinct(40, m);
+            rows.sort_unstable();
+            cols.sort_unstable();
+            let key = subset_key(&rows, &cols);
+            if let Some(prev) = seen.insert(key, (rows.clone(), cols.clone())) {
+                assert_eq!(
+                    prev,
+                    (rows, cols),
+                    "collision between distinct subsets on key {key:?}"
+                );
+            }
+        }
+    }
+}

@@ -16,6 +16,15 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// All hardware threads. Right for callers that block on the scoped
+/// `parallel_map` (the coordinator core idles anyway), such as the
+/// Gen-DST fitness fills.
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
 /// Apply `f` to every item in parallel, preserving order of results.
 ///
 /// `f` must be `Sync` (it is shared across workers); items are only read.

@@ -13,12 +13,13 @@ pub struct Rng {
     gauss: Option<f64>,
 }
 
+/// One splitmix64 step: advance `state` by the golden-ratio increment
+/// and return the mixed output. The mixer itself is the shared
+/// [`crate::util::hash::mix64`] (one definition of the constants).
 fn splitmix64(state: &mut u64) -> u64 {
-    *state = state.wrapping_add(0x9E3779B97F4A7C15);
-    let mut z = *state;
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-    z ^ (z >> 31)
+    let out = crate::util::hash::mix64(*state);
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    out
 }
 
 impl Rng {

@@ -120,8 +120,12 @@ fn gendst_xla_backend_agrees_with_native() {
         seed: 11,
         ..Default::default()
     };
-    let native = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &mk(FitnessBackend::Native));
+    let native = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &mk(FitnessBackend::NaiveNative));
+    let inc = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &mk(FitnessBackend::Incremental));
     let xla = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &mk(FitnessBackend::Xla));
+    // the two native engines must agree exactly (bit-identical losses)
+    assert_eq!(native.dst, inc.dst, "incremental engine diverged");
+    assert!((native.loss - inc.loss).abs() <= 1e-9);
     // identical seeds and near-identical numerics (f32 vs f64) must yield
     // equally good subsets; allow tiny slack for tie-breaking divergence
     assert!(
@@ -137,7 +141,7 @@ fn gendst_xla_backend_agrees_with_native() {
 fn xla_fitness_eval_matches_native_losses() {
     let f = registry::load("D2", 0.04, 8);
     let codes = CodeMatrix::from_frame(&f);
-    let mut nat = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Native);
+    let mut nat = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::NaiveNative);
     let mut xla = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Xla);
     let mut rng = Rng::new(9);
     for _ in 0..6 {
