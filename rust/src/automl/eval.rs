@@ -1,14 +1,35 @@
-//! Pipeline evaluation: fit the full pipeline (scaler → selector →
-//! model) per CV fold and return the mean validation accuracy. This is
-//! the expensive inner loop every AutoML searcher pays per configuration
-//! — and the cost that scales with dataset size, which is exactly what
-//! SubStrat attacks.
+//! Pipeline evaluation: the expensive inner loop every AutoML searcher
+//! pays per configuration — and the cost that scales with dataset size,
+//! which is exactly what SubStrat attacks.
+//!
+//! Since PR 2 this is an *engine*, not a bare function (DESIGN.md §5.1):
+//!
+//! * [`FoldPlan`] — stratified CV folds computed **once per run** from
+//!   the run seed, so every configuration is scored on identical folds
+//!   and scores are comparable (the seed's per-eval re-splitting made
+//!   `argmax` pick on fold noise).
+//! * [`EvalEngine`] — scores whole proposal batches through
+//!   [`crate::util::pool::parallel_map`], with a `PipelineConfig`
+//!   fingerprint memo that serves duplicate configurations (within a
+//!   batch, across a run, or across the shared subset/fine-tune runs of
+//!   `run_substrat`) bit-identically instead of re-fitting them.
+//! * [`EvalPolicy`] — the engine knobs: worker threads, memoization, and
+//!   Layered-TPOT-style fold-level early termination (off by default for
+//!   bit-compatibility with exhaustive scoring).
+//!
+//! Determinism: the model-fit RNG of each (configuration, fold) cell is
+//! derived from `(run_seed, config fingerprint, fold index)`, never from
+//! a shared mutable stream — so scores are invariant to evaluation
+//! order, thread count, and memo hits (property-tested in `automl`).
 
+use std::collections::HashMap;
+
+use crate::automl::space::PipelineConfig;
 use crate::data::{split, Frame, Matrix};
 use crate::models::preproc::{FittedScaler, FittedSelector};
 use crate::models::{accuracy, Classifier};
-use crate::automl::space::PipelineConfig;
 use crate::util::rng::Rng;
+use crate::util::{hash, pool};
 
 /// A fully fitted pipeline, ready to predict on raw feature matrices.
 pub struct FittedPipeline {
@@ -58,23 +79,286 @@ pub fn fit_on_frame(cfg: &PipelineConfig, frame: &Frame, rng: &mut Rng) -> Fitte
     fit_pipeline(cfg, &x, &y, frame.n_classes(), rng)
 }
 
-/// Mean stratified k-fold CV accuracy of a configuration on a frame.
-/// This is the searchers' objective.
-pub fn cv_score(cfg: &PipelineConfig, frame: &Frame, k_folds: usize, rng: &mut Rng) -> f64 {
+/// Domain tag separating the fold-split RNG stream from everything else
+/// derived from the run seed.
+const FOLD_STREAM: u64 = 0x464F_4C44_504C_414E; // "FOLDPLAN"
+
+/// Run-wide CV fold plan: the stratified k-fold split every
+/// configuration of one AutoML run is scored on.
+///
+/// Folds are a pure function of `(labels, k_folds, run_seed)` — scoring
+/// order, thread count and memoization can never change them, which is
+/// what makes CV scores comparable across configurations (the
+/// fold-resplitting bugfix of PR 2).
+///
+/// ```
+/// use substrat::automl::eval::FoldPlan;
+/// use substrat::data::registry;
+///
+/// let frame = registry::load("D2", 0.02, 1);
+/// let a = FoldPlan::new(&frame, 3, 42);
+/// let b = FoldPlan::new(&frame, 3, 42);
+/// assert_eq!(a.folds(), b.folds()); // depends only on the run seed
+/// ```
+pub struct FoldPlan {
+    folds: Vec<(Vec<u32>, Vec<u32>)>,
+}
+
+impl FoldPlan {
+    /// Split `frame` into `k_folds` stratified folds derived from
+    /// `run_seed` (computed once; reused for every configuration).
+    pub fn new(frame: &Frame, k_folds: usize, run_seed: u64) -> FoldPlan {
+        FoldPlan {
+            folds: split::seeded_stratified_kfold(&frame.labels(), k_folds, run_seed ^ FOLD_STREAM),
+        }
+    }
+
+    /// The planned (train_rows, valid_rows) index pairs.
+    pub fn folds(&self) -> &[(Vec<u32>, Vec<u32>)] {
+        &self.folds
+    }
+
+    /// Number of folds.
+    pub fn k(&self) -> usize {
+        self.folds.len()
+    }
+}
+
+/// Engine knobs (DESIGN.md §5.1). The defaults keep results bit-identical
+/// to exhaustive serial scoring — parallelism and memoization are pure
+/// speed, early termination is the one semantic trade and ships off.
+///
+/// ```
+/// use substrat::automl::eval::EvalPolicy;
+/// let p = EvalPolicy::default();
+/// assert_eq!(p.threads, 0); // auto
+/// assert!(p.memoize);
+/// assert!(!p.early_termination); // bit-compatible by default
+/// ```
+#[derive(Debug, Clone)]
+pub struct EvalPolicy {
+    /// worker threads for batch scoring; 0 = auto (all cores)
+    pub threads: usize,
+    /// serve duplicate configurations from the fingerprint memo
+    pub memoize: bool,
+    /// Layered-TPOT-style fold pruning: stop a configuration's remaining
+    /// folds once its optimistic best-possible mean can no longer beat
+    /// the run's best score so far. A pruned score is always strictly
+    /// below the incumbent at its evaluation time, so the run's winner
+    /// and its exact score are preserved (see the
+    /// `early_termination_never_changes_the_winner` regression); only
+    /// non-winning history entries may differ from exhaustive scoring.
+    pub early_termination: bool,
+}
+
+impl Default for EvalPolicy {
+    fn default() -> Self {
+        EvalPolicy {
+            threads: 0,
+            memoize: true,
+            early_termination: false,
+        }
+    }
+}
+
+/// The batched, parallel, memoized evaluation engine of one AutoML run —
+/// or of one whole SubStrat flow: `run_substrat` threads a single engine
+/// through the subset and fine-tune runs so the warm-start configuration
+/// is never paid for twice (DESIGN.md §5.1).
+///
+/// The memo is keyed by configuration fingerprint alone. Within one run
+/// that is exactly transparent (same frame, same fold plan, same fit
+/// RNGs). Sharing an engine across runs is a deliberate semantic
+/// choice: a served score reproduces the *first* computation, which may
+/// have run on a different frame or seed — the documented
+/// subset-to-fine-tune approximation of `run_substrat`. Use one engine
+/// per run (as `run_automl` does) when strict per-frame scores matter.
+pub struct EvalEngine {
+    /// engine knobs
+    pub policy: EvalPolicy,
+    /// configurations actually fitted and CV-scored
+    pub scored: usize,
+    /// evaluations served from the fingerprint memo (including in-batch
+    /// duplicates)
+    pub memo_hits: usize,
+    /// fingerprint → CV score of every configuration this engine scored
+    memo: HashMap<(u64, u64), f64>,
+}
+
+impl EvalEngine {
+    /// Fresh engine (empty memo, zeroed counters).
+    pub fn new(policy: EvalPolicy) -> EvalEngine {
+        EvalEngine {
+            policy,
+            scored: 0,
+            memo_hits: 0,
+            memo: HashMap::new(),
+        }
+    }
+
+    /// Score a batch of configurations on `frame` under the run's fold
+    /// plan. Returns one CV score per configuration, in batch order.
+    ///
+    /// Memo hits (cross-run and in-batch duplicates) are served without
+    /// re-fitting; the remainder is scored through `parallel_map`.
+    /// `best_so_far` is the run's incumbent score, consulted only when
+    /// `policy.early_termination` is on (pass `f64::NEG_INFINITY` when
+    /// there is no incumbent).
+    pub fn score_batch(
+        &mut self,
+        batch: &[PipelineConfig],
+        frame: &Frame,
+        plan: &FoldPlan,
+        run_seed: u64,
+        best_so_far: f64,
+    ) -> Vec<f64> {
+        let keys: Vec<(u64, u64)> = batch.iter().map(|c| c.fingerprint()).collect();
+        let mut out: Vec<Option<f64>> = vec![None; batch.len()];
+        // memo pre-pass, de-duplicating identical configs inside the batch
+        let mut to_compute: Vec<usize> = Vec::new();
+        let mut dups: Vec<(usize, usize)> = Vec::new(); // (batch idx, pos in to_compute)
+        let mut in_batch: HashMap<(u64, u64), usize> = HashMap::new();
+        for i in 0..batch.len() {
+            if self.policy.memoize {
+                if let Some(&s) = self.memo.get(&keys[i]) {
+                    out[i] = Some(s);
+                    self.memo_hits += 1;
+                    continue;
+                }
+                if let Some(&pos) = in_batch.get(&keys[i]) {
+                    dups.push((i, pos));
+                    self.memo_hits += 1;
+                    continue;
+                }
+                in_batch.insert(keys[i], to_compute.len());
+            }
+            to_compute.push(i);
+        }
+        if to_compute.is_empty() {
+            return out.into_iter().map(|s| s.unwrap()).collect();
+        }
+
+        let prune_below = if self.policy.early_termination && best_so_far.is_finite() {
+            Some(best_so_far)
+        } else {
+            None
+        };
+        // materialize the training view once per batch, not per config
+        let (x, y) = frame.to_xy();
+        let n_classes = frame.n_classes();
+        let n_threads = pool::resolve_threads(self.policy.threads).min(to_compute.len());
+        let computed: Vec<(f64, bool)> = pool::parallel_map(&to_compute, n_threads, |_, &i| {
+            cv_score_on(&batch[i], &x, &y, n_classes, plan, run_seed, prune_below)
+        });
+        self.scored += to_compute.len();
+        for (pos, &i) in to_compute.iter().enumerate() {
+            let (score, pruned) = computed[pos];
+            out[i] = Some(score);
+            // truncated (pruned) scores never enter the memo: they are
+            // only meaningful against the incumbent they were pruned
+            // under, and serving one later could displace a winner
+            if self.policy.memoize && !pruned {
+                self.memo.insert(keys[i], score);
+            }
+        }
+        for (i, pos) in dups {
+            out[i] = Some(computed[pos].0);
+        }
+        out.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+/// Independent model-fit RNG of one (configuration, fold) cell, derived
+/// from the run seed, the config fingerprint and the fold index — never
+/// from a shared stream, so the cell's score does not depend on what was
+/// scored before it or on which thread runs it.
+fn fold_fit_rng(run_seed: u64, key: (u64, u64), fold: usize) -> Rng {
+    let fold_tag = (fold as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    Rng::new(hash::mix64(run_seed ^ key.0 ^ key.1.rotate_left(31) ^ fold_tag))
+}
+
+/// Mean stratified k-fold CV accuracy of a configuration under a fold
+/// plan. This is the searchers' objective.
+///
+/// Folds whose train or validation half is empty (degenerate for tiny
+/// frames — realistic for sqrt(N) subsets with many classes) are
+/// skipped; if **every** fold is degenerate the score is defined as 0.0
+/// (never NaN), so best-selection stays well-defined.
+///
+/// With `prune_below = Some(best)`, scoring stops at the first fold
+/// boundary where even perfect remaining folds cannot lift the mean to
+/// `best` (Layered-TPOT-style early termination). The truncated mean
+/// that is returned is then itself strictly below `best` — a pruned
+/// configuration can never displace the incumbent (it may differ from
+/// its own exact score in either direction, but stays under the bar).
+pub fn cv_score_planned(
+    cfg: &PipelineConfig,
+    frame: &Frame,
+    plan: &FoldPlan,
+    run_seed: u64,
+    prune_below: Option<f64>,
+) -> f64 {
     let (x, y) = frame.to_xy();
-    let n_classes = frame.n_classes();
-    let folds = split::stratified_kfold(&y, k_folds, rng);
-    let mut accs = Vec::with_capacity(folds.len());
-    for (train_rows, valid_rows) in folds {
-        let (xt, yt) = gather(&x, &y, &train_rows);
-        let (xv, yv) = gather(&x, &y, &valid_rows);
+    cv_score_on(cfg, &x, &y, frame.n_classes(), plan, run_seed, prune_below).0
+}
+
+/// [`cv_score_planned`] on a pre-materialized (x, y) view — the form the
+/// engine uses so one `to_xy` serves a whole batch. Returns the score
+/// and whether early termination truncated it (a truncated score must
+/// never enter the memo).
+fn cv_score_on(
+    cfg: &PipelineConfig,
+    x: &Matrix,
+    y: &[u32],
+    n_classes: usize,
+    plan: &FoldPlan,
+    run_seed: u64,
+    prune_below: Option<f64>,
+) -> (f64, bool) {
+    let key = cfg.fingerprint();
+    let k = plan.k();
+    let mut accs: Vec<f64> = Vec::with_capacity(k);
+    let mut sum = 0.0f64;
+    let mut pruned = false;
+    for (fi, (train_rows, valid_rows)) in plan.folds().iter().enumerate() {
+        if let Some(best) = prune_below {
+            // optimistic bound: every remaining fold scores a perfect 1.0
+            // (monotone in the remaining count, so it also dominates
+            // futures where some remaining folds are degenerate)
+            let remaining = (k - fi) as f64;
+            let bound = (sum + remaining) / (accs.len() as f64 + remaining);
+            if bound < best {
+                pruned = true;
+                break;
+            }
+        }
+        let (xt, yt) = gather(x, y, train_rows);
+        let (xv, yv) = gather(x, y, valid_rows);
         if yt.is_empty() || yv.is_empty() {
             continue;
         }
-        let pipe = fit_pipeline(cfg, &xt, &yt, n_classes, rng);
-        accs.push(accuracy(&pipe.predict(&xv), &yv));
+        let mut rng = fold_fit_rng(run_seed, key, fi);
+        let pipe = fit_pipeline(cfg, &xt, &yt, n_classes, &mut rng);
+        let a = accuracy(&pipe.predict(&xv), &yv);
+        sum += a;
+        accs.push(a);
     }
-    crate::util::stats::mean(&accs)
+    if accs.is_empty() {
+        // every fold degenerate (or pruned before the first playable
+        // fold): defined as 0.0, never mean(&[]) -> see the
+        // degenerate_folds_score_zero_not_nan regression
+        return (0.0, pruned);
+    }
+    (crate::util::stats::mean(&accs), pruned)
+}
+
+/// Convenience single-config entry: build the seed-derived fold plan and
+/// score `cfg` exhaustively. Fold assignment depends only on
+/// `(frame labels, k_folds, seed)` — two configs scored in either order
+/// get identical folds.
+pub fn cv_score(cfg: &PipelineConfig, frame: &Frame, k_folds: usize, seed: u64) -> f64 {
+    let plan = FoldPlan::new(frame, k_folds, seed);
+    cv_score_planned(cfg, frame, &plan, seed, None)
 }
 
 fn gather(x: &Matrix, y: &[u32], rows: &[u32]) -> (Matrix, Vec<u32>) {
@@ -90,7 +374,7 @@ fn gather(x: &Matrix, y: &[u32], rows: &[u32]) -> (Matrix, Vec<u32>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::registry;
+    use crate::data::{registry, Column};
     use crate::models::preproc::{ScalerSpec, SelectorSpec};
     use crate::models::ModelSpec;
 
@@ -108,8 +392,7 @@ mod tests {
     #[test]
     fn cv_score_reasonable_on_learnable_data() {
         let f = registry::load("D3", 0.08, 1); // linear, 800 rows
-        let mut rng = Rng::new(1);
-        let score = cv_score(&tree_cfg(), &f, 3, &mut rng);
+        let score = cv_score(&tree_cfg(), &f, 3, 1);
         assert!(score > 0.6, "tree should beat chance on D3: {score}");
         assert!(score <= 1.0);
     }
@@ -146,8 +429,120 @@ mod tests {
     #[test]
     fn cv_score_deterministic_per_seed() {
         let f = registry::load("D2", 0.05, 4);
-        let a = cv_score(&tree_cfg(), &f, 3, &mut Rng::new(7));
-        let b = cv_score(&tree_cfg(), &f, 3, &mut Rng::new(7));
+        let a = cv_score(&tree_cfg(), &f, 3, 7);
+        let b = cv_score(&tree_cfg(), &f, 3, 7);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn degenerate_folds_score_zero_not_nan() {
+        // single-row frame: every fold has an empty train or valid half,
+        // so every fold is skipped — the defined score is 0.0 (the seed
+        // returned mean(&[]) here, poisoning argmax best-selection)
+        let f = Frame::new(
+            "degenerate",
+            vec![
+                Column::numeric("x", vec![1.0]),
+                Column::categorical("y", vec![0.0]),
+            ],
+            1,
+        );
+        let s = cv_score(&tree_cfg(), &f, 3, 1);
+        assert_eq!(s, 0.0);
+        assert!(!s.is_nan());
+    }
+
+    #[test]
+    fn memo_hit_bit_identical_to_fresh_score() {
+        let f = registry::load("D2", 0.03, 5);
+        let plan = FoldPlan::new(&f, 3, 21);
+        let cfg = tree_cfg();
+        // reference: a fresh engine scoring once
+        let mut fresh = EvalEngine::new(EvalPolicy::default());
+        let want = fresh.score_batch(&[cfg.clone()], &f, &plan, 21, f64::NEG_INFINITY)[0];
+        // scored, then served from the memo: bit-identical
+        let mut engine = EvalEngine::new(EvalPolicy::default());
+        let a = engine.score_batch(&[cfg.clone()], &f, &plan, 21, f64::NEG_INFINITY)[0];
+        let b = engine.score_batch(&[cfg.clone()], &f, &plan, 21, f64::NEG_INFINITY)[0];
+        assert_eq!(engine.scored, 1, "memo hit must not re-fit");
+        assert_eq!(engine.memo_hits, 1);
+        assert!(a.to_bits() == b.to_bits() && a.to_bits() == want.to_bits());
+    }
+
+    #[test]
+    fn in_batch_duplicates_are_scored_once() {
+        let f = registry::load("D2", 0.03, 6);
+        let plan = FoldPlan::new(&f, 3, 22);
+        let cfg = tree_cfg();
+        let mut engine = EvalEngine::new(EvalPolicy::default());
+        let scores =
+            engine.score_batch(&[cfg.clone(), cfg.clone()], &f, &plan, 22, f64::NEG_INFINITY);
+        assert_eq!(engine.scored, 1);
+        assert_eq!(engine.memo_hits, 1);
+        assert_eq!(scores[0].to_bits(), scores[1].to_bits());
+    }
+
+    #[test]
+    fn scores_invariant_to_batch_thread_count() {
+        let f = registry::load("D2", 0.03, 7);
+        let plan = FoldPlan::new(&f, 3, 23);
+        let mut rng = Rng::new(8);
+        let space = crate::automl::space::ConfigSpace::default();
+        let batch: Vec<PipelineConfig> = (0..4).map(|_| space.sample(&mut rng)).collect();
+        let mut serial = EvalEngine::new(EvalPolicy {
+            threads: 1,
+            ..Default::default()
+        });
+        let mut parallel = EvalEngine::new(EvalPolicy {
+            threads: 4,
+            ..Default::default()
+        });
+        let a = serial.score_batch(&batch, &f, &plan, 23, f64::NEG_INFINITY);
+        let b = parallel.score_batch(&batch, &f, &plan, 23, f64::NEG_INFINITY);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "thread count changed a score");
+        }
+    }
+
+    #[test]
+    fn pruned_scores_never_enter_the_memo() {
+        // a truncated score is only meaningful against the incumbent it
+        // was pruned under; memoizing it could displace a later winner
+        let f = registry::load("D3", 0.06, 10);
+        let plan = FoldPlan::new(&f, 3, 41);
+        let cfg = tree_cfg();
+        let exact = cv_score_planned(&cfg, &f, &plan, 41, None);
+        let mut engine = EvalEngine::new(EvalPolicy {
+            early_termination: true,
+            ..Default::default()
+        });
+        // unbeatable incumbent: pruned before any playable fold
+        let truncated = engine.score_batch(&[cfg.clone()], &f, &plan, 41, 1.5)[0];
+        assert_eq!(truncated, 0.0);
+        // the re-presentation must re-score, not serve the truncation
+        let fresh = engine.score_batch(&[cfg.clone()], &f, &plan, 41, f64::NEG_INFINITY)[0];
+        assert_eq!(fresh.to_bits(), exact.to_bits());
+        assert_eq!(engine.scored, 2, "pruned eval was wrongly memoized");
+        assert_eq!(engine.memo_hits, 0);
+    }
+
+    #[test]
+    fn pruned_score_never_exceeds_the_incumbent() {
+        let f = registry::load("D3", 0.06, 9);
+        let plan = FoldPlan::new(&f, 3, 31);
+        let cfg = tree_cfg();
+        let exact = cv_score_planned(&cfg, &f, &plan, 31, None);
+        // incumbent above the exact score: pruning may trigger, and the
+        // truncated result must stay below the incumbent (and therefore
+        // can never displace it in argmax)
+        let incumbent = exact + 0.05;
+        let pruned = cv_score_planned(&cfg, &f, &plan, 31, Some(incumbent));
+        assert!(pruned <= incumbent);
+        // incumbent that cannot be beaten at all: first-fold prune
+        let hopeless = cv_score_planned(&cfg, &f, &plan, 31, Some(1.5));
+        assert_eq!(hopeless, 0.0, "pruned before any playable fold");
+        // an unreachable incumbent below the score must not perturb it
+        let free = cv_score_planned(&cfg, &f, &plan, 31, Some(0.0));
+        assert_eq!(free.to_bits(), exact.to_bits());
     }
 }

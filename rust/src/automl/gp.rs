@@ -1,7 +1,11 @@
 //! Genetic-programming searcher — the TPOT stand-in (DESIGN.md §5): a GA
 //! over pipeline configurations with tournament selection, stage-wise
-//! crossover and hyper-parameter mutation, proposing one evaluation at a
-//! time (the run loop owns the budget).
+//! crossover and hyper-parameter mutation. The run loop owns the budget;
+//! proposals drain a generation queue, so the batched evaluation path
+//! (`propose_batch`, DESIGN.md §5.1) naturally aligns batches with
+//! generations: breeding happens at most once per refill and a batch is
+//! served from the current generation — the trait's default batch
+//! implementation is already exactly the queue-drain semantics.
 
 use crate::automl::space::{ConfigSpace, PipelineConfig};
 use crate::automl::Searcher;
@@ -148,6 +152,27 @@ mod tests {
         let _ = gp.propose(&history, &space, &mut rng);
         assert_eq!(gp.queue.len(), 4, "one popped from a fresh generation");
         assert_eq!(gp.generation, 1);
+    }
+
+    #[test]
+    fn propose_batch_equals_sequential_proposes() {
+        // the trait-default batch path must be the queue-drain semantics:
+        // identical searcher state + rng stream => identical configs
+        let space = ConfigSpace::default();
+        let mut seed_rng = Rng::new(9);
+        let history: Vec<_> = (0..8)
+            .map(|i| entry(ModelKind::Tree, 0.5 + i as f64 * 0.01, &mut seed_rng))
+            .collect();
+        let mut gp_batch = GpSearch::new(6);
+        let mut gp_seq = GpSearch::new(6);
+        let mut rng_a = Rng::new(41);
+        let mut rng_b = Rng::new(41);
+        use crate::automl::Searcher;
+        let batch = gp_batch.propose_batch(8, &history, &space, &mut rng_a);
+        let seq: Vec<_> = (0..8)
+            .map(|_| gp_seq.propose(&history, &space, &mut rng_b))
+            .collect();
+        assert_eq!(batch, seq);
     }
 
     #[test]

@@ -1,32 +1,59 @@
 //! The AutoML substrate: given a dataset frame, search the pipeline
 //! configuration space for the highest-CV-accuracy pipeline under an
 //! evaluation/time budget. Stand-in for Auto-Sklearn (SMBO searcher) and
-//! TPOT (GP searcher) — see DESIGN.md §5 for the substitution argument.
+//! TPOT (GP searcher) — see DESIGN.md §5 for the substitution argument
+//! and §5.1 for the evaluation engine.
 //!
 //! The paper treats the AutoML tool `A` as a black box `A(D, y) -> M*`;
 //! this module is that black box, plus the two knobs SubStrat needs:
 //! warm-starting (fine-tuning seeds the search with M') and model-family
 //! restriction (§3.4).
+//!
+//! The run loop is batched: each round drains warm starts front-to-back,
+//! tops the batch up through [`Searcher::propose_batch`], and scores the
+//! whole batch through the parallel, memoized [`eval::EvalEngine`]. With
+//! `batch_size = 1` (the default) the loop degenerates to the classic
+//! serial propose→score alternation.
 
 pub mod eval;
 pub mod gp;
 pub mod smbo;
 pub mod space;
 
+use std::collections::VecDeque;
+
 use crate::data::Frame;
 use crate::util::rng::Rng;
 use crate::util::timer::{Budget, Stopwatch};
 
+use eval::{EvalEngine, EvalPolicy, FoldPlan};
 use space::{ConfigSpace, PipelineConfig};
 
-/// A search strategy proposing one configuration at a time.
+/// A search strategy proposing configurations to evaluate.
 pub trait Searcher {
+    /// Propose one configuration given the scored history.
     fn propose(
         &mut self,
         history: &[(PipelineConfig, f64)],
         space: &ConfigSpace,
         rng: &mut Rng,
     ) -> PipelineConfig;
+
+    /// Propose a batch of `k` configurations for one engine round. The
+    /// default is `k` independent [`Searcher::propose`] calls against
+    /// the same history — batch members do not see each other's scores
+    /// (the standard batch-search information lag). Searchers may
+    /// override to shape the batch (SMBO de-duplicates, the GP queue
+    /// drains generation-aligned).
+    fn propose_batch(
+        &mut self,
+        k: usize,
+        history: &[(PipelineConfig, f64)],
+        space: &ConfigSpace,
+        rng: &mut Rng,
+    ) -> Vec<PipelineConfig> {
+        (0..k).map(|_| self.propose(history, space, rng)).collect()
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -81,8 +108,12 @@ pub struct AutoMlConfig {
     /// optional wall-clock cap
     pub max_time: Option<std::time::Duration>,
     pub cv_folds: usize,
-    /// configurations evaluated first (fine-tuning warm start)
+    /// configurations evaluated first, in order (fine-tuning warm start)
     pub warm_start: Vec<PipelineConfig>,
+    /// proposals scored per engine round; 1 = serial propose→score
+    pub batch_size: usize,
+    /// evaluation-engine knobs (threads, memo, early termination)
+    pub policy: EvalPolicy,
     pub seed: u64,
 }
 
@@ -95,6 +126,8 @@ impl AutoMlConfig {
             max_time: None,
             cv_folds: 3,
             warm_start: Vec::new(),
+            batch_size: 1,
+            policy: EvalPolicy::default(),
             seed,
         }
     }
@@ -105,15 +138,39 @@ impl AutoMlConfig {
 pub struct AutoMlResult {
     pub best: PipelineConfig,
     pub best_cv: f64,
+    /// evaluations charged against the budget (= `history.len()`)
     pub evals: usize,
+    /// evaluations actually fitted (evals − memo hits)
+    pub scored_evals: usize,
+    /// evaluations served from the config-fingerprint memo
+    pub memo_hits: usize,
     pub elapsed_s: f64,
     pub history: Vec<(PipelineConfig, f64)>,
 }
 
-/// Run AutoML on a frame: `A(D, y) -> M*`.
+/// Run AutoML on a frame with a fresh evaluation engine:
+/// `A(D, y) -> M*`.
 pub fn run_automl(frame: &Frame, cfg: &AutoMlConfig) -> AutoMlResult {
+    let mut engine = EvalEngine::new(cfg.policy.clone());
+    run_automl_with_engine(frame, cfg, &mut engine)
+}
+
+/// Run AutoML through a caller-owned [`EvalEngine`], so several runs can
+/// share one configuration-score memo — `run_substrat` threads a single
+/// engine through the subset run and the fine-tune run, which is what
+/// spares the warm-start configuration its second evaluation
+/// (DESIGN.md §5.1).
+pub fn run_automl_with_engine(
+    frame: &Frame,
+    cfg: &AutoMlConfig,
+    engine: &mut EvalEngine,
+) -> AutoMlResult {
     let sw = Stopwatch::start();
     let mut rng = Rng::new(cfg.seed);
+    // fold splits are fixed once per run: every configuration is scored
+    // on identical folds (the seed re-split per evaluation, making
+    // scores incomparable across configs)
+    let plan = FoldPlan::new(frame, cfg.cv_folds, cfg.seed);
     let mut budget = match cfg.max_time {
         Some(t) => Budget::evals_and_time(cfg.max_evals, t),
         None => Budget::evals(cfg.max_evals),
@@ -124,20 +181,40 @@ pub fn run_automl(frame: &Frame, cfg: &AutoMlConfig) -> AutoMlResult {
         SearcherKind::Random => Box::new(RandomSearch),
     };
 
+    let (scored0, hits0) = (engine.scored, engine.memo_hits);
     let mut history: Vec<(PipelineConfig, f64)> = Vec::new();
-    let mut warm = cfg.warm_start.clone();
+    // warm starts drain front-to-back, preserving the caller's order
+    // (the seed popped from the back, evaluating them in reverse)
+    let mut warm: VecDeque<PipelineConfig> = cfg.warm_start.iter().cloned().collect();
+    let mut best_so_far = f64::NEG_INFINITY;
+    let batch_size = cfg.batch_size.max(1);
 
     while !budget.exhausted() {
-        let proposal = if let Some(w) = warm.pop() {
-            w
-        } else {
-            searcher.propose(&history, &cfg.space, &mut rng)
-        };
-        let score = eval::cv_score(&proposal, frame, cfg.cv_folds, &mut rng);
-        budget.consume();
-        history.push((proposal, score));
+        let room = budget.remaining_evals().unwrap_or(batch_size);
+        let k = batch_size.min(room.max(1));
+        let mut batch: Vec<PipelineConfig> = Vec::with_capacity(k);
+        while batch.len() < k {
+            match warm.pop_front() {
+                Some(w) => batch.push(w),
+                None => break,
+            }
+        }
+        if batch.len() < k {
+            let n = k - batch.len();
+            batch.extend(searcher.propose_batch(n, &history, &cfg.space, &mut rng));
+        }
+        let scores = engine.score_batch(&batch, frame, &plan, cfg.seed, best_so_far);
+        budget.consume_n(batch.len());
+        for (c, s) in batch.into_iter().zip(scores) {
+            if s > best_so_far {
+                best_so_far = s;
+            }
+            history.push((c, s));
+        }
     }
 
+    // NaN-safe argmax: degenerate CV scores are defined as 0.0, so the
+    // history never contains NaN — but selection must not hinge on that
     let best_idx = crate::util::stats::argmax(
         &history.iter().map(|(_, s)| *s).collect::<Vec<f64>>(),
     )
@@ -146,6 +223,8 @@ pub fn run_automl(frame: &Frame, cfg: &AutoMlConfig) -> AutoMlResult {
         best: history[best_idx].0.clone(),
         best_cv: history[best_idx].1,
         evals: history.len(),
+        scored_evals: engine.scored - scored0,
+        memo_hits: engine.memo_hits - hits0,
         elapsed_s: sw.elapsed_s(),
         history,
     }
@@ -156,6 +235,7 @@ mod tests {
     use super::*;
     use crate::data::registry;
     use crate::models::ModelKind;
+    use crate::util::prop::check_prop;
 
     #[test]
     fn respects_eval_budget() {
@@ -165,6 +245,17 @@ mod tests {
         assert_eq!(res.evals, 5);
         assert_eq!(res.history.len(), 5);
         assert!(res.best_cv > 0.0);
+        assert_eq!(res.scored_evals + res.memo_hits, res.evals);
+    }
+
+    #[test]
+    fn batched_run_respects_eval_budget_exactly() {
+        let f = registry::load("D2", 0.03, 2);
+        let mut cfg = AutoMlConfig::new(SearcherKind::Random, 7, 2);
+        cfg.batch_size = 3; // 7 = 3 + 3 + 1: the last round must shrink
+        let res = run_automl(&f, &cfg);
+        assert_eq!(res.evals, 7);
+        assert_eq!(res.history.len(), 7);
     }
 
     #[test]
@@ -176,6 +267,126 @@ mod tests {
         cfg.warm_start = vec![warm.clone()];
         let res = run_automl(&f, &cfg);
         assert_eq!(res.history[0].0, warm);
+    }
+
+    #[test]
+    fn warm_start_drained_front_to_back() {
+        // regression: the seed consumed warm starts via Vec::pop,
+        // evaluating a multi-element warm_start in reverse order
+        let f = registry::load("D2", 0.03, 7);
+        let mut rng = Rng::new(13);
+        let space = ConfigSpace::default();
+        let warm: Vec<PipelineConfig> = (0..3).map(|_| space.sample(&mut rng)).collect();
+        let mut cfg = AutoMlConfig::new(SearcherKind::Random, 5, 7);
+        cfg.warm_start = warm.clone();
+        let res = run_automl(&f, &cfg);
+        for (i, w) in warm.iter().enumerate() {
+            assert_eq!(&res.history[i].0, w, "warm start {i} out of order");
+        }
+        // order preserved under batching too
+        cfg.batch_size = 2;
+        let res = run_automl(&f, &cfg);
+        for (i, w) in warm.iter().enumerate() {
+            assert_eq!(&res.history[i].0, w, "warm start {i} out of order (batched)");
+        }
+    }
+
+    #[test]
+    fn fold_assignment_independent_of_scoring_order() {
+        // regression: the seed threaded one Rng through proposals AND
+        // cv_score, so each evaluation split different folds and scores
+        // depended on evaluation order
+        let f = registry::load("D2", 0.03, 11);
+        let space = ConfigSpace::default();
+        let mut rng = Rng::new(12);
+        let a = space.sample(&mut rng);
+        let b = space.sample(&mut rng);
+        let plan = eval::FoldPlan::new(&f, 3, 99);
+        let mut e1 = EvalEngine::new(EvalPolicy::default());
+        let ab = e1.score_batch(&[a.clone(), b.clone()], &f, &plan, 99, f64::NEG_INFINITY);
+        let mut e2 = EvalEngine::new(EvalPolicy::default());
+        let ba = e2.score_batch(&[b, a], &f, &plan, 99, f64::NEG_INFINITY);
+        assert_eq!(ab[0].to_bits(), ba[1].to_bits(), "order changed a's score");
+        assert_eq!(ab[1].to_bits(), ba[0].to_bits(), "order changed b's score");
+    }
+
+    #[test]
+    fn prop_results_thread_count_invariant() {
+        let f = registry::load("D2", 0.02, 3);
+        check_prop("automl invariant to thread count", 2, |rng| {
+            let seed = rng.next_u64();
+            let mut base = AutoMlConfig::new(SearcherKind::Random, 5, seed);
+            base.batch_size = 3;
+            let runs: Vec<AutoMlResult> = [1usize, 8]
+                .iter()
+                .map(|&threads| {
+                    let mut cfg = base.clone();
+                    cfg.policy.threads = threads;
+                    run_automl(&f, &cfg)
+                })
+                .collect();
+            for r in &runs[1..] {
+                assert_eq!(r.best, runs[0].best, "thread count changed the winner");
+                let a: Vec<u64> = r.history.iter().map(|(_, s)| s.to_bits()).collect();
+                let b: Vec<u64> = runs[0].history.iter().map(|(_, s)| s.to_bits()).collect();
+                assert_eq!(a, b, "thread count changed history scores");
+            }
+        });
+    }
+
+    #[test]
+    fn memoized_run_matches_unmemoized_run() {
+        // the memo is pure speed: identical seeds must yield identical
+        // history and winner with and without it
+        let f = registry::load("D2", 0.02, 4);
+        let mut plain = AutoMlConfig::new(SearcherKind::Gp, 6, 21);
+        plain.policy.memoize = false;
+        let mut memo = plain.clone();
+        memo.policy.memoize = true;
+        let a = run_automl(&f, &plain);
+        let b = run_automl(&f, &memo);
+        assert_eq!(a.best, b.best);
+        let sa: Vec<u64> = a.history.iter().map(|(_, s)| s.to_bits()).collect();
+        let sb: Vec<u64> = b.history.iter().map(|(_, s)| s.to_bits()).collect();
+        assert_eq!(sa, sb);
+        assert!(b.scored_evals <= a.scored_evals);
+    }
+
+    #[test]
+    fn early_termination_never_changes_the_winner() {
+        // a pruned score is always strictly below the incumbent at its
+        // evaluation time, so the winner (and its exact score) survive
+        // (the random searcher proposes independently of scores, keeping
+        // the two trajectories aligned)
+        let f = registry::load("D3", 0.05, 9);
+        let exact = AutoMlConfig::new(SearcherKind::Random, 10, 17);
+        let mut pruned = exact.clone();
+        pruned.policy.early_termination = true;
+        let a = run_automl(&f, &exact);
+        let b = run_automl(&f, &pruned);
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.best_cv.to_bits(), b.best_cv.to_bits());
+        // no pruned-run score may exceed the true winner's score
+        for (_, sp) in &b.history {
+            assert!(*sp <= a.best_cv, "pruned score beats the exact winner");
+        }
+    }
+
+    #[test]
+    fn shared_engine_memoizes_across_runs() {
+        let f = registry::load("D2", 0.03, 5);
+        let mut rng = Rng::new(31);
+        let warm = ConfigSpace::default().sample(&mut rng);
+        let mut engine = EvalEngine::new(EvalPolicy::default());
+        let mut first = AutoMlConfig::new(SearcherKind::Random, 3, 6);
+        first.warm_start = vec![warm.clone()];
+        let r1 = run_automl_with_engine(&f, &first, &mut engine);
+        // second run re-presents the same warm config: memo must serve it
+        let mut second = AutoMlConfig::new(SearcherKind::Random, 3, 61);
+        second.warm_start = vec![warm];
+        let r2 = run_automl_with_engine(&f, &second, &mut engine);
+        assert!(r2.memo_hits >= 1, "shared engine did not serve the warm start");
+        assert_eq!(r2.history[0].1.to_bits(), r1.history[0].1.to_bits());
     }
 
     #[test]

@@ -68,6 +68,34 @@ impl SmboSearch {
 }
 
 impl Searcher for SmboSearch {
+    /// Batch proposals share one history snapshot (none of the batch's
+    /// own scores are visible yet), so the acquisition argmax is prone
+    /// to returning the same candidate k times. Re-roll exact duplicates
+    /// a few times — each re-roll advances the RNG, moving the candidate
+    /// pool — before accepting a repeat (the eval memo makes an accepted
+    /// repeat cheap, just uninformative). With k = 1 this is exactly
+    /// [`SmboSearch::propose`], keeping the serial path unchanged.
+    fn propose_batch(
+        &mut self,
+        k: usize,
+        history: &[(PipelineConfig, f64)],
+        space: &ConfigSpace,
+        rng: &mut Rng,
+    ) -> Vec<PipelineConfig> {
+        let mut out: Vec<PipelineConfig> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let mut cand = self.propose(history, space, rng);
+            for _ in 0..3 {
+                if out.iter().all(|c| c != &cand) {
+                    break;
+                }
+                cand = self.propose(history, space, rng);
+            }
+            out.push(cand);
+        }
+        out
+    }
+
     fn propose(
         &mut self,
         history: &[(PipelineConfig, f64)],
@@ -166,6 +194,26 @@ mod tests {
             }
         }
         assert!(knn_hits >= 12, "surrogate not exploiting: {knn_hits}/20");
+    }
+
+    #[test]
+    fn propose_batch_avoids_exact_duplicates_when_possible() {
+        let mut s = SmboSearch {
+            n_init: 2,
+            ..Default::default()
+        };
+        let space = ConfigSpace::default();
+        let mut rng = Rng::new(7);
+        let history = vec![hist_entry(5, 0.9), hist_entry(9, 0.8), hist_entry(3, 0.7)];
+        let batch = s.propose_batch(6, &history, &space, &mut rng);
+        assert_eq!(batch.len(), 6);
+        let mut distinct = 0;
+        for (i, c) in batch.iter().enumerate() {
+            if batch[..i].iter().all(|p| p != c) {
+                distinct += 1;
+            }
+        }
+        assert!(distinct >= 4, "batch collapsed to {distinct} distinct configs");
     }
 
     #[test]

@@ -17,6 +17,53 @@ pub struct PipelineConfig {
 }
 
 impl PipelineConfig {
+    /// Stable 128-bit fingerprint keying the evaluation memo
+    /// (DESIGN.md §5.1). Every pipeline stage contributes a distinct
+    /// discriminant word followed by its hyper-parameters, with f64
+    /// values folded bit-exactly via `to_bits`, so two configurations
+    /// share a fingerprint iff they compare equal under `PartialEq`
+    /// (up to ~2^-128 hash collisions).
+    pub fn fingerprint(&self) -> (u64, u64) {
+        let mut w: Vec<u64> = Vec::with_capacity(8);
+        w.push(match self.scaler {
+            ScalerSpec::None => 0,
+            ScalerSpec::Standard => 1,
+            ScalerSpec::MinMax => 2,
+        });
+        match self.selector {
+            SelectorSpec::None => w.push(0x10),
+            SelectorSpec::VarianceThreshold { threshold } => {
+                w.push(0x11);
+                w.push(threshold.to_bits());
+            }
+            SelectorSpec::SelectKBest { frac } => {
+                w.push(0x12);
+                w.push(frac.to_bits());
+            }
+        }
+        match &self.model {
+            ModelSpec::Logreg { lr, epochs, l2 } => {
+                w.extend([0x20, lr.to_bits(), *epochs as u64, l2.to_bits()]);
+            }
+            ModelSpec::Mlp { lr, epochs, l2 } => {
+                w.extend([0x21, lr.to_bits(), *epochs as u64, l2.to_bits()]);
+            }
+            ModelSpec::Tree { max_depth, min_leaf } => {
+                w.extend([0x22, *max_depth as u64, *min_leaf as u64]);
+            }
+            ModelSpec::Forest {
+                n_trees,
+                max_depth,
+                feat_frac,
+            } => {
+                w.extend([0x23, *n_trees as u64, *max_depth as u64, feat_frac.to_bits()]);
+            }
+            ModelSpec::Knn { k } => w.extend([0x24, *k as u64]),
+            ModelSpec::Nb { smoothing } => w.extend([0x25, smoothing.to_bits()]),
+        }
+        crate::util::hash::fingerprint(&w)
+    }
+
     pub fn describe(&self) -> String {
         let s = match self.scaler {
             ScalerSpec::None => "none",
@@ -339,6 +386,24 @@ mod tests {
             },
         });
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn prop_fingerprint_agrees_with_equality() {
+        let space = ConfigSpace::default();
+        check_prop("fingerprint ⟺ PartialEq", 200, |rng| {
+            let a = space.sample(rng);
+            let b = space.sample(rng);
+            assert_eq!(a.fingerprint(), a.clone().fingerprint());
+            if a.fingerprint() == b.fingerprint() {
+                assert_eq!(a, b, "distinct configs share a fingerprint");
+            }
+            // mutation that changes the config must change the key
+            let m = space.mutate(&a, rng);
+            if m != a {
+                assert_ne!(m.fingerprint(), a.fingerprint());
+            }
+        });
     }
 
     #[test]

@@ -33,6 +33,20 @@ pub fn train_test_split(frame: &Frame, test_frac: f64, rng: &mut Rng) -> (Frame,
     )
 }
 
+/// [`stratified_kfold`] with the RNG derived from a seed — the form the
+/// AutoML evaluation engine uses so that fold assignment is a pure
+/// function of the run seed (DESIGN.md §5.1): every configuration in a
+/// run is scored on identical folds, in any evaluation order, on any
+/// thread count.
+pub fn seeded_stratified_kfold(
+    labels: &[u32],
+    k_folds: usize,
+    seed: u64,
+) -> Vec<(Vec<u32>, Vec<u32>)> {
+    let mut rng = Rng::new(crate::util::hash::mix64(seed));
+    stratified_kfold(labels, k_folds, &mut rng)
+}
+
 /// Stratified k-fold index pairs (train_rows, valid_rows) over `labels`.
 /// Every row appears in exactly one validation fold.
 pub fn stratified_kfold(labels: &[u32], k_folds: usize, rng: &mut Rng) -> Vec<(Vec<u32>, Vec<u32>)> {
@@ -156,6 +170,17 @@ mod tests {
                 assert!((c as f64 / total as f64 - 1.0 / 3.0).abs() < 0.08);
             }
         }
+    }
+
+    #[test]
+    fn seeded_kfold_is_a_pure_function_of_the_seed() {
+        let f = frame(400, 3);
+        let labels = f.labels();
+        let a = seeded_stratified_kfold(&labels, 3, 77);
+        let b = seeded_stratified_kfold(&labels, 3, 77);
+        assert_eq!(a, b);
+        let c = seeded_stratified_kfold(&labels, 3, 78);
+        assert_ne!(a, c, "different seeds should shuffle differently");
     }
 
     #[test]

@@ -126,10 +126,23 @@ pub fn prepare(symbol: &str, cfg: &ExpConfig, rep: usize) -> Prepared {
     Prepared { train, test, codes }
 }
 
+/// Wire the experiment-wide thread knob into one AutoML configuration:
+/// the evaluation engine fans each proposal batch across `cfg.threads`
+/// workers, and the batch size matches so the workers stay fed. Applied
+/// identically to the Full-AutoML reference and every strategy cell, so
+/// the paper's time-reduction ratio compares like with like.
+fn wire_engine(automl: &mut AutoMlConfig, cfg: &ExpConfig) {
+    automl.policy.threads = cfg.threads;
+    // threads = 0 means auto, so size batches for the resolved worker
+    // count — not the raw knob (0 would collapse batches to one config)
+    automl.batch_size = crate::util::pool::resolve_threads(cfg.threads);
+}
+
 /// Run the Full-AutoML reference: `A(D, y) -> M*`, timed, tested.
 pub fn run_full(prep: &Prepared, searcher: SearcherKind, cfg: &ExpConfig, rep: usize) -> FullRun {
     let sw = Stopwatch::start();
-    let automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ rep as u64);
+    let mut automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ rep as u64);
+    wire_engine(&mut automl, cfg);
     let res = run_automl(&prep.train, &automl);
     let mut rng = Rng::new(cfg.seed ^ 0x77 ^ rep as u64);
     let pipe = fit_on_frame(&res.best, &prep.train, &mut rng);
@@ -159,7 +172,8 @@ pub fn run_strategy(
         other => (other, true),
     };
     let strategy = baselines::by_name(resolved);
-    let automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ 0x33 ^ rep as u64);
+    let mut automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ 0x33 ^ rep as u64);
+    wire_engine(&mut automl, cfg);
     let sub_cfg = SubStratConfig {
         dst_size,
         fine_tune,
@@ -290,6 +304,20 @@ mod tests {
             None,
         );
         assert_eq!(rec.strategy, "substrat-nf");
+    }
+
+    #[test]
+    fn thread_knob_does_not_change_the_winner() {
+        // random-search proposals and per-(config, fold) fit RNGs are
+        // independent of batching, so the wired engine is pure speed
+        let base = tiny_cfg();
+        let prep = prepare("D2", &base, 0);
+        let mut wide = tiny_cfg();
+        wide.threads = 4;
+        let a = run_full(&prep, SearcherKind::Random, &base, 0);
+        let b = run_full(&prep, SearcherKind::Random, &wide, 0);
+        assert_eq!(a.best_desc, b.best_desc);
+        assert_eq!(a.test_acc, b.test_acc);
     }
 
     #[test]

@@ -117,7 +117,9 @@ fn cmd_automl(args: &Args) {
     let scale = args.f64_or("scale", 0.05);
     let f = registry::load(&symbol, scale, args.u64_or("seed", 0));
     let searcher = SearcherKind::by_name(&args.str_or("searcher", "smbo"));
-    let cfg = AutoMlConfig::new(searcher, args.usize_or("evals", 16), args.u64_or("seed", 0));
+    let mut cfg = AutoMlConfig::new(searcher, args.usize_or("evals", 16), args.u64_or("seed", 0));
+    cfg.policy.threads = args.usize_or("threads", 0);
+    cfg.batch_size = args.usize_or("batch", 1);
     println!(
         "AutoML({}) on {symbol} ({}x{})",
         searcher.name(),
@@ -126,10 +128,12 @@ fn cmd_automl(args: &Args) {
     );
     let res = run_automl(&f, &cfg);
     println!(
-        "best={} cv={:.4} evals={} time={:.2}s",
+        "best={} cv={:.4} evals={} (scored {}, memo hits {}) time={:.2}s",
         res.best.describe(),
         res.best_cv,
         res.evals,
+        res.scored_evals,
+        res.memo_hits,
         res.elapsed_s
     );
 }

@@ -6,7 +6,8 @@
 //! chooses between this and the native path; see DESIGN.md §7 for the
 //! CPU-vs-TPU trade-off).
 
-use anyhow::{ensure, Result};
+use crate::ensure;
+use crate::util::error::Result;
 
 use crate::data::CodeMatrix;
 use crate::runtime::shapes::{B_BATCH, M_PAD, N_PAD};

@@ -1,40 +1,58 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
-//! `python/compile/aot.py`), compile once per process-thread, execute from
-//! the rust hot path. Python never runs here.
+//! Artifact runtime: the execution layer behind every XLA-backed member
+//! of the stack (entropy kernels, logreg/MLP train steps, k-means).
 //!
-//! Threading: the `xla` crate's `PjRtClient` wraps an `Rc`, so a runtime
-//! instance is thread-confined. Worker threads that need XLA each create
-//! (or lazily clone-compile) their own `XlaRuntime` via `thread_current()`;
-//! compiled executables are cached per thread. For our workloads the
-//! compile cost (~tens of ms per small module) amortizes over thousands
-//! of `execute` calls.
+//! Deployment shape (DESIGN.md §2): `python/compile/` AOT-lowers the
+//! L1/L2 graphs to `artifacts/*.hlo.txt`, and a PJRT client executes
+//! them from this hot path. Offline, neither the `xla` crate nor the
+//! compiled artifacts are available, so this module follows the same
+//! substrate rule as `util` (DESIGN.md §3.11): [`native`] implements the
+//! artifact *contracts* in pure rust behind the identical `XlaRuntime`
+//! API. Callers (`EntropyExec`, `ModelsExec`, the model zoo, baselines)
+//! are byte-for-byte unchanged between the two execution paths; when the
+//! PJRT path returns, the native interpreter stays as the reference the
+//! compiled kernels are cross-checked against.
+//!
+//! Threading: a runtime instance is thread-confined (the PJRT client it
+//! stands in for wraps an `Rc`); worker threads obtain their own via
+//! [`thread_current`].
 
 pub mod entropy_exec;
 pub mod models_exec;
+pub mod native;
 pub mod shapes;
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Error, Result};
 
-/// A thread-confined PJRT CPU runtime with an executable cache.
+/// The artifact programs this runtime knows how to execute.
+const ARTIFACTS: &[&str] = &[
+    "entropy_subset",
+    "entropy_batch",
+    "entropy_columns",
+    "logreg_train_step",
+    "logreg_train_epoch",
+    "logreg_predict",
+    "mlp_train_step",
+    "mlp_train_epoch",
+    "mlp_predict",
+    "kmeans_step",
+];
+
+/// A thread-confined artifact runtime. Construction never fails on the
+/// native substrate; `dir` is where the compiled `*.hlo.txt` modules
+/// would live (kept for `available()` and the manifest cross-checks).
 pub struct XlaRuntime {
-    client: xla::PjRtClient,
     dir: PathBuf,
-    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl XlaRuntime {
     /// Create a runtime reading artifacts from `dir`.
     pub fn new<P: AsRef<Path>>(dir: P) -> Result<XlaRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(XlaRuntime {
-            client,
             dir: dir.as_ref().to_path_buf(),
-            exes: RefCell::new(HashMap::new()),
         })
     }
 
@@ -56,61 +74,122 @@ impl XlaRuntime {
         }
     }
 
-    /// Load + compile an artifact by name (e.g. "entropy_subset"),
-    /// caching the compiled executable.
-    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.exes.borrow().get(name) {
-            return Ok(exe.clone());
-        }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .with_context(|| format!("parsing HLO text {path:?} (run `make artifacts`)"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        let exe = Rc::new(exe);
-        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
+    /// Resolve an artifact by name ("compile" on the native substrate is
+    /// a dispatch-table lookup; unknown names error like a missing HLO
+    /// module would).
+    pub fn load(&self, name: &str) -> Result<&'static str> {
+        ARTIFACTS
+            .iter()
+            .find(|&&a| a == name)
+            .copied()
+            .ok_or_else(|| Error::msg(format!("unknown artifact {name:?}")))
     }
 
     /// Execute an artifact: returns the decomposed output tuple.
-    /// (All artifacts are lowered with return_tuple=True.)
-    ///
-    /// Inputs go through `buffer_from_host_buffer` + `execute_b` rather
-    /// than `execute::<Literal>`: the crate's literal-based execute path
-    /// leaks the device buffers it creates internally (~input size per
-    /// call — found empirically; see EXPERIMENTS.md §Perf), while
-    /// `PjRtBuffer`s we create ourselves are freed on drop.
-    pub fn execute(&self, name: &str, inputs: &[ArgView]) -> Result<Vec<xla::Literal>> {
-        let exe = self.load(name)?;
-        let bufs: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|a| match a {
-                ArgView::F32(data, dims) => self
-                    .client
-                    .buffer_from_host_buffer::<f32>(data, dims, None)
-                    .map_err(|e| anyhow!("uploading f32 input {dims:?}: {e:?}")),
-                ArgView::I32(data, dims) => self
-                    .client
-                    .buffer_from_host_buffer::<i32>(data, dims, None)
-                    .map_err(|e| anyhow!("uploading i32 input {dims:?}: {e:?}")),
-            })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute_b::<xla::PjRtBuffer>(&bufs)
-            .with_context(|| format!("executing artifact {name}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {name}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("decomposing {name} output: {e:?}"))
+    /// (All artifacts are lowered with return_tuple=True; the native
+    /// substrate returns the same tuple decomposition.)
+    pub fn execute(&self, name: &str, inputs: &[ArgView]) -> Result<Vec<Literal>> {
+        let name = self.load(name)?;
+        match name {
+            "entropy_subset" => {
+                let h = native::entropy_subset(i32s(inputs, 0)?, f32s(inputs, 1)?, f32s(inputs, 2)?);
+                Ok(vec![Literal::F32(vec![h])])
+            }
+            "entropy_batch" => {
+                let h = native::entropy_batch(i32s(inputs, 0)?, f32s(inputs, 1)?, f32s(inputs, 2)?);
+                Ok(vec![Literal::F32(h)])
+            }
+            "entropy_columns" => {
+                let h = native::entropy_columns(i32s(inputs, 0)?, f32s(inputs, 1)?);
+                Ok(vec![Literal::F32(h)])
+            }
+            "logreg_train_step" | "logreg_train_epoch" => {
+                let mut w = f32s(inputs, 4)?.to_vec();
+                let mut b = f32s(inputs, 5)?.to_vec();
+                let (lr, l2) = (scalar(inputs, 6)?, scalar(inputs, 7)?);
+                let step = if name == "logreg_train_step" {
+                    native::logreg_step
+                } else {
+                    native::logreg_epoch
+                };
+                let loss = step(
+                    f32s(inputs, 0)?,
+                    f32s(inputs, 1)?,
+                    f32s(inputs, 2)?,
+                    f32s(inputs, 3)?,
+                    &mut w,
+                    &mut b,
+                    lr,
+                    l2,
+                );
+                Ok(vec![
+                    Literal::F32(w),
+                    Literal::F32(b),
+                    Literal::F32(vec![loss]),
+                ])
+            }
+            "logreg_predict" => {
+                let logits = native::logreg_predict(
+                    f32s(inputs, 0)?,
+                    f32s(inputs, 1)?,
+                    f32s(inputs, 2)?,
+                    f32s(inputs, 3)?,
+                );
+                Ok(vec![Literal::F32(logits)])
+            }
+            "mlp_train_step" | "mlp_train_epoch" => {
+                let mut w1 = f32s(inputs, 4)?.to_vec();
+                let mut b1 = f32s(inputs, 5)?.to_vec();
+                let mut w2 = f32s(inputs, 6)?.to_vec();
+                let mut b2 = f32s(inputs, 7)?.to_vec();
+                let (lr, l2) = (scalar(inputs, 8)?, scalar(inputs, 9)?);
+                let step = if name == "mlp_train_step" {
+                    native::mlp_step
+                } else {
+                    native::mlp_epoch
+                };
+                let loss = step(
+                    f32s(inputs, 0)?,
+                    f32s(inputs, 1)?,
+                    f32s(inputs, 2)?,
+                    f32s(inputs, 3)?,
+                    &mut w1,
+                    &mut b1,
+                    &mut w2,
+                    &mut b2,
+                    lr,
+                    l2,
+                );
+                Ok(vec![
+                    Literal::F32(w1),
+                    Literal::F32(b1),
+                    Literal::F32(w2),
+                    Literal::F32(b2),
+                    Literal::F32(vec![loss]),
+                ])
+            }
+            "mlp_predict" => {
+                let logits = native::mlp_predict(
+                    f32s(inputs, 0)?,
+                    f32s(inputs, 1)?,
+                    f32s(inputs, 2)?,
+                    f32s(inputs, 3)?,
+                    f32s(inputs, 4)?,
+                    f32s(inputs, 5)?,
+                );
+                Ok(vec![Literal::F32(logits)])
+            }
+            "kmeans_step" => {
+                let (centroids, assign) =
+                    native::kmeans_step(f32s(inputs, 0)?, f32s(inputs, 1)?, f32s(inputs, 2)?);
+                Ok(vec![Literal::F32(centroids), Literal::I32(assign)])
+            }
+            _ => unreachable!("load() vetted the name"),
+        }
     }
 
-    /// Artifact names available on disk.
+    /// Artifact names available on disk (the compiled `*.hlo.txt`
+    /// modules; empty when the artifacts were never built).
     pub fn available(&self) -> Vec<String> {
         let mut names: Vec<String> = std::fs::read_dir(&self.dir)
             .into_iter()
@@ -126,8 +205,9 @@ impl XlaRuntime {
         names
     }
 
+    /// Execution platform description.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu (offline artifact interpreter)".to_string()
     }
 }
 
@@ -149,33 +229,97 @@ pub fn thread_current() -> Result<Rc<XlaRuntime>> {
     })
 }
 
-/// A borrowed typed input for one artifact execution (uploaded as a
-/// device buffer; no intermediate Literal allocation).
+/// A borrowed typed input for one artifact execution.
 pub enum ArgView<'a> {
     F32(&'a [f32], Vec<usize>),
     I32(&'a [i32], Vec<usize>),
 }
 
+/// A typed output buffer (the substrate's `xla::Literal`).
+#[derive(Debug, Clone)]
+pub enum Literal {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
 /// f32 input view with shape checking.
 pub fn arg_f32<'a>(data: &'a [f32], dims: &[i64]) -> Result<ArgView<'a>> {
     let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "arg_f32: {} != {dims:?}", data.len());
+    crate::ensure!(n as usize == data.len(), "arg_f32: {} != {dims:?}", data.len());
     Ok(ArgView::F32(data, dims.iter().map(|&d| d as usize).collect()))
 }
 
 /// i32 input view with shape checking.
 pub fn arg_i32<'a>(data: &'a [i32], dims: &[i64]) -> Result<ArgView<'a>> {
     let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "arg_i32: {} != {dims:?}", data.len());
+    crate::ensure!(n as usize == data.len(), "arg_i32: {} != {dims:?}", data.len());
     Ok(ArgView::I32(data, dims.iter().map(|&d| d as usize).collect()))
 }
 
+fn f32s<'a>(inputs: &'a [ArgView], idx: usize) -> Result<&'a [f32]> {
+    match inputs.get(idx) {
+        Some(ArgView::F32(data, _)) => Ok(data),
+        Some(ArgView::I32(..)) => Err(Error::msg(format!("arg {idx}: expected f32, got i32"))),
+        None => Err(Error::msg(format!("arg {idx}: missing"))),
+    }
+}
+
+fn i32s<'a>(inputs: &'a [ArgView], idx: usize) -> Result<&'a [i32]> {
+    match inputs.get(idx) {
+        Some(ArgView::I32(data, _)) => Ok(data),
+        Some(ArgView::F32(..)) => Err(Error::msg(format!("arg {idx}: expected i32, got f32"))),
+        None => Err(Error::msg(format!("arg {idx}: missing"))),
+    }
+}
+
+fn scalar(inputs: &[ArgView], idx: usize) -> Result<f32> {
+    let v = f32s(inputs, idx)?;
+    crate::ensure!(v.len() == 1, "arg {idx}: expected scalar, len {}", v.len());
+    Ok(v[0])
+}
+
 /// Unpack a literal into a Vec<f32>.
-pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    match lit {
+        Literal::F32(v) => Ok(v.clone()),
+        Literal::I32(_) => Err(Error::msg("to_vec f32: literal is i32")),
+    }
 }
 
 /// Unpack a literal into a Vec<i32>.
-pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
-    lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+pub fn to_vec_i32(lit: &Literal) -> Result<Vec<i32>> {
+    match lit {
+        Literal::I32(v) => Ok(v.clone()),
+        Literal::F32(_) => Err(Error::msg("to_vec i32: literal is f32")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_artifact_name_loads() {
+        let rt = XlaRuntime::new("artifacts").unwrap();
+        for &name in ARTIFACTS {
+            rt.load(name).unwrap();
+        }
+        assert!(rt.load("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn arg_views_check_shapes() {
+        assert!(arg_f32(&[1.0, 2.0], &[2]).is_ok());
+        assert!(arg_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(arg_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+        assert!(arg_f32(&[1.0], &[]).is_ok(), "scalar: empty dims, len 1");
+    }
+
+    #[test]
+    fn execute_rejects_wrong_arity_and_types() {
+        let rt = XlaRuntime::new("artifacts").unwrap();
+        let data = [1f32];
+        let args = [ArgView::F32(&data, vec![1])];
+        assert!(rt.execute("entropy_subset", &args).is_err());
+    }
 }

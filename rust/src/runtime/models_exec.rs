@@ -6,7 +6,8 @@
 //! classes to C_PAD with a {0,1} class mask (padded logits get -1e9),
 //! rows to BATCH with a {0,1} sample mask.
 
-use anyhow::{ensure, Result};
+use crate::ensure;
+use crate::util::error::Result;
 
 use crate::data::Matrix;
 use crate::runtime::shapes::{

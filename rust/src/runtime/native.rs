@@ -1,0 +1,564 @@
+//! Native (pure-rust) interpreter for the AOT artifact *contracts* —
+//! the offline substrate for PJRT (DESIGN.md §3.8).
+//!
+//! The `xla` crate and the compiled `artifacts/*.hlo.txt` modules are not
+//! available in this environment, but every artifact has a small, fixed
+//! numeric contract (documented in `python/compile/` and pinned by
+//! `artifacts/manifest.txt` shapes). This module implements those
+//! contracts directly on the padded buffers, so the whole XLA-backed
+//! surface — `EntropyExec`, `ModelsExec`, the logreg/MLP model-zoo
+//! members, the k-means baseline, and the `Xla` fitness backend — keeps
+//! working on CPU-only testbeds. When the real PJRT path returns
+//! (vendored `xla` crate + artifacts), this stays as the reference the
+//! kernels are cross-checked against (integration tests compare the two
+//! within f32 tolerance).
+//!
+//! Shapes are the pinned constants of [`crate::runtime::shapes`]; every
+//! function takes the exact padded buffers its artifact was lowered for.
+
+use crate::data::binning::K_BINS;
+use crate::runtime::shapes::{
+    BATCH, B_BATCH, C_PAD, EPOCH_TILES, F_PAD, HIDDEN, KM_DIM, KM_K, KM_POINTS, M_PAD, N_PAD,
+};
+
+/// Logit value of a masked-out class (matches the python-side padding
+/// contract: padded logits get -1e9 so softmax/argmax never pick them).
+const MASKED_LOGIT: f32 = -1e9;
+
+/// Shannon entropy (bits) over one masked column of a padded code tile.
+fn masked_column_entropy(codes: &[i32], rmask: &[f32], col: usize) -> f64 {
+    let mut counts = [0u64; K_BINS];
+    let mut n = 0u64;
+    for (i, &m) in rmask.iter().enumerate() {
+        if m > 0.0 {
+            let code = (codes[i * M_PAD + col].max(0) as usize).min(K_BINS - 1);
+            counts[code] += 1;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return 0.0;
+    }
+    let n = n as f64;
+    let mut h = 0.0;
+    for &c in &counts {
+        if c > 0 {
+            let p = c as f64 / n;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// `entropy_subset`: mean masked-column entropy of one (N_PAD, M_PAD)
+/// code tile. Output: one f32.
+pub fn entropy_subset(codes: &[i32], rmask: &[f32], cmask: &[f32]) -> f32 {
+    let mut sum = 0.0f64;
+    let mut m = 0usize;
+    for (j, &cm) in cmask.iter().enumerate().take(M_PAD) {
+        if cm > 0.0 {
+            sum += masked_column_entropy(codes, rmask, j);
+            m += 1;
+        }
+    }
+    if m == 0 {
+        0.0
+    } else {
+        (sum / m as f64) as f32
+    }
+}
+
+/// `entropy_columns`: per-column entropies of one tile (masked-out
+/// columns are not distinguished — every slot is reduced; callers slice
+/// the active prefix). Output: f32[M_PAD].
+pub fn entropy_columns(codes: &[i32], rmask: &[f32]) -> Vec<f32> {
+    (0..M_PAD)
+        .map(|j| masked_column_entropy(codes, rmask, j) as f32)
+        .collect()
+}
+
+/// `entropy_batch`: [`entropy_subset`] over B_BATCH stacked tiles.
+/// Output: f32[B_BATCH].
+pub fn entropy_batch(codes: &[i32], rmask: &[f32], cmask: &[f32]) -> Vec<f32> {
+    (0..B_BATCH)
+        .map(|b| {
+            entropy_subset(
+                &codes[b * N_PAD * M_PAD..(b + 1) * N_PAD * M_PAD],
+                &rmask[b * N_PAD..(b + 1) * N_PAD],
+                &cmask[b * M_PAD..(b + 1) * M_PAD],
+            )
+        })
+        .collect()
+}
+
+/// Masked linear logits for one padded batch row-block:
+/// `out[i, c] = x[i] . w[:, c] + b[c]` for active classes, else -1e9.
+fn linear_logits(x: &[f32], w: &[f32], b: &[f32], cmask: &[f32], in_dim: usize) -> Vec<f32> {
+    let rows = x.len() / in_dim;
+    let mut out = vec![0f32; rows * C_PAD];
+    for i in 0..rows {
+        let xr = &x[i * in_dim..(i + 1) * in_dim];
+        let logits = &mut out[i * C_PAD..(i + 1) * C_PAD];
+        logits.copy_from_slice(&b[..C_PAD]);
+        for (f, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // padded features are zero — skip the fan-out
+            }
+            let wr = &w[f * C_PAD..(f + 1) * C_PAD];
+            for c in 0..C_PAD {
+                logits[c] += xv * wr[c];
+            }
+        }
+        for c in 0..C_PAD {
+            if cmask[c] <= 0.0 {
+                logits[c] = MASKED_LOGIT;
+            }
+        }
+    }
+    out
+}
+
+/// Stable softmax of one logit row (masked slots come in at -1e9 and
+/// round to probability 0).
+fn softmax_row(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().copied().fold(f32::MIN, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| (l - max).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z.max(1e-30)).collect()
+}
+
+/// `logreg_predict`: masked logits, (BATCH, C_PAD) row-major.
+pub fn logreg_predict(x: &[f32], w: &[f32], b: &[f32], cmask: &[f32]) -> Vec<f32> {
+    linear_logits(x, w, b, cmask, F_PAD)
+}
+
+/// `logreg_train_step`: one masked mini-batch SGD step of softmax
+/// regression with L2; updates (w, b) in place and returns the mean
+/// cross-entropy over active samples (0.0 for an all-masked batch, which
+/// is a no-op step — the epoch scan relies on that).
+#[allow(clippy::too_many_arguments)]
+pub fn logreg_step(
+    x: &[f32],
+    yoh: &[f32],
+    smask: &[f32],
+    cmask: &[f32],
+    w: &mut [f32],
+    b: &mut [f32],
+    lr: f32,
+    l2: f32,
+) -> f32 {
+    let active: f32 = smask.iter().sum();
+    if active <= 0.0 {
+        return 0.0;
+    }
+    let logits = linear_logits(x, w, b, cmask, F_PAD);
+    let mut gw = vec![0f32; F_PAD * C_PAD];
+    let mut gb = vec![0f32; C_PAD];
+    let mut loss = 0f64;
+    for i in 0..BATCH {
+        if smask[i] <= 0.0 {
+            continue;
+        }
+        let p = softmax_row(&logits[i * C_PAD..(i + 1) * C_PAD]);
+        let yr = &yoh[i * C_PAD..(i + 1) * C_PAD];
+        for c in 0..C_PAD {
+            if yr[c] > 0.0 {
+                loss -= (p[c].max(1e-12) as f64).ln();
+            }
+        }
+        let xr = &x[i * F_PAD..(i + 1) * F_PAD];
+        for c in 0..C_PAD {
+            let d = (p[c] - yr[c]) * cmask[c] / active;
+            if d == 0.0 {
+                continue;
+            }
+            gb[c] += d;
+            for (f, &xv) in xr.iter().enumerate() {
+                if xv != 0.0 {
+                    gw[f * C_PAD + c] += d * xv;
+                }
+            }
+        }
+    }
+    for (wv, &g) in w.iter_mut().zip(&gw) {
+        *wv -= lr * (g + l2 * *wv);
+    }
+    for (bv, &g) in b.iter_mut().zip(&gb) {
+        *bv -= lr * g;
+    }
+    (loss / active as f64) as f32
+}
+
+/// `logreg_train_epoch`: EPOCH_TILES sequential [`logreg_step`]s over a
+/// stacked tile batch; returns the last active tile's loss.
+#[allow(clippy::too_many_arguments)]
+pub fn logreg_epoch(
+    x: &[f32],
+    yoh: &[f32],
+    smask: &[f32],
+    cmask: &[f32],
+    w: &mut [f32],
+    b: &mut [f32],
+    lr: f32,
+    l2: f32,
+) -> f32 {
+    let mut loss = 0f32;
+    for t in 0..EPOCH_TILES {
+        let sm = &smask[t * BATCH..(t + 1) * BATCH];
+        if sm.iter().all(|&m| m <= 0.0) {
+            continue; // padded tile: exact no-op
+        }
+        loss = logreg_step(
+            &x[t * BATCH * F_PAD..(t + 1) * BATCH * F_PAD],
+            &yoh[t * BATCH * C_PAD..(t + 1) * BATCH * C_PAD],
+            sm,
+            cmask,
+            w,
+            b,
+            lr,
+            l2,
+        );
+    }
+    loss
+}
+
+/// MLP forward pass for one padded batch: returns (hidden activations
+/// tanh(x@w1+b1) as (rows, HIDDEN), masked logits as (rows, C_PAD)).
+fn mlp_forward(
+    x: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    cmask: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let rows = x.len() / F_PAD;
+    let mut h = vec![0f32; rows * HIDDEN];
+    for i in 0..rows {
+        let xr = &x[i * F_PAD..(i + 1) * F_PAD];
+        let hr = &mut h[i * HIDDEN..(i + 1) * HIDDEN];
+        hr.copy_from_slice(&b1[..HIDDEN]);
+        for (f, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w1[f * HIDDEN..(f + 1) * HIDDEN];
+            for j in 0..HIDDEN {
+                hr[j] += xv * wr[j];
+            }
+        }
+        for v in hr.iter_mut() {
+            *v = v.tanh();
+        }
+    }
+    let logits = linear_logits(&h, w2, b2, cmask, HIDDEN);
+    (h, logits)
+}
+
+/// `mlp_predict`: masked logits of the one-hidden-layer tanh MLP.
+pub fn mlp_predict(
+    x: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    cmask: &[f32],
+) -> Vec<f32> {
+    mlp_forward(x, w1, b1, w2, b2, cmask).1
+}
+
+/// `mlp_train_step`: one masked mini-batch SGD step of the MLP
+/// (softmax cross-entropy, tanh hidden layer, L2 on both weight
+/// matrices); updates parameters in place and returns the mean loss.
+#[allow(clippy::too_many_arguments)]
+pub fn mlp_step(
+    x: &[f32],
+    yoh: &[f32],
+    smask: &[f32],
+    cmask: &[f32],
+    w1: &mut [f32],
+    b1: &mut [f32],
+    w2: &mut [f32],
+    b2: &mut [f32],
+    lr: f32,
+    l2: f32,
+) -> f32 {
+    let active: f32 = smask.iter().sum();
+    if active <= 0.0 {
+        return 0.0;
+    }
+    let (h, logits) = mlp_forward(x, w1, b1, w2, b2, cmask);
+    let mut gw1 = vec![0f32; F_PAD * HIDDEN];
+    let mut gb1 = vec![0f32; HIDDEN];
+    let mut gw2 = vec![0f32; HIDDEN * C_PAD];
+    let mut gb2 = vec![0f32; C_PAD];
+    let mut loss = 0f64;
+    for i in 0..BATCH {
+        if smask[i] <= 0.0 {
+            continue;
+        }
+        let p = softmax_row(&logits[i * C_PAD..(i + 1) * C_PAD]);
+        let yr = &yoh[i * C_PAD..(i + 1) * C_PAD];
+        let hr = &h[i * HIDDEN..(i + 1) * HIDDEN];
+        let xr = &x[i * F_PAD..(i + 1) * F_PAD];
+        let mut dlogit = [0f32; C_PAD];
+        for c in 0..C_PAD {
+            if yr[c] > 0.0 {
+                loss -= (p[c].max(1e-12) as f64).ln();
+            }
+            dlogit[c] = (p[c] - yr[c]) * cmask[c] / active;
+        }
+        // output layer grads + backprop into the hidden activations
+        let mut dh = [0f32; HIDDEN];
+        for c in 0..C_PAD {
+            let d = dlogit[c];
+            if d == 0.0 {
+                continue;
+            }
+            gb2[c] += d;
+            for j in 0..HIDDEN {
+                gw2[j * C_PAD + c] += d * hr[j];
+                dh[j] += d * w2[j * C_PAD + c];
+            }
+        }
+        // through tanh: dpre = dh * (1 - h^2)
+        for (j, dv) in dh.iter_mut().enumerate() {
+            *dv *= 1.0 - hr[j] * hr[j];
+            gb1[j] += *dv;
+        }
+        for (f, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let gr = &mut gw1[f * HIDDEN..(f + 1) * HIDDEN];
+            for j in 0..HIDDEN {
+                gr[j] += dh[j] * xv;
+            }
+        }
+    }
+    for (wv, &g) in w1.iter_mut().zip(&gw1) {
+        *wv -= lr * (g + l2 * *wv);
+    }
+    for (bv, &g) in b1.iter_mut().zip(&gb1) {
+        *bv -= lr * g;
+    }
+    for (wv, &g) in w2.iter_mut().zip(&gw2) {
+        *wv -= lr * (g + l2 * *wv);
+    }
+    for (bv, &g) in b2.iter_mut().zip(&gb2) {
+        *bv -= lr * g;
+    }
+    (loss / active as f64) as f32
+}
+
+/// `mlp_train_epoch`: EPOCH_TILES sequential [`mlp_step`]s.
+#[allow(clippy::too_many_arguments)]
+pub fn mlp_epoch(
+    x: &[f32],
+    yoh: &[f32],
+    smask: &[f32],
+    cmask: &[f32],
+    w1: &mut [f32],
+    b1: &mut [f32],
+    w2: &mut [f32],
+    b2: &mut [f32],
+    lr: f32,
+    l2: f32,
+) -> f32 {
+    let mut loss = 0f32;
+    for t in 0..EPOCH_TILES {
+        let sm = &smask[t * BATCH..(t + 1) * BATCH];
+        if sm.iter().all(|&m| m <= 0.0) {
+            continue;
+        }
+        loss = mlp_step(
+            &x[t * BATCH * F_PAD..(t + 1) * BATCH * F_PAD],
+            &yoh[t * BATCH * C_PAD..(t + 1) * BATCH * C_PAD],
+            sm,
+            cmask,
+            w1,
+            b1,
+            w2,
+            b2,
+            lr,
+            l2,
+        );
+    }
+    loss
+}
+
+/// `kmeans_step`: one Lloyd iteration over a padded point tile. Returns
+/// (updated centroids, per-point nearest-centroid assignment). Inactive
+/// points (pmask 0) get assignment 0 and never pull centroids; centroids
+/// with no members keep their input position.
+pub fn kmeans_step(points: &[f32], pmask: &[f32], centroids: &[f32]) -> (Vec<f32>, Vec<i32>) {
+    let mut assign = vec![0i32; KM_POINTS];
+    let mut sums = vec![0f64; KM_K * KM_DIM];
+    let mut counts = vec![0u64; KM_K];
+    for i in 0..KM_POINTS {
+        if pmask[i] <= 0.0 {
+            continue;
+        }
+        let pr = &points[i * KM_DIM..(i + 1) * KM_DIM];
+        let mut best = 0usize;
+        let mut best_d = f32::MAX;
+        for c in 0..KM_K {
+            let cr = &centroids[c * KM_DIM..(c + 1) * KM_DIM];
+            let mut d = 0f32;
+            for j in 0..KM_DIM {
+                let diff = pr[j] - cr[j];
+                d += diff * diff;
+            }
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        assign[i] = best as i32;
+        counts[best] += 1;
+        for j in 0..KM_DIM {
+            sums[best * KM_DIM + j] += pr[j] as f64;
+        }
+    }
+    let mut out = centroids.to_vec();
+    for c in 0..KM_K {
+        if counts[c] > 0 {
+            for j in 0..KM_DIM {
+                out[c * KM_DIM + j] = (sums[c * KM_DIM + j] / counts[c] as f64) as f32;
+            }
+        }
+    }
+    (out, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CodeMatrix;
+    use crate::data::{Column, Frame};
+    use crate::measures::entropy::subset_entropy as native_subset_entropy;
+    use crate::util::rng::Rng;
+
+    fn toy_codes() -> (Frame, CodeMatrix) {
+        let mut rng = Rng::new(3);
+        let n = 120;
+        let cols = vec![
+            Column::numeric("a", (0..n).map(|_| rng.f32()).collect()),
+            Column::categorical("c", (0..n).map(|_| rng.usize_below(5) as f32).collect()),
+            Column::categorical("y", (0..n).map(|_| rng.usize_below(3) as f32).collect()),
+        ];
+        let f = Frame::new("toy", cols, 2);
+        let codes = CodeMatrix::from_frame(&f);
+        (f, codes)
+    }
+
+    /// Pack a subset into the (N_PAD, M_PAD) tile the artifact expects.
+    fn pack(codes: &CodeMatrix, rows: &[u32], cols: &[u32]) -> (Vec<i32>, Vec<f32>, Vec<f32>) {
+        let mut tile = vec![0i32; N_PAD * M_PAD];
+        let mut rmask = vec![0f32; N_PAD];
+        let mut cmask = vec![0f32; M_PAD];
+        for (j, &c) in cols.iter().enumerate() {
+            let col = codes.column(c as usize);
+            for (i, &r) in rows.iter().enumerate() {
+                tile[i * M_PAD + j] = col[r as usize] as i32;
+            }
+        }
+        rmask[..rows.len()].fill(1.0);
+        cmask[..cols.len()].fill(1.0);
+        (tile, rmask, cmask)
+    }
+
+    #[test]
+    fn entropy_contract_matches_measures_substrate() {
+        let (f, codes) = toy_codes();
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let rows = rng.sample_distinct(f.n_rows, 1 + rng.usize_below(100));
+            let cols = rng.sample_distinct(f.n_cols(), 1 + rng.usize_below(3));
+            let (tile, rmask, cmask) = pack(&codes, &rows, &cols);
+            let got = entropy_subset(&tile, &rmask, &cmask) as f64;
+            let want = native_subset_entropy(&codes, &rows, &cols);
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn softmax_handles_masked_logits() {
+        let mut logits = vec![MASKED_LOGIT; C_PAD];
+        logits[0] = 1.0;
+        logits[1] = 1.0;
+        let p = softmax_row(&logits);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+        assert!(p[2..].iter().all(|&v| v < 1e-12));
+    }
+
+    #[test]
+    fn logreg_step_reduces_loss_on_separable_batch() {
+        let mut rng = Rng::new(4);
+        let mut x = vec![0f32; BATCH * F_PAD];
+        let mut yoh = vec![0f32; BATCH * C_PAD];
+        let smask = vec![1f32; BATCH];
+        for i in 0..BATCH {
+            let c = i % 2;
+            yoh[i * C_PAD + c] = 1.0;
+            for f in 0..4 {
+                x[i * F_PAD + f] = (c as f64 * 4.0 - 2.0 + rng.normal()) as f32;
+            }
+        }
+        let cmask = {
+            let mut m = vec![0f32; C_PAD];
+            m[0] = 1.0;
+            m[1] = 1.0;
+            m
+        };
+        let mut w = vec![0f32; F_PAD * C_PAD];
+        let mut b = vec![0f32; C_PAD];
+        let first = logreg_step(&x, &yoh, &smask, &cmask, &mut w, &mut b, 0.5, 0.0);
+        let mut last = first;
+        for _ in 0..15 {
+            last = logreg_step(&x, &yoh, &smask, &cmask, &mut w, &mut b, 0.5, 0.0);
+        }
+        assert!(last < first * 0.5, "loss not decreasing: {first} -> {last}");
+    }
+
+    #[test]
+    fn zero_mask_step_is_noop() {
+        let x = vec![1f32; BATCH * F_PAD];
+        let yoh = vec![0f32; BATCH * C_PAD];
+        let smask = vec![0f32; BATCH];
+        let cmask = vec![1f32; C_PAD];
+        let mut w = vec![0.5f32; F_PAD * C_PAD];
+        let mut b = vec![0.25f32; C_PAD];
+        let (w0, b0) = (w.clone(), b.clone());
+        let loss = logreg_step(&x, &yoh, &smask, &cmask, &mut w, &mut b, 0.5, 0.1);
+        assert_eq!(loss, 0.0);
+        assert_eq!(w, w0);
+        assert_eq!(b, b0);
+    }
+
+    #[test]
+    fn kmeans_assigns_to_nearest_and_averages() {
+        let mut points = vec![0f32; KM_POINTS * KM_DIM];
+        let mut pmask = vec![0f32; KM_POINTS];
+        // two clusters on the first coordinate at -4 and +4
+        for i in 0..200 {
+            points[i * KM_DIM] = if i < 100 { -4.0 } else { 4.0 };
+            pmask[i] = 1.0;
+        }
+        let mut centroids = vec![1e6f32; KM_K * KM_DIM];
+        centroids[0] = -1.0;
+        centroids[KM_DIM] = 1.0;
+        // zero the non-first coords of the two active centroid slots
+        for j in 1..KM_DIM {
+            centroids[j] = 0.0;
+            centroids[KM_DIM + j] = 0.0;
+        }
+        let (new_c, assign) = kmeans_step(&points, &pmask, &centroids);
+        assert!(assign[..100].iter().all(|&a| a == 0));
+        assert!(assign[100..200].iter().all(|&a| a == 1));
+        assert!((new_c[0] + 4.0).abs() < 1e-5);
+        assert!((new_c[KM_DIM] - 4.0).abs() < 1e-5);
+        // untouched slot keeps its position
+        assert_eq!(new_c[2 * KM_DIM], 1e6);
+    }
+}

@@ -10,8 +10,9 @@
 //!
 //! `SubStrat-NF` (paper category F) is step 3 switched off.
 
+use crate::automl::eval::EvalEngine;
 use crate::automl::space::{ConfigSpace, PipelineConfig};
-use crate::automl::{run_automl, AutoMlConfig, AutoMlResult};
+use crate::automl::{run_automl_with_engine, AutoMlConfig, AutoMlResult};
 use crate::baselines::{StrategyContext, StrategyOutcome, SubsetStrategy};
 use crate::data::{CodeMatrix, Frame};
 use crate::gendst::default_dst_size;
@@ -53,6 +54,10 @@ pub struct SubStratRun {
     pub final_config: PipelineConfig,
     /// end-to-end wall clock (subset search + AutoML + fine-tune)
     pub total_time_s: f64,
+    /// evaluations served from the eval memo shared across steps 2→3
+    /// (the warm-start configuration alone guarantees ≥ 1 when
+    /// fine-tuning runs; see DESIGN.md §5.1)
+    pub eval_memo_hits: usize,
 }
 
 /// Run the SubStrat flow with an arbitrary subset strategy.
@@ -84,10 +89,19 @@ pub fn run_substrat(
     let outcome = strategy.find(&ctx);
     let subset = frame.subset(&outcome.dst.rows, &outcome.dst.cols);
 
+    // one evaluation engine spans steps 2 and 3: the config-fingerprint
+    // memo is shared, so the warm-start configuration M' (scored during
+    // the subset run) is served from the memo instead of being paid for
+    // a second time at the head of the fine-tune run. Documented
+    // approximation (DESIGN.md §5.1): the memoized score was measured on
+    // the measure-preserving subset; it seeds the fine-tune history
+    // without a second CV fit.
+    let mut engine = EvalEngine::new(automl_cfg.policy.clone());
+
     // step 2: AutoML on the subset -> M'
     let mut sub_cfg = automl_cfg.clone();
     sub_cfg.seed = automl_cfg.seed ^ 0x5b;
-    let automl_sub = run_automl(&subset, &sub_cfg);
+    let automl_sub = run_automl_with_engine(&subset, &sub_cfg, &mut engine);
 
     // step 3: restricted fine-tune on the full dataset -> M_sub
     let fine_tune = if cfg.fine_tune {
@@ -98,7 +112,7 @@ pub fn run_substrat(
             .max(1);
         ft_cfg.warm_start = vec![automl_sub.best.clone()];
         ft_cfg.seed = automl_cfg.seed ^ 0xf1;
-        Some(run_automl(frame, &ft_cfg))
+        Some(run_automl_with_engine(frame, &ft_cfg, &mut engine))
     } else {
         None
     };
@@ -114,6 +128,7 @@ pub fn run_substrat(
         fine_tune,
         final_config,
         total_time_s: sw.elapsed_s(),
+        eval_memo_hits: engine.memo_hits,
     }
 }
 
@@ -150,6 +165,26 @@ mod tests {
         assert_eq!(ft.evals, 3);
         assert_eq!(run.final_config, ft.best);
         assert!(run.total_time_s > 0.0);
+    }
+
+    #[test]
+    fn eval_memo_shared_across_steps_saves_evals() {
+        // the warm-start config M' is scored in step 2; step 3 must
+        // serve its head-of-history evaluation from the shared memo
+        // instead of paying a second CV fit
+        let (f, codes) = setup();
+        let strategy = baselines::by_name("gendst");
+        let automl = AutoMlConfig::new(SearcherKind::Random, 6, 9);
+        let cfg = SubStratConfig {
+            fine_tune_frac: 0.5,
+            ..Default::default()
+        };
+        let run = run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &cfg);
+        let ft = run.fine_tune.as_ref().unwrap();
+        assert!(run.eval_memo_hits >= 1, "warm start missed the shared memo");
+        assert!(ft.memo_hits >= 1, "fine-tune run paid for the warm start again");
+        // the served score is the warm config's step-2 score, bit-exact
+        assert_eq!(ft.history[0].1.to_bits(), run.automl_sub.best_cv.to_bits());
     }
 
     #[test]

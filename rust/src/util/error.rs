@@ -1,0 +1,126 @@
+//! Minimal error substrate standing in for the `anyhow` crate (not
+//! available offline; see DESIGN.md §3.11): a string-backed error type,
+//! a `Result` alias with the error defaulted, a `Context` extension
+//! trait, and `anyhow!`/`ensure!`-shaped macros. Only the surface the
+//! `runtime` layer actually uses is provided.
+
+use std::fmt;
+
+/// String-backed error value (the substrate's `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything stringifiable.
+    pub fn msg<S: Into<String>>(msg: S) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context attachment for fallible values (the substrate's
+/// `anyhow::Context`): prefixes the underlying error with a message.
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Attach a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Debug> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e:?}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e:?}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Format-and-wrap an [`Error`] (the substrate's `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow_msg {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an error when a condition fails (the substrate's
+/// `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failing() -> std::result::Result<u32, std::num::ParseIntError> {
+        "x".parse::<u32>()
+    }
+
+    #[test]
+    fn context_prefixes_message() {
+        let e = failing().context("parsing knob").unwrap_err();
+        let s = format!("{e}");
+        assert!(s.starts_with("parsing knob: "), "{s}");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, Error> = Ok(7);
+        let v = ok
+            .with_context(|| -> String { panic!("must not be called on Ok") })
+            .unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        assert_eq!(Some(3).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_macro_early_returns() {
+        fn check(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too big: {n}");
+            Ok(n)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        let e = check(12).unwrap_err();
+        assert!(format!("{e}").contains("n too big: 12"));
+    }
+
+    #[test]
+    fn anyhow_msg_macro_formats() {
+        let e = anyhow_msg!("bad shape {:?}", [1, 2]);
+        assert!(format!("{e}").contains("[1, 2]"));
+    }
+}

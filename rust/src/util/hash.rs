@@ -28,6 +28,26 @@ const ROW_TAG: u64 = 0x524F_5753_0000_0001; // "ROWS"
 const COL_TAG: u64 = 0x434F_4C53_0000_0002; // "COLS"
 const STREAM_B: u64 = 0xA5A5_5A5A_C3C3_3C3C;
 
+/// Order-*dependent* 128-bit fingerprint of a word sequence — the
+/// configuration-memo counterpart of [`subset_key`] (which must be
+/// order-independent because GA chromosomes shuffle their genes). Built
+/// in the same style: two independent accumulator streams of per-word
+/// mixes, with the length folded into the finalizer. Used by
+/// `PipelineConfig::fingerprint` to key the AutoML evaluation memo
+/// (DESIGN.md §5.1): equal word sequences ⇒ equal keys, and distinct
+/// sequences collide only with ~2^-128 probability.
+pub fn fingerprint(words: &[u64]) -> (u64, u64) {
+    // arbitrary distinct non-zero starting points (π and e fractions)
+    let mut a = 0x243F_6A88_85A3_08D3u64;
+    let mut b = 0x1319_8A2E_0370_7344u64;
+    for &w in words {
+        a = mix64(a ^ w);
+        b = mix64(b.rotate_left(11) ^ w ^ STREAM_B);
+    }
+    let n = words.len() as u64;
+    (mix64(a ^ n), mix64(b ^ mix64(n)))
+}
+
 /// 128-bit order-independent key of an index-set pair.
 ///
 /// Properties (see the tests):
@@ -81,6 +101,28 @@ mod tests {
     fn empty_sets_are_distinct_from_small_sets() {
         assert_ne!(subset_key(&[], &[]), subset_key(&[0], &[]));
         assert_ne!(subset_key(&[0], &[]), subset_key(&[], &[0]));
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_length_sensitive() {
+        assert_eq!(fingerprint(&[1, 2, 3]), fingerprint(&[1, 2, 3]));
+        assert_ne!(fingerprint(&[1, 2, 3]), fingerprint(&[3, 2, 1]));
+        assert_ne!(fingerprint(&[1, 2]), fingerprint(&[1, 2, 0]));
+        assert_ne!(fingerprint(&[]), fingerprint(&[0]));
+    }
+
+    #[test]
+    fn fingerprint_no_collisions_across_random_sequences() {
+        let mut rng = Rng::new(37);
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..20_000 {
+            let len = 1 + rng.usize_below(8);
+            let words: Vec<u64> = (0..len).map(|_| rng.u64_below(1 << 20)).collect();
+            let key = fingerprint(&words);
+            if let Some(prev) = seen.insert(key, words.clone()) {
+                assert_eq!(prev, words, "collision on key {key:?}");
+            }
+        }
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod bench; // ~criterion
 pub mod cli; // ~clap
+pub mod error; // ~anyhow (string-backed, Context + ensure!)
 pub mod hash; // order-independent subset hashing (loss memo keys)
 pub mod pool; // ~rayon scoped parallel map
 pub mod prop; // ~proptest

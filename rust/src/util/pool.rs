@@ -25,6 +25,17 @@ pub fn max_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Resolve a thread-count knob: 0 means auto (all hardware threads —
+/// callers of the scoped `parallel_map` block while it runs, so the
+/// coordinator core idles anyway), any other value is taken literally.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        max_threads()
+    } else {
+        requested
+    }
+}
+
 /// Apply `f` to every item in parallel, preserving order of results.
 ///
 /// `f` must be `Sync` (it is shared across workers); items are only read.
@@ -105,6 +116,13 @@ mod tests {
         let items: Vec<u8> = vec![];
         let out: Vec<u8> = parallel_map(&items, 4, |_, &x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert_eq!(resolve_threads(0), max_threads());
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
     }
 
     #[test]

@@ -80,10 +80,16 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
-/// Index of the maximum value (first on ties); None when empty.
+/// Index of the maximum value (first on ties); None when empty or
+/// all-NaN. NaN entries are never selected — before PR 2 a leading NaN
+/// was sticky (every `x > NaN` comparison is false) and poisoned
+/// best-config selection in the AutoML loop.
 pub fn argmax(xs: &[f64]) -> Option<usize> {
     let mut best: Option<usize> = None;
     for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
         if best.is_none() || x > xs[best.unwrap()] {
             best = Some(i);
         }
@@ -91,10 +97,14 @@ pub fn argmax(xs: &[f64]) -> Option<usize> {
     best
 }
 
-/// Index of the minimum value (first on ties); None when empty.
+/// Index of the minimum value (first on ties); None when empty or
+/// all-NaN. NaN-safe like [`argmax`].
 pub fn argmin(xs: &[f64]) -> Option<usize> {
     let mut best: Option<usize> = None;
     for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
         if best.is_none() || x < xs[best.unwrap()] {
             best = Some(i);
         }
@@ -179,6 +189,18 @@ mod tests {
         assert_eq!(argmax(&xs), Some(1));
         assert_eq!(argmin(&xs), Some(0));
         assert_eq!(argmax(&[]), None);
+    }
+
+    #[test]
+    fn argmax_argmin_are_nan_safe() {
+        // leading NaN must not be sticky
+        assert_eq!(argmax(&[f64::NAN, 1.0, 3.0]), Some(2));
+        assert_eq!(argmin(&[f64::NAN, 3.0, 1.0]), Some(2));
+        // interior NaN skipped
+        assert_eq!(argmax(&[1.0, f64::NAN, 0.5]), Some(0));
+        // all-NaN (and empty) have no answer
+        assert_eq!(argmax(&[f64::NAN, f64::NAN]), None);
+        assert_eq!(argmin(&[f64::NAN]), None);
     }
 
     #[test]

@@ -92,6 +92,12 @@ impl Budget {
         self.evals += 1;
     }
 
+    /// Record a whole evaluation batch at once (the batched AutoML loop
+    /// charges a round of proposals in one call).
+    pub fn consume_n(&mut self, n: usize) {
+        self.evals += n;
+    }
+
     pub fn evals_used(&self) -> usize {
         self.evals
     }
@@ -143,6 +149,19 @@ mod tests {
         b.consume();
         assert!(b.exhausted());
         assert_eq!(b.evals_used(), 3);
+    }
+
+    #[test]
+    fn consume_n_matches_repeated_consume() {
+        let mut a = Budget::evals(10);
+        let mut b = Budget::evals(10);
+        a.consume_n(4);
+        for _ in 0..4 {
+            b.consume();
+        }
+        assert_eq!(a.evals_used(), b.evals_used());
+        a.consume_n(6);
+        assert!(a.exhausted());
     }
 
     #[test]
