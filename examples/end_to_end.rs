@@ -13,7 +13,8 @@
 
 use substrat::automl::SearcherKind;
 use substrat::data::CodeMatrix;
-use substrat::experiments::{prepare, run_full, run_strategy, ExpConfig};
+use substrat::experiments::runner::{strategy_grid, Runner};
+use substrat::experiments::{prepare, ExpConfig};
 use substrat::runtime::{self, entropy_exec::EntropyExec};
 use substrat::util::cli::Args;
 use substrat::util::rng::Rng;
@@ -27,10 +28,12 @@ fn main() {
         full_evals: args.usize_or("evals", 16),
         searchers: vec![SearcherKind::Smbo, SearcherKind::Gp],
         datasets: vec![args.str_or("dataset", "D1")],
-        threads: 1,
+        threads: args.usize_or("threads", 0),
+        out_dir: std::path::PathBuf::from(args.str_or("out", "results/end_to_end")),
         ..Default::default()
     };
     let symbol = cfg.datasets[0].clone();
+    std::fs::create_dir_all(&cfg.out_dir).ok();
 
     // layer check: XLA entropy kernel vs native on this dataset
     let probe = prepare(&symbol, &cfg, 0);
@@ -45,22 +48,23 @@ fn main() {
     println!("[layers] entropy native={native:.6} pallas/pjrt={xla:.6} |diff|={:.1e}", (native - xla).abs());
     assert!((native - xla).abs() < 1e-4);
 
+    // the (searcher × rep) sweep goes through the shared cell scheduler:
+    // Wall timing (serial cells, exclusive inner parallelism) and a
+    // resumable journal under --out, so an interrupted run continues
+    let cells = strategy_grid(&cfg, &["gendst"]);
     let mut trs = Vec::new();
     let mut ras = Vec::new();
-    for &searcher in &cfg.searchers {
-        for rep in 0..cfg.reps {
-            let prep = prepare(&symbol, &cfg, rep);
-            let full = run_full(&prep, searcher, &cfg, rep);
-            let rec = run_strategy(&prep, &symbol, "gendst", searcher, &full, &cfg, rep, None);
-            println!(
-                "[{}/rep{rep}] full: acc={:.4} t={:.1}s ({})  substrat: acc={:.4} t={:.1}s  -> TR={:.1}% RA={:.1}%",
-                searcher.name(), full.test_acc, full.elapsed_s, full.best_desc,
-                rec.acc_sub, rec.time_sub_s,
-                100.0 * rec.time_reduction(), 100.0 * rec.relative_accuracy()
-            );
-            trs.push(rec.time_reduction());
-            ras.push(rec.relative_accuracy());
-        }
+    for o in Runner::new(&cfg).run(&cells) {
+        let rec = &o.record;
+        println!(
+            "[{}/rep{}{}] full: acc={:.4} t={:.1}s  substrat: acc={:.4} t={:.1}s ({})  -> TR={:.1}% RA={:.1}%",
+            rec.searcher, rec.rep, if o.resumed { " journal" } else { "" },
+            rec.acc_full, rec.time_full_s,
+            rec.acc_sub, rec.time_sub_s, rec.final_desc,
+            100.0 * rec.time_reduction(), 100.0 * rec.relative_accuracy()
+        );
+        trs.push(rec.time_reduction());
+        ras.push(rec.relative_accuracy());
     }
     println!(
         "\nheadline ({symbol}, scale {}): time-reduction {:.1}% +- {:.1}%, relative-accuracy {:.1}% +- {:.1}%",

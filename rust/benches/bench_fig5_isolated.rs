@@ -17,7 +17,11 @@ fn main() {
         full_evals: 6,
         searchers: vec![SearcherKind::Smbo],
         datasets: vec!["D2".into(), "D3".into()],
-        threads: 1,
+        // full hardware budget; Wall timing serializes cells with
+        // exclusive inner parallelism (DESIGN.md §5.2)
+        threads: 0,
+        // a bench must re-measure: never resume from a results journal
+        journal: false,
         out_dir: PathBuf::from("results/bench_fig5"),
         ..Default::default()
     };

@@ -75,13 +75,21 @@ impl SearcherKind {
         }
     }
 
-    pub fn by_name(name: &str) -> SearcherKind {
+    /// Non-panicking name lookup — the single mapping the panicking
+    /// [`SearcherKind::by_name`] and the experiment journal's
+    /// corruption-tolerant parser both resolve through.
+    pub fn try_by_name(name: &str) -> Option<SearcherKind> {
         match name {
-            "smbo" | "autosklearn" => SearcherKind::Smbo,
-            "gp" | "tpot" => SearcherKind::Gp,
-            "random" => SearcherKind::Random,
-            other => panic!("unknown searcher {other:?} (smbo|gp|random)"),
+            "smbo" | "autosklearn" => Some(SearcherKind::Smbo),
+            "gp" | "tpot" => Some(SearcherKind::Gp),
+            "random" => Some(SearcherKind::Random),
+            _ => None,
         }
+    }
+
+    pub fn by_name(name: &str) -> SearcherKind {
+        SearcherKind::try_by_name(name)
+            .unwrap_or_else(|| panic!("unknown searcher {name:?} (smbo|gp|random)"))
     }
 }
 
@@ -418,5 +426,10 @@ mod tests {
         assert_eq!(SearcherKind::by_name("autosklearn"), SearcherKind::Smbo);
         assert_eq!(SearcherKind::by_name("tpot"), SearcherKind::Gp);
         assert_eq!(SearcherKind::by_name("random"), SearcherKind::Random);
+        assert_eq!(SearcherKind::try_by_name("nope"), None);
+        // every canonical name roundtrips through the shared registry
+        for k in [SearcherKind::Smbo, SearcherKind::Gp, SearcherKind::Random] {
+            assert_eq!(SearcherKind::try_by_name(k.name()), Some(k));
+        }
     }
 }

@@ -93,6 +93,8 @@ impl SubsetStrategy for GreedySeq {
         StrategyOutcome {
             dst: Dst { rows, cols },
             elapsed_s: sw.elapsed_s(),
+            setup_s: 0.0,
+            setup_cpu_s: 0.0,
             evals: eval.evals,
         }
     }
@@ -174,6 +176,8 @@ impl SubsetStrategy for GreedyMult {
         StrategyOutcome {
             dst: Dst { rows, cols },
             elapsed_s: sw.elapsed_s(),
+            setup_s: 0.0,
+            setup_cpu_s: 0.0,
             evals: eval.evals,
         }
     }

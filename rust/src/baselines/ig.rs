@@ -86,6 +86,8 @@ impl SubsetStrategy for IgRand {
         StrategyOutcome {
             dst: Dst { rows, cols },
             elapsed_s: sw.elapsed_s(),
+            setup_s: 0.0,
+            setup_cpu_s: 0.0,
             evals: ctx.frame.n_cols() - 1,
         }
     }
@@ -115,6 +117,8 @@ impl SubsetStrategy for IgKm {
         StrategyOutcome {
             dst: Dst { rows, cols },
             elapsed_s: sw.elapsed_s(),
+            setup_s: 0.0,
+            setup_cpu_s: 0.0,
             evals: ctx.frame.n_cols() - 1,
         }
     }

@@ -235,6 +235,8 @@ impl SubsetStrategy for KmStrategy {
         StrategyOutcome {
             dst: Dst { rows, cols },
             elapsed_s: sw.elapsed_s(),
+            setup_s: 0.0,
+            setup_cpu_s: 0.0,
             evals: 0,
         }
     }

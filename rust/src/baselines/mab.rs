@@ -119,6 +119,8 @@ impl SubsetStrategy for MultiArmBandit {
         StrategyOutcome {
             dst,
             elapsed_s: sw.elapsed_s(),
+            setup_s: 0.0,
+            setup_cpu_s: 0.0,
             evals: eval.evals,
         }
     }

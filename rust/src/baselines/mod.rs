@@ -35,7 +35,19 @@ pub struct StrategyContext<'a> {
 #[derive(Debug, Clone)]
 pub struct StrategyOutcome {
     pub dst: Dst,
+    /// wall clock of the subset *search* itself — the window that enters
+    /// the paper's Time(M_sub)
     pub elapsed_s: f64,
+    /// harness overhead spent before the timed window opened (MC-24H's
+    /// budget-estimation probe; 0 for every other strategy). Excluded
+    /// from `elapsed_s` and from SubStrat's `total_time_s`.
+    pub setup_s: f64,
+    /// the same setup window measured in CPU time (own thread + billed
+    /// pool workers; equals wall where no thread CPU clock exists). The
+    /// runner's `CpuProxy` mode subtracts *this* — subtracting the wall
+    /// figure from a CPU measurement would over-correct under
+    /// contention.
+    pub setup_cpu_s: f64,
     /// measure/fitness evaluations spent (0 where not applicable)
     pub evals: usize,
 }
@@ -63,22 +75,54 @@ impl SubsetStrategy for GenDstStrategy {
         StrategyOutcome {
             dst: res.dst,
             elapsed_s: sw.elapsed_s(),
+            setup_s: 0.0,
+            setup_cpu_s: 0.0,
             evals: res.fitness_evals,
         }
     }
 }
 
-/// Strategy registry by CLI/experiment name.
+/// Strategy registry by CLI/experiment name, with the default engine
+/// thread knobs (Gen-DST auto-sizes its fitness fills to the hardware).
 pub fn by_name(name: &str) -> Box<dyn SubsetStrategy> {
+    by_name_threaded(name, 0)
+}
+
+/// Strategy registry with an explicit inner-engine thread budget. The
+/// experiment runner passes its per-cell `inner` allowance here so a
+/// strategy's own parallelism (the Gen-DST fitness fills) stays inside
+/// the two-level budget instead of grabbing every core (DESIGN.md §5.2).
+/// `threads = 0` means auto.
+pub fn by_name_threaded(name: &str, threads: usize) -> Box<dyn SubsetStrategy> {
     match name {
         "gendst" | "substrat" => Box::new(GenDstStrategy {
-            config: GenDstConfig::default(),
+            config: GenDstConfig {
+                threads,
+                ..Default::default()
+            },
         }),
-        "mc-100" => Box::new(mc::MonteCarlo { max_evals: 100, time_mult_of_gendst: None }),
-        "mc-100k" => Box::new(mc::MonteCarlo { max_evals: 100_000, time_mult_of_gendst: None }),
+        "mc-100" => Box::new(mc::MonteCarlo {
+            instance: "mc-100",
+            max_evals: 100,
+            time_mult_of_gendst: None,
+            probe_threads: threads,
+        }),
+        "mc-100k" => Box::new(mc::MonteCarlo {
+            instance: "mc-100k",
+            max_evals: 100_000,
+            time_mult_of_gendst: None,
+            probe_threads: threads,
+        }),
         // MC-24H: budget-scaled stand-in — 20x the wall-clock Gen-DST
-        // needs on the same input (see DESIGN.md §5)
-        "mc-24h" => Box::new(mc::MonteCarlo { max_evals: usize::MAX, time_mult_of_gendst: Some(20.0) }),
+        // needs on the same input (see DESIGN.md §5). The probe runs
+        // with this cell's own thread allowance so the extrapolated
+        // budget matches what the real Gen-DST cell costs here.
+        "mc-24h" => Box::new(mc::MonteCarlo {
+            instance: "mc-24h",
+            max_evals: usize::MAX,
+            time_mult_of_gendst: Some(20.0),
+            probe_threads: threads,
+        }),
         "mab" => Box::new(mab::MultiArmBandit::default()),
         "greedy-seq" => Box::new(greedy::GreedySeq::default()),
         "greedy-mult" => Box::new(greedy::GreedyMult::default()),
@@ -148,6 +192,26 @@ mod tests {
     #[should_panic(expected = "unknown strategy")]
     fn unknown_strategy_panics() {
         let _ = by_name("nope");
+    }
+
+    #[test]
+    fn mc_instances_carry_distinct_names() {
+        // regression: all three paper MC instances reported name() ==
+        // "mc", making StrategyOutcome labels and logs ambiguous
+        for name in ["mc-100", "mc-100k", "mc-24h"] {
+            let s = by_name(name);
+            assert_eq!(s.name(), name);
+            assert_ne!(
+                crate::experiments::paper_label(s.name()),
+                "?",
+                "{name} has no paper label"
+            );
+        }
+        let names: Vec<&str> = ["mc-100", "mc-100k", "mc-24h"]
+            .iter()
+            .map(|n| by_name(n).name())
+            .collect();
+        assert_eq!(names, vec!["mc-100", "mc-100k", "mc-24h"]);
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! Regenerate with `substrat exp fig3`.
 
 use crate::automl::SearcherKind;
-use crate::experiments::{prepare, run_full, run_strategy, ExpConfig};
-use crate::util::pool;
+use crate::experiments::runner::{Cell, DstSpec, Runner};
+use crate::experiments::ExpConfig;
 use crate::util::stats;
 use crate::util::table::Table;
 
@@ -72,52 +72,35 @@ pub fn run(cfg: &ExpConfig) -> Table {
     cfg.searchers = vec![SearcherKind::Smbo];
     let vars = variants();
 
-    #[derive(Clone)]
-    struct Cell {
-        symbol: String,
-        rep: usize,
-    }
+    // every (dataset, rep) pairs one Full-AutoML reference with the
+    // whole variant grid; the scheduler shares the reference per group
     let mut cells = Vec::new();
     for symbol in &cfg.datasets {
         for rep in 0..cfg.reps {
-            cells.push(Cell {
-                symbol: symbol.clone(),
-                rep,
-            });
+            for v in &vars {
+                cells.push(
+                    Cell::new(symbol.clone(), v.strategy, SearcherKind::Smbo, rep)
+                        .with_dst(DstSpec::Mults {
+                            n_mult: v.n_mult,
+                            m_mult: v.m_mult,
+                        })
+                        .with_ft_frac(v.ft_frac)
+                        .with_label(v.label.clone()),
+                );
+            }
         }
     }
-
-    // per cell: one Full-AutoML reference + every variant
-    let nested: Vec<Vec<(String, f64, f64)>> =
-        pool::parallel_map(&cells, cfg.threads, |_, cell| {
-            let prep = prepare(&cell.symbol, &cfg, cell.rep);
-            let full = run_full(&prep, SearcherKind::Smbo, &cfg, cell.rep);
-            let (n0, m0) = crate::gendst::default_dst_size(prep.train.n_rows, prep.train.n_cols());
-            vars.iter()
-                .map(|v| {
-                    let n = ((n0 as f64 * v.n_mult).round() as usize)
-                        .clamp(2, prep.train.n_rows);
-                    let m = ((m0 as f64 * v.m_mult).round() as usize)
-                        .clamp(2, prep.train.n_cols());
-                    let mut vcfg = cfg.clone();
-                    vcfg.ft_frac = v.ft_frac;
-                    let rec = run_strategy(
-                        &prep,
-                        &cell.symbol,
-                        v.strategy,
-                        SearcherKind::Smbo,
-                        &full,
-                        &vcfg,
-                        cell.rep,
-                        Some((n, m)),
-                    );
-                    (v.label.clone(), rec.time_reduction(), rec.relative_accuracy())
-                })
-                .collect()
-        });
-
-    // aggregate per variant label
-    let flat: Vec<(String, f64, f64)> = nested.into_iter().flatten().collect();
+    let flat: Vec<(String, f64, f64)> = Runner::new(&cfg)
+        .run(&cells)
+        .into_iter()
+        .map(|o| {
+            (
+                o.cell.label().to_string(),
+                o.record.time_reduction(),
+                o.record.relative_accuracy(),
+            )
+        })
+        .collect();
     let mut points: Vec<(String, f64, f64)> = Vec::new();
     for v in &vars {
         let trs: Vec<f64> = flat

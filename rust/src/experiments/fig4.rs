@@ -3,8 +3,8 @@
 //! (log2 N, log2 M) to (N, M). Regenerate with `substrat exp fig4`.
 
 use crate::automl::SearcherKind;
-use crate::experiments::{prepare, run_full, run_strategy, ExpConfig};
-use crate::util::pool;
+use crate::experiments::runner::{Cell, DstSpec, Runner};
+use crate::experiments::ExpConfig;
 use crate::util::stats;
 use crate::util::table::Table;
 
@@ -46,48 +46,34 @@ pub fn run(cfg: &ExpConfig) -> (Table, Table) {
     let n_labels: Vec<String> = n_grid(10_000).into_iter().map(|(l, _)| l).collect();
     let m_labels: Vec<String> = m_grid(20).into_iter().map(|(l, _)| l).collect();
 
-    #[derive(Clone)]
-    struct Cell {
-        symbol: String,
-        rep: usize,
-    }
+    // every (dataset, rep) shares one Full-AutoML reference across the
+    // whole (n, m) grid; indices resolve per dataset inside the runner
+    let mut cfg = cfg.clone();
+    cfg.searchers = vec![SearcherKind::Smbo];
     let mut cells = Vec::new();
     for symbol in &cfg.datasets {
         for rep in 0..cfg.reps {
-            cells.push(Cell {
-                symbol: symbol.clone(),
-                rep,
-            });
-        }
-    }
-
-    // per (dataset, rep): one full reference + the whole grid
-    let nested: Vec<Vec<(usize, usize, f64, f64)>> =
-        pool::parallel_map(&cells, cfg.threads, |_, cell| {
-            let prep = prepare(&cell.symbol, cfg, cell.rep);
-            let full = run_full(&prep, SearcherKind::Smbo, cfg, cell.rep);
-            let ns = n_grid(prep.train.n_rows);
-            let ms = m_grid(prep.train.n_cols());
-            let mut out = Vec::new();
-            for (i, (_, n)) in ns.iter().enumerate() {
-                for (j, (_, m)) in ms.iter().enumerate() {
-                    let rec = run_strategy(
-                        &prep,
-                        &cell.symbol,
-                        "gendst",
-                        SearcherKind::Smbo,
-                        &full,
-                        cfg,
-                        cell.rep,
-                        Some((*n, *m)),
+            for ni in 0..n_labels.len() {
+                for mi in 0..m_labels.len() {
+                    cells.push(
+                        Cell::new(symbol.clone(), "gendst", SearcherKind::Smbo, rep)
+                            .with_dst(DstSpec::Grid { ni, mi }),
                     );
-                    out.push((i, j, rec.relative_accuracy(), rec.time_reduction()));
                 }
             }
-            out
-        });
-
-    let flat: Vec<(usize, usize, f64, f64)> = nested.into_iter().flatten().collect();
+        }
+    }
+    let flat: Vec<(usize, usize, f64, f64)> = Runner::new(&cfg)
+        .run(&cells)
+        .into_iter()
+        .map(|o| {
+            let (ni, mi) = match o.cell.dst {
+                DstSpec::Grid { ni, mi } => (ni, mi),
+                _ => unreachable!("fig4 cells are grid-specced"),
+            };
+            (ni, mi, o.record.relative_accuracy(), o.record.time_reduction())
+        })
+        .collect();
     let mut header = vec!["n \\ m".to_string()];
     header.extend(m_labels.iter().cloned());
     let mut acc_t = Table::new(header.clone());

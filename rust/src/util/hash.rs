@@ -48,6 +48,30 @@ pub fn fingerprint(words: &[u64]) -> (u64, u64) {
     (mix64(a ^ n), mix64(b ^ mix64(n)))
 }
 
+/// Order-dependent 128-bit fingerprint of a byte string — [`fingerprint`]
+/// lifted to arbitrary bytes by packing them into little-endian u64
+/// words, with the byte length folded in so zero-padding of the final
+/// word cannot collide with genuine trailing zero bytes. The experiment
+/// runner keys its results journal with this over a canonical cell
+/// description (DESIGN.md §5.2).
+pub fn fingerprint_bytes(bytes: &[u8]) -> (u64, u64) {
+    let mut words: Vec<u64> = bytes
+        .chunks(8)
+        .map(|c| {
+            let mut buf = [0u8; 8];
+            buf[..c.len()].copy_from_slice(c);
+            u64::from_le_bytes(buf)
+        })
+        .collect();
+    words.push(mix64(bytes.len() as u64 ^ 0x4259_5445_5300_0003)); // "BYTES"
+    fingerprint(&words)
+}
+
+/// Render a 128-bit key as 32 lowercase hex chars (journal keys).
+pub fn hex128(key: (u64, u64)) -> String {
+    format!("{:016x}{:016x}", key.0, key.1)
+}
+
 /// 128-bit order-independent key of an index-set pair.
 ///
 /// Properties (see the tests):
@@ -109,6 +133,18 @@ mod tests {
         assert_ne!(fingerprint(&[1, 2, 3]), fingerprint(&[3, 2, 1]));
         assert_ne!(fingerprint(&[1, 2]), fingerprint(&[1, 2, 0]));
         assert_ne!(fingerprint(&[]), fingerprint(&[0]));
+    }
+
+    #[test]
+    fn fingerprint_bytes_is_length_and_content_sensitive() {
+        assert_eq!(fingerprint_bytes(b"cell|D2|gendst"), fingerprint_bytes(b"cell|D2|gendst"));
+        assert_ne!(fingerprint_bytes(b"a"), fingerprint_bytes(b"b"));
+        // zero padding of the last word must not collide with real zeros
+        assert_ne!(fingerprint_bytes(b"a"), fingerprint_bytes(b"a\0"));
+        assert_ne!(fingerprint_bytes(b""), fingerprint_bytes(b"\0"));
+        let hex = hex128(fingerprint_bytes(b"x"));
+        assert_eq!(hex.len(), 32);
+        assert!(hex.chars().all(|c| c.is_ascii_hexdigit()));
     }
 
     #[test]

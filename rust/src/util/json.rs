@@ -1,0 +1,288 @@
+//! Minimal flat-JSON substrate for the experiment results journal
+//! (DESIGN.md §5.2; stands in for `serde_json`, unavailable offline).
+//!
+//! Scope is deliberately tiny: one *flat* object per line — string,
+//! finite-number, and bool values only, no nesting, no null. The writer
+//! emits exactly what the parser accepts; the parser returns `None` on
+//! anything malformed, which is how the journal tolerates a torn final
+//! line after a crash: unreadable lines are skipped, not fatal.
+//!
+//! Numbers are written with Rust's shortest-roundtrip `{}` formatting,
+//! so an `f64` survives a write→parse cycle bit-exactly — resumed
+//! journal records equal the originals.
+
+/// A JSON scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Json {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Serialize key/value pairs as one single-line JSON object.
+/// Non-finite numbers have no JSON encoding and are clamped to 0.
+pub fn obj_to_line(pairs: &[(&str, Json)]) -> String {
+    let mut out = String::with_capacity(64);
+    out.push('{');
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('"');
+        escape_into(&mut out, k);
+        out.push_str("\":");
+        match v {
+            Json::Str(s) => {
+                out.push('"');
+                escape_into(&mut out, s);
+                out.push('"');
+            }
+            Json::Num(n) => {
+                let n = if n.is_finite() { *n } else { 0.0 };
+                out.push_str(&format!("{n}"));
+            }
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        }
+    }
+    out.push('}');
+    out
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> Option<()> {
+        self.skip_ws();
+        if self.bytes.get(self.pos) == Some(&b) {
+            self.pos += 1;
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn string(&mut self) -> Option<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = *self.bytes.get(self.pos)?;
+            self.pos += 1;
+            match b {
+                b'"' => return Some(out),
+                b'\\' => {
+                    let e = *self.bytes.get(self.pos)?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self.bytes.get(self.pos..self.pos + 4)?;
+                            self.pos += 4;
+                            let code =
+                                u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16).ok()?;
+                            out.push(char::from_u32(code)?);
+                        }
+                        _ => return None,
+                    }
+                }
+                // copy the raw byte; multi-byte UTF-8 sequences pass
+                // through intact because each byte is ≥ 0x80
+                b => {
+                    if b < 0x20 {
+                        return None; // raw control char: invalid JSON
+                    }
+                    let start = self.pos - 1;
+                    let len = utf8_len(b)?;
+                    let slice = self.bytes.get(start..start + len)?;
+                    out.push_str(std::str::from_utf8(slice).ok()?);
+                    self.pos = start + len;
+                }
+            }
+        }
+    }
+
+    fn value(&mut self) -> Option<Json> {
+        match self.peek()? {
+            b'"' => Some(Json::Str(self.string()?)),
+            b't' => self.literal("true").map(|_| Json::Bool(true)),
+            b'f' => self.literal("false").map(|_| Json::Bool(false)),
+            _ => {
+                let start = self.pos;
+                while self
+                    .bytes
+                    .get(self.pos)
+                    .is_some_and(|b| b"+-0123456789.eE".contains(b))
+                {
+                    self.pos += 1;
+                }
+                let text = std::str::from_utf8(&self.bytes[start..self.pos]).ok()?;
+                let n: f64 = text.parse().ok()?;
+                n.is_finite().then_some(Json::Num(n))
+            }
+        }
+    }
+
+    fn literal(&mut self, word: &str) -> Option<()> {
+        self.skip_ws();
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Some(())
+        } else {
+            None
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> Option<usize> {
+    match first {
+        0x20..=0x7f => Some(1),
+        0xc0..=0xdf => Some(2),
+        0xe0..=0xef => Some(3),
+        0xf0..=0xf7 => Some(4),
+        _ => None,
+    }
+}
+
+/// Parse one flat JSON object line into key/value pairs. Returns `None`
+/// for anything malformed or truncated (including trailing garbage) —
+/// the journal's corruption-tolerance contract.
+pub fn parse_line(line: &str) -> Option<Vec<(String, Json)>> {
+    let mut p = Parser {
+        bytes: line.as_bytes(),
+        pos: 0,
+    };
+    p.eat(b'{')?;
+    let mut out = Vec::new();
+    if p.peek() == Some(b'}') {
+        p.pos += 1;
+    } else {
+        loop {
+            let key = p.string()?;
+            p.eat(b':')?;
+            let val = p.value()?;
+            out.push((key, val));
+            match p.peek()? {
+                b',' => {
+                    p.pos += 1;
+                }
+                b'}' => {
+                    p.pos += 1;
+                    break;
+                }
+                _ => return None,
+            }
+        }
+    }
+    p.skip_ws();
+    (p.pos == p.bytes.len()).then_some(out)
+}
+
+/// Look up a key in a parsed object.
+pub fn get<'a>(pairs: &'a [(String, Json)], key: &str) -> Option<&'a Json> {
+    pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_escapes_and_unicode() {
+        let pairs = vec![
+            ("plain", Json::Str("hello".into())),
+            ("tricky", Json::Str("a\"b\\c\nd\te ∆π".into())),
+            ("n", Json::Num(-1.25e-3)),
+            ("flag", Json::Bool(true)),
+        ];
+        let line = obj_to_line(&pairs);
+        assert!(!line.contains('\n'), "journal lines must be single-line");
+        let parsed = parse_line(&line).unwrap();
+        assert_eq!(parsed.len(), 4);
+        assert_eq!(get(&parsed, "tricky").unwrap().as_str(), Some("a\"b\\c\nd\te ∆π"));
+        assert_eq!(get(&parsed, "n").unwrap().as_f64(), Some(-1.25e-3));
+        assert_eq!(get(&parsed, "flag"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_exact() {
+        for x in [
+            0.1 + 0.2,
+            std::f64::consts::PI,
+            1.0 / 3.0,
+            123456.789012345,
+            f64::MIN_POSITIVE,
+        ] {
+            let line = obj_to_line(&[("x", Json::Num(x))]);
+            let parsed = parse_line(&line).unwrap();
+            let y = get(&parsed, "x").unwrap().as_f64().unwrap();
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} did not roundtrip");
+        }
+    }
+
+    #[test]
+    fn truncated_and_garbage_lines_are_rejected() {
+        let line = obj_to_line(&[("k", Json::Str("value".into())), ("n", Json::Num(3.0))]);
+        for cut in 1..line.len() {
+            assert_eq!(parse_line(&line[..cut]), None, "accepted truncation at {cut}");
+        }
+        for bad in ["", "not json", "{\"k\":}", "{\"k\":1} trailing", "{k:1}", "{\"k\":null}"] {
+            assert_eq!(parse_line(bad), None, "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn empty_object_parses() {
+        assert_eq!(parse_line("{}").unwrap(), vec![]);
+        assert_eq!(obj_to_line(&[]), "{}");
+    }
+}

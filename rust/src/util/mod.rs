@@ -6,6 +6,7 @@ pub mod bench; // ~criterion
 pub mod cli; // ~clap
 pub mod error; // ~anyhow (string-backed, Context + ensure!)
 pub mod hash; // order-independent subset hashing (loss memo keys)
+pub mod json; // ~serde_json (flat objects only — the results journal)
 pub mod pool; // ~rayon scoped parallel map
 pub mod prop; // ~proptest
 pub mod rng; // ~rand + rand_xoshiro

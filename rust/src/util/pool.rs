@@ -4,9 +4,31 @@
 //! next index until the list is drained, which load-balances uneven items
 //! (AutoML pipeline evaluations vary by orders of magnitude). Results are
 //! written into a pre-sized vec, preserving input order.
+//!
+//! CPU charging: every `parallel_map` bills the on-CPU time its workers
+//! consumed back to the *calling* thread's charge accumulator, so a cell
+//! timed with [`crate::util::timer::CpuTimer`] sees the CPU its nested
+//! engine fills burned even though that work ran on other threads
+//! (DESIGN.md §5.2). Workers forward their own accumulated charges, so
+//! nesting composes.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+thread_local! {
+    static CPU_CHARGED_NS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Nanoseconds of worker CPU time `parallel_map` has billed to the
+/// calling thread so far (monotone; consumers take deltas).
+pub fn cpu_charged_ns() -> u64 {
+    CPU_CHARGED_NS.with(|c| c.get())
+}
+
+fn add_cpu_charge(ns: u64) {
+    CPU_CHARGED_NS.with(|c| c.set(c.get().saturating_add(ns)));
+}
 
 /// Number of worker threads to use by default (leave one core for the
 /// coordinator; at least 1).
@@ -60,10 +82,13 @@ where
     // (index, result) pairs per worker and merge afterwards. Simpler and
     // still allocation-light for our workloads.
     let collected: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    let worker_cpu_ns = AtomicU64::new(0);
 
     std::thread::scope(|scope| {
         for _ in 0..n_threads {
             scope.spawn(|| {
+                let cpu0 = crate::util::timer::thread_cpu_now();
+                let charged0 = cpu_charged_ns();
                 let mut local: Vec<(usize, R)> = Vec::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -73,9 +98,17 @@ where
                     local.push((i, f(i, &items[i])));
                 }
                 collected.lock().unwrap().extend(local);
+                // bill this worker's on-CPU time (plus anything nested
+                // maps billed to it) back to the coordinating thread
+                if let (Some(a), Some(b)) = (cpu0, crate::util::timer::thread_cpu_now()) {
+                    let own = b.saturating_sub(a).as_nanos() as u64;
+                    let forwarded = cpu_charged_ns().saturating_sub(charged0);
+                    worker_cpu_ns.fetch_add(own + forwarded, Ordering::Relaxed);
+                }
             });
         }
     });
+    add_cpu_charge(worker_cpu_ns.load(Ordering::Relaxed));
 
     for (i, r) in collected.into_inner().unwrap() {
         results[i] = Some(r);
@@ -130,5 +163,27 @@ mod tests {
         let items = vec![10usize, 20, 30];
         let out = parallel_map(&items, 2, |i, &x| (i, x));
         assert_eq!(out, vec![(0, 10), (1, 20), (2, 30)]);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn worker_cpu_is_charged_to_the_caller() {
+        let before = cpu_charged_ns();
+        let items: Vec<u64> = (0..8).collect();
+        let _ = parallel_map(&items, 4, |_, &x| {
+            // ~15ms of real CPU per item so even tick-resolution clocks
+            // register it
+            let sw = crate::util::timer::Stopwatch::start();
+            let mut acc = x;
+            while sw.elapsed().as_millis() < 15 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            std::hint::black_box(acc)
+        });
+        let charged = cpu_charged_ns() - before;
+        assert!(
+            charged > 20_000_000,
+            "expected >20ms of charged worker CPU, got {charged}ns"
+        );
     }
 }

@@ -1,6 +1,8 @@
-//! Wall-clock accounting: stopwatches for the paper's Time(M*) vs
-//! Time(M_sub) metrics, and combined time/eval budgets for AutoML search
-//! and baseline subset strategies.
+//! Wall-clock and CPU-time accounting: stopwatches for the paper's
+//! Time(M*) vs Time(M_sub) metrics, per-thread CPU clocks backing the
+//! experiment runner's `TimingMode::CpuProxy` (DESIGN.md §5.2), and
+//! combined time/eval budgets for AutoML search and baseline subset
+//! strategies.
 
 use std::time::{Duration, Instant};
 
@@ -29,6 +31,74 @@ impl Stopwatch {
 impl Default for Stopwatch {
     fn default() -> Self {
         Self::start()
+    }
+}
+
+/// CPU time the calling thread has consumed so far, if the platform can
+/// report it. Linux: `/proc/thread-self/schedstat` (nanosecond on-CPU
+/// counter), falling back to `utime + stime` from
+/// `/proc/thread-self/stat` (USER_HZ ticks, effectively 100 Hz).
+/// Elsewhere: `None` — callers fall back to wall clock.
+pub fn thread_cpu_now() -> Option<Duration> {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(s) = std::fs::read_to_string("/proc/thread-self/schedstat") {
+            if let Some(ns) = s.split_whitespace().next().and_then(|w| w.parse::<u64>().ok()) {
+                return Some(Duration::from_nanos(ns));
+            }
+        }
+        if let Ok(s) = std::fs::read_to_string("/proc/thread-self/stat") {
+            // the comm field (2) may contain spaces; fields after the
+            // closing ')' start at field 3 (state), so utime (field 14)
+            // and stime (15) are tokens 11 and 12 of the tail
+            if let Some((_, tail)) = s.rsplit_once(')') {
+                let f: Vec<&str> = tail.split_whitespace().collect();
+                if f.len() > 12 {
+                    if let (Ok(u), Ok(st)) = (f[11].parse::<u64>(), f[12].parse::<u64>()) {
+                        return Some(Duration::from_millis((u + st) * 10));
+                    }
+                }
+            }
+        }
+        None
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// CPU-time stopwatch for one experiment cell: the calling thread's own
+/// CPU clock plus whatever worker CPU `util::pool::parallel_map` charges
+/// to this thread while the timer runs (nested engine fills run on
+/// short-lived workers whose on-CPU time is billed back to the caller).
+/// Where no thread CPU clock exists the timer degrades to wall clock,
+/// which is what `TimingMode::CpuProxy` documents.
+#[derive(Debug)]
+pub struct CpuTimer {
+    own0: Option<Duration>,
+    charged0: u64,
+    wall: Stopwatch,
+}
+
+impl CpuTimer {
+    pub fn start() -> CpuTimer {
+        CpuTimer {
+            own0: thread_cpu_now(),
+            charged0: crate::util::pool::cpu_charged_ns(),
+            wall: Stopwatch::start(),
+        }
+    }
+
+    /// Seconds of CPU consumed on behalf of this thread since `start`
+    /// (wall seconds on platforms without a thread CPU clock).
+    pub fn elapsed_s(&self) -> f64 {
+        let charged =
+            (crate::util::pool::cpu_charged_ns().saturating_sub(self.charged0)) as f64 / 1e9;
+        match (self.own0, thread_cpu_now()) {
+            (Some(a), Some(b)) => b.saturating_sub(a).as_secs_f64() + charged,
+            _ => self.wall.elapsed_s(),
+        }
     }
 }
 
@@ -198,5 +268,34 @@ mod tests {
         let sw = Stopwatch::start();
         std::thread::sleep(Duration::from_millis(5));
         assert!(sw.elapsed_s() >= 0.004);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn thread_cpu_clock_advances_with_work() {
+        let a = thread_cpu_now().expect("linux thread CPU clock");
+        // burn CPU long enough for even the 10ms-tick stat fallback
+        let mut acc = 0u64;
+        let sw = Stopwatch::start();
+        while sw.elapsed() < Duration::from_millis(60) {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+        }
+        std::hint::black_box(acc);
+        let b = thread_cpu_now().unwrap();
+        assert!(b > a, "thread CPU clock did not advance: {a:?} -> {b:?}");
+    }
+
+    #[test]
+    fn cpu_timer_excludes_sleep() {
+        let t = CpuTimer::start();
+        std::thread::sleep(Duration::from_millis(40));
+        // on platforms with a CPU clock, sleeping costs (almost) nothing;
+        // on the wall fallback the timer reports the sleep instead
+        let s = t.elapsed_s();
+        if thread_cpu_now().is_some() {
+            assert!(s < 0.030, "sleep was billed as CPU: {s}");
+        } else {
+            assert!(s >= 0.030);
+        }
     }
 }
