@@ -10,6 +10,10 @@
 //! reference. Run is recorded in EXPERIMENTS.md.
 //!
 //!   cargo run --release --example end_to_end [-- --scale 0.05 --evals 16 --reps 2]
+//!
+//! Any real CSV runs through the identical harness (DESIGN.md §5.3):
+//!
+//!   cargo run --release --example end_to_end -- --data my.csv
 
 use substrat::automl::SearcherKind;
 use substrat::data::CodeMatrix;
@@ -22,12 +26,22 @@ use substrat::util::stats;
 
 fn main() {
     let args = Args::from_env();
+    // --data <csv> routes a real file through the same harness; the
+    // registry symbol path is the default (DataSource resolves both)
+    let spec = args
+        .str_opt("data")
+        .map(str::to_string)
+        .unwrap_or_else(|| args.str_or("dataset", "D1"));
     let cfg = ExpConfig {
         scale: args.f64_or("scale", 0.05),
         reps: args.usize_or("reps", 2),
         full_evals: args.usize_or("evals", 16),
         searchers: vec![SearcherKind::Smbo, SearcherKind::Gp],
-        datasets: vec![args.str_or("dataset", "D1")],
+        datasets: vec![spec],
+        csv_target: args.str_opt("target").map(str::to_string),
+        csv_header: args
+            .str_opt("header")
+            .map(substrat::data::infer::parse_header_flag),
         threads: args.usize_or("threads", 0),
         out_dir: std::path::PathBuf::from(args.str_or("out", "results/end_to_end")),
         ..Default::default()

@@ -9,10 +9,14 @@
 //!   and scores are comparable (the seed's per-eval re-splitting made
 //!   `argmax` pick on fold noise).
 //! * [`EvalEngine`] — scores whole proposal batches through
-//!   [`crate::util::pool::parallel_map`], with a `PipelineConfig`
-//!   fingerprint memo that serves duplicate configurations (within a
-//!   batch, across a run, or across the shared subset/fine-tune runs of
-//!   `run_substrat`) bit-identically instead of re-fitting them.
+//!   [`crate::util::pool::parallel_map`], with a memo keyed by
+//!   **(dataset fingerprint, run seed, fold count, config
+//!   fingerprint)** that serves duplicate evaluations (within a batch,
+//!   across a run, or across runs sharing one engine, frame, seed and
+//!   fold plan) bit-identically instead of re-fitting them — and never
+//!   serves a score measured on a *different* frame or fold plan (the
+//!   PR 4 cross-dataset poisoning fix; the one explicit carry-over is
+//!   [`EvalEngine::seed_score`]).
 //! * [`EvalPolicy`] — the engine knobs: worker threads, memoization, and
 //!   Layered-TPOT-style fold-level early termination (off by default for
 //!   bit-compatibility with exhaustive scoring).
@@ -161,18 +165,54 @@ impl Default for EvalPolicy {
     }
 }
 
+/// Identity of the dataset a score was measured on — the first half of
+/// the evaluation-memo key. Computed by [`frame_key`] over the frame's
+/// *content*, so two frames with identical values share scores and any
+/// difference (a subset vs its parent, a re-scaled load, an edited CSV)
+/// keeps them apart.
+pub type DatasetKey = (u64, u64);
+
+/// Content fingerprint of a frame: shape, target index, and every
+/// column's kind and bit-exact values (name excluded — a subset named
+/// `"D2[sub]"` with identical content scores identically). Streamed
+/// through the incremental hasher, so cost is one linear pass and no
+/// allocation; `run_automl_with_engine` computes it once per run.
+pub fn frame_key(frame: &Frame) -> DatasetKey {
+    let mut fp = hash::Fingerprinter::new();
+    fp.update(&(frame.n_rows as u64).to_le_bytes());
+    fp.update(&(frame.n_cols() as u64).to_le_bytes());
+    fp.update(&(frame.target as u64).to_le_bytes());
+    for col in &frame.columns {
+        fp.update(&[col.categorical as u8]);
+        for v in &col.values {
+            fp.update(&v.to_bits().to_le_bytes());
+        }
+    }
+    fp.finish()
+}
+
+/// Full memo key: dataset content, fold-plan shape (run seed + fold
+/// count — the stratified folds and the per-fold fit RNGs derive from
+/// exactly these), configuration fingerprint. A score is only ever
+/// served back to an evaluation that would recompute it bit-identically.
+type MemoKey = (DatasetKey, u64, u64, (u64, u64));
+
 /// The batched, parallel, memoized evaluation engine of one AutoML run —
 /// or of one whole SubStrat flow: `run_substrat` threads a single engine
-/// through the subset and fine-tune runs so the warm-start configuration
-/// is never paid for twice (DESIGN.md §5.1).
+/// through the subset and fine-tune runs (DESIGN.md §5.1).
 ///
-/// The memo is keyed by configuration fingerprint alone. Within one run
-/// that is exactly transparent (same frame, same fold plan, same fit
-/// RNGs). Sharing an engine across runs is a deliberate semantic
-/// choice: a served score reproduces the *first* computation, which may
-/// have run on a different frame or seed — the documented
-/// subset-to-fine-tune approximation of `run_substrat`. Use one engine
-/// per run (as `run_automl` does) when strict per-frame scores matter.
+/// The memo is keyed by **(dataset fingerprint, run seed, fold count,
+/// config fingerprint)**. Within one run that is exactly transparent
+/// (same frame, same fold plan, same fit RNGs); across runs sharing
+/// one engine it serves a score only when frame content, seed and fold
+/// count all match — i.e. only when a fresh evaluation would reproduce
+/// it bit-identically. The seed keyed by config alone, so any
+/// configuration the fine-tune searcher re-proposed after the step 2→3
+/// frame switch was silently served its subset-frame score and the
+/// fine-tune argmax could pick on subset noise. The one deliberate
+/// carry-over — the SubStrat warm start M' seeding the fine-tune
+/// history with its subset score — is explicit:
+/// [`EvalEngine::seed_score`].
 pub struct EvalEngine {
     /// engine knobs
     pub policy: EvalPolicy,
@@ -181,8 +221,9 @@ pub struct EvalEngine {
     /// evaluations served from the fingerprint memo (including in-batch
     /// duplicates)
     pub memo_hits: usize,
-    /// fingerprint → CV score of every configuration this engine scored
-    memo: HashMap<(u64, u64), f64>,
+    /// (dataset, seed, folds, config) → CV score of every configuration
+    /// this engine scored (plus explicitly seeded carry-overs)
+    memo: HashMap<MemoKey, f64>,
 }
 
 impl EvalEngine {
@@ -196,28 +237,56 @@ impl EvalEngine {
         }
     }
 
-    /// Score a batch of configurations on `frame` under the run's fold
-    /// plan. Returns one CV score per configuration, in batch order.
+    /// Record a score for the consuming run's `(dataset, run_seed,
+    /// k_folds, cfg)` slot without fitting anything — the *explicit*
+    /// cross-dataset carry-over. `run_substrat` seeds the full frame's
+    /// key (under the fine-tune run's own seed and fold count) with the
+    /// warm-start configuration's subset-frame score, so the fine-tune
+    /// run's head-of-history evaluation is served instead of re-paid,
+    /// while every *other* fine-tune proposal is re-fit on the full
+    /// frame (the documented approximation, DESIGN.md §5.1). No-op when
+    /// memoization is off.
+    pub fn seed_score(
+        &mut self,
+        dataset: DatasetKey,
+        run_seed: u64,
+        k_folds: usize,
+        cfg: &PipelineConfig,
+        score: f64,
+    ) {
+        if self.policy.memoize {
+            self.memo
+                .insert((dataset, run_seed, k_folds as u64, cfg.fingerprint()), score);
+        }
+    }
+
+    /// Score a batch of configurations on `frame` — identified by
+    /// `dataset`, its [`frame_key`] — under the run's fold plan.
+    /// Returns one CV score per configuration, in batch order.
     ///
-    /// Memo hits (cross-run and in-batch duplicates) are served without
-    /// re-fitting; the remainder is scored through `parallel_map`.
-    /// `best_so_far` is the run's incumbent score, consulted only when
-    /// `policy.early_termination` is on (pass `f64::NEG_INFINITY` when
-    /// there is no incumbent).
+    /// Memo hits (same-dataset re-presentations and in-batch
+    /// duplicates) are served without re-fitting; the remainder is
+    /// scored through `parallel_map`. `best_so_far` is the run's
+    /// incumbent score, consulted only when `policy.early_termination`
+    /// is on (pass `f64::NEG_INFINITY` when there is no incumbent).
     pub fn score_batch(
         &mut self,
         batch: &[PipelineConfig],
         frame: &Frame,
+        dataset: DatasetKey,
         plan: &FoldPlan,
         run_seed: u64,
         best_so_far: f64,
     ) -> Vec<f64> {
-        let keys: Vec<(u64, u64)> = batch.iter().map(|c| c.fingerprint()).collect();
+        let keys: Vec<MemoKey> = batch
+            .iter()
+            .map(|c| (dataset, run_seed, plan.k() as u64, c.fingerprint()))
+            .collect();
         let mut out: Vec<Option<f64>> = vec![None; batch.len()];
         // memo pre-pass, de-duplicating identical configs inside the batch
         let mut to_compute: Vec<usize> = Vec::new();
         let mut dups: Vec<(usize, usize)> = Vec::new(); // (batch idx, pos in to_compute)
-        let mut in_batch: HashMap<(u64, u64), usize> = HashMap::new();
+        let mut in_batch: HashMap<MemoKey, usize> = HashMap::new();
         for i in 0..batch.len() {
             if self.policy.memoize {
                 if let Some(&s) = self.memo.get(&keys[i]) {
@@ -457,13 +526,14 @@ mod tests {
         let f = registry::load("D2", 0.03, 5);
         let plan = FoldPlan::new(&f, 3, 21);
         let cfg = tree_cfg();
+        let key = frame_key(&f);
         // reference: a fresh engine scoring once
         let mut fresh = EvalEngine::new(EvalPolicy::default());
-        let want = fresh.score_batch(&[cfg.clone()], &f, &plan, 21, f64::NEG_INFINITY)[0];
+        let want = fresh.score_batch(&[cfg.clone()], &f, key, &plan, 21, f64::NEG_INFINITY)[0];
         // scored, then served from the memo: bit-identical
         let mut engine = EvalEngine::new(EvalPolicy::default());
-        let a = engine.score_batch(&[cfg.clone()], &f, &plan, 21, f64::NEG_INFINITY)[0];
-        let b = engine.score_batch(&[cfg.clone()], &f, &plan, 21, f64::NEG_INFINITY)[0];
+        let a = engine.score_batch(&[cfg.clone()], &f, key, &plan, 21, f64::NEG_INFINITY)[0];
+        let b = engine.score_batch(&[cfg.clone()], &f, key, &plan, 21, f64::NEG_INFINITY)[0];
         assert_eq!(engine.scored, 1, "memo hit must not re-fit");
         assert_eq!(engine.memo_hits, 1);
         assert!(a.to_bits() == b.to_bits() && a.to_bits() == want.to_bits());
@@ -474,9 +544,10 @@ mod tests {
         let f = registry::load("D2", 0.03, 6);
         let plan = FoldPlan::new(&f, 3, 22);
         let cfg = tree_cfg();
+        let key = frame_key(&f);
         let mut engine = EvalEngine::new(EvalPolicy::default());
-        let scores =
-            engine.score_batch(&[cfg.clone(), cfg.clone()], &f, &plan, 22, f64::NEG_INFINITY);
+        let batch = [cfg.clone(), cfg.clone()];
+        let scores = engine.score_batch(&batch, &f, key, &plan, 22, f64::NEG_INFINITY);
         assert_eq!(engine.scored, 1);
         assert_eq!(engine.memo_hits, 1);
         assert_eq!(scores[0].to_bits(), scores[1].to_bits());
@@ -497,8 +568,8 @@ mod tests {
             threads: 4,
             ..Default::default()
         });
-        let a = serial.score_batch(&batch, &f, &plan, 23, f64::NEG_INFINITY);
-        let b = parallel.score_batch(&batch, &f, &plan, 23, f64::NEG_INFINITY);
+        let a = serial.score_batch(&batch, &f, frame_key(&f), &plan, 23, f64::NEG_INFINITY);
+        let b = parallel.score_batch(&batch, &f, frame_key(&f), &plan, 23, f64::NEG_INFINITY);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.to_bits(), y.to_bits(), "thread count changed a score");
         }
@@ -517,13 +588,95 @@ mod tests {
             ..Default::default()
         });
         // unbeatable incumbent: pruned before any playable fold
-        let truncated = engine.score_batch(&[cfg.clone()], &f, &plan, 41, 1.5)[0];
+        let key = frame_key(&f);
+        let truncated = engine.score_batch(&[cfg.clone()], &f, key, &plan, 41, 1.5)[0];
         assert_eq!(truncated, 0.0);
         // the re-presentation must re-score, not serve the truncation
-        let fresh = engine.score_batch(&[cfg.clone()], &f, &plan, 41, f64::NEG_INFINITY)[0];
+        let fresh = engine.score_batch(&[cfg.clone()], &f, key, &plan, 41, f64::NEG_INFINITY)[0];
         assert_eq!(fresh.to_bits(), exact.to_bits());
         assert_eq!(engine.scored, 2, "pruned eval was wrongly memoized");
         assert_eq!(engine.memo_hits, 0);
+    }
+
+    #[test]
+    fn frame_key_separates_content_not_names() {
+        let f = registry::load("D2", 0.03, 8);
+        let g = registry::load("D2", 0.03, 9); // different seed -> different content
+        assert_eq!(frame_key(&f), frame_key(&f));
+        assert_ne!(frame_key(&f), frame_key(&g));
+        // a renamed clone with identical content shares the key
+        let mut renamed = f.clone();
+        renamed.name = "other".into();
+        assert_eq!(frame_key(&f), frame_key(&renamed));
+        // a subset has different content, hence a different key
+        let rows: Vec<u32> = (0..f.n_rows as u32 / 2).collect();
+        let cols: Vec<u32> = (0..f.n_cols() as u32).collect();
+        assert_ne!(frame_key(&f), frame_key(&f.subset(&rows, &cols)));
+    }
+
+    #[test]
+    fn cross_dataset_scores_never_cross_serve() {
+        // the PR 4 headline regression: the same configuration scored on
+        // a subset frame and then re-presented on the full frame must be
+        // re-fit on the full frame, not served the subset score — the
+        // seed keyed the memo by config alone, so the fine-tune argmax
+        // could pick on subset noise
+        let full = registry::load("D3", 0.06, 11);
+        let mut rng = Rng::new(3);
+        let rows = {
+            let mut r = rng.sample_distinct(full.n_rows, 40);
+            r.sort_unstable();
+            r
+        };
+        let cols: Vec<u32> = (0..full.n_cols() as u32).collect();
+        let sub = full.subset(&rows, &cols);
+        let cfg = tree_cfg();
+        let (fk, sk) = (frame_key(&full), frame_key(&sub));
+        let plan_sub = FoldPlan::new(&sub, 3, 5);
+        let plan_full = FoldPlan::new(&full, 3, 5);
+
+        let mut engine = EvalEngine::new(EvalPolicy::default());
+        let s_sub =
+            engine.score_batch(&[cfg.clone()], &sub, sk, &plan_sub, 5, f64::NEG_INFINITY)[0];
+        let s_full =
+            engine.score_batch(&[cfg.clone()], &full, fk, &plan_full, 5, f64::NEG_INFINITY)[0];
+        assert_eq!(engine.scored, 2, "full-frame re-proposal was served the subset score");
+        assert_eq!(engine.memo_hits, 0);
+        // and the full-frame score matches a fresh engine's bit-exactly
+        let mut fresh = EvalEngine::new(EvalPolicy::default());
+        let want =
+            fresh.score_batch(&[cfg.clone()], &full, fk, &plan_full, 5, f64::NEG_INFINITY)[0];
+        assert_eq!(s_full.to_bits(), want.to_bits());
+        // re-presenting on the *same* frames still hits the memo
+        let again_sub =
+            engine.score_batch(&[cfg.clone()], &sub, sk, &plan_sub, 5, f64::NEG_INFINITY)[0];
+        assert_eq!(engine.memo_hits, 1);
+        assert_eq!(again_sub.to_bits(), s_sub.to_bits());
+    }
+
+    #[test]
+    fn seed_score_is_the_explicit_carry_over() {
+        // seeding reproduces the old warm-start behavior on purpose:
+        // the seeded (dataset, config) pair is served without a fit
+        let full = registry::load("D2", 0.03, 12);
+        let cfg = tree_cfg();
+        let fk = frame_key(&full);
+        let plan = FoldPlan::new(&full, 3, 7);
+        let mut engine = EvalEngine::new(EvalPolicy::default());
+        engine.seed_score(fk, 7, 3, &cfg, 0.123456);
+        let got = engine.score_batch(&[cfg.clone()], &full, fk, &plan, 7, f64::NEG_INFINITY)[0];
+        assert_eq!(got, 0.123456);
+        assert_eq!(engine.scored, 0);
+        assert_eq!(engine.memo_hits, 1);
+        // with memoization off, seeding is a documented no-op
+        let mut off = EvalEngine::new(EvalPolicy {
+            memoize: false,
+            ..Default::default()
+        });
+        off.seed_score(fk, 7, 3, &cfg, 2.0); // sentinel no real CV score can reach
+        let fresh = off.score_batch(&[cfg.clone()], &full, fk, &plan, 7, f64::NEG_INFINITY)[0];
+        assert_ne!(fresh, 2.0);
+        assert_eq!(off.scored, 1);
     }
 
     #[test]

@@ -164,10 +164,13 @@ pub fn run_automl(frame: &Frame, cfg: &AutoMlConfig) -> AutoMlResult {
 }
 
 /// Run AutoML through a caller-owned [`EvalEngine`], so several runs can
-/// share one configuration-score memo — `run_substrat` threads a single
-/// engine through the subset run and the fine-tune run, which is what
-/// spares the warm-start configuration its second evaluation
-/// (DESIGN.md §5.1).
+/// share one evaluation memo. The memo is keyed by (dataset, run seed,
+/// fold count, config): runs sharing frame content AND fold plan share
+/// scores bit-exactly; anything else never cross-serves —
+/// `run_substrat` threads a single engine through the subset run and
+/// the fine-tune run and spares the warm-start configuration its second
+/// evaluation via the one explicit carry-over,
+/// [`EvalEngine::seed_score`] (DESIGN.md §5.1).
 pub fn run_automl_with_engine(
     frame: &Frame,
     cfg: &AutoMlConfig,
@@ -179,6 +182,9 @@ pub fn run_automl_with_engine(
     // on identical folds (the seed re-split per evaluation, making
     // scores incomparable across configs)
     let plan = FoldPlan::new(frame, cfg.cv_folds, cfg.seed);
+    // the memo half-key naming this frame's content: scores measured on
+    // a different frame can never be served to this run (§5.1)
+    let dataset = eval::frame_key(frame);
     let mut budget = match cfg.max_time {
         Some(t) => Budget::evals_and_time(cfg.max_evals, t),
         None => Budget::evals(cfg.max_evals),
@@ -211,7 +217,7 @@ pub fn run_automl_with_engine(
             let n = k - batch.len();
             batch.extend(searcher.propose_batch(n, &history, &cfg.space, &mut rng));
         }
-        let scores = engine.score_batch(&batch, frame, &plan, cfg.seed, best_so_far);
+        let scores = engine.score_batch(&batch, frame, dataset, &plan, cfg.seed, best_so_far);
         budget.consume_n(batch.len());
         for (c, s) in batch.into_iter().zip(scores) {
             if s > best_so_far {
@@ -310,10 +316,11 @@ mod tests {
         let a = space.sample(&mut rng);
         let b = space.sample(&mut rng);
         let plan = eval::FoldPlan::new(&f, 3, 99);
+        let key = eval::frame_key(&f);
         let mut e1 = EvalEngine::new(EvalPolicy::default());
-        let ab = e1.score_batch(&[a.clone(), b.clone()], &f, &plan, 99, f64::NEG_INFINITY);
+        let ab = e1.score_batch(&[a.clone(), b.clone()], &f, key, &plan, 99, f64::NEG_INFINITY);
         let mut e2 = EvalEngine::new(EvalPolicy::default());
-        let ba = e2.score_batch(&[b, a], &f, &plan, 99, f64::NEG_INFINITY);
+        let ba = e2.score_batch(&[b, a], &f, key, &plan, 99, f64::NEG_INFINITY);
         assert_eq!(ab[0].to_bits(), ba[1].to_bits(), "order changed a's score");
         assert_eq!(ab[1].to_bits(), ba[0].to_bits(), "order changed b's score");
     }
@@ -382,6 +389,9 @@ mod tests {
 
     #[test]
     fn shared_engine_memoizes_across_runs() {
+        // sharing requires the full memo key to match: same frame, same
+        // run seed, same fold count — only then would a fresh
+        // evaluation reproduce the served score bit-identically
         let f = registry::load("D2", 0.03, 5);
         let mut rng = Rng::new(31);
         let warm = ConfigSpace::default().sample(&mut rng);
@@ -389,12 +399,20 @@ mod tests {
         let mut first = AutoMlConfig::new(SearcherKind::Random, 3, 6);
         first.warm_start = vec![warm.clone()];
         let r1 = run_automl_with_engine(&f, &first, &mut engine);
-        // second run re-presents the same warm config: memo must serve it
-        let mut second = AutoMlConfig::new(SearcherKind::Random, 3, 61);
-        second.warm_start = vec![warm];
+        // second run (same frame + seed) re-presents the same warm
+        // config: memo must serve it
+        let mut second = AutoMlConfig::new(SearcherKind::Random, 3, 6);
+        second.warm_start = vec![warm.clone()];
         let r2 = run_automl_with_engine(&f, &second, &mut engine);
         assert!(r2.memo_hits >= 1, "shared engine did not serve the warm start");
         assert_eq!(r2.history[0].1.to_bits(), r1.history[0].1.to_bits());
+        // a different run seed means different folds and fit RNGs: the
+        // memo must NOT serve across it (the seed-axis sibling of the
+        // cross-dataset poisoning fix)
+        let mut third = AutoMlConfig::new(SearcherKind::Random, 3, 61);
+        third.warm_start = vec![warm];
+        let r3 = run_automl_with_engine(&f, &third, &mut engine);
+        assert_eq!(r3.memo_hits, 0, "score served across run seeds");
     }
 
     #[test]

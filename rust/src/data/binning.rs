@@ -9,11 +9,26 @@
 //! K_BINS-1 collapse into an "other" bin). Numeric columns get quantile
 //! (equi-depth) bins, which maximizes code entropy per column and matches
 //! how frequency-based entropy behaves on continuous data.
+//!
+//! Since PR 4 the encoder is split into a [`BinPlan`] (per-column bin
+//! edges, computed from bounded stride samples) and two drivers sharing
+//! it: [`CodeMatrix::from_frame`] for in-memory frames, and
+//! [`StreamingBinner`] for chunk-at-a-time ingestion (DESIGN.md §5.3) —
+//! a D10-shaped CSV (1M×15) is binned in bounded extra memory (at most
+//! 2·100k sampled values per numeric column, exactly the in-memory
+//! path's sort set) instead of materializing raw `f32` columns a
+//! second time. The two paths are bit-identical across any chunking
+//! (property-tested below).
 
 use crate::data::Frame;
 
 /// Bin count — must equal `shapes.K_BINS` on the python side.
 pub const K_BINS: usize = 64;
+
+/// Stride-sample cap for numeric edge estimation: columns longer than
+/// this are sampled, not sorted whole (equi-depth edges are robust to
+/// stride sampling).
+const MAX_SORT: usize = 100_000;
 
 /// Column-major matrix of per-column value codes in `[0, k)`.
 #[derive(Debug, Clone)]
@@ -38,19 +53,19 @@ impl CodeMatrix {
         &self.codes[col * self.n_rows..(col + 1) * self.n_rows]
     }
 
-    /// Encode a frame: quantile-bin numeric columns, cap categorical ones.
+    /// Encode a frame: quantile-bin numeric columns, cap categorical
+    /// ones. Equivalent to planning over the frame and streaming it
+    /// through a [`StreamingBinner`] in one chunk (the property tests
+    /// hold the two paths bit-identical).
     pub fn from_frame(frame: &Frame) -> CodeMatrix {
         let n_rows = frame.n_rows;
         let n_cols = frame.n_cols();
+        let plan = BinPlan::from_frame(frame);
         let mut codes = vec![0u16; n_rows * n_cols];
         let mut cardinality = vec![0u16; n_cols];
         for (c, col) in frame.columns.iter().enumerate() {
             let out = &mut codes[c * n_rows..(c + 1) * n_rows];
-            cardinality[c] = if col.categorical {
-                encode_categorical(&col.values, out)
-            } else {
-                encode_numeric(&col.values, out)
-            };
+            cardinality[c] = plan.cols[c].encode(&col.values, out);
         }
         CodeMatrix {
             codes,
@@ -61,70 +76,251 @@ impl CodeMatrix {
     }
 }
 
-/// Categorical: keep codes < K_BINS-1, collapse the tail into K_BINS-1.
-/// (Values are already small non-negative ints by Frame convention.)
-fn encode_categorical(values: &[f32], out: &mut [u16]) -> u16 {
-    let mut max_code = 0u16;
-    for (i, &v) in values.iter().enumerate() {
-        let code = (v as usize).min(K_BINS - 1) as u16;
-        out[i] = code;
-        max_code = max_code.max(code);
-    }
-    max_code + 1
+/// How one column encodes into codes (DESIGN.md §5.3).
+#[derive(Debug, Clone)]
+pub enum ColPlan {
+    /// identity codes capped at K_BINS-1 (Frame categorical convention:
+    /// values are small non-negative ints)
+    Categorical,
+    /// quantile codes: `code(v) = #edges <= v`
+    Numeric { edges: Vec<f32> },
 }
 
-/// Numeric: equi-depth bins from a sorted copy (sampled above 100k rows
-/// to bound ingest cost; equi-depth edges are robust to sampling).
-fn encode_numeric(values: &[f32], out: &mut [u16]) -> u16 {
-    const MAX_SORT: usize = 100_000;
-    let mut sample: Vec<f32> = if values.len() > MAX_SORT {
-        // deterministic stride sample
-        let stride = values.len() / MAX_SORT;
-        values.iter().step_by(stride.max(1)).copied().collect()
-    } else {
-        values.to_vec()
-    };
-    sample.retain(|v| v.is_finite());
-    if sample.is_empty() {
-        out.fill(0);
-        return 1;
+impl ColPlan {
+    /// Encode `values` into `out` (same length); returns the column's
+    /// code cardinality *for these values alone* (max code + 1 — the
+    /// streaming driver folds per-chunk maxima instead).
+    fn encode(&self, values: &[f32], out: &mut [u16]) -> u16 {
+        let mut max_code = 0u16;
+        for (i, &v) in values.iter().enumerate() {
+            let code = self.encode_one(v);
+            out[i] = code;
+            max_code = max_code.max(code);
+        }
+        max_code + 1
     }
-    sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
 
-    // distinct-aware bin edges
-    let mut distinct: Vec<f32> = Vec::new();
-    for &v in &sample {
-        if distinct.last() != Some(&v) {
-            distinct.push(v);
+    #[inline]
+    fn encode_one(&self, v: f32) -> u16 {
+        match self {
+            ColPlan::Categorical => (v as usize).min(K_BINS - 1) as u16,
+            // binary search: number of edges <= v (NaN compares false
+            // against every edge, landing in code 0)
+            ColPlan::Numeric { edges } => edges.partition_point(|&e| e <= v) as u16,
         }
     }
-    let edges: Vec<f32> = if distinct.len() <= K_BINS {
-        // each distinct value gets its own code: edges are the distinct
-        // values above the smallest (code = #edges <= v)
-        distinct[1..].to_vec()
-    } else {
-        // equi-depth cut points, deduplicated (ties collapse bins)
-        let mut e: Vec<f32> = (1..K_BINS)
-            .map(|b| sample[(b * sample.len()) / K_BINS])
-            .collect();
-        e.dedup();
-        e
-    };
+}
 
-    let mut max_code = 0u16;
-    for (i, &v) in values.iter().enumerate() {
-        // binary search: number of edges <= v
-        let code = edges.partition_point(|&e| e <= v) as u16;
-        out[i] = code;
-        max_code = max_code.max(code);
+/// Per-column encoding plan — the single source of bin edges both the
+/// in-memory and the streaming path encode through.
+#[derive(Debug, Clone)]
+pub struct BinPlan {
+    pub cols: Vec<ColPlan>,
+}
+
+impl BinPlan {
+    /// Plan every column of an in-memory frame.
+    pub fn from_frame(frame: &Frame) -> BinPlan {
+        let cols = frame
+            .columns
+            .iter()
+            .map(|col| {
+                if col.categorical {
+                    ColPlan::Categorical
+                } else {
+                    let mut s = NumericSampler::new(col.values.len());
+                    for &v in &col.values {
+                        s.offer(v);
+                    }
+                    ColPlan::Numeric { edges: s.edges() }
+                }
+            })
+            .collect();
+        BinPlan { cols }
     }
-    max_code + 1
+
+    /// Assemble a plan from streaming ingestion state: one entry per
+    /// column — `None` marks a categorical column, `Some(sampler)` a
+    /// numeric column whose sampler saw every value in order.
+    pub fn from_samplers(samplers: Vec<Option<NumericSampler>>) -> BinPlan {
+        let cols = samplers
+            .into_iter()
+            .map(|s| match s {
+                None => ColPlan::Categorical,
+                Some(s) => ColPlan::Numeric { edges: s.edges() },
+            })
+            .collect();
+        BinPlan { cols }
+    }
+}
+
+/// Bounded-memory stride sampler for numeric edge estimation: offered
+/// the column's values *in row order* (across any chunking), it retains
+/// exactly the values the in-memory path would sort — indices
+/// `0, stride, 2·stride, …` with `stride = len / MAX_SORT` (integer
+/// division, so the retained count is `ceil(len / stride)` — bounded by
+/// 2·MAX_SORT, approached just above the cap where `stride` rounds
+/// down to 1) — so the edges, and with them every code, are
+/// bit-identical between paths.
+#[derive(Debug, Clone)]
+pub struct NumericSampler {
+    stride: usize,
+    seen: usize,
+    sample: Vec<f32>,
+}
+
+impl NumericSampler {
+    /// Sampler for a column of `total_len` values (the stream length
+    /// must be known up front — the deterministic stride depends on it).
+    pub fn new(total_len: usize) -> NumericSampler {
+        let stride = if total_len > MAX_SORT {
+            (total_len / MAX_SORT).max(1)
+        } else {
+            1
+        };
+        NumericSampler {
+            stride,
+            seen: 0,
+            sample: Vec::with_capacity(total_len.div_ceil(stride)),
+        }
+    }
+
+    /// Offer the next value in row order.
+    #[inline]
+    pub fn offer(&mut self, v: f32) {
+        if self.seen % self.stride == 0 {
+            self.sample.push(v);
+        }
+        self.seen += 1;
+    }
+
+    /// Compute the column's bin edges from the retained sample:
+    /// distinct-aware when few distinct values exist, deduplicated
+    /// equi-depth cut points otherwise.
+    pub fn edges(self) -> Vec<f32> {
+        let mut sample = self.sample;
+        sample.retain(|v| v.is_finite());
+        if sample.is_empty() {
+            return Vec::new(); // every value encodes to 0 (cardinality 1)
+        }
+        sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        // distinct-aware bin edges
+        let mut distinct: Vec<f32> = Vec::new();
+        for &v in &sample {
+            if distinct.last() != Some(&v) {
+                distinct.push(v);
+            }
+        }
+        if distinct.len() <= K_BINS {
+            // each distinct value gets its own code: edges are the
+            // distinct values above the smallest (code = #edges <= v)
+            distinct[1..].to_vec()
+        } else {
+            // equi-depth cut points, deduplicated (ties collapse bins)
+            let mut e: Vec<f32> = (1..K_BINS)
+                .map(|b| sample[(b * sample.len()) / K_BINS])
+                .collect();
+            e.dedup();
+            e
+        }
+    }
+}
+
+/// Chunk-at-a-time encoder into a [`CodeMatrix`]: feed column-major
+/// chunks in row order and finish. Total extra memory beyond the output
+/// codes is zero — the plan was already built (via bounded samplers)
+/// before the binner exists.
+///
+/// ```
+/// use substrat::data::binning::{BinPlan, CodeMatrix, StreamingBinner};
+/// use substrat::data::registry;
+///
+/// let frame = registry::load("D2", 0.02, 1);
+/// let plan = BinPlan::from_frame(&frame);
+/// let mut binner = StreamingBinner::new(plan, frame.n_rows);
+/// let cols: Vec<&[f32]> = frame.columns.iter().map(|c| c.values.as_slice()).collect();
+/// binner.push_chunk(&cols); // any chunking yields identical codes
+/// let streamed = binner.finish();
+/// let reference = CodeMatrix::from_frame(&frame);
+/// assert_eq!(streamed.column(0), reference.column(0));
+/// ```
+pub struct StreamingBinner {
+    plan: BinPlan,
+    codes: Vec<u16>,
+    n_rows: usize,
+    filled: usize,
+    max_code: Vec<u16>,
+}
+
+impl StreamingBinner {
+    /// Encoder for `n_rows` total rows under `plan`.
+    pub fn new(plan: BinPlan, n_rows: usize) -> StreamingBinner {
+        let n_cols = plan.cols.len();
+        StreamingBinner {
+            plan,
+            codes: vec![0u16; n_rows * n_cols],
+            n_rows,
+            filled: 0,
+            max_code: vec![0u16; n_cols],
+        }
+    }
+
+    /// Rows still expected before [`StreamingBinner::finish`].
+    pub fn remaining_rows(&self) -> usize {
+        self.n_rows - self.filled
+    }
+
+    /// Encode one column-major chunk: `cols[c]` holds the chunk's
+    /// values for column `c`; all columns must be chunk-equal length.
+    /// Panics on shape mismatch or overflow past `n_rows` — ingestion
+    /// bugs, not data errors.
+    pub fn push_chunk(&mut self, cols: &[&[f32]]) {
+        assert_eq!(cols.len(), self.plan.cols.len(), "chunk column count");
+        let rows = cols.first().map_or(0, |c| c.len());
+        assert!(
+            self.filled + rows <= self.n_rows,
+            "chunk overflows the planned {} rows",
+            self.n_rows
+        );
+        for (c, chunk) in cols.iter().enumerate() {
+            assert_eq!(chunk.len(), rows, "ragged chunk at column {c}");
+            let base = c * self.n_rows + self.filled;
+            let out = &mut self.codes[base..base + rows];
+            let plan = &self.plan.cols[c];
+            let mut max_code = self.max_code[c];
+            for (i, &v) in chunk.iter().enumerate() {
+                let code = plan.encode_one(v);
+                out[i] = code;
+                max_code = max_code.max(code);
+            }
+            self.max_code[c] = max_code;
+        }
+        self.filled += rows;
+    }
+
+    /// Seal the matrix. Panics if fewer than `n_rows` rows arrived.
+    pub fn finish(self) -> CodeMatrix {
+        assert_eq!(
+            self.filled, self.n_rows,
+            "streaming binner finished early: {} of {} rows",
+            self.filled, self.n_rows
+        );
+        let n_cols = self.plan.cols.len();
+        CodeMatrix {
+            codes: self.codes,
+            n_rows: self.n_rows,
+            n_cols,
+            cardinality: self.max_code.iter().map(|&m| m + 1).collect(),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::Column;
+    use crate::util::prop::check_prop;
 
     fn frame_of(cols: Vec<Column>) -> Frame {
         let n = cols[0].values.len();
@@ -132,6 +328,34 @@ mod tests {
         cols.push(Column::categorical("y", vec![0.0; n]));
         let t = cols.len() - 1;
         Frame::new("t", cols, t)
+    }
+
+    /// Stream `frame` through a binner in chunks of the given sizes.
+    fn stream_in_chunks(frame: &Frame, chunk_sizes: &[usize]) -> CodeMatrix {
+        let plan = BinPlan::from_frame(frame);
+        let mut binner = StreamingBinner::new(plan, frame.n_rows);
+        let mut at = 0;
+        let mut sizes = chunk_sizes.iter().copied();
+        while at < frame.n_rows {
+            let want = sizes.next().unwrap_or(1).max(1);
+            let step = want.min(frame.n_rows - at);
+            let cols: Vec<&[f32]> = frame
+                .columns
+                .iter()
+                .map(|c| &c.values[at..at + step])
+                .collect();
+            binner.push_chunk(&cols);
+            at += step;
+        }
+        binner.finish()
+    }
+
+    fn assert_bit_identical(a: &CodeMatrix, b: &CodeMatrix) {
+        assert_eq!((a.n_rows, a.n_cols), (b.n_rows, b.n_cols));
+        assert_eq!(a.cardinality, b.cardinality);
+        for c in 0..a.n_cols {
+            assert_eq!(a.column(c), b.column(c), "column {c} diverged");
+        }
     }
 
     #[test]
@@ -217,5 +441,92 @@ mod tests {
         )]);
         let cm = CodeMatrix::from_frame(&f);
         assert_eq!(cm.column(0).len(), 4);
+    }
+
+    #[test]
+    fn all_nan_column_is_single_code() {
+        let f = frame_of(vec![Column::numeric("n", vec![f32::NAN; 8])]);
+        let cm = CodeMatrix::from_frame(&f);
+        assert!(cm.column(0).iter().all(|&c| c == 0));
+        assert_eq!(cm.cardinality[0], 1);
+    }
+
+    #[test]
+    fn streaming_single_chunk_matches_from_frame() {
+        let f = frame_of(vec![
+            Column::numeric("n", (0..500).map(|i| (i % 37) as f32).collect()),
+            Column::categorical("c", (0..500).map(|i| (i % 9) as f32).collect()),
+        ]);
+        let streamed = stream_in_chunks(&f, &[500]);
+        assert_bit_identical(&streamed, &CodeMatrix::from_frame(&f));
+    }
+
+    #[test]
+    fn prop_streaming_chunked_binning_bit_identical_to_in_memory() {
+        // the tentpole contract (DESIGN.md §5.3): any chunking of any
+        // frame produces the exact codes of the in-memory path
+        check_prop("streaming binning == in-memory binning", 30, |rng| {
+            let n = 1 + rng.usize_below(400);
+            let mut cols = Vec::new();
+            let n_extra = rng.usize_below(4);
+            for ci in 0..=n_extra {
+                let vals: Vec<f32> = (0..n)
+                    .map(|_| match rng.usize_below(12) {
+                        0 => f32::NAN,
+                        1 => 0.0,
+                        _ => (rng.f64() * 40.0 - 20.0) as f32,
+                    })
+                    .collect();
+                if rng.bool_with(0.3) {
+                    let cats: Vec<f32> =
+                        (0..n).map(|_| rng.usize_below(90) as f32).collect();
+                    cols.push(Column::categorical(format!("c{ci}"), cats));
+                } else {
+                    cols.push(Column::numeric(format!("n{ci}"), vals));
+                }
+            }
+            let f = frame_of(cols);
+            let reference = CodeMatrix::from_frame(&f);
+            let mut sizes = Vec::new();
+            let mut left = n;
+            while left > 0 {
+                let s = 1 + rng.usize_below(97);
+                sizes.push(s.min(left));
+                left -= s.min(left);
+            }
+            let streamed = stream_in_chunks(&f, &sizes);
+            assert_bit_identical(&streamed, &reference);
+        });
+    }
+
+    #[test]
+    fn streaming_strided_sampling_matches_large_column() {
+        // above MAX_SORT the planner stride-samples; chunked offering
+        // must retain the identical sample set
+        let n = 120_000; // > MAX_SORT
+        let vals: Vec<f32> = (0..n).map(|i| ((i * 7919) % 10_007) as f32).collect();
+        let f = frame_of(vec![Column::numeric("n", vals)]);
+        let reference = CodeMatrix::from_frame(&f);
+        let streamed = stream_in_chunks(&f, &[33_000, 19_000, 50_000, 18_000]);
+        assert_bit_identical(&streamed, &reference);
+    }
+
+    #[test]
+    #[should_panic(expected = "finished early")]
+    fn streaming_underfill_panics() {
+        let f = frame_of(vec![Column::numeric("n", vec![1.0, 2.0, 3.0])]);
+        let plan = BinPlan::from_frame(&f);
+        let binner = StreamingBinner::new(plan, 3);
+        let _ = binner.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn streaming_overflow_panics() {
+        let f = frame_of(vec![Column::numeric("n", vec![1.0, 2.0])]);
+        let plan = BinPlan::from_frame(&f);
+        let mut binner = StreamingBinner::new(plan, 1);
+        let cols: Vec<&[f32]> = f.columns.iter().map(|c| c.values.as_slice()).collect();
+        binner.push_chunk(&cols);
     }
 }

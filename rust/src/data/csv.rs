@@ -1,0 +1,452 @@
+//! Zero-dependency CSV reading (DESIGN.md §5.3): an RFC-4180 record
+//! parser behind a chunked, bounded-memory reader.
+//!
+//! Scope — exactly what real tabular ML datasets need, nothing more:
+//!
+//! * quoted fields (`"San Jose, CA"`), with `""` escaping a literal
+//!   quote and quoted fields free to contain separators, CR and LF;
+//! * CRLF and LF record terminators (a final record without a trailing
+//!   newline is still a record);
+//! * header detection (heuristic, overridable by the caller);
+//! * chunked reads: [`CsvReader::read_chunk`] hands back at most
+//!   `max_rows` records at a time, so a D10-shaped file (1M×15) streams
+//!   through ingestion without ever being resident as text.
+//!
+//! Structural validation (ragged rows, empty files) lives here;
+//! *semantic* interpretation of the fields (types, missing values,
+//! dictionaries, the target column) is [`crate::data::infer`]'s job.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use crate::ensure;
+use crate::util::error::{Context as _, Result};
+
+/// One parsed record: the field strings in column order.
+pub type Record = Vec<String>;
+
+/// Streaming RFC-4180 reader over any byte source.
+pub struct CsvReader<R> {
+    src: R,
+    /// byte delimiter between fields (`,` unless the caller overrides)
+    delimiter: u8,
+    /// 1-based line number of the record currently being parsed
+    /// (for error messages; quoted newlines advance it too)
+    line: usize,
+    /// records handed out so far
+    records: usize,
+    /// the stream head has been checked (and stripped) for a UTF-8 BOM
+    bom_checked: bool,
+    done: bool,
+}
+
+impl CsvReader<BufReader<File>> {
+    /// Open a file for streaming CSV reads.
+    pub fn open(path: &Path) -> Result<CsvReader<BufReader<File>>> {
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        Ok(CsvReader::new(BufReader::new(file)))
+    }
+}
+
+impl<R: BufRead> CsvReader<R> {
+    /// Wrap a buffered byte source (comma delimiter).
+    pub fn new(src: R) -> CsvReader<R> {
+        CsvReader {
+            src,
+            delimiter: b',',
+            line: 1,
+            records: 0,
+            bom_checked: false,
+            done: false,
+        }
+    }
+
+    /// Override the field delimiter (e.g. `b';'` for European exports).
+    pub fn with_delimiter(mut self, delimiter: u8) -> CsvReader<R> {
+        self.delimiter = delimiter;
+        self
+    }
+
+    /// Records handed out so far.
+    pub fn records_read(&self) -> usize {
+        self.records
+    }
+
+    /// Current 1-based physical line number (quoted newlines and blank
+    /// lines included) — callers use it to anchor their own
+    /// record-level error messages.
+    pub fn line(&self) -> usize {
+        self.line
+    }
+
+    fn next_byte(&mut self) -> Result<Option<u8>> {
+        let mut b = [0u8; 1];
+        loop {
+            return match self.src.read(&mut b) {
+                Ok(0) => Ok(None),
+                Ok(_) => Ok(Some(b[0])),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => Err(crate::anyhow_msg!("csv read failed: {e}")),
+            };
+        }
+    }
+
+    /// Parse the next record; `Ok(None)` at end of input. Blank lines
+    /// between records are skipped (a lone trailing newline is not an
+    /// empty record).
+    pub fn next_record(&mut self) -> Result<Option<Record>> {
+        if self.done {
+            return Ok(None);
+        }
+        if !self.bom_checked {
+            // Excel's "CSV UTF-8" export prepends EF BB BF; left in
+            // place it would corrupt the first field ("\u{feff}age"
+            // breaks --target lookup, "\u{feff}1.5" flips a numeric
+            // column to categorical)
+            self.bom_checked = true;
+            let buf = self
+                .src
+                .fill_buf()
+                .map_err(|e| crate::anyhow_msg!("csv read failed: {e}"))?;
+            if buf.starts_with(&[0xEF, 0xBB, 0xBF]) {
+                self.src.consume(3);
+            }
+        }
+        let mut fields: Record = Vec::new();
+        // fields accumulate as raw bytes and convert once per field, so
+        // multi-byte UTF-8 sequences survive the byte-level parse
+        let mut field: Vec<u8> = Vec::new();
+        let commit = |f: &mut Vec<u8>| String::from_utf8_lossy(&std::mem::take(f)).into_owned();
+        // true once the current record has any content: a byte was seen
+        // or a delimiter/quote committed a field
+        let mut started = false;
+        let mut in_quotes = false;
+        // inside a field that *began* with a quote (affects `""` and
+        // post-closing-quote validation)
+        let mut was_quoted = false;
+        loop {
+            let Some(b) = self.next_byte()? else {
+                self.done = true;
+                ensure!(
+                    !in_quotes,
+                    "csv line {}: unterminated quoted field at end of input",
+                    self.line
+                );
+                if !started {
+                    return Ok(None);
+                }
+                fields.push(commit(&mut field));
+                self.records += 1;
+                return Ok(Some(fields));
+            };
+            if in_quotes {
+                match b {
+                    b'"' => {
+                        // closing quote, or the first half of an
+                        // escaped "" pair — peek decides
+                        if self.peek_quote()? {
+                            field.push(b'"'); // consumed the pair
+                        } else {
+                            in_quotes = false;
+                        }
+                    }
+                    b'\n' => {
+                        self.line += 1;
+                        field.push(b'\n');
+                    }
+                    _ => field.push(b),
+                }
+                continue;
+            }
+            match b {
+                b if b == self.delimiter => {
+                    started = true;
+                    was_quoted = false;
+                    fields.push(commit(&mut field));
+                }
+                b'"' => {
+                    ensure!(
+                        field.is_empty() && !was_quoted,
+                        "csv line {}: quote inside an unquoted field",
+                        self.line
+                    );
+                    started = true;
+                    in_quotes = true;
+                    was_quoted = true;
+                }
+                b'\r' => {
+                    // RFC record terminator is CRLF: when an LF follows
+                    // it arrives next and terminates the record; a bare
+                    // CR mid-field is kept literal
+                    if !self.peek_lf()? {
+                        field.push(b'\r');
+                    }
+                }
+                b'\n' => {
+                    self.line += 1;
+                    if !started && field.is_empty() {
+                        continue; // blank line between records
+                    }
+                    fields.push(commit(&mut field));
+                    self.records += 1;
+                    return Ok(Some(fields));
+                }
+                _ => {
+                    ensure!(
+                        !was_quoted,
+                        "csv line {}: data after a closing quote",
+                        self.line
+                    );
+                    started = true;
+                    field.push(b);
+                }
+            }
+        }
+    }
+
+    /// After a `"` inside a quoted field: consume a following `"` (an
+    /// escaped pair) and report true, else leave the stream alone.
+    fn peek_quote(&mut self) -> Result<bool> {
+        self.peek_byte(b'"')
+    }
+
+    /// After a `\r` outside quotes: look (without consuming) whether a
+    /// `\n` follows — it must stay in the stream so the main loop
+    /// counts the line and terminates the record.
+    fn peek_lf(&mut self) -> Result<bool> {
+        let buf = self
+            .src
+            .fill_buf()
+            .map_err(|e| crate::anyhow_msg!("csv read failed: {e}"))?;
+        Ok(buf.first() == Some(&b'\n'))
+    }
+
+    /// Consume the next byte iff it equals `want`.
+    fn peek_byte(&mut self, want: u8) -> Result<bool> {
+        let buf = self
+            .src
+            .fill_buf()
+            .map_err(|e| crate::anyhow_msg!("csv read failed: {e}"))?;
+        if buf.first() == Some(&want) {
+            self.src.consume(1);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Read up to `max_rows` records (fewer at end of input; empty when
+    /// exhausted). Every record is validated against `width` fields —
+    /// ragged rows are an error naming the offending line.
+    pub fn read_chunk(&mut self, max_rows: usize, width: usize) -> Result<Vec<Record>> {
+        let mut out = Vec::new();
+        while out.len() < max_rows {
+            let start_line = self.line;
+            let Some(rec) = self.next_record()? else {
+                break;
+            };
+            ensure!(
+                rec.len() == width,
+                "csv row starting at line {start_line}: ragged row — \
+                 {} field(s), expected {width}",
+                rec.len()
+            );
+            out.push(rec);
+        }
+        Ok(out)
+    }
+}
+
+/// Does a field parse as a number? (The header heuristic's notion of
+/// "numeric" — intentionally the same `f64::from_str` the type
+/// inference layer uses.)
+pub fn is_numeric_field(field: &str) -> bool {
+    let t = field.trim();
+    !t.is_empty() && t.parse::<f64>().is_ok()
+}
+
+/// Is this field a missing-value token? (Case-insensitive, trimmed.)
+/// Shared by the header heuristic below — a missing token is *no*
+/// evidence of a header — and by the type-inference layer
+/// ([`crate::data::infer`]), whose semantics it defines.
+pub fn is_missing(field: &str) -> bool {
+    let t = field.trim();
+    t.is_empty()
+        || t.eq_ignore_ascii_case("?")
+        || t.eq_ignore_ascii_case("na")
+        || t.eq_ignore_ascii_case("n/a")
+        || t.eq_ignore_ascii_case("nan")
+        || t.eq_ignore_ascii_case("null")
+        || t.eq_ignore_ascii_case("none")
+}
+
+/// Header heuristic: the first record is a header when every field is
+/// non-numeric, non-missing text while the second record has at least
+/// one numeric field. Missing tokens are *no* evidence either way — a
+/// headerless UCI-style file starting `?,red,yes` must not have its
+/// first data row consumed as a header. All-categorical files default
+/// to *no* header unless the caller overrides
+/// ([`crate::data::infer::CsvOptions::header`]) — stated plainly in
+/// the ingestion docs (DESIGN.md §5.3).
+pub fn detect_header(first: &Record, second: Option<&Record>) -> bool {
+    let first_all_text = first
+        .iter()
+        .all(|f| !is_numeric_field(f) && !is_missing(f));
+    let second_any_numeric = second
+        .map(|r| r.iter().any(|f| is_numeric_field(f)))
+        .unwrap_or(false);
+    first_all_text && second_any_numeric
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn read_all(text: &str) -> Result<Vec<Record>> {
+        let mut r = CsvReader::new(Cursor::new(text.as_bytes().to_vec()));
+        let mut out = Vec::new();
+        while let Some(rec) = r.next_record()? {
+            out.push(rec);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn plain_records() {
+        let rows = read_all("a,b,c\n1,2,3\n").unwrap();
+        assert_eq!(rows, vec![vec!["a", "b", "c"], vec!["1", "2", "3"]]);
+    }
+
+    #[test]
+    fn missing_trailing_newline_still_yields_final_record() {
+        let rows = read_all("a,b\n1,2").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], vec!["1", "2"]);
+    }
+
+    #[test]
+    fn crlf_terminators() {
+        let rows = read_all("a,b\r\n1,2\r\n").unwrap();
+        assert_eq!(rows, vec![vec!["a", "b"], vec!["1", "2"]]);
+    }
+
+    #[test]
+    fn quoted_separator_and_escaped_quote() {
+        let rows = read_all("city,note\n\"San Jose, CA\",\"he said \"\"hi\"\"\"\n").unwrap();
+        assert_eq!(rows[1], vec!["San Jose, CA", "he said \"hi\""]);
+    }
+
+    #[test]
+    fn quoted_newline_stays_inside_the_field() {
+        let rows = read_all("a,b\n\"line1\nline2\",2\n").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1][0], "line1\nline2");
+    }
+
+    #[test]
+    fn empty_fields_everywhere() {
+        let rows = read_all("a,,c\n,,\n\"\",x,\n").unwrap();
+        assert_eq!(rows[0], vec!["a", "", "c"]);
+        assert_eq!(rows[1], vec!["", "", ""]);
+        assert_eq!(rows[2], vec!["", "x", ""]);
+    }
+
+    #[test]
+    fn blank_lines_between_records_are_skipped() {
+        let rows = read_all("a,b\n\n1,2\n\n\n").unwrap();
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn bare_cr_inside_unquoted_field_is_literal() {
+        let rows = read_all("a\rb,c\n").unwrap();
+        assert_eq!(rows[0], vec!["a\rb", "c"]);
+    }
+
+    #[test]
+    fn unterminated_quote_is_an_error() {
+        let e = read_all("a,b\n\"oops,2\n").unwrap_err();
+        assert!(format!("{e}").contains("unterminated"), "{e}");
+    }
+
+    #[test]
+    fn data_after_closing_quote_is_an_error() {
+        let e = read_all("\"x\"y,b\n").unwrap_err();
+        assert!(format!("{e}").contains("after a closing quote"), "{e}");
+    }
+
+    #[test]
+    fn quote_inside_unquoted_field_is_an_error() {
+        let e = read_all("ab\"c,d\n").unwrap_err();
+        assert!(format!("{e}").contains("quote inside"), "{e}");
+    }
+
+    #[test]
+    fn ragged_row_error_names_the_line() {
+        let mut r = CsvReader::new(Cursor::new(b"a,b\n1,2\n3\n".to_vec()));
+        assert_eq!(r.read_chunk(2, 2).unwrap().len(), 2);
+        let e = r.read_chunk(10, 2).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("ragged"), "{msg}");
+        assert!(msg.contains("line 3"), "{msg}"); // the short row sits on line 3
+    }
+
+    #[test]
+    fn chunked_reads_partition_the_file() {
+        let text: String = (0..25).map(|i| format!("{i},{}\n", i * 2)).collect();
+        let mut r = CsvReader::new(Cursor::new(text.into_bytes()));
+        let mut total = 0;
+        let mut chunks = 0;
+        loop {
+            let c = r.read_chunk(7, 2).unwrap();
+            if c.is_empty() {
+                break;
+            }
+            total += c.len();
+            chunks += 1;
+        }
+        assert_eq!(total, 25);
+        assert_eq!(chunks, 4); // 7+7+7+4
+        assert_eq!(r.records_read(), 25);
+    }
+
+    #[test]
+    fn utf8_bom_is_stripped() {
+        let mut text = vec![0xEFu8, 0xBB, 0xBF];
+        text.extend_from_slice(b"age,city\n31,ames\n");
+        let mut r = CsvReader::new(Cursor::new(text));
+        assert_eq!(r.next_record().unwrap().unwrap(), vec!["age", "city"]);
+        assert_eq!(r.next_record().unwrap().unwrap(), vec!["31", "ames"]);
+        // a BOM-free file is untouched
+        let rows = read_all("a,b\n1,2\n").unwrap();
+        assert_eq!(rows[0], vec!["a", "b"]);
+    }
+
+    #[test]
+    fn header_heuristic() {
+        let h = vec!["age".to_string(), "city".to_string()];
+        let d = vec!["31".to_string(), "Ames".to_string()];
+        assert!(detect_header(&h, Some(&d)));
+        // numeric first row: data, not header
+        assert!(!detect_header(&d, Some(&h)));
+        // all-categorical file: defaults to no header
+        let c1 = vec!["red".to_string()];
+        let c2 = vec!["blue".to_string()];
+        assert!(!detect_header(&c1, Some(&c2)));
+        // single-record file: no second row to compare against
+        assert!(!detect_header(&h, None));
+        // missing tokens are no evidence: a headerless row like
+        // "?,red" above a numeric row must stay a data row
+        let m = vec!["?".to_string(), "red".to_string()];
+        assert!(!detect_header(&m, Some(&d)));
+    }
+
+    #[test]
+    fn custom_delimiter() {
+        let mut r =
+            CsvReader::new(Cursor::new(b"a;b\n1;2\n".to_vec())).with_delimiter(b';');
+        assert_eq!(r.next_record().unwrap().unwrap(), vec!["a", "b"]);
+        assert_eq!(r.next_record().unwrap().unwrap(), vec!["1", "2"]);
+    }
+}

@@ -1,0 +1,714 @@
+//! Column type inference + CSV → [`Frame`] ingestion (DESIGN.md §5.3).
+//!
+//! [`load_csv`] turns an arbitrary real-world CSV into the exact shape
+//! the rest of the system already consumes — a [`Frame`] plus its
+//! streaming-binned [`CodeMatrix`] — in two bounded-memory passes:
+//!
+//! 1. **structure scan**: stream the records once; detect the header
+//!    ([`crate::data::csv::detect_header`], overridable), validate
+//!    rectangularity, decide per column *numeric vs categorical* (a
+//!    column is numeric iff every non-missing field parses as `f64`),
+//!    count rows and missing fields, and accumulate the mean of every
+//!    numeric column for imputation. Nothing is materialized.
+//! 2. **materialize**: stream again; numeric fields parse (missing →
+//!    column mean), categorical fields dictionary-encode in first-
+//!    appearance order (missing → the `"<NA>"` category), the chosen
+//!    target column dictionary-encodes to dense 0-based class labels,
+//!    and every final value feeds the column's
+//!    [`crate::data::binning::NumericSampler`] so the quantile
+//!    [`BinPlan`] is ready the moment the frame is — the codes then
+//!    stream through a [`StreamingBinner`] without a second raw-column
+//!    materialization.
+//!
+//! Missing tokens (case-insensitive, trimmed): the empty field, `?`,
+//! `NA`, `N/A`, `NaN`, `null`, `none`. A column whose fields are *all*
+//! missing is numeric with mean 0.0. The target column is always
+//! treated as categorical, whatever its lexical type — and a row whose
+//! *target* field is missing is dropped in both passes (training on a
+//! fabricated `"<NA>"` class would corrupt every accuracy number);
+//! [`CsvSummary::dropped_rows`] reports how many.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Cursor};
+use std::path::Path;
+
+use crate::data::binning::{BinPlan, NumericSampler, StreamingBinner};
+use crate::data::csv::{detect_header, CsvReader, Record};
+pub use crate::data::csv::is_missing;
+use crate::data::{CodeMatrix, Column, Frame};
+use crate::ensure;
+use crate::util::error::Result;
+
+/// Ingestion knobs. The defaults handle a well-formed ML CSV with a
+/// trailing label column; everything is overridable.
+#[derive(Debug, Clone)]
+pub struct CsvOptions {
+    /// `Some(true/false)` forces the header decision; `None` applies
+    /// the [`detect_header`] heuristic
+    pub header: Option<bool>,
+    /// target column as a header name or 0-based index (index always
+    /// works; a name needs a header); `None` = the last column
+    pub target: Option<String>,
+    /// records per streamed chunk (ingest memory granularity)
+    pub chunk_rows: usize,
+    /// field delimiter
+    pub delimiter: u8,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        CsvOptions {
+            header: None,
+            target: None,
+            chunk_rows: 8_192,
+            delimiter: b',',
+        }
+    }
+}
+
+/// Per-column ingestion report.
+#[derive(Debug, Clone)]
+pub struct ColumnSummary {
+    pub name: String,
+    pub categorical: bool,
+    /// fields that matched a missing token
+    pub missing: usize,
+    /// dictionary size (categorical columns; 0 for numeric)
+    pub distinct: usize,
+}
+
+/// Whole-file ingestion report.
+#[derive(Debug, Clone)]
+pub struct CsvSummary {
+    /// labeled data rows kept (rows with a missing target are dropped)
+    pub n_rows: usize,
+    pub header: bool,
+    pub target: usize,
+    /// rows dropped because their target field was a missing token
+    pub dropped_rows: usize,
+    pub columns: Vec<ColumnSummary>,
+}
+
+/// The ingested dataset: the frame, its code matrix (streaming-binned),
+/// and the report.
+pub struct CsvDataset {
+    pub frame: Frame,
+    pub codes: CodeMatrix,
+    pub summary: CsvSummary,
+}
+
+/// Strict `--header yes|no` CLI value parser, shared by every front
+/// end (the `substrat` binary and the examples) so a typo can never
+/// silently flip the header decision.
+pub fn parse_header_flag(v: &str) -> bool {
+    match v {
+        "yes" | "true" | "1" => true,
+        "no" | "false" | "0" => false,
+        other => panic!("--header expects yes|no, got {other:?}"),
+    }
+}
+
+/// Pass-1 accumulator for one column.
+struct ColScan {
+    numeric: bool,
+    missing: usize,
+    sum: f64,
+    present: usize,
+}
+
+/// Pass-1 product: everything pass 2 needs to materialize.
+struct Structure {
+    header: bool,
+    names: Vec<String>,
+    target: usize,
+    n_rows: usize,
+    /// rows dropped for a missing target field
+    dropped: usize,
+    /// per column: treat as categorical (target always is)
+    categorical: Vec<bool>,
+    /// per numeric column: the imputation mean (0.0 where nothing
+    /// was present)
+    impute: Vec<f32>,
+    missing: Vec<usize>,
+}
+
+fn scan_structure<R: BufRead>(mut reader: CsvReader<R>, opts: &CsvOptions) -> Result<Structure> {
+    let first = reader
+        .next_record()?
+        .ok_or_else(|| crate::anyhow_msg!("csv is empty"))?;
+    let width = first.len();
+    ensure!(
+        width >= 2,
+        "csv needs at least two columns (features + target), got {width}"
+    );
+    let second_start = reader.line();
+    let second = reader.next_record()?;
+    if let Some(s) = &second {
+        ensure!(
+            s.len() == width,
+            "csv row starting at line {second_start}: ragged row — \
+             {} field(s), expected {width}",
+            s.len()
+        );
+    }
+    let header = opts
+        .header
+        .unwrap_or_else(|| detect_header(&first, second.as_ref()));
+
+    let names: Vec<String> = if header {
+        first.iter().map(|f| f.trim().to_string()).collect()
+    } else {
+        (0..width).map(|i| format!("c{i}")).collect()
+    };
+    let target = resolve_target(opts, &names, header)?;
+
+    let mut scans: Vec<ColScan> = (0..width)
+        .map(|_| ColScan {
+            numeric: true,
+            missing: 0,
+            sum: 0.0,
+            present: 0,
+        })
+        .collect();
+    let mut n_rows = 0usize;
+    let mut dropped = 0usize;
+    let mut scan_record = |rec: &Record| {
+        // an unlabeled row cannot be trained or scored on: drop it in
+        // both passes rather than fabricate a "<NA>" class
+        if is_missing(&rec[target]) {
+            dropped += 1;
+            return;
+        }
+        for (c, field) in rec.iter().enumerate() {
+            let s = &mut scans[c];
+            if is_missing(field) {
+                s.missing += 1;
+                continue;
+            }
+            match field.trim().parse::<f64>() {
+                Ok(v) => {
+                    s.sum += v;
+                    s.present += 1;
+                }
+                Err(_) => s.numeric = false,
+            }
+        }
+        n_rows += 1;
+    };
+    if !header {
+        scan_record(&first);
+    }
+    if let Some(s) = &second {
+        scan_record(s);
+    }
+    // read_chunk validates raggedness with accurate physical line
+    // numbers (quoted newlines and blank lines included)
+    loop {
+        let chunk = reader.read_chunk(opts.chunk_rows, width)?;
+        if chunk.is_empty() {
+            break;
+        }
+        for rec in &chunk {
+            scan_record(rec);
+        }
+    }
+    ensure!(
+        n_rows >= 1,
+        "csv has a header but no data rows \
+         ({dropped} row(s) dropped for a missing target)"
+    );
+
+    let categorical: Vec<bool> = scans
+        .iter()
+        .enumerate()
+        .map(|(c, s)| c == target || !s.numeric)
+        .collect();
+    let impute: Vec<f32> = scans
+        .iter()
+        .map(|s| {
+            if s.present > 0 {
+                (s.sum / s.present as f64) as f32
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let missing = scans.iter().map(|s| s.missing).collect();
+    Ok(Structure {
+        header,
+        names,
+        target,
+        n_rows,
+        dropped,
+        categorical,
+        impute,
+        missing,
+    })
+}
+
+fn resolve_target(opts: &CsvOptions, names: &[String], header: bool) -> Result<usize> {
+    let Some(spec) = &opts.target else {
+        return Ok(names.len() - 1);
+    };
+    if let Ok(i) = spec.trim().parse::<usize>() {
+        ensure!(
+            i < names.len(),
+            "--target index {i} out of range ({} columns)",
+            names.len()
+        );
+        return Ok(i);
+    }
+    ensure!(
+        header,
+        "--target {spec:?} is a name but the csv has no header (use a 0-based index)"
+    );
+    names
+        .iter()
+        .position(|n| n == spec.trim())
+        .ok_or_else(|| {
+            crate::anyhow_msg!("--target {spec:?} not found in header {:?}", names)
+        })
+}
+
+/// Ingest a CSV from a reopenable byte source: `open` is called once
+/// per pass. See the module docs for the two-pass contract. With
+/// `with_codes = false` the binning stage (samplers + code matrix) is
+/// skipped entirely — the path `DataSource::load` takes, since the
+/// experiment layer re-bins its train split itself.
+fn load_with<R: BufRead, F: Fn() -> Result<CsvReader<R>>>(
+    open: F,
+    name: &str,
+    opts: &CsvOptions,
+    with_codes: bool,
+) -> Result<(Frame, Option<CodeMatrix>, CsvSummary)> {
+    ensure!(opts.chunk_rows >= 1, "chunk_rows must be >= 1");
+    let st = scan_structure(open()?, opts)?;
+    let width = st.names.len();
+
+    // pass 2: materialize columns, dictionaries and samplers
+    let mut reader = open()?;
+    if st.header {
+        let _ = reader.next_record()?; // drop the header record
+    }
+    let mut values: Vec<Vec<f32>> = (0..width)
+        .map(|_| Vec::with_capacity(st.n_rows))
+        .collect();
+    let mut dicts: Vec<HashMap<String, u32>> = (0..width).map(|_| HashMap::new()).collect();
+    let mut samplers: Vec<Option<NumericSampler>> = st
+        .categorical
+        .iter()
+        .map(|&cat| (with_codes && !cat).then(|| NumericSampler::new(st.n_rows)))
+        .collect();
+    loop {
+        let chunk = reader.read_chunk(opts.chunk_rows, width)?;
+        if chunk.is_empty() {
+            break;
+        }
+        for rec in &chunk {
+            if is_missing(&rec[st.target]) {
+                continue; // dropped in pass 1 too
+            }
+            for (c, field) in rec.iter().enumerate() {
+                let v = if st.categorical[c] {
+                    let key = if is_missing(field) { "<NA>" } else { field.trim() };
+                    let dict = &mut dicts[c];
+                    // look up by &str first: the hot path (a known
+                    // value) must not allocate a String per field
+                    match dict.get(key) {
+                        Some(&code) => code as f32,
+                        None => {
+                            let next = dict.len() as u32;
+                            dict.insert(key.to_string(), next);
+                            next as f32
+                        }
+                    }
+                } else if is_missing(field) {
+                    st.impute[c]
+                } else {
+                    field.trim().parse::<f64>().map_err(|_| {
+                        crate::anyhow_msg!(
+                            "column {:?} stopped parsing as numeric mid-ingest — \
+                             was the file modified between passes?",
+                            st.names[c]
+                        )
+                    })? as f32
+                };
+                if let Some(s) = &mut samplers[c] {
+                    s.offer(v);
+                }
+                values[c].push(v);
+            }
+        }
+    }
+    ensure!(
+        values[0].len() == st.n_rows,
+        "csv shrank between passes: {} rows, expected {}",
+        values[0].len(),
+        st.n_rows
+    );
+    let n_classes = dicts[st.target].len();
+    ensure!(
+        n_classes >= 2,
+        "target column {:?} has {n_classes} distinct value(s); need >= 2 classes",
+        st.names[st.target]
+    );
+    ensure!(
+        n_classes <= 1_000,
+        "target column {:?} has {n_classes} distinct values — not a class label; \
+         pick the target with --target <name|index>",
+        st.names[st.target]
+    );
+
+    // the quantile plan is complete; stream the codes out of the frame
+    // columns chunk-at-a-time (no second raw-column copy)
+    let codes = if with_codes {
+        let plan = BinPlan::from_samplers(samplers);
+        let mut binner = StreamingBinner::new(plan, st.n_rows);
+        let mut at = 0;
+        while at < st.n_rows {
+            let step = opts.chunk_rows.min(st.n_rows - at);
+            let cols: Vec<&[f32]> = values.iter().map(|v| &v[at..at + step]).collect();
+            binner.push_chunk(&cols);
+            at += step;
+        }
+        Some(binner.finish())
+    } else {
+        None
+    };
+
+    let columns: Vec<Column> = st
+        .names
+        .iter()
+        .zip(values)
+        .enumerate()
+        .map(|(c, (n, v))| Column {
+            name: n.clone(),
+            values: v,
+            categorical: st.categorical[c],
+        })
+        .collect();
+    let summary = CsvSummary {
+        n_rows: st.n_rows,
+        header: st.header,
+        target: st.target,
+        dropped_rows: st.dropped,
+        columns: st
+            .names
+            .iter()
+            .enumerate()
+            .map(|(c, n)| ColumnSummary {
+                name: n.clone(),
+                categorical: st.categorical[c],
+                missing: st.missing[c],
+                distinct: dicts[c].len(),
+            })
+            .collect(),
+    };
+    let frame = Frame::new(name, columns, st.target);
+    Ok((frame, codes, summary))
+}
+
+fn file_stem_name(path: &Path) -> String {
+    path.file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.display().to_string())
+}
+
+/// Ingest a CSV file in full (frame + streaming-binned codes). The
+/// frame is named after the file stem.
+pub fn load_csv(path: &Path, opts: &CsvOptions) -> Result<CsvDataset> {
+    let (frame, codes, summary) = load_with(
+        || Ok(CsvReader::open(path)?.with_delimiter(opts.delimiter)),
+        &file_stem_name(path),
+        opts,
+        true,
+    )?;
+    Ok(CsvDataset {
+        frame,
+        codes: codes.expect("binning was requested"),
+        summary,
+    })
+}
+
+/// Ingest a CSV file without the binning stage — for callers that only
+/// need the frame (the experiment layer bins its own train split).
+pub fn load_csv_frame(path: &Path, opts: &CsvOptions) -> Result<(Frame, CsvSummary)> {
+    let (frame, _, summary) = load_with(
+        || Ok(CsvReader::open(path)?.with_delimiter(opts.delimiter)),
+        &file_stem_name(path),
+        opts,
+        false,
+    )?;
+    Ok((frame, summary))
+}
+
+/// Ingest CSV text from memory (tests, embedded fixtures).
+pub fn load_csv_text(text: &str, name: &str, opts: &CsvOptions) -> Result<CsvDataset> {
+    let bytes = text.as_bytes().to_vec();
+    let (frame, codes, summary) = load_with(
+        move || {
+            Ok(CsvReader::new(wrap_cursor(Cursor::new(bytes.clone())))
+                .with_delimiter(opts.delimiter))
+        },
+        name,
+        opts,
+        true,
+    )?;
+    Ok(CsvDataset {
+        frame,
+        codes: codes.expect("binning was requested"),
+        summary,
+    })
+}
+
+// monomorphization helper so `load_csv_text` names a concrete reader type
+fn wrap_cursor(c: Cursor<Vec<u8>>) -> BufReader<Cursor<Vec<u8>>> {
+    BufReader::new(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(text: &str) -> CsvDataset {
+        load_csv_text(text, "t", &CsvOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn basic_mixed_file_with_header() {
+        let ds = load("age,city,label\n30,ames,yes\n41,boone,no\n29,ames,yes\n");
+        assert!(ds.summary.header);
+        assert_eq!(ds.frame.shape(), (3, 3));
+        assert_eq!(ds.frame.columns[0].name, "age");
+        assert!(!ds.frame.columns[0].categorical);
+        assert!(ds.frame.columns[1].categorical);
+        assert_eq!(ds.frame.target, 2);
+        // dictionary encodes in first-appearance order
+        assert_eq!(ds.frame.columns[1].values, vec![0.0, 1.0, 0.0]);
+        assert_eq!(ds.frame.labels(), vec![0, 1, 0]);
+        assert_eq!(ds.frame.n_classes(), 2);
+        assert_eq!(ds.codes.n_rows, 3);
+        assert_eq!(ds.codes.n_cols, 3);
+    }
+
+    #[test]
+    fn headerless_file_gets_positional_names() {
+        let ds = load("1.5,a,x\n2.5,b,y\n3.5,a,x\n");
+        assert!(!ds.summary.header);
+        assert_eq!(ds.frame.columns[0].name, "c0");
+        assert_eq!(ds.frame.n_rows, 3);
+    }
+
+    #[test]
+    fn forced_header_override() {
+        let opts = CsvOptions {
+            header: Some(true),
+            ..Default::default()
+        };
+        // first row is numeric-looking but forced to be the header
+        let ds = load_csv_text("1,2\n3,a\n4,b\n", "t", &opts).unwrap();
+        assert_eq!(ds.frame.columns[0].name, "1");
+        assert_eq!(ds.frame.n_rows, 2);
+    }
+
+    #[test]
+    fn missing_numeric_imputes_the_column_mean() {
+        let ds = load("x,y\n1,a\n?,b\n3,a\nNA,b\n");
+        // mean of present values {1, 3} = 2
+        assert_eq!(ds.frame.columns[0].values, vec![1.0, 2.0, 3.0, 2.0]);
+        assert_eq!(ds.summary.columns[0].missing, 2);
+    }
+
+    #[test]
+    fn missing_categorical_is_its_own_category() {
+        // all-categorical body: the header heuristic cannot fire, so
+        // force it (documented limitation, DESIGN.md §5.3)
+        let opts = CsvOptions {
+            header: Some(true),
+            ..Default::default()
+        };
+        let ds = load_csv_text("x,y\nred,a\n,b\nblue,a\nnull,b\n", "t", &opts).unwrap();
+        let col = &ds.frame.columns[0];
+        assert!(col.categorical);
+        // red=0, <NA>=1, blue=2, null → <NA> again
+        assert_eq!(col.values, vec![0.0, 1.0, 2.0, 1.0]);
+        assert_eq!(ds.summary.columns[0].distinct, 3);
+    }
+
+    #[test]
+    fn nan_token_is_missing_not_numeric_evidence() {
+        let ds = load("x,y\n1,a\nNaN,b\n5,a\n");
+        assert!(!ds.frame.columns[0].categorical);
+        assert_eq!(ds.frame.columns[0].values, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn numeric_target_is_still_categorical_labels() {
+        let ds = load("x,label\n1.0,0\n2.0,1\n3.0,0\n4.0,2\n");
+        assert!(ds.frame.columns[1].categorical);
+        assert_eq!(ds.frame.n_classes(), 3);
+        assert_eq!(ds.frame.labels(), vec![0, 1, 0, 2]);
+    }
+
+    #[test]
+    fn target_by_name_and_by_index() {
+        let text = "label,x\nyes,1\nno,2\nyes,3\n";
+        let by_name = load_csv_text(
+            text,
+            "t",
+            &CsvOptions {
+                target: Some("label".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(by_name.frame.target, 0);
+        let by_index = load_csv_text(
+            text,
+            "t",
+            &CsvOptions {
+                target: Some("0".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(by_index.frame.target, 0);
+        assert_eq!(by_name.frame.labels(), by_index.frame.labels());
+    }
+
+    #[test]
+    fn unknown_target_name_errors() {
+        let e = load_csv_text(
+            "a,b\n1,x\n2,y\n",
+            "t",
+            &CsvOptions {
+                target: Some("nope".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("not found"), "{e}");
+    }
+
+    #[test]
+    fn single_class_target_errors() {
+        let e = load_csv_text("x,y\n1,a\n2,a\n", "t", &CsvOptions::default()).unwrap_err();
+        assert!(format!("{e}").contains("need >= 2 classes"), "{e}");
+    }
+
+    #[test]
+    fn ragged_row_errors_cleanly() {
+        let e = load_csv_text("a,b,c\n1,2,3\n4,5\n", "t", &CsvOptions::default()).unwrap_err();
+        assert!(format!("{e}").contains("ragged"), "{e}");
+    }
+
+    #[test]
+    fn empty_file_errors() {
+        let e = load_csv_text("", "t", &CsvOptions::default()).unwrap_err();
+        assert!(format!("{e}").contains("empty"), "{e}");
+    }
+
+    #[test]
+    fn header_only_file_errors() {
+        let opts = CsvOptions {
+            header: Some(true),
+            ..Default::default()
+        };
+        let e = load_csv_text("a,b\n", "t", &opts).unwrap_err();
+        assert!(format!("{e}").contains("no data rows"), "{e}");
+    }
+
+    #[test]
+    fn quoted_separators_and_crlf_survive_ingestion() {
+        let opts = CsvOptions {
+            header: Some(true),
+            ..Default::default()
+        };
+        let ds = load_csv_text(
+            "city,label\r\n\"San Jose, CA\",yes\r\n\"Ames, IA\",no\r\n",
+            "t",
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(ds.frame.n_rows, 2);
+        assert!(ds.frame.columns[0].categorical);
+        assert_eq!(ds.frame.columns[0].values, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn codes_match_from_frame_reference() {
+        // the ingested code matrix must be exactly what binning the
+        // final frame in memory would produce
+        let ds = load(
+            "a,b,y\n1.5,red,x\n2.5,blue,y\n3.5,red,x\n0.5,green,y\n2.0,red,x\n",
+        );
+        let reference = CodeMatrix::from_frame(&ds.frame);
+        for c in 0..ds.frame.n_cols() {
+            assert_eq!(ds.codes.column(c), reference.column(c), "column {c}");
+        }
+        assert_eq!(ds.codes.cardinality, reference.cardinality);
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_the_result() {
+        let text: String = std::iter::once("x,z,label\n".to_string())
+            .chain((0..97).map(|i| {
+                format!(
+                    "{},{},{}\n",
+                    (i * 13 % 29) as f64 / 3.0,
+                    ["u", "v", "w"][i % 3],
+                    ["p", "q"][i % 2]
+                )
+            }))
+            .collect();
+        let big = load_csv_text(&text, "t", &CsvOptions::default()).unwrap();
+        let tiny = load_csv_text(
+            &text,
+            "t",
+            &CsvOptions {
+                chunk_rows: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(big.frame.n_rows, tiny.frame.n_rows);
+        for c in 0..big.frame.n_cols() {
+            assert_eq!(big.frame.columns[c].values, tiny.frame.columns[c].values);
+            assert_eq!(big.codes.column(c), tiny.codes.column(c), "column {c}");
+        }
+    }
+
+    #[test]
+    fn rows_with_missing_target_are_dropped_not_fabricated() {
+        // an unlabeled row must not become a "<NA>" class that the
+        // models then train and score on
+        let ds = load("x,y\n1,a\n2,?\n3,b\n4,\n5,a\n");
+        assert_eq!(ds.summary.dropped_rows, 2);
+        assert_eq!(ds.frame.n_rows, 3);
+        assert_eq!(ds.frame.columns[0].values, vec![1.0, 3.0, 5.0]);
+        assert_eq!(ds.frame.labels(), vec![0, 1, 0]);
+        assert_eq!(ds.frame.n_classes(), 2);
+        assert_eq!(ds.codes.n_rows, 3);
+    }
+
+    #[test]
+    fn all_rows_unlabeled_errors() {
+        let opts = CsvOptions {
+            header: Some(true),
+            ..Default::default()
+        };
+        let e = load_csv_text("x,y\n1,?\n2,\n", "t", &opts).unwrap_err();
+        assert!(format!("{e}").contains("no data rows"), "{e}");
+    }
+
+    #[test]
+    fn all_missing_column_is_numeric_zero() {
+        let opts = CsvOptions {
+            header: Some(true),
+            ..Default::default()
+        };
+        let ds = load_csv_text("x,y\n?,a\nNA,b\n,a\n", "t", &opts).unwrap();
+        assert!(!ds.frame.columns[0].categorical);
+        assert_eq!(ds.frame.columns[0].values, vec![0.0, 0.0, 0.0]);
+    }
+}

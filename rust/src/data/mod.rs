@@ -1,17 +1,23 @@
 //! Data substrate: a small columnar frame, quantile binning into integer
 //! codes (the representation the entropy measure and Gen-DST operate on),
-//! dense matrices for model training, and dataset splits.
+//! dense matrices for model training, dataset splits, and two dataset
+//! sources behind [`registry::DataSource`] — the Table-2 synthetic
+//! registry and real CSV files ingested by [`csv`] + [`infer`]
+//! (DESIGN.md §5.3).
 //!
 //! The paper's datasets are tabular classification sets with mixed
 //! numeric/categorical columns and a categorical target; `Frame` models
 //! exactly that.
 
 pub mod binning;
+pub mod csv;
+pub mod infer;
 pub mod registry;
 pub mod split;
 pub mod synth;
 
 pub use binning::{CodeMatrix, K_BINS};
+pub use registry::DataSource;
 
 /// One column of a frame. Categorical columns store code values (0..k)
 /// as f32; numeric columns store raw values.

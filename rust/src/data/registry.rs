@@ -1,14 +1,22 @@
-//! The 10-dataset registry reproducing Table 2's shapes and domains.
+//! The 10-dataset registry reproducing Table 2's shapes and domains,
+//! plus [`DataSource`] — the one resolver every driver goes through, so
+//! a Table-2 symbol and a user-supplied CSV path are interchangeable
+//! everywhere a dataset is named (DESIGN.md §5.3).
 //!
-//! Each entry is a `SynthSpec` whose (N, M) match the paper exactly; rows
-//! counts for D4/D7/D8 — garbled in the paper PDF — use the canonical UCI
-//! sizes (mushroom 8124) or a domain-plausible size. Family profiles are
-//! assigned so the registry spans linear, interaction and neighborhood
-//! structure (see synth.rs header for why this matters). `scale`
-//! multiplies row counts for CI-sized runs; column counts never change.
+//! Each registry entry is a `SynthSpec` whose (N, M) match the paper
+//! exactly; rows counts for D4/D7/D8 — garbled in the paper PDF — use
+//! the canonical UCI sizes (mushroom 8124) or a domain-plausible size.
+//! Family profiles are assigned so the registry spans linear,
+//! interaction and neighborhood structure (see synth.rs header for why
+//! this matters). `scale` multiplies row counts for CI-sized runs;
+//! column counts never change.
 
+use std::path::{Path, PathBuf};
+
+use crate::data::infer::{self, CsvOptions};
 use crate::data::synth::{FamilyBias, SynthSpec};
 use crate::data::Frame;
+use crate::util::hash;
 
 /// Shape and metadata for one registry entry (Table 2 row).
 #[derive(Debug, Clone)]
@@ -100,6 +108,115 @@ pub fn all_symbols() -> Vec<&'static str> {
     vec!["D1", "D2", "D3", "D4", "D5", "D6", "D7", "D8", "D9", "D10"]
 }
 
+/// Where a named dataset comes from. Every place the system names a
+/// dataset — `--datasets`/`--data`, experiment cells, the journal —
+/// resolves the name through here, so `"D4"` and `"path:my.csv"` are
+/// interchangeable (DESIGN.md §5.3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DataSource {
+    /// a Table-2 synthetic registry symbol (`D1`..`D10`)
+    Table2 { symbol: String },
+    /// a real CSV file, ingested by [`crate::data::infer::load_csv`]
+    Csv { path: PathBuf },
+}
+
+impl DataSource {
+    /// Resolve a dataset spec string: an explicit `path:<file>` prefix,
+    /// anything ending in `.csv`, or an existing file is a CSV source;
+    /// everything else is a registry symbol (validated at load time).
+    pub fn parse(spec: &str) -> DataSource {
+        if let Some(p) = spec.strip_prefix("path:") {
+            return DataSource::Csv { path: PathBuf::from(p) };
+        }
+        let looks_like_file =
+            spec.to_ascii_lowercase().ends_with(".csv") || Path::new(spec).is_file();
+        if looks_like_file {
+            DataSource::Csv { path: PathBuf::from(spec) }
+        } else {
+            DataSource::Table2 { symbol: spec.to_string() }
+        }
+    }
+
+    /// Short display label: the registry symbol, or the file stem.
+    pub fn label(&self) -> String {
+        match self {
+            DataSource::Table2 { symbol } => symbol.clone(),
+            DataSource::Csv { path } => path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| path.display().to_string()),
+        }
+    }
+
+    pub fn is_csv(&self) -> bool {
+        matches!(self, DataSource::Csv { .. })
+    }
+
+    /// Content fingerprint for journal keying (DESIGN.md §5.2/§5.3):
+    /// registry sources are fully determined by the experiment config
+    /// (scale + seed are in the config fingerprint), so the symbol
+    /// suffices; CSV sources hash the file bytes chunk-at-a-time, so
+    /// editing the file invalidates its journaled cells. An unreadable
+    /// file fingerprints as `csv-unreadable:` — the subsequent load
+    /// will surface the real error.
+    pub fn fingerprint(&self) -> String {
+        match self {
+            DataSource::Table2 { symbol } => format!("table2:{symbol}"),
+            DataSource::Csv { path } => match hash_file(path) {
+                Ok(key) => format!("csv:{}", hash::hex128(key)),
+                Err(_) => format!("csv-unreadable:{}", path.display()),
+            },
+        }
+    }
+
+    /// Load the frame. `scale` applies to registry sources only (a real
+    /// file has exactly the rows it has — row caps are the experiment
+    /// layer's job); CSV ingestion uses the default [`CsvOptions`] and
+    /// skips the binning stage (callers that want codes use
+    /// [`DataSource::load_csv_dataset`]; the experiment layer bins its
+    /// own train split). Panics on unknown symbols and
+    /// unreadable/malformed files — this is the CLI-facing resolver,
+    /// and the error text is the interface.
+    pub fn load(&self, scale: f64, seed: u64) -> Frame {
+        match self {
+            DataSource::Table2 { symbol } => load(symbol, scale, seed),
+            DataSource::Csv { path } => {
+                infer::load_csv_frame(path, &CsvOptions::default())
+                    .unwrap_or_else(|e| panic!("ingesting {}: {e}", path.display()))
+                    .0
+            }
+        }
+    }
+
+    /// Load a CSV source in full (frame + streaming-binned codes +
+    /// ingestion report). Panics on registry sources.
+    pub fn load_csv_dataset(&self) -> infer::CsvDataset {
+        match self {
+            DataSource::Csv { path } => infer::load_csv(path, &CsvOptions::default())
+                .unwrap_or_else(|e| panic!("ingesting {}: {e}", path.display())),
+            DataSource::Table2 { symbol } => {
+                panic!("{symbol} is a registry symbol, not a CSV source")
+            }
+        }
+    }
+}
+
+/// Stream a file through the incremental fingerprinter (64 KiB chunks).
+fn hash_file(path: &Path) -> std::io::Result<(u64, u64)> {
+    use std::io::Read as _;
+    let mut f = std::fs::File::open(path)?;
+    let mut fp = hash::Fingerprinter::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        fp.update(&buf[..n]);
+    }
+    Ok(fp.finish())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +272,60 @@ mod tests {
     #[should_panic(expected = "unknown dataset symbol")]
     fn unknown_symbol_panics() {
         let _ = spec_for("D99", 1.0, 0);
+    }
+
+    #[test]
+    fn data_source_parse_routes_specs() {
+        assert_eq!(
+            DataSource::parse("D4"),
+            DataSource::Table2 { symbol: "D4".into() }
+        );
+        assert_eq!(
+            DataSource::parse("path:foo/bar.dat"),
+            DataSource::Csv { path: PathBuf::from("foo/bar.dat") }
+        );
+        assert_eq!(
+            DataSource::parse("results/my.CSV"),
+            DataSource::Csv { path: PathBuf::from("results/my.CSV") }
+        );
+        assert!(DataSource::parse("D10").fingerprint().starts_with("table2:"));
+        assert_eq!(DataSource::parse("data/adult.csv").label(), "adult");
+        assert_eq!(DataSource::parse("D2").label(), "D2");
+        assert!(DataSource::parse("x.csv").is_csv());
+        assert!(!DataSource::parse("D1").is_csv());
+    }
+
+    #[test]
+    fn data_source_csv_fingerprint_tracks_content() {
+        let dir = std::env::temp_dir().join("substrat_registry_fp");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("tiny.csv");
+        std::fs::write(&path, "a,b\n1,x\n2,y\n").unwrap();
+        let src = DataSource::parse(path.to_str().unwrap());
+        let fp1 = src.fingerprint();
+        assert!(fp1.starts_with("csv:"), "{fp1}");
+        // identical content -> identical key
+        assert_eq!(src.fingerprint(), fp1);
+        // edited content -> different key (journal invalidation)
+        std::fs::write(&path, "a,b\n1,x\n3,y\n").unwrap();
+        assert_ne!(src.fingerprint(), fp1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn data_source_loads_csv_end_to_end() {
+        let dir = std::env::temp_dir().join("substrat_registry_load");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("mini.csv");
+        std::fs::write(&path, "x,y,label\n1,5,a\n2,6,b\n3,7,a\n4,8,b\n").unwrap();
+        let src = DataSource::parse(path.to_str().unwrap());
+        let frame = src.load(1.0, 0);
+        assert_eq!(frame.shape(), (4, 3));
+        assert_eq!(frame.n_classes(), 2);
+        assert_eq!(frame.name, "mini");
+        let ds = src.load_csv_dataset();
+        assert_eq!(ds.codes.n_rows, 4);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

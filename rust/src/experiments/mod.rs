@@ -30,8 +30,8 @@ use std::path::PathBuf;
 pub use runner::TimingMode;
 
 use crate::automl::{eval::fit_on_frame, run_automl, AutoMlConfig, AutoMlResult, SearcherKind};
-use crate::baselines;
-use crate::data::{registry, split, CodeMatrix, Frame};
+use crate::baselines::{self, StrategyOutcome};
+use crate::data::{registry, registry::DataSource, split, CodeMatrix, Frame};
 use crate::measures::entropy::EntropyMeasure;
 use crate::substrat::{run_substrat, SubStratConfig, SubStratRun};
 use crate::util::pool;
@@ -55,7 +55,16 @@ pub struct ExpConfig {
     /// fine-tune budget fraction (paper: "restricted, much shorter")
     pub ft_frac: f64,
     pub searchers: Vec<SearcherKind>,
+    /// dataset specs: Table-2 symbols (`D1`..`D10`) and/or CSV paths,
+    /// resolved per cell by [`DataSource::parse`] (DESIGN.md §5.3)
     pub datasets: Vec<String>,
+    /// CSV sources only: target column (name or 0-based index;
+    /// `None` = last column). Feeds the config fingerprint — changing
+    /// the target changes what every cell computes.
+    pub csv_target: Option<String>,
+    /// CSV sources only: force the header decision (`None` = the
+    /// [`crate::data::csv::detect_header`] heuristic)
+    pub csv_header: Option<bool>,
     pub out_dir: PathBuf,
     /// total hardware thread budget for the sweep; the runner splits it
     /// into outer cell workers × inner engine threads (never threads²)
@@ -84,6 +93,8 @@ impl Default for ExpConfig {
             ft_frac: 0.2,
             searchers: vec![SearcherKind::Smbo, SearcherKind::Gp],
             datasets: registry::all_symbols().iter().map(|s| s.to_string()).collect(),
+            csv_target: None,
+            csv_header: None,
             out_dir: PathBuf::from("results"),
             threads: crate::util::pool::default_threads(),
             batch: 8,
@@ -126,6 +137,23 @@ impl RunRecord {
     }
 }
 
+/// The single mode-matching subtraction of a strategy's setup overhead
+/// (MC-24H's budget-estimation probe) from a measured cell window. The
+/// subtrahend must be measured on the same clock as the window — wall
+/// setup from a wall window, CPU setup from a CPU-proxy window — and
+/// this function is the ONLY place the subtraction happens:
+/// `SubStratRun.total_time_s` is deliberately raw (the seed subtracted
+/// there *and* in the runner, double-counting MC-24H's probe; regression
+/// `mc24h_setup_is_subtracted_exactly_once` below and the raw-total test
+/// in `substrat`).
+pub fn charged_time_s(elapsed_s: f64, outcome: &StrategyOutcome, timing: TimingMode) -> f64 {
+    let setup = match timing {
+        TimingMode::Wall => outcome.setup_s,
+        TimingMode::CpuProxy => outcome.setup_cpu_s,
+    };
+    (elapsed_s - setup).max(0.0)
+}
+
 /// Prepared per-(dataset, rep) state shared by all strategies.
 pub struct Prepared {
     pub train: Frame,
@@ -133,21 +161,105 @@ pub struct Prepared {
     pub codes: CodeMatrix,
 }
 
-/// Load + split + encode one dataset at the experiment scale, with the
-/// row floor/cap applied (the floor never exceeds the paper's own N).
-pub fn prepare(symbol: &str, cfg: &ExpConfig, rep: usize) -> Prepared {
-    let mut spec =
-        registry::spec_for(symbol, cfg.scale, cfg.seed ^ (rep as u64).wrapping_mul(0x9e37));
-    let paper_rows = registry::table2()
-        .into_iter()
-        .find(|d| d.symbol == symbol)
-        .map(|d| d.n_rows)
-        .unwrap_or(spec.n_rows);
-    spec.n_rows = spec
-        .n_rows
-        .max(cfg.min_rows.min(paper_rows))
-        .min(cfg.max_rows.max(2));
-    let frame = spec.generate();
+/// The experiment-wide CSV ingestion options (DESIGN.md §5.3).
+fn csv_opts(cfg: &ExpConfig) -> crate::data::infer::CsvOptions {
+    crate::data::infer::CsvOptions {
+        header: cfg.csv_header,
+        target: cfg.csv_target.clone(),
+        ..Default::default()
+    }
+}
+
+/// Ingest the full frame behind a CSV spec (`None` for registry
+/// symbols, which generate per rep). The runner pre-loads each distinct
+/// CSV **once** and hands it back to [`prepare_from`] per group —
+/// without this an overnight sweep re-reads and re-infers the whole
+/// file for every (rep, searcher) group.
+pub fn load_source_frame(spec: &str, cfg: &ExpConfig) -> Option<Frame> {
+    match DataSource::parse(spec) {
+        DataSource::Csv { path } => {
+            let (full, _) = crate::data::infer::load_csv_frame(&path, &csv_opts(cfg))
+                .unwrap_or_else(|e| panic!("ingesting {}: {e}", path.display()));
+            Some(full)
+        }
+        DataSource::Table2 { .. } => None,
+    }
+}
+
+/// Load + split + encode one dataset spec (a Table-2 symbol or a CSV
+/// path, resolved by [`DataSource::parse`]) at the experiment scale.
+///
+/// Registry sources scale their synthetic row counts with the row
+/// floor/cap applied (the floor never exceeds the paper's own N). A CSV
+/// source has exactly the rows the file has: `scale`/`min_rows` cannot
+/// create data, so only the `max_rows` cap applies — a deterministic
+/// seeded row subsample, varied per rep like the synth seeds are, and
+/// warned about loudly whenever it actually truncates.
+pub fn prepare(spec: &str, cfg: &ExpConfig, rep: usize) -> Prepared {
+    prepare_from(spec, cfg, rep, None)
+}
+
+/// [`prepare`] with an optionally pre-ingested full CSV frame (see
+/// [`load_source_frame`]); `preloaded` is ignored for registry specs.
+pub fn prepare_from(
+    spec: &str,
+    cfg: &ExpConfig,
+    rep: usize,
+    preloaded: Option<&Frame>,
+) -> Prepared {
+    // Cow: a pre-ingested, uncapped CSV frame is only borrowed (the
+    // runner's cache would otherwise be deep-copied per group — in
+    // CpuProxy mode concurrently)
+    let frame: std::borrow::Cow<Frame> = match DataSource::parse(spec) {
+        DataSource::Table2 { symbol } => {
+            let mut synth = registry::spec_for(
+                &symbol,
+                cfg.scale,
+                cfg.seed ^ (rep as u64).wrapping_mul(0x9e37),
+            );
+            let paper_rows = registry::table2()
+                .into_iter()
+                .find(|d| d.symbol == symbol)
+                .map(|d| d.n_rows)
+                .unwrap_or(synth.n_rows);
+            synth.n_rows = synth
+                .n_rows
+                .max(cfg.min_rows.min(paper_rows))
+                .min(cfg.max_rows.max(2));
+            std::borrow::Cow::Owned(synth.generate())
+        }
+        DataSource::Csv { path } => {
+            let full: std::borrow::Cow<Frame> = match preloaded {
+                Some(f) => std::borrow::Cow::Borrowed(f),
+                None => {
+                    let (full, _) =
+                        crate::data::infer::load_csv_frame(&path, &csv_opts(cfg))
+                            .unwrap_or_else(|e| {
+                                panic!("ingesting {}: {e}", path.display())
+                            });
+                    std::borrow::Cow::Owned(full)
+                }
+            };
+            let cap = cfg.max_rows.max(2);
+            if full.n_rows > cap {
+                // never cap silently: a D10-shaped file trimmed to the
+                // default max_rows would otherwise report results for a
+                // fraction of the data without saying so
+                eprintln!(
+                    "[prepare] {}: capping {} file rows to --max-rows {cap} \
+                     (seeded subsample; raise --max-rows to use more)",
+                    full.name, full.n_rows
+                );
+                let mut rng = Rng::new(cfg.seed ^ 0x9c1 ^ rep as u64);
+                let mut rows = rng.sample_distinct(full.n_rows, cap);
+                rows.sort_unstable();
+                let cols: Vec<u32> = (0..full.n_cols() as u32).collect();
+                std::borrow::Cow::Owned(full.subset(&rows, &cols))
+            } else {
+                full
+            }
+        }
+    };
     let mut rng = Rng::new(cfg.seed ^ 0xabc ^ rep as u64);
     let (train, test) = split::train_test_split(&frame, 0.25, &mut rng);
     let codes = CodeMatrix::from_frame(&train);
@@ -305,7 +417,9 @@ pub fn run_strategy(
         cfg.ft_frac,
         pool::resolve_threads(cfg.threads),
     );
-    let time_sub_s = run.total_time_s;
+    // total_time_s is raw wall clock; the paper window excludes the
+    // strategy's setup overhead via the single subtraction site
+    let time_sub_s = charged_time_s(run.total_time_s, &run.outcome, TimingMode::Wall);
     finish_strategy(prep, symbol, strategy_name, searcher, full, cfg, rep, &run, time_sub_s)
 }
 
@@ -424,6 +538,82 @@ mod tests {
         let b = run_full(&prep, SearcherKind::Random, &wide, 0);
         assert_eq!(a.best_desc, b.best_desc);
         assert_eq!(a.test_acc, b.test_acc);
+    }
+
+    #[test]
+    fn mc24h_setup_is_subtracted_exactly_once() {
+        // the MC-24H budget probe reports a positive setup window; the
+        // raw SubStrat total contains it, and charged_time_s removes it
+        // exactly once — record time = raw − setup (never raw − 2·setup)
+        let cfg = ExpConfig {
+            min_rows: 400,
+            max_rows: 700,
+            ..tiny_cfg()
+        };
+        let prep = prepare("D2", &cfg, 0);
+        let run = strategy_search(
+            &prep,
+            "mc-24h",
+            SearcherKind::Random,
+            &cfg,
+            0,
+            None,
+            cfg.ft_frac,
+            1,
+        );
+        let setup = run.outcome.setup_s;
+        assert!(setup > 0.0, "mc-24h must report a probe window");
+        let charged = charged_time_s(run.total_time_s, &run.outcome, TimingMode::Wall);
+        assert!(
+            (run.total_time_s - charged - setup).abs() < 1e-9,
+            "subtracted {} instead of the setup {setup}",
+            run.total_time_s - charged
+        );
+        // the CPU-proxy clock subtracts its own measurement, not wall
+        let cpu_charged = charged_time_s(1.0, &run.outcome, TimingMode::CpuProxy);
+        assert!((1.0 - cpu_charged - run.outcome.setup_cpu_s.min(1.0)).abs() < 1e-9);
+        // idempotence guard: charging an already-charged window again
+        // would shrink it further — exactly the double subtraction the
+        // seed performed
+        let double = charged_time_s(charged, &run.outcome, TimingMode::Wall);
+        assert!(double <= charged);
+    }
+
+    #[test]
+    fn prepare_resolves_csv_specs_with_row_cap() {
+        let dir = std::env::temp_dir().join("substrat_prepare_csv");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("cells.csv");
+        let mut text = String::from("x,z,label\n");
+        for i in 0..120 {
+            text.push_str(&format!(
+                "{},{},{}\n",
+                i as f64 / 7.0,
+                ["u", "v"][i % 2],
+                ["p", "q"][(i / 3) % 2]
+            ));
+        }
+        std::fs::write(&path, text).unwrap();
+        let cfg = ExpConfig {
+            max_rows: 60,
+            ..tiny_cfg()
+        };
+        let prep = prepare(path.to_str().unwrap(), &cfg, 0);
+        // 120 file rows, capped to 60, then 25% held out
+        assert_eq!(prep.train.n_rows + prep.test.n_rows, 60);
+        assert_eq!(prep.train.n_cols(), 3);
+        assert_eq!(prep.codes.n_rows, prep.train.n_rows);
+        // deterministic per (seed, rep)
+        let again = prepare(path.to_str().unwrap(), &cfg, 0);
+        assert_eq!(prep.train.columns[0].values, again.train.columns[0].values);
+        // an uncapped prepare keeps every file row
+        let roomy = ExpConfig {
+            max_rows: 100_000,
+            ..tiny_cfg()
+        };
+        let all = prepare(path.to_str().unwrap(), &roomy, 0);
+        assert_eq!(all.train.n_rows + all.test.n_rows, 120);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

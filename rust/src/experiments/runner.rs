@@ -38,9 +38,12 @@ use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 use crate::automl::SearcherKind;
+use crate::data::registry::DataSource;
+use crate::data::Frame;
 use crate::experiments::fig4::{m_grid, n_grid};
 use crate::experiments::{
-    finish_full, finish_strategy, full_search, prepare, strategy_search, ExpConfig, RunRecord,
+    charged_time_s, finish_full, finish_strategy, full_search, load_source_frame, prepare_from,
+    strategy_search, ExpConfig, RunRecord,
 };
 use crate::gendst::default_dst_size;
 use crate::util::hash;
@@ -194,11 +197,17 @@ impl Cell {
         self.label.as_deref().unwrap_or(&self.strategy)
     }
 
-    /// 128-bit journal key over (config fingerprint, cell coordinates).
-    pub fn fingerprint(&self, cfg: &ExpConfig, cfg_fp: &str) -> String {
+    /// 128-bit journal key over (config fingerprint, data-source
+    /// fingerprint, cell coordinates). `source_fp` is
+    /// [`DataSource::fingerprint`] for the cell's symbol — a content
+    /// hash for CSV sources, so editing the file invalidates its
+    /// journaled cells while every other dataset's cells resume
+    /// (DESIGN.md §5.3); the runner computes it once per distinct
+    /// symbol, not per cell.
+    pub fn fingerprint(&self, cfg: &ExpConfig, cfg_fp: &str, source_fp: &str) -> String {
         let ft = self.ft_frac.unwrap_or(cfg.ft_frac);
         let canon = format!(
-            "{cfg_fp}|{}|{}|{}|rep{}|{}|ft{}|{}",
+            "{cfg_fp}|{}|{source_fp}|{}|{}|rep{}|{}|ft{}|{}",
             self.symbol,
             self.strategy,
             self.searcher.name(),
@@ -212,12 +221,14 @@ impl Cell {
 }
 
 /// Fingerprint of every `ExpConfig` knob that changes what a cell
-/// *computes* (scale, budgets, seed, batch schedule, timing mode).
-/// Thread counts are deliberately excluded: they are pure speed, and
-/// records must survive a re-run on different hardware.
+/// *computes* (scale, budgets, seed, batch schedule, timing mode, and
+/// the CSV ingestion knobs — a different target column is a different
+/// prediction task). Thread counts are deliberately excluded: they are
+/// pure speed, and records must survive a re-run on different
+/// hardware.
 pub fn config_fingerprint(cfg: &ExpConfig) -> String {
     let canon = format!(
-        "exp-v1|scale{}|min{}|max{}|evals{}|ft{}|batch{}|seed{}|timing{}",
+        "exp-v1|scale{}|min{}|max{}|evals{}|ft{}|batch{}|seed{}|timing{}|tgt{:?}|hdr{:?}",
         cfg.scale,
         cfg.min_rows,
         cfg.max_rows,
@@ -226,6 +237,8 @@ pub fn config_fingerprint(cfg: &ExpConfig) -> String {
         cfg.batch.max(1),
         cfg.seed,
         cfg.timing.name(),
+        cfg.csv_target,
+        cfg.csv_header,
     );
     hash::hex128(hash::fingerprint_bytes(canon.as_bytes()))
 }
@@ -430,7 +443,19 @@ impl<'a> Runner<'a> {
     pub fn run(&self, cells: &[Cell]) -> Vec<CellOutcome> {
         let cfg = self.cfg;
         let cfg_fp = config_fingerprint(cfg);
-        let fps: Vec<String> = cells.iter().map(|c| c.fingerprint(cfg, &cfg_fp)).collect();
+        // one DataSource fingerprint per distinct symbol (CSV sources
+        // hash their file content; hashing once per cell would re-read
+        // the file per cell for nothing)
+        let mut source_fps: HashMap<&str, String> = HashMap::new();
+        for cell in cells {
+            source_fps
+                .entry(cell.symbol.as_str())
+                .or_insert_with(|| DataSource::parse(&cell.symbol).fingerprint());
+        }
+        let fps: Vec<String> = cells
+            .iter()
+            .map(|c| c.fingerprint(cfg, &cfg_fp, &source_fps[c.symbol.as_str()]))
+            .collect();
         let (journal, done) = match &self.journal_path {
             Some(path) => {
                 let (j, d) = Journal::open(path, &cfg_fp);
@@ -471,6 +496,19 @@ impl<'a> Runner<'a> {
         let (outer, inner) = cfg.timing.split_budget(total_budget, groups.len());
         let n_groups = groups.len();
 
+        // ingest each distinct CSV source once, up front — groups share
+        // the full frame instead of re-reading the file per
+        // (rep, searcher) group (prepare still subsamples/splits per
+        // rep; ingestion sits outside every timed window either way)
+        let mut csv_frames: HashMap<String, Frame> = HashMap::new();
+        for g in &groups {
+            if !csv_frames.contains_key(&g.symbol) {
+                if let Some(f) = load_source_frame(&g.symbol, cfg) {
+                    csv_frames.insert(g.symbol.clone(), f);
+                }
+            }
+        }
+
         let fresh: Vec<Vec<(usize, RunRecord)>> =
             pool::parallel_map(&groups, outer, |gi, g| {
                 eprintln!(
@@ -485,7 +523,7 @@ impl<'a> Runner<'a> {
                     outer,
                     inner,
                 );
-                let prep = prepare(&g.symbol, cfg, g.rep);
+                let prep = prepare_from(&g.symbol, cfg, g.rep, csv_frames.get(&g.symbol));
                 let (res, t_full) =
                     measure(cfg.timing, || full_search(&prep, g.searcher, cfg, g.rep, inner));
                 let full = finish_full(&prep, &res, cfg, g.rep, t_full);
@@ -508,14 +546,12 @@ impl<'a> Runner<'a> {
                             )
                         });
                         // the strategy's setup overhead sits outside the
-                        // paper's window; subtract the measurement taken
-                        // on the same clock as `secs` (wall vs CPU —
-                        // mixing them over-corrects under contention)
-                        let setup = match cfg.timing {
-                            TimingMode::Wall => run.outcome.setup_s,
-                            TimingMode::CpuProxy => run.outcome.setup_cpu_s,
-                        };
-                        let time_sub = (secs - setup).max(0.0);
+                        // paper's window; charged_time_s is the single
+                        // subtraction site and matches the clock of
+                        // `secs` (run.total_time_s stays raw — see the
+                        // mc24h_setup_is_subtracted_exactly_once
+                        // regression)
+                        let time_sub = charged_time_s(secs, &run.outcome, cfg.timing);
                         let rec = finish_strategy(
                             &prep,
                             &g.symbol,
@@ -657,10 +693,11 @@ mod tests {
             base.clone().with_ft_frac(0.11),
             base.clone().with_label("variant"),
         ];
+        let src = "table2:D2";
         for v in &variants {
             assert_ne!(
-                base.fingerprint(&cfg, &fp),
-                v.fingerprint(&cfg, &fp),
+                base.fingerprint(&cfg, &fp, src),
+                v.fingerprint(&cfg, &fp, src),
                 "{v:?} collided with the base cell"
             );
         }
@@ -669,7 +706,55 @@ mod tests {
         other.full_evals += 1;
         let ofp = config_fingerprint(&other);
         assert_ne!(fp, ofp);
-        assert_ne!(base.fingerprint(&cfg, &fp), base.fingerprint(&other, &ofp));
+        assert_ne!(base.fingerprint(&cfg, &fp, src), base.fingerprint(&other, &ofp, src));
+        // and the data-source fingerprint feeds in: an edited CSV flips
+        // the cell key even when every coordinate matches
+        assert_ne!(
+            base.fingerprint(&cfg, &fp, "csv:aaaa"),
+            base.fingerprint(&cfg, &fp, "csv:bbbb")
+        );
+    }
+
+    #[test]
+    fn edited_csv_invalidates_only_its_own_journal_cells() {
+        // two sources in one sweep: a registry symbol and a CSV file.
+        // Editing the file must re-run the file's cells and resume the
+        // symbol's cells untouched.
+        let mut cfg = tiny_cfg("csvinval");
+        let _ = std::fs::remove_dir_all(&cfg.out_dir);
+        let _ = std::fs::create_dir_all(&cfg.out_dir);
+        let csv = cfg.out_dir.join("mini.csv");
+        let mut text = String::from("x,z,label\n");
+        for i in 0..90 {
+            text.push_str(&format!(
+                "{},{},{}\n",
+                (i * 11 % 17) as f64 / 3.0,
+                ["u", "v", "w"][i % 3],
+                ["p", "q"][(i / 2) % 2]
+            ));
+        }
+        std::fs::write(&csv, &text).unwrap();
+        cfg.datasets = vec!["D2".into(), csv.to_string_lossy().into_owned()];
+        let cells = strategy_grid(&cfg, &["ig-rand"]);
+        assert_eq!(cells.len(), 2);
+        let first = Runner::new(&cfg).run(&cells);
+        assert!(first.iter().all(|o| !o.resumed));
+        // untouched re-run: everything resumes
+        let second = Runner::new(&cfg).run(&cells);
+        assert!(second.iter().all(|o| o.resumed));
+        // edit the file (one appended row): its cell re-runs, the
+        // registry cell resumes
+        std::fs::write(&csv, format!("{text}99,u,p\n")).unwrap();
+        let third = Runner::new(&cfg).run(&cells);
+        for o in &third {
+            let is_csv = o.cell.symbol.ends_with(".csv");
+            assert_eq!(
+                o.resumed, !is_csv,
+                "{}: resumed={} after the file edit",
+                o.cell.symbol, o.resumed
+            );
+        }
+        let _ = std::fs::remove_dir_all(&cfg.out_dir);
     }
 
     #[test]

@@ -11,6 +11,14 @@
 //! Common flags: --scale 0.05 --reps 3 --evals 16 --searchers smbo,gp
 //!               --datasets D1,D2 --out results --threads N --seed S
 //!
+//! Real datasets (DESIGN.md §5.3): anywhere a dataset is named, a CSV
+//! path works — `--data my.csv` (sugar for `--dataset`/`--datasets`),
+//! `--datasets D1,path:my.csv`, or any spec ending in `.csv`. Ingestion
+//! infers column types, imputes missing values, dictionary-encodes
+//! categoricals and streams the quantile binning; `--target <name|idx>`
+//! picks the label column (default: last), `--header yes|no` overrides
+//! the header heuristic.
+//!
 //! Scheduler flags (exp; see DESIGN.md §5.2):
 //!   --timing wall|cpu   wall = serial cells, exclusive inner threads —
 //!                       the only mode whose Time-Reduction is
@@ -26,8 +34,11 @@ use std::path::PathBuf;
 
 use substrat::automl::{run_automl, AutoMlConfig, SearcherKind};
 use substrat::baselines;
-use substrat::data::{registry, CodeMatrix};
-use substrat::experiments::{fig2, fig3, fig4, fig5, table4, ExpConfig, TimingMode};
+use substrat::data::infer::{parse_header_flag, CsvOptions};
+use substrat::data::{registry, CodeMatrix, DataSource, Frame};
+use substrat::experiments::{
+    charged_time_s, fig2, fig3, fig4, fig5, table4, ExpConfig, TimingMode,
+};
 use substrat::gendst::{self, GenDstConfig};
 use substrat::measures::{self, entropy::EntropyMeasure};
 use substrat::runtime::{self, entropy_exec::EntropyExec};
@@ -37,6 +48,11 @@ use substrat::util::rng::Rng;
 
 fn exp_config(args: &Args) -> ExpConfig {
     let defaults = ExpConfig::default();
+    // --data <path> is sugar for a single-dataset sweep on a CSV file
+    let datasets = match args.str_opt("data") {
+        Some(path) => vec![path.to_string()],
+        None => args.list_or("datasets", &registry::all_symbols()),
+    };
     ExpConfig {
         scale: args.f64_or("scale", defaults.scale),
         min_rows: args.usize_or("min-rows", defaults.min_rows),
@@ -49,13 +65,70 @@ fn exp_config(args: &Args) -> ExpConfig {
             .iter()
             .map(|s| SearcherKind::by_name(s))
             .collect(),
-        datasets: args.list_or("datasets", &registry::all_symbols()),
+        datasets,
+        csv_target: args.str_opt("target").map(str::to_string),
+        csv_header: args.str_opt("header").map(parse_header_flag),
         out_dir: PathBuf::from(args.str_or("out", "results")),
         threads: args.usize_or("threads", defaults.threads),
         batch: args.usize_or("batch", defaults.batch),
         timing: TimingMode::by_name(&args.str_or("timing", defaults.timing.name())),
         journal: !args.flag("no-journal"),
         seed: args.u64_or("seed", defaults.seed),
+    }
+}
+
+/// Resolve `--data <csv>` / `--dataset <symbol|csv>` into a loaded
+/// frame, plus its code matrix when the subcommand needs one
+/// (`with_codes = false` skips the binning stage entirely — the
+/// `automl` subcommand never touches codes). CSV sources go through
+/// the full ingestion pipeline (type inference, missing values,
+/// streaming binning) with `--target`/`--header` honored and the
+/// ingestion report printed; registry symbols generate at `--scale`.
+fn load_named_dataset(args: &Args, with_codes: bool) -> (String, Frame, Option<CodeMatrix>) {
+    let spec = args
+        .str_opt("data")
+        .map(str::to_string)
+        .unwrap_or_else(|| args.str_or("dataset", "D2"));
+    let source = DataSource::parse(&spec);
+    match &source {
+        DataSource::Csv { path } => {
+            let opts = CsvOptions {
+                header: args.str_opt("header").map(parse_header_flag),
+                target: args.str_opt("target").map(str::to_string),
+                ..Default::default()
+            };
+            let (frame, codes, summary) = if with_codes {
+                let ds = substrat::data::infer::load_csv(path, &opts)
+                    .unwrap_or_else(|e| panic!("ingesting {}: {e}", path.display()));
+                (ds.frame, Some(ds.codes), ds.summary)
+            } else {
+                let (frame, summary) = substrat::data::infer::load_csv_frame(path, &opts)
+                    .unwrap_or_else(|e| panic!("ingesting {}: {e}", path.display()));
+                (frame, None, summary)
+            };
+            let s = &summary;
+            let n_cat = s.columns.iter().filter(|c| c.categorical).count();
+            let missing: usize = s.columns.iter().map(|c| c.missing).sum();
+            println!(
+                "[ingest] {}: {} rows x {} cols ({n_cat} categorical), target={:?}, \
+                 {} classes, {missing} missing field(s), {} unlabeled row(s) \
+                 dropped, header={}",
+                source.label(),
+                s.n_rows,
+                s.columns.len(),
+                s.columns[s.target].name,
+                frame.n_classes(),
+                s.dropped_rows,
+                s.header,
+            );
+            (source.label(), frame, codes)
+        }
+        DataSource::Table2 { symbol } => {
+            let scale = args.f64_or("scale", 0.05);
+            let f = registry::load(symbol, scale, args.u64_or("seed", 0));
+            let codes = with_codes.then(|| CodeMatrix::from_frame(&f));
+            (symbol.clone(), f, codes)
+        }
     }
 }
 
@@ -97,11 +170,9 @@ fn cmd_check() {
 }
 
 fn cmd_gendst(args: &Args) {
-    let symbol = args.str_or("dataset", "D2");
-    let scale = args.f64_or("scale", 0.05);
     let measure = measures::by_name(&args.str_or("measure", "entropy"));
-    let f = registry::load(&symbol, scale, args.u64_or("seed", 0));
-    let codes = CodeMatrix::from_frame(&f);
+    let (symbol, f, codes) = load_named_dataset(args, true);
+    let codes = codes.expect("codes requested");
     let (n, m) = gendst::default_dst_size(f.n_rows, f.n_cols());
     let n = args.usize_or("n", n);
     let m = args.usize_or("m", m);
@@ -127,9 +198,7 @@ fn cmd_gendst(args: &Args) {
 }
 
 fn cmd_automl(args: &Args) {
-    let symbol = args.str_or("dataset", "D2");
-    let scale = args.f64_or("scale", 0.05);
-    let f = registry::load(&symbol, scale, args.u64_or("seed", 0));
+    let (symbol, f, _) = load_named_dataset(args, false);
     let searcher = SearcherKind::by_name(&args.str_or("searcher", "smbo"));
     let mut cfg = AutoMlConfig::new(searcher, args.usize_or("evals", 16), args.u64_or("seed", 0));
     cfg.policy.threads = args.usize_or("threads", 0);
@@ -153,11 +222,9 @@ fn cmd_automl(args: &Args) {
 }
 
 fn cmd_run(args: &Args) {
-    let symbol = args.str_or("dataset", "D2");
-    let scale = args.f64_or("scale", 0.05);
     let strategy_name = args.str_or("strategy", "gendst");
-    let f = registry::load(&symbol, scale, args.u64_or("seed", 0));
-    let codes = CodeMatrix::from_frame(&f);
+    let (_symbol, f, codes) = load_named_dataset(args, true);
+    let codes = codes.expect("codes requested");
     let strategy = baselines::by_name(&strategy_name);
     let searcher = SearcherKind::by_name(&args.str_or("searcher", "smbo"));
     let automl = AutoMlConfig::new(searcher, args.usize_or("evals", 16), args.u64_or("seed", 0));
@@ -188,7 +255,11 @@ fn cmd_run(args: &Args) {
             ft.elapsed_s
         );
     }
-    println!("total {:.2}s", run.total_time_s);
+    println!(
+        "total {:.2}s (setup excluded: {:.2}s)",
+        charged_time_s(run.total_time_s, &run.outcome, TimingMode::Wall),
+        run.outcome.setup_s
+    );
 }
 
 fn cmd_exp(args: &Args) {

@@ -37,15 +37,26 @@ const STREAM_B: u64 = 0xA5A5_5A5A_C3C3_3C3C;
 /// (DESIGN.md §5.1): equal word sequences ⇒ equal keys, and distinct
 /// sequences collide only with ~2^-128 probability.
 pub fn fingerprint(words: &[u64]) -> (u64, u64) {
-    // arbitrary distinct non-zero starting points (π and e fractions)
-    let mut a = 0x243F_6A88_85A3_08D3u64;
-    let mut b = 0x1319_8A2E_0370_7344u64;
+    let (mut a, mut b) = (FP_A0, FP_B0);
     for &w in words {
-        a = mix64(a ^ w);
-        b = mix64(b.rotate_left(11) ^ w ^ STREAM_B);
+        fp_fold(&mut a, &mut b, w);
     }
     let n = words.len() as u64;
     (mix64(a ^ n), mix64(b ^ mix64(n)))
+}
+
+/// The two accumulator starting points of [`fingerprint`] (π and e
+/// fractions — arbitrary, distinct, non-zero).
+const FP_A0: u64 = 0x243F_6A88_85A3_08D3;
+const FP_B0: u64 = 0x1319_8A2E_0370_7344;
+
+/// Length-tag constant of the byte-level fingerprint ("BYTES").
+const BYTES_TAG: u64 = 0x4259_5445_5300_0003;
+
+#[inline]
+fn fp_fold(a: &mut u64, b: &mut u64, w: u64) {
+    *a = mix64(*a ^ w);
+    *b = mix64(b.rotate_left(11) ^ w ^ STREAM_B);
 }
 
 /// Order-dependent 128-bit fingerprint of a byte string — [`fingerprint`]
@@ -53,18 +64,100 @@ pub fn fingerprint(words: &[u64]) -> (u64, u64) {
 /// words, with the byte length folded in so zero-padding of the final
 /// word cannot collide with genuine trailing zero bytes. The experiment
 /// runner keys its results journal with this over a canonical cell
-/// description (DESIGN.md §5.2).
+/// description (DESIGN.md §5.2). Delegates to [`Fingerprinter`], the
+/// incremental form the data-ingestion layer streams whole dataset
+/// files through (DESIGN.md §5.3) — the two are bit-identical by
+/// construction and by test.
 pub fn fingerprint_bytes(bytes: &[u8]) -> (u64, u64) {
-    let mut words: Vec<u64> = bytes
-        .chunks(8)
-        .map(|c| {
+    let mut fp = Fingerprinter::new();
+    fp.update(bytes);
+    fp.finish()
+}
+
+/// Incremental, bounded-memory form of [`fingerprint_bytes`]: any
+/// chunking of the same byte stream through [`Fingerprinter::update`]
+/// yields the identical 128-bit key from [`Fingerprinter::finish`]
+/// (property-tested below). Used to fingerprint user-supplied CSV files
+/// chunk-at-a-time for per-file journal invalidation without holding
+/// the file in memory.
+#[derive(Debug, Clone)]
+pub struct Fingerprinter {
+    a: u64,
+    b: u64,
+    /// words folded so far (drives the finalizer, like `words.len()`)
+    words: u64,
+    /// total bytes consumed (folded as the trailing length tag)
+    len: u64,
+    /// partial trailing word: up to 7 bytes waiting for completion
+    carry: [u8; 8],
+    carry_len: usize,
+}
+
+impl Default for Fingerprinter {
+    fn default() -> Self {
+        Fingerprinter::new()
+    }
+}
+
+impl Fingerprinter {
+    /// Fresh accumulator; finishing it immediately equals
+    /// `fingerprint_bytes(b"")`.
+    pub fn new() -> Fingerprinter {
+        Fingerprinter {
+            a: FP_A0,
+            b: FP_B0,
+            words: 0,
+            len: 0,
+            carry: [0u8; 8],
+            carry_len: 0,
+        }
+    }
+
+    #[inline]
+    fn fold_word(&mut self, w: u64) {
+        fp_fold(&mut self.a, &mut self.b, w);
+        self.words += 1;
+    }
+
+    /// Absorb the next chunk of the byte stream.
+    pub fn update(&mut self, mut bytes: &[u8]) {
+        self.len += bytes.len() as u64;
+        // complete a pending partial word first
+        if self.carry_len > 0 {
+            let take = (8 - self.carry_len).min(bytes.len());
+            self.carry[self.carry_len..self.carry_len + take].copy_from_slice(&bytes[..take]);
+            self.carry_len += take;
+            bytes = &bytes[take..];
+            if self.carry_len == 8 {
+                let w = u64::from_le_bytes(self.carry);
+                self.fold_word(w);
+                self.carry_len = 0;
+            }
+        }
+        let mut chunks = bytes.chunks_exact(8);
+        for c in chunks.by_ref() {
             let mut buf = [0u8; 8];
-            buf[..c.len()].copy_from_slice(c);
-            u64::from_le_bytes(buf)
-        })
-        .collect();
-    words.push(mix64(bytes.len() as u64 ^ 0x4259_5445_5300_0003)); // "BYTES"
-    fingerprint(&words)
+            buf.copy_from_slice(c);
+            self.fold_word(u64::from_le_bytes(buf));
+        }
+        let rem = chunks.remainder();
+        self.carry[..rem.len()].copy_from_slice(rem);
+        self.carry_len = rem.len();
+    }
+
+    /// Zero-pad the trailing partial word, fold the byte-length tag (so
+    /// padding cannot collide with genuine trailing zeros) and return
+    /// the key.
+    pub fn finish(mut self) -> (u64, u64) {
+        if self.carry_len > 0 {
+            self.carry[self.carry_len..].fill(0);
+            let w = u64::from_le_bytes(self.carry);
+            self.fold_word(w);
+        }
+        self.fold_word(mix64(self.len ^ BYTES_TAG));
+        let n = self.words;
+        (mix64(self.a ^ n), mix64(self.b ^ mix64(n)))
+    }
 }
 
 /// Render a 128-bit key as 32 lowercase hex chars (journal keys).
@@ -145,6 +238,31 @@ mod tests {
         let hex = hex128(fingerprint_bytes(b"x"));
         assert_eq!(hex.len(), 32);
         assert!(hex.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn incremental_fingerprinter_matches_one_shot_across_chunkings() {
+        // any chunking — including 0-byte updates and splits inside a
+        // word — must reproduce the one-shot key bit-exactly
+        let mut rng = Rng::new(93);
+        for _ in 0..200 {
+            let len = rng.usize_below(200);
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.u64_below(256)) as u8).collect();
+            let want = fingerprint_bytes(&bytes);
+            let mut fp = Fingerprinter::new();
+            let mut i = 0;
+            while i < bytes.len() {
+                if rng.usize_below(10) == 0 {
+                    fp.update(&[]); // zero-length updates are no-ops
+                }
+                let k = 1 + rng.usize_below(16); // 1..=16: splits land inside words
+                let j = (i + k).min(bytes.len());
+                fp.update(&bytes[i..j]);
+                i = j;
+            }
+            assert_eq!(fp.finish(), want, "chunking changed the key (len {len})");
+        }
+        assert_eq!(Fingerprinter::new().finish(), fingerprint_bytes(b""));
     }
 
     #[test]

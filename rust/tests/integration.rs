@@ -226,6 +226,62 @@ fn substrat_flow_beats_full_automl_on_time() {
     assert!(run.automl_sub.best_cv > 0.0);
 }
 
+/// The committed real-CSV fixture (mixed types, quoted separators,
+/// missing values; see tests/fixtures/).
+fn fixture_path() -> String {
+    format!("{}/tests/fixtures/bank_mini.csv", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn csv_fixture_ingests_with_streaming_binning_bit_identical() {
+    use substrat::data::DataSource;
+    let src = DataSource::parse(&fixture_path());
+    assert!(src.is_csv());
+    let ds = src.load_csv_dataset();
+    assert_eq!(ds.frame.shape(), (320, 5));
+    assert_eq!(ds.frame.n_classes(), 2);
+    // age/income/score numeric, city/label categorical
+    let cats: Vec<bool> = ds.frame.columns.iter().map(|c| c.categorical).collect();
+    assert_eq!(cats, vec![false, false, true, false, true]);
+    assert!(ds.summary.columns[1].missing > 0, "fixture must exercise missing values");
+    // the streaming-binned codes are bit-identical to the in-memory path
+    let reference = CodeMatrix::from_frame(&ds.frame);
+    for c in 0..ds.frame.n_cols() {
+        assert_eq!(ds.codes.column(c), reference.column(c), "column {c}");
+    }
+    assert_eq!(ds.codes.cardinality, reference.cardinality);
+}
+
+#[test]
+fn substrat_end_to_end_on_real_csv_fixture() {
+    // the acceptance flow: the fixture runs the identical harness a
+    // registry symbol does — prepare (via DataSource), Full-AutoML
+    // reference, SubStrat cell, journaled resume
+    use substrat::experiments::runner::{strategy_grid, Runner};
+    use substrat::experiments::ExpConfig;
+    let cfg = ExpConfig {
+        reps: 1,
+        full_evals: 4,
+        searchers: vec![SearcherKind::Random],
+        datasets: vec![fixture_path()],
+        threads: 1,
+        out_dir: std::env::temp_dir().join("substrat_it_csv"),
+        ..Default::default()
+    };
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    let cells = strategy_grid(&cfg, &["gendst"]);
+    let out = Runner::new(&cfg).run(&cells);
+    assert_eq!(out.len(), 1);
+    let rec = &out[0].record;
+    assert!(rec.acc_full > 0.55, "full AutoML below chance on the fixture: {}", rec.acc_full);
+    assert!(rec.acc_sub > 0.55, "SubStrat below chance on the fixture: {}", rec.acc_sub);
+    assert!(rec.time_full_s > 0.0 && rec.time_sub_s > 0.0);
+    // the journal resumes the cell, keyed by the file's content hash
+    let again = Runner::new(&cfg).run(&cells);
+    assert!(again[0].resumed, "csv cell did not resume from the journal");
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+}
+
 #[test]
 fn every_table4_strategy_completes_one_cell() {
     use substrat::experiments::{prepare, run_full, run_strategy, ExpConfig};
