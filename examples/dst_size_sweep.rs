@@ -23,20 +23,35 @@ fn main() {
     let symbol = cfg.datasets[0].clone();
     let prep = prepare(&symbol, &cfg, 0);
     let full = run_full(&prep, SearcherKind::Smbo, &cfg, 0);
-    println!("{symbol} train {:?}, Full-AutoML acc={:.4} t={:.1}s", prep.train.shape(), full.test_acc, full.elapsed_s);
+    println!(
+        "{symbol} train {:?}, Full-AutoML acc={:.4} t={:.1}s",
+        prep.train.shape(),
+        full.test_acc,
+        full.elapsed_s
+    );
     let (_, m0) = substrat::gendst::default_dst_size(prep.train.n_rows, prep.train.n_cols());
 
     println!("\n-- n sweep (m=0.25M) --");
     println!("{:<12} {:>8} {:>10} {:>10}", "n", "rows", "rel_acc", "time_red");
     for (label, n) in n_grid(prep.train.n_rows) {
-        let rec = run_strategy(&prep, &symbol, "gendst", SearcherKind::Smbo, &full, &cfg, 0, Some((n, m0)));
-        println!("{label:<12} {n:>8} {:>10.4} {:>10.4}", rec.relative_accuracy(), rec.time_reduction());
+        let size = Some((n, m0));
+        let rec = run_strategy(&prep, &symbol, "gendst", SearcherKind::Smbo, &full, &cfg, 0, size);
+        println!(
+            "{label:<12} {n:>8} {:>10.4} {:>10.4}",
+            rec.relative_accuracy(),
+            rec.time_reduction()
+        );
     }
     let (n0, _) = substrat::gendst::default_dst_size(prep.train.n_rows, prep.train.n_cols());
     println!("\n-- m sweep (n=sqrtN) --");
     println!("{:<12} {:>8} {:>10} {:>10}", "m", "cols", "rel_acc", "time_red");
     for (label, m) in m_grid(prep.train.n_cols()) {
-        let rec = run_strategy(&prep, &symbol, "gendst", SearcherKind::Smbo, &full, &cfg, 0, Some((n0, m)));
-        println!("{label:<12} {m:>8} {:>10.4} {:>10.4}", rec.relative_accuracy(), rec.time_reduction());
+        let size = Some((n0, m));
+        let rec = run_strategy(&prep, &symbol, "gendst", SearcherKind::Smbo, &full, &cfg, 0, size);
+        println!(
+            "{label:<12} {m:>8} {:>10.4} {:>10.4}",
+            rec.relative_accuracy(),
+            rec.time_reduction()
+        );
     }
 }

@@ -59,7 +59,10 @@ fn main() {
     let cols: Vec<u32> = (0..probe.train.n_cols() as u32).collect();
     let native = substrat::measures::entropy::subset_entropy(&codes, &rows, &cols);
     let xla = exec.subset_entropy(&codes, &rows, &cols).expect("entropy artifact");
-    println!("[layers] entropy native={native:.6} pallas/pjrt={xla:.6} |diff|={:.1e}", (native - xla).abs());
+    println!(
+        "[layers] entropy native={native:.6} pallas/pjrt={xla:.6} |diff|={:.1e}",
+        (native - xla).abs()
+    );
     assert!((native - xla).abs() < 1e-4);
 
     // the (searcher × rep) sweep goes through the shared cell scheduler:
@@ -71,7 +74,8 @@ fn main() {
     for o in Runner::new(&cfg).run(&cells) {
         let rec = &o.record;
         println!(
-            "[{}/rep{}{}] full: acc={:.4} t={:.1}s  substrat: acc={:.4} t={:.1}s ({})  -> TR={:.1}% RA={:.1}%",
+            "[{}/rep{}{}] full: acc={:.4} t={:.1}s  substrat: acc={:.4} t={:.1}s ({})  \
+             -> TR={:.1}% RA={:.1}%",
             rec.searcher, rec.rep, if o.resumed { " journal" } else { "" },
             rec.acc_full, rec.time_full_s,
             rec.acc_sub, rec.time_sub_s, rec.final_desc,
@@ -81,7 +85,8 @@ fn main() {
         ras.push(rec.relative_accuracy());
     }
     println!(
-        "\nheadline ({symbol}, scale {}): time-reduction {:.1}% +- {:.1}%, relative-accuracy {:.1}% +- {:.1}%",
+        "\nheadline ({symbol}, scale {}): time-reduction {:.1}% +- {:.1}%, \
+         relative-accuracy {:.1}% +- {:.1}%",
         cfg.scale,
         100.0 * stats::mean(&trs), 100.0 * stats::std(&trs),
         100.0 * stats::mean(&ras), 100.0 * stats::std(&ras)

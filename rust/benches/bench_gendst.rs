@@ -4,7 +4,11 @@
 //! (`NaiveNative`, the seed's behavior) against the incremental +
 //! parallel engine (`Incremental`) on identical inputs and seeds; the
 //! two backends return identical results, so the delta is pure engine
-//! speed (histogram reuse + loss memo + parallel fills).
+//! speed (histogram reuse + loss memo + parallel fills). A second
+//! section compares the single-population engine against the island
+//! model (DESIGN.md §4.6) — the islands parallelize the generation
+//! loop itself, not just the fills — with the single-island run
+//! asserted bit-equal to the plain engine's winner.
 
 use substrat::data::{registry, CodeMatrix};
 use substrat::gendst::fitness::FitnessBackend;
@@ -36,5 +40,53 @@ fn main() {
             res.fitness_evals, res.memo_hits, res.generations_run
         );
     }
+
+    // islands vs single population (same total φ, same seed): the
+    // island engine's win is wall clock — the generation loop itself
+    // fans out — while `islands = 1` must reproduce the plain engine's
+    // winner exactly (PR 5 acceptance criterion)
+    let f = registry::load("D3", 1.0, 7);
+    let codes = CodeMatrix::from_frame(&f);
+    let (n, m) = default_dst_size(f.n_rows, f.n_cols());
+    let shape = format!("D3 {}x{} -> ({n},{m})", f.n_rows, f.n_cols());
+    for islands in [1usize, 4] {
+        let cfg = GenDstConfig { islands, seed: 1, ..Default::default() };
+        b.bench(&format!("gen_dst islands={islands}   {shape}"), || {
+            black_box(gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg));
+        });
+    }
+    // non-vacuous single-island check at paper scale: the islands=1
+    // engine must land on the same winner as a single-population run
+    // through the independent from-scratch reference backend (the
+    // engine-shape bit-identity against the pre-island loop itself is
+    // property-tested in gendst::tests)
+    let reference = gen_dst(
+        &f,
+        &codes,
+        &EntropyMeasure,
+        n,
+        m,
+        &GenDstConfig {
+            backend: FitnessBackend::NaiveNative,
+            islands: 1,
+            seed: 1,
+            ..Default::default()
+        },
+    );
+    let single = gen_dst(
+        &f,
+        &codes,
+        &EntropyMeasure,
+        n,
+        m,
+        &GenDstConfig { islands: 1, seed: 1, ..Default::default() },
+    );
+    assert_eq!(
+        single.dst, reference.dst,
+        "islands=1 must reproduce the single-population reference winner"
+    );
+    assert!((single.loss - reference.loss).abs() <= 1e-9);
+    println!("  [islands=1 == single-population reference winner: verified]");
+
     println!("\n{}", b.markdown());
 }

@@ -172,12 +172,31 @@ impl Default for EvalPolicy {
 /// keeps them apart.
 pub type DatasetKey = (u64, u64);
 
+thread_local! {
+    /// fingerprint passes taken on this thread (see [`frame_key_passes`])
+    static FRAME_KEY_PASSES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// How many [`frame_key`] content passes this thread has paid so far.
+/// Each pass is a full O(rows × cols) scan inside the caller's timed
+/// window, so regressions assert on deltas of this counter — e.g. one
+/// SubStrat run must fingerprint the subset once and the full frame
+/// once, never the full frame twice (the PR 4 follow-up where
+/// `run_substrat` hashed the full frame for `seed_score` and again for
+/// the fine-tune run).
+pub fn frame_key_passes() -> u64 {
+    FRAME_KEY_PASSES.with(|c| c.get())
+}
+
 /// Content fingerprint of a frame: shape, target index, and every
 /// column's kind and bit-exact values (name excluded — a subset named
 /// `"D2[sub]"` with identical content scores identically). Streamed
 /// through the incremental hasher, so cost is one linear pass and no
-/// allocation; `run_automl_with_engine` computes it once per run.
+/// allocation; `run_automl_with_engine` computes it once per run, and
+/// `run_substrat` threads one full-frame key through the warm-start
+/// carry-over and the fine-tune run.
 pub fn frame_key(frame: &Frame) -> DatasetKey {
+    FRAME_KEY_PASSES.with(|c| c.set(c.get() + 1));
     let mut fp = hash::Fingerprinter::new();
     fp.update(&(frame.n_rows as u64).to_le_bytes());
     fp.update(&(frame.n_cols() as u64).to_le_bytes());

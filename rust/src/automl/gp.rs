@@ -148,7 +148,9 @@ mod tests {
         let mut gp = GpSearch::new(5);
         let space = ConfigSpace::default();
         let mut rng = Rng::new(3);
-        let history: Vec<_> = (0..6).map(|i| entry(ModelKind::Tree, 0.5 + i as f64 * 0.01, &mut rng)).collect();
+        let history: Vec<_> = (0..6)
+            .map(|i| entry(ModelKind::Tree, 0.5 + i as f64 * 0.01, &mut rng))
+            .collect();
         let _ = gp.propose(&history, &space, &mut rng);
         assert_eq!(gp.queue.len(), 4, "one popped from a fresh generation");
         assert_eq!(gp.generation, 1);

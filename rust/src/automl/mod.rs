@@ -176,6 +176,23 @@ pub fn run_automl_with_engine(
     cfg: &AutoMlConfig,
     engine: &mut EvalEngine,
 ) -> AutoMlResult {
+    run_automl_with_engine_keyed(frame, cfg, engine, None)
+}
+
+/// [`run_automl_with_engine`] with an optional precomputed
+/// [`eval::frame_key`] of `frame`. Fingerprinting is a full
+/// O(rows × cols) content pass inside the caller's timed window, so a
+/// caller that already holds the key — `run_substrat`, which needs the
+/// full frame's key for the warm-start `seed_score` anyway — passes it
+/// here instead of paying the pass twice. The key MUST be
+/// `frame_key(frame)` of this very frame: the memo's soundness
+/// (DESIGN.md §5.1) rests on the key naming the scored content.
+pub fn run_automl_with_engine_keyed(
+    frame: &Frame,
+    cfg: &AutoMlConfig,
+    engine: &mut EvalEngine,
+    dataset: Option<eval::DatasetKey>,
+) -> AutoMlResult {
     let sw = Stopwatch::start();
     let mut rng = Rng::new(cfg.seed);
     // fold splits are fixed once per run: every configuration is scored
@@ -184,7 +201,7 @@ pub fn run_automl_with_engine(
     let plan = FoldPlan::new(frame, cfg.cv_folds, cfg.seed);
     // the memo half-key naming this frame's content: scores measured on
     // a different frame can never be served to this run (§5.1)
-    let dataset = eval::frame_key(frame);
+    let dataset = dataset.unwrap_or_else(|| eval::frame_key(frame));
     let mut budget = match cfg.max_time {
         Some(t) => Budget::evals_and_time(cfg.max_evals, t),
         None => Budget::evals(cfg.max_evals),

@@ -88,16 +88,27 @@ pub fn by_name(name: &str) -> Box<dyn SubsetStrategy> {
     by_name_threaded(name, 0)
 }
 
-/// Strategy registry with an explicit inner-engine thread budget. The
-/// experiment runner passes its per-cell `inner` allowance here so a
-/// strategy's own parallelism (the Gen-DST fitness fills) stays inside
-/// the two-level budget instead of grabbing every core (DESIGN.md §5.2).
-/// `threads = 0` means auto.
+/// [`by_name_with`] at the default (single-population) island count.
 pub fn by_name_threaded(name: &str, threads: usize) -> Box<dyn SubsetStrategy> {
+    by_name_with(name, threads, GenDstConfig::default().islands)
+}
+
+/// Strategy registry with an explicit inner-engine thread budget and
+/// Gen-DST island count. The experiment runner passes its per-cell
+/// `inner` allowance here so a strategy's own parallelism (the Gen-DST
+/// island engine and its fitness fills) stays inside the two-level
+/// budget instead of grabbing every core (DESIGN.md §5.2), and its
+/// pinned `islands` so every cell — including the MC-24H budget
+/// probe — searches with the same engine shape (§4.6). `threads = 0`
+/// means auto; `islands` is results-changing and is pinned explicitly
+/// (never thread-derived) wherever records are compared across
+/// machines.
+pub fn by_name_with(name: &str, threads: usize, islands: usize) -> Box<dyn SubsetStrategy> {
     match name {
         "gendst" | "substrat" => Box::new(GenDstStrategy {
             config: GenDstConfig {
                 threads,
+                islands,
                 ..Default::default()
             },
         }),
@@ -106,22 +117,26 @@ pub fn by_name_threaded(name: &str, threads: usize) -> Box<dyn SubsetStrategy> {
             max_evals: 100,
             time_mult_of_gendst: None,
             probe_threads: threads,
+            probe_islands: islands,
         }),
         "mc-100k" => Box::new(mc::MonteCarlo {
             instance: "mc-100k",
             max_evals: 100_000,
             time_mult_of_gendst: None,
             probe_threads: threads,
+            probe_islands: islands,
         }),
         // MC-24H: budget-scaled stand-in — 20x the wall-clock Gen-DST
         // needs on the same input (see DESIGN.md §5). The probe runs
-        // with this cell's own thread allowance so the extrapolated
-        // budget matches what the real Gen-DST cell costs here.
+        // with this cell's own thread/island allowance so the
+        // extrapolated budget matches what the real Gen-DST cell costs
+        // here.
         "mc-24h" => Box::new(mc::MonteCarlo {
             instance: "mc-24h",
             max_evals: usize::MAX,
             time_mult_of_gendst: Some(20.0),
             probe_threads: threads,
+            probe_islands: islands,
         }),
         "mab" => Box::new(mab::MultiArmBandit::default()),
         "greedy-seq" => Box::new(greedy::GreedySeq::default()),

@@ -16,15 +16,59 @@
 //! *semantic* interpretation of the fields (types, missing values,
 //! dictionaries, the target column) is [`crate::data::infer`]'s job.
 
+use std::cell::RefCell;
 use std::fs::File;
 use std::io::{BufRead, BufReader, Read};
 use std::path::Path;
+use std::rc::Rc;
 
 use crate::ensure;
 use crate::util::error::{Context as _, Result};
+use crate::util::hash::Fingerprinter;
 
 /// One parsed record: the field strings in column order.
 pub type Record = Vec<String>;
+
+/// Shared handle onto the fingerprint a [`FingerprintingReader`]
+/// accumulates while its stream is consumed. Read it with
+/// [`shared_fingerprint`] once the pass is over.
+pub type SharedFingerprint = Rc<RefCell<Fingerprinter>>;
+
+/// The 128-bit key of everything the tee has hashed so far. After a
+/// full pass to end-of-input this equals
+/// [`crate::util::hash::fingerprint_bytes`] over the raw stream —
+/// which is the journal-keying contract (DESIGN.md §5.3): the hash
+/// describes exactly the bytes ingestion read, with no separate
+/// (raceable) read of the file.
+pub fn shared_fingerprint(fp: &SharedFingerprint) -> (u64, u64) {
+    fp.borrow().clone().finish()
+}
+
+/// Byte-level tee: hashes every byte handed out by `read`, before any
+/// buffering, BOM stripping or record parsing sees it — so the
+/// fingerprint covers the raw file content, bit-equal to hashing the
+/// file separately, while guaranteed to describe the same bytes the
+/// parse consumed.
+pub struct FingerprintingReader<R> {
+    inner: R,
+    fp: SharedFingerprint,
+}
+
+impl<R: Read> FingerprintingReader<R> {
+    /// Wrap a byte source; the returned handle yields the fingerprint.
+    pub fn new(inner: R) -> (FingerprintingReader<R>, SharedFingerprint) {
+        let fp: SharedFingerprint = Rc::new(RefCell::new(Fingerprinter::new()));
+        (FingerprintingReader { inner, fp: fp.clone() }, fp)
+    }
+}
+
+impl<R: Read> Read for FingerprintingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.fp.borrow_mut().update(&buf[..n]);
+        Ok(n)
+    }
+}
 
 /// Streaming RFC-4180 reader over any byte source.
 pub struct CsvReader<R> {
@@ -46,6 +90,24 @@ impl CsvReader<BufReader<File>> {
     pub fn open(path: &Path) -> Result<CsvReader<BufReader<File>>> {
         let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
         Ok(CsvReader::new(BufReader::new(file)))
+    }
+}
+
+/// A file-backed [`CsvReader`] whose raw bytes are fingerprinted as
+/// they are read (see [`CsvReader::open_fingerprinted`]).
+pub type FingerprintedFileReader = CsvReader<BufReader<FingerprintingReader<File>>>;
+
+impl FingerprintedFileReader {
+    /// [`CsvReader::open`] with the raw byte stream teed through a
+    /// [`FingerprintingReader`]: once the reader is drained, the handle
+    /// holds the content hash of exactly the bytes this pass read
+    /// (ingestion-time journal keying, DESIGN.md §5.3).
+    pub fn open_fingerprinted(
+        path: &Path,
+    ) -> Result<(FingerprintedFileReader, SharedFingerprint)> {
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let (tee, fp) = FingerprintingReader::new(file);
+        Ok((CsvReader::new(BufReader::new(tee)), fp))
     }
 }
 
@@ -440,6 +502,20 @@ mod tests {
         // "?,red" above a numeric row must stay a data row
         let m = vec!["?".to_string(), "red".to_string()];
         assert!(!detect_header(&m, Some(&d)));
+    }
+
+    #[test]
+    fn fingerprinting_reader_hashes_exactly_the_raw_bytes() {
+        // the tee's key must equal a one-shot hash of the raw content —
+        // BOM and trailing bytes included — once the parse drains the
+        // stream; this is what lets the journal key the ingested bytes
+        let mut text = vec![0xEFu8, 0xBB, 0xBF]; // BOM is content too
+        text.extend_from_slice(b"a,b\n\"x,\ny\",2\n1,2");
+        let want = crate::util::hash::fingerprint_bytes(&text);
+        let (tee, fp) = FingerprintingReader::new(Cursor::new(text));
+        let mut r = CsvReader::new(BufReader::new(tee));
+        while r.next_record().unwrap().is_some() {}
+        assert_eq!(shared_fingerprint(&fp), want);
     }
 
     #[test]

@@ -33,7 +33,9 @@ use std::io::{BufRead, BufReader, Cursor};
 use std::path::Path;
 
 use crate::data::binning::{BinPlan, NumericSampler, StreamingBinner};
-use crate::data::csv::{detect_header, CsvReader, Record};
+use crate::data::csv::{
+    detect_header, shared_fingerprint, CsvReader, FingerprintingReader, Record, SharedFingerprint,
+};
 pub use crate::data::csv::is_missing;
 use crate::data::{CodeMatrix, Column, Frame};
 use crate::ensure;
@@ -86,6 +88,12 @@ pub struct CsvSummary {
     pub target: usize,
     /// rows dropped because their target field was a missing token
     pub dropped_rows: usize,
+    /// 128-bit content hash of the raw bytes ingestion actually read
+    /// (== [`crate::util::hash::fingerprint_bytes`] over the source) —
+    /// hashed *during* pass 1, verified unchanged by pass 2, so a
+    /// journal keyed by it can never describe different content than
+    /// the frame holds (DESIGN.md §5.3)
+    pub content_fp: (u64, u64),
     pub columns: Vec<ColumnSummary>,
 }
 
@@ -271,22 +279,31 @@ fn resolve_target(opts: &CsvOptions, names: &[String], header: bool) -> Result<u
 }
 
 /// Ingest a CSV from a reopenable byte source: `open` is called once
-/// per pass. See the module docs for the two-pass contract. With
-/// `with_codes = false` the binning stage (samplers + code matrix) is
-/// skipped entirely — the path `DataSource::load` takes, since the
-/// experiment layer re-bins its train split itself.
-fn load_with<R: BufRead, F: Fn() -> Result<CsvReader<R>>>(
+/// per pass and returns the reader plus the fingerprint handle of its
+/// raw byte stream. See the module docs for the two-pass contract.
+/// With `with_codes = false` the binning stage (samplers + code
+/// matrix) is skipped entirely — the path `DataSource::load` takes,
+/// since the experiment layer re-bins its train split itself.
+///
+/// Content hashing happens *inside* the passes (the
+/// [`FingerprintingReader`] tee), never as a separate read: the
+/// returned `CsvSummary::content_fp` provably describes the ingested
+/// bytes, and a file edited between the two passes is an error here
+/// instead of a frame silently mismatching its hash.
+fn load_with<R: BufRead, F: Fn() -> Result<(CsvReader<R>, SharedFingerprint)>>(
     open: F,
     name: &str,
     opts: &CsvOptions,
     with_codes: bool,
 ) -> Result<(Frame, Option<CodeMatrix>, CsvSummary)> {
     ensure!(opts.chunk_rows >= 1, "chunk_rows must be >= 1");
-    let st = scan_structure(open()?, opts)?;
+    let (reader1, fp1) = open()?;
+    let st = scan_structure(reader1, opts)?;
+    let content_fp = shared_fingerprint(&fp1);
     let width = st.names.len();
 
     // pass 2: materialize columns, dictionaries and samplers
-    let mut reader = open()?;
+    let (mut reader, fp2) = open()?;
     if st.header {
         let _ = reader.next_record()?; // drop the header record
     }
@@ -346,6 +363,11 @@ fn load_with<R: BufRead, F: Fn() -> Result<CsvReader<R>>>(
         values[0].len(),
         st.n_rows
     );
+    ensure!(
+        shared_fingerprint(&fp2) == content_fp,
+        "csv content changed between ingestion passes — \
+         retry once the file is no longer being written"
+    );
     let n_classes = dicts[st.target].len();
     ensure!(
         n_classes >= 2,
@@ -392,6 +414,7 @@ fn load_with<R: BufRead, F: Fn() -> Result<CsvReader<R>>>(
         header: st.header,
         target: st.target,
         dropped_rows: st.dropped,
+        content_fp,
         columns: st
             .names
             .iter()
@@ -418,7 +441,10 @@ fn file_stem_name(path: &Path) -> String {
 /// frame is named after the file stem.
 pub fn load_csv(path: &Path, opts: &CsvOptions) -> Result<CsvDataset> {
     let (frame, codes, summary) = load_with(
-        || Ok(CsvReader::open(path)?.with_delimiter(opts.delimiter)),
+        || {
+            let (r, fp) = CsvReader::open_fingerprinted(path)?;
+            Ok((r.with_delimiter(opts.delimiter), fp))
+        },
         &file_stem_name(path),
         opts,
         true,
@@ -434,7 +460,10 @@ pub fn load_csv(path: &Path, opts: &CsvOptions) -> Result<CsvDataset> {
 /// need the frame (the experiment layer bins its own train split).
 pub fn load_csv_frame(path: &Path, opts: &CsvOptions) -> Result<(Frame, CsvSummary)> {
     let (frame, _, summary) = load_with(
-        || Ok(CsvReader::open(path)?.with_delimiter(opts.delimiter)),
+        || {
+            let (r, fp) = CsvReader::open_fingerprinted(path)?;
+            Ok((r.with_delimiter(opts.delimiter), fp))
+        },
         &file_stem_name(path),
         opts,
         false,
@@ -447,8 +476,11 @@ pub fn load_csv_text(text: &str, name: &str, opts: &CsvOptions) -> Result<CsvDat
     let bytes = text.as_bytes().to_vec();
     let (frame, codes, summary) = load_with(
         move || {
-            Ok(CsvReader::new(wrap_cursor(Cursor::new(bytes.clone())))
-                .with_delimiter(opts.delimiter))
+            let (tee, fp) = FingerprintingReader::new(Cursor::new(bytes.clone()));
+            Ok((
+                CsvReader::new(wrap_tee(tee)).with_delimiter(opts.delimiter),
+                fp,
+            ))
         },
         name,
         opts,
@@ -462,8 +494,10 @@ pub fn load_csv_text(text: &str, name: &str, opts: &CsvOptions) -> Result<CsvDat
 }
 
 // monomorphization helper so `load_csv_text` names a concrete reader type
-fn wrap_cursor(c: Cursor<Vec<u8>>) -> BufReader<Cursor<Vec<u8>>> {
-    BufReader::new(c)
+fn wrap_tee(
+    t: FingerprintingReader<Cursor<Vec<u8>>>,
+) -> BufReader<FingerprintingReader<Cursor<Vec<u8>>>> {
+    BufReader::new(t)
 }
 
 #[cfg(test)]
@@ -699,6 +733,38 @@ mod tests {
         };
         let e = load_csv_text("x,y\n1,?\n2,\n", "t", &opts).unwrap_err();
         assert!(format!("{e}").contains("no data rows"), "{e}");
+    }
+
+    #[test]
+    fn content_fp_matches_a_one_shot_hash_of_the_ingested_bytes() {
+        // PR 4 follow-up, closed: the journal's file hash used to be a
+        // separate read *before* ingestion — a file edited in that
+        // window journaled under the stale hash. The hash now rides
+        // the ingestion passes themselves, and equals the one-shot
+        // fingerprint of the bytes (so existing `csv:<hex>` journal
+        // keys stay comparable).
+        let dir = std::env::temp_dir().join("substrat_infer_fp");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("fp.csv");
+        let text = "x,y,label\n1,u,p\n2,v,q\n3,u,p\n";
+        std::fs::write(&path, text).unwrap();
+        let (_, summary) = load_csv_frame(&path, &CsvOptions::default()).unwrap();
+        assert_eq!(
+            summary.content_fp,
+            crate::util::hash::fingerprint_bytes(text.as_bytes()),
+            "journal key must fingerprint the ingested content"
+        );
+        // the full (frame + codes) load reports the same key
+        let ds = load_csv(&path, &CsvOptions::default()).unwrap();
+        assert_eq!(ds.summary.content_fp, summary.content_fp);
+        // in-memory text loads agree byte-for-byte too
+        let dt = load_csv_text(text, "t", &CsvOptions::default()).unwrap();
+        assert_eq!(dt.summary.content_fp, summary.content_fp);
+        // edited content flips the key
+        std::fs::write(&path, "x,y,label\n1,u,p\n2,v,q\n4,u,p\n").unwrap();
+        let (_, edited) = load_csv_frame(&path, &CsvOptions::default()).unwrap();
+        assert_ne!(edited.content_fp, summary.content_fp);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

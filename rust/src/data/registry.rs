@@ -30,17 +30,26 @@ pub struct DatasetInfo {
 
 /// All Table-2 datasets in paper order.
 pub fn table2() -> Vec<DatasetInfo> {
+    fn row(
+        symbol: &'static str,
+        domain: &'static str,
+        n_rows: usize,
+        n_cols: usize,
+        n_classes: usize,
+    ) -> DatasetInfo {
+        DatasetInfo { symbol, domain, n_rows, n_cols, n_classes }
+    }
     vec![
-        DatasetInfo { symbol: "D1", domain: "Flight service review", n_rows: 129_880, n_cols: 23, n_classes: 2 },
-        DatasetInfo { symbol: "D2", domain: "Signal processing", n_rows: 15_300, n_cols: 5, n_classes: 3 },
-        DatasetInfo { symbol: "D3", domain: "Car insurance", n_rows: 10_000, n_cols: 18, n_classes: 2 },
-        DatasetInfo { symbol: "D4", domain: "Mushroom classification", n_rows: 8_124, n_cols: 23, n_classes: 2 },
-        DatasetInfo { symbol: "D5", domain: "Air quality", n_rows: 57_660, n_cols: 7, n_classes: 4 },
-        DatasetInfo { symbol: "D6", domain: "Bike demand", n_rows: 17_415, n_cols: 9, n_classes: 4 },
-        DatasetInfo { symbol: "D7", domain: "Lead generation form", n_rows: 30_000, n_cols: 15, n_classes: 2 },
-        DatasetInfo { symbol: "D8", domain: "Myocardial infarction", n_rows: 1_700, n_cols: 123, n_classes: 2 },
-        DatasetInfo { symbol: "D9", domain: "Heart disease", n_rows: 79_540, n_cols: 7, n_classes: 2 },
-        DatasetInfo { symbol: "D10", domain: "Poker matches", n_rows: 1_000_000, n_cols: 15, n_classes: 10 },
+        row("D1", "Flight service review", 129_880, 23, 2),
+        row("D2", "Signal processing", 15_300, 5, 3),
+        row("D3", "Car insurance", 10_000, 18, 2),
+        row("D4", "Mushroom classification", 8_124, 23, 2),
+        row("D5", "Air quality", 57_660, 7, 4),
+        row("D6", "Bike demand", 17_415, 9, 4),
+        row("D7", "Lead generation form", 30_000, 15, 2),
+        row("D8", "Myocardial infarction", 1_700, 123, 2),
+        row("D9", "Heart disease", 79_540, 7, 2),
+        row("D10", "Poker matches", 1_000_000, 15, 10),
     ]
 }
 

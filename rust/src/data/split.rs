@@ -49,7 +49,11 @@ pub fn seeded_stratified_kfold(
 
 /// Stratified k-fold index pairs (train_rows, valid_rows) over `labels`.
 /// Every row appears in exactly one validation fold.
-pub fn stratified_kfold(labels: &[u32], k_folds: usize, rng: &mut Rng) -> Vec<(Vec<u32>, Vec<u32>)> {
+pub fn stratified_kfold(
+    labels: &[u32],
+    k_folds: usize,
+    rng: &mut Rng,
+) -> Vec<(Vec<u32>, Vec<u32>)> {
     assert!(k_folds >= 2, "need at least 2 folds");
     let n_classes = labels.iter().fold(0u32, |m, &y| m.max(y)) as usize + 1;
     let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); n_classes];

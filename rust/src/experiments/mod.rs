@@ -69,6 +69,12 @@ pub struct ExpConfig {
     /// total hardware thread budget for the sweep; the runner splits it
     /// into outer cell workers × inner engine threads (never threads²)
     pub threads: usize,
+    /// Gen-DST islands per strategy cell (DESIGN.md §4.6). Pinned
+    /// explicitly and fed to the config fingerprint — never derived
+    /// from the thread budget, so records stay bit-identical across
+    /// `--threads`/machines; always ≥ 1 (the CLI clamps 0 up). The
+    /// default 1 is the paper's single-population engine.
+    pub islands: usize,
     /// proposals per AutoML engine round — a fixed schedule, never
     /// derived from the thread budget, so the search trajectory (and
     /// with it every record) is identical at any thread count
@@ -97,6 +103,7 @@ impl Default for ExpConfig {
             csv_header: None,
             out_dir: PathBuf::from("results"),
             threads: crate::util::pool::default_threads(),
+            islands: 1,
             batch: 8,
             timing: TimingMode::Wall,
             journal: true,
@@ -170,17 +177,28 @@ fn csv_opts(cfg: &ExpConfig) -> crate::data::infer::CsvOptions {
     }
 }
 
-/// Ingest the full frame behind a CSV spec (`None` for registry
-/// symbols, which generate per rep). The runner pre-loads each distinct
-/// CSV **once** and hands it back to [`prepare_from`] per group —
-/// without this an overnight sweep re-reads and re-infers the whole
-/// file for every (rep, searcher) group.
-pub fn load_source_frame(spec: &str, cfg: &ExpConfig) -> Option<Frame> {
+/// Ingest the full frame behind a CSV spec together with the journal
+/// fingerprint of the very bytes ingested (`None` for registry
+/// symbols, which generate per rep). The runner pre-loads each
+/// distinct CSV **once** and hands the frame back to [`prepare_from`]
+/// per group — without this an overnight sweep re-reads and re-infers
+/// the whole file for every (rep, searcher) group.
+///
+/// Returning the fingerprint *from ingestion* closes the PR 4 race:
+/// the journal key used to come from a separate earlier read of the
+/// file, so an edit landing between that read and ingestion journaled
+/// fresh results under the stale hash. The key now provably describes
+/// the content the cells ran on (`CsvSummary::content_fp`, hashed on
+/// the ingestion passes themselves and formatted exactly like
+/// [`DataSource::fingerprint`]'s `csv:<hex>` keys — existing journals
+/// stay valid).
+pub fn ingest_source(spec: &str, cfg: &ExpConfig) -> Option<(Frame, String)> {
     match DataSource::parse(spec) {
         DataSource::Csv { path } => {
-            let (full, _) = crate::data::infer::load_csv_frame(&path, &csv_opts(cfg))
+            let (full, summary) = crate::data::infer::load_csv_frame(&path, &csv_opts(cfg))
                 .unwrap_or_else(|e| panic!("ingesting {}: {e}", path.display()));
-            Some(full)
+            let fp = format!("csv:{}", crate::util::hash::hex128(summary.content_fp));
+            Some((full, fp))
         }
         DataSource::Table2 { .. } => None,
     }
@@ -200,7 +218,7 @@ pub fn prepare(spec: &str, cfg: &ExpConfig, rep: usize) -> Prepared {
 }
 
 /// [`prepare`] with an optionally pre-ingested full CSV frame (see
-/// [`load_source_frame`]); `preloaded` is ignored for registry specs.
+/// [`ingest_source`]); `preloaded` is ignored for registry specs.
 pub fn prepare_from(
     spec: &str,
     cfg: &ExpConfig,
@@ -344,7 +362,10 @@ pub fn strategy_search(
         "substrat-nf" => ("gendst", false),
         other => (other, true),
     };
-    let strategy = baselines::by_name_threaded(resolved, inner_threads.max(1));
+    // the cell's pinned island count rides along with its thread
+    // allowance — including into the MC-24H budget probe, which must
+    // cost out the same engine shape the real Gen-DST cell runs
+    let strategy = baselines::by_name_with(resolved, inner_threads.max(1), cfg.islands.max(1));
     let mut automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ 0x33 ^ rep as u64);
     wire_engine(&mut automl, cfg, inner_threads);
     let sub_cfg = SubStratConfig {

@@ -42,8 +42,8 @@ use crate::data::registry::DataSource;
 use crate::data::Frame;
 use crate::experiments::fig4::{m_grid, n_grid};
 use crate::experiments::{
-    charged_time_s, finish_full, finish_strategy, full_search, load_source_frame, prepare_from,
-    strategy_search, ExpConfig, RunRecord,
+    charged_time_s, finish_full, finish_strategy, full_search, prepare_from, strategy_search,
+    ExpConfig, RunRecord,
 };
 use crate::gendst::default_dst_size;
 use crate::util::hash;
@@ -80,15 +80,13 @@ impl TimingMode {
 
     /// Split a total hardware budget into (outer cell workers, inner
     /// engine threads) with `outer × inner ≤ total` — the invariant that
-    /// replaces the seed's threads² blowup.
+    /// replaces the seed's threads² blowup. The CpuProxy arm delegates
+    /// to [`pool::split_budget`], the same split the Gen-DST island
+    /// engine applies one level further down (DESIGN.md §4.6).
     pub fn split_budget(self, total: usize, n_groups: usize) -> (usize, usize) {
-        let total = total.max(1);
         match self {
-            TimingMode::Wall => (1, total),
-            TimingMode::CpuProxy => {
-                let outer = total.min(n_groups.max(1));
-                (outer, (total / outer).max(1))
-            }
+            TimingMode::Wall => (1, total.max(1)),
+            TimingMode::CpuProxy => pool::split_budget(total, n_groups),
         }
     }
 }
@@ -221,20 +219,23 @@ impl Cell {
 }
 
 /// Fingerprint of every `ExpConfig` knob that changes what a cell
-/// *computes* (scale, budgets, seed, batch schedule, timing mode, and
-/// the CSV ingestion knobs — a different target column is a different
-/// prediction task). Thread counts are deliberately excluded: they are
-/// pure speed, and records must survive a re-run on different
-/// hardware.
+/// *computes* (scale, budgets, seed, batch schedule, timing mode, the
+/// Gen-DST island count, and the CSV ingestion knobs — a different
+/// target column is a different prediction task). Thread counts are
+/// deliberately excluded: they are pure speed, and records must
+/// survive a re-run on different hardware. (Tag bumped to `exp-v2`
+/// when `islands` joined the key — PR 5 rotates all journal keys
+/// once, exactly like PR 4's source-fingerprint change did.)
 pub fn config_fingerprint(cfg: &ExpConfig) -> String {
     let canon = format!(
-        "exp-v1|scale{}|min{}|max{}|evals{}|ft{}|batch{}|seed{}|timing{}|tgt{:?}|hdr{:?}",
+        "exp-v2|scale{}|min{}|max{}|evals{}|ft{}|batch{}|isl{}|seed{}|timing{}|tgt{:?}|hdr{:?}",
         cfg.scale,
         cfg.min_rows,
         cfg.max_rows,
         cfg.full_evals,
         cfg.ft_frac,
         cfg.batch.max(1),
+        cfg.islands.max(1),
         cfg.seed,
         cfg.timing.name(),
         cfg.csv_target,
@@ -336,7 +337,10 @@ impl Journal {
                 }
             }
             if skipped > 0 {
-                eprintln!("[runner] journal {}: skipped {skipped} unreadable line(s)", path.display());
+                eprintln!(
+                    "[runner] journal {}: skipped {skipped} unreadable line(s)",
+                    path.display()
+                );
             }
         }
         let mut file = std::fs::OpenOptions::new()
@@ -362,7 +366,14 @@ impl Journal {
         (journal, done)
     }
 
-    fn append(&self, cfg_fp: &str, cell_fp: &str, label: &str, timing: TimingMode, rec: &RunRecord) {
+    fn append(
+        &self,
+        cfg_fp: &str,
+        cell_fp: &str,
+        label: &str,
+        timing: TimingMode,
+        rec: &RunRecord,
+    ) {
         let line = json::obj_to_line(&[
             ("cfg", Json::Str(cfg_fp.to_string())),
             ("cell", Json::Str(cell_fp.to_string())),
@@ -443,16 +454,19 @@ impl<'a> Runner<'a> {
     pub fn run(&self, cells: &[Cell]) -> Vec<CellOutcome> {
         let cfg = self.cfg;
         let cfg_fp = config_fingerprint(cfg);
-        // one DataSource fingerprint per distinct symbol (CSV sources
-        // hash their file content; hashing once per cell would re-read
-        // the file per cell for nothing)
-        let mut source_fps: HashMap<&str, String> = HashMap::new();
+        // phase 1: cheap streamed content hashes key the resume check —
+        // no CSV is parsed or materialized just to discover that every
+        // cell is already journaled (a no-op resume on a 1M-row file
+        // stays one read, not two ingestion passes plus a resident
+        // frame)
+        let mut source_fps: HashMap<String, String> = HashMap::new();
         for cell in cells {
-            source_fps
-                .entry(cell.symbol.as_str())
-                .or_insert_with(|| DataSource::parse(&cell.symbol).fingerprint());
+            if !source_fps.contains_key(cell.symbol.as_str()) {
+                let fp = DataSource::parse(&cell.symbol).fingerprint();
+                source_fps.insert(cell.symbol.clone(), fp);
+            }
         }
-        let fps: Vec<String> = cells
+        let mut fps: Vec<String> = cells
             .iter()
             .map(|c| c.fingerprint(cfg, &cfg_fp, &source_fps[c.symbol.as_str()]))
             .collect();
@@ -466,11 +480,7 @@ impl<'a> Runner<'a> {
 
         // group the cells still owed by their shared Full-AutoML
         // reference
-        let mut groups: Vec<Group> = Vec::new();
-        for (i, cell) in cells.iter().enumerate() {
-            if done.contains_key(&fps[i]) {
-                continue;
-            }
+        fn add_to_groups(groups: &mut Vec<Group>, cell: &Cell, i: usize) {
             match groups.iter_mut().find(|g| {
                 g.symbol == cell.symbol && g.rep == cell.rep && g.searcher == cell.searcher
             }) {
@@ -483,6 +493,56 @@ impl<'a> Runner<'a> {
                 }),
             }
         }
+        let mut groups: Vec<Group> = Vec::new();
+        for (i, cell) in cells.iter().enumerate() {
+            if !done.contains_key(&fps[i]) {
+                add_to_groups(&mut groups, cell, i);
+            }
+        }
+
+        // phase 2: ingest each distinct CSV that still owes cells, ONCE,
+        // and take the journal key those cells will append under from
+        // the bytes the ingestion pass itself hashed (the PR 4
+        // hash-then-read race, closed: a record can never describe
+        // content other than what its cell ran on). If the file changed
+        // between the phase-1 hash and ingestion, re-key that symbol's
+        // cells from the ingested bytes and re-consult the journal.
+        // The frames double as the per-sweep CSV cache handed to
+        // `prepare_from` (ingestion sits outside every timed window).
+        let mut csv_frames: HashMap<String, Frame> = HashMap::new();
+        let mut pending_symbols: Vec<String> =
+            groups.iter().map(|g| g.symbol.clone()).collect();
+        pending_symbols.sort();
+        pending_symbols.dedup();
+        for symbol in pending_symbols {
+            let Some((frame, fp)) = crate::experiments::ingest_source(&symbol, cfg) else {
+                continue; // registry symbols are config-determined
+            };
+            csv_frames.insert(symbol.clone(), frame);
+            if source_fps[&symbol] != fp {
+                eprintln!(
+                    "[runner] {symbol}: content changed between hashing and \
+                     ingestion; journal keys now follow the ingested bytes"
+                );
+                source_fps.insert(symbol.clone(), fp);
+                // rebuild this symbol's groups from scratch under the
+                // re-derived keys: cells resumed under the stale hash
+                // may now be owed (and vice versa) — pruning the old
+                // groups alone would leave such cells unscheduled and
+                // panic at outcome assembly
+                groups.retain(|g| g.symbol != symbol);
+                for (i, cell) in cells.iter().enumerate() {
+                    if cell.symbol != symbol {
+                        continue;
+                    }
+                    fps[i] = cell.fingerprint(cfg, &cfg_fp, &source_fps[&symbol]);
+                    if !done.contains_key(&fps[i]) {
+                        add_to_groups(&mut groups, cell, i);
+                    }
+                }
+            }
+        }
+
         let todo: usize = groups.iter().map(|g| g.members.len()).sum();
         if journal.is_some() {
             eprintln!(
@@ -495,19 +555,6 @@ impl<'a> Runner<'a> {
         let total_budget = pool::resolve_threads(cfg.threads);
         let (outer, inner) = cfg.timing.split_budget(total_budget, groups.len());
         let n_groups = groups.len();
-
-        // ingest each distinct CSV source once, up front — groups share
-        // the full frame instead of re-reading the file per
-        // (rep, searcher) group (prepare still subsamples/splits per
-        // rep; ingestion sits outside every timed window either way)
-        let mut csv_frames: HashMap<String, Frame> = HashMap::new();
-        for g in &groups {
-            if !csv_frames.contains_key(&g.symbol) {
-                if let Some(f) = load_source_frame(&g.symbol, cfg) {
-                    csv_frames.insert(g.symbol.clone(), f);
-                }
-            }
-        }
 
         let fresh: Vec<Vec<(usize, RunRecord)>> =
             pool::parallel_map(&groups, outer, |gi, g| {
@@ -617,7 +664,9 @@ mod tests {
     const TEST_STRATEGIES: &[&str] = &["ig-rand", "mc-100"];
 
     #[allow(clippy::type_complexity)]
-    fn non_time_view(records: &[CellOutcome]) -> Vec<(String, String, String, usize, u64, u64, String)> {
+    fn non_time_view(
+        records: &[CellOutcome],
+    ) -> Vec<(String, String, String, usize, u64, u64, String)> {
         records
             .iter()
             .map(|o| {
@@ -776,6 +825,39 @@ mod tests {
             assert!(!o.resumed);
             assert!(o.record.time_full_s > 0.0 && o.record.time_sub_s > 0.0);
         }
+    }
+
+    #[test]
+    fn islands_knob_feeds_the_config_fingerprint() {
+        // islands change what a cell computes, so journaled records
+        // from a different island count must never be resumed
+        let cfg = tiny_cfg("islfp");
+        let mut isl = cfg.clone();
+        isl.islands = 3;
+        assert_ne!(config_fingerprint(&cfg), config_fingerprint(&isl));
+        // and 0 is normalized up so a clamped CLI value cannot alias
+        let mut zero = cfg.clone();
+        zero.islands = 0;
+        let mut one = cfg.clone();
+        one.islands = 1;
+        assert_eq!(config_fingerprint(&zero), config_fingerprint(&one));
+    }
+
+    #[test]
+    fn island_cells_stay_identical_across_thread_budgets() {
+        // the determinism contract extends to multi-island cells: the
+        // pinned island count (never thread-derived) plus the engine's
+        // deterministic migration keeps every non-time field identical
+        // at any thread budget
+        let mut narrow = tiny_cfg("isl_threads");
+        narrow.journal = false;
+        narrow.islands = 2;
+        let mut wide = narrow.clone();
+        wide.threads = 4;
+        let cells = strategy_grid(&narrow, &["gendst"]);
+        let a = Runner::new(&narrow).run(&cells);
+        let b = Runner::new(&wide).run(&cells);
+        assert_eq!(non_time_view(&a), non_time_view(&b));
     }
 
     #[test]

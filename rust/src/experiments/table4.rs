@@ -90,7 +90,10 @@ pub fn run(cfg: &ExpConfig) -> (Vec<RunRecord>, Table) {
     let strategies = table4_strategy_names();
     let records = collect_records(cfg, &strategies);
     let table = aggregate(&records, cfg);
-    println!("\n=== Table 4 (scale={}, reps={}, evals={}) ===", cfg.scale, cfg.reps, cfg.full_evals);
+    println!(
+        "\n=== Table 4 (scale={}, reps={}, evals={}) ===",
+        cfg.scale, cfg.reps, cfg.full_evals
+    );
     println!("{}", table.to_aligned());
     let _ = records_csv(&records).write_csv(&cfg.out_dir.join("table4_records.csv"));
     let _ = table.write_csv(&cfg.out_dir.join("table4.csv"));

@@ -126,6 +126,46 @@ impl CandidateCache {
         }
     }
 
+    /// Derive a child cache for a *row-crossover* child that inherits
+    /// this candidate's column set: the parent cache is cloned and the
+    /// row-set difference is queued as pending swaps, so the child
+    /// delta-updates (O(|diff|) per column) instead of rebuilding every
+    /// histogram from scratch (the DESIGN.md §4.5 item, resolved in
+    /// §4.6). Returns `None` when the diff is not the cheaper side
+    /// (each pending swap touches every histogram twice, so past
+    /// `n/2` swapped rows a rebuild wins) — the child then starts
+    /// cache-less exactly as before.
+    ///
+    /// Pending swaps already queued on the parent chain soundly: they
+    /// reconcile the cache to `parent_rows`, and the appended diff
+    /// continues from there to `child_rows`.
+    pub fn project_rows(&self, parent_rows: &[u32], child_rows: &[u32]) -> Option<CandidateCache> {
+        if parent_rows.len() != child_rows.len() {
+            return None;
+        }
+        let parent: std::collections::HashSet<u32> = parent_rows.iter().copied().collect();
+        let child: std::collections::HashSet<u32> = child_rows.iter().copied().collect();
+        // deterministic order: walk the chromosome vectors, never the sets
+        let removed: Vec<u32> = parent_rows
+            .iter()
+            .copied()
+            .filter(|r| !child.contains(r))
+            .collect();
+        let added: Vec<u32> = child_rows
+            .iter()
+            .copied()
+            .filter(|r| !parent.contains(r))
+            .collect();
+        if removed.len() != added.len() || removed.len() * 2 >= parent_rows.len().max(1) {
+            return None;
+        }
+        let mut out = self.clone();
+        for (&old, &new) in removed.iter().zip(&added) {
+            out.pending.push((old, new));
+        }
+        Some(out)
+    }
+
     /// Reconcile the cache with the candidate's current `(rows, cols)`:
     /// apply pending row-swap deltas to every valid column (O(m) per
     /// swap), rebuild invalidated columns from scratch (O(n) each), and
@@ -205,8 +245,22 @@ impl<'a> FitnessEval<'a> {
         measure: &'a dyn DatasetMeasure,
         backend: FitnessBackend,
     ) -> FitnessEval<'a> {
-        let is_entropy = measure.name() == EntropyMeasure.name();
         let f_full = measure.of_full(frame, codes);
+        FitnessEval::with_f_full(frame, codes, measure, backend, f_full)
+    }
+
+    /// [`FitnessEval::new`] with a precomputed `F(D)`. The island
+    /// engine computes the full-dataset measure once and shares it
+    /// across its per-island engines instead of paying one O(n·m)
+    /// pass per island (DESIGN.md §4.6).
+    pub fn with_f_full(
+        frame: &'a Frame,
+        codes: &'a CodeMatrix,
+        measure: &'a dyn DatasetMeasure,
+        backend: FitnessBackend,
+        f_full: f64,
+    ) -> FitnessEval<'a> {
+        let is_entropy = measure.name() == EntropyMeasure.name();
         FitnessEval {
             frame,
             codes,
@@ -591,6 +645,81 @@ mod tests {
         assert!(
             (pop2[0].loss.unwrap() - naive_loss(eval.f_full, &codes, &original)).abs() <= 1e-9
         );
+    }
+
+    #[test]
+    fn row_crossover_children_delta_update_via_projection() {
+        // DESIGN.md §4.5 (resolved in PR 5): a child inheriting a
+        // parent's column set and most of its row set projects the
+        // parent cache — the row diff rides as pending swaps — and its
+        // refreshed loss is bit-identical to a from-scratch rebuild
+        let f = registry::load("D3", 0.1, 29);
+        let codes = CodeMatrix::from_frame(&f);
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Incremental);
+        let mut rng = Rng::new(77);
+        let a = ops::random_candidate(&f, 40, 5, &mut rng);
+        let mut pop = vec![a];
+        eval.fill_losses(&mut pop);
+        let a = &pop[0];
+        // the crossover-shaped child: same columns, 3 rows swapped out
+        let mut child_rows = a.rows.clone();
+        for slot in 0..3 {
+            let mut fresh = 900 + slot as u32;
+            while child_rows.contains(&fresh) {
+                fresh -= 1;
+            }
+            child_rows[slot] = fresh;
+        }
+        let cache = a
+            .cache
+            .as_ref()
+            .unwrap()
+            .project_rows(&a.rows, &child_rows)
+            .expect("a 3-row diff out of 40 must project");
+        let child = Candidate {
+            rows: child_rows,
+            cols: a.cols.clone(),
+            loss: None,
+            cache: Some(cache),
+        };
+        let mut children = vec![child];
+        eval.fill_losses(&mut children);
+        let want = naive_loss(eval.f_full, &codes, &children[0]);
+        let got = children[0].loss.unwrap();
+        assert!(
+            (got - want).abs() <= 1e-9,
+            "projected child loss {got} vs naive {want}"
+        );
+
+        // and the real operator path stays naive-equal with projection
+        // active (cache presence there depends on the sampled diff)
+        let b = ops::random_candidate(&f, 40, 5, &mut rng);
+        let mut pair = vec![pop[0].clone(), b];
+        eval.fill_losses(&mut pair);
+        let (ca, cb) = ops::crossover_pair(&pair[0], &pair[1], &f, f.target as u32, 1.0, &mut rng);
+        let mut crossed = vec![ca, cb];
+        eval.fill_losses(&mut crossed);
+        for c in &crossed {
+            let want = naive_loss(eval.f_full, &codes, c);
+            assert!((c.loss.unwrap() - want).abs() <= 1e-9);
+        }
+    }
+
+    #[test]
+    fn row_projection_declines_when_rebuild_is_cheaper() {
+        // disjoint parents: the diff spans ~the whole row set, so the
+        // projection must decline and the child start cache-less
+        let mut cache = CandidateCache::empty(3);
+        cache.valid = vec![true; 3];
+        let parent: Vec<u32> = (0..20).collect();
+        let child: Vec<u32> = (100..120).collect();
+        assert!(cache.project_rows(&parent, &child).is_none());
+        // identical row sets (any order) project with no pending work
+        let shuffled: Vec<u32> = (0..20).rev().collect();
+        let p = cache.project_rows(&parent, &shuffled).expect("zero-diff projects");
+        assert!(p.pending.is_empty());
+        // size mismatch can never project
+        assert!(cache.project_rows(&parent, &parent[..10]).is_none());
     }
 
     #[test]

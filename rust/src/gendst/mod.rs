@@ -12,6 +12,20 @@
 //! weight `w(G) = (max_pop_loss - loss(G)) + ε`, which preserves the
 //! intended ordering (fitter candidates sampled more often).
 //!
+//! Since PR 5 the search itself is an **island model** (DESIGN.md §4.6):
+//! the population splits into `islands` sub-populations, each evolving
+//! the paper's generation loop on its own RNG stream, executing
+//! concurrently through `util::pool` under a two-level thread budget
+//! (concurrent islands × fitness-fill workers ≤ the engine's
+//! allowance). Every `migration_interval` generations the top
+//! `migration_k` candidates of each island migrate ring-wise, with
+//! deterministic ordering — results are bit-identical for any thread
+//! count, and `islands = 1` reproduces the single-population engine bit
+//! for bit. A [`StopRule::TimeBudget`] anytime mode returns the best
+//! subset found when a wall-clock budget expires (the MC-24H budget
+//! probe reuses it instead of extrapolating from a differently-shaped
+//! mini-run).
+//!
 //! Fitness scoring runs on the incremental + parallel engine by default
 //! (see [`fitness`] and DESIGN.md §4.4); the serial from-scratch path is
 //! kept as [`fitness::FitnessBackend::NaiveNative`] and both are
@@ -22,8 +36,12 @@
 pub mod fitness;
 pub mod ops;
 
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
 use crate::data::{CodeMatrix, Frame};
 use crate::measures::DatasetMeasure;
+use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -75,13 +93,36 @@ pub fn default_dst_size(n_rows: usize, n_cols: usize) -> (usize, usize) {
     (n, m)
 }
 
+/// When a Gen-DST search stops (DESIGN.md §4.6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StopRule {
+    /// The paper's rule: ψ generations, with convergence patience.
+    /// Fully deterministic per seed.
+    Generations,
+    /// Anytime mode: run until the wall-clock budget expires (or every
+    /// island stagnates), then return the best subset found so far.
+    /// The ψ cap does not apply; convergence patience still retires
+    /// stagnated islands early. The budget bounds the *search loop*:
+    /// computing F(D), the initial population fill, and one guaranteed
+    /// generation per island are the minimum work — an anytime answer
+    /// needs at least one scored population — so on huge frames a tiny
+    /// budget is exceeded by that setup cost (reported separately as
+    /// [`GenDstResult::setup_s`]). Results depend on machine speed by
+    /// design — use `Generations` wherever bit-reproducibility
+    /// matters.
+    TimeBudget {
+        /// wall-clock budget in seconds
+        seconds: f64,
+    },
+}
+
 /// Hyper-parameters (paper §4.2 defaults: ψ=30, φ=100, ξ=0.025, α=0.05,
 /// p_rc=0.9).
 #[derive(Debug, Clone)]
 pub struct GenDstConfig {
     /// ψ — number of generations
     pub generations: usize,
-    /// φ — population size
+    /// φ — population size (split across islands)
     pub population: usize,
     /// ξ — per-candidate mutation probability
     pub mutation_prob: f64,
@@ -95,10 +136,23 @@ pub struct GenDstConfig {
     pub convergence_patience: usize,
     /// fitness engine (default: the incremental + parallel native engine)
     pub backend: FitnessBackend,
-    /// worker threads for population scoring: 0 = auto (all cores when
-    /// the fill is big enough to amortize spawning, serial otherwise).
-    /// The thread count never changes results.
+    /// worker threads for the whole engine: 0 = auto. With one island
+    /// this is the fitness-fill width exactly as before; with several,
+    /// the allowance splits into concurrent islands × fill workers
+    /// (never exceeding it — [`pool::split_budget`]). The thread count
+    /// never changes results.
     pub threads: usize,
+    /// island count (DESIGN.md §4.6): 1 = the paper's single
+    /// population (bit-identical to the pre-island engine); 0 = auto,
+    /// sized from the resolved thread budget — machine-shaped, so the
+    /// experiment layer always pins an explicit count instead.
+    pub islands: usize,
+    /// generations between ring migrations (island model only)
+    pub migration_interval: usize,
+    /// candidates each island sends to its ring neighbor per migration
+    pub migration_k: usize,
+    /// stopping rule: ψ generations (default) or an anytime time budget
+    pub stop: StopRule,
     /// RNG seed; identical seeds give identical runs
     pub seed: u64,
 }
@@ -115,6 +169,10 @@ impl Default for GenDstConfig {
             convergence_patience: 5,
             backend: FitnessBackend::Incremental,
             threads: 0,
+            islands: 1,
+            migration_interval: 5,
+            migration_k: 2,
+            stop: StopRule::Generations,
             seed: 0,
         }
     }
@@ -129,13 +187,24 @@ pub struct GenDstResult {
     pub loss: f64,
     /// F(D) the search preserved
     pub f_full: f64,
-    /// subset-measure evaluations actually computed
+    /// subset-measure evaluations actually computed (all islands)
     pub fitness_evals: usize,
     /// evaluations skipped by loss memoization (cross-generation memo
-    /// hits + in-population duplicate subsets)
+    /// hits + in-population duplicate subsets, summed over islands)
     pub memo_hits: usize,
-    /// generations executed before convergence or the ψ budget
+    /// generations executed before convergence or the budget (the
+    /// deepest island in a multi-island run)
     pub generations_run: usize,
+    /// true when a [`StopRule::TimeBudget`] deadline ended the search
+    /// while islands were still improving (false when every island
+    /// converged or the ψ budget ran out first)
+    pub timed_out: bool,
+    /// wall-clock spent before the generation loop started: the F(D)
+    /// pass plus the initial population fills. One-time cost, paid
+    /// once per run regardless of ψ — consumers extrapolating
+    /// per-generation throughput (the MC-24H budget probe) must
+    /// exclude it from `elapsed_s` first
+    pub setup_s: f64,
     /// wall-clock of the whole search
     pub elapsed_s: f64,
 }
@@ -156,10 +225,180 @@ pub struct Candidate {
     pub cache: Option<fitness::CandidateCache>,
 }
 
+/// Smallest sub-population an *auto-sized* island may hold: below
+/// this, selection pressure collapses and extra islands add overhead,
+/// not search reach.
+const MIN_ISLAND_POP: usize = 16;
+
+/// Resolve the island count: an explicit request is clamped to
+/// `[1, population]`; 0 = auto — one island per available worker
+/// thread, capped so every island keeps at least `MIN_ISLAND_POP` (16)
+/// candidates. Auto sizing is machine-shaped (it reads the thread
+/// budget): callers that need results reproducible across machines
+/// (the experiment runner) pin an explicit count instead.
+pub fn resolve_islands(islands: usize, threads: usize, population: usize) -> usize {
+    let population = population.max(1);
+    let resolved = if islands == 0 {
+        let cap = (population / MIN_ISLAND_POP).max(1);
+        pool::resolve_threads(threads).min(cap)
+    } else {
+        islands
+    };
+    resolved.clamp(1, population)
+}
+
+/// Per-island RNG seed: island 0 uses the run seed verbatim — which is
+/// what makes a single-island run bit-identical to the pre-island
+/// engine — and islands ≥ 1 get independent splitmix-derived streams.
+fn island_seed(seed: u64, island: usize) -> u64 {
+    if island == 0 {
+        seed
+    } else {
+        crate::util::hash::mix64(seed ^ (island as u64).wrapping_mul(0x1515_A4E3_5A4E_1501))
+    }
+}
+
+/// One sub-population of the island engine. Each island owns its RNG
+/// stream and its fitness engine (per-island loss memo), so its
+/// evolution is a pure function of `(run seed, island index)` no
+/// matter which worker thread executes it.
+struct Island<'a> {
+    rng: Rng,
+    pop: Vec<Candidate>,
+    /// the island's best-so-far; `None` only before the initial fill
+    best: Option<Candidate>,
+    stale: usize,
+    generations_run: usize,
+    converged: bool,
+    eval: FitnessEval<'a>,
+}
+
+impl Island<'_> {
+    fn best_loss(&self) -> f64 {
+        self.best.as_ref().and_then(|c| c.loss).unwrap_or(f64::INFINITY)
+    }
+}
+
+fn pop_best(pop: &[Candidate]) -> &Candidate {
+    pop.iter()
+        .min_by(|a, b| a.loss.unwrap().partial_cmp(&b.loss.unwrap()).unwrap())
+        .expect("non-empty population")
+}
+
+/// Run up to `gens` generations of the paper's loop on one island —
+/// exactly the pre-island generation body, so `islands = 1` reproduces
+/// the single-population engine bit for bit. Returns early on
+/// convergence patience, the ψ cap (`Generations` mode), or the shared
+/// deadline (`TimeBudget` mode).
+fn run_island_epoch(
+    isl: &mut Island,
+    frame: &Frame,
+    target: u32,
+    cfg: &GenDstConfig,
+    gens: usize,
+    deadline: Option<Instant>,
+) {
+    for _ in 0..gens {
+        if isl.converged {
+            return;
+        }
+        if matches!(cfg.stop, StopRule::Generations) && isl.generations_run >= cfg.generations {
+            return;
+        }
+        // the deadline never cancels the island's FIRST generation: an
+        // anytime answer needs at least one scored population, and the
+        // guaranteed generation is what gives the MC-24H probe a real
+        // per-generation throughput sample to extrapolate from
+        if isl.generations_run > 0 {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return;
+                }
+            }
+        }
+        isl.generations_run += 1;
+        // (1) mutation
+        for cand in isl.pop.iter_mut() {
+            if isl.rng.bool_with(cfg.mutation_prob) {
+                ops::mutate(cand, frame, target, cfg.p_rc, &mut isl.rng);
+            }
+        }
+        // (2) cross-over over disjoint pairs
+        ops::crossover_population(&mut isl.pop, frame, target, cfg.p_rc, &mut isl.rng);
+        // (3) selection (royalty tournament)
+        isl.eval.fill_losses(&mut isl.pop);
+        isl.pop = ops::select(&isl.pop, cfg.royalty_frac, &mut isl.rng);
+
+        // track the island best (Algorithm 1 lines 10-12)
+        let gen_best = pop_best(&isl.pop);
+        if gen_best.loss.unwrap() < isl.best_loss() - cfg.convergence_eps {
+            isl.best = Some(gen_best.clone());
+            isl.stale = 0;
+        } else {
+            isl.stale += 1;
+            if isl.stale >= cfg.convergence_patience {
+                isl.converged = true; // stagnated (paper's stopping criterion)
+                return;
+            }
+        }
+    }
+}
+
+/// Ring migration (DESIGN.md §4.6): island `i` clones its `k` best
+/// candidates (ties broken by population position, so the choice is
+/// deterministic) into island `i+1 mod I`, replacing the receiver's
+/// worst. All migrant sets are collected before any replacement, so
+/// the outcome is independent of island iteration order — and migrants
+/// travel with their cached losses and histogram caches, so arrival
+/// never triggers a rebuild (they keep delta-updating under later
+/// mutations).
+fn migrate(islands: &[Mutex<Island>], k: usize) {
+    let n = islands.len();
+    if n < 2 || k == 0 {
+        return;
+    }
+    let migrants: Vec<Vec<Candidate>> = islands
+        .iter()
+        .map(|cell| {
+            let isl = cell.lock().unwrap();
+            let mut order: Vec<usize> = (0..isl.pop.len()).collect();
+            order.sort_by(|&a, &b| {
+                isl.pop[a]
+                    .loss
+                    .unwrap()
+                    .partial_cmp(&isl.pop[b].loss.unwrap())
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            order.iter().take(k).map(|&i| isl.pop[i].clone()).collect()
+        })
+        .collect();
+    for (from, mig) in migrants.into_iter().enumerate() {
+        let to = (from + 1) % n;
+        let mut isl = islands[to].lock().unwrap();
+        let mut order: Vec<usize> = (0..isl.pop.len()).collect();
+        // worst first; ties broken by position for determinism
+        order.sort_by(|&a, &b| {
+            isl.pop[b]
+                .loss
+                .unwrap()
+                .partial_cmp(&isl.pop[a].loss.unwrap())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for (&slot, m) in order.iter().zip(mig) {
+            isl.pop[slot] = m;
+        }
+    }
+}
+
 /// Run Gen-DST on `frame` for a subset of size (n, m).
 ///
 /// Deterministic per seed, for every backend and thread count; the
-/// `Incremental` and `NaiveNative` backends produce identical results.
+/// `Incremental` and `NaiveNative` backends produce identical results,
+/// and `islands = 1` is bit-identical to the pre-island engine
+/// (property-tested). [`StopRule::TimeBudget`] runs are anytime and
+/// machine-speed dependent by design.
 ///
 /// ```
 /// use substrat::data::{registry, CodeMatrix};
@@ -186,53 +425,118 @@ pub fn gen_dst(
     let n = n.clamp(1, frame.n_rows);
     let m = m.clamp(2, frame.n_cols());
     let target = frame.target as u32;
-    let mut rng = Rng::new(cfg.seed);
-    let mut eval = FitnessEval::new(frame, codes, measure, cfg.backend);
-    eval.threads = cfg.threads;
+    // F(D) once, shared by every island's engine
+    let f_full = measure.of_full(frame, codes);
 
-    // P_0: φ random candidates, target pinned (Algorithm 1 line 4)
-    let mut pop: Vec<Candidate> = (0..cfg.population)
-        .map(|_| ops::random_candidate(frame, n, m, &mut rng))
+    let n_islands = resolve_islands(cfg.islands, cfg.threads, cfg.population);
+    // two-level thread budget (DESIGN.md §4.6): concurrent islands ×
+    // fitness-fill workers never exceed the engine's allowance. A
+    // single island passes the knob through verbatim (0 = the
+    // pre-island per-fill auto sizing).
+    let (outer, inner) = if n_islands == 1 {
+        (1, cfg.threads)
+    } else {
+        pool::split_budget(pool::resolve_threads(cfg.threads), n_islands)
+    };
+    let deadline = match cfg.stop {
+        StopRule::Generations => None,
+        StopRule::TimeBudget { seconds } => {
+            Some(Instant::now() + Duration::from_secs_f64(seconds.max(0.0)))
+        }
+    };
+
+    // P_0: φ random candidates split across islands, target pinned
+    // (Algorithm 1 line 4). Chromosome sampling is cheap and must stay
+    // on each island's own RNG stream; the expensive initial fill runs
+    // concurrently below.
+    let base = cfg.population / n_islands;
+    let rem = cfg.population % n_islands;
+    let islands: Vec<Mutex<Island>> = (0..n_islands)
+        .map(|i| {
+            let mut rng = Rng::new(island_seed(cfg.seed, i));
+            let size = base + usize::from(i < rem);
+            let pop: Vec<Candidate> = (0..size)
+                .map(|_| ops::random_candidate(frame, n, m, &mut rng))
+                .collect();
+            let mut eval = FitnessEval::with_f_full(frame, codes, measure, cfg.backend, f_full);
+            eval.threads = inner;
+            Mutex::new(Island {
+                rng,
+                pop,
+                best: None,
+                stale: 0,
+                generations_run: 0,
+                converged: false,
+                eval,
+            })
+        })
         .collect();
-    eval.fill_losses(&mut pop);
+    pool::parallel_map(&islands, outer, |_, cell| {
+        let mut guard = cell.lock().unwrap();
+        let isl = &mut *guard;
+        isl.eval.fill_losses(&mut isl.pop);
+        isl.best = Some(pop_best(&isl.pop).clone());
+    });
+    // everything up to here — F(D) plus the initial fills — is
+    // one-time setup, reported apart from the generation loop so
+    // anytime consumers can extrapolate throughput correctly
+    let setup_s = sw.elapsed_s();
 
-    let mut best = pop
-        .iter()
-        .min_by(|a, b| a.loss.unwrap().partial_cmp(&b.loss.unwrap()).unwrap())
-        .unwrap()
-        .clone();
-    let mut stale = 0usize;
-    let mut generations_run = 0usize;
-
-    for _gen in 0..cfg.generations {
-        generations_run += 1;
-        // (1) mutation
-        for cand in pop.iter_mut() {
-            if rng.bool_with(cfg.mutation_prob) {
-                ops::mutate(cand, frame, target, cfg.p_rc, &mut rng);
-            }
+    // epoch loop: every island advances `migration_interval`
+    // generations in lockstep (concurrently), then a barrier and a
+    // deterministic ring migration
+    let interval = cfg.migration_interval.max(1);
+    let mut gens_scheduled = 0usize;
+    let mut timed_out = false;
+    loop {
+        let gens = match cfg.stop {
+            StopRule::Generations => interval.min(cfg.generations.saturating_sub(gens_scheduled)),
+            StopRule::TimeBudget { .. } => interval,
+        };
+        if gens == 0 {
+            break; // ψ budget exhausted
         }
-        // (2) cross-over over disjoint pairs
-        ops::crossover_population(&mut pop, frame, target, cfg.p_rc, &mut rng);
-        // (3) selection (royalty tournament)
-        eval.fill_losses(&mut pop);
-        pop = ops::select(&pop, cfg.royalty_frac, &mut rng);
+        pool::parallel_map(&islands, outer, |_, cell| {
+            let mut guard = cell.lock().unwrap();
+            run_island_epoch(&mut guard, frame, target, cfg, gens, deadline);
+        });
+        gens_scheduled += gens;
 
-        // track global best (Algorithm 1 lines 10-12)
-        let gen_best = pop
-            .iter()
-            .min_by(|a, b| a.loss.unwrap().partial_cmp(&b.loss.unwrap()).unwrap())
-            .unwrap();
-        if gen_best.loss.unwrap() < best.loss.unwrap() - cfg.convergence_eps {
-            best = gen_best.clone();
-            stale = 0;
-        } else {
-            stale += 1;
-            if stale >= cfg.convergence_patience {
-                break; // converged (paper's stopping criterion)
-            }
+        let all_stopped = islands.iter().all(|cell| {
+            let isl = cell.lock().unwrap();
+            isl.converged
+                || (matches!(cfg.stop, StopRule::Generations)
+                    && isl.generations_run >= cfg.generations)
+        });
+        if all_stopped {
+            break;
         }
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            timed_out = true; // anytime: return the best found so far
+            break;
+        }
+        migrate(&islands, cfg.migration_k);
     }
+
+    let mut islands: Vec<Island> = islands
+        .into_iter()
+        .map(|cell| cell.into_inner().unwrap())
+        .collect();
+    // global best: smallest loss, ties resolved to the lowest island
+    // index (min_by keeps the first minimum; islands are
+    // deterministic, so this is too)
+    let best_i = (0..islands.len())
+        .min_by(|&a, &b| {
+            islands[a]
+                .best_loss()
+                .partial_cmp(&islands[b].best_loss())
+                .unwrap()
+        })
+        .expect("at least one island");
+    let best = islands[best_i].best.take().expect("initial fill ran");
+    let fitness_evals = islands.iter().map(|isl| isl.eval.evals).sum();
+    let memo_hits = islands.iter().map(|isl| isl.eval.memo_hits).sum();
+    let generations_run = islands.iter().map(|isl| isl.generations_run).max().unwrap_or(0);
 
     let mut rows = best.rows.clone();
     let mut cols = best.cols.clone();
@@ -241,10 +545,12 @@ pub fn gen_dst(
     GenDstResult {
         dst: Dst { rows, cols },
         loss: best.loss.unwrap(),
-        f_full: eval.f_full,
-        fitness_evals: eval.evals,
-        memo_hits: eval.memo_hits,
+        f_full,
+        fitness_evals,
+        memo_hits,
         generations_run,
+        timed_out,
+        setup_s,
         elapsed_s: sw.elapsed_s(),
     }
 }
@@ -260,6 +566,58 @@ mod tests {
         let f = registry::load("D2", 0.05, 11); // 765 x 5
         let codes = CodeMatrix::from_frame(&f);
         (f, codes)
+    }
+
+    /// The pre-island single-population loop, kept verbatim as the
+    /// reference the island engine's `islands = 1` path is
+    /// property-tested against (PR 5 acceptance criterion).
+    fn reference_gen_dst(
+        frame: &Frame,
+        codes: &CodeMatrix,
+        measure: &dyn DatasetMeasure,
+        n: usize,
+        m: usize,
+        cfg: &GenDstConfig,
+    ) -> (Dst, f64, usize) {
+        let n = n.clamp(1, frame.n_rows);
+        let m = m.clamp(2, frame.n_cols());
+        let target = frame.target as u32;
+        let mut rng = Rng::new(cfg.seed);
+        let mut eval = FitnessEval::new(frame, codes, measure, cfg.backend);
+        eval.threads = cfg.threads;
+        let mut pop: Vec<Candidate> = (0..cfg.population)
+            .map(|_| ops::random_candidate(frame, n, m, &mut rng))
+            .collect();
+        eval.fill_losses(&mut pop);
+        let mut best = pop_best(&pop).clone();
+        let mut stale = 0usize;
+        let mut generations_run = 0usize;
+        for _gen in 0..cfg.generations {
+            generations_run += 1;
+            for cand in pop.iter_mut() {
+                if rng.bool_with(cfg.mutation_prob) {
+                    ops::mutate(cand, frame, target, cfg.p_rc, &mut rng);
+                }
+            }
+            ops::crossover_population(&mut pop, frame, target, cfg.p_rc, &mut rng);
+            eval.fill_losses(&mut pop);
+            pop = ops::select(&pop, cfg.royalty_frac, &mut rng);
+            let gen_best = pop_best(&pop);
+            if gen_best.loss.unwrap() < best.loss.unwrap() - cfg.convergence_eps {
+                best = gen_best.clone();
+                stale = 0;
+            } else {
+                stale += 1;
+                if stale >= cfg.convergence_patience {
+                    break;
+                }
+            }
+        }
+        let mut rows = best.rows.clone();
+        let mut cols = best.cols.clone();
+        rows.sort_unstable();
+        cols.sort_unstable();
+        (Dst { rows, cols }, best.loss.unwrap(), generations_run)
     }
 
     #[test]
@@ -316,6 +674,7 @@ mod tests {
             "never converged: {}",
             res.generations_run
         );
+        assert!(!res.timed_out);
     }
 
     #[test]
@@ -373,6 +732,164 @@ mod tests {
     }
 
     #[test]
+    fn prop_single_island_bit_identical_to_reference_engine() {
+        // PR 5 acceptance criterion: `islands = 1` reproduces the
+        // pre-island single-population engine exactly, across seeds
+        // and sizes — so the paper reproduction is untouched by the
+        // island refactor
+        let (f, codes) = small_frame();
+        check_prop("islands=1 == pre-island engine", 8, |rng| {
+            let cfg = GenDstConfig {
+                generations: 4 + rng.usize_below(5),
+                population: 8 + rng.usize_below(20),
+                islands: 1,
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let n = 5 + rng.usize_below(40);
+            let m = 2 + rng.usize_below(f.n_cols() - 2);
+            let island = gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg);
+            let (dst, loss, gens) = reference_gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg);
+            assert_eq!(island.dst, dst, "islands=1 diverged from the reference");
+            assert_eq!(island.loss.to_bits(), loss.to_bits());
+            assert_eq!(island.generations_run, gens);
+        });
+    }
+
+    #[test]
+    fn multi_island_results_invariant_to_thread_count() {
+        // islands are seeded per (run seed, island) and migrate at
+        // deterministic barriers, so the outer/inner thread split —
+        // including whether islands actually run concurrently — can
+        // never change the result
+        let (f, codes) = small_frame();
+        let mk = |threads| GenDstConfig {
+            generations: 8,
+            population: 30,
+            islands: 3,
+            migration_interval: 2,
+            migration_k: 2,
+            threads,
+            seed: 29,
+            ..Default::default()
+        };
+        let serial = gen_dst(&f, &codes, &EntropyMeasure, 25, 3, &mk(1));
+        let wide = gen_dst(&f, &codes, &EntropyMeasure, 25, 3, &mk(8));
+        let wider = gen_dst(&f, &codes, &EntropyMeasure, 25, 3, &mk(16));
+        assert_eq!(serial.dst, wide.dst);
+        assert_eq!(serial.loss.to_bits(), wide.loss.to_bits());
+        assert_eq!(serial.generations_run, wide.generations_run);
+        assert_eq!(serial.fitness_evals, wide.fitness_evals);
+        assert_eq!(serial.memo_hits, wide.memo_hits);
+        assert_eq!(wide.dst, wider.dst);
+        assert_eq!(wide.loss.to_bits(), wider.loss.to_bits());
+    }
+
+    #[test]
+    fn prop_multi_island_invariant_to_migration_scheduling_order() {
+        // the same property across random island/migration shapes:
+        // threads=1 executes islands strictly in order, threads=N
+        // interleaves them arbitrarily — the barrier + collect-then-
+        // apply migration must make both identical
+        let (f, codes) = small_frame();
+        check_prop("island schedule invariance", 6, |rng| {
+            let cfg = GenDstConfig {
+                generations: 3 + rng.usize_below(6),
+                population: 12 + rng.usize_below(24),
+                islands: 2 + rng.usize_below(3),
+                migration_interval: 1 + rng.usize_below(3),
+                migration_k: 1 + rng.usize_below(3),
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let ordered = gen_dst(
+                &f,
+                &codes,
+                &EntropyMeasure,
+                20,
+                3,
+                &GenDstConfig { threads: 1, ..cfg.clone() },
+            );
+            let interleaved = gen_dst(
+                &f,
+                &codes,
+                &EntropyMeasure,
+                20,
+                3,
+                &GenDstConfig { threads: 8, ..cfg.clone() },
+            );
+            assert_eq!(ordered.dst, interleaved.dst);
+            assert_eq!(ordered.loss.to_bits(), interleaved.loss.to_bits());
+            assert_eq!(ordered.fitness_evals, interleaved.fitness_evals);
+        });
+    }
+
+    #[test]
+    fn multi_island_run_is_valid_and_deterministic() {
+        let (f, codes) = small_frame();
+        let cfg = GenDstConfig {
+            generations: 10,
+            population: 40,
+            islands: 4,
+            migration_interval: 3,
+            seed: 41,
+            ..Default::default()
+        };
+        let a = gen_dst(&f, &codes, &EntropyMeasure, 27, 3, &cfg);
+        let b = gen_dst(&f, &codes, &EntropyMeasure, 27, 3, &cfg);
+        a.dst.validate(f.n_rows, f.n_cols(), f.target).unwrap();
+        assert_eq!(a.dst.rows.len(), 27);
+        assert_eq!(a.dst, b.dst);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+
+    #[test]
+    fn resolve_islands_clamps_and_auto_sizes() {
+        // explicit counts are clamped to [1, population]
+        assert_eq!(resolve_islands(3, 1, 100), 3);
+        assert_eq!(resolve_islands(500, 1, 40), 40);
+        assert_eq!(resolve_islands(1, 64, 100), 1);
+        // auto: bounded by the thread budget AND the per-island floor
+        assert_eq!(resolve_islands(0, 2, 100), 2);
+        assert_eq!(resolve_islands(0, 64, 100), 100 / MIN_ISLAND_POP);
+        assert_eq!(resolve_islands(0, 64, 8), 1, "tiny populations stay single-island");
+        assert!(resolve_islands(0, 0, 100) >= 1);
+    }
+
+    #[test]
+    fn time_budget_mode_is_anytime_and_valid() {
+        let (f, codes) = small_frame();
+        // a generous budget on a tiny input: converges (patience)
+        // before the deadline, so the run is NOT marked timed out
+        let cfg = GenDstConfig {
+            population: 16,
+            islands: 2,
+            convergence_patience: 2,
+            stop: StopRule::TimeBudget { seconds: 30.0 },
+            seed: 9,
+            ..Default::default()
+        };
+        let res = gen_dst(&f, &codes, &EntropyMeasure, 20, 3, &cfg);
+        res.dst.validate(f.n_rows, f.n_cols(), f.target).unwrap();
+        assert!(!res.timed_out, "converged run must not report a timeout");
+        assert!(res.generations_run > 0);
+        // the setup window (F(D) + initial fills) nests in the total
+        assert!(res.setup_s >= 0.0 && res.setup_s <= res.elapsed_s);
+
+        // a zero budget still returns a valid best-so-far subset
+        let cfg = GenDstConfig {
+            population: 12,
+            stop: StopRule::TimeBudget { seconds: 0.0 },
+            seed: 10,
+            ..Default::default()
+        };
+        let res = gen_dst(&f, &codes, &EntropyMeasure, 20, 3, &cfg);
+        res.dst.validate(f.n_rows, f.n_cols(), f.target).unwrap();
+        assert!(res.timed_out, "an expired budget must report the timeout");
+        assert!(res.loss >= 0.0);
+    }
+
+    #[test]
     fn prop_gen_dst_output_always_valid() {
         let (f, codes) = small_frame();
         check_prop("gen_dst output invariants", 10, |rng| {
@@ -381,6 +898,7 @@ mod tests {
             let cfg = GenDstConfig {
                 generations: 3,
                 population: 10,
+                islands: 1 + rng.usize_below(3),
                 seed: rng.next_u64(),
                 ..Default::default()
             };

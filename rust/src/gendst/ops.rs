@@ -129,15 +129,21 @@ pub(crate) fn crossover_pair(
     rng: &mut Rng,
 ) -> (Candidate, Candidate) {
     if rng.bool_with(p_rc) {
-        // rows cross; columns inherited. The merged row sets share no
-        // clean delta with either parent, so children start cache-less.
+        // rows cross; columns inherited. Each child keeps one parent's
+        // column set, so that parent's cache is projected through the
+        // row-set difference: histograms delta-update by the swapped
+        // rows instead of rebuilding (DESIGN.md §4.5, resolved). When
+        // the diff is too large to pay off, projection declines and
+        // the child starts cache-less exactly as before.
         let n = a.rows.len();
         let s = if n <= 2 { 1 } else { 1 + rng.usize_below(n - 1) };
         let r_ab = cross_sets(&a.rows, &b.rows, s, frame.n_rows, None, rng);
         let r_ba = cross_sets(&b.rows, &a.rows, s, frame.n_rows, None, rng);
+        let cache_ab = a.cache.as_ref().and_then(|c| c.project_rows(&a.rows, &r_ab));
+        let cache_ba = b.cache.as_ref().and_then(|c| c.project_rows(&b.rows, &r_ba));
         (
-            Candidate { rows: r_ab, cols: a.cols.clone(), loss: None, cache: None },
-            Candidate { rows: r_ba, cols: b.cols.clone(), loss: None, cache: None },
+            Candidate { rows: r_ab, cols: a.cols.clone(), loss: None, cache: cache_ab },
+            Candidate { rows: r_ba, cols: b.cols.clone(), loss: None, cache: cache_ba },
         )
     } else {
         // columns cross; each child keeps one parent's row set, so the

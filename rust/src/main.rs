@@ -11,6 +11,12 @@
 //! Common flags: --scale 0.05 --reps 3 --evals 16 --searchers smbo,gp
 //!               --datasets D1,D2 --out results --threads N --seed S
 //!
+//! Island engine (DESIGN.md §4.6): `--islands K` splits the Gen-DST
+//! population into K concurrently-evolving islands with ring migration
+//! (gendst: 0 = auto from the thread budget; exp pins K ≥ 1 so records
+//! stay machine-independent). `gendst --time-budget S` runs the
+//! anytime mode: best subset found within S seconds of wall clock.
+//!
 //! Real datasets (DESIGN.md §5.3): anywhere a dataset is named, a CSV
 //! path works — `--data my.csv` (sugar for `--dataset`/`--datasets`),
 //! `--datasets D1,path:my.csv`, or any spec ending in `.csv`. Ingestion
@@ -70,6 +76,9 @@ fn exp_config(args: &Args) -> ExpConfig {
         csv_header: args.str_opt("header").map(parse_header_flag),
         out_dir: PathBuf::from(args.str_or("out", "results")),
         threads: args.usize_or("threads", defaults.threads),
+        // pinned per sweep (results-changing, journal-keyed); clamp 0
+        // up — auto-from-threads would make records machine-shaped
+        islands: args.usize_or("islands", defaults.islands).max(1),
         batch: args.usize_or("batch", defaults.batch),
         timing: TimingMode::by_name(&args.str_or("timing", defaults.timing.name())),
         journal: !args.flag("no-journal"),
@@ -176,23 +185,43 @@ fn cmd_gendst(args: &Args) {
     let (n, m) = gendst::default_dst_size(f.n_rows, f.n_cols());
     let n = args.usize_or("n", n);
     let m = args.usize_or("m", m);
+    let stop = match args.str_opt("time-budget") {
+        // anytime mode: best-so-far when the wall budget expires
+        Some(s) => gendst::StopRule::TimeBudget {
+            seconds: s.parse().unwrap_or_else(|_| {
+                panic!("--time-budget expects seconds, got {s:?}")
+            }),
+        },
+        None => gendst::StopRule::Generations,
+    };
     let cfg = GenDstConfig {
         generations: args.usize_or("generations", 30),
         population: args.usize_or("population", 100),
         threads: args.usize_or("threads", 0),
+        islands: args.usize_or("islands", 1), // 0 = auto from threads
+        migration_interval: args.usize_or("migration-interval", 5),
+        migration_k: args.usize_or("migration-k", 2),
+        stop,
         seed: args.u64_or("seed", 0),
         ..Default::default()
     };
+    let islands = gendst::resolve_islands(cfg.islands, cfg.threads, cfg.population);
     println!(
-        "{symbol} ({}x{}) -> DST ({n}x{m}), measure={}",
+        "{symbol} ({}x{}) -> DST ({n}x{m}), measure={}, islands={islands}",
         f.n_rows,
         f.n_cols(),
         measure.name()
     );
     let res = gendst::gen_dst(&f, &codes, measure.as_ref(), n, m, &cfg);
     println!(
-        "loss={:.6} F(D)={:.4} evals={} memo_hits={} generations={} time={:.2}s",
-        res.loss, res.f_full, res.fitness_evals, res.memo_hits, res.generations_run, res.elapsed_s
+        "loss={:.6} F(D)={:.4} evals={} memo_hits={} generations={}{} time={:.2}s",
+        res.loss,
+        res.f_full,
+        res.fitness_evals,
+        res.memo_hits,
+        res.generations_run,
+        if res.timed_out { " (time budget hit)" } else { "" },
+        res.elapsed_s
     );
     println!("cols: {:?}", res.dst.cols);
 }
@@ -225,7 +254,11 @@ fn cmd_run(args: &Args) {
     let strategy_name = args.str_or("strategy", "gendst");
     let (_symbol, f, codes) = load_named_dataset(args, true);
     let codes = codes.expect("codes requested");
-    let strategy = baselines::by_name(&strategy_name);
+    let strategy = baselines::by_name_with(
+        &strategy_name,
+        args.usize_or("threads", 0),
+        args.usize_or("islands", 1),
+    );
     let searcher = SearcherKind::by_name(&args.str_or("searcher", "smbo"));
     let automl = AutoMlConfig::new(searcher, args.usize_or("evals", 16), args.u64_or("seed", 0));
     let cfg = SubStratConfig {

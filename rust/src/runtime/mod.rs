@@ -92,7 +92,8 @@ impl XlaRuntime {
         let name = self.load(name)?;
         match name {
             "entropy_subset" => {
-                let h = native::entropy_subset(i32s(inputs, 0)?, f32s(inputs, 1)?, f32s(inputs, 2)?);
+                let h =
+                    native::entropy_subset(i32s(inputs, 0)?, f32s(inputs, 1)?, f32s(inputs, 2)?);
                 Ok(vec![Literal::F32(vec![h])])
             }
             "entropy_batch" => {

@@ -12,7 +12,9 @@
 
 use crate::automl::eval::EvalEngine;
 use crate::automl::space::{ConfigSpace, PipelineConfig};
-use crate::automl::{run_automl_with_engine, AutoMlConfig, AutoMlResult};
+use crate::automl::{
+    run_automl_with_engine, run_automl_with_engine_keyed, AutoMlConfig, AutoMlResult,
+};
 use crate::baselines::{StrategyContext, StrategyOutcome, SubsetStrategy};
 use crate::data::{CodeMatrix, Frame};
 use crate::gendst::default_dst_size;
@@ -121,17 +123,23 @@ pub fn run_substrat(
             .max(1);
         ft_cfg.warm_start = vec![automl_sub.best.clone()];
         ft_cfg.seed = automl_cfg.seed ^ 0xf1;
+        // the full frame's content key, computed ONCE and threaded into
+        // the fine-tune run below — the seed fingerprinted the full
+        // frame here AND again inside the fine-tune run, charging an
+        // extra O(n·m) pass to the timed window (regression:
+        // full_frame_is_fingerprinted_once_per_run)
+        let full_key = crate::automl::eval::frame_key(frame);
         // the explicit warm-start carry-over: M' enters the fine-tune
         // run — under the FULL frame's key, the fine-tune run's own
         // seed and fold count — carrying its subset score
         engine.seed_score(
-            crate::automl::eval::frame_key(frame),
+            full_key,
             ft_cfg.seed,
             ft_cfg.cv_folds,
             &automl_sub.best,
             automl_sub.best_cv,
         );
-        Some(run_automl_with_engine(frame, &ft_cfg, &mut engine))
+        Some(run_automl_with_engine_keyed(frame, &ft_cfg, &mut engine, Some(full_key)))
     } else {
         None
     };
@@ -242,6 +250,41 @@ mod tests {
         }
         // the seeded head is the one deliberate exception
         assert_eq!(ft.history[0].1.to_bits(), run.automl_sub.best_cv.to_bits());
+    }
+
+    #[test]
+    fn full_frame_is_fingerprinted_once_per_run() {
+        // PR 4 follow-up: frame_key(full) was computed twice inside the
+        // timed window (once for seed_score, once inside the fine-tune
+        // run), charging an extra O(n·m) content pass to time_sub_s.
+        // One SubStrat run now pays exactly one pass per distinct
+        // frame: the subset and (when fine-tuning) the full frame.
+        use crate::automl::eval::frame_key_passes;
+        let (f, codes) = setup();
+        let strategy = baselines::by_name("gendst");
+        let automl = AutoMlConfig::new(SearcherKind::Random, 6, 21);
+        let cfg = SubStratConfig {
+            fine_tune_frac: 0.5,
+            ..Default::default()
+        };
+        let before = frame_key_passes();
+        let _ = run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &cfg);
+        assert_eq!(
+            frame_key_passes() - before,
+            2,
+            "expected exactly two passes: the subset and the full frame"
+        );
+        let nf = SubStratConfig {
+            fine_tune: false,
+            ..Default::default()
+        };
+        let before = frame_key_passes();
+        let _ = run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &nf);
+        assert_eq!(
+            frame_key_passes() - before,
+            1,
+            "SubStrat-NF touches only the subset frame"
+        );
     }
 
     #[test]

@@ -58,6 +58,19 @@ pub fn resolve_threads(requested: usize) -> usize {
     }
 }
 
+/// Split a thread allowance into (outer concurrent tasks, inner worker
+/// threads per task) with `outer × inner <= total`: outer is capped at
+/// `want_outer`, and the allowance divides evenly across the outer
+/// tasks. The island-model Gen-DST engine runs its islands through
+/// this split so concurrent islands never oversubscribe the budget the
+/// experiment scheduler handed the cell (DESIGN.md §4.6/§5.2); the
+/// runner's `TimingMode::split_budget` delegates its CpuProxy arm here.
+pub fn split_budget(total: usize, want_outer: usize) -> (usize, usize) {
+    let total = total.max(1);
+    let outer = total.min(want_outer.max(1));
+    (outer, (total / outer).max(1))
+}
+
 /// Apply `f` to every item in parallel, preserving order of results.
 ///
 /// `f` must be `Sync` (it is shared across workers); items are only read.
@@ -156,6 +169,24 @@ mod tests {
         assert_eq!(resolve_threads(0), max_threads());
         assert_eq!(resolve_threads(3), 3);
         assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn split_budget_never_oversubscribes() {
+        for total in [0usize, 1, 2, 3, 4, 7, 8, 16] {
+            for want in [0usize, 1, 2, 5, 100] {
+                let (outer, inner) = split_budget(total, want);
+                assert!(outer >= 1 && inner >= 1);
+                assert!(
+                    outer * inner <= total.max(1),
+                    "split {outer}x{inner} exceeds budget {total}"
+                );
+                assert!(outer <= want.max(1), "outer {outer} > requested {want}");
+            }
+        }
+        assert_eq!(split_budget(8, 4), (4, 2));
+        assert_eq!(split_budget(8, 3), (3, 2));
+        assert_eq!(split_budget(2, 8), (2, 1));
     }
 
     #[test]
