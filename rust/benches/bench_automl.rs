@@ -1,80 +1,10 @@
-//! AutoML evaluation-engine benchmark (DESIGN.md §5.1): the serial,
-//! unmemoized scoring path (the seed's behavior) against the parallel +
-//! memoized engine on identical seeds and identical batch sizes — the
-//! two are bit-compatible (same fold plan, same per-(config, fold) fit
-//! RNGs), so they return the identical best configuration and the delta
-//! is pure engine speed. The preamble asserts that equivalence and the
-//! thread-count determinism property before timing anything.
-
-use substrat::automl::eval::EvalPolicy;
-use substrat::automl::{run_automl, AutoMlConfig, SearcherKind};
-use substrat::data::registry;
-use substrat::util::bench::{black_box, Bench};
-
-fn serial_naive() -> EvalPolicy {
-    EvalPolicy {
-        threads: 1,
-        memoize: false,
-        early_termination: false,
-    }
-}
-
-fn cfg_with(
-    searcher: SearcherKind,
-    evals: usize,
-    batch: usize,
-    policy: EvalPolicy,
-) -> AutoMlConfig {
-    let mut cfg = AutoMlConfig::new(searcher, evals, 11);
-    cfg.batch_size = batch;
-    cfg.policy = policy;
-    cfg
-}
+//! Thin wrapper: `cargo bench --bench bench_automl` runs the shared
+//! `automl` suite of the bench-trajectory subsystem (DESIGN.md §5.4) —
+//! serial-naive vs parallel+memoized engine, with the determinism
+//! preamble and same-batch equivalence assertions kept — and writes
+//! `BENCH_<n>.json` under `results/bench_automl`. `substrat bench
+//! automl` is the flag-settable front door.
 
 fn main() {
-    // determinism preamble: identical winner across thread counts, and
-    // serial-naive vs parallel-memoized identical on the same seed
-    let f = registry::load("D2", 0.05, 3);
-    let reference = run_automl(&f, &cfg_with(SearcherKind::Random, 8, 4, serial_naive()));
-    for threads in [2usize, 4, 8] {
-        let p = EvalPolicy {
-            threads,
-            ..Default::default()
-        };
-        let r = run_automl(&f, &cfg_with(SearcherKind::Random, 8, 4, p));
-        assert_eq!(r.best, reference.best, "thread count changed the winner");
-        assert_eq!(r.best_cv.to_bits(), reference.best_cv.to_bits());
-    }
-    println!("determinism: winner identical across serial/2/4/8 threads + memo on/off");
-
-    let mut b = Bench::new();
-    for (symbol, scale, evals) in [("D2", 0.08, 10), ("D3", 0.12, 10)] {
-        let f = registry::load(symbol, scale, 7);
-        let shape = format!("{symbol} {}x{}", f.n_rows, f.n_cols());
-        for searcher in [SearcherKind::Smbo, SearcherKind::Gp] {
-            for (tag, batch, policy) in [
-                ("serial-naive b=1", 1usize, serial_naive()),
-                ("serial-naive b=4", 4, serial_naive()),
-                ("par-memoized b=4", 4, EvalPolicy::default()),
-            ] {
-                let cfg = cfg_with(searcher, evals, batch, policy);
-                b.bench(&format!("automl {} {tag} {shape}", searcher.name()), || {
-                    black_box(run_automl(&f, &cfg));
-                });
-            }
-            // same-batch equivalence: the engine must not change the
-            // outcome, only the wall clock
-            let slow = run_automl(&f, &cfg_with(searcher, evals, 4, serial_naive()));
-            let fast = run_automl(&f, &cfg_with(searcher, evals, 4, EvalPolicy::default()));
-            assert_eq!(slow.best, fast.best, "{shape}: engine changed the winner");
-            println!(
-                "  [{shape} {}] identical best {} | engine: scored {} memo hits {}",
-                searcher.name(),
-                fast.best.describe(),
-                fast.scored_evals,
-                fast.memo_hits
-            );
-        }
-    }
-    println!("\n{}", b.markdown());
+    substrat::experiments::bench::bench_binary_main("automl");
 }

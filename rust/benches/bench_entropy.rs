@@ -1,70 +1,10 @@
-//! Micro-benchmark: the Gen-DST fitness hot path — native stack-histogram
-//! entropy vs the AOT Pallas kernel on PJRT (single + batched), across
-//! subset sizes. This is the L1/L3 §Perf instrument.
-//!
-//!   cargo bench --bench bench_entropy   (BENCH_QUICK=1 for smoke runs)
-
-use substrat::data::{registry, CodeMatrix};
-use substrat::measures::entropy::{
-    column_hist, entropy_of_counts, full_entropy, hist_swap_row, subset_entropy,
-};
-use substrat::runtime::{self, entropy_exec::EntropyExec};
-use substrat::util::bench::{black_box, Bench};
-use substrat::util::rng::Rng;
+//! Thin wrapper: `cargo bench --bench bench_entropy` runs the shared
+//! `entropy` suite of the bench-trajectory subsystem (DESIGN.md §5.4) —
+//! native stack-histogram entropy vs the AOT Pallas kernel on PJRT,
+//! plus the incremental-engine histogram primitives — and writes
+//! `BENCH_<n>.json` under `results/bench_entropy`. `substrat bench
+//! entropy` is the flag-settable front door.
 
 fn main() {
-    let f = registry::load("D1", 0.1, 1); // 12,988 x 23
-    let codes = CodeMatrix::from_frame(&f);
-    let mut rng = Rng::new(42);
-    let mut b = Bench::new();
-
-    for (n, m) in [(114usize, 6usize), (1000, 8), (1000, 31)] {
-        let rows = rng.sample_distinct(f.n_rows, n.min(f.n_rows));
-        let mut cols = rng.sample_distinct(f.n_cols(), m.min(f.n_cols()));
-        if !cols.contains(&(f.target as u32)) {
-            cols[0] = f.target as u32;
-        }
-        b.bench_throughput(&format!("native subset_entropy {n}x{m}"), n * m, || {
-            black_box(subset_entropy(&codes, &rows, &cols));
-        });
-        let rt = runtime::thread_current().unwrap();
-        let mut exec = EntropyExec::new(&rt);
-        b.bench_throughput(&format!("pjrt   subset_entropy {n}x{m}"), n * m, || {
-            black_box(exec.subset_entropy(&codes, &rows, &cols).unwrap());
-        });
-        // batched: 16 candidates per call
-        let subsets: Vec<(&[u32], &[u32])> =
-            (0..16).map(|_| (rows.as_slice(), cols.as_slice())).collect();
-        b.bench_throughput(&format!("pjrt   batch16 entropy {n}x{m}"), 16 * n * m, || {
-            black_box(exec.batch_entropy(&codes, &subsets).unwrap());
-        });
-    }
-    b.bench("native full_entropy 13k x 23", || {
-        black_box(full_entropy(&codes));
-    });
-
-    // incremental-engine primitives: a cached row swap (O(1) hist delta
-    // + O(K) re-entropy) vs the O(n) from-scratch column rebuild it
-    // replaces in the Gen-DST fitness engine
-    for n in [114usize, 1000] {
-        let rows = rng.sample_distinct(f.n_rows, n);
-        let col0 = codes.column(0);
-        let mut hist = column_hist(&codes, 0, &rows);
-        let (old, new) = (rows[0], {
-            let mut v = 0u32;
-            while rows.contains(&v) {
-                v += 1;
-            }
-            v
-        });
-        b.bench_throughput(&format!("rebuild column_hist n={n}"), n, || {
-            black_box(column_hist(&codes, 0, &rows));
-        });
-        b.bench_throughput(&format!("delta hist_swap_row n={n}"), n, || {
-            hist_swap_row(&mut hist, col0, old, new);
-            hist_swap_row(&mut hist, col0, new, old); // restore
-            black_box(entropy_of_counts(&hist, n));
-        });
-    }
-    println!("\n{}", b.markdown());
+    substrat::experiments::bench::bench_binary_main("entropy");
 }

@@ -1,32 +1,9 @@
-//! cargo-bench driver regenerating the paper's Figure 2 per-dataset points at a
-//! CI-sized scale (one cheap dataset, one rep). For publication-scale
-//! numbers use `substrat exp fig2` with the full defaults — this bench
-//! exists so `cargo bench` regenerates every paper artifact end to end.
-
-use std::path::PathBuf;
-use substrat::automl::SearcherKind;
-use substrat::experiments::{fig2, ExpConfig};
-use substrat::util::timer::Stopwatch;
+//! Thin wrapper: `cargo bench --bench bench_fig2_per_dataset` runs the
+//! shared `fig2` suite of the bench-trajectory subsystem (DESIGN.md
+//! §5.4) in quick mode and writes `BENCH_<n>.json` under
+//! `results/bench_fig2`. `substrat bench fig2` is the flag-settable
+//! front door.
 
 fn main() {
-    let cfg = ExpConfig {
-        scale: 0.05,
-        min_rows: 2_000,
-        max_rows: 4_000,
-        reps: 1,
-        full_evals: 6,
-        searchers: vec![SearcherKind::Smbo],
-        datasets: vec!["D2".into(), "D3".into()],
-        // full hardware budget; Wall timing serializes cells with
-        // exclusive inner parallelism (DESIGN.md §5.2)
-        threads: 0,
-        // a bench must re-measure: never resume from a results journal
-        journal: false,
-        out_dir: PathBuf::from("results/bench_fig2"),
-        ..Default::default()
-    };
-    std::fs::create_dir_all(&cfg.out_dir).ok();
-    let sw = Stopwatch::start();
-    let _ = fig2::run(&cfg);
-    println!("bench fig2 total: {:.2}s (quick mode)", sw.elapsed_s());
+    substrat::experiments::bench::bench_binary_main("fig2");
 }

@@ -1,92 +1,10 @@
-//! End-to-end Gen-DST benchmark at the paper's hyper-parameters
-//! (psi=30, phi=100) across dataset scales — the L3 §Perf instrument for
-//! the GA loop. Benches the serial from-scratch reference backend
-//! (`NaiveNative`, the seed's behavior) against the incremental +
-//! parallel engine (`Incremental`) on identical inputs and seeds; the
-//! two backends return identical results, so the delta is pure engine
-//! speed (histogram reuse + loss memo + parallel fills). A second
-//! section compares the single-population engine against the island
-//! model (DESIGN.md §4.6) — the islands parallelize the generation
-//! loop itself, not just the fills — with the single-island run
-//! asserted bit-equal to the plain engine's winner.
-
-use substrat::data::{registry, CodeMatrix};
-use substrat::gendst::fitness::FitnessBackend;
-use substrat::gendst::{default_dst_size, gen_dst, GenDstConfig};
-use substrat::measures::entropy::EntropyMeasure;
-use substrat::util::bench::{black_box, Bench};
+//! Thin wrapper: `cargo bench --bench bench_gendst` runs the shared
+//! `gendst` suite of the bench-trajectory subsystem (DESIGN.md §5.4) —
+//! naive vs incremental backend, islands vs single population, with the
+//! single-island equivalence assertion kept — and writes
+//! `BENCH_<n>.json` under `results/bench_gendst`. `substrat bench
+//! gendst` is the flag-settable front door.
 
 fn main() {
-    let mut b = Bench::new();
-    for (symbol, scale) in [("D2", 0.4), ("D2", 1.0), ("D3", 1.0), ("D1", 0.1)] {
-        let f = registry::load(symbol, scale, 7);
-        let codes = CodeMatrix::from_frame(&f);
-        let (n, m) = default_dst_size(f.n_rows, f.n_cols());
-        let shape = format!("{symbol} {}x{} -> ({n},{m})", f.n_rows, f.n_cols());
-        for (tag, backend) in [
-            ("naive      ", FitnessBackend::NaiveNative),
-            ("incremental", FitnessBackend::Incremental),
-        ] {
-            let cfg = GenDstConfig { backend, seed: 1, ..Default::default() };
-            b.bench(&format!("gen_dst {tag} {shape}"), || {
-                black_box(gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg));
-            });
-        }
-        // context line: how much re-scoring the memo absorbed
-        let cfg = GenDstConfig { seed: 1, ..Default::default() };
-        let res = gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg);
-        println!(
-            "  [{shape}] evals={} memo_hits={} generations={}",
-            res.fitness_evals, res.memo_hits, res.generations_run
-        );
-    }
-
-    // islands vs single population (same total φ, same seed): the
-    // island engine's win is wall clock — the generation loop itself
-    // fans out — while `islands = 1` must reproduce the plain engine's
-    // winner exactly (PR 5 acceptance criterion)
-    let f = registry::load("D3", 1.0, 7);
-    let codes = CodeMatrix::from_frame(&f);
-    let (n, m) = default_dst_size(f.n_rows, f.n_cols());
-    let shape = format!("D3 {}x{} -> ({n},{m})", f.n_rows, f.n_cols());
-    for islands in [1usize, 4] {
-        let cfg = GenDstConfig { islands, seed: 1, ..Default::default() };
-        b.bench(&format!("gen_dst islands={islands}   {shape}"), || {
-            black_box(gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg));
-        });
-    }
-    // non-vacuous single-island check at paper scale: the islands=1
-    // engine must land on the same winner as a single-population run
-    // through the independent from-scratch reference backend (the
-    // engine-shape bit-identity against the pre-island loop itself is
-    // property-tested in gendst::tests)
-    let reference = gen_dst(
-        &f,
-        &codes,
-        &EntropyMeasure,
-        n,
-        m,
-        &GenDstConfig {
-            backend: FitnessBackend::NaiveNative,
-            islands: 1,
-            seed: 1,
-            ..Default::default()
-        },
-    );
-    let single = gen_dst(
-        &f,
-        &codes,
-        &EntropyMeasure,
-        n,
-        m,
-        &GenDstConfig { islands: 1, seed: 1, ..Default::default() },
-    );
-    assert_eq!(
-        single.dst, reference.dst,
-        "islands=1 must reproduce the single-population reference winner"
-    );
-    assert!((single.loss - reference.loss).abs() <= 1e-9);
-    println!("  [islands=1 == single-population reference winner: verified]");
-
-    println!("\n{}", b.markdown());
+    substrat::experiments::bench::bench_binary_main("gendst");
 }

@@ -1,53 +1,10 @@
-//! PJRT call-overhead benchmark: entropy artifact, train-step vs
-//! train-epoch (the §Perf L2 optimization), prediction. Quantifies the
-//! host<->XLA boundary cost that motivated the epoch-scan artifact.
-
-use substrat::data::Matrix;
-use substrat::runtime::models_exec::{
-    class_mask, pack_batch, pack_epoch, LogregParams, MlpParams, ModelsExec,
-};
-use substrat::runtime::shapes::{BATCH, EPOCH_TILES};
-use substrat::runtime::{self};
-use substrat::util::bench::{black_box, Bench};
-use substrat::util::rng::Rng;
+//! Thin wrapper: `cargo bench --bench bench_runtime` runs the shared
+//! `runtime` suite of the bench-trajectory subsystem (DESIGN.md §5.4) —
+//! PJRT call overhead: train-step vs train-epoch (the §Perf L2
+//! optimization) and prediction — and writes `BENCH_<n>.json` under
+//! `results/bench_runtime`. `substrat bench runtime` is the
+//! flag-settable front door.
 
 fn main() {
-    let rt = runtime::thread_current().expect("run `make artifacts`");
-    let exec = ModelsExec::new(&rt);
-    let mut rng = Rng::new(3);
-    let mut b = Bench::new();
-
-    let rows = EPOCH_TILES * BATCH;
-    let mut x = Matrix::zeros(rows, 32);
-    let mut y = vec![0u32; rows];
-    for i in 0..rows {
-        y[i] = (i % 2) as u32;
-        for j in 0..32 {
-            x.set(i, j, rng.normal() as f32);
-        }
-    }
-    let cmask = class_mask(2);
-    let idx_small: Vec<usize> = (0..BATCH).collect();
-    let idx_epoch: Vec<usize> = (0..rows).collect();
-    let batch = pack_batch(&x, &y, &idx_small).unwrap();
-    let epoch = pack_epoch(&x, &y, &idx_epoch).unwrap();
-
-    let mut lp = LogregParams::zeros();
-    b.bench_throughput("logreg_train_step (256 rows/call)", BATCH, || {
-        black_box(exec.logreg_step(&mut lp, &batch, &cmask, 0.1, 0.0).unwrap());
-    });
-    b.bench_throughput("logreg_train_epoch (4096 rows/call)", rows, || {
-        black_box(exec.logreg_epoch(&mut lp, &epoch, &cmask, 0.1, 0.0).unwrap());
-    });
-    let mut mp = MlpParams::init(&mut Rng::new(4));
-    b.bench_throughput("mlp_train_step (256 rows/call)", BATCH, || {
-        black_box(exec.mlp_step(&mut mp, &batch, &cmask, 0.1, 0.0).unwrap());
-    });
-    b.bench_throughput("mlp_train_epoch (4096 rows/call)", rows, || {
-        black_box(exec.mlp_epoch(&mut mp, &epoch, &cmask, 0.1, 0.0).unwrap());
-    });
-    b.bench_throughput("logreg_predict (256 rows/call)", BATCH, || {
-        black_box(exec.logreg_predict(&lp, &batch.x, &cmask).unwrap());
-    });
-    println!("\n{}", b.markdown());
+    substrat::experiments::bench::bench_binary_main("runtime");
 }

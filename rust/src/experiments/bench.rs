@@ -1,0 +1,1101 @@
+//! The benchmark-trajectory subsystem (DESIGN.md §5.4): one `bench`
+//! entry point that expands every perf target — the five paper-artifact
+//! sweeps and the four engine micro-benchmarks — into named *suites*
+//! and emits one machine-readable `BENCH_<n>.json` per run, so "the
+//! engine got faster" is a diff between two files instead of a claim.
+//!
+//! * **Cell suites** (`table4`, `fig2`, `fig3`, `fig4`, `fig5`) expand
+//!   through the same `cells()` functions the experiment drivers use
+//!   and run through the contention-free cell runner (§5.2) with the
+//!   journal forced off — a bench must re-measure, never resume.
+//! * **Micro suites** (`gendst`, `automl`, `entropy`, `runtime`) drive
+//!   `util::bench::Bench` (honors `BENCH_QUICK=1`) and keep the old
+//!   bench binaries' equivalence assertions: identical winners across
+//!   engines is checked before any number is trusted.
+//! * Every record is a flat single-line JSON object (`util::json`), so
+//!   the file round-trips bit-exactly; the writer validates each record
+//!   against [`validate_record`] before emitting it.
+//! * `--dry-run` exercises the full expansion + fingerprinting +
+//!   serialization + validation path with zero-cost stub measurements —
+//!   the harness stays integration-testable on machines where real
+//!   timings would be noise.
+//!
+//! File numbering: `BENCH_<n>.json` with `n = max(existing) + 1`,
+//! opened `create_new` — monotone, never clobbers.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::automl::eval::EvalPolicy;
+use crate::automl::{run_automl, AutoMlConfig, SearcherKind};
+use crate::data::registry::{self, DataSource};
+use crate::data::{CodeMatrix, Matrix};
+use crate::experiments::runner::{config_fingerprint, Cell, Runner};
+use crate::experiments::{fig2, fig3, fig4, fig5, table4, ExpConfig, RunRecord, TimingMode};
+use crate::gendst::fitness::FitnessBackend;
+use crate::gendst::{default_dst_size, gen_dst, GenDstConfig};
+use crate::measures::entropy::{
+    column_hist, entropy_of_counts, full_entropy, hist_swap_row, subset_entropy, EntropyMeasure,
+};
+use crate::runtime::models_exec::{
+    class_mask, pack_batch, pack_epoch, LogregParams, MlpParams, ModelsExec,
+};
+use crate::runtime::shapes::{BATCH, EPOCH_TILES};
+use crate::runtime::{self, entropy_exec::EntropyExec};
+use crate::util::bench::{black_box, Bench, BenchResult};
+use crate::util::json::{self, Json};
+use crate::util::pool;
+use crate::util::rng::Rng;
+use crate::util::timer::{CpuTimer, Stopwatch};
+
+/// Schema tag stamped into every header record. Versioning rule:
+/// *adding* a field is backward-compatible and keeps the tag (readers
+/// must ignore unknown fields); removing, renaming, or changing the
+/// meaning of a required field bumps it to `bench-v2`.
+pub const SCHEMA: &str = "bench-v1";
+
+/// What drives a suite's measurements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SuiteKind {
+    /// expands to experiment [`Cell`]s through the §5.2 runner
+    Cells,
+    /// drives `util::bench::Bench` micro-benchmarks
+    Micro,
+}
+
+/// One named suite in the registry.
+#[derive(Debug)]
+pub struct SuiteDef {
+    pub name: &'static str,
+    pub kind: SuiteKind,
+    /// the `benches/bench_*.rs` target this suite subsumes
+    pub replaces: &'static str,
+    pub what: &'static str,
+}
+
+/// The suite registry — one entry per historical bench binary, in a
+/// fixed order (record order inside a BENCH file follows it).
+pub fn suite_defs() -> &'static [SuiteDef] {
+    const DEFS: &[SuiteDef] = &[
+        SuiteDef {
+            name: "table4",
+            kind: SuiteKind::Cells,
+            replaces: "bench_table4",
+            what: "Table-4 strategy grid through the cell runner",
+        },
+        SuiteDef {
+            name: "fig2",
+            kind: SuiteKind::Cells,
+            replaces: "bench_fig2_per_dataset",
+            what: "per-dataset points (SMBO-pinned strategy grid)",
+        },
+        SuiteDef {
+            name: "fig3",
+            kind: SuiteKind::Cells,
+            replaces: "bench_fig3_skyline",
+            what: "configuration-skyline variant grid",
+        },
+        SuiteDef {
+            name: "fig4",
+            kind: SuiteKind::Cells,
+            replaces: "bench_fig4_heatmap",
+            what: "(n, m) DST-size heatmap grid",
+        },
+        SuiteDef {
+            name: "fig5",
+            kind: SuiteKind::Cells,
+            replaces: "bench_fig5_isolated",
+            what: "isolated n / m axis sweeps",
+        },
+        SuiteDef {
+            name: "gendst",
+            kind: SuiteKind::Micro,
+            replaces: "bench_gendst",
+            what: "GA engine: naive vs incremental, islands vs single",
+        },
+        SuiteDef {
+            name: "automl",
+            kind: SuiteKind::Micro,
+            replaces: "bench_automl",
+            what: "eval engine: serial-naive vs parallel-memoized",
+        },
+        SuiteDef {
+            name: "entropy",
+            kind: SuiteKind::Micro,
+            replaces: "bench_entropy",
+            what: "fitness hot path: native vs PJRT entropy kernels",
+        },
+        SuiteDef {
+            name: "runtime",
+            kind: SuiteKind::Micro,
+            replaces: "bench_runtime",
+            what: "PJRT call overhead: step vs epoch, predict",
+        },
+    ];
+    DEFS
+}
+
+fn suite_def(name: &str) -> &'static SuiteDef {
+    suite_defs()
+        .iter()
+        .find(|d| d.name == name)
+        .unwrap_or_else(|| panic!("unknown bench suite {name:?}"))
+}
+
+/// Resolve a CLI suite spec — `all`, `cells`, `micro`, or a comma list
+/// of suite names — into registry-ordered names. Panics (with the known
+/// names) on anything unknown, so typos fail before any work starts.
+pub fn resolve_suite_names(spec: &str) -> Vec<&'static str> {
+    let all = suite_defs();
+    let of_kind =
+        |k: SuiteKind| all.iter().filter(|d| d.kind == k).map(|d| d.name).collect::<Vec<_>>();
+    match spec {
+        "all" => all.iter().map(|d| d.name).collect(),
+        "cells" => of_kind(SuiteKind::Cells),
+        "micro" => of_kind(SuiteKind::Micro),
+        list => list
+            .split(',')
+            .map(|raw| {
+                let name = raw.trim();
+                all.iter().find(|d| d.name == name).map(|d| d.name).unwrap_or_else(|| {
+                    let known: Vec<&str> = all.iter().map(|d| d.name).collect();
+                    panic!("unknown bench suite {name:?} (want all|cells|micro or {known:?})")
+                })
+            })
+            .collect(),
+    }
+}
+
+/// The quick sweep shape the old per-figure bench binaries hard-coded:
+/// one cheap rep over two mid-size datasets, SMBO only, full hardware
+/// budget, journal off. `bench` starts from this; `--full` starts from
+/// `ExpConfig::default()` instead.
+pub fn quick_exp_config() -> ExpConfig {
+    ExpConfig {
+        scale: 0.05,
+        min_rows: 2_000,
+        max_rows: 4_000,
+        reps: 1,
+        full_evals: 6,
+        searchers: vec![SearcherKind::Smbo],
+        datasets: vec!["D2".into(), "D3".into()],
+        threads: 0,
+        journal: false,
+        out_dir: PathBuf::from("results"),
+        ..Default::default()
+    }
+}
+
+/// One bench invocation: which suites, real or dry, and the experiment
+/// shape cell suites expand against (`exp.out_dir` receives the
+/// `BENCH_<n>.json`; `exp.journal` is forced off).
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub suites: Vec<String>,
+    pub dry_run: bool,
+    pub exp: ExpConfig,
+}
+
+/// Where one bench run landed.
+#[derive(Debug, Clone)]
+pub struct BenchRun {
+    pub path: PathBuf,
+    pub run_no: u64,
+    pub records: usize,
+}
+
+/// One flat bench record before serialization.
+pub type Record = Vec<(String, Json)>;
+
+fn str_field(k: &str, v: &str) -> (String, Json) {
+    (k.to_string(), Json::Str(v.to_string()))
+}
+
+fn num_field(k: &str, v: f64) -> (String, Json) {
+    (k.to_string(), Json::Num(v))
+}
+
+fn bool_field(k: &str, v: bool) -> (String, Json) {
+    (k.to_string(), Json::Bool(v))
+}
+
+fn unix_time_s() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+fn hostname() -> String {
+    std::env::var("HOSTNAME")
+        .ok()
+        .or_else(|| {
+            std::fs::read_to_string("/proc/sys/kernel/hostname")
+                .ok()
+                .map(|s| s.trim().to_string())
+        })
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn header_record(defs: &[&SuiteDef], dry: bool, exp: &ExpConfig) -> Record {
+    let suites: Vec<&str> = defs.iter().map(|d| d.name).collect();
+    vec![
+        str_field("record", "header"),
+        str_field("schema", SCHEMA),
+        str_field("suites", &suites.join(",")),
+        str_field("timing", exp.timing.name()),
+        num_field("threads", pool::resolve_threads(exp.threads) as f64),
+        str_field("host", &hostname()),
+        str_field("os", std::env::consts::OS),
+        str_field("arch", std::env::consts::ARCH),
+        str_field("toolchain", option_env!("RUSTUP_TOOLCHAIN").unwrap_or("unknown")),
+        str_field("crate_version", env!("CARGO_PKG_VERSION")),
+        num_field("unix_time", unix_time_s()),
+        bool_field("dry", dry),
+    ]
+}
+
+fn suite_record(suite: &str, cells: usize, wall_s: f64, cpu_s: f64, dry: bool) -> Record {
+    vec![
+        str_field("record", "suite"),
+        str_field("suite", suite),
+        num_field("cells", cells as f64),
+        num_field("wall_s", wall_s),
+        num_field("cpu_s", cpu_s),
+        bool_field("dry", dry),
+    ]
+}
+
+fn cell_record(
+    suite: &str,
+    cell: &Cell,
+    cell_fp: &str,
+    src_fp: &str,
+    cfg_fp: &str,
+    timing: TimingMode,
+    rec: Option<&RunRecord>,
+) -> Record {
+    let (tf, ts, af, asub) = match rec {
+        Some(r) => (r.time_full_s, r.time_sub_s, r.acc_full, r.acc_sub),
+        None => (0.0, 0.0, 0.0, 0.0),
+    };
+    vec![
+        str_field("record", "cell"),
+        str_field("suite", suite),
+        str_field("dataset", &cell.symbol),
+        str_field("strategy", &cell.strategy),
+        str_field("label", cell.label()),
+        str_field("searcher", cell.searcher.name()),
+        num_field("rep", cell.rep as f64),
+        str_field("dst", &cell.dst.tag()),
+        str_field("cell", cell_fp),
+        str_field("src", src_fp),
+        str_field("cfg", cfg_fp),
+        str_field("timing", timing.name()),
+        num_field("time_full_s", tf),
+        num_field("time_sub_s", ts),
+        num_field("acc_full", af),
+        num_field("acc_sub", asub),
+        bool_field("dry", rec.is_none()),
+    ]
+}
+
+fn micro_record(suite: &str, r: &BenchResult, dry: bool) -> Record {
+    let mut rec = vec![
+        str_field("record", "micro"),
+        str_field("suite", suite),
+        str_field("name", &r.name),
+        num_field("iters", r.iters as f64),
+        num_field("mean_ns", r.mean_ns),
+        num_field("std_ns", r.std_ns),
+    ];
+    if let Some(t) = r.throughput {
+        rec.push(num_field("throughput", t));
+    }
+    rec.push(bool_field("dry", dry));
+    rec
+}
+
+fn stub_micro(suite: &str, name: &str) -> Record {
+    micro_record(
+        suite,
+        &BenchResult {
+            name: name.to_string(),
+            iters: 0,
+            mean_ns: 0.0,
+            std_ns: 0.0,
+            throughput: None,
+        },
+        true,
+    )
+}
+
+fn counter_record(suite: &str, name: &str, value: f64, dry: bool) -> Record {
+    vec![
+        str_field("record", "counter"),
+        str_field("suite", suite),
+        str_field("name", name),
+        num_field("value", value),
+        bool_field("dry", dry),
+    ]
+}
+
+/// Validate one record against the documented schema. Required fields
+/// must be present with the right type; *unknown* fields are allowed —
+/// that is the additive half of the versioning rule. The writer calls
+/// this on every record before emitting, so a BENCH file can never
+/// contain a record this check would reject.
+pub fn validate_record(rec: &[(String, Json)]) -> Result<(), String> {
+    let str_of = |k: &str| -> Result<&str, String> {
+        json::get(rec, k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("missing/mistyped string field {k:?}"))
+    };
+    let num_of = |k: &str| -> Result<f64, String> {
+        let v = json::get(rec, k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("missing/mistyped number field {k:?}"))?;
+        if !v.is_finite() {
+            return Err(format!("non-finite number field {k:?}"));
+        }
+        Ok(v)
+    };
+    let nonneg = |k: &str| -> Result<f64, String> {
+        let v = num_of(k)?;
+        if v < 0.0 {
+            return Err(format!("negative field {k:?}: {v}"));
+        }
+        Ok(v)
+    };
+    let bool_of = |k: &str| -> Result<(), String> {
+        match json::get(rec, k) {
+            Some(Json::Bool(_)) => Ok(()),
+            _ => Err(format!("missing/mistyped bool field {k:?}")),
+        }
+    };
+    match str_of("record")? {
+        "header" => {
+            let schema = str_of("schema")?;
+            if schema != SCHEMA {
+                return Err(format!("schema {schema:?}, validator knows {SCHEMA:?} only"));
+            }
+            for k in ["suites", "timing", "host", "os", "arch", "toolchain", "crate_version"] {
+                str_of(k)?;
+            }
+            nonneg("threads")?;
+            nonneg("unix_time")?;
+            bool_of("dry")?;
+        }
+        "suite" => {
+            str_of("suite")?;
+            nonneg("cells")?;
+            nonneg("wall_s")?;
+            nonneg("cpu_s")?;
+            bool_of("dry")?;
+        }
+        "cell" => {
+            let keys = [
+                "suite", "dataset", "strategy", "label", "searcher", "dst", "cell", "src",
+                "cfg", "timing",
+            ];
+            for k in keys {
+                str_of(k)?;
+            }
+            let rep = nonneg("rep")?;
+            if rep.fract() != 0.0 {
+                return Err(format!("rep must be an integer, got {rep}"));
+            }
+            for k in ["time_full_s", "time_sub_s", "acc_full", "acc_sub"] {
+                nonneg(k)?;
+            }
+            bool_of("dry")?;
+        }
+        "micro" => {
+            str_of("suite")?;
+            str_of("name")?;
+            nonneg("iters")?;
+            nonneg("mean_ns")?;
+            nonneg("std_ns")?;
+            if json::get(rec, "throughput").is_some() {
+                nonneg("throughput")?;
+            }
+            bool_of("dry")?;
+        }
+        "counter" => {
+            str_of("suite")?;
+            str_of("name")?;
+            num_of("value")?;
+            bool_of("dry")?;
+        }
+        other => return Err(format!("unknown record kind {other:?}")),
+    }
+    Ok(())
+}
+
+/// `BENCH_<n>.json` for run number `n`.
+pub fn bench_file_name(n: u64) -> String {
+    format!("BENCH_{n}.json")
+}
+
+/// Parse a run number back out of a `BENCH_<n>.json` file name.
+pub fn parse_bench_file_name(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("BENCH_")?.strip_suffix(".json")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// The next run number for `dir`: `max(existing) + 1`, starting at 1.
+/// Non-matching file names are ignored, never renumbered.
+pub fn next_run_number(dir: &Path) -> u64 {
+    let mut max = 0u64;
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            if let Some(n) = entry.file_name().to_str().and_then(parse_bench_file_name) {
+                max = max.max(n);
+            }
+        }
+    }
+    max + 1
+}
+
+/// Claim the next `BENCH_<n>.json` with `create_new` semantics: if a
+/// concurrent run (or a stale scan) already owns the number, bump and
+/// retry — numbering is monotone and an existing file is never
+/// truncated or overwritten.
+fn allocate_bench_file(dir: &Path) -> (std::fs::File, PathBuf, u64) {
+    let mut n = next_run_number(dir);
+    loop {
+        let path = dir.join(bench_file_name(n));
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(file) => return (file, path, n),
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => n += 1,
+            Err(e) => panic!("cannot create {}: {e}", path.display()),
+        }
+    }
+}
+
+fn suite_cells(name: &str, cfg: &ExpConfig) -> Vec<Cell> {
+    match name {
+        "table4" => table4::cells(cfg),
+        "fig2" => fig2::cells(cfg),
+        "fig3" => fig3::cells(cfg),
+        "fig4" => fig4::cells(cfg),
+        "fig5" => fig5::cells(cfg),
+        other => panic!("not a cell suite: {other:?}"),
+    }
+}
+
+fn cell_suite_records(name: &str, exp: &ExpConfig, dry: bool, out: &mut Vec<Record>) {
+    let cells = suite_cells(name, exp);
+    let cfg_fp = config_fingerprint(exp);
+    let mut source_fps: HashMap<String, String> = HashMap::new();
+    for c in &cells {
+        if !source_fps.contains_key(c.symbol.as_str()) {
+            source_fps.insert(c.symbol.clone(), DataSource::parse(&c.symbol).fingerprint());
+        }
+    }
+    if dry {
+        // full expansion + fingerprinting, zero-cost stub measurements
+        for c in &cells {
+            let src = &source_fps[c.symbol.as_str()];
+            let fp = c.fingerprint(exp, &cfg_fp, src);
+            out.push(cell_record(name, c, &fp, src, &cfg_fp, exp.timing, None));
+        }
+        out.push(suite_record(name, cells.len(), 0.0, 0.0, true));
+        return;
+    }
+    // suite-level wall AND CPU totals bracket the runner, whatever
+    // `exp.timing` the per-cell windows use — the TimingMode split at
+    // suite granularity
+    let sw = Stopwatch::start();
+    let cpu = CpuTimer::start();
+    let outcomes = Runner::new(exp).run(&cells);
+    let (wall_s, cpu_s) = (sw.elapsed_s(), cpu.elapsed_s());
+    for o in &outcomes {
+        let src = &source_fps[o.cell.symbol.as_str()];
+        let fp = o.cell.fingerprint(exp, &cfg_fp, src);
+        out.push(cell_record(name, &o.cell, &fp, src, &cfg_fp, exp.timing, Some(&o.record)));
+    }
+    out.push(suite_record(name, outcomes.len(), wall_s, cpu_s, false));
+    println!(
+        "bench suite {name}: {} cell(s), wall {wall_s:.2}s, cpu {cpu_s:.2}s",
+        outcomes.len()
+    );
+}
+
+/// The (rows, cols) a registry symbol generates at `scale` — computed
+/// from the spec so dry runs name the same shapes real runs measure,
+/// without generating any data.
+fn registry_shape(symbol: &str, scale: f64) -> (usize, usize) {
+    let spec = registry::spec_for(symbol, scale, 7);
+    (spec.n_rows, spec.n_cols())
+}
+
+fn micro_suite_records(name: &str, dry: bool) -> Vec<Record> {
+    match name {
+        "gendst" => suite_gendst(dry),
+        "automl" => suite_automl(dry),
+        "entropy" => suite_entropy(dry),
+        "runtime" => suite_runtime(dry),
+        other => panic!("not a micro suite: {other:?}"),
+    }
+}
+
+/// GA-engine suite (subsumes `bench_gendst`): naive vs incremental
+/// backend per dataset scale, memo-hit-rate counters, islands-vs-single
+/// timing with the single-island equivalence assertion kept.
+fn suite_gendst(dry: bool) -> Vec<Record> {
+    const SUITE: &str = "gendst";
+    let mut out = Vec::new();
+    let mut b = Bench::new();
+    for (symbol, scale) in [("D2", 0.4), ("D2", 1.0), ("D3", 1.0), ("D1", 0.1)] {
+        let (rows, cols) = registry_shape(symbol, scale);
+        let (n, m) = default_dst_size(rows, cols);
+        let shape = format!("{symbol} {rows}x{cols} -> ({n},{m})");
+        if dry {
+            for tag in ["naive      ", "incremental"] {
+                out.push(stub_micro(SUITE, &format!("gen_dst {tag} {shape}")));
+            }
+            out.push(counter_record(SUITE, &format!("memo_hit_rate {shape}"), 0.0, true));
+            continue;
+        }
+        let f = registry::load(symbol, scale, 7);
+        let codes = CodeMatrix::from_frame(&f);
+        for (tag, backend) in [
+            ("naive      ", FitnessBackend::NaiveNative),
+            ("incremental", FitnessBackend::Incremental),
+        ] {
+            let cfg = GenDstConfig { backend, seed: 1, ..Default::default() };
+            let r = b
+                .bench(&format!("gen_dst {tag} {shape}"), || {
+                    black_box(gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg));
+                })
+                .clone();
+            out.push(micro_record(SUITE, &r, false));
+        }
+        let cfg = GenDstConfig { seed: 1, ..Default::default() };
+        let res = gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg);
+        let rate = res.memo_hits as f64 / (res.memo_hits + res.fitness_evals).max(1) as f64;
+        out.push(counter_record(SUITE, &format!("memo_hit_rate {shape}"), rate, false));
+    }
+
+    // islands vs single population (same total φ, same seed): the
+    // island engine's win is wall clock — the generation loop itself
+    // fans out — while islands=1 must reproduce the single-population
+    // reference winner (PR 5 acceptance criterion, kept live here)
+    let (rows, cols) = registry_shape("D3", 1.0);
+    let (n, m) = default_dst_size(rows, cols);
+    let shape = format!("D3 {rows}x{cols} -> ({n},{m})");
+    if dry {
+        for islands in [1usize, 4] {
+            out.push(stub_micro(SUITE, &format!("gen_dst islands={islands}   {shape}")));
+        }
+        out.push(counter_record(SUITE, &format!("islands_speedup {shape}"), 0.0, true));
+        return out;
+    }
+    let f = registry::load("D3", 1.0, 7);
+    let codes = CodeMatrix::from_frame(&f);
+    let mut means = Vec::new();
+    for islands in [1usize, 4] {
+        let cfg = GenDstConfig { islands, seed: 1, ..Default::default() };
+        let r = b
+            .bench(&format!("gen_dst islands={islands}   {shape}"), || {
+                black_box(gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg));
+            })
+            .clone();
+        means.push(r.mean_ns);
+        out.push(micro_record(SUITE, &r, false));
+    }
+    let speedup = means[0] / means[1].max(1e-9);
+    out.push(counter_record(SUITE, &format!("islands_speedup {shape}"), speedup, false));
+    let reference = gen_dst(
+        &f,
+        &codes,
+        &EntropyMeasure,
+        n,
+        m,
+        &GenDstConfig {
+            backend: FitnessBackend::NaiveNative,
+            islands: 1,
+            seed: 1,
+            ..Default::default()
+        },
+    );
+    let single = gen_dst(
+        &f,
+        &codes,
+        &EntropyMeasure,
+        n,
+        m,
+        &GenDstConfig { islands: 1, seed: 1, ..Default::default() },
+    );
+    assert_eq!(
+        single.dst, reference.dst,
+        "islands=1 must reproduce the single-population reference winner"
+    );
+    assert!((single.loss - reference.loss).abs() <= 1e-9);
+    out
+}
+
+fn serial_naive() -> EvalPolicy {
+    EvalPolicy {
+        threads: 1,
+        memoize: false,
+        early_termination: false,
+    }
+}
+
+fn automl_cfg(
+    searcher: SearcherKind,
+    evals: usize,
+    batch: usize,
+    policy: EvalPolicy,
+) -> AutoMlConfig {
+    let mut cfg = AutoMlConfig::new(searcher, evals, 11);
+    cfg.batch_size = batch;
+    cfg.policy = policy;
+    cfg
+}
+
+/// Eval-engine suite (subsumes `bench_automl`): serial-naive vs the
+/// parallel + memoized engine on identical seeds and batch sizes — the
+/// two are bit-compatible, so the delta is pure engine speed. The
+/// determinism preamble and same-batch equivalence assertions from the
+/// old binary run before anything is timed.
+fn suite_automl(dry: bool) -> Vec<Record> {
+    const SUITE: &str = "automl";
+    let mut out = Vec::new();
+    if !dry {
+        let f = registry::load("D2", 0.05, 3);
+        let reference = run_automl(&f, &automl_cfg(SearcherKind::Random, 8, 4, serial_naive()));
+        for threads in [2usize, 4, 8] {
+            let p = EvalPolicy { threads, ..Default::default() };
+            let r = run_automl(&f, &automl_cfg(SearcherKind::Random, 8, 4, p));
+            assert_eq!(r.best, reference.best, "thread count changed the winner");
+            assert_eq!(r.best_cv.to_bits(), reference.best_cv.to_bits());
+        }
+    }
+    let mut b = Bench::new();
+    for (symbol, scale, evals) in [("D2", 0.08, 10usize), ("D3", 0.12, 10)] {
+        let (rows, cols) = registry_shape(symbol, scale);
+        let shape = format!("{symbol} {rows}x{cols}");
+        for searcher in [SearcherKind::Smbo, SearcherKind::Gp] {
+            let variants = [
+                ("serial-naive b=1", 1usize, serial_naive()),
+                ("serial-naive b=4", 4, serial_naive()),
+                ("par-memoized b=4", 4, EvalPolicy::default()),
+            ];
+            if dry {
+                for (tag, _, _) in variants {
+                    let name = format!("automl {} {tag} {shape}", searcher.name());
+                    out.push(stub_micro(SUITE, &name));
+                }
+                let counter = format!("memo_hit_rate {shape} {}", searcher.name());
+                out.push(counter_record(SUITE, &counter, 0.0, true));
+                continue;
+            }
+            let f = registry::load(symbol, scale, 7);
+            for (tag, batch, policy) in variants {
+                let cfg = automl_cfg(searcher, evals, batch, policy);
+                let name = format!("automl {} {tag} {shape}", searcher.name());
+                let r = b
+                    .bench(&name, || {
+                        black_box(run_automl(&f, &cfg));
+                    })
+                    .clone();
+                out.push(micro_record(SUITE, &r, false));
+            }
+            // same-batch equivalence: the engine must not change the
+            // outcome, only the wall clock
+            let slow = run_automl(&f, &automl_cfg(searcher, evals, 4, serial_naive()));
+            let fast = run_automl(&f, &automl_cfg(searcher, evals, 4, EvalPolicy::default()));
+            assert_eq!(slow.best, fast.best, "{shape}: engine changed the winner");
+            let rate = fast.memo_hits as f64 / fast.evals.max(1) as f64;
+            let counter = format!("memo_hit_rate {shape} {}", searcher.name());
+            out.push(counter_record(SUITE, &counter, rate, false));
+        }
+    }
+    out
+}
+
+/// Entropy hot-path suite (subsumes `bench_entropy`): native
+/// stack-histogram entropy vs the AOT Pallas kernel on PJRT (single and
+/// batch-16), the full-table scan, and the incremental-engine
+/// primitives (O(1) hist delta vs O(n) column rebuild).
+fn suite_entropy(dry: bool) -> Vec<Record> {
+    const SUITE: &str = "entropy";
+    let mut out = Vec::new();
+    let pairs = [(114usize, 6usize), (1000, 8), (1000, 31)];
+    if dry {
+        for (n, m) in pairs {
+            out.push(stub_micro(SUITE, &format!("native subset_entropy {n}x{m}")));
+            out.push(stub_micro(SUITE, &format!("pjrt   subset_entropy {n}x{m}")));
+            out.push(stub_micro(SUITE, &format!("pjrt   batch16 entropy {n}x{m}")));
+        }
+        out.push(stub_micro(SUITE, "native full_entropy 13k x 23"));
+        for n in [114usize, 1000] {
+            out.push(stub_micro(SUITE, &format!("rebuild column_hist n={n}")));
+            out.push(stub_micro(SUITE, &format!("delta hist_swap_row n={n}")));
+        }
+        return out;
+    }
+    let f = registry::load("D1", 0.1, 1); // 12,988 x 23
+    let codes = CodeMatrix::from_frame(&f);
+    let mut rng = Rng::new(42);
+    let mut b = Bench::new();
+    for (n, m) in pairs {
+        let rows = rng.sample_distinct(f.n_rows, n.min(f.n_rows));
+        let mut cols = rng.sample_distinct(f.n_cols(), m.min(f.n_cols()));
+        if !cols.contains(&(f.target as u32)) {
+            cols[0] = f.target as u32;
+        }
+        let r = b
+            .bench_throughput(&format!("native subset_entropy {n}x{m}"), n * m, || {
+                black_box(subset_entropy(&codes, &rows, &cols));
+            })
+            .clone();
+        out.push(micro_record(SUITE, &r, false));
+        let rt = runtime::thread_current().unwrap();
+        let mut exec = EntropyExec::new(&rt);
+        let r = b
+            .bench_throughput(&format!("pjrt   subset_entropy {n}x{m}"), n * m, || {
+                black_box(exec.subset_entropy(&codes, &rows, &cols).unwrap());
+            })
+            .clone();
+        out.push(micro_record(SUITE, &r, false));
+        let subsets: Vec<(&[u32], &[u32])> =
+            (0..16).map(|_| (rows.as_slice(), cols.as_slice())).collect();
+        let r = b
+            .bench_throughput(&format!("pjrt   batch16 entropy {n}x{m}"), 16 * n * m, || {
+                black_box(exec.batch_entropy(&codes, &subsets).unwrap());
+            })
+            .clone();
+        out.push(micro_record(SUITE, &r, false));
+    }
+    let r = b
+        .bench("native full_entropy 13k x 23", || {
+            black_box(full_entropy(&codes));
+        })
+        .clone();
+    out.push(micro_record(SUITE, &r, false));
+    for n in [114usize, 1000] {
+        let rows = rng.sample_distinct(f.n_rows, n);
+        let col0 = codes.column(0);
+        let mut hist = column_hist(&codes, 0, &rows);
+        let (old, new) = (rows[0], {
+            let mut v = 0u32;
+            while rows.contains(&v) {
+                v += 1;
+            }
+            v
+        });
+        let r = b
+            .bench_throughput(&format!("rebuild column_hist n={n}"), n, || {
+                black_box(column_hist(&codes, 0, &rows));
+            })
+            .clone();
+        out.push(micro_record(SUITE, &r, false));
+        let r = b
+            .bench_throughput(&format!("delta hist_swap_row n={n}"), n, || {
+                hist_swap_row(&mut hist, col0, old, new);
+                hist_swap_row(&mut hist, col0, new, old); // restore
+                black_box(entropy_of_counts(&hist, n));
+            })
+            .clone();
+        out.push(micro_record(SUITE, &r, false));
+    }
+    out
+}
+
+/// PJRT call-overhead suite (subsumes `bench_runtime`): entropy-free
+/// model kernels — train-step vs train-epoch (the §Perf L2
+/// optimization) and prediction.
+fn suite_runtime(dry: bool) -> Vec<Record> {
+    const SUITE: &str = "runtime";
+    let names = [
+        "logreg_train_step (256 rows/call)",
+        "logreg_train_epoch (4096 rows/call)",
+        "mlp_train_step (256 rows/call)",
+        "mlp_train_epoch (4096 rows/call)",
+        "logreg_predict (256 rows/call)",
+    ];
+    if dry {
+        return names.iter().map(|n| stub_micro(SUITE, n)).collect();
+    }
+    let mut out = Vec::new();
+    let rt = runtime::thread_current().expect("run `make artifacts`");
+    let exec = ModelsExec::new(&rt);
+    let mut rng = Rng::new(3);
+    let mut b = Bench::new();
+
+    let rows = EPOCH_TILES * BATCH;
+    let mut x = Matrix::zeros(rows, 32);
+    let mut y = vec![0u32; rows];
+    for i in 0..rows {
+        y[i] = (i % 2) as u32;
+        for j in 0..32 {
+            x.set(i, j, rng.normal() as f32);
+        }
+    }
+    let cmask = class_mask(2);
+    let idx_small: Vec<usize> = (0..BATCH).collect();
+    let idx_epoch: Vec<usize> = (0..rows).collect();
+    let batch = pack_batch(&x, &y, &idx_small).unwrap();
+    let epoch = pack_epoch(&x, &y, &idx_epoch).unwrap();
+
+    let mut lp = LogregParams::zeros();
+    let r = b
+        .bench_throughput(names[0], BATCH, || {
+            black_box(exec.logreg_step(&mut lp, &batch, &cmask, 0.1, 0.0).unwrap());
+        })
+        .clone();
+    out.push(micro_record(SUITE, &r, false));
+    let r = b
+        .bench_throughput(names[1], rows, || {
+            black_box(exec.logreg_epoch(&mut lp, &epoch, &cmask, 0.1, 0.0).unwrap());
+        })
+        .clone();
+    out.push(micro_record(SUITE, &r, false));
+    let mut mp = MlpParams::init(&mut Rng::new(4));
+    let r = b
+        .bench_throughput(names[2], BATCH, || {
+            black_box(exec.mlp_step(&mut mp, &batch, &cmask, 0.1, 0.0).unwrap());
+        })
+        .clone();
+    out.push(micro_record(SUITE, &r, false));
+    let r = b
+        .bench_throughput(names[3], rows, || {
+            black_box(exec.mlp_epoch(&mut mp, &epoch, &cmask, 0.1, 0.0).unwrap());
+        })
+        .clone();
+    out.push(micro_record(SUITE, &r, false));
+    let r = b
+        .bench_throughput(names[4], BATCH, || {
+            black_box(exec.logreg_predict(&lp, &batch.x, &cmask).unwrap());
+        })
+        .clone();
+    out.push(micro_record(SUITE, &r, false));
+    out
+}
+
+/// Run the configured suites and write one `BENCH_<n>.json`. Records
+/// are collected (and validated) first, then the file is claimed and
+/// written in one pass — a panicking suite leaves no half-written file.
+pub fn run(bcfg: &BenchConfig) -> BenchRun {
+    let mut exp = bcfg.exp.clone();
+    exp.journal = false; // a bench must re-measure, never resume
+    std::fs::create_dir_all(&exp.out_dir)
+        .unwrap_or_else(|e| panic!("cannot create {}: {e}", exp.out_dir.display()));
+    let defs: Vec<&'static SuiteDef> =
+        bcfg.suites.iter().map(|n| suite_def(n)).collect();
+
+    let mut records: Vec<Record> = vec![header_record(&defs, bcfg.dry_run, &exp)];
+    for def in &defs {
+        match def.kind {
+            SuiteKind::Cells => {
+                cell_suite_records(def.name, &exp, bcfg.dry_run, &mut records);
+            }
+            SuiteKind::Micro => {
+                records.extend(micro_suite_records(def.name, bcfg.dry_run));
+            }
+        }
+    }
+    for rec in &records {
+        if let Err(e) = validate_record(rec) {
+            panic!("internal: emitting invalid bench record ({e}): {rec:?}");
+        }
+    }
+
+    let (mut file, path, run_no) = allocate_bench_file(&exp.out_dir);
+    for rec in &records {
+        let pairs: Vec<(&str, Json)> =
+            rec.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        writeln!(file, "{}", json::obj_to_line(&pairs))
+            .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    }
+    file.flush().unwrap_or_else(|e| panic!("flushing {}: {e}", path.display()));
+    BenchRun {
+        path,
+        run_no,
+        records: records.len(),
+    }
+}
+
+/// Entry point for the thin `benches/bench_*.rs` wrappers: run one
+/// suite in quick mode against its historical `results/bench_<suite>`
+/// directory.
+pub fn bench_binary_main(suite: &str) {
+    let mut exp = quick_exp_config();
+    exp.out_dir = PathBuf::from(format!("results/bench_{suite}"));
+    let bcfg = BenchConfig {
+        suites: vec![suite.to_string()],
+        dry_run: false,
+        exp,
+    };
+    let out = run(&bcfg);
+    println!(
+        "bench {suite}: {} record(s) -> {}",
+        out.records,
+        out.path.display()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_registry_covers_every_bench_target_uniquely() {
+        let defs = suite_defs();
+        assert_eq!(defs.len(), 9, "one suite per benches/bench_*.rs target");
+        let mut names: Vec<&str> = defs.iter().map(|d| d.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 9, "suite names must be unique");
+        let mut replaces: Vec<&str> = defs.iter().map(|d| d.replaces).collect();
+        replaces.sort_unstable();
+        replaces.dedup();
+        assert_eq!(replaces.len(), 9, "each suite subsumes a distinct target");
+        assert!(replaces.iter().all(|r| r.starts_with("bench_")));
+    }
+
+    #[test]
+    fn resolve_suite_names_handles_groups_and_lists() {
+        assert_eq!(resolve_suite_names("all").len(), 9);
+        let cells = resolve_suite_names("cells");
+        assert_eq!(cells, vec!["table4", "fig2", "fig3", "fig4", "fig5"]);
+        let micro = resolve_suite_names("micro");
+        assert_eq!(micro, vec!["gendst", "automl", "entropy", "runtime"]);
+        assert_eq!(resolve_suite_names("fig3, gendst"), vec!["fig3", "gendst"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown bench suite")]
+    fn resolve_suite_names_rejects_typos() {
+        resolve_suite_names("table5");
+    }
+
+    #[test]
+    fn bench_file_names_roundtrip_and_reject_garbage() {
+        assert_eq!(bench_file_name(7), "BENCH_7.json");
+        assert_eq!(parse_bench_file_name("BENCH_7.json"), Some(7));
+        assert_eq!(parse_bench_file_name("BENCH_123.json"), Some(123));
+        for bad in ["BENCH_.json", "BENCH_x.json", "bench_1.json", "BENCH_1.jsonl", "notes.txt"] {
+            assert_eq!(parse_bench_file_name(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn run_numbering_is_monotone_over_existing_files() {
+        let dir = std::env::temp_dir().join("substrat_bench_numbering_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(next_run_number(&dir), 1, "empty dir starts at 1");
+        std::fs::write(dir.join("BENCH_9.json"), "sentinel").unwrap();
+        std::fs::write(dir.join("BENCH_notanumber.json"), "ignored").unwrap();
+        assert_eq!(next_run_number(&dir), 10);
+        let (_, path, n) = allocate_bench_file(&dir);
+        assert_eq!(n, 10);
+        assert!(path.ends_with("BENCH_10.json"));
+        // the claimed file exists now, so the next allocation bumps past it
+        assert_eq!(next_run_number(&dir), 11);
+        assert_eq!(
+            std::fs::read_to_string(dir.join("BENCH_9.json")).unwrap(),
+            "sentinel",
+            "existing runs are never clobbered"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn emitted_record_shapes_validate_and_mutations_fail() {
+        let header = header_record(
+            &suite_defs().iter().collect::<Vec<_>>(),
+            true,
+            &quick_exp_config(),
+        );
+        validate_record(&header).unwrap();
+        let suite = suite_record("table4", 8, 0.0, 0.0, true);
+        validate_record(&suite).unwrap();
+        let cell = cell_record(
+            "table4",
+            &Cell::new("D2", "gendst", SearcherKind::Smbo, 0),
+            "deadbeef",
+            "table2:D2",
+            "cafef00d",
+            TimingMode::Wall,
+            None,
+        );
+        validate_record(&cell).unwrap();
+        validate_record(&stub_micro("entropy", "native subset_entropy 114x6")).unwrap();
+        validate_record(&counter_record("gendst", "memo_hit_rate x", 0.5, true)).unwrap();
+
+        // unknown fields are fine (additive versioning rule)...
+        let mut extended = suite.clone();
+        extended.push(str_field("future_field", "ok"));
+        validate_record(&extended).unwrap();
+        // ...but a missing required field, a wrong type, or an unknown
+        // record kind is not
+        let missing: Record =
+            cell.iter().filter(|(k, _)| k != "cfg").cloned().collect();
+        assert!(validate_record(&missing).is_err());
+        let mut wrong_type = cell.clone();
+        for (k, v) in &mut wrong_type {
+            if k == "rep" {
+                *v = Json::Str("zero".into());
+            }
+        }
+        assert!(validate_record(&wrong_type).is_err());
+        assert!(validate_record(&[str_field("record", "surprise")]).is_err());
+        let mut frac_rep = cell;
+        for (k, v) in &mut frac_rep {
+            if k == "rep" {
+                *v = Json::Num(0.5);
+            }
+        }
+        assert!(validate_record(&frac_rep).is_err());
+    }
+
+    #[test]
+    fn dry_cell_suite_expands_with_real_fingerprints() {
+        let exp = ExpConfig {
+            reps: 1,
+            searchers: vec![SearcherKind::Random],
+            datasets: vec!["D2".into()],
+            ..Default::default()
+        };
+        let mut out = Vec::new();
+        cell_suite_records("table4", &exp, true, &mut out);
+        // 8 strategies x 1 dataset x 1 rep x 1 searcher + the suite total
+        assert_eq!(out.len(), 9);
+        for rec in &out {
+            validate_record(rec).unwrap();
+        }
+        let fp = json::get(&out[0], "cell").unwrap().as_str().unwrap();
+        assert_eq!(fp.len(), 32, "hex128 cell fingerprint");
+        assert_eq!(
+            json::get(&out[0], "src").unwrap().as_str(),
+            Some("table2:D2"),
+            "registry sources fingerprint by symbol"
+        );
+    }
+
+    #[test]
+    fn dry_micro_suites_emit_stub_records_only() {
+        for name in ["gendst", "automl", "entropy", "runtime"] {
+            let recs = micro_suite_records(name, true);
+            assert!(!recs.is_empty(), "{name}");
+            for r in &recs {
+                validate_record(r).unwrap_or_else(|e| panic!("{name}: {e}"));
+                assert_eq!(json::get(r, "dry"), Some(&Json::Bool(true)));
+                if json::get(r, "record").unwrap().as_str() == Some("micro") {
+                    assert_eq!(json::get(r, "mean_ns").unwrap().as_f64(), Some(0.0));
+                }
+            }
+        }
+    }
+}

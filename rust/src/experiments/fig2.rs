@@ -4,10 +4,19 @@
 //! looks the same). Regenerate with `substrat exp fig2`.
 
 use crate::automl::SearcherKind;
-use crate::experiments::table4::collect_records;
+use crate::experiments::runner::{strategy_grid, Cell};
 use crate::experiments::{paper_label, table4_strategy_names, ExpConfig, RunRecord};
 use crate::util::stats;
 use crate::util::table::Table;
+
+/// The fig2 cell grid: the Table-4 strategy set with the searcher
+/// pinned to SMBO (the paper shows SMBO only; TPOT "looks the same").
+pub fn cells(cfg: &ExpConfig) -> Vec<Cell> {
+    let mut cfg = cfg.clone();
+    cfg.searchers = vec![SearcherKind::Smbo];
+    let strategies = table4_strategy_names();
+    strategy_grid(&cfg, &strategies)
+}
 
 /// Mean per-dataset points for every strategy.
 pub fn per_dataset_points(records: &[RunRecord]) -> Table {
@@ -68,9 +77,11 @@ pub fn above_bar_counts(points: &Table) -> Table {
 }
 
 pub fn run(cfg: &ExpConfig) -> (Table, Table) {
-    let mut cfg = cfg.clone();
-    cfg.searchers = vec![SearcherKind::Smbo];
-    let records = collect_records(&cfg, &table4_strategy_names());
+    let records: Vec<RunRecord> = crate::experiments::runner::Runner::new(cfg)
+        .run(&cells(cfg))
+        .into_iter()
+        .map(|o| o.record)
+        .collect();
     let points = per_dataset_points(&records);
     let counts = above_bar_counts(&points);
     println!("\n=== Figure 2: per-dataset points (smbo) ===");

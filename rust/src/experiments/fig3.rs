@@ -67,13 +67,12 @@ pub fn skyline(points: &[(String, f64, f64)]) -> Vec<(String, f64, f64)> {
         .collect()
 }
 
-pub fn run(cfg: &ExpConfig) -> Table {
-    let mut cfg = cfg.clone();
-    cfg.searchers = vec![SearcherKind::Smbo];
+/// The fig3 cell grid: every variant × (dataset × rep), searcher pinned
+/// to SMBO. Every (dataset, rep) pairs one Full-AutoML reference with
+/// the whole variant grid; the scheduler shares the reference per
+/// group. Shared with the bench trajectory (DESIGN.md §5.4).
+pub fn cells(cfg: &ExpConfig) -> Vec<Cell> {
     let vars = variants();
-
-    // every (dataset, rep) pairs one Full-AutoML reference with the
-    // whole variant grid; the scheduler shares the reference per group
     let mut cells = Vec::new();
     for symbol in &cfg.datasets {
         for rep in 0..cfg.reps {
@@ -90,8 +89,13 @@ pub fn run(cfg: &ExpConfig) -> Table {
             }
         }
     }
-    let flat: Vec<(String, f64, f64)> = Runner::new(&cfg)
-        .run(&cells)
+    cells
+}
+
+pub fn run(cfg: &ExpConfig) -> Table {
+    let vars = variants();
+    let flat: Vec<(String, f64, f64)> = Runner::new(cfg)
+        .run(&cells(cfg))
         .into_iter()
         .map(|o| {
             (

@@ -40,21 +40,19 @@ pub fn m_grid(n_cols: usize) -> Vec<(String, usize)> {
     .collect()
 }
 
-/// Run the heatmap sweep; returns (rel-acc table, time-reduction table),
-/// cells averaged over datasets × reps.
-pub fn run(cfg: &ExpConfig) -> (Table, Table) {
-    let n_labels: Vec<String> = n_grid(10_000).into_iter().map(|(l, _)| l).collect();
-    let m_labels: Vec<String> = m_grid(20).into_iter().map(|(l, _)| l).collect();
-
-    // every (dataset, rep) shares one Full-AutoML reference across the
-    // whole (n, m) grid; indices resolve per dataset inside the runner
-    let mut cfg = cfg.clone();
-    cfg.searchers = vec![SearcherKind::Smbo];
+/// The fig4 cell grid: one gendst cell per (n, m) grid point per
+/// (dataset × rep), searcher pinned to SMBO. Every (dataset, rep)
+/// shares one Full-AutoML reference across the whole grid; point
+/// indices resolve per dataset inside the runner. Shared with the
+/// bench trajectory (DESIGN.md §5.4).
+pub fn cells(cfg: &ExpConfig) -> Vec<Cell> {
+    let n_points = n_grid(10_000).len();
+    let m_points = m_grid(20).len();
     let mut cells = Vec::new();
     for symbol in &cfg.datasets {
         for rep in 0..cfg.reps {
-            for ni in 0..n_labels.len() {
-                for mi in 0..m_labels.len() {
+            for ni in 0..n_points {
+                for mi in 0..m_points {
                     cells.push(
                         Cell::new(symbol.clone(), "gendst", SearcherKind::Smbo, rep)
                             .with_dst(DstSpec::Grid { ni, mi }),
@@ -63,8 +61,16 @@ pub fn run(cfg: &ExpConfig) -> (Table, Table) {
             }
         }
     }
-    let flat: Vec<(usize, usize, f64, f64)> = Runner::new(&cfg)
-        .run(&cells)
+    cells
+}
+
+/// Run the heatmap sweep; returns (rel-acc table, time-reduction table),
+/// cells averaged over datasets × reps.
+pub fn run(cfg: &ExpConfig) -> (Table, Table) {
+    let n_labels: Vec<String> = n_grid(10_000).into_iter().map(|(l, _)| l).collect();
+    let m_labels: Vec<String> = m_grid(20).into_iter().map(|(l, _)| l).collect();
+    let flat: Vec<(usize, usize, f64, f64)> = Runner::new(cfg)
+        .run(&cells(cfg))
         .into_iter()
         .map(|o| {
             let (ni, mi) = match o.cell.dst {

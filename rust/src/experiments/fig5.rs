@@ -10,22 +10,19 @@ use crate::experiments::ExpConfig;
 use crate::util::stats;
 use crate::util::table::Table;
 
-/// Sweep one axis; `axis` is "n" or "m".
-fn sweep(cfg: &ExpConfig, axis: &str) -> Table {
-    let labels: Vec<String> = if axis == "n" {
-        n_grid(10_000).into_iter().map(|(l, _)| l).collect()
+/// The cell grid for one axis ("n" or "m"): one cell per grid point per
+/// (dataset × rep), searcher pinned to SMBO; the point indices resolve
+/// against each dataset's own shape inside the runner.
+pub fn axis_cells(cfg: &ExpConfig, axis: &str) -> Vec<Cell> {
+    let points = if axis == "n" {
+        n_grid(10_000).len()
     } else {
-        m_grid(20).into_iter().map(|(l, _)| l).collect()
+        m_grid(20).len()
     };
-
-    // one cell per grid point per (dataset, rep); the point indices
-    // resolve against each dataset's own shape inside the runner
-    let mut cfg = cfg.clone();
-    cfg.searchers = vec![SearcherKind::Smbo];
     let mut cells = Vec::new();
     for symbol in &cfg.datasets {
         for rep in 0..cfg.reps {
-            for i in 0..labels.len() {
+            for i in 0..points {
                 let dst = if axis == "n" {
                     DstSpec::NPoint(i)
                 } else {
@@ -37,8 +34,26 @@ fn sweep(cfg: &ExpConfig, axis: &str) -> Table {
             }
         }
     }
-    let flat: Vec<(usize, f64, f64)> = Runner::new(&cfg)
-        .run(&cells)
+    cells
+}
+
+/// Both axis sweeps concatenated — the bench trajectory's fig5 suite
+/// (DESIGN.md §5.4).
+pub fn cells(cfg: &ExpConfig) -> Vec<Cell> {
+    let mut cells = axis_cells(cfg, "n");
+    cells.extend(axis_cells(cfg, "m"));
+    cells
+}
+
+/// Sweep one axis; `axis` is "n" or "m".
+fn sweep(cfg: &ExpConfig, axis: &str) -> Table {
+    let labels: Vec<String> = if axis == "n" {
+        n_grid(10_000).into_iter().map(|(l, _)| l).collect()
+    } else {
+        m_grid(20).into_iter().map(|(l, _)| l).collect()
+    };
+    let flat: Vec<(usize, f64, f64)> = Runner::new(cfg)
+        .run(&axis_cells(cfg, axis))
         .into_iter()
         .map(|o| {
             let i = match o.cell.dst {

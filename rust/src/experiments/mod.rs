@@ -18,6 +18,7 @@
 //! `strategy_search`/`finish_strategy`) exists so the runner owns the
 //! stopwatch around exactly the window the paper times.
 
+pub mod bench;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;

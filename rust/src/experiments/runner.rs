@@ -128,8 +128,9 @@ impl DstSpec {
         }
     }
 
-    /// Canonical journal-key fragment.
-    fn tag(&self) -> String {
+    /// Canonical journal-key fragment (also the bench trajectory's
+    /// `dst` coordinate, DESIGN.md §5.4).
+    pub fn tag(&self) -> String {
         match *self {
             DstSpec::Default => "default".to_string(),
             DstSpec::Explicit { n, m } => format!("exp{n}x{m}"),
@@ -286,10 +287,9 @@ fn searcher_static(name: &str) -> Option<&'static str> {
     SearcherKind::try_by_name(name).map(|k| k.name())
 }
 
-fn parse_record(line: &str) -> Option<(String, String, RunRecord)> {
-    let obj = json::parse_line(line)?;
-    let text = |k: &str| json::get(&obj, k).and_then(Json::as_str);
-    let num = |k: &str| json::get(&obj, k).and_then(Json::as_f64);
+fn parse_record(obj: &[(String, Json)]) -> Option<(String, String, RunRecord)> {
+    let text = |k: &str| json::get(obj, k).and_then(Json::as_str);
+    let num = |k: &str| json::get(obj, k).and_then(Json::as_f64);
     let rep = num("rep")?;
     if rep < 0.0 || rep.fract() != 0.0 {
         return None;
@@ -318,22 +318,18 @@ impl Journal {
         }
         let mut done = HashMap::new();
         let mut torn_tail = false;
-        if let Ok(bytes) = std::fs::read(path) {
+        if let Ok(back) = json::read_jsonl_tolerant(path) {
             // a killed run can leave a partial final line with no '\n';
             // remember to terminate it so the next append starts clean
-            torn_tail = bytes.last().is_some_and(|&b| b != b'\n');
-            let text = String::from_utf8_lossy(&bytes);
-            let mut skipped = 0usize;
-            for line in text.lines() {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                match parse_record(line) {
+            torn_tail = back.torn_tail;
+            let mut skipped = back.skipped;
+            for obj in &back.records {
+                match parse_record(obj) {
                     Some((cfg, cell, rec)) if cfg == cfg_fp => {
                         done.insert(cell, rec);
                     }
                     Some(_) => {} // a different config's record: leave it be
-                    None => skipped += 1,
+                    None => skipped += 1, // parses as JSON, not as a record
                 }
             }
             if skipped > 0 {

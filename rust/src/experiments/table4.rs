@@ -3,10 +3,18 @@
 //! repetitions. Regenerate with `substrat exp table4` or
 //! `cargo bench --bench bench_table4`.
 
-use crate::experiments::runner::{strategy_grid, Runner};
+use crate::experiments::runner::{strategy_grid, Cell, Runner};
 use crate::experiments::{paper_label, table4_strategy_names, ExpConfig, RunRecord};
 use crate::util::stats;
 use crate::util::table::{pct, Table};
+
+/// The Table-4 cell grid: every strategy × (dataset × rep × searcher).
+/// Shared with the bench trajectory (DESIGN.md §5.4) so `exp table4`
+/// and `bench table4` expand the identical sweep.
+pub fn cells(cfg: &ExpConfig) -> Vec<Cell> {
+    let strategies = table4_strategy_names();
+    strategy_grid(cfg, &strategies)
+}
 
 /// Collect raw records for the given strategies across the full
 /// (dataset × rep × searcher) grid through the shared cell scheduler

@@ -7,9 +7,19 @@
 //!   automl   --dataset D1 [...]   run Full-AutoML
 //!   run      --dataset D1 --strategy gendst [...]   one SubStrat flow
 //!   exp      table4|fig2|fig3|fig4|fig5|all [...]   reproduce paper artifacts
+//!   bench    [all|cells|micro|<suite>,...] [...]    benchmark trajectory
 //!
 //! Common flags: --scale 0.05 --reps 3 --evals 16 --searchers smbo,gp
 //!               --datasets D1,D2 --out results --threads N --seed S
+//!
+//! Bench trajectory (DESIGN.md §5.4): `bench` expands the named suites
+//! (`substrat bench` alone = all nine) and writes one machine-readable
+//! `BENCH_<n>.json` under `--out` — numbering is monotone and never
+//! clobbers an earlier run. Defaults to the quick sweep shape the old
+//! bench binaries used; `--full` starts from the `exp` defaults
+//! instead, and every `exp` flag above applies. `--dry-run` exercises
+//! expansion + fingerprinting + serialization with zero-cost stub
+//! measurements; `BENCH_QUICK=1` shortens real timing windows.
 //!
 //! Island engine (DESIGN.md §4.6): `--islands K` splits the Gen-DST
 //! population into K concurrently-evolving islands with ring migration
@@ -43,7 +53,7 @@ use substrat::baselines;
 use substrat::data::infer::{parse_header_flag, CsvOptions};
 use substrat::data::{registry, CodeMatrix, DataSource, Frame};
 use substrat::experiments::{
-    charged_time_s, fig2, fig3, fig4, fig5, table4, ExpConfig, TimingMode,
+    bench, charged_time_s, fig2, fig3, fig4, fig5, table4, ExpConfig, TimingMode,
 };
 use substrat::gendst::{self, GenDstConfig};
 use substrat::measures::{self, entropy::EntropyMeasure};
@@ -52,13 +62,19 @@ use substrat::substrat::{run_substrat, SubStratConfig};
 use substrat::util::cli::Args;
 use substrat::util::rng::Rng;
 
-fn exp_config(args: &Args) -> ExpConfig {
-    let defaults = ExpConfig::default();
+/// Resolve the `exp`-family flags over an arbitrary baseline — `exp`
+/// passes `ExpConfig::default()`, `bench` passes the quick sweep shape
+/// (or the same defaults under `--full`). Unset flags inherit from
+/// `defaults`, so the two subcommands stay flag-compatible.
+fn exp_config_with(args: &Args, defaults: &ExpConfig) -> ExpConfig {
     // --data <path> is sugar for a single-dataset sweep on a CSV file
+    let default_datasets: Vec<&str> = defaults.datasets.iter().map(String::as_str).collect();
     let datasets = match args.str_opt("data") {
         Some(path) => vec![path.to_string()],
-        None => args.list_or("datasets", &registry::all_symbols()),
+        None => args.list_or("datasets", &default_datasets),
     };
+    let default_searchers: Vec<&str> = defaults.searchers.iter().map(|s| s.name()).collect();
+    let default_out = defaults.out_dir.display().to_string();
     ExpConfig {
         scale: args.f64_or("scale", defaults.scale),
         min_rows: args.usize_or("min-rows", defaults.min_rows),
@@ -67,23 +83,27 @@ fn exp_config(args: &Args) -> ExpConfig {
         full_evals: args.usize_or("evals", defaults.full_evals),
         ft_frac: args.f64_or("ft-frac", defaults.ft_frac),
         searchers: args
-            .list_or("searchers", &["smbo", "gp"])
+            .list_or("searchers", &default_searchers)
             .iter()
             .map(|s| SearcherKind::by_name(s))
             .collect(),
         datasets,
         csv_target: args.str_opt("target").map(str::to_string),
         csv_header: args.str_opt("header").map(parse_header_flag),
-        out_dir: PathBuf::from(args.str_or("out", "results")),
+        out_dir: PathBuf::from(args.str_or("out", &default_out)),
         threads: args.usize_or("threads", defaults.threads),
         // pinned per sweep (results-changing, journal-keyed); clamp 0
         // up — auto-from-threads would make records machine-shaped
         islands: args.usize_or("islands", defaults.islands).max(1),
         batch: args.usize_or("batch", defaults.batch),
         timing: TimingMode::by_name(&args.str_or("timing", defaults.timing.name())),
-        journal: !args.flag("no-journal"),
+        journal: defaults.journal && !args.flag("no-journal"),
         seed: args.u64_or("seed", defaults.seed),
     }
+}
+
+fn exp_config(args: &Args) -> ExpConfig {
+    exp_config_with(args, &ExpConfig::default())
 }
 
 /// Resolve `--data <csv>` / `--dataset <symbol|csv>` into a loaded
@@ -341,6 +361,34 @@ fn cmd_exp(args: &Args) {
     println!("CSV written under {:?}", cfg.out_dir);
 }
 
+fn cmd_bench(args: &Args) {
+    let spec = args.positionals.get(1).map(String::as_str).unwrap_or("all");
+    let suites: Vec<String> = bench::resolve_suite_names(spec)
+        .into_iter()
+        .map(str::to_string)
+        .collect();
+    // quick sweep shape by default (what the old bench binaries
+    // hard-coded); --full starts from the exp defaults instead
+    let defaults = if args.flag("full") {
+        ExpConfig::default()
+    } else {
+        bench::quick_exp_config()
+    };
+    let bcfg = bench::BenchConfig {
+        suites,
+        dry_run: args.flag("dry-run"),
+        exp: exp_config_with(args, &defaults),
+    };
+    let out = bench::run(&bcfg);
+    println!(
+        "bench run {} ({spec}{}): {} record(s) -> {}",
+        out.run_no,
+        if bcfg.dry_run { ", dry" } else { "" },
+        out.records,
+        out.path.display()
+    );
+}
+
 fn main() {
     let args = Args::from_env();
     match args.subcommand() {
@@ -350,9 +398,10 @@ fn main() {
         Some("automl") => cmd_automl(&args),
         Some("run") => cmd_run(&args),
         Some("exp") => cmd_exp(&args),
+        Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: substrat <datasets|check|gendst|automl|run|exp> [flags]\n\
+                "usage: substrat <datasets|check|gendst|automl|run|exp|bench> [flags]\n\
                  see rust/src/main.rs header for flags"
             );
             std::process::exit(2);

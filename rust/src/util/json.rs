@@ -232,6 +232,44 @@ pub fn get<'a>(pairs: &'a [(String, Json)], key: &str) -> Option<&'a Json> {
     pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
 }
 
+/// What [`read_jsonl_tolerant`] recovered from a JSONL file.
+#[derive(Debug, Default)]
+pub struct JsonlReadback {
+    /// every line that parsed as a flat object, in file order
+    pub records: Vec<Vec<(String, Json)>>,
+    /// non-blank lines that did not parse (torn or corrupt)
+    pub skipped: usize,
+    /// the file does not end in `'\n'` — a killed writer left a partial
+    /// final line. Appenders must write one `'\n'` first ("newline
+    /// repair"), or their next record concatenates onto the torn line
+    /// and both are lost to the following read.
+    pub torn_tail: bool,
+}
+
+/// Read a whole JSONL file under the corruption-tolerance contract the
+/// experiment journal and the bench trajectory share (DESIGN.md §5.2,
+/// §5.4): malformed lines are counted and skipped, never fatal; blank
+/// lines are ignored; a missing trailing newline is reported as
+/// `torn_tail` rather than an error. Only I/O failures propagate.
+pub fn read_jsonl_tolerant(path: &std::path::Path) -> std::io::Result<JsonlReadback> {
+    let bytes = std::fs::read(path)?;
+    let mut back = JsonlReadback {
+        torn_tail: bytes.last().is_some_and(|&b| b != b'\n'),
+        ..Default::default()
+    };
+    let text = String::from_utf8_lossy(&bytes);
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_line(line) {
+            Some(obj) => back.records.push(obj),
+            None => back.skipped += 1,
+        }
+    }
+    Ok(back)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -284,5 +322,73 @@ mod tests {
     fn empty_object_parses() {
         assert_eq!(parse_line("{}").unwrap(), vec![]);
         assert_eq!(obj_to_line(&[]), "{}");
+    }
+
+    #[test]
+    fn shortest_roundtrip_emission_parses_back() {
+        // the writer's `{}` float formatting is the shortest string that
+        // parses back to the same bits; spot-check the emitted text and
+        // the scientific-notation inputs the parser must also accept
+        assert_eq!(obj_to_line(&[("x", Json::Num(0.1))]), "{\"x\":0.1}");
+        assert_eq!(obj_to_line(&[("x", Json::Num(3.0))]), "{\"x\":3}");
+        for (text, want) in [("1e-3", 1e-3), ("2.5E+10", 2.5e10), ("-0.25", -0.25)] {
+            let parsed = parse_line(&format!("{{\"x\":{text}}}")).unwrap();
+            let got = get(&parsed, "x").unwrap().as_f64().unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "{text}");
+        }
+        // negative zero survives (format "{}" prints "-0")
+        let line = obj_to_line(&[("z", Json::Num(-0.0))]);
+        let z = get(&parse_line(&line).unwrap(), "z").unwrap().as_f64().unwrap();
+        assert_eq!(z.to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn control_chars_escape_as_unicode() {
+        let line = obj_to_line(&[("k", Json::Str("bell\u{7}end".into()))]);
+        assert!(line.contains("\\u0007"), "{line}");
+        let parsed = parse_line(&line).unwrap();
+        assert_eq!(get(&parsed, "k").unwrap().as_str(), Some("bell\u{7}end"));
+        // raw (unescaped) control bytes are rejected
+        assert_eq!(parse_line("{\"k\":\"a\u{7}b\"}"), None);
+    }
+
+    #[test]
+    fn read_jsonl_tolerates_torn_tail_and_repairs_with_newline() {
+        use std::io::Write as _;
+        let path = std::env::temp_dir().join("substrat_json_torn_tail_test.jsonl");
+        let good1 = obj_to_line(&[("id", Json::Num(1.0))]);
+        let good2 = obj_to_line(&[("id", Json::Num(2.0))]);
+        let torn = &good2[..good2.len() - 3]; // mid-record cut, no '\n'
+        std::fs::write(&path, format!("{good1}\n{good2}\nnot json\n{torn}")).unwrap();
+
+        let back = read_jsonl_tolerant(&path).unwrap();
+        assert_eq!(back.records.len(), 2, "intact records survive");
+        assert_eq!(back.skipped, 2, "garbage line + torn tail both skipped");
+        assert!(back.torn_tail, "missing trailing newline must be flagged");
+
+        // newline repair: terminate the torn line, then append — the new
+        // record is visible to the next read and nothing else changed
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        let good3 = obj_to_line(&[("id", Json::Num(3.0))]);
+        writeln!(f, "\n{good3}").unwrap();
+        drop(f);
+        let back = read_jsonl_tolerant(&path).unwrap();
+        assert_eq!(back.records.len(), 3);
+        assert_eq!(back.skipped, 2);
+        assert!(!back.torn_tail);
+        let ids: Vec<f64> = back
+            .records
+            .iter()
+            .map(|r| get(r, "id").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(ids, vec![1.0, 2.0, 3.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn read_jsonl_missing_file_is_an_io_error() {
+        let path = std::env::temp_dir().join("substrat_json_no_such_file.jsonl");
+        let _ = std::fs::remove_file(&path);
+        assert!(read_jsonl_tolerant(&path).is_err());
     }
 }

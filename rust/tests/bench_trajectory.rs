@@ -1,0 +1,172 @@
+//! Integration tests for the bench-trajectory subsystem (DESIGN.md
+//! §5.4): every record a run emits validates against the documented
+//! schema, `BENCH_<n>.json` numbering is monotone and never clobbers an
+//! earlier run, a dry run is byte-deterministic modulo timestamps, and
+//! a real (tiny) cell suite measures positive times.
+
+use std::path::{Path, PathBuf};
+
+use substrat::automl::SearcherKind;
+use substrat::experiments::bench::{self, BenchConfig};
+use substrat::experiments::ExpConfig;
+use substrat::util::json::{self, Json};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn read_records(path: &Path) -> Vec<Vec<(String, Json)>> {
+    let text = std::fs::read_to_string(path).unwrap();
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| json::parse_line(l).unwrap_or_else(|| panic!("unparseable line: {l}")))
+        .collect()
+}
+
+fn dry_cfg(out_dir: PathBuf, suites: &str) -> BenchConfig {
+    let mut exp = bench::quick_exp_config();
+    exp.out_dir = out_dir;
+    BenchConfig {
+        suites: bench::resolve_suite_names(suites)
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        dry_run: true,
+        exp,
+    }
+}
+
+#[test]
+fn dry_run_emits_schema_valid_records_for_every_suite() {
+    let dir = tmp("substrat_bench_dry_all");
+    let out = bench::run(&dry_cfg(dir.clone(), "all"));
+    assert_eq!(out.run_no, 1);
+    assert!(out.path.ends_with("BENCH_1.json"), "{}", out.path.display());
+    let records = read_records(&out.path);
+    assert_eq!(records.len(), out.records);
+
+    // exactly one header, first in the file, carrying the schema tag
+    let kinds: Vec<&str> = records
+        .iter()
+        .map(|r| json::get(r, "record").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(kinds[0], "header");
+    assert_eq!(kinds.iter().filter(|k| **k == "header").count(), 1);
+    assert_eq!(json::get(&records[0], "schema").unwrap().as_str(), Some("bench-v1"));
+
+    for rec in &records {
+        bench::validate_record(rec).unwrap_or_else(|e| panic!("invalid record ({e}): {rec:?}"));
+        assert_eq!(json::get(rec, "dry"), Some(&Json::Bool(true)));
+    }
+    // every resolved suite contributed at least one record
+    for suite in bench::resolve_suite_names("all") {
+        assert!(
+            records
+                .iter()
+                .any(|r| json::get(r, "suite").and_then(Json::as_str) == Some(suite)),
+            "suite {suite} missing from the trajectory"
+        );
+    }
+    // dry cell records carry real coordinates + fingerprints with stub
+    // (zero) measurements
+    let cell = records
+        .iter()
+        .find(|r| json::get(r, "record").unwrap().as_str() == Some("cell"))
+        .expect("no cell records in an all-suites dry run");
+    assert_eq!(json::get(cell, "cell").unwrap().as_str().unwrap().len(), 32);
+    assert!(json::get(cell, "src").unwrap().as_str().unwrap().starts_with("table2:"));
+    assert_eq!(json::get(cell, "time_full_s").unwrap().as_f64(), Some(0.0));
+    assert_eq!(json::get(cell, "time_sub_s").unwrap().as_f64(), Some(0.0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn run_numbers_are_monotone_and_never_clobber() {
+    let dir = tmp("substrat_bench_numbering_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("BENCH_3.json"), "sentinel").unwrap();
+    std::fs::write(dir.join("BENCH_xyz.json"), "ignored").unwrap();
+    let out = bench::run(&dry_cfg(dir.clone(), "table4"));
+    assert_eq!(out.run_no, 4, "next number after an existing BENCH_3");
+    assert!(out.path.ends_with("BENCH_4.json"));
+    assert_eq!(
+        std::fs::read_to_string(dir.join("BENCH_3.json")).unwrap(),
+        "sentinel",
+        "existing runs are never clobbered"
+    );
+    let again = bench::run(&dry_cfg(dir.clone(), "table4"));
+    assert_eq!(again.run_no, 5, "numbering keeps climbing");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dry_runs_are_identical_modulo_timestamps() {
+    let dir = tmp("substrat_bench_determinism");
+    let a = bench::run(&dry_cfg(dir.clone(), "all"));
+    let b = bench::run(&dry_cfg(dir.clone(), "all"));
+    // strip the one timestamp field and re-serialize through the same
+    // writer; everything that remains must be byte-identical
+    let canon = |path: &Path| -> Vec<String> {
+        read_records(path)
+            .into_iter()
+            .map(|rec| {
+                let pairs: Vec<(&str, Json)> = rec
+                    .iter()
+                    .filter(|(k, _)| k != "unix_time")
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect();
+                json::obj_to_line(&pairs)
+            })
+            .collect()
+    };
+    assert_eq!(canon(&a.path), canon(&b.path), "dry trajectory must be deterministic");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn real_table4_suite_measures_positive_times() {
+    let dir = tmp("substrat_bench_real_table4");
+    let exp = ExpConfig {
+        scale: 0.02,
+        min_rows: 1_200,
+        max_rows: 2_000,
+        reps: 1,
+        full_evals: 3,
+        searchers: vec![SearcherKind::Random],
+        datasets: vec!["D2".into()],
+        threads: 2,
+        batch: 2,
+        out_dir: dir.clone(),
+        ..Default::default()
+    };
+    let bcfg = BenchConfig {
+        suites: vec!["table4".into()],
+        dry_run: false,
+        exp,
+    };
+    let out = bench::run(&bcfg);
+    let records = read_records(&out.path);
+    for rec in &records {
+        bench::validate_record(rec).unwrap_or_else(|e| panic!("invalid record ({e}): {rec:?}"));
+    }
+    let cells: Vec<_> = records
+        .iter()
+        .filter(|r| json::get(r, "record").unwrap().as_str() == Some("cell"))
+        .collect();
+    assert_eq!(cells.len(), 8, "one cell per Table-4 strategy");
+    for c in &cells {
+        assert_eq!(json::get(c, "dry"), Some(&Json::Bool(false)));
+        assert!(json::get(c, "time_full_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(json::get(c, "time_sub_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+    let suite = records
+        .iter()
+        .find(|r| json::get(r, "record").unwrap().as_str() == Some("suite"))
+        .expect("no suite summary record");
+    assert_eq!(json::get(suite, "cells").unwrap().as_f64(), Some(8.0));
+    assert!(json::get(suite, "wall_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(json::get(suite, "cpu_s").unwrap().as_f64().unwrap() >= 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,61 @@
+//! The old CI shell smoke ("run `exp table4` twice, grep for 8/8 cells
+//! resumed") promoted to a real integration test: the Table-4 grid runs
+//! twice against the same journal, the second pass must serve every
+//! cell from the journal, and the resumed records must be bit-equal to
+//! the first run's (DESIGN.md §5.2).
+
+use substrat::automl::SearcherKind;
+use substrat::experiments::runner::Runner;
+use substrat::experiments::{table4, ExpConfig};
+
+#[test]
+fn table4_rerun_resumes_every_cell_from_the_journal() {
+    let cfg = ExpConfig {
+        scale: 0.02,
+        min_rows: 1_200,
+        max_rows: 2_000,
+        reps: 1,
+        full_evals: 3,
+        searchers: vec![SearcherKind::Random],
+        datasets: vec!["D2".into()],
+        threads: 2,
+        batch: 2,
+        out_dir: std::env::temp_dir().join("substrat_resume_it"),
+        ..Default::default()
+    };
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    let cells = table4::cells(&cfg);
+    assert_eq!(cells.len(), 8, "one cell per Table-4 strategy");
+
+    let first = Runner::new(&cfg).run(&cells);
+    assert_eq!(first.len(), 8);
+    assert!(
+        first.iter().all(|o| !o.resumed),
+        "a fresh journal must re-run everything"
+    );
+    let journal = cfg.out_dir.join("cells.jsonl");
+    let journal_len = std::fs::metadata(&journal).map(|m| m.len()).unwrap_or(0);
+    assert!(journal_len > 0, "journal missing or empty at {}", journal.display());
+
+    let second = Runner::new(&cfg).run(&cells);
+    assert_eq!(second.len(), 8);
+    let resumed = second.iter().filter(|o| o.resumed).count();
+    assert_eq!(resumed, 8, "expected 8/8 cells resumed, got {resumed}/8");
+    // outcomes come back in input-cell order, so pairwise compare: a
+    // journal round-trip must preserve every record bit-exactly
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.record.strategy, b.record.strategy);
+        assert_eq!(a.record.dataset, b.record.dataset);
+        assert_eq!(a.record.final_desc, b.record.final_desc, "{}", a.record.strategy);
+        assert_eq!(
+            a.record.acc_sub.to_bits(),
+            b.record.acc_sub.to_bits(),
+            "{}: resumed accuracy must be bit-equal",
+            a.record.strategy
+        );
+        assert_eq!(a.record.acc_full.to_bits(), b.record.acc_full.to_bits());
+        assert_eq!(a.record.time_full_s.to_bits(), b.record.time_full_s.to_bits());
+        assert_eq!(a.record.time_sub_s.to_bits(), b.record.time_sub_s.to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+}
