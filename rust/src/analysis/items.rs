@@ -1,0 +1,591 @@
+//! Crate model for the static-analysis pass (DESIGN.md §9): parsed use
+//! declarations, the module tree inferred from file paths, and the
+//! per-module pub-item index that `use-resolve` checks crate-rooted
+//! paths against. Mirrors the corresponding section of
+//! `tools/srclint.py` — edit both together.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::lexer::{
+    brace_depths, cfg_test_lines, is_ident_byte, line_of, strip_source, tokens,
+};
+
+/// One leaf of a use tree: `a::{b, c as d}` expands to two leaves.
+/// Glob leaves keep `*` as their last segment.
+#[derive(Debug, Clone)]
+pub struct UseLeaf {
+    pub segs: Vec<String>,
+    pub alias: Option<String>,
+}
+
+impl UseLeaf {
+    /// The binding name this leaf introduces into scope.
+    pub fn binding(&self) -> String {
+        if let Some(a) = &self.alias {
+            return a.clone();
+        }
+        let last = self.segs.last().map(String::as_str).unwrap_or("");
+        if last == "self" && self.segs.len() >= 2 {
+            self.segs[self.segs.len() - 2].clone()
+        } else {
+            last.to_string()
+        }
+    }
+}
+
+/// A whole `use …;` declaration, expanded to leaves.
+#[derive(Debug, Clone)]
+pub struct UseDecl {
+    pub leaves: Vec<UseLeaf>,
+    /// 1-based line of the declaration
+    pub line: usize,
+    /// byte span in the stripped code, `;` inclusive
+    pub span: (usize, usize),
+    pub is_pub: bool,
+    /// brace depth at the declaration (0 = module scope)
+    pub depth: u32,
+}
+
+/// A fully lexed file, ready for the rules: raw text for layout checks,
+/// stripped code for token scans, plus everything derived from it.
+#[derive(Debug)]
+pub struct Prepared {
+    /// repo-relative path with `/` separators
+    pub path: String,
+    pub raw: String,
+    pub code: String,
+    pub depths: Vec<u32>,
+    pub comments: BTreeMap<usize, Vec<String>>,
+    pub test_lines: BTreeSet<usize>,
+    pub uses: Vec<UseDecl>,
+}
+
+/// Lex and pre-parse one source file.
+pub fn prepare(path: &str, raw: &str) -> Prepared {
+    let stripped = strip_source(raw);
+    let depths = brace_depths(&stripped.code);
+    let uses = parse_uses(&stripped.code, &depths);
+    let test_lines = cfg_test_lines(&stripped.code);
+    Prepared {
+        path: path.to_string(),
+        raw: raw.to_string(),
+        code: stripped.code,
+        depths,
+        comments: stripped.comments,
+        test_lines,
+        uses,
+    }
+}
+
+/// Split on top-level commas (brace depth 0).
+fn split_top(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut d: i32 = 0;
+    for c in s.chars() {
+        if c == '{' {
+            d += 1;
+        } else if c == '}' {
+            d -= 1;
+        }
+        if c == ',' && d == 0 {
+            parts.push(cur.clone());
+            cur.clear();
+        } else {
+            cur.push(c);
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+/// Recursively expand a normalized use tree into leaves.
+fn parse_use_tree(s: &str, prefix: &[String]) -> Vec<UseLeaf> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Vec::new();
+    }
+    if s.ends_with('}') {
+        if let Some(idx) = s.find('{') {
+            let mut head = s[..idx].trim();
+            head = head.strip_suffix("::").unwrap_or(head);
+            let mut segs: Vec<String> = prefix.to_vec();
+            segs.extend(head.split("::").filter(|p| !p.is_empty()).map(String::from));
+            let inner = &s[idx + 1..s.len() - 1];
+            let mut leaves = Vec::new();
+            for part in split_top(inner) {
+                leaves.extend(parse_use_tree(&part, &segs));
+            }
+            return leaves;
+        }
+    }
+    if let Some(p) = s.rfind(" as ") {
+        let mut segs: Vec<String> = prefix.to_vec();
+        segs.extend(s[..p].trim().split("::").map(String::from));
+        return vec![UseLeaf {
+            segs,
+            alias: Some(s[p + 4..].trim().to_string()),
+        }];
+    }
+    let mut segs: Vec<String> = prefix.to_vec();
+    segs.extend(s.split("::").map(String::from));
+    vec![UseLeaf { segs, alias: None }]
+}
+
+/// Collapse whitespace and drop spaces around `::`, braces, and commas
+/// (keeps the one space that matters: ` as `).
+fn normalize_use_text(t: &str) -> String {
+    let mut s = String::new();
+    let mut pending_ws = false;
+    for c in t.chars() {
+        if c.is_whitespace() {
+            pending_ws = true;
+            continue;
+        }
+        if pending_ws && !s.is_empty() {
+            s.push(' ');
+        }
+        pending_ws = false;
+        s.push(c);
+    }
+    for pat in [" ::", ":: ", " {", "{ ", " }", "} ", " ,", ", "] {
+        s = s.replace(pat, pat.trim());
+    }
+    s
+}
+
+/// If the code before byte `p` ends with `pub` or `pub(…)`, the byte
+/// offset where that prefix starts.
+fn pub_prefix_start(code: &str, p: usize) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut q = p;
+    if q > 0 && bytes[q - 1] == b')' {
+        q = code[..q - 1].rfind('(')?;
+    }
+    if code[..q].ends_with("pub") {
+        let s = q - 3;
+        if s == 0 || !is_ident_byte(bytes[s - 1]) {
+            return Some(s);
+        }
+    }
+    None
+}
+
+/// Find every `use …;` declaration in stripped code.
+pub fn parse_uses(code: &str, depths: &[u32]) -> Vec<UseDecl> {
+    let bytes = code.as_bytes();
+    let mut uses = Vec::new();
+    for &(pos, tok) in tokens(code).iter() {
+        if tok != "use" {
+            continue;
+        }
+        let after = pos + 3;
+        if after >= bytes.len() || !bytes[after].is_ascii_whitespace() {
+            continue;
+        }
+        // optional `pub` / `pub(crate)` prefix, whitespace-separated
+        let mut p = pos;
+        while p > 0 && bytes[p - 1].is_ascii_whitespace() {
+            p -= 1;
+        }
+        let pub_start = if p < pos { pub_prefix_start(code, p) } else { None };
+        let span_start = pub_start.unwrap_or(pos);
+        let Some(semi_rel) = code[after..].find(';') else {
+            continue;
+        };
+        let semi = after + semi_rel;
+        let text = normalize_use_text(&code[after..semi]);
+        uses.push(UseDecl {
+            leaves: parse_use_tree(&text, &[]),
+            line: line_of(code, span_start),
+            span: (span_start, semi + 1),
+            is_pub: pub_start.is_some(),
+            depth: depths[span_start],
+        });
+    }
+    uses
+}
+
+/// One module of the library crate.
+#[derive(Debug, Default)]
+pub struct Module {
+    /// names of items (and `pub use` re-exports) declared at depth 0
+    pub items: BTreeSet<String>,
+    /// child module names (inferred from file paths)
+    pub children: BTreeSet<String>,
+    /// a `pub use …::*;` makes the item set unknowable — be permissive
+    pub glob_reexport: bool,
+}
+
+/// Module tree + `#[macro_export]` macro registry for the library crate.
+#[derive(Debug, Default)]
+pub struct CrateIndex {
+    pub modules: BTreeMap<Vec<String>, Module>,
+    /// macro name → defining file path
+    pub macros: BTreeMap<String, String>,
+}
+
+/// `rust/src/a/b.rs` → `["a", "b"]`; `mod.rs`/`lib.rs` collapse. `None`
+/// for files outside the library crate (main.rs, tests, benches, …).
+pub fn module_path_of(path: &str) -> Option<Vec<String>> {
+    if path == "rust/src/main.rs" {
+        return None;
+    }
+    let rel = path.strip_prefix("rust/src/")?;
+    if rel == "lib.rs" {
+        return Some(Vec::new());
+    }
+    let stem = rel.strip_suffix(".rs")?;
+    let mut parts: Vec<String> = stem.split('/').map(String::from).collect();
+    if parts.last().map(String::as_str) == Some("mod") {
+        parts.pop();
+    }
+    Some(parts)
+}
+
+const ITEM_KEYWORDS: [&str; 9] = [
+    "fn", "struct", "enum", "trait", "union", "type", "const", "static", "mod",
+];
+
+/// `(keyword offset, item name)` for every named item declaration.
+pub fn item_decls(code: &str) -> Vec<(usize, String)> {
+    let toks = tokens(code);
+    let mut out = Vec::new();
+    for w in toks.windows(2) {
+        let (pos, tok) = w[0];
+        let (npos, ntok) = w[1];
+        if !ITEM_KEYWORDS.contains(&tok) {
+            continue;
+        }
+        let between = &code[pos + tok.len()..npos];
+        if between.is_empty() || !between.bytes().all(|b| b.is_ascii_whitespace()) {
+            continue;
+        }
+        if ntok.as_bytes()[0].is_ascii_digit() {
+            continue;
+        }
+        out.push((pos, ntok.to_string()));
+    }
+    out
+}
+
+/// `(keyword offset, macro name, exported)` for `macro_rules!` items.
+pub fn macro_decls(code: &str) -> Vec<(usize, String, bool)> {
+    let bytes = code.as_bytes();
+    let toks = tokens(code);
+    let mut out = Vec::new();
+    for (i, &(pos, tok)) in toks.iter().enumerate() {
+        if tok != "macro_rules" {
+            continue;
+        }
+        let bang = pos + tok.len();
+        if bang >= bytes.len() || bytes[bang] != b'!' {
+            continue;
+        }
+        let Some(&(npos, ntok)) = toks.get(i + 1) else {
+            continue;
+        };
+        if !code[bang + 1..npos].bytes().all(|b| b.is_ascii_whitespace()) {
+            continue;
+        }
+        if ntok.as_bytes()[0].is_ascii_digit() {
+            continue;
+        }
+        let head = &code[pos.saturating_sub(200)..pos];
+        out.push((pos, ntok.to_string(), head.contains("#[macro_export]")));
+    }
+    out
+}
+
+/// Build the crate index from all prepared files (non-library files are
+/// skipped via [`module_path_of`]).
+pub fn build_index(files: &[Prepared]) -> CrateIndex {
+    let mut index = CrateIndex::default();
+    index.modules.insert(Vec::new(), Module::default());
+    for f in files {
+        let Some(mp) = module_path_of(&f.path) else {
+            continue;
+        };
+        index.modules.entry(mp.clone()).or_default();
+        for k in 1..=mp.len() {
+            index.modules.entry(mp[..k].to_vec()).or_default();
+            index
+                .modules
+                .entry(mp[..k - 1].to_vec())
+                .or_default()
+                .children
+                .insert(mp[k - 1].clone());
+        }
+    }
+    for f in files {
+        let Some(mp) = module_path_of(&f.path) else {
+            continue;
+        };
+        for (pos, name) in item_decls(&f.code) {
+            if f.depths[pos] == 0 {
+                index.modules.get_mut(&mp).unwrap().items.insert(name);
+            }
+        }
+        for (pos, name, exported) in macro_decls(&f.code) {
+            if f.depths[pos] != 0 {
+                continue;
+            }
+            index.modules.get_mut(&mp).unwrap().items.insert(name.clone());
+            if exported {
+                index.macros.insert(name.clone(), f.path.clone());
+                // exported macros live at the crate root path-wise
+                index.modules.get_mut(&Vec::new()).unwrap().items.insert(name);
+            }
+        }
+        for u in &f.uses {
+            if !u.is_pub || u.depth != 0 {
+                continue;
+            }
+            for leaf in &u.leaves {
+                let last = leaf.segs.last().map(String::as_str).unwrap_or("");
+                if last == "*" {
+                    index.modules.get_mut(&mp).unwrap().glob_reexport = true;
+                } else {
+                    let name = leaf.binding();
+                    if name != "_" && !name.is_empty() {
+                        index.modules.get_mut(&mp).unwrap().items.insert(name);
+                    }
+                }
+            }
+        }
+    }
+    index
+}
+
+/// True iff a crate-rooted use path resolves against the index.
+/// Permissive on anything unindexable (std, external crates, enum
+/// variants, glob re-exports).
+pub fn resolve_path(segs: &[String], index: &CrateIndex, own: Option<&[String]>) -> bool {
+    if segs.is_empty() {
+        return true;
+    }
+    let root = segs[0].as_str();
+    let (rel, base): (Vec<String>, Vec<String>) = if root == "crate" || root == "substrat" {
+        (segs[1..].to_vec(), Vec::new())
+    } else if root == "self" && own.is_some() {
+        (segs[1..].to_vec(), own.unwrap().to_vec())
+    } else if root == "super" && own.is_some() {
+        let mut base = own.unwrap().to_vec();
+        let mut rel = segs.to_vec();
+        while rel.first().map(String::as_str) == Some("super") {
+            if base.is_empty() {
+                return false;
+            }
+            base.pop();
+            rel.remove(0);
+        }
+        (rel, base)
+    } else if let Some(own_path) = own {
+        // 2018 uniform paths: a bare root naming a child module
+        let is_child = index
+            .modules
+            .get(own_path)
+            .map(|m| m.children.contains(root))
+            .unwrap_or(false);
+        if is_child {
+            (segs.to_vec(), own_path.to_vec())
+        } else {
+            return true; // std/core/alloc/external — out of scope
+        }
+    } else {
+        return true;
+    };
+    let mut cur = base;
+    for (k, seg) in rel.iter().enumerate() {
+        let last = k == rel.len() - 1;
+        let Some(module) = index.modules.get(&cur) else {
+            return true; // walked into an unindexed space — permissive
+        };
+        if last && (seg == "*" || seg == "self") {
+            return true;
+        }
+        let mut child = cur.clone();
+        child.push(seg.clone());
+        if index.modules.contains_key(&child) {
+            cur = child;
+            continue;
+        }
+        // an item (or hidden behind a glob re-export); deeper segments
+        // (enum variants, assoc items) are unindexable
+        return module.items.contains(seg) || module.glob_reexport;
+    }
+    true
+}
+
+/// Convenience for tests and the driver: (path, source) pairs → prepared
+/// files, sorted by path.
+pub fn prepare_all(files: &[(&str, &str)]) -> Vec<Prepared> {
+    let mut sorted: Vec<&(&str, &str)> = files.iter().collect();
+    sorted.sort_by_key(|&&(p, _)| p);
+    sorted.iter().map(|&&(p, s)| prepare(p, s)).collect()
+}
+
+/// Shared by rules that scan for identifiers followed by `!`, `<`, etc.:
+/// the next non-whitespace byte at or after `from` on the same logical
+/// stream (no line limit), if any.
+pub fn next_nonws(code: &str, from: usize) -> Option<(usize, u8)> {
+    let bytes = code.as_bytes();
+    let mut j = from;
+    while j < bytes.len() {
+        if !bytes[j].is_ascii_whitespace() {
+            return Some((j, bytes[j]));
+        }
+        j += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_paths_collapse_mod_and_lib() {
+        assert_eq!(module_path_of("rust/src/lib.rs"), Some(vec![]));
+        assert_eq!(
+            module_path_of("rust/src/util/rng.rs"),
+            Some(vec!["util".to_string(), "rng".to_string()])
+        );
+        assert_eq!(
+            module_path_of("rust/src/util/mod.rs"),
+            Some(vec!["util".to_string()])
+        );
+        assert_eq!(module_path_of("rust/src/main.rs"), None);
+        assert_eq!(module_path_of("rust/tests/t.rs"), None);
+    }
+
+    fn leaves_of(src: &str) -> Vec<(String, Option<String>)> {
+        let stripped = strip_source(src);
+        let depths = brace_depths(&stripped.code);
+        parse_uses(&stripped.code, &depths)
+            .into_iter()
+            .flat_map(|u| u.leaves)
+            .map(|l| (l.segs.join("::"), l.alias))
+            .collect()
+    }
+
+    #[test]
+    fn use_trees_expand_to_leaves() {
+        let got = leaves_of("use crate::util::{rng::Rng, hash, json as j};\n");
+        assert_eq!(
+            got,
+            vec![
+                ("crate::util::rng::Rng".to_string(), None),
+                ("crate::util::hash".to_string(), None),
+                ("crate::util::json".to_string(), Some("j".to_string())),
+            ]
+        );
+    }
+
+    #[test]
+    fn multiline_use_normalizes() {
+        let got = leaves_of("use crate::data::{\n    CodeMatrix,\n    Frame,\n};\n");
+        assert_eq!(got[0].0, "crate::data::CodeMatrix");
+        assert_eq!(got[1].0, "crate::data::Frame");
+    }
+
+    #[test]
+    fn self_leaf_binds_parent_name() {
+        let stripped = strip_source("use crate::util::{self, rng};\n");
+        let depths = brace_depths(&stripped.code);
+        let uses = parse_uses(&stripped.code, &depths);
+        let names: Vec<String> = uses[0].leaves.iter().map(|l| l.binding()).collect();
+        assert_eq!(names, vec!["util".to_string(), "rng".to_string()]);
+    }
+
+    #[test]
+    fn pub_use_is_flagged_and_span_covers_semicolon() {
+        let src = "pub use crate::a::B;\nuse std::fmt;\n";
+        let stripped = strip_source(src);
+        let depths = brace_depths(&stripped.code);
+        let uses = parse_uses(&stripped.code, &depths);
+        assert_eq!(uses.len(), 2);
+        assert!(uses[0].is_pub && !uses[1].is_pub);
+        assert_eq!(&src[uses[0].span.0..uses[0].span.1], "pub use crate::a::B;");
+        assert_eq!(uses[1].line, 2);
+    }
+
+    #[test]
+    fn pub_crate_use_detected() {
+        let stripped = strip_source("pub(crate) use crate::a::B;\n");
+        let depths = brace_depths(&stripped.code);
+        let uses = parse_uses(&stripped.code, &depths);
+        assert!(uses[0].is_pub);
+        assert_eq!(uses[0].span.0, 0);
+    }
+
+    #[test]
+    fn item_and_macro_decls_are_found() {
+        let code = "pub struct A;\nfn b() {}\nmacro_rules! chk { () => {}; }\n";
+        let items: Vec<String> = item_decls(code).into_iter().map(|(_, n)| n).collect();
+        assert_eq!(items, vec!["A".to_string(), "b".to_string()]);
+        let macros = macro_decls(code);
+        assert_eq!(macros[0].1, "chk");
+        assert!(!macros[0].2, "not exported");
+        let exported = macro_decls("#[macro_export]\nmacro_rules! chk { () => {}; }\n");
+        assert!(exported[0].2);
+    }
+
+    fn tiny_index() -> CrateIndex {
+        let files = prepare_all(&[
+            ("rust/src/lib.rs", "pub mod util;\n"),
+            ("rust/src/util/mod.rs", "pub mod rng;\npub use rng::Rng;\n"),
+            ("rust/src/util/rng.rs", "pub struct Rng;\npub fn mix() {}\n"),
+        ]);
+        build_index(&files)
+    }
+
+    #[test]
+    fn index_contains_modules_items_and_reexports() {
+        let idx = tiny_index();
+        let util: Vec<String> = vec!["util".to_string()];
+        assert!(idx.modules[&util].children.contains("rng"));
+        assert!(idx.modules[&util].items.contains("Rng"), "pub use re-export");
+        let rng = vec!["util".to_string(), "rng".to_string()];
+        assert!(idx.modules[&rng].items.contains("mix"));
+    }
+
+    fn segs(path: &str) -> Vec<String> {
+        path.split("::").map(String::from).collect()
+    }
+
+    #[test]
+    fn resolve_accepts_real_paths_and_rejects_fakes() {
+        let idx = tiny_index();
+        assert!(resolve_path(&segs("crate::util::rng::Rng"), &idx, None));
+        assert!(resolve_path(&segs("substrat::util::Rng"), &idx, None));
+        assert!(!resolve_path(&segs("crate::util::rng::Missing"), &idx, None));
+        assert!(!resolve_path(&segs("crate::nope"), &idx, None));
+        // std and external roots are out of scope — permissive
+        assert!(resolve_path(&segs("serde::Serialize"), &idx, None));
+    }
+
+    #[test]
+    fn resolve_handles_self_super_and_uniform_paths() {
+        let idx = tiny_index();
+        let util: Vec<String> = vec!["util".to_string()];
+        let rng = vec!["util".to_string(), "rng".to_string()];
+        assert!(resolve_path(&segs("self::rng::Rng"), &idx, Some(&util)));
+        assert!(resolve_path(&segs("super::util::Rng"), &idx, Some(&rng)));
+        assert!(!resolve_path(&segs("super::super::super::x"), &idx, Some(&rng)));
+        // 2018 uniform path: `use rng::Rng;` from inside util
+        assert!(resolve_path(&segs("rng::Rng"), &idx, Some(&util)));
+    }
+
+    #[test]
+    fn glob_reexport_is_permissive() {
+        let files = prepare_all(&[
+            ("rust/src/lib.rs", "pub mod a;\n"),
+            ("rust/src/a.rs", "pub use crate::b::*;\n"),
+        ]);
+        let idx = build_index(&files);
+        assert!(resolve_path(&segs("crate::a::Anything"), &idx, None));
+    }
+}

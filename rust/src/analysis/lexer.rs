@@ -1,0 +1,480 @@
+//! A minimal Rust lexer for the static-analysis pass (DESIGN.md §9):
+//! classifies every character of a source file as code, comment, or
+//! literal, and hands the rules a *stripped* view — comments and
+//! string/char-literal bodies blanked to spaces, line structure intact —
+//! so token scans can never match inside a string or a doc comment.
+//!
+//! Correctness scope (all of it exercised by the fixture tests below):
+//! line comments, nested block comments, plain strings with escapes,
+//! raw strings `r"…"`/`r#"…"#` with any hash count, byte strings
+//! `b"…"`/`br#"…"#`, char and byte-char literals (including `'\''` and
+//! `'"'`), and the char-literal vs lifetime distinction (`'a'` vs `'a`).
+//!
+//! Kept in rule-for-rule sync with the lexer in `tools/srclint.py` —
+//! edit both together.
+
+use std::collections::BTreeMap;
+
+/// A source file after lexing: `code` is the input with every comment
+/// and literal body replaced by spaces (newlines preserved, so line
+/// numbers and brace depths still line up), `comments` maps 1-based
+/// line numbers to the comment text on that line (block comments
+/// contribute one entry per spanned line).
+#[derive(Debug)]
+pub struct Stripped {
+    /// code-only text, same line structure as the input
+    pub code: String,
+    /// 1-based line → comment texts (for suppression scanning)
+    pub comments: BTreeMap<usize, Vec<String>>,
+}
+
+fn note_comment(comments: &mut BTreeMap<usize, Vec<String>>, start_line: usize, text: &str) {
+    for (k, part) in text.split('\n').enumerate() {
+        comments.entry(start_line + k).or_default().push(part.to_string());
+    }
+}
+
+/// Blank a span of `chars[i..j]` into `out`, preserving newlines and
+/// returning the number of newlines crossed.
+fn blank_span(out: &mut String, chars: &[char], i: usize, j: usize) -> usize {
+    let mut newlines = 0;
+    for &ch in &chars[i..j] {
+        if ch == '\n' {
+            out.push('\n');
+            newlines += 1;
+        } else {
+            out.push(' ');
+        }
+    }
+    newlines
+}
+
+/// Lex `src` into its stripped form. Unterminated literals/comments
+/// blank through end-of-file rather than erroring: the lint pass must
+/// degrade gracefully on files rustc would reject anyway.
+pub fn strip_source(src: &str) -> Stripped {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(src.len());
+    let mut comments: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    let mut prev_ident = false;
+
+    while i < n {
+        let c = chars[i];
+        let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+
+        // line comment
+        if c == '/' && nxt == '/' {
+            let mut j = i;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            note_comment(&mut comments, line, &text);
+            blank_span(&mut out, &chars, i, j);
+            i = j;
+            prev_ident = false;
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && nxt == '*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let text: String = chars[i..j].iter().collect();
+            note_comment(&mut comments, start_line, &text);
+            line += blank_span(&mut out, &chars, i, j);
+            i = j;
+            prev_ident = false;
+            continue;
+        }
+        // raw / byte string prefixes — only when not continuing an
+        // identifier (`br"` in `var"` cannot happen; `r` ending an
+        // identifier like `ptr` must not open a raw string)
+        if !prev_ident && (c == 'r' || c == 'b') {
+            let prefix_len = if c == 'b' && nxt == 'r' { 2 } else { 1 };
+            let is_raw = c == 'r' || prefix_len == 2;
+            let mut h = 0usize;
+            while is_raw && i + prefix_len + h < n && chars[i + prefix_len + h] == '#' {
+                h += 1;
+            }
+            let quote_at = i + prefix_len + h;
+            if quote_at < n && chars[quote_at] == '"' && (is_raw || prefix_len == 1) {
+                let mut j = quote_at + 1;
+                if is_raw {
+                    // closing `"` followed by exactly `h` hashes
+                    loop {
+                        if j >= n {
+                            break;
+                        }
+                        let hashes =
+                            chars[j + 1..].iter().take(h).filter(|&&x| x == '#').count();
+                        if chars[j] == '"' && hashes == h {
+                            j += 1 + h;
+                            break;
+                        }
+                        j += 1;
+                    }
+                } else {
+                    // b"…" — escapes apply
+                    while j < n {
+                        if chars[j] == '\\' {
+                            j += 2;
+                        } else if chars[j] == '"' {
+                            j += 1;
+                            break;
+                        } else {
+                            j += 1;
+                        }
+                    }
+                }
+                let j = j.min(n);
+                line += blank_span(&mut out, &chars, i, j);
+                i = j;
+                prev_ident = false;
+                continue;
+            }
+            if c == 'b' && nxt == '\'' {
+                // byte-char literal: blank the prefix, fall through to
+                // the char-literal branch on the next iteration
+                out.push(' ');
+                i += 1;
+                prev_ident = false;
+                continue;
+            }
+        }
+        // plain string
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if chars[j] == '\\' {
+                    j += 2;
+                } else if chars[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = j.min(n);
+            line += blank_span(&mut out, &chars, i, j);
+            i = j;
+            prev_ident = false;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let third = if i + 2 < n { chars[i + 2] } else { '\0' };
+            if nxt == '\\' {
+                // escaped char literal: skip the escape head, then run
+                // to the closing quote (covers \n, \', \u{…})
+                let mut j = (i + 3).min(n);
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                let j = (j + 1).min(n);
+                blank_span(&mut out, &chars, i, j);
+                i = j;
+                prev_ident = false;
+                continue;
+            }
+            if nxt != '\0' && third == '\'' {
+                out.push_str("   ");
+                i += 3;
+                prev_ident = false;
+                continue;
+            }
+            // lifetime (`'a`, `'static`): keep as code
+            out.push(c);
+            i += 1;
+            prev_ident = false;
+            continue;
+        }
+        out.push(c);
+        if c == '\n' {
+            line += 1;
+        }
+        prev_ident = c.is_alphanumeric() || c == '_';
+        i += 1;
+    }
+    Stripped { code: out, comments }
+}
+
+/// True for bytes that can continue an identifier. Multi-byte UTF-8
+/// continuation bytes count as identifier-ish so token boundary checks
+/// never split a non-ASCII identifier.
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len()).find(|&p| &hay[p..p + needle.len()] == needle)
+}
+
+/// Byte offsets of every occurrence of `needle` in `code` whose ends do
+/// not touch identifier characters — the no-regex equivalent of
+/// `\bneedle\b` (needles may contain `::` or other punctuation).
+pub fn find_bounded(code: &str, needle: &str) -> Vec<usize> {
+    let hay = code.as_bytes();
+    let nb = needle.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = find_from(hay, nb, from) {
+        let before_ok = pos == 0 || !is_ident_byte(hay[pos - 1]);
+        let end = pos + nb.len();
+        let after_ok = end >= hay.len() || !is_ident_byte(hay[end]);
+        if before_ok && after_ok {
+            out.push(pos);
+        }
+        from = pos + 1;
+    }
+    out
+}
+
+/// `(byte offset, token)` for every identifier-or-number token in the
+/// stripped code, in order.
+pub fn tokens(code: &str) -> Vec<(usize, &str)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if is_ident_byte(bytes[i]) {
+            let start = i;
+            while i < bytes.len() && is_ident_byte(bytes[i]) {
+                i += 1;
+            }
+            out.push((start, &code[start..i]));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Brace depth (count of unclosed `{`) before each byte of `code`.
+pub fn brace_depths(code: &str) -> Vec<u32> {
+    let mut depths = Vec::with_capacity(code.len());
+    let mut d: u32 = 0;
+    for &b in code.as_bytes() {
+        depths.push(d);
+        if b == b'{' {
+            d += 1;
+        } else if b == b'}' {
+            d = d.saturating_sub(1);
+        }
+    }
+    depths
+}
+
+/// Byte offset one past the `}` matching the `{` at `open_idx`
+/// (`code.len()` if unbalanced).
+pub fn match_brace(code: &str, open_idx: usize) -> usize {
+    let bytes = code.as_bytes();
+    let mut d: i64 = 0;
+    for (j, &b) in bytes.iter().enumerate().skip(open_idx) {
+        if b == b'{' {
+            d += 1;
+        } else if b == b'}' {
+            d -= 1;
+            if d == 0 {
+                return j + 1;
+            }
+        }
+    }
+    code.len()
+}
+
+/// 1-based line number of byte offset `idx`.
+pub fn line_of(code: &str, idx: usize) -> usize {
+    code.as_bytes()[..idx.min(code.len())]
+        .iter()
+        .filter(|&&b| b == b'\n')
+        .count()
+        + 1
+}
+
+/// Lines (1-based, inclusive) covered by `#[cfg(test)] mod … { … }`
+/// blocks — the discipline-tier rules skip them.
+pub fn cfg_test_lines(code: &str) -> std::collections::BTreeSet<usize> {
+    let mut lines = std::collections::BTreeSet::new();
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = find_from(bytes, b"#[cfg(", from) {
+        from = pos + 1;
+        let after = pos + "#[cfg(".len();
+        // `test` must open the cfg predicate (optionally inside all(…))
+        let rest = &code[after..];
+        let opens_with_test = rest.starts_with("test")
+            || (rest.starts_with("all(") && rest["all(".len()..].starts_with("test"));
+        if !opens_with_test {
+            continue;
+        }
+        let Some(close_rel) = code[pos..].find(']') else {
+            continue;
+        };
+        let mut j = pos + close_rel + 1;
+        // skip whitespace and further attributes up to the item
+        loop {
+            while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if code[j..].starts_with("#[") {
+                match code[j..].find(']') {
+                    Some(k) => j += k + 1,
+                    None => return lines,
+                }
+            } else {
+                break;
+            }
+        }
+        let open = code[j..].find('{').map(|k| j + k);
+        let semi = code[j..].find(';').map(|k| j + k);
+        match (open, semi) {
+            (Some(o), Some(s)) if s < o => continue, // `#[cfg(test)] mod x;` is a file
+            (Some(o), _) => {
+                let end = match_brace(code, o);
+                for ln in line_of(code, pos)..=line_of(code, end.saturating_sub(1)) {
+                    lines.insert(ln);
+                }
+            }
+            _ => continue,
+        }
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> String {
+        strip_source(src).code
+    }
+
+    #[test]
+    fn line_comments_are_blanked_and_recorded() {
+        let s = strip_source("let a = 1; // trailing note\nlet b = 2;\n");
+        assert!(!s.code.contains("trailing"));
+        assert!(s.code.contains("let a = 1;"));
+        assert!(s.code.contains("let b = 2;"));
+        assert_eq!(s.comments[&1], vec!["// trailing note".to_string()]);
+        assert!(!s.comments.contains_key(&2));
+    }
+
+    #[test]
+    fn nested_block_comments_terminate_correctly() {
+        let src = "a /* outer /* inner */ still comment */ b\n";
+        let code = code_of(src);
+        assert!(code.contains('a') && code.contains('b'));
+        assert!(!code.contains("inner") && !code.contains("still"));
+    }
+
+    #[test]
+    fn block_comment_spans_report_every_line() {
+        let s = strip_source("/* one\ntwo\nthree */ fn x() {}\n");
+        assert!(s.comments.contains_key(&1));
+        assert!(s.comments.contains_key(&2));
+        assert!(s.comments.contains_key(&3));
+        assert!(s.code.contains("fn x()"));
+    }
+
+    #[test]
+    fn strings_with_escapes_are_blanked() {
+        let code = code_of(r#"let s = "quote \" and // not a comment";"#);
+        assert!(!code.contains("comment"));
+        assert!(code.contains("let s ="));
+        assert!(code.ends_with(';'));
+    }
+
+    #[test]
+    fn raw_strings_ignore_escapes_and_quotes() {
+        let code = code_of(r##"let s = r#"body with " quote and \ slash"# ; done"##);
+        assert!(!code.contains("body"));
+        assert!(code.contains("done"), "{code:?}");
+    }
+
+    #[test]
+    fn byte_and_byte_raw_strings_are_literals() {
+        let code = code_of("let a = b\"bytes\"; let c = br#\"raw\"#; end");
+        assert!(!code.contains("bytes") && !code.contains("raw"));
+        assert!(code.contains("end"));
+    }
+
+    #[test]
+    fn identifier_ending_in_r_does_not_open_raw_string() {
+        let code = code_of("let ptr = var + 1; // r\"not raw\"\nnext");
+        assert!(code.contains("let ptr = var + 1;"));
+        assert!(code.contains("next"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let code = code_of("fn f<'a>(x: &'a str) { let c = 'y'; let q = '\\''; let d = '\"'; }");
+        assert!(code.contains("<'a>"), "lifetime must stay code: {code:?}");
+        assert!(code.contains("&'a str"));
+        assert!(!code.contains('y'), "char literal body leaked: {code:?}");
+        assert!(!code.contains('"'), "quote char literal leaked: {code:?}");
+        // the braces all survived blanking
+        assert_eq!(brace_depths(&code).last().copied(), Some(1));
+    }
+
+    #[test]
+    fn find_bounded_respects_identifier_edges() {
+        assert_eq!(find_bounded("now vs Instant::now()", "Instant::now").len(), 1);
+        assert!(find_bounded("xInstant::now", "Instant::now").is_empty());
+        assert!(find_bounded("Instant::nowhere", "Instant::now").is_empty());
+        assert_eq!(find_bounded("a.iter() b_iter iter", "iter").len(), 2);
+    }
+
+    #[test]
+    fn tokens_enumerate_identifiers_and_numbers() {
+        let toks = tokens("let x2 = 0xFF + foo_bar;");
+        let names: Vec<&str> = toks.iter().map(|&(_, t)| t).collect();
+        assert_eq!(names, vec!["let", "x2", "0xFF", "foo_bar"]);
+    }
+
+    #[test]
+    fn brace_helpers_agree() {
+        let code = "fn a() { if x { y } }";
+        let open = code.find('{').unwrap();
+        assert_eq!(match_brace(code, open), code.len());
+        let depths = brace_depths(code);
+        assert_eq!(depths[code.find("if").unwrap()], 1);
+        assert_eq!(depths[code.find('y').unwrap()], 2);
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_located() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let lines = cfg_test_lines(&code_of(src));
+        assert!(lines.contains(&2) && lines.contains(&3) && lines.contains(&5));
+        assert!(!lines.contains(&1) && !lines.contains(&6));
+        // cfg(test) on a `mod x;` file declaration covers nothing
+        let none = cfg_test_lines(&code_of("#[cfg(test)]\nmod fixtures;\nfn x() {}\n"));
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn line_of_counts_from_one() {
+        let code = "a\nb\nc";
+        assert_eq!(line_of(code, 0), 1);
+        assert_eq!(line_of(code, 2), 2);
+        assert_eq!(line_of(code, 4), 3);
+    }
+}

@@ -1,0 +1,819 @@
+//! The rule set of the static-analysis pass (DESIGN.md §9). Two tiers:
+//! the compile-review tier re-checks what the line-level compile review
+//! checks by hand (module/use resolution, unused imports, macro
+//! imports, layout), and the discipline tier enforces the repo's
+//! determinism contracts (clock reads only in util/timer.rs, no hash
+//! iteration where records are written, RNG streams derived only
+//! through util/rng.rs, and config-fingerprint completeness).
+//!
+//! Rule IDs, firing conditions, and the suppression syntax are kept
+//! IDENTICAL to `tools/srclint.py` — when editing a rule here, edit the
+//! Python mirror in the same commit, and vice versa.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::items::{
+    module_path_of, next_nonws, resolve_path, CrateIndex, Prepared,
+};
+use crate::analysis::lexer::{
+    brace_depths, find_bounded, is_ident_byte, line_of, match_brace, tokens,
+};
+use crate::analysis::Finding;
+
+/// Longest permitted raw line, in characters.
+pub const MAX_COLS: usize = 100;
+
+/// Compile-review tier: runs on every Rust file in the tree.
+pub const COMPILE_RULES: [&str; 6] = [
+    "mod-file",
+    "use-resolve",
+    "unused-import",
+    "macro-import",
+    "line-length",
+    "trailing-ws",
+];
+
+/// Discipline tier: runs on the library crate (rust/src) only, outside
+/// `#[cfg(test)]` blocks.
+pub const DISCIPLINE_RULES: [&str; 4] = [
+    "timer-discipline",
+    "iter-order",
+    "rng-discipline",
+    "fp-complete",
+];
+
+/// Meta tier: malformed allow/fp-exempt comments.
+pub const META_RULES: [&str; 1] = ["suppression"];
+
+/// Every rule ID the pass can emit.
+pub fn all_rules() -> Vec<&'static str> {
+    let mut all: Vec<&'static str> = COMPILE_RULES.to_vec();
+    all.extend(DISCIPLINE_RULES);
+    all.extend(META_RULES);
+    all
+}
+
+/// struct → fingerprint function that must name every non-exempt field
+pub const FP_PAIRS: [(&str, &str); 2] = [
+    ("ExpConfig", "config_fingerprint"),
+    ("GenDstConfig", "config_fingerprint"),
+];
+
+const TIMER_ALLOWED: [&str; 1] = ["rust/src/util/timer.rs"];
+const RNG_ALLOWED: [&str; 2] = ["rust/src/util/rng.rs", "rust/src/util/hash.rs"];
+
+const CLOCK_TOKENS: [&str; 3] = ["Instant::now", "SystemTime", "UNIX_EPOCH"];
+const RNG_TOKENS: [&str; 4] = ["RandomState", "DefaultHasher", "thread_rng", "from_entropy"];
+// splitmix64's golden-ratio increment: its appearance outside util/rng.rs
+// and util/hash.rs means someone is hand-rolling a generator/mixer.
+// lint: allow(rng-discipline) the lint must name the constant it hunts for
+const RNG_CONST: u64 = 0x9E37_79B9_7F4A_7C15;
+const RECORD_MARKERS: [&str; 3] = ["obj_to_line", "Fingerprinter", "fingerprint_bytes"];
+const ITER_METHODS: [&str; 9] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+// ------------------------------------------------------------------
+// small scanning helpers (the no-regex substrate shared by the rules)
+
+/// Only ASCII whitespace between `a` and `b`, and at least one char.
+fn ws_only(code: &str, a: usize, b: usize) -> bool {
+    a < b && code.as_bytes()[a..b].iter().all(|c| c.is_ascii_whitespace())
+}
+
+/// Skip whitespace backwards: largest `j ≤ from` with no trailing ws.
+fn skip_ws_back(bytes: &[u8], mut from: usize) -> usize {
+    while from > 0 && bytes[from - 1].is_ascii_whitespace() {
+        from -= 1;
+    }
+    from
+}
+
+/// The identifier ending exactly at byte `end`, if any (first char must
+/// be a letter or `_`, like Rust identifiers).
+fn ident_back(code: &str, end: usize) -> Option<&str> {
+    let bytes = code.as_bytes();
+    let mut start = end;
+    while start > 0 && is_ident_byte(bytes[start - 1]) {
+        start -= 1;
+    }
+    if start == end {
+        return None;
+    }
+    let first = bytes[start];
+    (first.is_ascii_alphabetic() || first == b'_').then(|| &code[start..end])
+}
+
+/// The identifier starting at byte `from`, if any.
+fn ident_forward(code: &str, from: usize) -> Option<&str> {
+    let bytes = code.as_bytes();
+    let mut end = from;
+    while end < bytes.len() && is_ident_byte(bytes[end]) {
+        end += 1;
+    }
+    (end > from).then(|| &code[from..end])
+}
+
+/// `code[..end]` ends with `word` at an identifier boundary.
+fn ends_word(code: &str, end: usize, word: &str) -> bool {
+    if !code[..end].ends_with(word) {
+        return false;
+    }
+    let start = end - word.len();
+    start == 0 || !is_ident_byte(code.as_bytes()[start - 1])
+}
+
+// ------------------------------------------------------------------
+// compile-review tier
+
+/// `#[path = …]` appears in the attribute run before a `mod` item.
+fn has_path_attr(head: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(i) = head[from..].find("#[path") {
+        let j = from + i + "#[path".len();
+        if next_nonws(head, j).map(|(_, b)| b == b'=').unwrap_or(false) {
+            return true;
+        }
+        from = from + i + 1;
+    }
+    false
+}
+
+fn join2(base: &str, tail: &str) -> String {
+    if base.is_empty() {
+        tail.to_string()
+    } else {
+        format!("{base}/{tail}")
+    }
+}
+
+/// Every `mod x;` at module scope must resolve to `x.rs` or `x/mod.rs`
+/// next to the declaring file (unless redirected by `#[path = …]`).
+pub fn rule_mod_file(f: &Prepared, have: &BTreeSet<String>, out: &mut Vec<Finding>) {
+    let toks = tokens(&f.code);
+    for w in toks.windows(2) {
+        let (pos, tok) = w[0];
+        let (npos, name) = w[1];
+        if tok != "mod" || f.depths[pos] != 0 {
+            continue;
+        }
+        if !ws_only(&f.code, pos + 3, npos) || name.as_bytes()[0].is_ascii_digit() {
+            continue;
+        }
+        let after_name = npos + name.len();
+        if next_nonws(&f.code, after_name).map(|(_, b)| b) != Some(b';') {
+            continue;
+        }
+        if has_path_attr(&f.code[pos.saturating_sub(200)..pos]) {
+            continue;
+        }
+        let (dir, stem) = match f.path.rsplit_once('/') {
+            Some((d, s)) => (d.to_string(), s),
+            None => (String::new(), f.path.as_str()),
+        };
+        let base = if matches!(stem, "lib.rs" | "main.rs" | "mod.rs") {
+            dir
+        } else {
+            join2(&dir, &stem[..stem.len() - 3])
+        };
+        let cands = [
+            join2(&base, &format!("{name}.rs")),
+            join2(&base, &format!("{name}/mod.rs")),
+        ];
+        if !cands.iter().any(|c| have.contains(c)) {
+            out.push(Finding {
+                rule: "mod-file",
+                path: f.path.clone(),
+                line: line_of(&f.code, pos),
+                col: 1,
+                message: format!("`mod {name};` resolves to none of {cands:?}"),
+            });
+        }
+    }
+}
+
+/// Every crate-rooted use path must resolve against the module index.
+pub fn rule_use_resolve(f: &Prepared, index: &CrateIndex, out: &mut Vec<Finding>) {
+    let own = module_path_of(&f.path);
+    for u in &f.uses {
+        for leaf in &u.leaves {
+            let root = leaf.segs.first().map(String::as_str).unwrap_or("");
+            if matches!(root, "std" | "core" | "alloc" | "proc_macro") {
+                continue;
+            }
+            if !resolve_path(&leaf.segs, index, own.as_deref()) {
+                out.push(Finding {
+                    rule: "use-resolve",
+                    path: f.path.clone(),
+                    line: u.line,
+                    col: 1,
+                    message: format!("unresolved use path `{}`", leaf.segs.join("::")),
+                });
+            }
+        }
+    }
+}
+
+/// A non-pub imported binding must be referenced somewhere in the file
+/// outside the use declarations themselves.
+pub fn rule_unused_import(f: &Prepared, out: &mut Vec<Finding>) {
+    let mut scrubbed: Vec<u8> = f.code.as_bytes().to_vec();
+    for u in &f.uses {
+        for b in scrubbed[u.span.0..u.span.1].iter_mut() {
+            if *b != b'\n' {
+                *b = b' ';
+            }
+        }
+    }
+    let scrubbed = String::from_utf8(scrubbed).unwrap_or_default();
+    for u in &f.uses {
+        if u.is_pub {
+            continue;
+        }
+        for leaf in &u.leaves {
+            let name = leaf.binding();
+            if matches!(name.as_str(), "*" | "_" | "self") {
+                continue;
+            }
+            if find_bounded(&scrubbed, &name).is_empty() {
+                out.push(Finding {
+                    rule: "unused-import",
+                    path: f.path.clone(),
+                    line: u.line,
+                    col: 1,
+                    message: format!("unused import `{name}`"),
+                });
+            }
+        }
+    }
+}
+
+/// A `#[macro_export]` macro invoked as `name!(…)` needs
+/// `use crate::name;` (or full qualification) in the consuming file.
+pub fn rule_macro_import(f: &Prepared, index: &CrateIndex, out: &mut Vec<Finding>) {
+    let mut imported: BTreeSet<String> = BTreeSet::new();
+    for u in &f.uses {
+        for leaf in &u.leaves {
+            let last = leaf.segs.last().cloned().unwrap_or_default();
+            imported.insert(leaf.alias.clone().unwrap_or(last));
+        }
+    }
+    for (name, definer) in &index.macros {
+        if &f.path == definer || imported.contains(name) {
+            continue;
+        }
+        for pos in find_bounded(&f.code, name) {
+            let after = pos + name.len();
+            if next_nonws(&f.code, after).map(|(_, b)| b) != Some(b'!') {
+                continue;
+            }
+            let before = f.code[..pos].trim_end();
+            if before.ends_with("::") || before.ends_with("macro_rules!") {
+                continue;
+            }
+            out.push(Finding {
+                rule: "macro-import",
+                path: f.path.clone(),
+                line: line_of(&f.code, pos),
+                col: 1,
+                message: format!(
+                    "`{name}!` used without `use crate::{name};` \
+                     (#[macro_export] macros live at the crate root)"
+                ),
+            });
+            break; // one finding per (file, macro)
+        }
+    }
+}
+
+/// Raw-line layout: max width and trailing whitespace.
+pub fn rule_line_cols(f: &Prepared, out: &mut Vec<Finding>) {
+    for (ln0, text) in f.raw.split('\n').enumerate() {
+        let ln = ln0 + 1;
+        let cols = text.chars().count();
+        if cols > MAX_COLS {
+            out.push(Finding {
+                rule: "line-length",
+                path: f.path.clone(),
+                line: ln,
+                col: MAX_COLS + 1,
+                message: format!("line is {cols} chars (max {MAX_COLS})"),
+            });
+        }
+        if text != text.trim_end() {
+            out.push(Finding {
+                rule: "trailing-ws",
+                path: f.path.clone(),
+                line: ln,
+                col: text.trim_end().chars().count() + 1,
+                message: "trailing whitespace".to_string(),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// discipline tier
+
+/// Raw clock reads live in util/timer.rs only.
+pub fn rule_timer(f: &Prepared, out: &mut Vec<Finding>) {
+    if TIMER_ALLOWED.contains(&f.path.as_str()) {
+        return;
+    }
+    let mut hits: Vec<(usize, &str)> = Vec::new();
+    for tok in CLOCK_TOKENS {
+        for pos in find_bounded(&f.code, tok) {
+            hits.push((pos, tok));
+        }
+    }
+    hits.sort();
+    for (pos, tok) in hits {
+        let ln = line_of(&f.code, pos);
+        if f.test_lines.contains(&ln) {
+            continue;
+        }
+        out.push(Finding {
+            rule: "timer-discipline",
+            path: f.path.clone(),
+            line: ln,
+            col: 1,
+            message: format!(
+                "raw clock read `{tok}` outside util/timer.rs — use \
+                 Stopwatch/CpuTimer/Deadline/unix_time_s so timed windows \
+                 stay auditable"
+            ),
+        });
+    }
+}
+
+/// Ad-hoc RNG construction (std hashing randomness, rand-crate idioms,
+/// or a hand-rolled splitmix constant) outside util/rng.rs.
+pub fn rule_rng(f: &Prepared, out: &mut Vec<Finding>) {
+    if RNG_ALLOWED.contains(&f.path.as_str()) {
+        return;
+    }
+    let mut hits: Vec<(usize, String)> = Vec::new();
+    for tok in RNG_TOKENS {
+        for pos in find_bounded(&f.code, tok) {
+            hits.push((pos, tok.to_string()));
+        }
+    }
+    for (pos, tok) in tokens(&f.code) {
+        let Some(hex) = tok.strip_prefix("0x") else {
+            continue;
+        };
+        if u64::from_str_radix(&hex.replace('_', ""), 16) == Ok(RNG_CONST) {
+            hits.push((pos, tok.to_string()));
+        }
+    }
+    hits.sort();
+    for (pos, tok) in hits {
+        let ln = line_of(&f.code, pos);
+        if f.test_lines.contains(&ln) {
+            continue;
+        }
+        out.push(Finding {
+            rule: "rng-discipline",
+            path: f.path.clone(),
+            line: ln,
+            col: 1,
+            message: format!(
+                "ad-hoc RNG construction `{tok}` — derive streams from \
+                 util::rng (per-(seed, island) forks)"
+            ),
+        });
+    }
+}
+
+/// The variable name declared as a HashMap/HashSet via a type
+/// annotation ending just before `hashpos` (`name: &mut Hash…<`).
+fn annot_name_before(code: &str, hashpos: usize) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut k = hashpos;
+    if code[..k].ends_with("std::collections::") {
+        k -= "std::collections::".len();
+    }
+    let mut j = skip_ws_back(bytes, k);
+    if j < k && ends_word(code, j, "mut") {
+        j -= 3;
+    }
+    j = skip_ws_back(bytes, j);
+    if j > 0 && bytes[j - 1] == b'&' {
+        j -= 1;
+    }
+    j = skip_ws_back(bytes, j);
+    if j == 0 || bytes[j - 1] != b':' {
+        return None;
+    }
+    j = skip_ws_back(bytes, j - 1);
+    ident_back(code, j).map(str::to_string)
+}
+
+/// Names declared in-file as HashMap/HashSet (type annotation or
+/// `= HashMap::…` initializer).
+fn hash_decl_names(code: &str) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for needle in ["HashMap", "HashSet"] {
+        for pos in find_bounded(code, needle) {
+            if next_nonws(code, pos + needle.len()).map(|(_, b)| b) != Some(b'<') {
+                continue;
+            }
+            if let Some(name) = annot_name_before(code, pos) {
+                names.insert(name);
+            }
+        }
+    }
+    let bytes = code.as_bytes();
+    let toks = tokens(code);
+    for (i, &(pos, tok)) in toks.iter().enumerate() {
+        if !matches!(tok, "let" | "static" | "const") {
+            continue;
+        }
+        let Some(&(p1, t1)) = toks.get(i + 1) else {
+            continue;
+        };
+        if !ws_only(code, pos + tok.len(), p1) {
+            continue;
+        }
+        let (npos, name) = if t1 == "mut" {
+            match toks.get(i + 2) {
+                Some(&(p2, t2)) if ws_only(code, p1 + 3, p2) => (p2, t2),
+                _ => continue,
+            }
+        } else {
+            (p1, t1)
+        };
+        if name.as_bytes()[0].is_ascii_digit() {
+            continue;
+        }
+        let mut j = npos + name.len();
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j < bytes.len() && bytes[j] == b':' {
+            while j < bytes.len() && bytes[j] != b'=' && bytes[j] != b';' {
+                j += 1;
+            }
+        }
+        if j >= bytes.len() || bytes[j] != b'=' {
+            continue;
+        }
+        j += 1;
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let rest = &code[j..];
+        let rest = rest.strip_prefix("std::collections::").unwrap_or(rest);
+        if rest.starts_with("HashMap::") || rest.starts_with("HashSet::") {
+            names.insert(name.to_string());
+        }
+    }
+    names
+}
+
+/// `.iter()`-family call directly after byte `from`?
+fn iter_method_after(code: &str, from: usize) -> bool {
+    let Some((dot, b)) = next_nonws(code, from) else {
+        return false;
+    };
+    if b != b'.' {
+        return false;
+    }
+    let Some((mstart, _)) = next_nonws(code, dot + 1) else {
+        return false;
+    };
+    let Some(method) = ident_forward(code, mstart) else {
+        return false;
+    };
+    if !ITER_METHODS.contains(&method) {
+        return false;
+    }
+    next_nonws(code, mstart + method.len()).map(|(_, b)| b) == Some(b'(')
+}
+
+/// Iterating a HashMap/HashSet in a file that writes records — order is
+/// nondeterministic, so journal/fingerprint bytes would be too.
+pub fn rule_iter_order(f: &Prepared, out: &mut Vec<Finding>) {
+    if !RECORD_MARKERS.iter().any(|m| !find_bounded(&f.code, m).is_empty()) {
+        return;
+    }
+    let names = hash_decl_names(&f.code);
+    if names.is_empty() {
+        return;
+    }
+    let bytes = f.code.as_bytes();
+    let mut hits: Vec<(usize, String)> = Vec::new();
+    for name in &names {
+        for pos in find_bounded(&f.code, name) {
+            if iter_method_after(&f.code, pos + name.len()) {
+                hits.push((pos, name.clone()));
+            }
+        }
+    }
+    'fors: for fpos in find_bounded(&f.code, "for") {
+        let after = fpos + 3;
+        if after >= bytes.len() || !bytes[after].is_ascii_whitespace() {
+            continue;
+        }
+        let mut end = after;
+        while end < bytes.len() && bytes[end] != b';' && bytes[end] != b'{' {
+            end += 1;
+        }
+        let window = &f.code[after..end];
+        let wb = window.as_bytes();
+        for ipos in find_bounded(window, "in") {
+            let mut j = ipos + 2;
+            if j >= wb.len() || !wb[j].is_ascii_whitespace() {
+                continue;
+            }
+            while j < wb.len() && wb[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j < wb.len() && wb[j] == b'&' {
+                j += 1;
+            }
+            while j < wb.len() && wb[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if window[j..].starts_with("mut")
+                && wb.get(j + 3).map(|b| b.is_ascii_whitespace()).unwrap_or(false)
+            {
+                j += 3;
+                while j < wb.len() && wb[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+            }
+            let Some(target) = ident_forward(window, j) else {
+                continue;
+            };
+            if names.contains(target) {
+                hits.push((fpos, target.to_string()));
+                continue 'fors;
+            }
+        }
+    }
+    hits.sort();
+    for (pos, name) in hits {
+        let ln = line_of(&f.code, pos);
+        if f.test_lines.contains(&ln) {
+            continue;
+        }
+        out.push(Finding {
+            rule: "iter-order",
+            path: f.path.clone(),
+            line: ln,
+            col: 1,
+            message: format!(
+                "iterating hash collection `{name}` in a file that writes \
+                 records — order is nondeterministic; collect+sort or use a \
+                 BTree collection"
+            ),
+        });
+    }
+}
+
+/// `(keyword pos, end-of-name pos)` of `struct <sname>` / `fn <fname>`.
+fn kw_decl(code: &str, keyword: &str, name: &str) -> Vec<(usize, usize)> {
+    let toks = tokens(code);
+    let mut out = Vec::new();
+    for w in toks.windows(2) {
+        let (pos, t) = w[0];
+        let (npos, n) = w[1];
+        if t == keyword && n == name && ws_only(code, pos + keyword.len(), npos) {
+            out.push((pos, npos + n.len()));
+        }
+    }
+    out
+}
+
+/// `(pub )?name :` at the start of a struct-body line.
+fn field_on_line(line: &str) -> Option<(usize, String)> {
+    let bytes = line.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if line[i..].starts_with("pub")
+        && bytes.get(i + 3).map(|b| b.is_ascii_whitespace()).unwrap_or(false)
+    {
+        i += 3;
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+    }
+    let name = ident_forward(line, i)?;
+    if name.as_bytes()[0].is_ascii_digit() {
+        return None;
+    }
+    let mut j = i + name.len();
+    while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+        j += 1;
+    }
+    (bytes.get(j) == Some(&b':')).then(|| (i, name.to_string()))
+}
+
+/// The contiguous comment block attached to a field: comments on the
+/// field's own line plus comment-only lines directly above it.
+fn contiguous_comment_block(
+    comments: &BTreeMap<usize, Vec<String>>,
+    code_lines: &[&str],
+    field_line: usize,
+) -> Vec<String> {
+    let mut texts: Vec<String> = comments.get(&field_line).cloned().unwrap_or_default();
+    let mut ln = field_line.saturating_sub(1);
+    while ln >= 1 && comments.contains_key(&ln) {
+        let code_blank = code_lines
+            .get(ln - 1)
+            .map(|l| l.trim().is_empty())
+            .unwrap_or(true);
+        if !code_blank {
+            break;
+        }
+        texts.extend(comments[&ln].iter().cloned());
+        ln -= 1;
+    }
+    texts
+}
+
+/// Every named field of the FP_PAIRS structs must appear as `.field` in
+/// the paired fingerprint function's body, or carry `// fp-exempt: <why>`.
+pub fn rule_fp_complete(src: &[&Prepared], out: &mut Vec<Finding>) {
+    for (sname, fname) in FP_PAIRS {
+        let mut decl: Option<(&Prepared, usize, usize)> = None;
+        for f in src {
+            if let Some(&(pos, name_end)) = kw_decl(&f.code, "struct", sname).first() {
+                decl = Some((f, pos, name_end));
+                break;
+            }
+        }
+        let Some((f, spos, name_end)) = decl else {
+            continue; // struct not in this tree (fixture runs)
+        };
+        let Some(open_rel) = f.code[name_end..].find('{') else {
+            continue; // tuple/unit struct: no named fields
+        };
+        let open = name_end + open_rel;
+        let end = match_brace(&f.code, open);
+        let body = &f.code[open + 1..end.saturating_sub(1)];
+        let body_depths = brace_depths(body);
+        let mut fields: Vec<(String, usize)> = Vec::new();
+        let mut off = 0usize;
+        for line in body.split('\n') {
+            if let Some((rel, name)) = field_on_line(line) {
+                let abs = off + rel;
+                if body_depths[abs] == 0 {
+                    fields.push((name, line_of(&f.code, open + 1 + abs)));
+                }
+            }
+            off += line.len() + 1;
+        }
+        // the fingerprint function: any fn with this name whose signature
+        // mentions the struct; bodies union across files
+        let mut fp_body = String::new();
+        let mut found_fn = false;
+        for g in src {
+            for (fnpos, fend) in kw_decl(&g.code, "fn", fname) {
+                let Some(orel) = g.code[fend..].find('{') else {
+                    continue;
+                };
+                let fopen = fend + orel;
+                if !g.code[fnpos..fopen].contains(sname) {
+                    continue;
+                }
+                found_fn = true;
+                fp_body.push_str(&g.code[fopen..match_brace(&g.code, fopen)]);
+                fp_body.push('\n');
+            }
+        }
+        if !found_fn {
+            out.push(Finding {
+                rule: "fp-complete",
+                path: f.path.clone(),
+                line: line_of(&f.code, spos),
+                col: 1,
+                message: format!(
+                    "no fingerprint function `{fname}(&{sname})` found \
+                     for struct {sname}"
+                ),
+            });
+            continue;
+        }
+        let code_lines: Vec<&str> = f.code.split('\n').collect();
+        for (field, fline) in fields {
+            let named = find_bounded(&fp_body, &field).iter().any(|&pos| {
+                let j = skip_ws_back(fp_body.as_bytes(), pos);
+                j > 0 && fp_body.as_bytes()[j - 1] == b'.'
+            });
+            if named {
+                continue;
+            }
+            let block = contiguous_comment_block(&f.comments, &code_lines, fline);
+            if block.iter().any(|t| t.contains("fp-exempt:")) {
+                continue;
+            }
+            out.push(Finding {
+                rule: "fp-complete",
+                path: f.path.clone(),
+                line: fline,
+                col: 1,
+                message: format!(
+                    "{sname}.{field} is not in {fname}() and carries no \
+                     `// fp-exempt: <why>` marker — a config knob that \
+                     changes results but not the journal key poisons resume"
+                ),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// suppressions
+
+/// Parse the ids and reason out of an allow-suppression comment:
+/// the `allow(<ids>) <reason>` tail after the lint marker.
+fn parse_allow(text: &str) -> Option<(Vec<String>, String)> {
+    let i = text.find("lint:")?;
+    let rest = text[i + "lint:".len()..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let ids: Vec<String> = rest[..close]
+        .split(',')
+        .map(|t| t.trim().to_string())
+        .filter(|t| !t.is_empty())
+        .collect();
+    Some((ids, rest[close + 1..].trim().to_string()))
+}
+
+/// `fp-exempt:` marker and its reason, if the comment carries one.
+fn parse_fp_exempt(text: &str) -> Option<String> {
+    let i = text.find("fp-exempt:")?;
+    Some(text[i + "fp-exempt:".len()..].trim().to_string())
+}
+
+/// Malformed suppression comments are findings themselves — a typo'd
+/// rule name or a missing reason must not silently disable a rule.
+pub fn rule_suppression_wellformed(f: &Prepared, out: &mut Vec<Finding>) {
+    let known = all_rules();
+    for (&ln, texts) in &f.comments {
+        for text in texts {
+            if let Some((ids, reason)) = parse_allow(text) {
+                let bad: Vec<&String> =
+                    ids.iter().filter(|t| !known.contains(&t.as_str())).collect();
+                if ids.is_empty() || !bad.is_empty() {
+                    out.push(Finding {
+                        rule: "suppression",
+                        path: f.path.clone(),
+                        line: ln,
+                        col: 1,
+                        message: format!("allow() names unknown rule(s) {bad:?}"),
+                    });
+                } else if reason.is_empty() {
+                    out.push(Finding {
+                        rule: "suppression",
+                        path: f.path.clone(),
+                        line: ln,
+                        col: 1,
+                        message: "suppression without a reason — write \
+                                  `// lint: allow(rule) <why>`"
+                            .to_string(),
+                    });
+                }
+            }
+            if parse_fp_exempt(text).map(|r| r.is_empty()).unwrap_or(false) {
+                out.push(Finding {
+                    rule: "suppression",
+                    path: f.path.clone(),
+                    line: ln,
+                    col: 1,
+                    message: "fp-exempt without a reason — write \
+                              `// fp-exempt: <why>`"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Rules suppressed for findings on `line`: allow() comments (with a
+/// reason) on the same line or the line directly above.
+pub fn allowed_rules_at(comments: &BTreeMap<usize, Vec<String>>, line: usize) -> BTreeSet<String> {
+    let mut rules = BTreeSet::new();
+    for ln in [line, line.saturating_sub(1)] {
+        for text in comments.get(&ln).map(Vec::as_slice).unwrap_or(&[]) {
+            if let Some((ids, reason)) = parse_allow(text) {
+                if !reason.is_empty() {
+                    rules.extend(ids);
+                }
+            }
+        }
+    }
+    rules
+}

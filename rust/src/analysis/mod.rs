@@ -1,0 +1,541 @@
+//! Static-analysis pass over the repo's own sources (DESIGN.md §9):
+//! `substrat lint` mechanizes the line-level compile review (module and
+//! use-path resolution, unused imports, macro imports, layout) and the
+//! determinism/fingerprint discipline the experiment journal depends on
+//! (clock reads only in util/timer.rs, no hash-order iteration where
+//! records are written, RNG streams derived only through util/rng.rs,
+//! and config-fingerprint completeness with `// fp-exempt: <why>`
+//! escapes).
+//!
+//! Layering: [`lexer`] classifies chars (code vs comment vs literal),
+//! [`items`] builds the crate model (use trees, module graph, item
+//! index), [`lints`] holds the rules, and this module is the driver —
+//! it prepares files, runs the rules, applies allow-comment
+//! suppressions (the lint marker followed by `allow(<rule>) <reason>`,
+//! see DESIGN.md §9), and renders findings as text or journal-style
+//! JSON lines (`util::json`).
+//!
+//! `tools/srclint.py` is a rule-for-rule Python mirror for containers
+//! without a Rust toolchain; the two are kept in sync by convention
+//! (same rule IDs, same suppression syntax) and by fixture tests on
+//! both sides. The pass runs on this repository itself in
+//! `rust/tests/lint_clean.rs` and in CI.
+
+pub mod items;
+pub mod lexer;
+pub mod lints;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use crate::analysis::items::{build_index, prepare, Prepared};
+use crate::util::json::{self, Json};
+
+/// Paths linted when `--paths` is not given (repo-relative).
+pub const DEFAULT_PATHS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// One diagnostic. `line`/`col` are 1-based; `col` is 1 except for the
+/// layout rules, which point at the offending column.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub col: usize,
+    pub message: String,
+}
+
+impl Finding {
+    /// `path:line:col: [rule] message` — the human-readable form.
+    pub fn text(&self) -> String {
+        format!(
+            "{}:{}:{}: [{}] {}",
+            self.path, self.line, self.col, self.rule, self.message
+        )
+    }
+
+    /// The `--json` form: one flat journal-style object per finding.
+    pub fn record(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("rec", Json::Str("finding".to_string())),
+            ("rule", Json::Str(self.rule.to_string())),
+            ("file", Json::Str(self.path.clone())),
+            ("line", Json::Num(self.line as f64)),
+            ("col", Json::Num(self.col as f64)),
+            ("message", Json::Str(self.message.clone())),
+        ]
+    }
+}
+
+/// The trailing `--json` summary record.
+pub fn summary_record(files: usize, findings: usize) -> Vec<(&'static str, Json)> {
+    vec![
+        ("rec", Json::Str("summary".to_string())),
+        ("files", Json::Num(files as f64)),
+        ("findings", Json::Num(findings as f64)),
+        ("clean", Json::Bool(findings == 0)),
+    ]
+}
+
+/// Schema check for parsed `--json` output lines, in the style of
+/// `experiments::bench::validate_record`: every finding must carry the
+/// full field set with sane types, and `rule` must be a known rule ID.
+pub fn validate_finding_record(rec: &[(String, Json)]) -> Result<(), String> {
+    let str_of = |k: &str| -> Result<&str, String> {
+        json::get(rec, k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("missing/mistyped string field {k:?}"))
+    };
+    let pos_int = |k: &str| -> Result<(), String> {
+        let v = json::get(rec, k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("missing/mistyped number field {k:?}"))?;
+        if v < 1.0 || v.fract() != 0.0 {
+            return Err(format!("field {k:?} must be a positive integer, got {v}"));
+        }
+        Ok(())
+    };
+    match str_of("rec")? {
+        "finding" => {
+            let rule = str_of("rule")?;
+            if !lints::all_rules().contains(&rule) {
+                return Err(format!("unknown rule id {rule:?}"));
+            }
+            if str_of("file")?.is_empty() {
+                return Err("empty file field".to_string());
+            }
+            pos_int("line")?;
+            pos_int("col")?;
+            if str_of("message")?.is_empty() {
+                return Err("empty message field".to_string());
+            }
+        }
+        "summary" => {
+            for k in ["files", "findings"] {
+                let v = json::get(rec, k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("missing/mistyped number field {k:?}"))?;
+                if v < 0.0 || v.fract() != 0.0 {
+                    return Err(format!("field {k:?} must be a count, got {v}"));
+                }
+            }
+            match json::get(rec, "clean") {
+                Some(Json::Bool(_)) => {}
+                _ => return Err("missing/mistyped bool field \"clean\"".to_string()),
+            }
+        }
+        other => return Err(format!("unknown record type {other:?}")),
+    }
+    Ok(())
+}
+
+/// Lint a set of in-memory sources. `files` are (repo-relative path,
+/// source text) pairs; returns suppressions-applied findings sorted by
+/// (path, line, col, rule). This is the engine both the CLI and the
+/// fixture tests drive.
+pub fn run_lint(files: &[(&str, &str)]) -> Vec<Finding> {
+    let mut sorted: Vec<(&str, &str)> = files.to_vec();
+    sorted.sort_by_key(|&(p, _)| p);
+    let prepared: Vec<Prepared> = sorted.iter().map(|&(p, s)| prepare(p, s)).collect();
+    let have: BTreeSet<String> = prepared.iter().map(|f| f.path.clone()).collect();
+    let index = build_index(&prepared);
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in &prepared {
+        lints::rule_mod_file(f, &have, &mut findings);
+        lints::rule_use_resolve(f, &index, &mut findings);
+        lints::rule_unused_import(f, &mut findings);
+        lints::rule_macro_import(f, &index, &mut findings);
+        lints::rule_line_cols(f, &mut findings);
+        if f.path.starts_with("rust/src/") {
+            lints::rule_timer(f, &mut findings);
+            lints::rule_rng(f, &mut findings);
+            lints::rule_iter_order(f, &mut findings);
+        }
+        lints::rule_suppression_wellformed(f, &mut findings);
+    }
+    let src: Vec<&Prepared> = prepared
+        .iter()
+        .filter(|f| f.path.starts_with("rust/src/"))
+        .collect();
+    lints::rule_fp_complete(&src, &mut findings);
+    let mut kept: Vec<Finding> = Vec::new();
+    for fi in findings {
+        if fi.rule != "suppression" {
+            let allowed = prepared
+                .iter()
+                .find(|p| p.path == fi.path)
+                .map(|p| lints::allowed_rules_at(&p.comments, fi.line))
+                .unwrap_or_default();
+            if allowed.contains(fi.rule) {
+                continue;
+            }
+        }
+        kept.push(fi);
+    }
+    kept.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.col, a.rule).cmp(&(b.path.as_str(), b.line, b.col, b.rule))
+    });
+    kept
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    let parts: Vec<String> = p
+        .strip_prefix(root)
+        .unwrap_or(p)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    parts.join("/")
+}
+
+fn walk_rs(root: &Path, dir: &Path, out: &mut Vec<(String, String)>) -> std::io::Result<()> {
+    let mut entries: Vec<std::fs::DirEntry> =
+        std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        if path.is_dir() {
+            if e.file_name().to_string_lossy() != "target" {
+                walk_rs(root, &path, out)?;
+            }
+        } else if e.file_name().to_string_lossy().ends_with(".rs") {
+            out.push((rel_path(root, &path), std::fs::read_to_string(&path)?));
+        }
+    }
+    Ok(())
+}
+
+/// Gather `.rs` sources under `root` for the given repo-relative paths
+/// (each may be a directory or a single file). `target/` is skipped;
+/// results are path-sorted and deduplicated.
+pub fn collect_files(root: &Path, paths: &[String]) -> std::io::Result<Vec<(String, String)>> {
+    let mut out: Vec<(String, String)> = Vec::new();
+    for p in paths {
+        let full = root.join(p);
+        if full.is_file() && p.ends_with(".rs") {
+            out.push((rel_path(root, &full), std::fs::read_to_string(&full)?));
+        } else if full.is_dir() {
+            walk_rs(root, &full, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out.dedup_by(|a, b| a.0 == b.0);
+    Ok(out)
+}
+
+/// Walk up from `start` to the directory containing `rust/src/lib.rs`.
+pub fn repo_root_from(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    loop {
+        if dir.join("rust").join("src").join("lib.rs").is_file() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Locate the repo root from the current working directory.
+pub fn find_repo_root() -> Option<PathBuf> {
+    repo_root_from(&std::env::current_dir().ok()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LIB: &str = "rust/src/lib.rs";
+
+    fn fired(files: &[(&str, &str)], rule: &str) -> bool {
+        run_lint(files).iter().any(|f| f.rule == rule)
+    }
+
+    fn assert_fired(name: &str, files: &[(&str, &str)], rule: &str, want: bool) {
+        let all = run_lint(files);
+        let got = all.iter().any(|f| f.rule == rule);
+        assert_eq!(
+            got,
+            want,
+            "{name}: rule {rule} {}: {:?}",
+            if want { "did not fire" } else { "fired" },
+            all.iter().map(Finding::text).collect::<Vec<_>>()
+        );
+    }
+
+    // -- compile-review tier ------------------------------------------
+
+    #[test]
+    fn mod_file_missing_and_present() {
+        assert_fired("missing", &[(LIB, "pub mod gone;\n")], "mod-file", true);
+        assert_fired(
+            "present",
+            &[(LIB, "pub mod here;\n"), ("rust/src/here.rs", "pub fn f() {}\n")],
+            "mod-file",
+            false,
+        );
+        assert_fired(
+            "mod.rs layout",
+            &[
+                (LIB, "pub mod util;\n"),
+                ("rust/src/util/mod.rs", "pub mod rng;\n"),
+                ("rust/src/util/rng.rs", "pub fn f() {}\n"),
+            ],
+            "mod-file",
+            false,
+        );
+    }
+
+    #[test]
+    fn use_resolve_accepts_real_rejects_fake() {
+        let good = [
+            (LIB, "pub mod a;\n"),
+            ("rust/src/a.rs", "pub fn real() {}\n"),
+            ("rust/src/main.rs", "use substrat::a::real;\nfn main() { real(); }\n"),
+        ];
+        assert_fired("resolves", &good, "use-resolve", false);
+        let bad = [
+            (LIB, "pub mod a;\n"),
+            ("rust/src/a.rs", "pub fn real() {}\n"),
+            ("rust/src/main.rs", "use substrat::a::fake;\nfn main() { fake(); }\n"),
+        ];
+        assert_fired("unresolved", &bad, "use-resolve", true);
+    }
+
+    #[test]
+    fn unused_import_fires_only_when_unreferenced() {
+        assert_fired(
+            "unused",
+            &[(LIB, "use std::fmt::Debug;\npub fn f() {}\n")],
+            "unused-import",
+            true,
+        );
+        assert_fired(
+            "used",
+            &[(LIB, "use std::fmt::Debug;\npub fn f(_x: &dyn Debug) {}\n")],
+            "unused-import",
+            false,
+        );
+    }
+
+    #[test]
+    fn macro_import_requires_a_use_or_qualification() {
+        let mac = "#[macro_export]\nmacro_rules! chk {\n    () => {};\n}\n";
+        let base = [(LIB, "pub mod m;\n"), ("rust/src/m.rs", mac)];
+        let mut no_import = base.to_vec();
+        no_import.push(("rust/src/u.rs", "pub fn f() { chk!(); }\n"));
+        assert_fired("no import", &no_import, "macro-import", true);
+        let mut imported = base.to_vec();
+        imported.push(("rust/src/u.rs", "use crate::chk;\npub fn f() { chk!(); }\n"));
+        assert_fired("imported", &imported, "macro-import", false);
+    }
+
+    #[test]
+    fn layout_rules_measure_raw_lines() {
+        let long = format!("// {}\n", "x".repeat(120));
+        assert_fired("long", &[(LIB, &long)], "line-length", true);
+        assert_fired("short", &[(LIB, "// ok\n")], "line-length", false);
+        assert_fired("trailing", &[(LIB, "pub fn f() {} \n")], "trailing-ws", true);
+        assert_fired("clean", &[(LIB, "pub fn f() {}\n")], "trailing-ws", false);
+    }
+
+    // -- discipline tier ----------------------------------------------
+
+    const CLOCK: &str = "use std::time::Instant;\npub fn f() { let _ = Instant::now(); }\n";
+
+    #[test]
+    fn timer_discipline_allows_only_timer_rs() {
+        assert_fired("in src", &[(LIB, CLOCK)], "timer-discipline", true);
+        assert_fired(
+            "in timer.rs",
+            &[
+                (LIB, "pub mod util;\n"),
+                ("rust/src/util/mod.rs", "pub mod timer;\n"),
+                ("rust/src/util/timer.rs", CLOCK),
+            ],
+            "timer-discipline",
+            false,
+        );
+        assert_fired(
+            "outside the library crate",
+            &[(LIB, "pub fn f() {}\n"), ("rust/tests/t.rs", CLOCK)],
+            "timer-discipline",
+            false,
+        );
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_exempt_from_discipline() {
+        let src = "#[cfg(test)]\nmod tests {\n    pub fn f() { let _ = \
+                   std::time::Instant::now(); }\n}\n";
+        assert_fired("cfg(test)", &[(LIB, src)], "timer-discipline", false);
+    }
+
+    #[test]
+    fn suppression_waives_a_finding_and_demands_a_reason() {
+        let suppressed = "pub fn f() {\n    // lint: allow(timer-discipline) \
+                          wall-clock banner, not a measurement\n    let _ = \
+                          std::time::Instant::now();\n}\n";
+        assert_fired("suppressed", &[(LIB, suppressed)], "timer-discipline", false);
+        assert_fired(
+            "reasonless",
+            &[(LIB, "// lint: allow(timer-discipline)\n")],
+            "suppression",
+            true,
+        );
+        assert_fired(
+            "unknown rule",
+            &[(LIB, "// lint: allow(no-such-rule) because\n")],
+            "suppression",
+            true,
+        );
+    }
+
+    #[test]
+    fn iter_order_fires_only_in_record_writing_files() {
+        let it = "use std::collections::HashMap;\n\
+                  pub fn w(m: &HashMap<String, u32>) -> Vec<String> {\n    \
+                  let _ = crate::util::json::obj_to_line(&[]);\n    \
+                  m.keys().cloned().collect()\n}\n";
+        assert_fired("iteration", &[(LIB, it)], "iter-order", true);
+        let lookup = it.replace("m.keys().cloned().collect()", "vec![m.len().to_string()]");
+        assert_fired("lookup only", &[(LIB, &lookup)], "iter-order", false);
+        let no_marker = it.replace("let _ = crate::util::json::obj_to_line(&[]);", "");
+        assert_fired("no record marker", &[(LIB, &no_marker)], "iter-order", false);
+    }
+
+    #[test]
+    fn iter_order_catches_for_loops_over_let_bindings() {
+        let src = "pub fn w() {\n    \
+                   let mut seen = std::collections::HashSet::new();\n    \
+                   seen.insert(1u32);\n    \
+                   let _ = crate::util::hash::fingerprint_bytes(b\"x\");\n    \
+                   for v in &seen {\n        let _ = v;\n    }\n}\n";
+        assert_fired("for-loop", &[(LIB, src)], "iter-order", true);
+    }
+
+    #[test]
+    fn rng_discipline_spots_the_golden_ratio_constant() {
+        let adhoc = "pub fn f() -> u64 { 0x9E37_79B9_7F4A_7C15 }\n";
+        assert_fired("adhoc", &[(LIB, adhoc)], "rng-discipline", true);
+        assert_fired(
+            "in rng.rs",
+            &[
+                (LIB, "pub mod util;\n"),
+                ("rust/src/util/mod.rs", "pub mod rng;\n"),
+                ("rust/src/util/rng.rs", adhoc),
+            ],
+            "rng-discipline",
+            false,
+        );
+        assert_fired("clean", &[(LIB, "pub fn f() {}\n")], "rng-discipline", false);
+    }
+
+    // the acceptance-criteria mutation: a field added to ExpConfig but
+    // not to the fingerprint function must be caught
+    const FP_OK: &str = "pub struct ExpConfig {\n    pub scale: f64,\n    \
+                         // fp-exempt: speed only, never changes results\n    \
+                         pub threads: usize,\n}\n\
+                         pub fn config_fingerprint(cfg: &ExpConfig) -> String {\n    \
+                         format!(\"{}\", cfg.scale)\n}\n";
+
+    #[test]
+    fn fp_complete_passes_exempt_fields_and_catches_mutations() {
+        assert_fired("complete", &[(LIB, FP_OK)], "fp-complete", false);
+        let mutated = FP_OK.replace(
+            "    pub scale: f64,\n",
+            "    pub scale: f64,\n    pub new_knob: bool,\n",
+        );
+        assert_fired("mutation caught", &[(LIB, &mutated)], "fp-complete", true);
+        let no_fn = "pub struct ExpConfig {\n    pub scale: f64,\n}\n";
+        assert_fired("missing fingerprint fn", &[(LIB, no_fn)], "fp-complete", true);
+    }
+
+    #[test]
+    fn fp_exempt_without_reason_is_a_suppression_finding() {
+        assert_fired(
+            "bare fp-exempt",
+            &[(LIB, "pub struct X {\n    // fp-exempt:\n    pub a: u32,\n}\n")],
+            "suppression",
+            true,
+        );
+    }
+
+    // -- driver behaviour ---------------------------------------------
+
+    #[test]
+    fn findings_are_sorted_and_stable() {
+        let src = "pub mod gone;\nuse std::fmt::Debug;  \n";
+        let out = run_lint(&[(LIB, src)]);
+        assert!(out.len() >= 3, "{out:?}");
+        let mut keys: Vec<(String, usize, usize, &str)> = out
+            .iter()
+            .map(|f| (f.path.clone(), f.line, f.col, f.rule))
+            .collect();
+        let sorted = keys.clone();
+        keys.sort();
+        assert_eq!(keys, sorted, "driver must emit sorted findings");
+    }
+
+    #[test]
+    fn clean_tree_has_no_findings() {
+        let files = [
+            (LIB, "pub mod a;\npub mod util;\n"),
+            ("rust/src/a.rs", "use crate::util::mix;\npub fn f() -> u64 { mix(1) }\n"),
+            ("rust/src/util/mod.rs", "pub mod x;\npub fn mix(v: u64) -> u64 { v }\n"),
+            ("rust/src/util/x.rs", "pub fn g() {}\n"),
+        ];
+        assert!(run_lint(&files).is_empty());
+        assert!(!fired(&files, "use-resolve"));
+    }
+
+    #[test]
+    fn json_records_roundtrip_and_validate() {
+        let out = run_lint(&[(LIB, "pub mod gone;\n")]);
+        assert_eq!(out.len(), 1);
+        let line = json::obj_to_line(&out[0].record());
+        let parsed = json::parse_line(&line).expect("record parses back");
+        validate_finding_record(&parsed).expect("finding record validates");
+        assert_eq!(json::get(&parsed, "rule").unwrap().as_str(), Some("mod-file"));
+        assert_eq!(json::get(&parsed, "line").unwrap().as_f64(), Some(1.0));
+
+        let summary = json::obj_to_line(&summary_record(3, 0));
+        let parsed = json::parse_line(&summary).expect("summary parses back");
+        validate_finding_record(&parsed).expect("summary validates");
+        assert_eq!(json::get(&parsed, "clean"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_records() {
+        let bad_rule = json::parse_line(
+            "{\"rec\":\"finding\",\"rule\":\"nope\",\"file\":\"f.rs\",\
+             \"line\":1,\"col\":1,\"message\":\"m\"}",
+        )
+        .unwrap();
+        assert!(validate_finding_record(&bad_rule).is_err());
+        let bad_line = json::parse_line(
+            "{\"rec\":\"finding\",\"rule\":\"mod-file\",\"file\":\"f.rs\",\
+             \"line\":0,\"col\":1,\"message\":\"m\"}",
+        )
+        .unwrap();
+        assert!(validate_finding_record(&bad_line).is_err());
+        let unknown = json::parse_line("{\"rec\":\"other\"}").unwrap();
+        assert!(validate_finding_record(&unknown).is_err());
+    }
+
+    #[test]
+    fn collect_files_skips_target_and_sorts() {
+        let root = std::env::temp_dir().join("substrat_lint_collect_test");
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join("rust/src/target")).unwrap();
+        std::fs::write(root.join("rust/src/lib.rs"), "pub fn f() {}\n").unwrap();
+        std::fs::write(root.join("rust/src/b.rs"), "pub fn b() {}\n").unwrap();
+        std::fs::write(root.join("rust/src/target/x.rs"), "ignored\n").unwrap();
+        std::fs::write(root.join("rust/src/notes.txt"), "not rust\n").unwrap();
+        let got = collect_files(&root, &["rust/src".to_string()]).unwrap();
+        let paths: Vec<&str> = got.iter().map(|(p, _)| p.as_str()).collect();
+        assert_eq!(paths, vec!["rust/src/b.rs", "rust/src/lib.rs"]);
+        assert_eq!(repo_root_from(&root.join("rust/src")), Some(root.clone()));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -361,8 +361,9 @@ impl EvalEngine {
 /// from a shared stream, so the cell's score does not depend on what was
 /// scored before it or on which thread runs it.
 fn fold_fit_rng(run_seed: u64, key: (u64, u64), fold: usize) -> Rng {
-    let fold_tag = (fold as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-    Rng::new(hash::mix64(run_seed ^ key.0 ^ key.1.rotate_left(31) ^ fold_tag))
+    // bit-identical to the pre-lint inline derivation — the formula
+    // moved into util::rng so stream construction has one definition
+    Rng::for_cell(run_seed, key, fold)
 }
 
 /// Mean stratified k-fold CV accuracy of a configuration under a fold

@@ -47,7 +47,7 @@ use crate::util::bench::{black_box, Bench, BenchResult};
 use crate::util::json::{self, Json};
 use crate::util::pool;
 use crate::util::rng::Rng;
-use crate::util::timer::{CpuTimer, Stopwatch};
+use crate::util::timer::{unix_time_s, CpuTimer, Stopwatch};
 
 /// Schema tag stamped into every header record. Versioning rule:
 /// *adding* a field is backward-compatible and keeps the tag (readers
@@ -218,13 +218,6 @@ fn num_field(k: &str, v: f64) -> (String, Json) {
 
 fn bool_field(k: &str, v: bool) -> (String, Json) {
     (k.to_string(), Json::Bool(v))
-}
-
-fn unix_time_s() -> f64 {
-    std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs_f64())
-        .unwrap_or(0.0)
 }
 
 fn hostname() -> String {

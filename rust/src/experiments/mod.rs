@@ -49,13 +49,20 @@ pub struct ExpConfig {
     pub min_rows: usize,
     /// row cap after scaling (bounds the single-core cost of D10)
     pub max_rows: usize,
+    // fp-exempt: a cell *coordinate*, not a computation knob — the rep
+    // index is part of each cell's own journal key (Cell::fingerprint)
     /// repetitions per cell (paper: 5)
     pub reps: usize,
     /// full-AutoML evaluation budget (each = one CV'd pipeline fit)
     pub full_evals: usize,
     /// fine-tune budget fraction (paper: "restricted, much shorter")
     pub ft_frac: f64,
+    // fp-exempt: cell coordinate — the searcher name is in each cell's
+    // journal key, so narrowing the sweep must not rotate shared cells
     pub searchers: Vec<SearcherKind>,
+    // fp-exempt: cell coordinate — the symbol plus its DataSource
+    // content fingerprint key each cell (DESIGN.md §5.3), so a sweep
+    // over fewer datasets still resumes the overlap
     /// dataset specs: Table-2 symbols (`D1`..`D10`) and/or CSV paths,
     /// resolved per cell by [`DataSource::parse`] (DESIGN.md §5.3)
     pub datasets: Vec<String>,
@@ -66,7 +73,10 @@ pub struct ExpConfig {
     /// CSV sources only: force the header decision (`None` = the
     /// [`crate::data::csv::detect_header`] heuristic)
     pub csv_header: Option<bool>,
+    // fp-exempt: where results land, never what they contain
     pub out_dir: PathBuf,
+    // fp-exempt: pure speed — records must survive a re-run on
+    // different hardware (Wall results are thread-invariant by test)
     /// total hardware thread budget for the sweep; the runner splits it
     /// into outer cell workers × inner engine threads (never threads²)
     pub threads: usize,
@@ -83,6 +93,7 @@ pub struct ExpConfig {
     /// how cell times are measured (DESIGN.md §5.2); only `Wall` may
     /// report paper Time-Reduction
     pub timing: TimingMode,
+    // fp-exempt: toggles persistence of results, not their values
     /// append finished cells to `<out_dir>/cells.jsonl` and skip
     /// already-journaled cells on re-run
     pub journal: bool,

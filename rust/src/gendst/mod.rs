@@ -37,13 +37,13 @@ pub mod fitness;
 pub mod ops;
 
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
 
 use crate::data::{CodeMatrix, Frame};
 use crate::measures::DatasetMeasure;
+use crate::util::hash;
 use crate::util::pool;
 use crate::util::rng::Rng;
-use crate::util::timer::Stopwatch;
+use crate::util::timer::{Deadline, Stopwatch};
 
 use fitness::{FitnessBackend, FitnessEval};
 
@@ -136,6 +136,9 @@ pub struct GenDstConfig {
     pub convergence_patience: usize,
     /// fitness engine (default: the incremental + parallel native engine)
     pub backend: FitnessBackend,
+    // fp-exempt: pure speed — thread count never changes results
+    // (property-tested bit-identical across budgets), and fingerprinted
+    // records must survive a re-run on different hardware
     /// worker threads for the whole engine: 0 = auto. With one island
     /// this is the fitness-fill width exactly as before; with several,
     /// the allowance splits into concurrent islands × fill workers
@@ -176,6 +179,41 @@ impl Default for GenDstConfig {
             seed: 0,
         }
     }
+}
+
+/// 128-bit fingerprint of every `GenDstConfig` knob that changes what
+/// the search *computes* (tag `gendst-v1`). `threads` is deliberately
+/// excluded — it is pure speed, property-tested bit-identical across
+/// budgets. The `fp-complete` lint (DESIGN.md §9) checks that every
+/// field of the struct either appears below or carries an
+/// `// fp-exempt: <why>` marker, so a knob added without a fingerprint
+/// decision fails CI instead of silently poisoning future journal
+/// reuse (the exact `exp-v2` bug class from the island PR). Nothing
+/// keys journals on this yet; the SubStrat-as-a-service store
+/// (ROADMAP item 2) will use it for cross-job cell reuse.
+pub fn config_fingerprint(cfg: &GenDstConfig) -> String {
+    let stop = match cfg.stop {
+        StopRule::Generations => "gen".to_string(),
+        StopRule::TimeBudget { seconds } => format!("time{seconds}"),
+    };
+    let canon = format!(
+        "gendst-v1|gen{}|pop{}|mut{}|roy{}|prc{}|eps{}|pat{}|bk{:?}|isl{}|mint{}|mk{}|stop{}|\
+         seed{}",
+        cfg.generations,
+        cfg.population,
+        cfg.mutation_prob,
+        cfg.royalty_frac,
+        cfg.p_rc,
+        cfg.convergence_eps,
+        cfg.convergence_patience,
+        cfg.backend,
+        cfg.islands,
+        cfg.migration_interval,
+        cfg.migration_k,
+        stop,
+        cfg.seed,
+    );
+    hash::hex128(hash::fingerprint_bytes(canon.as_bytes()))
 }
 
 /// Result of a Gen-DST run.
@@ -296,7 +334,7 @@ fn run_island_epoch(
     target: u32,
     cfg: &GenDstConfig,
     gens: usize,
-    deadline: Option<Instant>,
+    deadline: Option<Deadline>,
 ) {
     for _ in 0..gens {
         if isl.converged {
@@ -311,7 +349,7 @@ fn run_island_epoch(
         // per-generation throughput sample to extrapolate from
         if isl.generations_run > 0 {
             if let Some(d) = deadline {
-                if Instant::now() >= d {
+                if d.expired() {
                     return;
                 }
             }
@@ -441,7 +479,7 @@ pub fn gen_dst(
     let deadline = match cfg.stop {
         StopRule::Generations => None,
         StopRule::TimeBudget { seconds } => {
-            Some(Instant::now() + Duration::from_secs_f64(seconds.max(0.0)))
+            Some(Deadline::after_s(seconds))
         }
     };
 
@@ -511,7 +549,7 @@ pub fn gen_dst(
         if all_stopped {
             break;
         }
-        if deadline.is_some_and(|d| Instant::now() >= d) {
+        if deadline.is_some_and(|d| d.expired()) {
             timed_out = true; // anytime: return the best found so far
             break;
         }
@@ -566,6 +604,36 @@ mod tests {
         let f = registry::load("D2", 0.05, 11); // 765 x 5
         let codes = CodeMatrix::from_frame(&f);
         (f, codes)
+    }
+
+    #[test]
+    fn config_fingerprint_tracks_results_knobs_not_threads() {
+        let base = GenDstConfig::default();
+        let fp = config_fingerprint(&base);
+        assert_eq!(fp, config_fingerprint(&base), "not deterministic");
+        // speed-only knob: same key on any hardware
+        let threaded = GenDstConfig {
+            threads: 8,
+            ..base.clone()
+        };
+        assert_eq!(fp, config_fingerprint(&threaded));
+        // every results-changing knob must rotate the key
+        for (name, cfg) in [
+            ("generations", GenDstConfig { generations: 31, ..base.clone() }),
+            ("population", GenDstConfig { population: 101, ..base.clone() }),
+            ("mutation_prob", GenDstConfig { mutation_prob: 0.5, ..base.clone() }),
+            ("islands", GenDstConfig { islands: 4, ..base.clone() }),
+            ("seed", GenDstConfig { seed: 1, ..base.clone() }),
+            (
+                "stop",
+                GenDstConfig {
+                    stop: StopRule::TimeBudget { seconds: 1.0 },
+                    ..base.clone()
+                },
+            ),
+        ] {
+            assert_ne!(fp, config_fingerprint(&cfg), "{name} not keyed");
+        }
     }
 
     /// The pre-island single-population loop, kept verbatim as the

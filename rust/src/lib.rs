@@ -15,6 +15,7 @@
 //!   kernel, AOT-lowered to `artifacts/*.hlo.txt` and executed here via
 //!   PJRT (`runtime`).
 
+pub mod analysis;
 pub mod automl;
 pub mod baselines;
 pub mod data;

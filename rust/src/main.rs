@@ -8,6 +8,14 @@
 //!   run      --dataset D1 --strategy gendst [...]   one SubStrat flow
 //!   exp      table4|fig2|fig3|fig4|fig5|all [...]   reproduce paper artifacts
 //!   bench    [all|cells|micro|<suite>,...] [...]    benchmark trajectory
+//!   lint     [--paths a,b] [--json]   static analysis over the repo sources
+//!
+//! Lint (DESIGN.md §9): runs the srclint pass (compile-review rules +
+//! determinism/fingerprint discipline) over rust/src, rust/tests,
+//! rust/benches and examples, from any cwd inside the repo. `--json`
+//! emits one journal-style record per finding plus a summary line;
+//! exit code is 1 when findings remain, 2 when the repo root cannot be
+//! found. `tools/srclint.py` is the toolchain-free mirror.
 //!
 //! Common flags: --scale 0.05 --reps 3 --evals 16 --searchers smbo,gp
 //!               --datasets D1,D2 --out results --threads N --seed S
@@ -48,6 +56,7 @@
 
 use std::path::PathBuf;
 
+use substrat::analysis;
 use substrat::automl::{run_automl, AutoMlConfig, SearcherKind};
 use substrat::baselines;
 use substrat::data::infer::{parse_header_flag, CsvOptions};
@@ -60,6 +69,7 @@ use substrat::measures::{self, entropy::EntropyMeasure};
 use substrat::runtime::{self, entropy_exec::EntropyExec};
 use substrat::substrat::{run_substrat, SubStratConfig};
 use substrat::util::cli::Args;
+use substrat::util::json::{obj_to_line, parse_line};
 use substrat::util::rng::Rng;
 
 /// Resolve the `exp`-family flags over an arbitrary baseline — `exp`
@@ -389,6 +399,51 @@ fn cmd_bench(args: &Args) {
     );
 }
 
+fn cmd_lint(args: &Args) {
+    let root = match analysis::find_repo_root() {
+        Some(r) => r,
+        None => {
+            eprintln!("lint: no rust/src/lib.rs above the cwd — run from inside the repo");
+            std::process::exit(2);
+        }
+    };
+    let paths = args.list_opt("paths").unwrap_or_else(|| {
+        analysis::DEFAULT_PATHS.iter().map(|s| s.to_string()).collect()
+    });
+    let files = analysis::collect_files(&root, &paths)
+        .unwrap_or_else(|e| panic!("lint: reading sources under {}: {e}", root.display()));
+    let refs: Vec<(&str, &str)> = files
+        .iter()
+        .map(|(p, s)| (p.as_str(), s.as_str()))
+        .collect();
+    let findings = analysis::run_lint(&refs);
+    if args.flag("json") {
+        for f in &findings {
+            let line = obj_to_line(&f.record());
+            // journal discipline: every emitted record must parse back
+            // and pass the schema check (DESIGN.md §5.2 convention)
+            let parsed = parse_line(&line).expect("finding record round-trips");
+            analysis::validate_finding_record(&parsed)
+                .unwrap_or_else(|e| panic!("internal: bad finding record: {e}"));
+            println!("{line}");
+        }
+        let summary = analysis::summary_record(files.len(), findings.len());
+        println!("{}", obj_to_line(&summary));
+    } else {
+        for f in &findings {
+            println!("{}", f.text());
+        }
+        println!(
+            "substrat lint: {} file(s), {} finding(s)",
+            files.len(),
+            findings.len()
+        );
+    }
+    if !findings.is_empty() {
+        std::process::exit(1);
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     match args.subcommand() {
@@ -399,9 +454,10 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("exp") => cmd_exp(&args),
         Some("bench") => cmd_bench(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             eprintln!(
-                "usage: substrat <datasets|check|gendst|automl|run|exp|bench> [flags]\n\
+                "usage: substrat <datasets|check|gendst|automl|run|exp|bench|lint> [flags]\n\
                  see rust/src/main.rs header for flags"
             );
             std::process::exit(2);

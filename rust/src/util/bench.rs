@@ -3,9 +3,10 @@
 //! binary that drives this: auto-calibrated iteration counts, warmup,
 //! mean ± std per iteration, and a markdown/CSV report.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::util::stats;
+use crate::util::timer::Stopwatch;
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -89,7 +90,7 @@ impl Bench {
         f: &mut dyn FnMut(),
     ) -> &BenchResult {
         // calibrate: run once, estimate, pick iters per sample
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         f();
         let once = t0.elapsed().max(Duration::from_nanos(20));
         let per_sample = self.target / self.samples as u32;
@@ -104,7 +105,7 @@ impl Bench {
 
         let mut sample_ns: Vec<f64> = Vec::with_capacity(self.samples);
         for _ in 0..self.samples {
-            let t = Instant::now();
+            let t = Stopwatch::start();
             for _ in 0..iters {
                 f();
             }

@@ -89,12 +89,18 @@ impl Args {
         }
     }
 
+    /// Comma-separated list option, `None` when the flag is absent —
+    /// for callers whose default is computed, not a literal list.
+    pub fn list_opt(&self, name: &str) -> Option<Vec<String>> {
+        self.options
+            .get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
-        match self.options.get(name) {
-            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
-            None => default.iter().map(|s| s.to_string()).collect(),
-        }
+        self.list_opt(name)
+            .unwrap_or_else(|| default.iter().map(|s| s.to_string()).collect())
     }
 }
 
@@ -142,6 +148,10 @@ mod tests {
         let a = parse("exp --datasets D1,D2,D3");
         assert_eq!(a.list_or("datasets", &[]), vec!["D1", "D2", "D3"]);
         assert_eq!(a.list_or("missing", &["all"]), vec!["all"]);
+        assert_eq!(a.list_opt("datasets"), Some(vec![
+            "D1".to_string(), "D2".to_string(), "D3".to_string()
+        ]));
+        assert_eq!(a.list_opt("missing"), None);
     }
 
     #[test]

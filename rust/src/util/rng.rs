@@ -40,6 +40,21 @@ impl Rng {
         Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
     }
 
+    /// Independent stream for one (run seed, 128-bit key, index) cell —
+    /// the AutoML engine's per-(configuration, fold) fit RNGs and any
+    /// future keyed substream. Unlike [`Rng::fork`] this never advances
+    /// a shared generator, so a cell's stream does not depend on what
+    /// was sampled before it or on which thread runs it. Centralized
+    /// here (with the golden-ratio index spacing) so stream derivation
+    /// has one definition — the `rng-discipline` lint (DESIGN.md §9)
+    /// flags ad-hoc constructions elsewhere.
+    pub fn for_cell(seed: u64, key: (u64, u64), index: usize) -> Rng {
+        let tag = (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::new(crate::util::hash::mix64(
+            seed ^ key.0 ^ key.1.rotate_left(31) ^ tag,
+        ))
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

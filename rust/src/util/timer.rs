@@ -34,6 +34,43 @@ impl Default for Stopwatch {
     }
 }
 
+/// A wall-clock deadline for anytime stop rules ([`StopRule::TimeBudget`]
+/// in `gendst`). Exists so engines never read `Instant::now` themselves:
+/// the timed-window discipline (DESIGN.md §5.2, enforced by the
+/// `timer-discipline` lint, §9) keeps every raw clock read in this
+/// module, where review can audit what is and is not inside a window.
+///
+/// [`StopRule::TimeBudget`]: crate::gendst::StopRule::TimeBudget
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `seconds` of wall clock from now (clamped at ≥ 0).
+    pub fn after_s(seconds: f64) -> Deadline {
+        Deadline {
+            at: Instant::now() + Duration::from_secs_f64(seconds.max(0.0)),
+        }
+    }
+
+    /// True once the wall clock has reached the deadline.
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+}
+
+/// Seconds since the Unix epoch — metadata timestamps (bench record
+/// headers), never a measurement. 0.0 if the system clock predates the
+/// epoch. Lives here under the same single-module clock discipline as
+/// the stopwatches.
+pub fn unix_time_s() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
 /// CPU time the calling thread has consumed so far, if the platform can
 /// report it. Linux: `/proc/thread-self/schedstat` (nanosecond on-CPU
 /// counter), falling back to `utime + stime` from
@@ -261,6 +298,23 @@ mod tests {
         assert_eq!(s.max_time, Some(Duration::from_millis(2500)));
         let tiny = Budget::evals(2).scaled(0.1);
         assert_eq!(tiny.max_evals, Some(1), "never scales to zero");
+    }
+
+    #[test]
+    fn deadline_expires_only_after_its_window() {
+        let d = Deadline::after_s(0.02);
+        assert!(!d.expired());
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(d.expired());
+        // negative budgets clamp to "already expired"
+        assert!(Deadline::after_s(-5.0).expired());
+    }
+
+    #[test]
+    fn unix_time_is_positive_and_monotone_enough() {
+        let a = unix_time_s();
+        assert!(a > 1.5e9, "system clock reports {a}"); // after 2017
+        assert!(unix_time_s() >= a);
     }
 
     #[test]

@@ -1,0 +1,38 @@
+//! The srclint pass (DESIGN.md §9) must be clean on this repository
+//! itself: the linted tree includes the linter's own sources, so this
+//! test is both the merge gate ("no findings at HEAD") and a live check
+//! that the rules do not false-positive on real code.
+
+use substrat::analysis::{collect_files, repo_root_from, run_lint, Finding, DEFAULT_PATHS};
+
+#[test]
+fn repo_sources_lint_clean() {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = repo_root_from(manifest).expect("repo root above CARGO_MANIFEST_DIR");
+    let paths: Vec<String> = DEFAULT_PATHS.iter().map(|s| s.to_string()).collect();
+    let files = collect_files(&root, &paths).expect("collect repo sources");
+    assert!(
+        files.len() > 20,
+        "expected a real tree, collected only {} file(s)",
+        files.len()
+    );
+    assert!(
+        files.iter().any(|(p, _)| p == "rust/src/analysis/mod.rs"),
+        "the linter must lint itself"
+    );
+    let refs: Vec<(&str, &str)> = files
+        .iter()
+        .map(|(p, s)| (p.as_str(), s.as_str()))
+        .collect();
+    let findings = run_lint(&refs);
+    assert!(
+        findings.is_empty(),
+        "lint must be clean at HEAD; got {} finding(s):\n{}",
+        findings.len(),
+        findings
+            .iter()
+            .map(Finding::text)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

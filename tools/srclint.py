@@ -1,0 +1,897 @@
+#!/usr/bin/env python3
+"""srclint — zero-dependency mirror of `substrat lint` (rust/src/analysis/).
+
+Purpose (DESIGN.md §9): builder containers do not always have a Rust
+toolchain, but they always have python3. This script re-implements the
+static-analysis pass rule-for-rule so the line-level compile review and
+the determinism/fingerprint discipline can be audited mechanically even
+when `cargo run -- lint` cannot be built. Rule IDs, suppression syntax
+(`// lint: allow(<rule>) <reason>`) and the `// fp-exempt: <why>`
+convention are IDENTICAL to the Rust pass — when editing a rule here,
+edit `rust/src/analysis/lints.rs` in the same commit, and vice versa.
+
+Usage:
+    python3 tools/srclint.py [--paths a,b] [--json] [--self-test]
+
+Exit status: 0 = clean, 1 = findings, 2 = usage/self-test failure.
+"""
+
+import json
+import os
+import re
+import sys
+
+MAX_COLS = 100
+
+# The rule catalogue (DESIGN.md §9). Two tiers: the compile-review tier
+# runs on every Rust file in the tree; the discipline tier runs on the
+# library crate (rust/src) only, outside #[cfg(test)] blocks.
+COMPILE_RULES = [
+    "mod-file",        # every `mod x;` resolves to a file
+    "use-resolve",     # every crate-rooted use path resolves to an item
+    "unused-import",   # imported binding never referenced in the file
+    "macro-import",    # #[macro_export] macro invoked without an import
+    "line-length",     # raw line longer than MAX_COLS chars
+    "trailing-ws",     # trailing whitespace (incl. stray \r)
+]
+DISCIPLINE_RULES = [
+    "timer-discipline",  # raw clock reads outside util/timer.rs
+    "iter-order",        # HashMap/HashSet iteration in record-writing files
+    "rng-discipline",    # ad-hoc RNG construction outside util/rng.rs
+    "fp-complete",       # config fields missing from the fingerprint fn
+]
+META_RULES = ["suppression"]  # malformed allow/fp-exempt comments
+ALL_RULES = COMPILE_RULES + DISCIPLINE_RULES + META_RULES
+
+# struct -> fingerprint function that must name every non-exempt field
+FP_PAIRS = [("ExpConfig", "config_fingerprint"),
+            ("GenDstConfig", "config_fingerprint")]
+
+TIMER_ALLOWED = ("rust/src/util/timer.rs",)
+RNG_ALLOWED = ("rust/src/util/rng.rs", "rust/src/util/hash.rs")
+
+CLOCK_TOKENS = re.compile(r"\b(?:Instant::now|SystemTime|UNIX_EPOCH)\b")
+RNG_TOKENS = re.compile(r"\b(?:RandomState|DefaultHasher|thread_rng|from_entropy)\b")
+# splitmix64's golden-ratio increment: its appearance outside util/rng.rs
+# and util/hash.rs means someone is hand-rolling a generator/mixer
+RNG_CONST = 0x9E3779B97F4A7C15
+HEX_LIT = re.compile(r"0x[0-9A-Fa-f_]+")
+RECORD_MARKERS = re.compile(r"\b(?:obj_to_line|Fingerprinter|fingerprint_bytes)\b")
+ITER_METHODS = ("iter|iter_mut|keys|values|values_mut|drain|"
+                "into_iter|into_keys|into_values")
+
+ALLOW_RE = re.compile(r"lint:\s*allow\(([^)]*)\)\s*(.*)")
+FP_EXEMPT_RE = re.compile(r"fp-exempt:\s*(.*)")
+
+
+class Finding:
+    def __init__(self, rule, path, line, col, message):
+        self.rule, self.path, self.line, self.col = rule, path, line, col
+        self.message = message
+
+    def key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+    def text(self):
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def record(self):
+        return {"rec": "finding", "rule": self.rule, "file": self.path,
+                "line": self.line, "col": self.col, "message": self.message}
+
+
+# --------------------------------------------------------------------------
+# Lexer: blank out comments, string/char literals (raw strings, byte
+# strings, nested block comments) so every later rule runs on code-only
+# text with line structure preserved. Mirrors rust/src/analysis/lexer.rs.
+
+def strip_source(src):
+    """Return (code, comments): `code` is `src` with comment and literal
+    bodies replaced by spaces (newlines kept), `comments` maps 1-based
+    line -> list of comment texts on that line."""
+    n = len(src)
+    out = []
+    comments = {}
+    line = 1
+    i = 0
+    prev_ident = False  # previous emitted code char was an identifier char
+
+    def blank(ch):
+        return ch if ch == "\n" else " "
+
+    def note_comment(start_line, text):
+        for k, part in enumerate(text.split("\n")):
+            comments.setdefault(start_line + k, []).append(part)
+
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            j = src.find("\n", i)
+            j = n if j == -1 else j
+            note_comment(line, src[i:j])
+            out.append(" " * (j - i))
+            i = j
+            prev_ident = False
+            continue
+        if c == "/" and nxt == "*":
+            depth, j, start_line = 1, i + 2, line
+            while j < n and depth > 0:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            note_comment(start_line, src[i:j])
+            for ch in src[i:j]:
+                out.append(blank(ch))
+                if ch == "\n":
+                    line += 1
+            i = j
+            prev_ident = False
+            continue
+        # raw / byte string prefixes: only when not continuing an identifier
+        if not prev_ident and c in "rb":
+            m = re.match(r'(?:r|br|b)(#*)"', src[i:])
+            if m and (c != "b" or src[i:i + 2] in ('b"', "br") or m.group(0).startswith('b"')):
+                hashes = m.group(1)
+                is_raw = src[i] == "r" or src[i:i + 2] == "br"
+                j = i + m.end()
+                if is_raw:
+                    close = '"' + hashes
+                    k = src.find(close, j)
+                    k = n if k == -1 else k + len(close)
+                else:  # b"..." — escapes apply
+                    k = j
+                    while k < n:
+                        if src[k] == "\\":
+                            k += 2
+                        elif src[k] == '"':
+                            k += 1
+                            break
+                        else:
+                            k += 1
+                for ch in src[i:k]:
+                    out.append(blank(ch))
+                    if ch == "\n":
+                        line += 1
+                i = k
+                prev_ident = False
+                continue
+            if c == "b" and nxt == "'":
+                i += 1  # blank the prefix with the char literal below
+                out.append(" ")
+                c, nxt = src[i], (src[i + 1] if i + 1 < n else "")
+        if c == '"':
+            j = i + 1
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                elif src[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            for ch in src[i:j]:
+                out.append(blank(ch))
+                if ch == "\n":
+                    line += 1
+            i = j
+            prev_ident = False
+            continue
+        if c == "'":
+            # char literal vs lifetime: 'x' / '\..' are literals; 'ident
+            # (no closing quote right after one char) is a lifetime
+            third = src[i + 2] if i + 2 < n else ""
+            if nxt == "\\":
+                j = i + 2
+                if j < n:
+                    j += 1  # the escaped char
+                while j < n and src[j] != "'":
+                    j += 1
+                j = min(j + 1, n)
+                out.append(" " * (j - i))
+                i = j
+                prev_ident = False
+                continue
+            if nxt != "" and third == "'":
+                out.append("   ")
+                i += 3
+                prev_ident = False
+                continue
+            # lifetime: keep as code
+            out.append(c)
+            i += 1
+            prev_ident = False
+            continue
+        out.append(c)
+        if c == "\n":
+            line += 1
+        prev_ident = c.isalnum() or c == "_"
+        i += 1
+    return "".join(out), comments
+
+
+def brace_depths(code):
+    """Depth (count of unclosed `{`) before each char of code-only text."""
+    depths = []
+    d = 0
+    for c in code:
+        depths.append(d)
+        if c == "{":
+            d += 1
+        elif c == "}":
+            d = max(0, d - 1)
+    return depths
+
+
+def match_brace(code, open_idx):
+    """Index one past the `}` matching the `{` at open_idx (or len)."""
+    d = 0
+    for j in range(open_idx, len(code)):
+        if code[j] == "{":
+            d += 1
+        elif code[j] == "}":
+            d -= 1
+            if d == 0:
+                return j + 1
+    return len(code)
+
+
+def line_of(code, idx):
+    return code.count("\n", 0, idx) + 1
+
+
+def cfg_test_lines(code):
+    """Set of 1-based line numbers inside #[cfg(test)] mod blocks."""
+    lines = set()
+    for m in re.finditer(r"#\[cfg\((?:all\()?test\b[^\]]*\]", code):
+        j = m.end()
+        # skip whitespace + further attributes to the item
+        while True:
+            while j < len(code) and code[j].isspace():
+                j += 1
+            if code.startswith("#[", j):
+                j = code.find("]", j) + 1
+                if j == 0:
+                    return lines
+            else:
+                break
+        open_idx = code.find("{", j)
+        semi = code.find(";", j)
+        if open_idx == -1 or (semi != -1 and semi < open_idx):
+            continue  # `#[cfg(test)] mod x;` — a file, not a block
+        end = match_brace(code, open_idx)
+        lines.update(range(line_of(code, m.start()), line_of(code, end - 1) + 1))
+    return lines
+
+
+# --------------------------------------------------------------------------
+# Use-declaration parsing (shared by use-resolve / unused-import /
+# macro-import). A use tree like `a::{b, c as d, e::*}` expands to leaves
+# [(path, alias)] with alias None unless `as` renamed it; `*` leaves have
+# last segment "*".
+
+def split_top(s):
+    parts, d, cur = [], 0, []
+    for c in s:
+        if c == "{":
+            d += 1
+        elif c == "}":
+            d -= 1
+        if c == "," and d == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(c)
+    if "".join(cur).strip():
+        parts.append("".join(cur))
+    return parts
+
+
+def parse_use_tree(s, prefix):
+    s = s.strip()
+    if not s:
+        return []
+    if s.endswith("}"):
+        idx = s.find("{")
+        head = s[:idx].strip()
+        segs = list(prefix)
+        if head:
+            head = head[:-2] if head.endswith("::") else head
+            segs += [p for p in head.split("::") if p]
+        leaves = []
+        for part in split_top(s[idx + 1:-1]):
+            leaves += parse_use_tree(part, segs)
+        return leaves
+    if " as " in s:
+        path, alias = s.rsplit(" as ", 1)
+        return [(list(prefix) + path.strip().split("::"), alias.strip())]
+    return [(list(prefix) + s.split("::"), None)]
+
+
+class UseDecl:
+    def __init__(self, leaves, line, span, is_pub):
+        self.leaves, self.line, self.span, self.is_pub = leaves, line, span, is_pub
+
+
+def parse_uses(code, depths):
+    uses = []
+    for m in re.finditer(r"\b(pub(?:\([^)]*\))?\s+)?use\s", code):
+        end = code.find(";", m.end())
+        if end == -1:
+            continue
+        text = re.sub(r"\s+", " ", code[m.end():end]).strip()
+        text = re.sub(r"\s*::\s*", "::", text)
+        text = re.sub(r"\s*([{},])\s*", r"\1", text)
+        # restore the one space that matters for ` as ` parsing
+        leaves = parse_use_tree(text, [])
+        uses.append(UseDecl(leaves, line_of(code, m.start()),
+                            (m.start(), end + 1), m.group(1) is not None))
+    return uses
+
+
+# --------------------------------------------------------------------------
+# Crate index: module tree + per-module item names from rust/src files.
+
+class Module:
+    def __init__(self):
+        self.items = set()
+        self.children = set()
+        self.glob_reexport = False
+
+
+def module_path_of(path):
+    """rust/src/a/b.rs -> ("a","b"); mod.rs/lib.rs collapse. None if the
+    file is not part of the library crate (main.rs, tests, benches...)."""
+    if not path.startswith("rust/src/") or path == "rust/src/main.rs":
+        return None
+    rel = path[len("rust/src/"):]
+    if rel == "lib.rs":
+        return ()
+    parts = rel[:-3].split("/")  # strip .rs
+    if parts[-1] == "mod":
+        parts = parts[:-1]
+    return tuple(parts)
+
+
+ITEM_RE = re.compile(
+    r"\b(?:fn|struct|enum|trait|union|type|const|static|mod)\s+([A-Za-z_]\w*)")
+MACRO_RE = re.compile(r"\bmacro_rules!\s*([A-Za-z_]\w*)")
+
+
+def build_index(files):
+    """files: {path: (code, depths)} -> (modules, macros).
+    modules: {module_path_tuple: Module}; macros: {name: defining_path}."""
+    modules = {(): Module()}
+    macros = {}
+    for path in sorted(files):
+        mp = module_path_of(path)
+        if mp is None:
+            continue
+        modules.setdefault(mp, Module())
+        for k in range(1, len(mp) + 1):
+            modules.setdefault(mp[:k], Module())
+            modules[mp[:k - 1]].children.add(mp[k - 1])
+    for path in sorted(files):
+        mp = module_path_of(path)
+        if mp is None:
+            continue
+        code, depths = files[path]
+        mod = modules[mp]
+        for m in ITEM_RE.finditer(code):
+            if depths[m.start()] == 0:
+                mod.items.add(m.group(1))
+        for m in MACRO_RE.finditer(code):
+            if depths[m.start()] == 0:
+                name = m.group(1)
+                mod.items.add(name)
+                head = code[max(0, m.start() - 200):m.start()]
+                if "#[macro_export]" in head:
+                    macros[name] = path
+                    # exported macros live at the crate root path-wise
+                    modules[()].items.add(name)
+        for u in parse_uses(code, depths):
+            if not u.is_pub or depths[u.span[0]] != 0:
+                continue
+            for segs, alias in u.leaves:
+                if segs[-1] == "*":
+                    mod.glob_reexport = True
+                elif alias and alias != "_":
+                    mod.items.add(alias)
+                elif segs[-1] == "self" and len(segs) >= 2:
+                    mod.items.add(segs[-2])
+                else:
+                    mod.items.add(segs[-1])
+    return modules, macros
+
+
+def resolve_path(segs, modules, own_path):
+    """True iff a crate-rooted use path resolves. Permissive on anything
+    we cannot index (std, external crates, enum-variant paths)."""
+    root = segs[0]
+    if root in ("crate", "substrat"):
+        rel, base = segs[1:], ()
+    elif root == "self" and own_path is not None:
+        rel, base = segs[1:], own_path
+    elif root == "super" and own_path is not None:
+        base = own_path
+        rel = list(segs)
+        while rel and rel[0] == "super":
+            if not base:
+                return False
+            base, rel = base[:-1], rel[1:]
+    elif own_path is not None and modules.get(own_path) \
+            and root in modules[own_path].children:
+        rel, base = segs, own_path  # 2018 uniform path: child module root
+    else:
+        return True  # std/core/alloc/external — out of scope
+    cur = base
+    for k, seg in enumerate(rel):
+        last = k == len(rel) - 1
+        mod = modules.get(cur)
+        if mod is None:
+            return True  # walked into an unindexed space — permissive
+        if seg == "*" and last:
+            return True
+        if seg == "self" and last:
+            return True
+        if cur + (seg,) in modules:
+            cur = cur + (seg,)
+            continue
+        if seg in mod.items or mod.glob_reexport:
+            return True  # an item (or hidden behind a glob re-export);
+            # deeper segments (enum variants, assoc items) are unindexable
+        return False
+    return True
+
+
+# --------------------------------------------------------------------------
+# Rules.
+
+def find_file(files, candidates):
+    return any(c in files for c in candidates)
+
+
+def rule_mod_file(path, code, depths, comments, files, out):
+    for m in re.finditer(r"\b(?:pub(?:\([^)]*\))?\s+)?mod\s+([A-Za-z_]\w*)\s*;",
+                         code):
+        if depths[m.start()] != 0:
+            continue
+        head = code[max(0, m.start() - 200):m.start()]
+        if re.search(r"#\[path\s*=", head):
+            continue
+        name = m.group(1)
+        base = os.path.dirname(path)
+        stem = os.path.basename(path)
+        if stem not in ("lib.rs", "main.rs", "mod.rs"):
+            base = os.path.join(base, stem[:-3])
+        cands = [f"{base}/{name}.rs", f"{base}/{name}/mod.rs"]
+        if not find_file(files, cands):
+            out.append(Finding("mod-file", path, line_of(code, m.start()), 1,
+                               f"`mod {name};` resolves to none of {cands}"))
+
+
+def rule_use_resolve(path, code, depths, uses, modules, out):
+    own = module_path_of(path)
+    for u in uses:
+        for segs, _alias in u.leaves:
+            if segs and segs[0] in ("std", "core", "alloc", "proc_macro"):
+                continue
+            if not resolve_path(segs, modules, own):
+                out.append(Finding("use-resolve", path, u.line, 1,
+                                   "unresolved use path `" + "::".join(segs) + "`"))
+
+
+def rule_unused_import(path, code, uses, out):
+    scrubbed = list(code)
+    for u in uses:
+        for k in range(u.span[0], u.span[1]):
+            if scrubbed[k] != "\n":
+                scrubbed[k] = " "
+    scrubbed = "".join(scrubbed)
+    for u in uses:
+        if u.is_pub:
+            continue
+        for segs, alias in u.leaves:
+            name = alias or (segs[-2] if segs[-1] == "self" and len(segs) >= 2
+                             else segs[-1])
+            if name in ("*", "_", "self"):
+                continue
+            if not re.search(r"\b%s\b" % re.escape(name), scrubbed):
+                out.append(Finding("unused-import", path, u.line, 1,
+                                   f"unused import `{name}`"))
+
+
+def rule_macro_import(path, code, uses, macros, out):
+    imported = set()
+    for u in uses:
+        for segs, alias in u.leaves:
+            imported.add(alias or segs[-1])
+    for name, definer in sorted(macros.items()):
+        if path == definer or name in imported:
+            continue
+        for m in re.finditer(r"\b%s\s*!" % re.escape(name), code):
+            before = code[:m.start()].rstrip()
+            if before.endswith("::"):
+                continue  # fully qualified invocation needs no import
+            if re.search(r"macro_rules!\s*$", before):
+                continue
+            out.append(Finding(
+                "macro-import", path, line_of(code, m.start()), 1,
+                f"`{name}!` used without `use crate::{name};` "
+                f"(#[macro_export] macros live at the crate root)"))
+            break  # one finding per (file, macro)
+
+
+def rule_line_cols(path, raw, out):
+    for ln, text in enumerate(raw.split("\n"), 1):
+        if len(text) > MAX_COLS:
+            out.append(Finding("line-length", path, ln, MAX_COLS + 1,
+                               f"line is {len(text)} chars (max {MAX_COLS})"))
+        if text != text.rstrip():
+            out.append(Finding("trailing-ws", path, ln, len(text.rstrip()) + 1,
+                               "trailing whitespace"))
+
+
+def rule_timer(path, code, test_lines, out):
+    if path in TIMER_ALLOWED:
+        return
+    for m in CLOCK_TOKENS.finditer(code):
+        ln = line_of(code, m.start())
+        if ln in test_lines:
+            continue
+        out.append(Finding("timer-discipline", path, ln, 1,
+                           f"raw clock read `{m.group(0)}` outside "
+                           "util/timer.rs — use Stopwatch/CpuTimer/Deadline/"
+                           "unix_time_s so timed windows stay auditable"))
+
+
+def rule_rng(path, code, test_lines, out):
+    if path in RNG_ALLOWED:
+        return
+    hits = [(m.start(), m.group(0)) for m in RNG_TOKENS.finditer(code)]
+    for m in HEX_LIT.finditer(code):
+        try:
+            if int(m.group(0).replace("_", ""), 16) == RNG_CONST:
+                hits.append((m.start(), m.group(0)))
+        except ValueError:
+            pass
+    for start, tok in sorted(hits):
+        ln = line_of(code, start)
+        if ln in test_lines:
+            continue
+        out.append(Finding("rng-discipline", path, ln, 1,
+                           f"ad-hoc RNG construction `{tok}` — derive "
+                           "streams from util::rng (per-(seed, island) forks)"))
+
+
+HASH_DECL_ANNOT = re.compile(
+    r"\b([A-Za-z_]\w*)\s*:\s*&?\s*(?:mut\s+)?(?:std::collections::)?"
+    r"Hash(?:Map|Set)\s*<")
+HASH_DECL_INIT = re.compile(
+    r"\b(?:let|static|const)\s+(?:mut\s+)?([A-Za-z_]\w*)\s*"
+    r"(?::[^=;]*)?=\s*(?:std::collections::)?Hash(?:Map|Set)::")
+
+
+def rule_iter_order(path, code, test_lines, out):
+    if not RECORD_MARKERS.search(code):
+        return
+    names = set(m.group(1) for m in HASH_DECL_ANNOT.finditer(code))
+    names |= set(m.group(1) for m in HASH_DECL_INIT.finditer(code))
+    if not names:
+        return
+    alt = "|".join(sorted(re.escape(n) for n in names))
+    pats = [
+        re.compile(r"\b(%s)\s*\.\s*(?:%s)\s*\(" % (alt, ITER_METHODS)),
+        re.compile(r"\bfor\s+[^;{]*?\bin\s+&?\s*(?:mut\s+)?(%s)\b" % alt),
+    ]
+    for pat in pats:
+        for m in pat.finditer(code):
+            ln = line_of(code, m.start())
+            if ln in test_lines:
+                continue
+            out.append(Finding(
+                "iter-order", path, ln, 1,
+                f"iterating hash collection `{m.group(1)}` in a file that "
+                "writes records — order is nondeterministic; collect+sort "
+                "or use a BTree collection"))
+
+
+def contiguous_comment_block(comments, code_lines, field_line):
+    texts = list(comments.get(field_line, []))
+    ln = field_line - 1
+    while ln >= 1 and ln in comments and \
+            (ln > len(code_lines) or not code_lines[ln - 1].strip()):
+        texts += comments[ln]
+        ln -= 1
+    return texts
+
+
+def rule_fp_complete(files_meta, out):
+    for sname, fname in FP_PAIRS:
+        decl = None
+        for path in sorted(files_meta):
+            code, depths, comments, raw = files_meta[path]
+            m = re.search(r"\bstruct\s+%s\b" % sname, code)
+            if m:
+                decl = (path, code, comments, m)
+                break
+        if decl is None:
+            continue  # struct not in this tree (fixture runs)
+        path, code, comments, m = decl
+        open_idx = code.find("{", m.end())
+        if open_idx == -1:
+            continue  # tuple/unit struct: no named fields
+        end = match_brace(code, open_idx)
+        body = code[open_idx + 1:end - 1]
+        body_depths = brace_depths(body)
+        fields = []
+        for fm in re.finditer(r"(?m)^\s*(?:pub\s+)?([A-Za-z_]\w*)\s*:", body):
+            if body_depths[fm.start(1)] == 0:
+                fields.append((fm.group(1),
+                               line_of(code, open_idx + 1 + fm.start(1))))
+        # the fingerprint function: any fn with this name whose signature
+        # mentions the struct; bodies union
+        fp_bodies = []
+        for fpath in sorted(files_meta):
+            fcode = files_meta[fpath][0]
+            for fmatch in re.finditer(r"\bfn\s+%s\b" % fname, fcode):
+                fopen = fcode.find("{", fmatch.end())
+                if fopen == -1:
+                    continue
+                if sname not in fcode[fmatch.start():fopen]:
+                    continue
+                fp_bodies.append(fcode[fopen:match_brace(fcode, fopen)])
+        if not fp_bodies:
+            out.append(Finding(
+                "fp-complete", path, line_of(code, m.start()), 1,
+                f"no fingerprint function `{fname}(&{sname})` found "
+                f"for struct {sname}"))
+            continue
+        fp_body = "\n".join(fp_bodies)
+        code_lines = code.split("\n")
+        for field, fline in fields:
+            if re.search(r"\.\s*%s\b" % re.escape(field), fp_body):
+                continue
+            block = contiguous_comment_block(comments, code_lines, fline)
+            if any(FP_EXEMPT_RE.search(t) for t in block):
+                continue
+            out.append(Finding(
+                "fp-complete", path, fline, 1,
+                f"{sname}.{field} is not in {fname}() and carries no "
+                f"`// fp-exempt: <why>` marker — a config knob that "
+                f"changes results but not the journal key poisons resume"))
+
+
+def rule_suppression_wellformed(path, comments, out):
+    for ln in sorted(comments):
+        for text in comments[ln]:
+            am = ALLOW_RE.search(text)
+            if am:
+                ids = [t.strip() for t in am.group(1).split(",") if t.strip()]
+                bad = [t for t in ids if t not in ALL_RULES]
+                if not ids or bad:
+                    out.append(Finding("suppression", path, ln, 1,
+                                       f"allow() names unknown rule(s) {bad or '(none)'}"))
+                elif not am.group(2).strip():
+                    out.append(Finding("suppression", path, ln, 1,
+                                       "suppression without a reason — write "
+                                       "`// lint: allow(rule) <why>`"))
+            fm = FP_EXEMPT_RE.search(text)
+            if fm is not None and not fm.group(1).strip():
+                out.append(Finding("suppression", path, ln, 1,
+                                   "fp-exempt without a reason — write "
+                                   "`// fp-exempt: <why>`"))
+
+
+def allowed_rules_at(comments, line):
+    """Rules suppressed for findings on `line`: allow() comments on the
+    same line or the line directly above."""
+    rules = set()
+    for ln in (line, line - 1):
+        for text in comments.get(ln, []):
+            m = ALLOW_RE.search(text)
+            if m and m.group(2).strip():
+                rules.update(t.strip() for t in m.group(1).split(","))
+    return rules
+
+
+# --------------------------------------------------------------------------
+# Driver.
+
+def lint_files(file_map):
+    """file_map: {repo-relative path: raw source text} -> [Finding]."""
+    meta = {}
+    for path, raw in file_map.items():
+        code, comments = strip_source(raw)
+        depths = brace_depths(code)
+        meta[path] = (code, depths, comments, raw)
+    index_src = {p: (m[0], m[1]) for p, m in meta.items()}
+    modules, macros = build_index(index_src)
+    findings = []
+    for path in sorted(meta):
+        code, depths, comments, raw = meta[path]
+        uses = parse_uses(code, depths)
+        test_lines = cfg_test_lines(code)
+        rule_mod_file(path, code, depths, comments, file_map, findings)
+        rule_use_resolve(path, code, depths, uses, modules, findings)
+        rule_unused_import(path, code, uses, findings)
+        rule_macro_import(path, code, uses, macros, findings)
+        rule_line_cols(path, raw, findings)
+        if path.startswith("rust/src/"):
+            rule_timer(path, code, test_lines, findings)
+            rule_rng(path, code, test_lines, findings)
+            rule_iter_order(path, code, test_lines, findings)
+        rule_suppression_wellformed(path, comments, findings)
+    src_meta = {p: m for p, m in meta.items() if p.startswith("rust/src/")}
+    rule_fp_complete(src_meta, findings)
+    kept = []
+    for f in findings:
+        comments = meta[f.path][2]
+        if f.rule != "suppression" and f.rule in allowed_rules_at(comments, f.line):
+            continue
+        kept.append(f)
+    kept.sort(key=Finding.key)
+    return kept
+
+
+DEFAULT_PATHS = ["rust/src", "rust/tests", "rust/benches", "examples"]
+
+
+def repo_root():
+    here = os.path.dirname(os.path.abspath(__file__))
+    for cand in (os.path.dirname(here), here, os.getcwd()):
+        if os.path.isfile(os.path.join(cand, "rust", "src", "lib.rs")):
+            return cand
+    sys.exit("srclint: cannot locate repo root (rust/src/lib.rs)")
+
+
+def collect(root, paths):
+    file_map = {}
+    for p in paths:
+        full = os.path.join(root, p)
+        if os.path.isfile(full) and full.endswith(".rs"):
+            file_map[os.path.relpath(full, root).replace(os.sep, "/")] = \
+                open(full, encoding="utf-8").read()
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = [d for d in sorted(dirnames) if d != "target"]
+            for fn in sorted(filenames):
+                if fn.endswith(".rs"):
+                    fp = os.path.join(dirpath, fn)
+                    rel = os.path.relpath(fp, root).replace(os.sep, "/")
+                    file_map[rel] = open(fp, encoding="utf-8").read()
+    return file_map
+
+
+def main(argv):
+    if "--self-test" in argv:
+        return self_test()
+    paths = DEFAULT_PATHS
+    if "--paths" in argv:
+        paths = argv[argv.index("--paths") + 1].split(",")
+    root = repo_root()
+    file_map = collect(root, paths)
+    findings = lint_files(file_map)
+    as_json = "--json" in argv
+    for f in findings:
+        print(json.dumps(f.record()) if as_json else f.text())
+    summary = {"rec": "summary", "files": len(file_map),
+               "findings": len(findings), "clean": not findings}
+    print(json.dumps(summary) if as_json
+          else f"srclint: {len(file_map)} file(s), {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+# --------------------------------------------------------------------------
+# Self-test: one positive + one negative snippet per rule, mirroring the
+# fixture tests in rust/src/analysis/lints.rs. `--self-test` is what the
+# no-cargo CI job runs before linting the tree, so a broken rule fails
+# CI even when the Rust test suite cannot build.
+
+def expect(name, file_map, rule, want):
+    got = [f for f in lint_files(file_map) if f.rule == rule]
+    if bool(got) != want:
+        print(f"self-test FAILED: {name}: rule {rule} "
+              f"{'did not fire' if want else 'fired'}: "
+              + "; ".join(f.text() for f in lint_files(file_map)))
+        return False
+    return True
+
+
+LIB = "rust/src/lib.rs"
+
+
+def self_test():
+    ok = True
+    # mod-file
+    ok &= expect("mod missing", {LIB: "pub mod gone;\n"}, "mod-file", True)
+    ok &= expect("mod present",
+                 {LIB: "pub mod here;\n", "rust/src/here.rs": "pub fn f() {}\n"},
+                 "mod-file", False)
+    # use-resolve
+    two = {LIB: "pub mod a;\n",
+           "rust/src/a.rs": "pub fn real() {}\n",
+           "rust/src/main.rs": "use substrat::a::real;\nfn main() { real(); }\n"}
+    ok &= expect("use resolves", two, "use-resolve", False)
+    bad = dict(two)
+    bad["rust/src/main.rs"] = "use substrat::a::fake;\nfn main() { fake(); }\n"
+    ok &= expect("use unresolved", bad, "use-resolve", True)
+    # unused-import
+    ok &= expect("unused import",
+                 {LIB: "use std::fmt::Debug;\npub fn f() {}\n"},
+                 "unused-import", True)
+    ok &= expect("used import",
+                 {LIB: "use std::fmt::Debug;\npub fn f(_x: &dyn Debug) {}\n"},
+                 "unused-import", False)
+    # macro-import
+    mac = ("#[macro_export]\nmacro_rules! chk {\n    () => {};\n}\n")
+    ok &= expect("macro no import",
+                 {LIB: "pub mod m;\n", "rust/src/m.rs": mac,
+                  "rust/src/u.rs": "pub fn f() { chk!(); }\n"},
+                 "macro-import", True)
+    ok &= expect("macro imported",
+                 {LIB: "pub mod m;\n", "rust/src/m.rs": mac,
+                  "rust/src/u.rs": "use crate::chk;\npub fn f() { chk!(); }\n"},
+                 "macro-import", False)
+    # line-length / trailing-ws
+    ok &= expect("long line", {LIB: "// " + "x" * 120 + "\n"}, "line-length", True)
+    ok &= expect("short line", {LIB: "// ok\n"}, "line-length", False)
+    ok &= expect("trailing ws", {LIB: "pub fn f() {} \n"}, "trailing-ws", True)
+    ok &= expect("no trailing ws", {LIB: "pub fn f() {}\n"}, "trailing-ws", False)
+    # timer-discipline (+ cfg(test) exemption and suppression)
+    clock = "use std::time::Instant;\npub fn f() { let _ = Instant::now(); }\n"
+    ok &= expect("clock in src", {LIB: clock}, "timer-discipline", True)
+    ok &= expect("clock in timer.rs",
+                 {LIB: "pub mod util;\n",
+                  "rust/src/util/mod.rs": "pub mod timer;\n",
+                  "rust/src/util/timer.rs": clock},
+                 "timer-discipline", False)
+    ok &= expect("clock in cfg(test)",
+                 {LIB: "#[cfg(test)]\nmod tests {\n    pub fn f() { let _ = "
+                       "std::time::Instant::now(); }\n}\n"},
+                 "timer-discipline", False)
+    ok &= expect("clock suppressed",
+                 {LIB: "pub fn f() {\n    // lint: allow(timer-discipline) "
+                       "wall-clock banner, not a measurement\n    let _ = "
+                       "std::time::Instant::now();\n}\n"},
+                 "timer-discipline", False)
+    ok &= expect("suppression needs reason",
+                 {LIB: "// lint: allow(timer-discipline)\n"},
+                 "suppression", True)
+    # iter-order
+    it = ("use std::collections::HashMap;\n"
+          "pub fn w(m: &HashMap<String, u32>) -> Vec<String> {\n"
+          "    let _ = crate::util::json::obj_to_line(&[]);\n"
+          "    m.keys().cloned().collect()\n}\n")
+    ok &= expect("map iteration in record writer", {LIB: it}, "iter-order", True)
+    ok &= expect("map lookup only",
+                 {LIB: it.replace("m.keys().cloned().collect()",
+                                  "vec![m.len().to_string()]")},
+                 "iter-order", False)
+    # rng-discipline
+    ok &= expect("adhoc rng",
+                 {LIB: "pub fn f() -> u64 { 0x9E37_79B9_7F4A_7C15 }\n"},
+                 "rng-discipline", True)
+    ok &= expect("rng via util", {LIB: "pub fn f() {}\n"}, "rng-discipline", False)
+    # fp-complete: the synthetic "field added to ExpConfig but not to the
+    # fingerprint" mutation from the acceptance criteria
+    fp_ok = ("pub struct ExpConfig {\n    pub scale: f64,\n"
+             "    // fp-exempt: speed only, never changes results\n"
+             "    pub threads: usize,\n}\n"
+             "pub fn config_fingerprint(cfg: &ExpConfig) -> String {\n"
+             "    format!(\"{}\", cfg.scale)\n}\n")
+    ok &= expect("fp complete", {LIB: fp_ok}, "fp-complete", False)
+    fp_bad = fp_ok.replace("    pub scale: f64,\n",
+                           "    pub scale: f64,\n    pub new_knob: bool,\n")
+    ok &= expect("fp mutation caught", {LIB: fp_bad}, "fp-complete", True)
+    print("self-test OK" if ok else "self-test FAILED")
+    return 0 if ok else 2
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
