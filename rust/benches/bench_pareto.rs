@@ -1,0 +1,10 @@
+//! Thin wrapper: `cargo bench --bench bench_pareto` runs the shared
+//! `pareto` suite of the bench-trajectory subsystem (DESIGN.md §5.4) —
+//! non-dominated sort + crowding scaling and the NSGA-II engine
+//! head-to-head against the scalar engine — and writes
+//! `BENCH_<n>.json` under `results/bench_pareto`. `substrat bench
+//! pareto` is the flag-settable front door.
+
+fn main() {
+    substrat::experiments::bench::bench_binary_main("pareto");
+}

@@ -432,12 +432,18 @@ mod tests {
     }
 
     // the acceptance-criteria mutation: a field added to ExpConfig but
-    // not to the fingerprint function must be caught
+    // not to the fingerprint function must be caught. The fixture
+    // carries the PR-8 field shapes — a Vec-typed objective list and
+    // an Option-typed operating point — so the rule is known to parse
+    // generic field types, not just scalars.
     const FP_OK: &str = "pub struct ExpConfig {\n    pub scale: f64,\n    \
+                         pub objectives: Vec<Objective>,\n    \
+                         pub operating_point: Option<Vec<f64>>,\n    \
                          // fp-exempt: speed only, never changes results\n    \
                          pub threads: usize,\n}\n\
                          pub fn config_fingerprint(cfg: &ExpConfig) -> String {\n    \
-                         format!(\"{}\", cfg.scale)\n}\n";
+                         format!(\"{}|{:?}|{:?}\", cfg.scale, cfg.objectives, \
+                         cfg.operating_point)\n}\n";
 
     #[test]
     fn fp_complete_passes_exempt_fields_and_catches_mutations() {
@@ -449,6 +455,18 @@ mod tests {
         assert_fired("mutation caught", &[(LIB, &mutated)], "fp-complete", true);
         let no_fn = "pub struct ExpConfig {\n    pub scale: f64,\n}\n";
         assert_fired("missing fingerprint fn", &[(LIB, no_fn)], "fp-complete", true);
+    }
+
+    #[test]
+    fn fp_complete_catches_uncovered_generic_typed_fields() {
+        // dropping cfg.operating_point from the fingerprint body must
+        // fire on the Option<Vec<f64>> field specifically
+        let mutated = FP_OK.replace(
+            "format!(\"{}|{:?}|{:?}\", cfg.scale, cfg.objectives, cfg.operating_point)",
+            "format!(\"{}|{:?}\", cfg.scale, cfg.objectives)",
+        );
+        assert_ne!(mutated, FP_OK, "fixture replace target must match");
+        assert_fired("option field caught", &[(LIB, &mutated)], "fp-complete", true);
     }
 
     #[test]

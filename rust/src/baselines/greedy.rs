@@ -96,6 +96,7 @@ impl SubsetStrategy for GreedySeq {
             setup_s: 0.0,
             setup_cpu_s: 0.0,
             evals: eval.evals,
+            front: Vec::new(),
         }
     }
 }
@@ -179,6 +180,7 @@ impl SubsetStrategy for GreedyMult {
             setup_s: 0.0,
             setup_cpu_s: 0.0,
             evals: eval.evals,
+            front: Vec::new(),
         }
     }
 }

@@ -89,6 +89,7 @@ impl SubsetStrategy for IgRand {
             setup_s: 0.0,
             setup_cpu_s: 0.0,
             evals: ctx.frame.n_cols() - 1,
+            front: Vec::new(),
         }
     }
 }
@@ -120,6 +121,7 @@ impl SubsetStrategy for IgKm {
             setup_s: 0.0,
             setup_cpu_s: 0.0,
             evals: ctx.frame.n_cols() - 1,
+            front: Vec::new(),
         }
     }
 }

@@ -238,6 +238,7 @@ impl SubsetStrategy for KmStrategy {
             setup_s: 0.0,
             setup_cpu_s: 0.0,
             evals: 0,
+            front: Vec::new(),
         }
     }
 }

@@ -122,6 +122,7 @@ impl SubsetStrategy for MultiArmBandit {
             setup_s: 0.0,
             setup_cpu_s: 0.0,
             evals: eval.evals,
+            front: Vec::new(),
         }
     }
 }

@@ -16,6 +16,7 @@
 
 use crate::baselines::{StrategyContext, StrategyOutcome, SubsetStrategy};
 use crate::gendst::ops::random_candidate;
+use crate::gendst::pareto::Objective;
 use crate::gendst::{fitness::FitnessBackend, fitness::FitnessEval, Dst, GenDstConfig, StopRule};
 use crate::util::rng::Rng;
 use crate::util::timer::{Budget, CpuTimer, Stopwatch};
@@ -47,6 +48,10 @@ pub struct MonteCarlo {
     /// island count for the probe — the same value the cell's real
     /// Gen-DST run uses, for the same reason as `probe_threads`
     pub probe_islands: usize,
+    /// objective vector for the probe — the NSGA-II path costs more
+    /// per generation than the scalar path, so a scalar probe under a
+    /// multi-objective cell would underestimate the 20x budget
+    pub probe_objectives: Vec<Objective>,
 }
 
 impl MonteCarlo {
@@ -68,6 +73,7 @@ impl MonteCarlo {
             stop: StopRule::TimeBudget { seconds: PROBE_WINDOW_S },
             threads: self.probe_threads,
             islands: self.probe_islands,
+            objectives: self.probe_objectives.clone(),
             seed: ctx.seed,
             ..base.clone()
         };
@@ -146,6 +152,7 @@ impl SubsetStrategy for MonteCarlo {
             setup_s,
             setup_cpu_s,
             evals: eval.evals,
+            front: Vec::new(),
         }
     }
 }
@@ -164,6 +171,7 @@ mod tests {
             time_mult_of_gendst: mult,
             probe_threads: 1,
             probe_islands: 1,
+            probe_objectives: vec![Objective::Fidelity],
         }
     }
 
@@ -258,6 +266,7 @@ mod tests {
             time_mult_of_gendst: Some(0.01),
             probe_threads: 2,
             probe_islands: 2,
+            probe_objectives: vec![Objective::Fidelity],
         };
         let out = strat.find(&ctx);
         out.dst.validate(f.n_rows, f.n_cols(), f.target).unwrap();

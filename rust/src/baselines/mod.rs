@@ -16,6 +16,7 @@ pub mod mab;
 pub mod mc;
 
 use crate::data::{CodeMatrix, Frame};
+use crate::gendst::pareto::{Objective, ParetoPoint};
 use crate::gendst::{self, Dst, GenDstConfig};
 use crate::measures::DatasetMeasure;
 use crate::util::timer::Stopwatch;
@@ -50,6 +51,12 @@ pub struct StrategyOutcome {
     pub setup_cpu_s: f64,
     /// measure/fitness evaluations spent (0 where not applicable)
     pub evals: usize,
+    /// the Pareto front of the subset search (DESIGN.md §10). Scalar
+    /// Gen-DST reports its winner as a one-point front; baselines that
+    /// have no notion of a front leave this empty. `dst` is always the
+    /// strategy's own pick — SubStrat step 1 may re-select from here
+    /// when the caller supplies an operating point.
+    pub front: Vec<ParetoPoint>,
 }
 
 pub trait SubsetStrategy: Sync {
@@ -78,6 +85,7 @@ impl SubsetStrategy for GenDstStrategy {
             setup_s: 0.0,
             setup_cpu_s: 0.0,
             evals: res.fitness_evals,
+            front: res.front,
         }
     }
 }
@@ -104,11 +112,25 @@ pub fn by_name_threaded(name: &str, threads: usize) -> Box<dyn SubsetStrategy> {
 /// (never thread-derived) wherever records are compared across
 /// machines.
 pub fn by_name_with(name: &str, threads: usize, islands: usize) -> Box<dyn SubsetStrategy> {
+    by_name_configured(name, threads, islands, &[Objective::Fidelity])
+}
+
+/// [`by_name_with`] plus the Gen-DST objective vector (DESIGN.md §10).
+/// `[Fidelity]` keeps every strategy on the scalar paper engine; a
+/// longer vector switches the Gen-DST cells (and the MC-24H budget
+/// probe, which must cost out the same engine) to the NSGA-II path.
+pub fn by_name_configured(
+    name: &str,
+    threads: usize,
+    islands: usize,
+    objectives: &[Objective],
+) -> Box<dyn SubsetStrategy> {
     match name {
         "gendst" | "substrat" => Box::new(GenDstStrategy {
             config: GenDstConfig {
                 threads,
                 islands,
+                objectives: objectives.to_vec(),
                 ..Default::default()
             },
         }),
@@ -118,6 +140,7 @@ pub fn by_name_with(name: &str, threads: usize, islands: usize) -> Box<dyn Subse
             time_mult_of_gendst: None,
             probe_threads: threads,
             probe_islands: islands,
+            probe_objectives: objectives.to_vec(),
         }),
         "mc-100k" => Box::new(mc::MonteCarlo {
             instance: "mc-100k",
@@ -125,6 +148,7 @@ pub fn by_name_with(name: &str, threads: usize, islands: usize) -> Box<dyn Subse
             time_mult_of_gendst: None,
             probe_threads: threads,
             probe_islands: islands,
+            probe_objectives: objectives.to_vec(),
         }),
         // MC-24H: budget-scaled stand-in — 20x the wall-clock Gen-DST
         // needs on the same input (see DESIGN.md §5). The probe runs
@@ -137,6 +161,7 @@ pub fn by_name_with(name: &str, threads: usize, islands: usize) -> Box<dyn Subse
             time_mult_of_gendst: Some(20.0),
             probe_threads: threads,
             probe_islands: islands,
+            probe_objectives: objectives.to_vec(),
         }),
         "mab" => Box::new(mab::MultiArmBandit::default()),
         "greedy-seq" => Box::new(greedy::GreedySeq::default()),

@@ -1,6 +1,6 @@
 //! The benchmark-trajectory subsystem (DESIGN.md §5.4): one `bench`
 //! entry point that expands every perf target — the five paper-artifact
-//! sweeps and the four engine micro-benchmarks — into named *suites*
+//! sweeps and the five engine micro-benchmarks — into named *suites*
 //! and emits one machine-readable `BENCH_<n>.json` per run, so "the
 //! engine got faster" is a diff between two files instead of a claim.
 //!
@@ -8,7 +8,8 @@
 //!   through the same `cells()` functions the experiment drivers use
 //!   and run through the contention-free cell runner (§5.2) with the
 //!   journal forced off — a bench must re-measure, never resume.
-//! * **Micro suites** (`gendst`, `automl`, `entropy`, `runtime`) drive
+//! * **Micro suites** (`gendst`, `automl`, `entropy`, `runtime`,
+//!   `pareto`) drive
 //!   `util::bench::Bench` (honors `BENCH_QUICK=1`) and keep the old
 //!   bench binaries' equivalence assertions: identical winners across
 //!   engines is checked before any number is trusted.
@@ -34,6 +35,7 @@ use crate::data::{CodeMatrix, Matrix};
 use crate::experiments::runner::{config_fingerprint, Cell, Runner};
 use crate::experiments::{fig2, fig3, fig4, fig5, table4, ExpConfig, RunRecord, TimingMode};
 use crate::gendst::fitness::FitnessBackend;
+use crate::gendst::pareto::{self, Objective};
 use crate::gendst::{default_dst_size, gen_dst, GenDstConfig};
 use crate::measures::entropy::{
     column_hist, entropy_of_counts, full_entropy, hist_swap_row, subset_entropy, EntropyMeasure,
@@ -131,6 +133,12 @@ pub fn suite_defs() -> &'static [SuiteDef] {
             kind: SuiteKind::Micro,
             replaces: "bench_runtime",
             what: "PJRT call overhead: step vs epoch, predict",
+        },
+        SuiteDef {
+            name: "pareto",
+            kind: SuiteKind::Micro,
+            replaces: "bench_pareto",
+            what: "NSGA-II machinery: sort/crowding scaling, MO vs scalar engine",
         },
     ];
     DEFS
@@ -250,7 +258,13 @@ fn header_record(defs: &[&SuiteDef], dry: bool, exp: &ExpConfig) -> Record {
     ]
 }
 
-fn suite_record(suite: &str, cells: usize, wall_s: f64, cpu_s: f64, dry: bool) -> Record {
+pub(crate) fn suite_record(
+    suite: &str,
+    cells: usize,
+    wall_s: f64,
+    cpu_s: f64,
+    dry: bool,
+) -> Record {
     vec![
         str_field("record", "suite"),
         str_field("suite", suite),
@@ -261,7 +275,7 @@ fn suite_record(suite: &str, cells: usize, wall_s: f64, cpu_s: f64, dry: bool) -
     ]
 }
 
-fn cell_record(
+pub(crate) fn cell_record(
     suite: &str,
     cell: &Cell,
     cell_fp: &str,
@@ -534,6 +548,7 @@ fn micro_suite_records(name: &str, dry: bool) -> Vec<Record> {
         "automl" => suite_automl(dry),
         "entropy" => suite_entropy(dry),
         "runtime" => suite_runtime(dry),
+        "pareto" => suite_pareto(dry),
         other => panic!("not a micro suite: {other:?}"),
     }
 }
@@ -875,6 +890,68 @@ fn suite_runtime(dry: bool) -> Vec<Record> {
     out
 }
 
+/// NSGA-II machinery suite (subsumes `bench_pareto`): non-dominated
+/// sort + crowding scaling on synthetic 3-objective clouds, then the
+/// multi-objective engine head-to-head against the scalar engine on
+/// the same input — the per-generation overhead the MO path pays for
+/// returning a whole front from one run (DESIGN.md §10). The front-size
+/// counter records how many operating points that one run served.
+fn suite_pareto(dry: bool) -> Vec<Record> {
+    const SUITE: &str = "pareto";
+    let mut out = Vec::new();
+    let mut b = Bench::new();
+    for n in [64usize, 256, 1024] {
+        let name = format!("rank_and_crowding {n}x3");
+        if dry {
+            out.push(stub_micro(SUITE, &name));
+            continue;
+        }
+        let mut rng = Rng::new(5);
+        let objs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..3).map(|_| rng.f64()).collect()).collect();
+        let r = b
+            .bench(&name, || {
+                black_box(pareto::rank_and_crowding(&objs));
+            })
+            .clone();
+        out.push(micro_record(SUITE, &r, false));
+    }
+
+    let (rows, cols) = registry_shape("D2", 0.4);
+    let (n, m) = default_dst_size(rows, cols);
+    let shape = format!("D2 {rows}x{cols} -> ({n},{m})");
+    if dry {
+        for tag in ["scalar ", "nsga-ii"] {
+            out.push(stub_micro(SUITE, &format!("gen_dst {tag} {shape}")));
+        }
+        out.push(counter_record(SUITE, &format!("front_size {shape}"), 0.0, true));
+        return out;
+    }
+    let f = registry::load("D2", 0.4, 7);
+    let codes = CodeMatrix::from_frame(&f);
+    let mo = vec![Objective::Fidelity, Objective::SubsetSize, Objective::DownstreamTime];
+    for (tag, objectives) in
+        [("scalar ", vec![Objective::Fidelity]), ("nsga-ii", mo.clone())]
+    {
+        let cfg = GenDstConfig { objectives, seed: 1, ..Default::default() };
+        let r = b
+            .bench(&format!("gen_dst {tag} {shape}"), || {
+                black_box(gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg));
+            })
+            .clone();
+        out.push(micro_record(SUITE, &r, false));
+    }
+    let cfg = GenDstConfig { objectives: mo, seed: 1, ..Default::default() };
+    let res = gen_dst(&f, &codes, &EntropyMeasure, n, m, &cfg);
+    out.push(counter_record(
+        SUITE,
+        &format!("front_size {shape}"),
+        res.front.len() as f64,
+        false,
+    ));
+    out
+}
+
 /// Run the configured suites and write one `BENCH_<n>.json`. Records
 /// are collected (and validated) first, then the file is claimed and
 /// written in one pass — a panicking suite leaves no half-written file.
@@ -948,21 +1025,21 @@ mod tests {
         let mut names: Vec<&str> = defs.iter().map(|d| d.name).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 9, "suite names must be unique");
+        assert_eq!(names.len(), 10, "suite names must be unique");
         let mut replaces: Vec<&str> = defs.iter().map(|d| d.replaces).collect();
         replaces.sort_unstable();
         replaces.dedup();
-        assert_eq!(replaces.len(), 9, "each suite subsumes a distinct target");
+        assert_eq!(replaces.len(), 10, "each suite subsumes a distinct target");
         assert!(replaces.iter().all(|r| r.starts_with("bench_")));
     }
 
     #[test]
     fn resolve_suite_names_handles_groups_and_lists() {
-        assert_eq!(resolve_suite_names("all").len(), 9);
+        assert_eq!(resolve_suite_names("all").len(), 10);
         let cells = resolve_suite_names("cells");
         assert_eq!(cells, vec!["table4", "fig2", "fig3", "fig4", "fig5"]);
         let micro = resolve_suite_names("micro");
-        assert_eq!(micro, vec!["gendst", "automl", "entropy", "runtime"]);
+        assert_eq!(micro, vec!["gendst", "automl", "entropy", "runtime", "pareto"]);
         assert_eq!(resolve_suite_names("fig3, gendst"), vec!["fig3", "gendst"]);
     }
 
@@ -1079,7 +1156,7 @@ mod tests {
 
     #[test]
     fn dry_micro_suites_emit_stub_records_only() {
-        for name in ["gendst", "automl", "entropy", "runtime"] {
+        for name in ["gendst", "automl", "entropy", "runtime", "pareto"] {
             let recs = micro_suite_records(name, true);
             assert!(!recs.is_empty(), "{name}");
             for r in &recs {

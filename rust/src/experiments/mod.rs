@@ -33,6 +33,7 @@ pub use runner::TimingMode;
 use crate::automl::{eval::fit_on_frame, run_automl, AutoMlConfig, AutoMlResult, SearcherKind};
 use crate::baselines::{self, StrategyOutcome};
 use crate::data::{registry, registry::DataSource, split, CodeMatrix, Frame};
+use crate::gendst::pareto::Objective;
 use crate::measures::entropy::EntropyMeasure;
 use crate::substrat::{run_substrat, SubStratConfig, SubStratRun};
 use crate::util::pool;
@@ -86,6 +87,16 @@ pub struct ExpConfig {
     /// `--threads`/machines; always ≥ 1 (the CLI clamps 0 up). The
     /// default 1 is the paper's single-population engine.
     pub islands: usize,
+    /// Gen-DST objective vector (DESIGN.md §10). `[Fidelity]` is the
+    /// paper's scalar engine; adding `SubsetSize`/`DownstreamTime`
+    /// switches strategy cells to the NSGA-II path, which changes the
+    /// search trajectory and therefore feeds the config fingerprint.
+    pub objectives: Vec<Objective>,
+    /// multi-objective runs only: per-objective weights picking the
+    /// operating point on the returned front (`None` = fidelity
+    /// extreme, i.e. the scalar winner). Changes which subset every
+    /// strategy cell trains on, so it feeds the config fingerprint.
+    pub operating_point: Option<Vec<f64>>,
     /// proposals per AutoML engine round — a fixed schedule, never
     /// derived from the thread budget, so the search trajectory (and
     /// with it every record) is identical at any thread count
@@ -116,6 +127,8 @@ impl Default for ExpConfig {
             out_dir: PathBuf::from("results"),
             threads: crate::util::pool::default_threads(),
             islands: 1,
+            objectives: vec![Objective::Fidelity],
+            operating_point: None,
             batch: 8,
             timing: TimingMode::Wall,
             journal: true,
@@ -374,16 +387,23 @@ pub fn strategy_search(
         "substrat-nf" => ("gendst", false),
         other => (other, true),
     };
-    // the cell's pinned island count rides along with its thread
-    // allowance — including into the MC-24H budget probe, which must
-    // cost out the same engine shape the real Gen-DST cell runs
-    let strategy = baselines::by_name_with(resolved, inner_threads.max(1), cfg.islands.max(1));
+    // the cell's pinned island count and objective vector ride along
+    // with its thread allowance — including into the MC-24H budget
+    // probe, which must cost out the same engine shape the real
+    // Gen-DST cell runs
+    let strategy = baselines::by_name_configured(
+        resolved,
+        inner_threads.max(1),
+        cfg.islands.max(1),
+        &cfg.objectives,
+    );
     let mut automl = AutoMlConfig::new(searcher, cfg.full_evals, cfg.seed ^ 0x33 ^ rep as u64);
     wire_engine(&mut automl, cfg, inner_threads);
     let sub_cfg = SubStratConfig {
         dst_size,
         fine_tune,
         fine_tune_frac: ft_frac,
+        operating_point: cfg.operating_point.clone(),
         seed: cfg.seed ^ 0x44 ^ rep as u64,
     };
     run_substrat(

@@ -221,15 +221,17 @@ impl Cell {
 
 /// Fingerprint of every `ExpConfig` knob that changes what a cell
 /// *computes* (scale, budgets, seed, batch schedule, timing mode, the
-/// Gen-DST island count, and the CSV ingestion knobs — a different
-/// target column is a different prediction task). Thread counts are
-/// deliberately excluded: they are pure speed, and records must
-/// survive a re-run on different hardware. (Tag bumped to `exp-v2`
-/// when `islands` joined the key — PR 5 rotates all journal keys
-/// once, exactly like PR 4's source-fingerprint change did.)
+/// Gen-DST island count, the objective vector and operating point, and
+/// the CSV ingestion knobs — a different target column is a different
+/// prediction task). Thread counts are deliberately excluded: they are
+/// pure speed, and records must survive a re-run on different
+/// hardware. (Tag bumped to `exp-v3` when `objectives` and
+/// `operating_point` joined the key — PR 8 rotates all journal keys
+/// once, exactly like PR 5's `exp-v2` bump did for `islands`.)
 pub fn config_fingerprint(cfg: &ExpConfig) -> String {
     let canon = format!(
-        "exp-v2|scale{}|min{}|max{}|evals{}|ft{}|batch{}|isl{}|seed{}|timing{}|tgt{:?}|hdr{:?}",
+        "exp-v3|scale{}|min{}|max{}|evals{}|ft{}|batch{}|isl{}|seed{}|timing{}|tgt{:?}|hdr{:?}|\
+         objs{:?}|op{:?}",
         cfg.scale,
         cfg.min_rows,
         cfg.max_rows,
@@ -241,6 +243,8 @@ pub fn config_fingerprint(cfg: &ExpConfig) -> String {
         cfg.timing.name(),
         cfg.csv_target,
         cfg.csv_header,
+        cfg.objectives,
+        cfg.operating_point,
     );
     hash::hex128(hash::fingerprint_bytes(canon.as_bytes()))
 }
@@ -837,6 +841,22 @@ mod tests {
         let mut one = cfg.clone();
         one.islands = 1;
         assert_eq!(config_fingerprint(&zero), config_fingerprint(&one));
+    }
+
+    #[test]
+    fn objective_knobs_feed_the_config_fingerprint() {
+        // the objective vector and the operating point both change
+        // which subset every strategy cell trains on, so journaled
+        // records from a different setting must never be resumed
+        use crate::gendst::pareto::Objective;
+        let cfg = tiny_cfg("objfp");
+        let mut mo = cfg.clone();
+        mo.objectives = vec![Objective::Fidelity, Objective::SubsetSize];
+        assert_ne!(config_fingerprint(&cfg), config_fingerprint(&mo));
+        let mut op = cfg.clone();
+        op.operating_point = Some(vec![1.0, 2.0]);
+        assert_ne!(config_fingerprint(&cfg), config_fingerprint(&op));
+        assert_ne!(config_fingerprint(&mo), config_fingerprint(&op));
     }
 
     #[test]

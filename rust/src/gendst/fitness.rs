@@ -30,7 +30,7 @@ use crate::runtime::{self, entropy_exec::EntropyExec};
 use crate::util::hash::subset_key;
 use crate::util::pool::{self, parallel_map};
 
-use super::Candidate;
+use super::{pareto, Candidate};
 
 /// Which engine scores candidates (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -306,6 +306,36 @@ impl<'a> FitnessEval<'a> {
         l
     }
 
+    /// Objective vector of one *scored* candidate (multi-objective
+    /// mode, DESIGN.md §10): the cached fidelity loss plus the
+    /// shape-derived components, in the caller's `objectives` order.
+    /// `SubsetSize` and `DownstreamTime` are pure functions of
+    /// `(rows.len(), cols.len())`, and [`subset_key`] determines both
+    /// index sets — so a loss-memo hit keys this whole vector, not
+    /// just its first component.
+    pub fn objectives_of(&self, cand: &Candidate, objectives: &[pareto::Objective]) -> Vec<f64> {
+        pareto::objective_vector(
+            cand.loss.expect("objectives_of needs a scored candidate"),
+            cand.rows.len(),
+            cand.cols.len(),
+            self.frame.n_rows,
+            self.frame.n_cols(),
+            objectives,
+        )
+    }
+
+    /// Score every unscored candidate ([`FitnessEval::fill_losses`] —
+    /// same memo, same delta-updating caches, same parallel fill) and
+    /// return the population's objective matrix.
+    pub fn fill_objectives(
+        &mut self,
+        pop: &mut [Candidate],
+        objectives: &[pareto::Objective],
+    ) -> Vec<Vec<f64>> {
+        self.fill_losses(pop);
+        pop.iter().map(|c| self.objectives_of(c, objectives)).collect()
+    }
+
     /// Fill the cached loss of every candidate that lacks one.
     ///
     /// * `Incremental`: memo lookups first, then one parallel pass that
@@ -470,6 +500,39 @@ mod tests {
         assert_eq!(eval.evals, 5, "cached loss recomputed");
         assert!(pop.iter().all(|c| c.loss.is_some()));
         assert_eq!(pop[0].loss, Some(0.5));
+    }
+
+    #[test]
+    fn fill_objectives_matches_fill_losses_and_keys_whole_vector() {
+        let f = registry::load("D2", 0.05, 1);
+        let codes = CodeMatrix::from_frame(&f);
+        let objs = [
+            pareto::Objective::Fidelity,
+            pareto::Objective::SubsetSize,
+            pareto::Objective::DownstreamTime,
+        ];
+        let mut eval = FitnessEval::new(&f, &codes, &EntropyMeasure, FitnessBackend::Incremental);
+        let mut rng = crate::util::rng::Rng::new(4);
+        let mut pop: Vec<Candidate> = (0..6)
+            .map(|_| ops::random_candidate(&f, 12, 3, &mut rng))
+            .collect();
+        let matrix = eval.fill_objectives(&mut pop, &objs);
+        assert_eq!(matrix.len(), pop.len());
+        for (c, v) in pop.iter().zip(&matrix) {
+            assert_eq!(v.len(), 3);
+            assert_eq!(v[0], c.loss.unwrap(), "fidelity is the scalar loss");
+            let area = (c.rows.len() * c.cols.len()) as f64
+                / (f.n_rows * f.n_cols()) as f64;
+            assert_eq!(v[1], area);
+            assert!(v[2] > 0.0 && v[2] <= 1.0);
+        }
+        // a memoized duplicate subset gets the identical full vector
+        let evals_before = eval.evals;
+        let mut dup = vec![Candidate { loss: None, cache: None, ..pop[0].clone() }];
+        let dup_matrix = eval.fill_objectives(&mut dup, &objs);
+        assert_eq!(dup_matrix[0], matrix[0], "memo hit must key the whole vector");
+        assert_eq!(eval.evals, evals_before, "memo hit, no recompute");
+        assert!(eval.memo_hits > 0);
     }
 
     #[test]

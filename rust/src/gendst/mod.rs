@@ -26,6 +26,18 @@
 //! probe reuses it instead of extrapolating from a differently-shaped
 //! mini-run).
 //!
+//! Since PR 8 the engine is **multi-objective** (DESIGN.md §10): when
+//! [`GenDstConfig::objectives`] names more than `[Fidelity]`, each
+//! island runs an NSGA-II generation body (crowded binary tournaments,
+//! same-shape crossover, a size-axis resize mutation, environmental
+//! selection) over the configured objective vector, ring migration
+//! carries crowding-pruned front slices instead of top-k, and
+//! [`GenDstResult::front`] returns the global non-dominated set — the
+//! fig3 size-vs-fidelity skyline from one run. `objectives =
+//! [Fidelity]` routes through the scalar generation body verbatim and
+//! is property-tested bit-identical to it, the same special-case
+//! pattern as `islands = 1`.
+//!
 //! Fitness scoring runs on the incremental + parallel engine by default
 //! (see [`fitness`] and DESIGN.md §4.4); the serial from-scratch path is
 //! kept as [`fitness::FitnessBackend::NaiveNative`] and both are
@@ -35,6 +47,7 @@
 
 pub mod fitness;
 pub mod ops;
+pub mod pareto;
 
 use std::sync::Mutex;
 
@@ -46,6 +59,7 @@ use crate::util::rng::Rng;
 use crate::util::timer::{Deadline, Stopwatch};
 
 use fitness::{FitnessBackend, FitnessEval};
+use pareto::{Objective, ParetoPoint};
 
 /// A data subset (paper Def. 3.1): row indices + column indices into the
 /// parent frame. `cols` always contains the parent's target column.
@@ -156,6 +170,12 @@ pub struct GenDstConfig {
     pub migration_k: usize,
     /// stopping rule: ψ generations (default) or an anytime time budget
     pub stop: StopRule,
+    /// search objectives (DESIGN.md §10). The default `[Fidelity]`
+    /// routes through the scalar generation body verbatim
+    /// (property-tested bit-identical); any longer list switches the
+    /// islands to the NSGA-II body and [`GenDstResult::front`] carries
+    /// the resulting non-dominated set
+    pub objectives: Vec<Objective>,
     /// RNG seed; identical seeds give identical runs
     pub seed: u64,
 }
@@ -176,20 +196,23 @@ impl Default for GenDstConfig {
             migration_interval: 5,
             migration_k: 2,
             stop: StopRule::Generations,
+            objectives: vec![Objective::Fidelity],
             seed: 0,
         }
     }
 }
 
 /// 128-bit fingerprint of every `GenDstConfig` knob that changes what
-/// the search *computes* (tag `gendst-v1`). `threads` is deliberately
-/// excluded — it is pure speed, property-tested bit-identical across
-/// budgets. The `fp-complete` lint (DESIGN.md §9) checks that every
-/// field of the struct either appears below or carries an
-/// `// fp-exempt: <why>` marker, so a knob added without a fingerprint
-/// decision fails CI instead of silently poisoning future journal
-/// reuse (the exact `exp-v2` bug class from the island PR). Nothing
-/// keys journals on this yet; the SubStrat-as-a-service store
+/// the search *computes* (tag `gendst-v2`; v1 → v2 when `objectives`
+/// joined the key — a multi-objective run computes a different answer,
+/// so the rotation invalidates nothing that was comparable). `threads`
+/// is deliberately excluded — it is pure speed, property-tested
+/// bit-identical across budgets. The `fp-complete` lint (DESIGN.md §9)
+/// checks that every field of the struct either appears below or
+/// carries an `// fp-exempt: <why>` marker, so a knob added without a
+/// fingerprint decision fails CI instead of silently poisoning future
+/// journal reuse (the exact `exp-v2` bug class from the island PR).
+/// Nothing keys journals on this yet; the SubStrat-as-a-service store
 /// (ROADMAP item 2) will use it for cross-job cell reuse.
 pub fn config_fingerprint(cfg: &GenDstConfig) -> String {
     let stop = match cfg.stop {
@@ -197,8 +220,8 @@ pub fn config_fingerprint(cfg: &GenDstConfig) -> String {
         StopRule::TimeBudget { seconds } => format!("time{seconds}"),
     };
     let canon = format!(
-        "gendst-v1|gen{}|pop{}|mut{}|roy{}|prc{}|eps{}|pat{}|bk{:?}|isl{}|mint{}|mk{}|stop{}|\
-         seed{}",
+        "gendst-v2|gen{}|pop{}|mut{}|roy{}|prc{}|eps{}|pat{}|bk{:?}|isl{}|mint{}|mk{}|stop{}|\
+         objs{:?}|seed{}",
         cfg.generations,
         cfg.population,
         cfg.mutation_prob,
@@ -211,6 +234,7 @@ pub fn config_fingerprint(cfg: &GenDstConfig) -> String {
         cfg.migration_interval,
         cfg.migration_k,
         stop,
+        cfg.objectives,
         cfg.seed,
     );
     hash::hex128(hash::fingerprint_bytes(canon.as_bytes()))
@@ -245,6 +269,11 @@ pub struct GenDstResult {
     pub setup_s: f64,
     /// wall-clock of the whole search
     pub elapsed_s: f64,
+    /// the final non-dominated front (DESIGN.md §10), one point per
+    /// distinct subset, canonically ordered by objective vector. In
+    /// scalar mode this is the single winning subset with its loss as
+    /// a 1-vector, so callers can treat every run uniformly
+    pub front: Vec<ParetoPoint>,
 }
 
 /// One GA candidate: row/column chromosomes, the cached loss, and the
@@ -267,6 +296,13 @@ pub struct Candidate {
 /// this, selection pressure collapses and extra islands add overhead,
 /// not search reach.
 const MIN_ISLAND_POP: usize = 16;
+
+/// Per-offspring probability of a size-axis resize mutation in
+/// multi-objective mode ([`ops`]' resize operator). High enough that
+/// the population explores shapes between the ladder seeds within a
+/// few generations, low enough that same-shape crossover partners stay
+/// common.
+const RESIZE_PROB: f64 = 0.2;
 
 /// Resolve the island count: an explicit request is clamped to
 /// `[1, population]`; 0 = auto — one island per available worker
@@ -303,11 +339,16 @@ fn island_seed(seed: u64, island: usize) -> u64 {
 struct Island<'a> {
     rng: Rng,
     pop: Vec<Candidate>,
-    /// the island's best-so-far; `None` only before the initial fill
+    /// the island's best-so-far; `None` only before the initial fill.
+    /// Multi-objective mode tracks the best-*fidelity* candidate here,
+    /// so the scalar view of the result stays meaningful
     best: Option<Candidate>,
     stale: usize,
     generations_run: usize,
     converged: bool,
+    /// multi-objective stagnation state: the per-objective best seen
+    /// (the ideal point); empty until the first NSGA-II generation
+    ideal: Vec<f64>,
     eval: FitnessEval<'a>,
 }
 
@@ -382,6 +423,139 @@ fn run_island_epoch(
     }
 }
 
+/// One NSGA-II generation body (DESIGN.md §10), run when the
+/// configured objectives are more than `[Fidelity]`. Same scaffolding
+/// as [`run_island_epoch`] — convergence/ψ/deadline checks, one
+/// fitness fill per generation, pure function of the island's RNG
+/// stream — but selection is Pareto-based: crowded binary tournaments
+/// pick parents, same-shape pairs cross over (mixed-shape picks clone
+/// through), offspring take the scalar gene mutation plus a size-axis
+/// resize mutation, and environmental selection keeps the best `φ` of
+/// parents + offspring by (rank, crowding). Stagnation is measured on
+/// the ideal point: no per-objective best improving by
+/// `convergence_eps` for `convergence_patience` generations retires
+/// the island.
+fn run_island_epoch_mo(
+    isl: &mut Island,
+    frame: &Frame,
+    target: u32,
+    cfg: &GenDstConfig,
+    gens: usize,
+    deadline: Option<Deadline>,
+) {
+    let dims = cfg.objectives.len();
+    for _ in 0..gens {
+        if isl.converged {
+            return;
+        }
+        if matches!(cfg.stop, StopRule::Generations) && isl.generations_run >= cfg.generations {
+            return;
+        }
+        // same guarantee as the scalar body: the first generation is
+        // never cancelled by the deadline
+        if isl.generations_run > 0 {
+            if let Some(d) = deadline {
+                if d.expired() {
+                    return;
+                }
+            }
+        }
+        isl.generations_run += 1;
+        // parents are always scored (initial fill / last selection)
+        let parent_objs = isl.eval.fill_objectives(&mut isl.pop, &cfg.objectives);
+        let (rank, crowd) = pareto::rank_and_crowding(&parent_objs);
+        let viol = vec![0.0f64; isl.pop.len()];
+        // (1) offspring via crowded binary tournaments
+        let phi = isl.pop.len();
+        let mut offspring: Vec<Candidate> = Vec::with_capacity(phi);
+        while offspring.len() < phi {
+            let a = pareto::tournament_pick(&mut isl.rng, &rank, &crowd, &viol);
+            let b = pareto::tournament_pick(&mut isl.rng, &rank, &crowd, &viol);
+            // `ops::cross_sets` requires equal chromosome lengths, so
+            // only same-shape parents cross; mixed shapes clone through
+            // and rely on mutation for variation
+            let same_shape = isl.pop[a].rows.len() == isl.pop[b].rows.len()
+                && isl.pop[a].cols.len() == isl.pop[b].cols.len();
+            let (x, y) = if same_shape {
+                ops::crossover_pair(&isl.pop[a], &isl.pop[b], frame, target, cfg.p_rc, &mut isl.rng)
+            } else {
+                (isl.pop[a].clone(), isl.pop[b].clone())
+            };
+            offspring.push(x);
+            if offspring.len() < phi {
+                offspring.push(y);
+            }
+        }
+        // (2) mutation: the scalar gene swap plus the size-axis walk
+        for cand in offspring.iter_mut() {
+            if isl.rng.bool_with(cfg.mutation_prob) {
+                ops::mutate(cand, frame, target, cfg.p_rc, &mut isl.rng);
+            }
+            if isl.rng.bool_with(RESIZE_PROB) {
+                ops::resize_mutate(cand, frame, target, cfg.p_rc, &mut isl.rng);
+            }
+        }
+        // (3) environmental selection over parents + offspring
+        isl.eval.fill_losses(&mut offspring);
+        let mut union: Vec<Candidate> = std::mem::take(&mut isl.pop);
+        union.extend(offspring);
+        let union_objs: Vec<Vec<f64>> = union
+            .iter()
+            .map(|c| isl.eval.objectives_of(c, &cfg.objectives))
+            .collect();
+        let keep = pareto::environmental_select(&union_objs, phi);
+        let mut keep_flag = vec![false; union.len()];
+        for &i in &keep {
+            keep_flag[i] = true;
+        }
+        isl.pop = union
+            .into_iter()
+            .zip(keep_flag)
+            .filter_map(|(c, kept)| kept.then_some(c))
+            .collect();
+
+        // scalar view: keep the best-fidelity candidate for the result
+        let gen_best = pop_best(&isl.pop);
+        if gen_best.loss.unwrap() < isl.best_loss() {
+            isl.best = Some(gen_best.clone());
+        }
+        // ideal-point stagnation (the front analogue of best-loss
+        // patience): any per-objective best improving resets it
+        let mut ideal = vec![f64::INFINITY; dims];
+        for c in &isl.pop {
+            let v = isl.eval.objectives_of(c, &cfg.objectives);
+            for d in 0..dims {
+                ideal[d] = ideal[d].min(v[d]);
+            }
+        }
+        let improved = isl.ideal.is_empty()
+            || ideal
+                .iter()
+                .zip(&isl.ideal)
+                .any(|(new, old)| *new < old - cfg.convergence_eps);
+        if improved {
+            isl.ideal = ideal;
+            isl.stale = 0;
+        } else {
+            isl.stale += 1;
+            if isl.stale >= cfg.convergence_patience {
+                isl.converged = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Clamp the migration head-count below the smallest island
+/// population (ISSUE 8 satellite fix): an over-large `--migration-k`
+/// used to replace an entire receiving island, silently destroying its
+/// diversity. At least one resident candidate now always survives a
+/// migration. Callers clamp once per run; [`migrate`]'s debug_assert
+/// guards the contract.
+fn effective_migration_k(k: usize, min_island_pop: usize) -> usize {
+    k.min(min_island_pop.saturating_sub(1))
+}
+
 /// Ring migration (DESIGN.md §4.6): island `i` clones its `k` best
 /// candidates (ties broken by population position, so the choice is
 /// deterministic) into island `i+1 mod I`, replacing the receiver's
@@ -389,12 +563,18 @@ fn run_island_epoch(
 /// the outcome is independent of island iteration order — and migrants
 /// travel with their cached losses and histogram caches, so arrival
 /// never triggers a rebuild (they keep delta-updating under later
-/// mutations).
+/// mutations). `k` must already be clamped by
+/// [`effective_migration_k`] — a whole-island replacement is a caller
+/// bug.
 fn migrate(islands: &[Mutex<Island>], k: usize) {
     let n = islands.len();
     if n < 2 || k == 0 {
         return;
     }
+    debug_assert!(
+        islands.iter().all(|cell| k < cell.lock().unwrap().pop.len()),
+        "migration_k={k} would replace an entire island — clamp with effective_migration_k"
+    );
     let migrants: Vec<Vec<Candidate>> = islands
         .iter()
         .map(|cell| {
@@ -422,6 +602,74 @@ fn migrate(islands: &[Mutex<Island>], k: usize) {
                 .unwrap()
                 .partial_cmp(&isl.pop[a].loss.unwrap())
                 .unwrap()
+                .then(a.cmp(&b))
+        });
+        for (&slot, m) in order.iter().zip(mig) {
+            isl.pop[slot] = m;
+        }
+    }
+}
+
+/// Front-carrying ring migration (DESIGN.md §10): in multi-objective
+/// mode island `i` sends a crowding-pruned slice of its first front —
+/// most-crowded members first, so the slice spans the front instead of
+/// clustering — and the receiver replaces its worst candidates by
+/// (rank desc, crowding asc, position). Same collect-then-apply
+/// barrier discipline as [`migrate`], so the outcome is independent of
+/// island iteration order; `k` obeys the same
+/// [`effective_migration_k`] contract.
+fn migrate_front(
+    islands: &[Mutex<Island>],
+    objectives: &[Objective],
+    shape: (usize, usize),
+    k: usize,
+) {
+    let n = islands.len();
+    if n < 2 || k == 0 {
+        return;
+    }
+    debug_assert!(
+        islands.iter().all(|cell| k < cell.lock().unwrap().pop.len()),
+        "migration_k={k} would replace an entire island — clamp with effective_migration_k"
+    );
+    let objs_of = |isl: &Island| -> Vec<Vec<f64>> {
+        isl.pop
+            .iter()
+            .map(|c| {
+                pareto::objective_vector(
+                    c.loss.unwrap(),
+                    c.rows.len(),
+                    c.cols.len(),
+                    shape.0,
+                    shape.1,
+                    objectives,
+                )
+            })
+            .collect()
+    };
+    let migrants: Vec<Vec<Candidate>> = islands
+        .iter()
+        .map(|cell| {
+            let isl = cell.lock().unwrap();
+            let objs = objs_of(&isl);
+            let front = pareto::non_dominated(&objs);
+            let crowd = pareto::crowding_distance(&objs, &front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| crowd[b].total_cmp(&crowd[a]).then(front[a].cmp(&front[b])));
+            order.iter().take(k).map(|&w| isl.pop[front[w]].clone()).collect()
+        })
+        .collect();
+    for (from, mig) in migrants.into_iter().enumerate() {
+        let to = (from + 1) % n;
+        let mut isl = islands[to].lock().unwrap();
+        let objs = objs_of(&isl);
+        let (rank, crowd) = pareto::rank_and_crowding(&objs);
+        let mut order: Vec<usize> = (0..isl.pop.len()).collect();
+        // worst first: highest rank, then least crowded, then position
+        order.sort_by(|&a, &b| {
+            rank[b]
+                .cmp(&rank[a])
+                .then(crowd[a].total_cmp(&crowd[b]))
                 .then(a.cmp(&b))
         });
         for (&slot, m) in order.iter().zip(mig) {
@@ -482,11 +730,21 @@ pub fn gen_dst(
             Some(Deadline::after_s(seconds))
         }
     };
+    // `[Fidelity]` routes through the scalar generation body verbatim
+    // (bit-identity property-tested); anything longer runs NSGA-II
+    let scalar = pareto::scalar_mode(&cfg.objectives);
 
     // P_0: φ random candidates split across islands, target pinned
     // (Algorithm 1 line 4). Chromosome sampling is cheap and must stay
     // on each island's own RNG stream; the expensive initial fill runs
-    // concurrently below.
+    // concurrently below. Multi-objective runs seed their population
+    // round-robin across the fig3 size-multiplier ladder, so the front
+    // spans the exact shapes the brute-force sweep used to probe.
+    let ladder = if scalar {
+        Vec::new()
+    } else {
+        pareto::ladder_sizes(n, m, frame.n_rows, frame.n_cols())
+    };
     let base = cfg.population / n_islands;
     let rem = cfg.population % n_islands;
     let islands: Vec<Mutex<Island>> = (0..n_islands)
@@ -494,7 +752,10 @@ pub fn gen_dst(
             let mut rng = Rng::new(island_seed(cfg.seed, i));
             let size = base + usize::from(i < rem);
             let pop: Vec<Candidate> = (0..size)
-                .map(|_| ops::random_candidate(frame, n, m, &mut rng))
+                .map(|j| {
+                    let (cn, cm) = if scalar { (n, m) } else { ladder[j % ladder.len()] };
+                    ops::random_candidate(frame, cn, cm, &mut rng)
+                })
                 .collect();
             let mut eval = FitnessEval::with_f_full(frame, codes, measure, cfg.backend, f_full);
             eval.threads = inner;
@@ -505,6 +766,7 @@ pub fn gen_dst(
                 stale: 0,
                 generations_run: 0,
                 converged: false,
+                ideal: Vec::new(),
                 eval,
             })
         })
@@ -522,7 +784,15 @@ pub fn gen_dst(
 
     // epoch loop: every island advances `migration_interval`
     // generations in lockstep (concurrently), then a barrier and a
-    // deterministic ring migration
+    // deterministic ring migration. The head-count is clamped once —
+    // island sizes are static for the whole run — so a large
+    // `migration_k` can never wipe a receiving island (satellite fix).
+    let min_pop = islands
+        .iter()
+        .map(|cell| cell.lock().unwrap().pop.len())
+        .min()
+        .unwrap_or(0);
+    let mig_k = effective_migration_k(cfg.migration_k, min_pop);
     let interval = cfg.migration_interval.max(1);
     let mut gens_scheduled = 0usize;
     let mut timed_out = false;
@@ -536,7 +806,11 @@ pub fn gen_dst(
         }
         pool::parallel_map(&islands, outer, |_, cell| {
             let mut guard = cell.lock().unwrap();
-            run_island_epoch(&mut guard, frame, target, cfg, gens, deadline);
+            if scalar {
+                run_island_epoch(&mut guard, frame, target, cfg, gens, deadline);
+            } else {
+                run_island_epoch_mo(&mut guard, frame, target, cfg, gens, deadline);
+            }
         });
         gens_scheduled += gens;
 
@@ -553,7 +827,11 @@ pub fn gen_dst(
             timed_out = true; // anytime: return the best found so far
             break;
         }
-        migrate(&islands, cfg.migration_k);
+        if scalar {
+            migrate(&islands, mig_k);
+        } else {
+            migrate_front(&islands, &cfg.objectives, (frame.n_rows, frame.n_cols()), mig_k);
+        }
     }
 
     let mut islands: Vec<Island> = islands
@@ -580,8 +858,23 @@ pub fn gen_dst(
     let mut cols = best.cols.clone();
     rows.sort_unstable();
     cols.sort_unstable();
+    let dst = Dst { rows, cols };
+    let front = if scalar {
+        // one-point front: the scalar winner with its loss as a
+        // 1-vector, so callers can treat every run uniformly
+        vec![ParetoPoint { dst: dst.clone(), objectives: vec![best.loss.unwrap()] }]
+    } else {
+        let mut all: Vec<Candidate> = vec![best.clone()];
+        for isl in islands.iter_mut() {
+            all.append(&mut isl.pop);
+            if let Some(b) = isl.best.take() {
+                all.push(b);
+            }
+        }
+        final_front(&all, (frame.n_rows, frame.n_cols()), &cfg.objectives)
+    };
     GenDstResult {
-        dst: Dst { rows, cols },
+        dst,
         loss: best.loss.unwrap(),
         f_full,
         fitness_evals,
@@ -590,7 +883,55 @@ pub fn gen_dst(
         timed_out,
         setup_s,
         elapsed_s: sw.elapsed_s(),
+        front,
     }
+}
+
+/// The global non-dominated set over every island's survivors plus the
+/// per-island fidelity bests: subsets are canonicalized (indices
+/// sorted), de-duplicated — identical subsets carry identical vectors,
+/// the engine is deterministic — filtered to the front, and ordered by
+/// objective vector (ties by subset indices), so the front is a pure
+/// function of the run.
+fn final_front(
+    all: &[Candidate],
+    shape: (usize, usize),
+    objectives: &[Objective],
+) -> Vec<ParetoPoint> {
+    let mut points: Vec<ParetoPoint> = all
+        .iter()
+        .map(|c| {
+            let mut rows = c.rows.clone();
+            let mut cols = c.cols.clone();
+            rows.sort_unstable();
+            cols.sort_unstable();
+            let objectives = pareto::objective_vector(
+                c.loss.expect("front candidates are scored"),
+                c.rows.len(),
+                c.cols.len(),
+                shape.0,
+                shape.1,
+                objectives,
+            );
+            ParetoPoint { dst: Dst { rows, cols }, objectives }
+        })
+        .collect();
+    points.sort_by(|a, b| a.dst.rows.cmp(&b.dst.rows).then(a.dst.cols.cmp(&b.dst.cols)));
+    points.dedup_by(|a, b| a.dst == b.dst);
+    let objs: Vec<Vec<f64>> = points.iter().map(|p| p.objectives.clone()).collect();
+    let keep = pareto::non_dominated(&objs);
+    let mut front: Vec<ParetoPoint> = keep.into_iter().map(|i| points[i].clone()).collect();
+    front.sort_by(|a, b| {
+        a.objectives
+            .iter()
+            .zip(&b.objectives)
+            .map(|(x, y)| x.total_cmp(y))
+            .find(|o| *o != std::cmp::Ordering::Equal)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.dst.rows.cmp(&b.dst.rows))
+            .then_with(|| a.dst.cols.cmp(&b.dst.cols))
+    });
+    front
 }
 
 #[cfg(test)]
@@ -623,6 +964,13 @@ mod tests {
             ("population", GenDstConfig { population: 101, ..base.clone() }),
             ("mutation_prob", GenDstConfig { mutation_prob: 0.5, ..base.clone() }),
             ("islands", GenDstConfig { islands: 4, ..base.clone() }),
+            (
+                "objectives",
+                GenDstConfig {
+                    objectives: vec![Objective::Fidelity, Objective::SubsetSize],
+                    ..base.clone()
+                },
+            ),
             ("seed", GenDstConfig { seed: 1, ..base.clone() }),
             (
                 "stop",
@@ -821,6 +1169,46 @@ mod tests {
             assert_eq!(island.dst, dst, "islands=1 diverged from the reference");
             assert_eq!(island.loss.to_bits(), loss.to_bits());
             assert_eq!(island.generations_run, gens);
+            // scalar mode reports a one-point front: the winner itself
+            assert_eq!(island.front.len(), 1);
+            assert_eq!(island.front[0].dst, island.dst);
+            assert_eq!(island.front[0].objectives.len(), 1);
+            assert_eq!(island.front[0].objectives[0].to_bits(), island.loss.to_bits());
+        });
+    }
+
+    #[test]
+    fn prop_explicit_fidelity_objective_bit_identical_to_scalar_engine() {
+        // PR 8 acceptance criterion: `objectives = [Fidelity]` routes
+        // through the scalar epoch/migration path, so it is
+        // bit-identical to the default config across seeds, island
+        // shapes, and thread budgets — the scalar engine is a special
+        // case of the multi-objective one, not a fork
+        let (f, codes) = small_frame();
+        check_prop("objectives=[Fidelity] == scalar engine", 6, |rng| {
+            let base = GenDstConfig {
+                generations: 3 + rng.usize_below(5),
+                population: 10 + rng.usize_below(20),
+                islands: 1 + rng.usize_below(4),
+                migration_interval: 1 + rng.usize_below(3),
+                migration_k: 1 + rng.usize_below(3),
+                threads: 1 + rng.usize_below(8),
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let explicit = GenDstConfig {
+                objectives: pareto::parse_objectives("fidelity").unwrap(),
+                ..base.clone()
+            };
+            let n = 5 + rng.usize_below(30);
+            let a = gen_dst(&f, &codes, &EntropyMeasure, n, 3, &base);
+            let b = gen_dst(&f, &codes, &EntropyMeasure, n, 3, &explicit);
+            assert_eq!(a.dst, b.dst, "explicit [Fidelity] diverged from the default");
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.generations_run, b.generations_run);
+            assert_eq!(a.fitness_evals, b.fitness_evals);
+            assert_eq!(a.memo_hits, b.memo_hits);
+            assert_eq!(a.front, b.front);
         });
     }
 
@@ -890,6 +1278,131 @@ mod tests {
             assert_eq!(ordered.loss.to_bits(), interleaved.loss.to_bits());
             assert_eq!(ordered.fitness_evals, interleaved.fitness_evals);
         });
+    }
+
+    #[test]
+    fn effective_migration_k_never_replaces_an_island() {
+        // the clamp leaves at least one resident per island
+        assert_eq!(effective_migration_k(2, 10), 2);
+        assert_eq!(effective_migration_k(10, 10), 9);
+        assert_eq!(effective_migration_k(50, 3), 2);
+        assert_eq!(effective_migration_k(5, 1), 0);
+        assert_eq!(effective_migration_k(5, 0), 0);
+        assert_eq!(effective_migration_k(0, 10), 0);
+    }
+
+    #[test]
+    fn oversized_migration_k_is_clamped_not_destructive() {
+        // regression: a --migration-k larger than the island
+        // population used to replace entire receiving islands; it now
+        // clamps to pop-1 and the run stays valid and deterministic
+        let (f, codes) = small_frame();
+        let cfg = GenDstConfig {
+            generations: 6,
+            population: 9,
+            islands: 3,
+            migration_interval: 1,
+            migration_k: 50,
+            seed: 13,
+            ..Default::default()
+        };
+        let a = gen_dst(&f, &codes, &EntropyMeasure, 20, 3, &cfg);
+        let b = gen_dst(&f, &codes, &EntropyMeasure, 20, 3, &cfg);
+        a.dst.validate(f.n_rows, f.n_cols(), f.target).unwrap();
+        assert_eq!(a.dst, b.dst);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        // and the clamped k behaves exactly like asking for pop-1
+        let equiv = GenDstConfig { migration_k: 2, ..cfg.clone() };
+        let c = gen_dst(&f, &codes, &EntropyMeasure, 20, 3, &equiv);
+        assert_eq!(a.dst, c.dst, "clamp must equal the largest legal k");
+        assert_eq!(a.loss.to_bits(), c.loss.to_bits());
+    }
+
+    fn mo_config(seed: u64) -> GenDstConfig {
+        GenDstConfig {
+            generations: 8,
+            population: 24,
+            islands: 2,
+            migration_interval: 2,
+            objectives: vec![
+                Objective::Fidelity,
+                Objective::SubsetSize,
+                Objective::DownstreamTime,
+            ],
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn multi_objective_front_is_valid_and_mutually_non_dominated() {
+        let (f, codes) = small_frame();
+        let cfg = mo_config(21);
+        let res = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &cfg);
+        assert!(!res.front.is_empty(), "front must never be empty");
+        for p in &res.front {
+            p.dst.validate(f.n_rows, f.n_cols(), f.target).unwrap();
+            assert_eq!(p.objectives.len(), cfg.objectives.len());
+            assert!(p.objectives.iter().all(|v| v.is_finite()));
+        }
+        for (i, a) in res.front.iter().enumerate() {
+            for (j, b) in res.front.iter().enumerate() {
+                if i != j {
+                    assert!(
+                        !pareto::dominates(&a.objectives, &b.objectives),
+                        "front point {i} dominates front point {j}"
+                    );
+                }
+            }
+        }
+        // the scalar view (best fidelity) must sit on the front
+        let best_fid = res
+            .front
+            .iter()
+            .min_by(|a, b| a.objectives[0].total_cmp(&b.objectives[0]))
+            .unwrap();
+        assert_eq!(best_fid.dst, res.dst, "result.dst must be the front's fidelity extreme");
+        assert_eq!(best_fid.objectives[0].to_bits(), res.loss.to_bits());
+    }
+
+    #[test]
+    fn multi_objective_run_is_deterministic_and_thread_invariant() {
+        let (f, codes) = small_frame();
+        let a = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &mo_config(23));
+        let b = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &mo_config(23));
+        assert_eq!(a.front, b.front, "MO front must be deterministic per seed");
+        assert_eq!(a.dst, b.dst);
+        let wide = gen_dst(
+            &f,
+            &codes,
+            &EntropyMeasure,
+            30,
+            3,
+            &GenDstConfig { threads: 8, ..mo_config(23) },
+        );
+        assert_eq!(a.front, wide.front, "MO front must be thread-invariant");
+        assert_eq!(a.dst, wide.dst);
+        assert_eq!(a.loss.to_bits(), wide.loss.to_bits());
+    }
+
+    #[test]
+    fn multi_objective_front_spans_multiple_sizes() {
+        // the ladder-seeded MO run should keep more than one subset
+        // shape alive on the front: a smaller subset with worse
+        // fidelity is mutually non-dominated with a larger, better one
+        let (f, codes) = small_frame();
+        let res = gen_dst(&f, &codes, &EntropyMeasure, 30, 3, &mo_config(27));
+        let mut areas: Vec<usize> = res
+            .front
+            .iter()
+            .map(|p| p.dst.rows.len() * p.dst.cols.len())
+            .collect();
+        areas.sort_unstable();
+        areas.dedup();
+        assert!(
+            areas.len() > 1,
+            "expected a multi-size front, got areas {areas:?}"
+        );
     }
 
     #[test]

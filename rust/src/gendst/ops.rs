@@ -75,6 +75,54 @@ pub(crate) fn mutate(cand: &mut Candidate, frame: &Frame, target: u32, p_rc: f64
     }
 }
 
+/// Resize mutation (multi-objective mode only, DESIGN.md §10): grow or
+/// shrink one chromosome by exactly one gene, so the population can
+/// walk the size axis the `SubsetSize`/`DownstreamTime` objectives
+/// price. Bounds: rows stay in `[2, n]`, columns in `[2, m]`, and the
+/// target column is never removed. Unlike [`mutate`], the fitness
+/// cache is dropped along with the loss — the histogram slot count
+/// changes, so no delta applies.
+pub(crate) fn resize_mutate(
+    cand: &mut Candidate,
+    frame: &Frame,
+    target: u32,
+    p_rc: f64,
+    rng: &mut Rng,
+) {
+    cand.loss = None;
+    cand.cache = None;
+    let grow = rng.bool_with(0.5);
+    if rng.bool_with(p_rc) {
+        if grow && cand.rows.len() < frame.n_rows {
+            loop {
+                let new = rng.u64_below(frame.n_rows as u64) as u32;
+                if !cand.rows.contains(&new) {
+                    cand.rows.push(new);
+                    break;
+                }
+            }
+        } else if !grow && cand.rows.len() > 2 {
+            let slot = rng.usize_below(cand.rows.len());
+            cand.rows.swap_remove(slot);
+        }
+    } else if grow && cand.cols.len() < frame.n_cols() {
+        loop {
+            let new = rng.u64_below(frame.n_cols() as u64) as u32;
+            if !cand.cols.contains(&new) {
+                cand.cols.push(new);
+                break;
+            }
+        }
+    } else if !grow && cand.cols.len() > 2 {
+        // removable = any non-target column; len > 2 guarantees one
+        let non_target: Vec<usize> = (0..cand.cols.len())
+            .filter(|&i| cand.cols[i] != target)
+            .collect();
+        let slot = *rng.choose(&non_target);
+        cand.cols.swap_remove(slot);
+    }
+}
+
 /// Merge `s` genes sampled from `a` with `len-s` sampled from `b`,
 /// de-duplicating and refilling randomly (paper footnote 3), optionally
 /// forcing `pin` to be present.
@@ -270,6 +318,42 @@ mod tests {
             let col_diff = c.cols.iter().filter(|x| !before.cols.contains(x)).count();
             assert_eq!(row_diff + col_diff, 1, "{row_diff}+{col_diff}");
             assert!(c.loss.is_none(), "cache must be invalidated");
+        });
+    }
+
+    #[test]
+    fn prop_resize_mutation_walks_one_step_within_bounds() {
+        let f = frame();
+        let target = f.target as u32;
+        check_prop("resize mutation invariants", 200, |rng| {
+            let n = 2 + rng.usize_below(30);
+            let m = 2 + rng.usize_below(f.n_cols() - 2);
+            let mut c = random_candidate(&f, n, m, rng);
+            let before = (c.rows.len(), c.cols.len());
+            resize_mutate(&mut c, &f, target, 0.5, rng);
+            assert_valid(&c, &f, c.rows.len(), c.cols.len());
+            assert!(c.rows.len() >= 2 && c.cols.len() >= 2, "floor violated");
+            // exactly one axis moved by at most one gene
+            let dr = c.rows.len() as i64 - before.0 as i64;
+            let dc = c.cols.len() as i64 - before.1 as i64;
+            assert!(dr.abs() + dc.abs() <= 1, "moved {dr}/{dc}");
+            // resizing changes the histogram slot count: no stale state
+            assert!(c.loss.is_none() && c.cache.is_none());
+        });
+    }
+
+    #[test]
+    fn resize_mutation_never_removes_target() {
+        let f = frame();
+        let target = f.target as u32;
+        check_prop("target pinned under resize", 100, |rng| {
+            let mut c = random_candidate(&f, 10, 3, rng);
+            for _ in 0..20 {
+                // p_rc = 0 forces the column branch every time
+                resize_mutate(&mut c, &f, target, 0.0, rng);
+                assert!(c.cols.contains(&target));
+                assert!(c.cols.len() >= 2);
+            }
         });
     }
 

@@ -1,0 +1,673 @@
+//! NSGA-II machinery for multi-objective Gen-DST (DESIGN.md §10):
+//! Pareto dominance, fast non-dominated sorting, crowding distance,
+//! crowded binary tournaments with constraint dominance, and the
+//! operating-point selection a caller uses to pick one subset off the
+//! returned front.
+//!
+//! Everything here is deterministic by construction: every ordering is
+//! total, and every tie breaks by candidate position (never by hash
+//! order or an ambiguous float comparison — `f64::total_cmp` where
+//! floats must order). That is what lets the island engine keep its
+//! bit-identical-across-thread-counts contract in multi-objective mode.
+//!
+//! The 2-D `skyline` filter the fig3 aggregation uses lives here too
+//! (moved from `experiments::fig3`, which re-exports it): it is the
+//! same non-dominated front restricted to two maximized coordinates,
+//! and a property test pins that equivalence so the repo carries one
+//! skyline implementation, not two.
+
+use std::cmp::Ordering;
+
+use crate::gendst::Dst;
+use crate::util::rng::Rng;
+
+/// One search objective, all minimized (DESIGN.md §10). `Fidelity` is
+/// the paper's entropy-distance loss `L(r, c)`; the other two are pure
+/// functions of the subset shape, so the fitness engine's loss memo
+/// keys the whole vector (see [`super::fitness::FitnessEval`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// `|F(D[r, c]) - F(D)|` — the scalar engine's only objective
+    Fidelity,
+    /// normalized subset area `n'·m' / (n·m)`
+    SubsetSize,
+    /// predicted downstream AutoML time, normalized to the full frame
+    DownstreamTime,
+}
+
+impl Objective {
+    /// CLI name (`--objectives fidelity,size,time`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Fidelity => "fidelity",
+            Objective::SubsetSize => "size",
+            Objective::DownstreamTime => "time",
+        }
+    }
+
+    /// Inverse of [`Objective::name`].
+    pub fn by_name(s: &str) -> Option<Objective> {
+        match s {
+            "fidelity" => Some(Objective::Fidelity),
+            "size" => Some(Objective::SubsetSize),
+            "time" => Some(Objective::DownstreamTime),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a comma-separated objective list. Order is preserved (it is
+/// the order of every objective vector downstream); duplicates are
+/// rejected, and `fidelity` must be present — a search that cannot see
+/// the measure-preservation loss has nothing to preserve.
+pub fn parse_objectives(spec: &str) -> Result<Vec<Objective>, String> {
+    let mut out: Vec<Objective> = Vec::new();
+    for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let o = Objective::by_name(tok)
+            .ok_or_else(|| format!("unknown objective `{tok}` (fidelity|size|time)"))?;
+        if out.contains(&o) {
+            return Err(format!("duplicate objective `{tok}`"));
+        }
+        out.push(o);
+    }
+    if out.is_empty() {
+        return Err("no objectives given".into());
+    }
+    if !out.contains(&Objective::Fidelity) {
+        return Err("the objective list must include `fidelity`".into());
+    }
+    Ok(out)
+}
+
+/// Parse the comma-separated operating-point weights (one per
+/// objective, aligned with the `--objectives` order).
+pub fn parse_weights(spec: &str) -> Result<Vec<f64>, String> {
+    let mut out: Vec<f64> = Vec::new();
+    for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let w: f64 = tok.parse().map_err(|_| format!("bad weight `{tok}`"))?;
+        if !w.is_finite() || w < 0.0 {
+            return Err(format!("weight `{tok}` must be finite and >= 0"));
+        }
+        out.push(w);
+    }
+    if out.is_empty() {
+        return Err("no weights given".into());
+    }
+    Ok(out)
+}
+
+/// `[Fidelity]` (or empty) routes through the scalar engine verbatim —
+/// the property-tested special case, same pattern as `islands = 1`.
+pub fn scalar_mode(objectives: &[Objective]) -> bool {
+    objectives.is_empty() || objectives == [Objective::Fidelity]
+}
+
+/// One point of a Pareto front: the subset plus its objective vector
+/// (aligned with the run's `objectives` order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    /// the subset, indices sorted
+    pub dst: Dst,
+    /// objective values, one per configured [`Objective`]
+    pub objectives: Vec<f64>,
+}
+
+/// Predicted downstream AutoML cost of an `n × m` frame, in abstract
+/// units: one CV-scored pipeline touches every feature cell once
+/// (`n·(m-1)`) plus an `n·log n` sort/split term. Only the *shape* of
+/// this curve matters — it prices the size axis so the front can trade
+/// fidelity against "how long will step 2 take on this subset"; it is
+/// deliberately not proportional to `n·m` alone, which would duplicate
+/// [`Objective::SubsetSize`].
+pub fn predicted_downstream_cost(n_rows: usize, n_cols: usize) -> f64 {
+    let n = n_rows.max(2) as f64;
+    let m = n_cols.max(2) as f64;
+    n * (m - 1.0) + n * n.log2()
+}
+
+/// Objective vector of a scored candidate (all components minimized).
+/// `SubsetSize` and `DownstreamTime` are pure functions of the subset
+/// shape, so a loss memo hit keys this whole vector by construction.
+pub fn objective_vector(
+    fidelity: f64,
+    sub_rows: usize,
+    sub_cols: usize,
+    n_rows: usize,
+    n_cols: usize,
+    objectives: &[Objective],
+) -> Vec<f64> {
+    objectives
+        .iter()
+        .map(|o| match o {
+            Objective::Fidelity => fidelity,
+            Objective::SubsetSize => {
+                (sub_rows * sub_cols) as f64 / (n_rows.max(1) * n_cols.max(1)) as f64
+            }
+            Objective::DownstreamTime => {
+                predicted_downstream_cost(sub_rows, sub_cols)
+                    / predicted_downstream_cost(n_rows, n_cols)
+            }
+        })
+        .collect()
+}
+
+/// Pareto dominance, minimization: `a` dominates `b` iff `a <= b` in
+/// every component and `a < b` in at least one. Equal vectors dominate
+/// neither way, so duplicates survive side by side — the same
+/// semantics the fig3 skyline always had.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Indices of the non-dominated points (the first front), ascending.
+pub fn non_dominated(objs: &[Vec<f64>]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&i| {
+            !objs
+                .iter()
+                .enumerate()
+                .any(|(j, o)| j != i && dominates(o, &objs[i]))
+        })
+        .collect()
+}
+
+/// Deb's fast non-dominated sort: partition point indices into fronts
+/// (front 0 = non-dominated, front `r+1` = non-dominated once fronts
+/// `0..=r` are removed). Every front lists its members in ascending
+/// index order, so the output is a pure function of the input order.
+pub fn fast_non_dominated_sort(objs: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    let mut dominators = vec![0usize; n];
+    let mut beats: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut current: Vec<usize> = Vec::new();
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            if dominates(&objs[i], &objs[j]) {
+                beats[i].push(j);
+            } else if dominates(&objs[j], &objs[i]) {
+                dominators[i] += 1;
+            }
+        }
+        if dominators[i] == 0 {
+            current.push(i);
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    while !current.is_empty() {
+        let mut next: Vec<usize> = Vec::new();
+        for &i in &current {
+            for &j in &beats[i] {
+                dominators[j] -= 1;
+                if dominators[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        next.sort_unstable();
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distance of each member of `front` (aligned with `front`'s
+/// order): per objective, boundary points get `+inf` and interior
+/// points accumulate the normalized gap to their sorted neighbors.
+/// Sort ties break by point index, so the distances are deterministic
+/// even with duplicated coordinates.
+pub fn crowding_distance(objs: &[Vec<f64>], front: &[usize]) -> Vec<f64> {
+    let len = front.len();
+    let mut dist = vec![0.0f64; len];
+    if len == 0 {
+        return dist;
+    }
+    let dims = objs[front[0]].len();
+    for d in 0..dims {
+        let mut order: Vec<usize> = (0..len).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][d]
+                .total_cmp(&objs[front[b]][d])
+                .then(front[a].cmp(&front[b]))
+        });
+        let lo = objs[front[order[0]]][d];
+        let hi = objs[front[order[len - 1]]][d];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[len - 1]] = f64::INFINITY;
+        if hi - lo <= 0.0 {
+            continue;
+        }
+        for w in 1..len - 1 {
+            if dist[order[w]].is_infinite() {
+                continue;
+            }
+            let gap = objs[front[order[w + 1]]][d] - objs[front[order[w - 1]]][d];
+            dist[order[w]] += gap / (hi - lo);
+        }
+    }
+    dist
+}
+
+/// Per-index `(rank, crowding)` over the whole population: rank is the
+/// front number from [`fast_non_dominated_sort`], crowding is computed
+/// within each front.
+pub fn rank_and_crowding(objs: &[Vec<f64>]) -> (Vec<usize>, Vec<f64>) {
+    let fronts = fast_non_dominated_sort(objs);
+    let mut rank = vec![0usize; objs.len()];
+    let mut crowd = vec![0.0f64; objs.len()];
+    for (r, front) in fronts.iter().enumerate() {
+        let d = crowding_distance(objs, front);
+        for (k, &i) in front.iter().enumerate() {
+            rank[i] = r;
+            crowd[i] = d[k];
+        }
+    }
+    (rank, crowd)
+}
+
+/// NSGA-II's crowded-comparison operator as a strict "is `a` better":
+/// lower rank wins, then larger crowding distance, then lower index —
+/// a total, deterministic order (`a` never beats itself).
+pub fn crowded_better(a: usize, b: usize, rank: &[usize], crowd: &[f64]) -> bool {
+    if rank[a] != rank[b] {
+        return rank[a] < rank[b];
+    }
+    match crowd[a].total_cmp(&crowd[b]) {
+        Ordering::Greater => true,
+        Ordering::Less => false,
+        Ordering::Equal => a < b,
+    }
+}
+
+/// Constraint-dominance comparison (Deb 2002 §VI): any less-infeasible
+/// candidate beats a more-infeasible one; feasible ties fall through to
+/// [`crowded_better`]. Gen-DST candidates are valid by construction
+/// (violation 0), so the engine passes zeros — the machinery is here,
+/// tested, for objective sets with real constraints.
+pub fn constrained_better(
+    a: usize,
+    b: usize,
+    rank: &[usize],
+    crowd: &[f64],
+    violation: &[f64],
+) -> bool {
+    if violation[a] != violation[b] {
+        return violation[a] < violation[b];
+    }
+    crowded_better(a, b, rank, crowd)
+}
+
+/// Binary tournament: draw two indices from the island's RNG stream,
+/// return the constrained-crowded winner. Exactly two RNG draws per
+/// call, always — the fixed consumption pattern the engine's
+/// determinism contract needs.
+pub fn tournament_pick(
+    rng: &mut Rng,
+    rank: &[usize],
+    crowd: &[f64],
+    violation: &[f64],
+) -> usize {
+    let n = rank.len();
+    let a = rng.usize_below(n);
+    let b = rng.usize_below(n);
+    if constrained_better(a, b, rank, crowd, violation) {
+        a
+    } else {
+        b
+    }
+}
+
+/// Environmental selection: keep `keep` indices, filling front by
+/// front; the first front that does not fit is crowding-pruned (most
+/// crowded kept, ties by index) and its survivors re-sorted ascending.
+/// Boundary points carry infinite crowding, so every per-objective
+/// extremum of the cut front always survives.
+pub fn environmental_select(objs: &[Vec<f64>], keep: usize) -> Vec<usize> {
+    let keep = keep.min(objs.len());
+    let mut out: Vec<usize> = Vec::with_capacity(keep);
+    for front in fast_non_dominated_sort(objs) {
+        let room = keep - out.len();
+        if room == 0 {
+            break;
+        }
+        if front.len() <= room {
+            out.extend(front);
+            continue;
+        }
+        let d = crowding_distance(objs, &front);
+        let mut order: Vec<usize> = (0..front.len()).collect();
+        order.sort_by(|&x, &y| d[y].total_cmp(&d[x]).then(front[x].cmp(&front[y])));
+        let mut cut: Vec<usize> = order[..room].iter().map(|&w| front[w]).collect();
+        cut.sort_unstable();
+        out.extend(cut);
+    }
+    out
+}
+
+/// Pick one front point for a caller's operating point: objectives are
+/// min-max normalized over the front, the weighted sum is minimized,
+/// ties resolve to the lowest index. Missing trailing weights count as
+/// 0 (that objective is "don't care"). `None` only for an empty front.
+pub fn select_operating_point(front: &[ParetoPoint], weights: &[f64]) -> Option<usize> {
+    if front.is_empty() {
+        return None;
+    }
+    let dims = front[0].objectives.len();
+    let mut lo = vec![f64::INFINITY; dims];
+    let mut hi = vec![f64::NEG_INFINITY; dims];
+    for p in front {
+        for d in 0..dims {
+            lo[d] = lo[d].min(p.objectives[d]);
+            hi[d] = hi[d].max(p.objectives[d]);
+        }
+    }
+    let score = |p: &ParetoPoint| -> f64 {
+        (0..dims)
+            .map(|d| {
+                let w = weights.get(d).copied().unwrap_or(0.0);
+                let range = hi[d] - lo[d];
+                if range > 0.0 {
+                    w * (p.objectives[d] - lo[d]) / range
+                } else {
+                    0.0
+                }
+            })
+            .sum()
+    };
+    (0..front.len()).min_by(|&a, &b| score(&front[a]).total_cmp(&score(&front[b])))
+}
+
+/// fig3's size-multiplier grid (`(row_mult, col_mult)` on the paper's
+/// default DST size). Multi-objective runs seed their initial
+/// population across exactly these shapes, which is what lets one run
+/// subsume the brute-force sweep the grid used to require.
+pub const SIZE_MULT_LADDER: [(f64, f64); 6] = [
+    (1.0, 1.0),
+    (0.5, 0.6),
+    (0.5, 1.0),
+    (2.0, 1.0),
+    (1.0, 2.0),
+    (0.25, 0.6),
+];
+
+/// Concrete `(rows, cols)` ladder: the multiplier grid applied to a
+/// base size, clamped to the frame, de-duplicated preserving order.
+pub fn ladder_sizes(n: usize, m: usize, n_rows: usize, n_cols: usize) -> Vec<(usize, usize)> {
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    for &(rn, rm) in SIZE_MULT_LADDER.iter() {
+        let ln = ((n as f64 * rn).round() as usize).clamp(2, n_rows.max(2));
+        let lm = ((m as f64 * rm).round() as usize).clamp(2, n_cols.max(2));
+        if !out.contains(&(ln, lm)) {
+            out.push((ln, lm));
+        }
+    }
+    out
+}
+
+/// Keep the points no other point beats on both coordinates, larger =
+/// better (the fig3 Time-Reduction / Accuracy-Ratio plane). Duplicates
+/// all survive. This is [`non_dominated`] restricted to two maximized
+/// coordinates — a property test below pins the equivalence.
+pub fn skyline(points: &[(String, f64, f64)]) -> Vec<(String, f64, f64)> {
+    points
+        .iter()
+        .filter(|(_, tr, ra)| {
+            !points
+                .iter()
+                .any(|(_, tr2, ra2)| tr2 >= tr && ra2 >= ra && (tr2 > tr || ra2 > ra))
+        })
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_prop;
+
+    #[test]
+    fn dominance_is_strict_somewhere_and_never_reflexive() {
+        assert!(dominates(&[1.0, 1.0], &[1.0, 2.0]));
+        assert!(dominates(&[0.5, 1.0], &[1.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal vectors");
+        assert!(!dominates(&[0.0, 2.0], &[1.0, 1.0]), "trade-off");
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn fast_sort_layers_known_fronts() {
+        let objs = vec![
+            vec![1.0, 1.0], // dominates everything
+            vec![2.0, 2.0],
+            vec![1.0, 2.0],
+            vec![2.0, 1.0],
+            vec![3.0, 3.0],
+        ];
+        let fronts = fast_non_dominated_sort(&objs);
+        assert_eq!(fronts, vec![vec![0], vec![2, 3], vec![1], vec![4]]);
+        // duplicates share a front
+        let dup = vec![vec![1.0, 1.0], vec![1.0, 1.0]];
+        assert_eq!(fast_non_dominated_sort(&dup), vec![vec![0, 1]]);
+        assert!(fast_non_dominated_sort(&[]).is_empty());
+    }
+
+    #[test]
+    fn crowding_marks_boundaries_infinite_and_orders_interior() {
+        let objs = vec![
+            vec![0.0, 4.0],
+            vec![1.0, 2.0], // closer to its neighbors than 2 is
+            vec![2.0, 1.5],
+            vec![4.0, 0.0],
+        ];
+        let front = vec![0, 1, 2, 3];
+        let d = crowding_distance(&objs, &front);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[2].is_finite());
+        assert!(d[2] < d[1], "denser point must score lower: {d:?}");
+        // single-member front is a boundary both ways
+        assert!(crowding_distance(&objs, &[1])[0].is_infinite());
+    }
+
+    #[test]
+    fn crowded_and_constrained_comparisons_are_total() {
+        let rank = vec![0, 0, 1];
+        let crowd = vec![f64::INFINITY, 1.0, f64::INFINITY];
+        assert!(crowded_better(0, 1, &rank, &crowd), "crowding breaks rank tie");
+        assert!(crowded_better(0, 2, &rank, &crowd), "rank first");
+        assert!(!crowded_better(0, 0, &rank, &crowd), "never reflexive");
+        // equal rank + crowding: position decides
+        let flat = vec![1.0, 1.0];
+        assert!(crowded_better(0, 1, &[0, 0], &flat));
+        assert!(!crowded_better(1, 0, &[0, 0], &flat));
+        // any violation loses to feasibility regardless of rank
+        let viol = vec![0.5, 0.0, 0.0];
+        assert!(!constrained_better(0, 2, &rank, &crowd, &viol));
+        assert!(constrained_better(2, 0, &rank, &crowd, &viol));
+        assert!(constrained_better(0, 1, &rank, &crowd, &[0.0; 3]), "zeros fall through");
+    }
+
+    #[test]
+    fn environmental_select_fills_fronts_and_keeps_extremes() {
+        let objs = vec![
+            vec![0.0, 3.0], // front 0 boundary
+            vec![1.0, 1.0],
+            vec![3.0, 0.0], // front 0 boundary
+            vec![1.1, 1.1], // dominated by 1
+            vec![0.9, 1.4],
+        ];
+        let all = environmental_select(&objs, 5);
+        assert_eq!(all.len(), 5);
+        // pruning the first front keeps the infinite-crowding boundaries
+        let keep = environmental_select(&objs, 2);
+        assert_eq!(keep, vec![0, 2]);
+        let keep3 = environmental_select(&objs, 3);
+        assert_eq!(keep3.len(), 3);
+        assert!(keep3.contains(&0) && keep3.contains(&2));
+        assert!(environmental_select(&objs, 0).is_empty());
+    }
+
+    #[test]
+    fn prop_environmental_select_is_elitist() {
+        // every selected set contains the whole first front whenever it
+        // fits — NSGA-II's elitism, the invariant the final-front
+        // guarantees in mod.rs lean on
+        check_prop("environmental selection elitism", 40, |rng| {
+            let n = 2 + rng.usize_below(20);
+            let objs: Vec<Vec<f64>> = (0..n)
+                .map(|_| vec![rng.usize_below(6) as f64, rng.usize_below(6) as f64])
+                .collect();
+            let front0 = non_dominated(&objs);
+            // any budget that fits the first front must keep all of it
+            let keep_n = front0.len() + rng.usize_below(n - front0.len() + 1);
+            let keep = environmental_select(&objs, keep_n);
+            assert_eq!(keep.len(), keep_n);
+            for i in &front0 {
+                assert!(keep.contains(i), "front-0 member {i} dropped");
+            }
+        });
+    }
+
+    #[test]
+    fn tournament_draws_exactly_two_and_returns_the_winner() {
+        let rank = vec![0, 1, 1, 0];
+        let crowd = vec![1.0, 1.0, 1.0, 2.0];
+        let viol = vec![0.0; 4];
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let pick = tournament_pick(&mut a, &rank, &crowd, &viol);
+        // reproduce the draws on a twin stream: winner must match
+        let (x, y) = (b.usize_below(4), b.usize_below(4));
+        let want = if constrained_better(x, y, &rank, &crowd, &viol) { x } else { y };
+        assert_eq!(pick, want);
+        assert_eq!(a.next_u64(), b.next_u64(), "exactly two draws consumed");
+    }
+
+    #[test]
+    fn prop_skyline_equals_2d_non_dominated_sort() {
+        // satellite: one skyline implementation — the 2-D maximization
+        // filter is the general minimization front on negated axes
+        check_prop("skyline == NDS front 0 in 2D", 60, |rng| {
+            let n = 1 + rng.usize_below(24);
+            let pts: Vec<(String, f64, f64)> = (0..n)
+                .map(|i| {
+                    let tr = rng.usize_below(5) as f64 * 0.5;
+                    let ra = rng.usize_below(5) as f64 * 0.2;
+                    (format!("p{i}"), tr, ra)
+                })
+                .collect();
+            let objs: Vec<Vec<f64>> = pts.iter().map(|p| vec![-p.1, -p.2]).collect();
+            let keep = non_dominated(&objs);
+            let expect: Vec<(String, f64, f64)> =
+                keep.iter().map(|&i| pts[i].clone()).collect();
+            assert_eq!(skyline(&pts), expect);
+            let fronts = fast_non_dominated_sort(&objs);
+            assert_eq!(fronts.first().cloned().unwrap_or_default(), keep);
+        });
+    }
+
+    #[test]
+    fn objective_vector_components_and_memo_key_property() {
+        let v = objective_vector(
+            0.25,
+            50,
+            4,
+            1000,
+            16,
+            &[Objective::Fidelity, Objective::SubsetSize, Objective::DownstreamTime],
+        );
+        assert_eq!(v[0], 0.25);
+        assert!((v[1] - (50.0 * 4.0) / (1000.0 * 16.0)).abs() < 1e-12);
+        assert!(v[2] > 0.0 && v[2] < 1.0);
+        // same shape + same loss => same vector (what lets the loss
+        // memo key the whole vector)
+        let w = objective_vector(
+            0.25,
+            50,
+            4,
+            1000,
+            16,
+            &[Objective::Fidelity, Objective::SubsetSize, Objective::DownstreamTime],
+        );
+        assert_eq!(v, w);
+        // cost curve grows in both axes
+        assert!(predicted_downstream_cost(100, 8) < predicted_downstream_cost(200, 8));
+        assert!(predicted_downstream_cost(100, 8) < predicted_downstream_cost(100, 9));
+    }
+
+    #[test]
+    fn operating_point_selection_is_deterministic_and_weighted() {
+        let p = |o: Vec<f64>| ParetoPoint {
+            dst: Dst { rows: vec![0], cols: vec![0, 1] },
+            objectives: o,
+        };
+        let front = vec![
+            p(vec![0.1, 0.9]), // best fidelity, worst size
+            p(vec![0.5, 0.5]),
+            p(vec![0.9, 0.1]), // worst fidelity, best size
+        ];
+        assert_eq!(select_operating_point(&front, &[1.0, 0.0]), Some(0));
+        assert_eq!(select_operating_point(&front, &[0.0, 1.0]), Some(2));
+        assert_eq!(select_operating_point(&front, &[1.0, 1.0]), Some(1));
+        // missing trailing weights are "don't care"; ties -> lowest index
+        assert_eq!(select_operating_point(&front, &[0.0]), Some(0));
+        assert_eq!(select_operating_point(&[], &[1.0]), None);
+    }
+
+    #[test]
+    fn objective_parsing_round_trips_and_rejects_garbage() {
+        assert_eq!(
+            parse_objectives("fidelity,size,time").unwrap(),
+            vec![Objective::Fidelity, Objective::SubsetSize, Objective::DownstreamTime]
+        );
+        assert_eq!(parse_objectives(" fidelity ").unwrap(), vec![Objective::Fidelity]);
+        assert!(parse_objectives("size,time").is_err(), "fidelity required");
+        assert!(parse_objectives("fidelity,fidelity").is_err(), "duplicate");
+        assert!(parse_objectives("bogus").is_err());
+        assert!(parse_objectives("").is_err());
+        for o in [Objective::Fidelity, Objective::SubsetSize, Objective::DownstreamTime] {
+            assert_eq!(Objective::by_name(o.name()), Some(o));
+        }
+        assert_eq!(parse_weights("0.7, 0.2,0.1").unwrap(), vec![0.7, 0.2, 0.1]);
+        assert!(parse_weights("-1").is_err());
+        assert!(parse_weights("x").is_err());
+        assert!(parse_weights("").is_err());
+    }
+
+    #[test]
+    fn ladder_clamps_and_dedups() {
+        let sizes = ladder_sizes(28, 5, 765, 18);
+        assert_eq!(sizes.len(), 6, "no collisions at this base: {sizes:?}");
+        for &(n, m) in &sizes {
+            assert!((2..=765).contains(&n) && (2..=18).contains(&m));
+        }
+        // clamping cols to 5 collapses (1.0, 2.0) into the default size
+        assert_eq!(ladder_sizes(28, 5, 765, 5).len(), 5);
+        assert_eq!(sizes[0], (28, 5), "default size leads the ladder");
+        // a tiny frame collapses the ladder but never below the floor
+        let tiny = ladder_sizes(2, 2, 4, 3);
+        assert!(!tiny.is_empty());
+        for &(n, m) in &tiny {
+            assert!(n >= 2 && m >= 2);
+        }
+    }
+
+    #[test]
+    fn scalar_mode_is_exactly_the_fidelity_singleton() {
+        assert!(scalar_mode(&[]));
+        assert!(scalar_mode(&[Objective::Fidelity]));
+        assert!(!scalar_mode(&[Objective::Fidelity, Objective::SubsetSize]));
+        assert!(!scalar_mode(&[Objective::SubsetSize]));
+    }
+}

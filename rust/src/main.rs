@@ -7,6 +7,8 @@
 //!   automl   --dataset D1 [...]   run Full-AutoML
 //!   run      --dataset D1 --strategy gendst [...]   one SubStrat flow
 //!   exp      table4|fig2|fig3|fig4|fig5|all [...]   reproduce paper artifacts
+//!            (`exp fig3 --skyline [--dry-run]` = one multi-objective
+//!            run whose Pareto front replaces the multiplier sweep)
 //!   bench    [all|cells|micro|<suite>,...] [...]    benchmark trajectory
 //!   lint     [--paths a,b] [--json]   static analysis over the repo sources
 //!
@@ -20,8 +22,15 @@
 //! Common flags: --scale 0.05 --reps 3 --evals 16 --searchers smbo,gp
 //!               --datasets D1,D2 --out results --threads N --seed S
 //!
+//! Multi-objective search (DESIGN.md §10): `--objectives
+//! fidelity,size,time` switches Gen-DST to the NSGA-II engine (the
+//! default `fidelity` stays bit-identical to the scalar path);
+//! `--operating-point w1,w2[,w3]` re-selects the deployed subset from
+//! the returned Pareto front by weighted objective score. Both feed
+//! the exp-v3 fingerprint, so journals re-key when they change.
+//!
 //! Bench trajectory (DESIGN.md §5.4): `bench` expands the named suites
-//! (`substrat bench` alone = all nine) and writes one machine-readable
+//! (`substrat bench` alone = all ten) and writes one machine-readable
 //! `BENCH_<n>.json` under `--out` — numbering is monotone and never
 //! clobbers an earlier run. Defaults to the quick sweep shape the old
 //! bench binaries used; `--full` starts from the `exp` defaults
@@ -64,7 +73,7 @@ use substrat::data::{registry, CodeMatrix, DataSource, Frame};
 use substrat::experiments::{
     bench, charged_time_s, fig2, fig3, fig4, fig5, table4, ExpConfig, TimingMode,
 };
-use substrat::gendst::{self, GenDstConfig};
+use substrat::gendst::{self, pareto, GenDstConfig};
 use substrat::measures::{self, entropy::EntropyMeasure};
 use substrat::runtime::{self, entropy_exec::EntropyExec};
 use substrat::substrat::{run_substrat, SubStratConfig};
@@ -109,6 +118,18 @@ fn exp_config_with(args: &Args, defaults: &ExpConfig) -> ExpConfig {
         timing: TimingMode::by_name(&args.str_or("timing", defaults.timing.name())),
         journal: defaults.journal && !args.flag("no-journal"),
         seed: args.u64_or("seed", defaults.seed),
+        objectives: match args.str_opt("objectives") {
+            Some(spec) => pareto::parse_objectives(spec)
+                .unwrap_or_else(|e| panic!("--objectives: {e}")),
+            None => defaults.objectives.clone(),
+        },
+        operating_point: match args.str_opt("operating-point") {
+            Some(spec) => Some(
+                pareto::parse_weights(spec)
+                    .unwrap_or_else(|e| panic!("--operating-point: {e}")),
+            ),
+            None => defaults.operating_point.clone(),
+        },
     }
 }
 
@@ -284,10 +305,16 @@ fn cmd_run(args: &Args) {
     let strategy_name = args.str_or("strategy", "gendst");
     let (_symbol, f, codes) = load_named_dataset(args, true);
     let codes = codes.expect("codes requested");
-    let strategy = baselines::by_name_with(
+    let objectives = match args.str_opt("objectives") {
+        Some(spec) => pareto::parse_objectives(spec)
+            .unwrap_or_else(|e| panic!("--objectives: {e}")),
+        None => vec![pareto::Objective::Fidelity],
+    };
+    let strategy = baselines::by_name_configured(
         &strategy_name,
         args.usize_or("threads", 0),
         args.usize_or("islands", 1),
+        &objectives,
     );
     let searcher = SearcherKind::by_name(&args.str_or("searcher", "smbo"));
     let automl = AutoMlConfig::new(searcher, args.usize_or("evals", 16), args.u64_or("seed", 0));
@@ -295,6 +322,10 @@ fn cmd_run(args: &Args) {
         fine_tune: !args.flag("no-fine-tune"),
         fine_tune_frac: args.f64_or("ft-frac", 0.15),
         seed: args.u64_or("seed", 0),
+        operating_point: args.str_opt("operating-point").map(|spec| {
+            pareto::parse_weights(spec)
+                .unwrap_or_else(|e| panic!("--operating-point: {e}"))
+        }),
         ..Default::default()
     };
     let run = run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &cfg);
@@ -348,7 +379,18 @@ fn cmd_exp(args: &Args) {
             fig2::run(&cfg);
         }
         "fig3" => {
-            fig3::run(&cfg);
+            if args.flag("skyline") {
+                // one multi-objective run per (dataset, rep); dry mode
+                // prints the validated bench-v1 records it expanded to
+                let t = fig3::run_skyline(&cfg, args.flag("dry-run"));
+                if args.flag("dry-run") {
+                    for row in &t.rows {
+                        println!("{}", row[0]);
+                    }
+                }
+            } else {
+                fig3::run(&cfg);
+            }
         }
         "fig4" => {
             fig4::run(&cfg);

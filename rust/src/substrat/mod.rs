@@ -18,6 +18,7 @@ use crate::automl::{
 use crate::baselines::{StrategyContext, StrategyOutcome, SubsetStrategy};
 use crate::data::{CodeMatrix, Frame};
 use crate::gendst::default_dst_size;
+use crate::gendst::pareto;
 use crate::measures::DatasetMeasure;
 use crate::util::timer::Stopwatch;
 
@@ -30,6 +31,12 @@ pub struct SubStratConfig {
     pub fine_tune: bool,
     /// fine-tune budget as a fraction of the full AutoML eval budget
     pub fine_tune_frac: f64,
+    /// per-objective weights selecting the operating point on the
+    /// strategy's Pareto front (DESIGN.md §10). `None` — or a strategy
+    /// with no front — keeps the strategy's own pick; a scalar Gen-DST
+    /// run reports its winner as a one-point front, so selection is a
+    /// no-op there by construction.
+    pub operating_point: Option<Vec<f64>>,
     pub seed: u64,
 }
 
@@ -39,6 +46,7 @@ impl Default for SubStratConfig {
             dst_size: None,
             fine_tune: true,
             fine_tune_frac: 0.15,
+            operating_point: None,
             seed: 0,
         }
     }
@@ -95,7 +103,16 @@ pub fn run_substrat(
         m,
         seed: cfg.seed,
     };
-    let outcome = strategy.find(&ctx);
+    let mut outcome = strategy.find(&ctx);
+    // step 1b: a caller-supplied operating point re-selects the subset
+    // from the strategy's front (one multi-objective search serves any
+    // number of operating points; the fidelity-only front is a single
+    // point, so the scalar flow is untouched)
+    if let Some(weights) = &cfg.operating_point {
+        if let Some(i) = pareto::select_operating_point(&outcome.front, weights) {
+            outcome.dst = outcome.front[i].dst.clone();
+        }
+    }
     let subset = frame.subset(&outcome.dst.rows, &outcome.dst.cols);
 
     // one evaluation engine spans steps 2 and 3. Its memo is keyed by
@@ -340,6 +357,66 @@ mod tests {
         let run = run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &cfg);
         assert_eq!(run.outcome.dst.rows.len(), 25);
         assert_eq!(run.outcome.dst.cols.len(), 3);
+    }
+
+    #[test]
+    fn operating_point_reselects_subset_from_the_front() {
+        use crate::gendst::pareto::Objective;
+        let (f, codes) = setup();
+        let objs = [
+            Objective::Fidelity,
+            Objective::SubsetSize,
+            Objective::DownstreamTime,
+        ];
+        let strategy = baselines::by_name_configured("gendst", 1, 1, &objs);
+        let automl = AutoMlConfig::new(SearcherKind::Random, 3, 5);
+        // a pure size weight (missing trailing weights default to 0)
+        // must pick the smallest subset on the front — and that subset,
+        // not the fidelity winner, is what the AutoML step sees
+        let cfg = SubStratConfig {
+            fine_tune: false,
+            operating_point: Some(vec![0.0, 1.0]),
+            ..Default::default()
+        };
+        let run = run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &cfg);
+        assert!(!run.outcome.front.is_empty(), "MO gendst must report a front");
+        let area = |d: &crate::gendst::Dst| d.rows.len() * d.cols.len();
+        let min_area = run.outcome.front.iter().map(|p| area(&p.dst)).min().unwrap();
+        assert_eq!(area(&run.outcome.dst), min_area, "size weight must pick the smallest");
+        assert!(
+            run.outcome.front.iter().any(|p| p.dst == run.outcome.dst),
+            "the selected subset must be a front member"
+        );
+    }
+
+    #[test]
+    fn operating_point_is_a_no_op_without_a_real_front() {
+        // scalar Gen-DST reports a one-point front (selection picks that
+        // same point); frontless baselines keep their own dst
+        let (f, codes) = setup();
+        let automl = AutoMlConfig::new(SearcherKind::Random, 3, 5);
+        for name in ["gendst", "mc-100"] {
+            let strategy = baselines::by_name(name);
+            let plain = SubStratConfig {
+                fine_tune: false,
+                ..Default::default()
+            };
+            let weighted = SubStratConfig {
+                operating_point: Some(vec![1.0, 2.0]),
+                ..plain.clone()
+            };
+            let a =
+                run_substrat(&f, &codes, &EntropyMeasure, strategy.as_ref(), &automl, &plain);
+            let b = run_substrat(
+                &f,
+                &codes,
+                &EntropyMeasure,
+                strategy.as_ref(),
+                &automl,
+                &weighted,
+            );
+            assert_eq!(a.outcome.dst, b.outcome.dst, "{name}");
+        }
     }
 
     #[test]

@@ -879,16 +879,24 @@ def self_test():
                  "rng-discipline", True)
     ok &= expect("rng via util", {LIB: "pub fn f() {}\n"}, "rng-discipline", False)
     # fp-complete: the synthetic "field added to ExpConfig but not to the
-    # fingerprint" mutation from the acceptance criteria
+    # fingerprint" mutation from the acceptance criteria. The fixture
+    # mirrors the PR-8 field shapes (Vec-typed objectives, Option-typed
+    # operating point) so generic field types are known to parse.
     fp_ok = ("pub struct ExpConfig {\n    pub scale: f64,\n"
+             "    pub objectives: Vec<Objective>,\n"
+             "    pub operating_point: Option<Vec<f64>>,\n"
              "    // fp-exempt: speed only, never changes results\n"
              "    pub threads: usize,\n}\n"
              "pub fn config_fingerprint(cfg: &ExpConfig) -> String {\n"
-             "    format!(\"{}\", cfg.scale)\n}\n")
+             "    format!(\"{}|{:?}|{:?}\", cfg.scale, cfg.objectives,"
+             " cfg.operating_point)\n}\n")
     ok &= expect("fp complete", {LIB: fp_ok}, "fp-complete", False)
     fp_bad = fp_ok.replace("    pub scale: f64,\n",
                            "    pub scale: f64,\n    pub new_knob: bool,\n")
     ok &= expect("fp mutation caught", {LIB: fp_bad}, "fp-complete", True)
+    fp_opt = fp_ok.replace(" cfg.operating_point)", ")")
+    assert fp_opt != fp_ok
+    ok &= expect("fp option field caught", {LIB: fp_opt}, "fp-complete", True)
     print("self-test OK" if ok else "self-test FAILED")
     return 0 if ok else 2
 
