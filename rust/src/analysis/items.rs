@@ -1,13 +1,16 @@
 //! Crate model for the static-analysis pass (DESIGN.md §9): parsed use
-//! declarations, the module tree inferred from file paths, and the
+//! declarations, the module tree inferred from file paths, the
 //! per-module pub-item index that `use-resolve` checks crate-rooted
-//! paths against. Mirrors the corresponding section of
+//! paths against, and the crate-wide *signature index* (DESIGN.md §11)
+//! the sigcheck tier resolves call sites, struct literals and
+//! `Type::Variant` paths against. Mirrors the corresponding section of
 //! `tools/srclint.py` — edit both together.
 
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::analysis::lexer::{
-    brace_depths, cfg_test_lines, is_ident_byte, line_of, strip_source, tokens,
+    brace_depths, cfg_test_lines, find_bounded, is_ident_byte, line_of, match_brace,
+    strip_source, tokens,
 };
 
 /// One leaf of a use tree: `a::{b, c as d}` expands to two leaves.
@@ -440,6 +443,767 @@ pub fn next_nonws(code: &str, from: usize) -> Option<(usize, u8)> {
         j += 1;
     }
     None
+}
+
+// ------------------------------------------------------------------
+// Signature-shaped scanning (DESIGN.md §11): the no-regex substrate the
+// signature index and the sigcheck rules are built on. Every helper
+// mirrors its namesake in tools/srclint.py — edit both together.
+
+/// First index ≥ `i` whose byte is not ASCII whitespace (`len` if none).
+pub fn skip_ws(code: &str, mut i: usize) -> usize {
+    let bytes = code.as_bytes();
+    while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// 1-based column of byte offset `idx`.
+pub fn col_of(code: &str, idx: usize) -> usize {
+    match code[..idx].rfind('\n') {
+        Some(p) => idx - p,
+        None => idx + 1,
+    }
+}
+
+/// The (second-last, last) non-whitespace bytes before index `i`
+/// (`0` pads when the prefix runs out).
+pub fn prev_nonws(code: &str, i: usize) -> (u8, u8) {
+    let bytes = code.as_bytes();
+    let mut j = i;
+    while j > 0 && bytes[j - 1].is_ascii_whitespace() {
+        j -= 1;
+    }
+    if j == 0 {
+        return (0, 0);
+    }
+    let last = bytes[j - 1];
+    let mut k = j - 1;
+    while k > 0 && bytes[k - 1].is_ascii_whitespace() {
+        k -= 1;
+    }
+    let second = if k > 0 { bytes[k - 1] } else { 0 };
+    (second, last)
+}
+
+/// The identifier token ending directly before index `i` (whitespace
+/// between the token and `i` is allowed). Empty when none.
+pub fn prev_token(code: &str, i: usize) -> &str {
+    let bytes = code.as_bytes();
+    let mut j = i;
+    while j > 0 && bytes[j - 1].is_ascii_whitespace() {
+        j -= 1;
+    }
+    let end = j;
+    while j > 0 && (bytes[j - 1].is_ascii_alphanumeric() || bytes[j - 1] == b'_') {
+        j -= 1;
+    }
+    &code[j..end]
+}
+
+/// The leading `[A-Za-z_]\w*` identifier of `s`, if any.
+pub fn leading_ident(s: &str) -> Option<&str> {
+    let bytes = s.as_bytes();
+    if bytes.is_empty() || !(bytes[0].is_ascii_alphabetic() || bytes[0] == b'_') {
+        return None;
+    }
+    let mut e = 1;
+    while e < bytes.len() && (bytes[e].is_ascii_alphanumeric() || bytes[e] == b'_') {
+        e += 1;
+    }
+    Some(&s[..e])
+}
+
+fn ident_at(code: &str, i: usize) -> bool {
+    let bytes = code.as_bytes();
+    i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+}
+
+/// `code[i] == '<'` in type position: index one past the matching `>`
+/// (every `<` opens; the `>` of `->` and `=>` never closes).
+pub fn skip_angles(code: &str, mut i: usize) -> usize {
+    let bytes = code.as_bytes();
+    let mut d: i64 = 0;
+    while i < bytes.len() {
+        let c = bytes[i];
+        if c == b'<' {
+            d += 1;
+        } else if c == b'>' && i > 0 && !matches!(bytes[i - 1], b'-' | b'=') {
+            d -= 1;
+            if d == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    bytes.len()
+}
+
+/// Split the delimited span starting at `code[open_idx]` (one of `([{`)
+/// into its top-level comma-separated parts; `None` when the span cannot
+/// be confidently parsed. In expr mode `<` only opens an angle group
+/// after `::` (turbofish) and a `|` at the start of a part (or after
+/// `move`) begins a closure; in type mode every `<` opens a group.
+pub fn split_delim(code: &str, open_idx: usize, expr_mode: bool) -> Option<(Vec<String>, usize)> {
+    let bytes = code.as_bytes();
+    let close = match bytes[open_idx] {
+        b'(' => b')',
+        b'{' => b'}',
+        _ => b']',
+    };
+    let (mut par, mut brk, mut brc, mut ang) = (0i64, 0i64, 0i64, 0i64);
+    let mut parts: Vec<String> = Vec::new();
+    let mut cur: Vec<u8> = Vec::new();
+    let mut i = open_idx + 1;
+    let n = bytes.len();
+    while i < n {
+        let c = bytes[i];
+        if par == 0 && brk == 0 && brc == 0 && ang == 0 && c == close {
+            parts.push(String::from_utf8_lossy(&cur).into_owned());
+            return Some((parts, i));
+        }
+        match c {
+            b'(' => par += 1,
+            b')' => {
+                par -= 1;
+                if par < 0 {
+                    return None;
+                }
+            }
+            b'[' => brk += 1,
+            b']' => {
+                brk -= 1;
+                if brk < 0 {
+                    return None;
+                }
+            }
+            b'{' => brc += 1,
+            b'}' => {
+                brc -= 1;
+                if brc < 0 {
+                    return None;
+                }
+            }
+            b'<' => {
+                if !expr_mode || ang > 0 || (i >= 2 && &bytes[i - 2..i] == b"::") {
+                    ang += 1;
+                }
+            }
+            b'>' => {
+                if ang > 0 && !matches!(bytes[i - 1], b'-' | b'=') {
+                    ang -= 1;
+                }
+            }
+            b',' if par == 0 && brk == 0 && brc == 0 && ang == 0 => {
+                parts.push(String::from_utf8_lossy(&cur).into_owned());
+                cur.clear();
+                i += 1;
+                continue;
+            }
+            b'|' if expr_mode && par == 0 && brk == 0 && brc == 0 && ang == 0 => {
+                let head = String::from_utf8_lossy(&cur).trim().to_string();
+                if head.is_empty() || head == "move" {
+                    let mut j = i + 1;
+                    let mut d2: i64 = 0;
+                    while j < n {
+                        match bytes[j] {
+                            b'(' | b'[' => d2 += 1,
+                            b')' | b']' => d2 -= 1,
+                            b'|' if d2 == 0 => break,
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    if j >= n {
+                        return None;
+                    }
+                    cur.extend_from_slice(&bytes[i..j + 1]);
+                    i = j + 1;
+                    continue;
+                }
+            }
+            _ => {}
+        }
+        cur.push(c);
+        i += 1;
+    }
+    None
+}
+
+/// Argument count of the call/ctor/pattern span at `code[open_idx]`
+/// (`(`), or `None` when unparseable or a `..` rest pattern is present.
+pub fn count_call_args(code: &str, open_idx: usize) -> Option<usize> {
+    let (parts, _) = split_delim(code, open_idx, true)?;
+    let trimmed: Vec<&str> = parts.iter().map(|p| p.trim()).collect();
+    if trimmed.iter().any(|&p| p == "..") {
+        return None;
+    }
+    Some(trimmed.iter().filter(|p| !p.is_empty()).count())
+}
+
+/// Drop leading `#[…]` / `#![…]` attributes (bracket-balanced).
+pub fn strip_attrs(s: &str) -> &str {
+    let mut s = s.trim_start();
+    while s.starts_with("#[") || s.starts_with("#![") {
+        let j = s.find('[').unwrap_or(0);
+        let bytes = s.as_bytes();
+        let mut d: i64 = 0;
+        let mut k = j;
+        let mut closed = false;
+        while k < bytes.len() {
+            if bytes[k] == b'[' {
+                d += 1;
+            } else if bytes[k] == b']' {
+                d -= 1;
+                if d == 0 {
+                    closed = true;
+                    break;
+                }
+            }
+            k += 1;
+        }
+        if !closed {
+            return s;
+        }
+        s = s[k + 1..].trim_start();
+    }
+    s
+}
+
+/// The parameter is a `self` receiver (`self`, `&self`, `&mut self`,
+/// `&'a mut self`, `self: Rc<Self>`, …).
+fn is_self_param(p: &str) -> bool {
+    let mut p = p.trim_start_matches('&').trim();
+    if p.starts_with('\'') {
+        p = match p.find(' ') {
+            Some(sp) => p[sp..].trim(),
+            None => "",
+        };
+    }
+    if let Some(rest) = p.strip_prefix("mut") {
+        if rest.starts_with(' ') || rest.starts_with('\t') {
+            p = rest.trim_start();
+        }
+    }
+    p == "self"
+        || p.strip_prefix("self")
+            .map(|r| r.trim_start().starts_with(':'))
+            .unwrap_or(false)
+}
+
+/// (arity excluding any `self` receiver, takes a `self` receiver)
+pub type FnSig = (usize, bool);
+
+/// Parse an `fn` signature whose name ends at `name_end` (generics may
+/// follow). `None` when unparseable.
+pub fn parse_fn_sig(code: &str, name_end: usize) -> Option<FnSig> {
+    let bytes = code.as_bytes();
+    let mut i = skip_ws(code, name_end);
+    if i < bytes.len() && bytes[i] == b'<' {
+        i = skip_ws(code, skip_angles(code, i));
+    }
+    if i >= bytes.len() || bytes[i] != b'(' {
+        return None;
+    }
+    let (raw, _) = split_delim(code, i, false)?;
+    let parts: Vec<&str> = raw
+        .iter()
+        .map(|p| strip_attrs(p.trim()))
+        .filter(|p| !p.is_empty())
+        .collect();
+    let has_self = parts.first().map(|p| is_self_param(p)).unwrap_or(false);
+    Some((parts.len() - usize::from(has_self), has_self))
+}
+
+/// Shape of a struct declaration or of one enum variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shape {
+    /// named fields, in declaration order
+    Named(Vec<String>),
+    /// tuple form with this many fields
+    Tuple(usize),
+    Unit,
+}
+
+/// The declared field name of one `a: T` / `pub a: T` struct-body part.
+fn field_decl_name(p: &str) -> Option<String> {
+    fn bare(s: &str) -> Option<String> {
+        let name = leading_ident(s)?;
+        let rest = s[name.len()..].trim_start();
+        if rest.starts_with(':') {
+            Some(name.to_string())
+        } else {
+            None
+        }
+    }
+    if let Some(rest) = p.strip_prefix("pub") {
+        let mut r = rest;
+        let mut ok = true;
+        if r.starts_with('(') {
+            match r.find(')') {
+                Some(c) => r = &r[c + 1..],
+                None => ok = false,
+            }
+        }
+        if ok && r.starts_with(|c: char| c.is_whitespace()) {
+            if let Some(name) = bare(r.trim_start()) {
+                return Some(name);
+            }
+        }
+    }
+    bare(p)
+}
+
+/// Shape of a struct decl whose name ends at `name_end`, or `None`.
+pub fn parse_struct_shape(code: &str, name_end: usize) -> Option<Shape> {
+    let bytes = code.as_bytes();
+    let mut i = skip_ws(code, name_end);
+    if i < bytes.len() && bytes[i] == b'<' {
+        i = skip_ws(code, skip_angles(code, i));
+    }
+    if i >= bytes.len() {
+        return None;
+    }
+    if bytes[i] == b';' {
+        return Some(Shape::Unit);
+    }
+    if bytes[i] == b'(' {
+        let (parts, _) = split_delim(code, i, false)?;
+        return Some(Shape::Tuple(parts.iter().filter(|p| !p.trim().is_empty()).count()));
+    }
+    if code[i..].starts_with("where") && !ident_at(code, i + 5) {
+        i = i + code[i..].find('{')?;
+    }
+    if i < bytes.len() && bytes[i] == b'{' {
+        let (parts, _) = split_delim(code, i, false)?;
+        let mut fields = Vec::new();
+        for p in &parts {
+            let p = strip_attrs(p.trim());
+            if p.is_empty() {
+                continue;
+            }
+            fields.push(field_decl_name(p)?);
+        }
+        return Some(Shape::Named(fields));
+    }
+    None
+}
+
+/// `{variant → shape}` for an enum decl whose name ends at `name_end`,
+/// or `None`. Shapes as in [`parse_struct_shape`].
+pub fn parse_enum_variants(code: &str, name_end: usize) -> Option<BTreeMap<String, Shape>> {
+    let bytes = code.as_bytes();
+    let mut i = skip_ws(code, name_end);
+    if i < bytes.len() && bytes[i] == b'<' {
+        i = skip_ws(code, skip_angles(code, i));
+    }
+    if code[i..].starts_with("where") && !ident_at(code, i + 5) {
+        i = i + code[i..].find('{')?;
+    }
+    if i >= bytes.len() || bytes[i] != b'{' {
+        return None;
+    }
+    let (parts, _) = split_delim(code, i, false)?;
+    let mut variants = BTreeMap::new();
+    for p in &parts {
+        let p = strip_attrs(p.trim());
+        if p.is_empty() {
+            continue;
+        }
+        let name = leading_ident(p)?;
+        let rest = p[name.len()..].trim_start();
+        if rest.is_empty() || rest.starts_with('=') {
+            variants.insert(name.to_string(), Shape::Unit);
+        } else if rest.starts_with('(') {
+            let (sub, _) = split_delim(rest, 0, false)?;
+            let k = sub.iter().filter(|q| !q.trim().is_empty()).count();
+            variants.insert(name.to_string(), Shape::Tuple(k));
+        } else if rest.starts_with('{') {
+            let (sub, _) = split_delim(rest, 0, false)?;
+            let mut fields = Vec::new();
+            for q in &sub {
+                let q = strip_attrs(q.trim());
+                if q.is_empty() {
+                    continue;
+                }
+                let f = leading_ident(q)?;
+                if !q[f.len()..].trim_start().starts_with(':') {
+                    return None;
+                }
+                fields.push(f.to_string());
+            }
+            variants.insert(name.to_string(), Shape::Named(fields));
+        } else {
+            return None;
+        }
+    }
+    Some(variants)
+}
+
+/// The last path segment heading a type expression (`crate::a::B<T>` →
+/// `B`), mirroring srclint's TYPE_HEAD_RE including its backtracking:
+/// a `::` not followed by an identifier (turbofish) stops the walk.
+fn type_head(tgt: &str) -> Option<String> {
+    let mut s = tgt;
+    if let Some(rest) = s.strip_prefix("dyn") {
+        if rest.starts_with(|c: char| c.is_whitespace()) {
+            s = rest.trim_start();
+        }
+    }
+    let mut name = leading_ident(s)?;
+    loop {
+        match s[name.len()..].strip_prefix("::").and_then(leading_ident) {
+            Some(next) => {
+                s = &s[name.len() + 2..];
+                name = next;
+            }
+            None => return Some(name.to_string()),
+        }
+    }
+}
+
+/// One impl block: (target type name, is a trait impl, body `{` offset,
+/// body end offset). The target name is the last path segment of the
+/// implemented-on type with generics stripped; `None` when headless
+/// (e.g. `impl<T> Trait for &T`). `impl Trait` in *type* position is
+/// skipped by the preceding-char guard.
+pub type ImplBlock = (Option<String>, bool, usize, usize);
+
+/// All impl blocks of a stripped file.
+pub fn impl_blocks(code: &str) -> Vec<ImplBlock> {
+    let mut out = Vec::new();
+    for pos in find_bounded(code, "impl") {
+        let (_p2, p1) = prev_nonws(code, pos);
+        if matches!(p1, b'>' | b':' | b'(' | b',' | b'&' | b'<' | b'=') {
+            continue; // `-> impl`, `: impl`, `(impl` … — a type, not a block
+        }
+        let bytes = code.as_bytes();
+        let mut i = skip_ws(code, pos + 4);
+        if i < bytes.len() && bytes[i] == b'<' {
+            i = skip_ws(code, skip_angles(code, i));
+        }
+        let Some(open_rel) = code[i..].find('{') else {
+            continue;
+        };
+        let open_idx = i + open_rel;
+        let header = &code[i..open_idx];
+        let for_pos = find_bounded(header, "for").first().copied();
+        let tgt = match for_pos {
+            Some(fp) => &header[fp + 3..],
+            None => header,
+        };
+        let tgt = match find_bounded(tgt, "where").first() {
+            Some(&wp) => &tgt[..wp],
+            None => tgt,
+        };
+        let tgt = tgt.trim().trim_start_matches('&').trim();
+        let name = if tgt.starts_with('<') { None } else { type_head(tgt) };
+        out.push((name, for_pos.is_some(), open_idx, match_brace(code, open_idx)));
+    }
+    out
+}
+
+/// Body spans `(open `{`, end)` of every `trait X { … }` declaration.
+pub fn trait_spans(code: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for pos in find_bounded(code, "trait") {
+        let after = pos + 5;
+        let i = skip_ws(code, after);
+        if i == after {
+            continue;
+        }
+        let Some(name) = leading_ident(&code[i..]) else {
+            continue;
+        };
+        let from = i + name.len();
+        let open = code[from..].find('{').map(|k| from + k);
+        let semi = code[from..].find(';').map(|k| from + k);
+        match (open, semi) {
+            (Some(o), Some(s)) if s < o => continue,
+            (Some(o), _) => out.push((o, match_brace(code, o))),
+            (None, _) => continue,
+        }
+    }
+    out
+}
+
+/// (`kw` offset, name, name end) for every `kw NAME` occurrence — the
+/// no-regex equivalent of `\bkw\s+([A-Za-z_]\w*)`.
+pub fn kw_decls<'a>(code: &'a str, kw: &str) -> Vec<(usize, &'a str, usize)> {
+    let mut out = Vec::new();
+    for pos in find_bounded(code, kw) {
+        let after = pos + kw.len();
+        let i = skip_ws(code, after);
+        if i == after {
+            continue;
+        }
+        if let Some(name) = leading_ident(&code[i..]) {
+            out.push((pos, name, i + name.len()));
+        }
+    }
+    out
+}
+
+/// module path + item name → signature (`None` = conflict/unparseable)
+pub type ModFnTable = BTreeMap<(Vec<String>, String), Option<FnSig>>;
+/// type name + method name → signature (`None` = conflict/unparseable)
+pub type MethodTable = BTreeMap<(String, String), Option<FnSig>>;
+/// method name → set of known `self`-arities (`None` = poisoned)
+pub type DotTable = BTreeMap<String, Option<BTreeSet<usize>>>;
+
+/// Crate-wide signature index over the library sources (rust/src,
+/// module-level items; impl/trait bodies outside `#[cfg(test)]`).
+#[derive(Debug, Default)]
+pub struct SigIndex {
+    pub fns: ModFnTable,
+    /// name → every (module, sig) declaring it, for unique fallback
+    pub fn_names: BTreeMap<String, Vec<(Vec<String>, Option<FnSig>)>>,
+    /// inherent methods only
+    pub methods: MethodTable,
+    pub dot: DotTable,
+    /// type → assoc fn/const names, across all impls (trait ones too)
+    pub assoc: BTreeMap<String, BTreeSet<String>>,
+    /// struct name → (module, shape); `None` on conflict
+    pub structs: BTreeMap<String, Option<(Vec<String>, Shape)>>,
+    /// enum name → (module, variants); `None` on conflict
+    pub enums: BTreeMap<String, Option<(Vec<String>, BTreeMap<String, Shape>)>>,
+}
+
+/// Fold one method signature into a dot table: unparseable poisons the
+/// name, parseable self-methods contribute their arity.
+fn merge_dot(dot: &mut DotTable, name: &str, sig: Option<FnSig>) {
+    if matches!(dot.get(name), Some(None)) {
+        return;
+    }
+    match sig {
+        None => {
+            dot.insert(name.to_string(), None);
+        }
+        Some((arity, true)) => {
+            if let Some(set) = dot
+                .entry(name.to_string())
+                .or_insert_with(|| Some(BTreeSet::new()))
+            {
+                set.insert(arity);
+            }
+        }
+        Some((_, false)) => {}
+    }
+}
+
+/// Build the crate-wide signature index from all prepared files
+/// (non-library files are skipped via [`module_path_of`]).
+pub fn build_sig_index(files: &[Prepared]) -> SigIndex {
+    let mut idx = SigIndex::default();
+    for f in files {
+        let Some(mp) = module_path_of(&f.path) else {
+            continue;
+        };
+        let code = &f.code;
+        let fns = kw_decls(code, "fn");
+        let consts = kw_decls(code, "const");
+        for &(pos, name, name_end) in &fns {
+            if f.depths[pos] != 0 {
+                continue;
+            }
+            let sig = parse_fn_sig(code, name_end);
+            let key = (mp.clone(), name.to_string());
+            let val = match idx.fns.get(&key) {
+                Some(&old) if old != sig => None,
+                _ => sig,
+            };
+            idx.fns.insert(key, val);
+            idx.fn_names
+                .entry(name.to_string())
+                .or_default()
+                .push((mp.clone(), sig));
+        }
+        for (pos, name, name_end) in kw_decls(code, "struct") {
+            if f.depths[pos] != 0 {
+                continue;
+            }
+            let shape = parse_struct_shape(code, name_end);
+            let val = if idx.structs.contains_key(name) {
+                None
+            } else {
+                shape.map(|s| (mp.clone(), s))
+            };
+            idx.structs.insert(name.to_string(), val);
+        }
+        for (pos, name, name_end) in kw_decls(code, "enum") {
+            if f.depths[pos] != 0 {
+                continue;
+            }
+            let variants = parse_enum_variants(code, name_end);
+            let val = if idx.enums.contains_key(name) {
+                None
+            } else {
+                variants.map(|v| (mp.clone(), v))
+            };
+            idx.enums.insert(name.to_string(), val);
+        }
+        for (tname, is_trait_impl, o, e) in impl_blocks(code) {
+            let Some(tname) = tname else {
+                continue;
+            };
+            if f.test_lines.contains(&line_of(code, o)) {
+                continue;
+            }
+            let d0 = f.depths[o] + 1;
+            for &(pos, name, name_end) in &fns {
+                if pos < o || name_end > e || f.depths[pos] != d0 {
+                    continue;
+                }
+                let sig = parse_fn_sig(code, name_end);
+                idx.assoc
+                    .entry(tname.clone())
+                    .or_default()
+                    .insert(name.to_string());
+                merge_dot(&mut idx.dot, name, sig);
+                if is_trait_impl {
+                    continue;
+                }
+                let key = (tname.clone(), name.to_string());
+                let val = match idx.methods.get(&key) {
+                    Some(&old) if old != sig => None,
+                    _ => sig,
+                };
+                idx.methods.insert(key, val);
+            }
+            for &(pos, name, name_end) in &consts {
+                if pos >= o && name_end <= e && f.depths[pos] == d0 {
+                    idx.assoc
+                        .entry(tname.clone())
+                        .or_default()
+                        .insert(name.to_string());
+                }
+            }
+        }
+        for (o, e) in trait_spans(code) {
+            if f.test_lines.contains(&line_of(code, o)) {
+                continue;
+            }
+            let d0 = f.depths[o] + 1;
+            for &(pos, name, name_end) in &fns {
+                if pos >= o && name_end <= e && f.depths[pos] == d0 {
+                    merge_dot(&mut idx.dot, name, parse_fn_sig(code, name_end));
+                }
+            }
+        }
+    }
+    idx
+}
+
+/// Signatures declared by one file, for intra-file resolution (test,
+/// bench and example files are not in the crate index).
+#[derive(Debug)]
+pub struct FileSigs {
+    pub impls: Vec<ImplBlock>,
+    pub fns: BTreeMap<String, Option<FnSig>>,
+    pub structs: BTreeMap<String, Option<Shape>>,
+    pub enums: BTreeMap<String, Option<BTreeMap<String, Shape>>>,
+    pub methods: MethodTable,
+    pub dot: DotTable,
+    pub assoc: BTreeMap<String, BTreeSet<String>>,
+}
+
+impl FileSigs {
+    pub fn new(code: &str, depths: &[u32]) -> FileSigs {
+        let impls = impl_blocks(code);
+        let tspans = trait_spans(code);
+        let mut spans: Vec<(usize, usize)> =
+            impls.iter().map(|&(_, _, o, e)| (o, e)).collect();
+        spans.extend(&tspans);
+        let in_span = |pos: usize| spans.iter().any(|&(o, e)| o <= pos && pos < e);
+
+        let mut fs = FileSigs {
+            impls,
+            fns: BTreeMap::new(),
+            structs: BTreeMap::new(),
+            enums: BTreeMap::new(),
+            methods: BTreeMap::new(),
+            dot: BTreeMap::new(),
+            assoc: BTreeMap::new(),
+        };
+        let fn_list = kw_decls(code, "fn");
+        for &(pos, name, name_end) in &fn_list {
+            if in_span(pos) {
+                continue;
+            }
+            let sig = parse_fn_sig(code, name_end);
+            if matches!(sig, Some((_, true))) {
+                continue; // a stray self param outside impls: not callable
+            }
+            let val = match fs.fns.get(name) {
+                Some(&old) if old != sig => None,
+                _ => sig,
+            };
+            fs.fns.insert(name.to_string(), val);
+        }
+        for (pos, name, name_end) in kw_decls(code, "struct") {
+            if in_span(pos) {
+                continue;
+            }
+            let shape = parse_struct_shape(code, name_end);
+            let val = if fs.structs.contains_key(name) { None } else { shape };
+            fs.structs.insert(name.to_string(), val);
+        }
+        for (pos, name, name_end) in kw_decls(code, "enum") {
+            if in_span(pos) {
+                continue;
+            }
+            let variants = parse_enum_variants(code, name_end);
+            let val = if fs.enums.contains_key(name) { None } else { variants };
+            fs.enums.insert(name.to_string(), val);
+        }
+        for (tname, is_trait_impl, o, e) in fs.impls.clone() {
+            let Some(tname) = tname else {
+                continue;
+            };
+            let d0 = depths[o] + 1;
+            for &(pos, name, name_end) in &fn_list {
+                if pos < o || name_end > e || depths[pos] != d0 {
+                    continue;
+                }
+                let sig = parse_fn_sig(code, name_end);
+                fs.assoc
+                    .entry(tname.clone())
+                    .or_default()
+                    .insert(name.to_string());
+                merge_dot(&mut fs.dot, name, sig);
+                if is_trait_impl {
+                    continue;
+                }
+                let key = (tname.clone(), name.to_string());
+                let val = match fs.methods.get(&key) {
+                    Some(&old) if old != sig => None,
+                    _ => sig,
+                };
+                fs.methods.insert(key, val);
+            }
+        }
+        for (o, e) in tspans {
+            let d0 = depths[o] + 1;
+            for &(pos, name, name_end) in &fn_list {
+                if pos >= o && name_end <= e && depths[pos] == d0 {
+                    merge_dot(&mut fs.dot, name, parse_fn_sig(code, name_end));
+                }
+            }
+        }
+        fs
+    }
+
+    /// The innermost impl block's target type covering byte `pos`.
+    pub fn enclosing_impl(&self, pos: usize) -> Option<&str> {
+        let mut best: Option<(usize, &Option<String>)> = None;
+        for (tname, _t, o, e) in &self.impls {
+            if *o <= pos && pos < *e && best.map(|(bo, _)| *o > bo).unwrap_or(true) {
+                best = Some((*o, tname));
+            }
+        }
+        best.and_then(|(_, t)| t.as_deref())
+    }
 }
 
 #[cfg(test)]

@@ -3,6 +3,9 @@
 //! literal, and hands the rules a *stripped* view — comments and
 //! string/char-literal bodies blanked to spaces, line structure intact —
 //! so token scans can never match inside a string or a doc comment.
+//! Literal *delimiters* (`"` / `'`) are kept as placeholders so a
+//! blanked string still reads as one expression at a call site — the
+//! sigcheck tier (DESIGN.md §11) counts call arguments on this text.
 //!
 //! Correctness scope (all of it exercised by the fixture tests below):
 //! line comments, nested block comments, plain strings with escapes,
@@ -42,6 +45,24 @@ fn blank_span(out: &mut String, chars: &[char], i: usize, j: usize) -> usize {
         if ch == '\n' {
             out.push('\n');
             newlines += 1;
+        } else {
+            out.push(' ');
+        }
+    }
+    newlines
+}
+
+/// Like [`blank_span`], but the literal's own delimiter char survives as
+/// a placeholder (`"…"` → `" "`), so a blanked string/char literal still
+/// counts as one argument when the sigcheck tier splits a call span.
+fn blank_span_keeping(out: &mut String, chars: &[char], i: usize, j: usize, keep: char) -> usize {
+    let mut newlines = 0;
+    for &ch in &chars[i..j] {
+        if ch == '\n' {
+            out.push('\n');
+            newlines += 1;
+        } else if ch == keep {
+            out.push(ch);
         } else {
             out.push(' ');
         }
@@ -142,7 +163,7 @@ pub fn strip_source(src: &str) -> Stripped {
                     }
                 }
                 let j = j.min(n);
-                line += blank_span(&mut out, &chars, i, j);
+                line += blank_span_keeping(&mut out, &chars, i, j, '"');
                 i = j;
                 prev_ident = false;
                 continue;
@@ -170,7 +191,7 @@ pub fn strip_source(src: &str) -> Stripped {
                 }
             }
             let j = j.min(n);
-            line += blank_span(&mut out, &chars, i, j);
+            line += blank_span_keeping(&mut out, &chars, i, j, '"');
             i = j;
             prev_ident = false;
             continue;
@@ -186,13 +207,13 @@ pub fn strip_source(src: &str) -> Stripped {
                     j += 1;
                 }
                 let j = (j + 1).min(n);
-                blank_span(&mut out, &chars, i, j);
+                blank_span_keeping(&mut out, &chars, i, j, '\'');
                 i = j;
                 prev_ident = false;
                 continue;
             }
             if nxt != '\0' && third == '\'' {
-                out.push_str("   ");
+                out.push_str("' '");
                 i += 3;
                 prev_ident = false;
                 continue;
@@ -432,6 +453,16 @@ mod tests {
         assert!(!code.contains('"'), "quote char literal leaked: {code:?}");
         // the braces all survived blanking
         assert_eq!(brace_depths(&code).last().copied(), Some(1));
+    }
+
+    #[test]
+    fn literal_delimiters_survive_as_placeholders() {
+        // a blanked string must still read as one call argument: the
+        // sigcheck tier splits `f("a,b", 'x')` on top-level commas and
+        // needs the delimiters to keep the literal spans non-empty
+        assert_eq!(code_of("f(\"a\", \"b\")"), "f(\" \", \" \")");
+        assert_eq!(code_of("g('x')"), "g(' ')");
+        assert_eq!(code_of("h(b\"z\")"), "h( \" \")");
     }
 
     #[test]

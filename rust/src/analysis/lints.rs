@@ -33,6 +33,12 @@ pub const COMPILE_RULES: [&str; 6] = [
     "trailing-ws",
 ];
 
+/// Sigcheck tier (DESIGN.md §11): cross-file signature and type-surface
+/// checks, run on every Rust file in the tree. Implemented in
+/// [`sigcheck`](crate::analysis::sigcheck).
+pub const SIGCHECK_RULES: [&str; 4] =
+    ["call-arity", "struct-fields", "enum-variant", "pub-sig-drift"];
+
 /// Discipline tier: runs on the library crate (rust/src) only, outside
 /// `#[cfg(test)]` blocks.
 pub const DISCIPLINE_RULES: [&str; 4] = [
@@ -48,6 +54,7 @@ pub const META_RULES: [&str; 1] = ["suppression"];
 /// Every rule ID the pass can emit.
 pub fn all_rules() -> Vec<&'static str> {
     let mut all: Vec<&'static str> = COMPILE_RULES.to_vec();
+    all.extend(SIGCHECK_RULES);
     all.extend(DISCIPLINE_RULES);
     all.extend(META_RULES);
     all

@@ -9,11 +9,14 @@
 //!
 //! Layering: [`lexer`] classifies chars (code vs comment vs literal),
 //! [`items`] builds the crate model (use trees, module graph, item
-//! index), [`lints`] holds the rules, and this module is the driver —
-//! it prepares files, runs the rules, applies allow-comment
-//! suppressions (the lint marker followed by `allow(<rule>) <reason>`,
-//! see DESIGN.md §9), and renders findings as text or journal-style
-//! JSON lines (`util::json`).
+//! index, signature index), [`lints`] holds the compile-review and
+//! discipline rules, [`sigcheck`] holds the signature-analysis tier
+//! (DESIGN.md §11: call arity, struct fields, enum variants, pub
+//! signature drift), and this module is the driver — it prepares
+//! files, runs the rules, applies allow-comment suppressions (the lint
+//! marker followed by `allow(<rule>) <reason>`, see DESIGN.md §9), and
+//! renders findings as text or journal-style JSON lines
+//! (`util::json`).
 //!
 //! `tools/srclint.py` is a rule-for-rule Python mirror for containers
 //! without a Rust toolchain; the two are kept in sync by convention
@@ -24,11 +27,12 @@
 pub mod items;
 pub mod lexer;
 pub mod lints;
+pub mod sigcheck;
 
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
-use crate::analysis::items::{build_index, prepare, Prepared};
+use crate::analysis::items::{build_index, build_sig_index, prepare, Prepared};
 use crate::util::json::{self, Json};
 
 /// Paths linted when `--paths` is not given (repo-relative).
@@ -139,6 +143,8 @@ pub fn run_lint(files: &[(&str, &str)]) -> Vec<Finding> {
     let prepared: Vec<Prepared> = sorted.iter().map(|&(p, s)| prepare(p, s)).collect();
     let have: BTreeSet<String> = prepared.iter().map(|f| f.path.clone()).collect();
     let index = build_index(&prepared);
+    let sig_idx = build_sig_index(&prepared);
+    let std_methods = sigcheck::std_dot_methods();
     let mut findings: Vec<Finding> = Vec::new();
     for f in &prepared {
         lints::rule_mod_file(f, &have, &mut findings);
@@ -146,6 +152,7 @@ pub fn run_lint(files: &[(&str, &str)]) -> Vec<Finding> {
         lints::rule_unused_import(f, &mut findings);
         lints::rule_macro_import(f, &index, &mut findings);
         lints::rule_line_cols(f, &mut findings);
+        sigcheck::rule_sigcheck(f, &index, &sig_idx, &std_methods, &mut findings);
         if f.path.starts_with("rust/src/") {
             lints::rule_timer(f, &mut findings);
             lints::rule_rng(f, &mut findings);

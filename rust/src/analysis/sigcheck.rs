@@ -1,0 +1,1142 @@
+//! Sigcheck tier (DESIGN.md §11): shape checks over call sites, struct
+//! literals and `Type::Variant` paths, resolved against the crate-wide
+//! signature index built in [`items`](crate::analysis::items). Four
+//! rules — `call-arity`, `struct-fields`, `enum-variant` and
+//! `pub-sig-drift` (the first three re-labeled when a crate-indexed
+//! shape is violated from tests/benches/examples). Mirrors the sigcheck
+//! section of `tools/srclint.py` rule-for-rule — edit both together;
+//! the shared fixture manifest (`tools/lint_fixtures.txt`) is loaded by
+//! both sides so the mirrors cannot drift.
+//!
+//! Resolution is conservative: anything that cannot be parsed or
+//! resolved with confidence is skipped, never guessed.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::items::{
+    col_of, count_call_args, leading_ident, module_path_of, next_nonws, prev_nonws, prev_token,
+    skip_ws, split_delim, strip_attrs, CrateIndex, FileSigs, FnSig, Prepared, Shape, SigIndex,
+    UseDecl,
+};
+use crate::analysis::lexer::{find_bounded, is_ident_byte, line_of, tokens};
+use crate::analysis::Finding;
+
+/// The shared fixture manifest, baked in at compile time; the Python
+/// mirror reads the same file at runtime.
+pub const MANIFEST_TEXT: &str = include_str!("../../../tools/lint_fixtures.txt");
+
+/// Rust keywords a call scan must never treat as a function name.
+const KEYWORDS: [&str; 38] = [
+    "as", "box", "break", "const", "continue", "crate", "dyn", "else", "enum", "extern", "fn",
+    "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
+    "return", "self", "Self", "static", "struct", "super", "trait", "true", "false", "type",
+    "union", "unsafe", "use", "where", "while",
+];
+
+/// Files on the external surface: a crate-indexed shape violated here is
+/// reported as `pub-sig-drift`.
+pub const EXTERNAL_PREFIXES: [&str; 3] = ["rust/tests/", "rust/benches/", "examples/"];
+
+// ------------------------------------------------------------------
+// Shared manifest (tools/lint_fixtures.txt): the per-rule fixture
+// battery consumed by BOTH `analysis::tests` here and `--self-test` in
+// srclint.py, plus the std-shared dot-method blocklist the call-arity
+// rule needs. One file, two loaders — the mirrors cannot drift.
+
+/// One fixture case: lint `files`, then `rule` must fire iff `want_fire`.
+#[derive(Debug)]
+pub struct ManifestCase {
+    pub name: String,
+    pub rule: String,
+    pub want_fire: bool,
+    pub files: Vec<(String, String)>,
+}
+
+/// Parsed manifest: the std dot-method blocklist plus the case battery.
+#[derive(Debug)]
+pub struct Manifest {
+    pub std_methods: BTreeSet<String>,
+    pub cases: Vec<ManifestCase>,
+}
+
+fn manifest_end_file(
+    case: &mut Option<ManifestCase>,
+    fpath: &mut Option<String>,
+    flines: &mut Vec<String>,
+) {
+    if let Some(p) = fpath.take() {
+        if let Some(c) = case.as_mut() {
+            while flines.last().map(String::as_str) == Some("") {
+                flines.pop();
+            }
+            c.files.push((p, flines.join("\n") + "\n"));
+        }
+    }
+    flines.clear();
+}
+
+/// Parse the manifest text. Sections open with `=== std-methods` /
+/// `=== case <name>`; case files open with `--- <path>` and run
+/// verbatim to the next marker (trailing blank lines stripped).
+pub fn parse_manifest(text: &str) -> Manifest {
+    let mut std_methods: BTreeSet<String> = BTreeSet::new();
+    let mut cases: Vec<ManifestCase> = Vec::new();
+    let mut in_std = false;
+    let mut case: Option<ManifestCase> = None;
+    let mut fpath: Option<String> = None;
+    let mut flines: Vec<String> = Vec::new();
+
+    for line in text.split('\n') {
+        if let Some(head) = line.strip_prefix("=== ") {
+            manifest_end_file(&mut case, &mut fpath, &mut flines);
+            if let Some(c) = case.take() {
+                cases.push(c);
+            }
+            let head = head.trim();
+            in_std = head == "std-methods";
+            if !in_std {
+                let name = head.strip_prefix("case ").map(str::trim).unwrap_or(head);
+                case = Some(ManifestCase {
+                    name: name.to_string(),
+                    rule: String::new(),
+                    want_fire: false,
+                    files: Vec::new(),
+                });
+            }
+            continue;
+        }
+        if in_std {
+            if line.trim().is_empty() || line.trim_start().starts_with('#') {
+                continue;
+            }
+            std_methods.extend(line.split_whitespace().map(String::from));
+        } else if case.is_some() {
+            if fpath.is_none() {
+                if let Some(p) = line.strip_prefix("--- ") {
+                    fpath = Some(p.trim().to_string());
+                    flines.clear();
+                } else if let Some(r) = line.strip_prefix("rule ") {
+                    case.as_mut().unwrap().rule = r.trim().to_string();
+                } else if let Some(w) = line.strip_prefix("want ") {
+                    case.as_mut().unwrap().want_fire = w.trim() == "fire";
+                }
+            } else if let Some(p) = line.strip_prefix("--- ") {
+                manifest_end_file(&mut case, &mut fpath, &mut flines);
+                fpath = Some(p.trim().to_string());
+            } else {
+                flines.push(line.to_string());
+            }
+        }
+    }
+    manifest_end_file(&mut case, &mut fpath, &mut flines);
+    if let Some(c) = case.take() {
+        cases.push(c);
+    }
+    Manifest { std_methods, cases }
+}
+
+/// Method names shared with std receiver types — never dot-arity-checked
+/// by `call-arity` (a `.len()` receiver is usually a Vec, not our type).
+pub fn std_dot_methods() -> BTreeSet<String> {
+    parse_manifest(MANIFEST_TEXT).std_methods
+}
+
+// ------------------------------------------------------------------
+// Resolution helpers.
+
+/// Imported name → absolute crate-module path (last segment is the item).
+pub type Binds = BTreeMap<String, Vec<String>>;
+
+/// Imported name -> absolute crate-module path, plus glob-imported
+/// module paths. Crate-rooted only.
+pub fn crate_bindings(
+    uses: &[UseDecl],
+    own: Option<&[String]>,
+    index: &CrateIndex,
+) -> (Binds, Vec<Vec<String>>) {
+    let mut binds = Binds::new();
+    let mut globs: Vec<Vec<String>> = Vec::new();
+    for u in uses {
+        for leaf in &u.leaves {
+            let Some(root) = leaf.segs.first().map(String::as_str) else {
+                continue;
+            };
+            let segs = &leaf.segs;
+            let mut ab: Vec<String>;
+            if root == "crate" || root == "substrat" {
+                ab = segs[1..].to_vec();
+            } else if root == "self" && own.is_some() {
+                ab = own.unwrap().to_vec();
+                ab.extend_from_slice(&segs[1..]);
+            } else if root == "super" && own.is_some() {
+                let mut base = own.unwrap().to_vec();
+                let mut rel: Vec<String> = segs.clone();
+                while rel.first().map(String::as_str) == Some("super") && !base.is_empty() {
+                    base.pop();
+                    rel.remove(0);
+                }
+                if rel.first().map(String::as_str) == Some("super") {
+                    continue;
+                }
+                base.extend(rel);
+                ab = base;
+            } else if own.is_some()
+                && index
+                    .modules
+                    .get(own.unwrap())
+                    .is_some_and(|m| m.children.contains(root))
+            {
+                ab = own.unwrap().to_vec();
+                ab.extend_from_slice(segs);
+            } else {
+                continue;
+            }
+            if ab.is_empty() {
+                continue;
+            }
+            if ab.last().map(String::as_str) == Some("*") {
+                ab.pop();
+                globs.push(ab);
+                continue;
+            }
+            if ab.last().map(String::as_str) == Some("self") {
+                ab.pop();
+                if ab.is_empty() {
+                    continue;
+                }
+            }
+            let name = leaf
+                .alias
+                .clone()
+                .unwrap_or_else(|| ab.last().unwrap().clone());
+            if name != "_" {
+                binds.insert(name, ab);
+            }
+        }
+    }
+    (binds, globs)
+}
+
+/// What a resolved callable is: a free fn or a tuple-struct constructor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallKind {
+    Fn,
+    Ctor,
+}
+
+/// Resolve absolute segs (ending in the called name) to a free-fn
+/// signature or a tuple-struct ctor. `None` = not resolvable with
+/// confidence — skip.
+pub fn lookup_free_fn(
+    idx: &SigIndex,
+    index: &CrateIndex,
+    ab: &[String],
+) -> Option<(CallKind, FnSig)> {
+    let (mod_path, last) = ab.split_at(ab.len() - 1);
+    let name = &last[0];
+    if let Some(sig) = idx.fns.get(&(mod_path.to_vec(), name.clone())) {
+        return sig.map(|s| (CallKind::Fn, s));
+    }
+    if let Some(Some((m, Shape::Tuple(k)))) = idx.structs.get(name) {
+        if m.as_slice() == mod_path {
+            return Some((CallKind::Ctor, (*k, false)));
+        }
+    }
+    if let Some(m) = index.modules.get(mod_path) {
+        if m.items.contains(name) || m.glob_reexport {
+            // a re-export or an item we did not sig-index; fall back to
+            // the crate-unique fn of that name, else stay permissive
+            if let Some(cands) = idx.fn_names.get(name) {
+                if cands.len() == 1 {
+                    if let Some(s) = cands[0].1 {
+                        return Some((CallKind::Fn, s));
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+/// A type name resolved at a use site: its struct shape or enum variants.
+#[derive(Debug)]
+pub enum TypeShape<'a> {
+    Struct(&'a Shape),
+    Enum(&'a BTreeMap<String, Shape>),
+}
+
+/// Field names used in the struct-literal/pattern body at `open_idx`
+/// (`{`). `None` when unparseable.
+pub fn literal_field_names(code: &str, open_idx: usize) -> Option<(Vec<String>, bool)> {
+    let (parts, _) = split_delim(code, open_idx, true)?;
+    let mut names = Vec::new();
+    let mut has_rest = false;
+    for p in &parts {
+        let p = strip_attrs(p.trim());
+        if p.is_empty() {
+            continue;
+        }
+        if p.starts_with("..") {
+            has_rest = true;
+            continue;
+        }
+        names.push(field_use_name(p)?);
+    }
+    Some((names, has_rest))
+}
+
+fn strip_kw<'a>(s: &'a str, kw: &str) -> Option<&'a str> {
+    let rest = s.strip_prefix(kw)?;
+    if rest.starts_with(|c: char| c.is_whitespace()) {
+        Some(rest.trim_start())
+    } else {
+        None
+    }
+}
+
+fn field_tail_ok(s: &str) -> Option<String> {
+    let name = leading_ident(s)?;
+    let t = s[name.len()..].trim_start();
+    let ok = t.is_empty() || t.starts_with('@') || (t.starts_with(':') && !t.starts_with("::"));
+    if ok {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// The field name of one `a: v` / `ref mut a @ p` literal/pattern part,
+/// emulating srclint's regex including its backtracking order.
+fn field_use_name(p: &str) -> Option<String> {
+    let mut cands: Vec<&str> = Vec::new();
+    if let Some(r1) = strip_kw(p, "ref") {
+        if let Some(r2) = strip_kw(r1, "mut") {
+            cands.push(r2);
+        }
+        cands.push(r1);
+    }
+    if let Some(m1) = strip_kw(p, "mut") {
+        cands.push(m1);
+    }
+    cands.push(p);
+    cands.iter().find_map(|s| field_tail_ok(s))
+}
+
+/// `[A-Z][A-Z0-9_]*` in full — the assoc-const naming convention.
+fn is_screaming(s: &str) -> bool {
+    let bytes = s.as_bytes();
+    !bytes.is_empty()
+        && bytes[0].is_ascii_uppercase()
+        && bytes[1..]
+            .iter()
+            .all(|&b| b.is_ascii_uppercase() || b.is_ascii_digit() || b == b'_')
+}
+
+/// `\blet\s+(?:mut\s+)?name\b` or `\bname\s*:(?!:)` anywhere in the
+/// file: the called name is (or may be) shadowed by a binding.
+fn shadowed_by_binding(code: &str, name: &str) -> bool {
+    let bytes = code.as_bytes();
+    for pos in find_bounded(code, "let") {
+        let mut j = skip_ws(code, pos + 3);
+        if j == pos + 3 {
+            continue;
+        }
+        if let Some(rest) = code[j..].strip_prefix("mut") {
+            if rest.starts_with(|c: char| c.is_whitespace()) {
+                j = skip_ws(code, j + 3);
+            }
+        }
+        if code[j..].starts_with(name) {
+            let end = j + name.len();
+            if end >= bytes.len() || !is_ident_byte(bytes[end]) {
+                return true;
+            }
+        }
+    }
+    for pos in find_bounded(code, name) {
+        if let Some((q, b':')) = next_nonws(code, pos + name.len()) {
+            if bytes.get(q + 1) != Some(&b':') {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Collect the `a::b::` prefix segments ending at ident start `i0`,
+/// walking backwards. The bool is true when the walk stopped at
+/// something unresolvable (`>::`, `)::` …) rather than the path start.
+pub fn back_path_segments(code: &str, i0: usize) -> (Vec<String>, bool) {
+    let bytes = code.as_bytes();
+    let mut segs: Vec<String> = Vec::new();
+    let mut i = i0;
+    loop {
+        let (p2, p1) = prev_nonws(code, i);
+        if p1 != b':' || p2 != b':' {
+            return (segs, false);
+        }
+        let mut j: i64 = i as i64 - 1;
+        while j >= 0 && bytes[j as usize].is_ascii_whitespace() {
+            j -= 1;
+        }
+        j -= 1; // first ':'
+        while j >= 0 && bytes[j as usize].is_ascii_whitespace() {
+            j -= 1;
+        }
+        j -= 1; // second ':'
+        while j >= 0 && bytes[j as usize].is_ascii_whitespace() {
+            j -= 1;
+        }
+        if j < 0 || !(bytes[j as usize].is_ascii_alphanumeric() || bytes[j as usize] == b'_') {
+            return (segs, true); // `<T as X>::f`, `Vec::<u8>::f` — give up
+        }
+        let end = (j + 1) as usize;
+        while j >= 0 && (bytes[j as usize].is_ascii_alphanumeric() || bytes[j as usize] == b'_') {
+            j -= 1;
+        }
+        let seg = &code[(j + 1) as usize..end];
+        if seg.as_bytes()[0].is_ascii_digit() {
+            return (segs, true);
+        }
+        segs.insert(0, seg.to_string());
+        i = (j + 1) as usize;
+    }
+}
+
+// ------------------------------------------------------------------
+// Emission and the rule driver.
+
+/// Per-file context threaded through the emit helpers.
+struct SigCtx<'a> {
+    path: &'a str,
+    code: &'a str,
+}
+
+/// Report under the specific rule, or as pub-sig-drift when the shape
+/// came from the crate index and the use site is an external surface
+/// (tests / benches / examples) — the drift class ROADMAP item 1 names.
+fn sig_emit(
+    out: &mut Vec<Finding>,
+    rule: &'static str,
+    ctx: &SigCtx,
+    idx0: usize,
+    msg: String,
+    origin: &str,
+) {
+    let external = EXTERNAL_PREFIXES.iter().any(|p| ctx.path.starts_with(p));
+    let (rule, msg) = if origin == "crate" && external {
+        ("pub-sig-drift", format!("pub signature drift ({rule}): {msg}"))
+    } else {
+        (rule, msg)
+    };
+    out.push(Finding {
+        rule,
+        path: ctx.path.to_string(),
+        line: line_of(ctx.code, idx0),
+        col: col_of(ctx.code, idx0),
+        message: msg,
+    });
+}
+
+/// Shared struct-literal / struct-variant field check. `label` is
+/// `Name` or `Enum::Variant`; `at` is (body `{` offset, finding offset).
+fn check_field_body(
+    ctx: &SigCtx,
+    out: &mut Vec<Finding>,
+    kind: &str,
+    label: &str,
+    fields: &[String],
+    at: (usize, usize),
+    origin: &'static str,
+) {
+    let (open_idx, idx0) = at;
+    let Some((names, has_rest)) = literal_field_names(ctx.code, open_idx) else {
+        return;
+    };
+    let rule = if kind == "struct" { "struct-fields" } else { "enum-variant" };
+    for nm in &names {
+        if !fields.contains(nm) {
+            let msg = format!("{kind} `{label}` has no field `{nm}`");
+            sig_emit(out, rule, ctx, idx0, msg, origin);
+        }
+    }
+    if !has_rest {
+        let missing: Vec<&str> = fields
+            .iter()
+            .filter(|f| !names.contains(f))
+            .map(String::as_str)
+            .collect();
+        if !missing.is_empty() {
+            let msg = format!(
+                "{kind} literal `{label}` missing field(s) `{}` without `..`",
+                missing.join(", ")
+            );
+            sig_emit(out, rule, ctx, idx0, msg, origin);
+        }
+    }
+}
+
+/// Everything a use site resolves against: intra-file signatures, the
+/// file's imports, and the crate-wide indexes.
+struct Resolver<'a> {
+    fs: &'a FileSigs,
+    binds: &'a Binds,
+    idx: &'a SigIndex,
+    index: &'a CrateIndex,
+    own: Option<&'a [String]>,
+}
+
+impl<'a> Resolver<'a> {
+    /// Resolve a type name to its shape and origin. `qualified` means
+    /// the name was reached via a `::` path (accept a crate-unique
+    /// index entry without an import).
+    fn resolve(&self, name: &str, qualified: bool) -> Option<(TypeShape<'a>, &'static str)> {
+        if let Some(v) = self.fs.structs.get(name) {
+            return v.as_ref().map(|s| (TypeShape::Struct(s), "local"));
+        }
+        if let Some(v) = self.fs.enums.get(name) {
+            return v.as_ref().map(|m| (TypeShape::Enum(m), "local"));
+        }
+        let target: &str = if let Some(ab) = self.binds.get(name) {
+            ab.last().unwrap()
+        } else if qualified {
+            name
+        } else {
+            return None;
+        };
+        if let Some(Some((_m, shape))) = self.idx.structs.get(target) {
+            return Some((TypeShape::Struct(shape), "crate"));
+        }
+        if let Some(Some((_m, variants))) = self.idx.enums.get(target) {
+            return Some((TypeShape::Enum(variants), "crate"));
+        }
+        None
+    }
+
+    fn is_enum_name(&self, name: &str, qualified: bool) -> bool {
+        matches!(self.resolve(name, qualified), Some((TypeShape::Enum(_), _)))
+    }
+
+    /// An inherent-method signature by (type, name), with its origin.
+    fn method_sig(&self, tname: &str, name: &str) -> (Option<FnSig>, Option<&'static str>) {
+        let key = (tname.to_string(), name.to_string());
+        if let Some(&sig) = self.fs.methods.get(&key) {
+            return (sig, Some("local"));
+        }
+        if let Some(&sig) = self.idx.methods.get(&key) {
+            return (sig, Some("crate"));
+        }
+        (None, None)
+    }
+
+    /// Absolute crate path for leading segs of a `::` call path, or
+    /// `None`. `segs` excludes the final called/used name.
+    fn absolutize(&self, segs: &[String]) -> Option<Vec<String>> {
+        let s0 = segs[0].as_str();
+        if s0 == "crate" || s0 == "substrat" {
+            return Some(segs[1..].to_vec());
+        }
+        if s0 == "self" {
+            let own = self.own?;
+            let mut v = own.to_vec();
+            v.extend_from_slice(&segs[1..]);
+            return Some(v);
+        }
+        if s0 == "super" {
+            let own = self.own?;
+            let mut base = own.to_vec();
+            let mut rel = segs.to_vec();
+            while rel.first().map(String::as_str) == Some("super") && !base.is_empty() {
+                base.pop();
+                rel.remove(0);
+            }
+            if rel.first().map(String::as_str) == Some("super") {
+                return None;
+            }
+            base.extend(rel);
+            return Some(base);
+        }
+        if let Some(ab) = self.binds.get(s0) {
+            let mut v = ab.clone();
+            v.extend_from_slice(&segs[1..]);
+            return Some(v);
+        }
+        if let Some(own) = self.own {
+            let is_child = self
+                .index
+                .modules
+                .get(own)
+                .is_some_and(|m| m.children.contains(s0));
+            if is_child {
+                let mut v = own.to_vec();
+                v.extend_from_slice(segs);
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// Arity-check `Type::assoc_fn(..)`; a UFCS receiver is explicit.
+    fn check_assoc_call(
+        &self,
+        ctx: &SigCtx,
+        out: &mut Vec<Finding>,
+        tname: &str,
+        fname: &str,
+        at: (usize, usize),
+    ) {
+        let (i0, open_idx) = at;
+        if matches!(self.resolve(tname, true), Some((TypeShape::Enum(_), _))) {
+            return; // Enum::Variant(..) is the enum-variant rule's job
+        }
+        let (sig, origin) = self.method_sig(tname, fname);
+        let (Some(sig), Some(origin)) = (sig, origin) else {
+            return;
+        };
+        let Some(got) = count_call_args(ctx.code, open_idx) else {
+            return;
+        };
+        let expected = sig.0 + usize::from(sig.1);
+        if got != expected {
+            let msg = format!(
+                "`{tname}::{fname}` takes {expected} argument(s), call passes {got}"
+            );
+            sig_emit(out, "call-arity", ctx, i0, msg, origin);
+        }
+    }
+}
+
+fn dot_call_candidates(
+    idx: &SigIndex,
+    fs: &FileSigs,
+    name: &str,
+) -> Option<BTreeSet<usize>> {
+    let mut cands: BTreeSet<usize> = BTreeSet::new();
+    for table in [&idx.dot, &fs.dot] {
+        match table.get(name) {
+            Some(None) => return None,
+            Some(Some(s)) => cands.extend(s.iter().copied()),
+            None => {}
+        }
+    }
+    Some(cands)
+}
+
+/// `name.method(..)` and `self.method(..)` arity checks.
+fn check_dot_call(
+    res: &Resolver,
+    ctx: &SigCtx,
+    out: &mut Vec<Finding>,
+    std_methods: &BTreeSet<String>,
+    name: &str,
+    i0: usize,
+    open_idx: usize,
+) {
+    let code = ctx.code;
+    let dot = code[..i0].rfind('.').unwrap_or(0);
+    let recv = prev_token(code, dot);
+    let Some(got) = count_call_args(code, open_idx) else {
+        return;
+    };
+    if recv == "self" {
+        // `self.m(..)` checks the enclosing impl's methods
+        let Some(tname) = res.fs.enclosing_impl(i0) else {
+            return;
+        };
+        let (sig, origin) = res.method_sig(tname, name);
+        if let (Some((arity, true)), Some(origin)) = (sig, origin) {
+            if got != arity {
+                let msg = format!("method `{name}` takes {arity} argument(s), call passes {got}");
+                sig_emit(out, "call-arity", ctx, i0, msg, origin);
+            }
+        }
+        return;
+    }
+    // any other receiver is arity-checked against every known
+    // self-method of that name, unless the name is std-shared
+    if std_methods.contains(name) {
+        return;
+    }
+    let Some(cands) = dot_call_candidates(res.idx, res.fs, name) else {
+        return;
+    };
+    if cands.is_empty() {
+        return;
+    }
+    if !cands.contains(&got) {
+        let crate_known = matches!(res.idx.dot.get(name), Some(Some(s)) if !s.is_empty());
+        let origin = if crate_known { "crate" } else { "local" };
+        let list: Vec<usize> = cands.iter().copied().collect();
+        let msg = format!("method `{name}` takes {list:?} argument(s), call passes {got}");
+        sig_emit(out, "call-arity", ctx, i0, msg, origin);
+    }
+}
+
+/// `path::to::item(..)` arity checks (assoc fns and free fns).
+fn check_path_call(
+    res: &Resolver,
+    ctx: &SigCtx,
+    out: &mut Vec<Finding>,
+    name: &str,
+    i0: usize,
+    open_idx: usize,
+) {
+    let code = ctx.code;
+    let (segs, broken) = back_path_segments(code, i0);
+    if broken || segs.is_empty() {
+        return;
+    }
+    if segs.len() == 1 && segs[0] == "Self" {
+        if let Some(tname) = res.fs.enclosing_impl(i0) {
+            res.check_assoc_call(ctx, out, tname, name, (i0, open_idx));
+        }
+        return;
+    }
+    if matches!(segs[0].as_str(), "std" | "core" | "alloc" | "proc_macro") {
+        return;
+    }
+    if segs.len() == 1 && segs[0].as_bytes()[0].is_ascii_uppercase() {
+        let t = segs[0].as_str();
+        if let Some(ab) = res.binds.get(t) {
+            let tn = ab.last().unwrap().clone();
+            res.check_assoc_call(ctx, out, &tn, name, (i0, open_idx));
+        } else if res.fs.structs.contains_key(t)
+            || res.fs.enums.contains_key(t)
+            || res.fs.assoc.contains_key(t)
+        {
+            res.check_assoc_call(ctx, out, t, name, (i0, open_idx));
+        }
+        return; // neither local nor crate-bound: std or unknown
+    }
+    let Some(ab) = res.absolutize(&segs) else {
+        return;
+    };
+    if let Some(last) = ab.last() {
+        if last.as_bytes().first().is_some_and(u8::is_ascii_uppercase) {
+            res.check_assoc_call(ctx, out, last, name, (i0, open_idx));
+            return;
+        }
+    }
+    let mut full = ab;
+    full.push(name.to_string());
+    let Some((kind, sig)) = lookup_free_fn(res.idx, res.index, &full) else {
+        return;
+    };
+    let Some(got) = count_call_args(code, open_idx) else {
+        return;
+    };
+    if got != sig.0 {
+        sig_emit(out, "call-arity", ctx, i0, arity_msg(kind, name, sig.0, got), "crate");
+    }
+}
+
+fn arity_msg(kind: CallKind, name: &str, want: usize, got: usize) -> String {
+    match kind {
+        CallKind::Fn => format!("`{name}` takes {want} argument(s), call passes {got}"),
+        CallKind::Ctor => {
+            format!("tuple struct `{name}` has {want} field(s), constructor passes {got}")
+        }
+    }
+}
+
+/// Bare `name(..)` calls: file-local fns/ctors, imports, glob imports.
+fn check_bare_call(
+    res: &Resolver,
+    ctx: &SigCtx,
+    out: &mut Vec<Finding>,
+    globs: &[Vec<String>],
+    name: &str,
+    i0: usize,
+    open_idx: usize,
+) {
+    let code = ctx.code;
+    if prev_token(code, i0) == "fn" {
+        return;
+    }
+    let mut sig: Option<FnSig> = None;
+    let mut origin: &'static str = "local";
+    let mut kind = CallKind::Fn;
+    if let Some(&s) = res.fs.fns.get(name) {
+        sig = s;
+    } else if let Some(shape) = res.fs.structs.get(name) {
+        if let Some(Shape::Tuple(k)) = shape {
+            sig = Some((*k, false));
+            kind = CallKind::Ctor;
+        }
+    } else if let Some(ab) = res.binds.get(name) {
+        if let Some((k2, s2)) = lookup_free_fn(res.idx, res.index, ab) {
+            kind = k2;
+            sig = Some(s2);
+            origin = "crate";
+        }
+    } else {
+        for g in globs {
+            if let Some(&s) = res.idx.fns.get(&(g.clone(), name.to_string())) {
+                sig = s;
+                origin = "crate";
+                break;
+            }
+        }
+    }
+    let Some(sig) = sig else {
+        return;
+    };
+    if shadowed_by_binding(code, name) {
+        return; // the name is (or may be) shadowed by a binding
+    }
+    let Some(got) = count_call_args(code, open_idx) else {
+        return;
+    };
+    if got != sig.0 {
+        sig_emit(out, "call-arity", ctx, i0, arity_msg(kind, name, sig.0, got), origin);
+    }
+}
+
+/// One `Type::Variant` occurrence found by the pair scan.
+struct PairSite<'a> {
+    a: &'a str,
+    b: &'a str,
+    a_pos: usize,
+    b_start: usize,
+}
+
+fn check_pair(res: &Resolver, ctx: &SigCtx, out: &mut Vec<Finding>, site: &PairSite) {
+    let code = ctx.code;
+    let (p2, p1) = prev_nonws(code, site.a_pos);
+    let mut qualified = p1 == b':' && p2 == b':';
+    let mut a_name: &str = site.a;
+    if site.a == "Self" {
+        match res.fs.enclosing_impl(site.a_pos) {
+            Some(t) => {
+                a_name = t;
+                qualified = true;
+            }
+            None => return,
+        }
+    }
+    let Some((TypeShape::Enum(variants), origin)) = res.resolve(a_name, qualified) else {
+        return;
+    };
+    let b = site.b;
+    let b_end = site.b_start + b.len();
+    let nxt_i = skip_ws(code, b_end);
+    let nxt = code.as_bytes().get(nxt_i).copied().unwrap_or(0);
+    if !variants.contains_key(b) {
+        let in_assoc = res.idx.assoc.get(a_name).is_some_and(|s| s.contains(b))
+            || res.fs.assoc.get(a_name).is_some_and(|s| s.contains(b));
+        if in_assoc {
+            return;
+        }
+        if is_screaming(b) && b.len() > 1 {
+            return; // assoc-const convention — unindexable via traits
+        }
+        let msg = format!("enum `{a_name}` has no variant `{b}`");
+        sig_emit(out, "enum-variant", ctx, site.a_pos, msg, origin);
+        return;
+    }
+    let shape = &variants[b];
+    if nxt == b'(' {
+        let open_idx = nxt_i;
+        match shape {
+            Shape::Unit => {
+                let msg = format!("variant `{a_name}::{b}` is a unit variant, not tuple");
+                sig_emit(out, "enum-variant", ctx, site.a_pos, msg, origin);
+            }
+            Shape::Named(_) => {
+                let msg = format!("variant `{a_name}::{b}` has named fields, not a tuple form");
+                sig_emit(out, "enum-variant", ctx, site.a_pos, msg, origin);
+            }
+            Shape::Tuple(k) => {
+                if let Some(got) = count_call_args(code, open_idx) {
+                    if got != *k {
+                        let msg =
+                            format!("variant `{a_name}::{b}` has {k} field(s), {got} given");
+                        sig_emit(out, "enum-variant", ctx, site.a_pos, msg, origin);
+                    }
+                }
+            }
+        }
+    } else if nxt == b'{' {
+        if let Shape::Named(fields) = shape {
+            let label = format!("{a_name}::{b}");
+            check_field_body(
+                ctx,
+                out,
+                "variant",
+                &label,
+                fields,
+                (nxt_i, site.a_pos),
+                origin,
+            );
+        }
+    }
+}
+
+const LIT_PREV_TOKENS: [&str; 19] = [
+    "struct", "enum", "union", "trait", "impl", "for", "mod", "use", "fn", "dyn", "as", "type",
+    "where", "if", "while", "match", "in", "loop", "unsafe",
+];
+
+/// The sigcheck tier for one file: call sites, then struct literals,
+/// then `Type::Variant` paths, in source order each.
+pub fn rule_sigcheck(
+    f: &Prepared,
+    index: &CrateIndex,
+    idx: &SigIndex,
+    std_methods: &BTreeSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    let own = module_path_of(&f.path);
+    let fs = FileSigs::new(&f.code, &f.depths);
+    let (binds, globs) = crate_bindings(&f.uses, own.as_deref(), index);
+    let code = f.code.as_str();
+    let bytes = code.as_bytes();
+    let ctx = SigCtx { path: &f.path, code };
+    let res = Resolver {
+        fs: &fs,
+        binds: &binds,
+        idx,
+        index,
+        own: own.as_deref(),
+    };
+    let toks = tokens(code);
+
+    // --- call sites ---------------------------------------------------
+    for &(i0, name) in &toks {
+        let b0 = name.as_bytes()[0];
+        if !(b0.is_ascii_alphabetic() || b0 == b'_') {
+            continue;
+        }
+        let Some((open_idx, b'(')) = next_nonws(code, i0 + name.len()) else {
+            continue;
+        };
+        if KEYWORDS.contains(&name) || (i0 > 0 && bytes[i0 - 1] == b'$') {
+            continue;
+        }
+        let (p2, p1) = prev_nonws(code, i0);
+        if p1 == b'.' && p2 != b'.' {
+            check_dot_call(&res, &ctx, out, std_methods, name, i0, open_idx);
+        } else if p1 == b':' && p2 == b':' {
+            check_path_call(&res, &ctx, out, name, i0, open_idx);
+        } else {
+            check_bare_call(&res, &ctx, out, &globs, name, i0, open_idx);
+        }
+    }
+
+    // --- struct literals ----------------------------------------------
+    for &(i0, name) in &toks {
+        if !name.as_bytes()[0].is_ascii_uppercase() {
+            continue;
+        }
+        let Some((open_brace, b'{')) = next_nonws(code, i0 + name.len()) else {
+            continue;
+        };
+        if name == "Self" || (i0 > 0 && bytes[i0 - 1] == b'$') {
+            continue;
+        }
+        if LIT_PREV_TOKENS.contains(&prev_token(code, i0)) {
+            continue;
+        }
+        let (p2, p1) = prev_nonws(code, i0);
+        if (p2, p1) == (b'-', b'>')
+            || (p1 == b'>' && p2 != b'=')
+            || (p1 == b':' && p2 != b':')
+            || p1 == b'+'
+        {
+            continue;
+        }
+        let qualified = p1 == b':' && p2 == b':';
+        if qualified {
+            let (segs, broken) = back_path_segments(code, i0);
+            if broken || segs.is_empty() {
+                continue;
+            }
+            if res.is_enum_name(segs.last().unwrap(), segs.len() > 1) {
+                continue; // Enum::StructVariant — enum-variant rule's job
+            }
+        }
+        let Some((TypeShape::Struct(Shape::Named(fields)), origin)) =
+            res.resolve(name, qualified)
+        else {
+            continue;
+        };
+        check_field_body(&ctx, out, "struct", name, fields, (open_brace, i0), origin);
+    }
+
+    // --- Type::Variant paths ------------------------------------------
+    for &(a_pos, a) in &toks {
+        let b0 = a.as_bytes()[0];
+        if !(b0.is_ascii_alphabetic() || b0 == b'_') {
+            continue;
+        }
+        let Some((q, b':')) = next_nonws(code, a_pos + a.len()) else {
+            continue;
+        };
+        if bytes.get(q + 1) != Some(&b':') {
+            continue;
+        }
+        let b_start = skip_ws(code, q + 2);
+        let Some(b) = leading_ident(&code[b_start..]) else {
+            continue;
+        };
+        if !b.as_bytes()[0].is_ascii_uppercase() || (a_pos > 0 && bytes[a_pos - 1] == b'$') {
+            continue;
+        }
+        let site = PairSite { a, b, a_pos, b_start };
+        check_pair(&res, &ctx, out, &site);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::run_lint;
+
+    const LIB: &str = "rust/src/lib.rs";
+
+    fn assert_fired(name: &str, files: &[(&str, &str)], rule: &str, want: bool) {
+        let all = run_lint(files);
+        let got = all.iter().any(|f| f.rule == rule);
+        assert_eq!(
+            got,
+            want,
+            "{name}: rule {rule} {}: {:?}",
+            if want { "did not fire" } else { "fired" },
+            all.iter().map(Finding::text).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn manifest_parses_std_methods_and_cases() {
+        let m = parse_manifest(MANIFEST_TEXT);
+        assert!(m.std_methods.contains("len"), "std blocklist loaded");
+        assert!(m.std_methods.contains("push"));
+        assert!(!m.cases.is_empty(), "fixture cases present");
+        for c in &m.cases {
+            assert!(!c.rule.is_empty(), "case {} names a rule", c.name);
+            assert!(!c.files.is_empty(), "case {} has files", c.name);
+            for (_, body) in &c.files {
+                assert!(body.ends_with('\n'), "case {} bodies end in newline", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_battery_agrees_with_the_rust_linter() {
+        // the shared per-rule battery: every case must fire (or stay
+        // clean) exactly as declared. srclint.py --self-test runs the
+        // same file — the two implementations cannot drift.
+        let m = parse_manifest(MANIFEST_TEXT);
+        let mut seen_rules: BTreeSet<&str> = BTreeSet::new();
+        for case in &m.cases {
+            let files: Vec<(&str, &str)> = case
+                .files
+                .iter()
+                .map(|(p, s)| (p.as_str(), s.as_str()))
+                .collect();
+            assert_fired(&case.name, &files, &case.rule, case.want_fire);
+            seen_rules.insert(case.rule.as_str());
+        }
+        for rule in ["call-arity", "struct-fields", "enum-variant", "pub-sig-drift"] {
+            assert!(seen_rules.contains(rule), "battery covers {rule}");
+        }
+    }
+
+    #[test]
+    fn call_arity_checks_free_fns_and_methods() {
+        let ok = [(LIB, "pub fn two(a: u32, b: u32) -> u32 { a + b }\n\
+                         pub fn call() -> u32 { two(1, 2) }\n")];
+        assert_fired("exact", &ok, "call-arity", false);
+        let bad = [(LIB, "pub fn two(a: u32, b: u32) -> u32 { a + b }\n\
+                          pub fn call() -> u32 { two(1) }\n")];
+        assert_fired("one short", &bad, "call-arity", true);
+        let m = "pub struct S;\nimpl S {\n    pub fn m(&self, a: u32) -> u32 { a }\n    \
+                 pub fn go(&self) -> u32 { self.m(1, 2) }\n}\n";
+        assert_fired("self method", &[(LIB, m)], "call-arity", true);
+    }
+
+    #[test]
+    fn call_arity_respects_shadowing_and_std_names() {
+        let shadowed = "pub fn f(a: u32) -> u32 { a }\n\
+                        pub fn g() -> u32 {\n    let f = |x: u32, y: u32| x + y;\n    \
+                        f(1, 2)\n}\n";
+        assert_fired("shadowed", &[(LIB, shadowed)], "call-arity", false);
+        let std_dot = "pub fn g(v: &[u32]) -> usize { v.len() }\n";
+        assert_fired("std method", &[(LIB, std_dot)], "call-arity", false);
+    }
+
+    #[test]
+    fn struct_fields_catches_unknown_and_missing() {
+        let s = "pub struct P { pub x: u32, pub y: u32 }\n";
+        let unknown = format!("{s}pub fn f() -> P {{ P {{ x: 1, z: 2, y: 3 }} }}\n");
+        assert_fired("unknown field", &[(LIB, &unknown)], "struct-fields", true);
+        let missing = format!("{s}pub fn f() -> P {{ P {{ x: 1 }} }}\n");
+        assert_fired("missing field", &[(LIB, &missing)], "struct-fields", true);
+        let rest = format!(
+            "{s}pub fn f(p: P) -> P {{ P {{ x: 1, ..p }} }}\n"
+        );
+        assert_fired("rest pattern", &[(LIB, &rest)], "struct-fields", false);
+        let full = format!("{s}pub fn f() -> P {{ P {{ x: 1, y: 2 }} }}\n");
+        assert_fired("complete", &[(LIB, &full)], "struct-fields", false);
+    }
+
+    #[test]
+    fn enum_variant_catches_typos_and_arity() {
+        let e = "pub enum E { A, B(u32, u32), C { k: u32 } }\n";
+        let typo = format!("{e}pub fn f() -> E {{ E::Aa }}\n");
+        assert_fired("typo", &[(LIB, &typo)], "enum-variant", true);
+        let arity = format!("{e}pub fn f() -> E {{ E::B(1) }}\n");
+        assert_fired("tuple arity", &[(LIB, &arity)], "enum-variant", true);
+        let unit_call = format!("{e}pub fn f() -> E {{ E::A(1) }}\n");
+        assert_fired("unit called", &[(LIB, &unit_call)], "enum-variant", true);
+        let good = format!("{e}pub fn f() -> E {{ E::B(1, 2) }}\n");
+        assert_fired("good", &[(LIB, &good)], "enum-variant", false);
+        let named = format!("{e}pub fn f() -> E {{ E::C {{ k: 1 }} }}\n");
+        assert_fired("named variant", &[(LIB, &named)], "enum-variant", false);
+    }
+
+    #[test]
+    fn pub_sig_drift_relabels_external_use_sites() {
+        let files = [
+            (LIB, "pub fn api(a: u32, b: u32) -> u32 { a + b }\n"),
+            (
+                "rust/tests/t.rs",
+                "use substrat::api;\n#[test]\nfn t() { assert_eq!(api(1), 2); }\n",
+            ),
+        ];
+        let all = run_lint(&files);
+        let drift: Vec<&Finding> = all.iter().filter(|f| f.rule == "pub-sig-drift").collect();
+        assert_eq!(drift.len(), 1, "{all:?}");
+        assert!(drift[0].message.starts_with("pub signature drift (call-arity): "));
+        assert_eq!(drift[0].path, "rust/tests/t.rs");
+    }
+
+    #[test]
+    fn suppression_comments_waive_sigcheck_findings() {
+        let src = "pub fn two(a: u32, b: u32) -> u32 { a + b }\n\
+                   // lint: allow(call-arity) fixture exercises the bad shape\n\
+                   pub fn call() -> u32 { two(1) }\n";
+        assert_fired("suppressed", &[(LIB, src)], "call-arity", false);
+    }
+
+    #[test]
+    fn back_path_segments_walks_and_gives_up() {
+        let code = "a::b::f(1)";
+        let i0 = code.find('f').unwrap();
+        let (segs, broken) = back_path_segments(code, i0);
+        assert_eq!(segs, vec!["a".to_string(), "b".to_string()]);
+        assert!(!broken);
+        let ufcs = "<T as X>::f(1)";
+        let (_, broken) = back_path_segments(ufcs, ufcs.find('f').unwrap());
+        assert!(broken);
+    }
+
+    #[test]
+    fn field_use_name_handles_patterns() {
+        assert_eq!(field_use_name("x: 1").as_deref(), Some("x"));
+        assert_eq!(field_use_name("ref mut x").as_deref(), Some("x"));
+        assert_eq!(field_use_name("x @ 1..=2").as_deref(), Some("x"));
+        assert_eq!(field_use_name("x"), Some("x".to_string()));
+        assert_eq!(field_use_name("E::V"), None);
+    }
+}

@@ -1,9 +1,19 @@
-//! The srclint pass (DESIGN.md §9) must be clean on this repository
-//! itself: the linted tree includes the linter's own sources, so this
-//! test is both the merge gate ("no findings at HEAD") and a live check
-//! that the rules do not false-positive on real code.
+//! The srclint pass (DESIGN.md §9, §11) must be clean on this
+//! repository itself: the linted tree includes the linter's own
+//! sources, so this test is both the merge gate ("no findings at
+//! HEAD") and a live check that the rules — the compile-review tier,
+//! the discipline tier, and the sigcheck signature tier — do not
+//! false-positive on real code. A second test drives the `--json`
+//! surface: findings produced by the shared fixture battery must
+//! round-trip through `util::json` and pass the record schema check.
 
-use substrat::analysis::{collect_files, repo_root_from, run_lint, Finding, DEFAULT_PATHS};
+use std::collections::BTreeSet;
+
+use substrat::analysis::sigcheck::{parse_manifest, MANIFEST_TEXT};
+use substrat::analysis::{
+    collect_files, repo_root_from, run_lint, validate_finding_record, Finding, DEFAULT_PATHS,
+};
+use substrat::util::json;
 
 #[test]
 fn repo_sources_lint_clean() {
@@ -35,4 +45,35 @@ fn repo_sources_lint_clean() {
             .collect::<Vec<_>>()
             .join("\n")
     );
+}
+
+/// Every finding the engine can produce — including the sigcheck tier,
+/// exercised here via the `want fire` cases of the shared fixture
+/// manifest — must serialize to a `--json` line that parses back and
+/// passes the journal record schema check.
+#[test]
+fn fixture_findings_round_trip_through_json() {
+    let manifest = parse_manifest(MANIFEST_TEXT);
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut checked = 0usize;
+    for case in manifest.cases.iter().filter(|c| c.want_fire) {
+        let refs: Vec<(&str, &str)> = case
+            .files
+            .iter()
+            .map(|(p, s)| (p.as_str(), s.as_str()))
+            .collect();
+        for f in run_lint(&refs) {
+            let line = json::obj_to_line(&f.record());
+            let parsed = json::parse_line(&line)
+                .unwrap_or_else(|| panic!("{}: finding line must parse: {line}", case.name));
+            validate_finding_record(&parsed)
+                .unwrap_or_else(|e| panic!("{}: {}: {e}", case.name, f.text()));
+            seen.insert(f.rule);
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "fire cases must produce findings");
+    for rule in ["call-arity", "struct-fields", "enum-variant", "pub-sig-drift"] {
+        assert!(seen.contains(rule), "round-tripped a {rule} finding");
+    }
 }

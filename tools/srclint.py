@@ -34,6 +34,12 @@ COMPILE_RULES = [
     "line-length",     # raw line longer than MAX_COLS chars
     "trailing-ws",     # trailing whitespace (incl. stray \r)
 ]
+SIGCHECK_RULES = [
+    "call-arity",      # call sites match indexed fn/method arity
+    "struct-fields",   # struct literals name real fields, cover all sans `..`
+    "enum-variant",    # Type::Variant names a real variant, right arity
+    "pub-sig-drift",   # pub shape used from tests/benches/examples drifted
+]
 DISCIPLINE_RULES = [
     "timer-discipline",  # raw clock reads outside util/timer.rs
     "iter-order",        # HashMap/HashSet iteration in record-writing files
@@ -41,7 +47,7 @@ DISCIPLINE_RULES = [
     "fp-complete",       # config fields missing from the fingerprint fn
 ]
 META_RULES = ["suppression"]  # malformed allow/fp-exempt comments
-ALL_RULES = COMPILE_RULES + DISCIPLINE_RULES + META_RULES
+ALL_RULES = COMPILE_RULES + SIGCHECK_RULES + DISCIPLINE_RULES + META_RULES
 
 # struct -> fingerprint function that must name every non-exempt field
 FP_PAIRS = [("ExpConfig", "config_fingerprint"),
@@ -155,7 +161,9 @@ def strip_source(src):
                         else:
                             k += 1
                 for ch in src[i:k]:
-                    out.append(blank(ch))
+                    # keep quote chars as placeholders so a blanked string
+                    # still counts as one call argument (sigcheck tier)
+                    out.append('"' if ch == '"' else blank(ch))
                     if ch == "\n":
                         line += 1
                 i = k
@@ -176,7 +184,7 @@ def strip_source(src):
                 else:
                     j += 1
             for ch in src[i:j]:
-                out.append(blank(ch))
+                out.append('"' if ch == '"' else blank(ch))
                 if ch == "\n":
                     line += 1
             i = j
@@ -193,12 +201,13 @@ def strip_source(src):
                 while j < n and src[j] != "'":
                     j += 1
                 j = min(j + 1, n)
-                out.append(" " * (j - i))
+                out.append("".join("'" if ch == "'" else " "
+                                   for ch in src[i:j]))
                 i = j
                 prev_ident = False
                 continue
             if nxt != "" and third == "'":
-                out.append("   ")
+                out.append("' '")
                 i += 3
                 prev_ident = False
                 continue
@@ -701,6 +710,1000 @@ def allowed_rules_at(comments, line):
 
 
 # --------------------------------------------------------------------------
+# Sigcheck tier (DESIGN.md §11): a crate-wide signature index (every fn /
+# method with arity + receiver kind, every struct with its fields, every
+# enum with its variants) and shape checks over call sites, struct
+# literals and Type::Variant paths. Mirrors rust/src/analysis/sigcheck.rs
+# rule-for-rule. Resolution is conservative: anything that cannot be
+# parsed or resolved with confidence is skipped, never guessed.
+
+KEYWORDS = frozenset(
+    "as box break const continue crate dyn else enum extern fn for if impl "
+    "in let loop match mod move mut pub ref return self Self static struct "
+    "super trait true false type union unsafe use where while".split())
+
+EXTERNAL_PREFIXES = ("rust/tests/", "rust/benches/", "examples/")
+
+IDENT_RE = re.compile(r"[A-Za-z_]\w*")
+CALL_RE = re.compile(r"\b([A-Za-z_]\w*)\s*\(")
+LIT_RE = re.compile(r"\b([A-Z]\w*)\s*\{")
+PAIR_RE = re.compile(r"\b([A-Za-z_]\w*)\s*::\s*(?=([A-Za-z_]\w*))")
+FN_RE = re.compile(r"\bfn\s+([A-Za-z_]\w*)")
+STRUCT_RE = re.compile(r"\bstruct\s+([A-Za-z_]\w*)")
+ENUM_RE = re.compile(r"\benum\s+([A-Za-z_]\w*)")
+CONST_DECL_RE = re.compile(r"\bconst\s+([A-Za-z_]\w*)")
+TRAIT_RE = re.compile(r"\btrait\s+[A-Za-z_]\w*")
+IMPL_RE = re.compile(r"\bimpl\b")
+TYPE_HEAD_RE = re.compile(r"(?:dyn\s+)?(?:[A-Za-z_]\w*::)*([A-Za-z_]\w*)")
+SCREAMING_RE = re.compile(r"[A-Z][A-Z0-9_]*")
+
+CLOSER = {"(": ")", "{": "}", "[": "]"}
+
+# --------------------------------------------------------------------------
+# Shared manifest (tools/lint_fixtures.txt): the per-rule fixture battery
+# consumed by BOTH `--self-test` here and `analysis::tests` in Rust (via
+# include_str!), plus the std-shared dot-method blocklist the call-arity
+# rule needs. One file, two loaders — the mirrors cannot drift.
+
+_MANIFEST = None
+
+
+def parse_manifest(text):
+    """-> (std_methods, cases); cases: [(name, rule, want_fire, files)].
+    Sections open with `=== std-methods` / `=== case <name>`; case files
+    open with `--- <path>` and run verbatim to the next marker."""
+    std, cases = [], []
+    mode, case = None, None
+    fpath, flines = None, None
+
+    def end_file():
+        nonlocal fpath, flines
+        if case is not None and fpath is not None:
+            while flines and flines[-1] == "":
+                flines.pop()
+            case["files"][fpath] = "\n".join(flines) + "\n"
+        fpath, flines = None, None
+
+    def end_case():
+        nonlocal case
+        end_file()
+        if case is not None:
+            cases.append((case["name"], case["rule"], case["want"],
+                          case["files"]))
+        case = None
+
+    for line in text.split("\n"):
+        if line.startswith("=== "):
+            end_case()
+            head = line[4:].strip()
+            if head == "std-methods":
+                mode = "std"
+            else:
+                mode = "case"
+                case = {"name": head[5:].strip() if head.startswith("case ")
+                        else head, "rule": "", "want": False, "files": {}}
+            continue
+        if mode == "std":
+            if not line.strip() or line.lstrip().startswith("#"):
+                continue
+            std.extend(line.split())
+        elif mode == "case":
+            if fpath is None:
+                if line.startswith("--- "):
+                    fpath, flines = line[4:].strip(), []
+                elif line.startswith("rule "):
+                    case["rule"] = line[5:].strip()
+                elif line.startswith("want "):
+                    case["want"] = line[5:].strip() == "fire"
+            elif line.startswith("--- "):
+                end_file()
+                fpath, flines = line[4:].strip(), []
+            else:
+                flines.append(line)
+    end_case()
+    return frozenset(std), cases
+
+
+def manifest():
+    global _MANIFEST
+    if _MANIFEST is None:
+        path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "lint_fixtures.txt")
+        try:
+            text = open(path, encoding="utf-8").read()
+        except OSError as e:
+            sys.exit(f"srclint: missing shared fixture manifest: {e}")
+        _MANIFEST = parse_manifest(text)
+    return _MANIFEST
+
+
+def std_dot_methods():
+    return manifest()[0]
+
+
+def skip_ws(code, i):
+    while i < len(code) and code[i].isspace():
+        i += 1
+    return i
+
+
+def col_of(code, idx):
+    return idx - code.rfind("\n", 0, idx)
+
+
+def prev_nonws(code, i):
+    """(second-last, last) non-whitespace chars before index i ("" pads)."""
+    j = i - 1
+    while j >= 0 and code[j].isspace():
+        j -= 1
+    if j < 0:
+        return "", ""
+    k = j - 1
+    while k >= 0 and code[k].isspace():
+        k -= 1
+    return (code[k] if k >= 0 else ""), code[j]
+
+
+def prev_token(code, i):
+    """The identifier token ending directly before index i (ws allowed)."""
+    j = i - 1
+    while j >= 0 and code[j].isspace():
+        j -= 1
+    end = j + 1
+    while j >= 0 and (code[j].isalnum() or code[j] == "_"):
+        j -= 1
+    return code[j + 1:end]
+
+
+def skip_angles(code, i):
+    """code[i] == '<' in type position: index one past the matching '>'
+    (every '<' opens; the '>' of '->' and '=>' never closes)."""
+    d = 0
+    while i < len(code):
+        c = code[i]
+        if c == "<":
+            d += 1
+        elif c == ">" and code[i - 1] not in "-=":
+            d -= 1
+            if d == 0:
+                return i + 1
+        i += 1
+    return len(code)
+
+
+def split_delim(code, open_idx, expr_mode):
+    """Split the delimited span starting at code[open_idx] (one of `([{`)
+    into its top-level comma-separated parts. Returns (parts, close_idx)
+    or (None, None) when the span cannot be confidently parsed. In expr
+    mode `<` only opens an angle group after `::` (turbofish) and a `|`
+    at the start of a part (or after `move`) begins a closure; in type
+    mode every `<` opens an angle group."""
+    close = CLOSER[code[open_idx]]
+    par = brk = brc = ang = 0
+    parts, cur = [], []
+    i, n = open_idx + 1, len(code)
+    while i < n:
+        c = code[i]
+        if par == brk == brc == ang == 0 and c == close:
+            parts.append("".join(cur))
+            return parts, i
+        if c == "(":
+            par += 1
+        elif c == ")":
+            par -= 1
+            if par < 0:
+                return None, None
+        elif c == "[":
+            brk += 1
+        elif c == "]":
+            brk -= 1
+            if brk < 0:
+                return None, None
+        elif c == "{":
+            brc += 1
+        elif c == "}":
+            brc -= 1
+            if brc < 0:
+                return None, None
+        elif c == "<":
+            if not expr_mode or ang > 0 or code[i - 2:i] == "::":
+                ang += 1
+        elif c == ">":
+            if ang > 0 and code[i - 1] not in "-=":
+                ang -= 1
+        elif c == "," and par == brk == brc == ang == 0:
+            parts.append("".join(cur))
+            cur = []
+            i += 1
+            continue
+        elif c == "|" and expr_mode and par == brk == brc == ang == 0:
+            head = "".join(cur).strip()
+            if head in ("", "move"):
+                j, d2 = i + 1, 0
+                while j < n:
+                    cj = code[j]
+                    if cj in "([":
+                        d2 += 1
+                    elif cj in ")]":
+                        d2 -= 1
+                    elif cj == "|" and d2 == 0:
+                        break
+                    j += 1
+                if j >= n:
+                    return None, None
+                cur.append(code[i:j + 1])
+                i = j + 1
+                continue
+        cur.append(c)
+        i += 1
+    return None, None
+
+
+def count_call_args(code, open_idx):
+    """Argument count of the call/ctor/pattern span at code[open_idx]
+    ('('), or None when unparseable or a `..` rest pattern is present."""
+    parts, _ = split_delim(code, open_idx, expr_mode=True)
+    if parts is None:
+        return None
+    parts = [p.strip() for p in parts]
+    if any(p == ".." for p in parts):
+        return None
+    return len([p for p in parts if p])
+
+
+def strip_attrs(s):
+    s = s.lstrip()
+    while s.startswith("#[") or s.startswith("#!["):
+        j = s.find("[")
+        d, k = 0, j
+        while k < len(s):
+            if s[k] == "[":
+                d += 1
+            elif s[k] == "]":
+                d -= 1
+                if d == 0:
+                    break
+            k += 1
+        if d != 0:
+            return s
+        s = s[k + 1:].lstrip()
+    return s
+
+
+def _is_self_param(p):
+    p = p.lstrip("&").strip()
+    if p.startswith("'"):  # &'a self / &'a mut self
+        p = p.split(None, 1)[1].strip() if " " in p else ""
+    if p.startswith("mut ") or p.startswith("mut\t"):
+        p = p[3:].lstrip()
+    return p == "self" or re.match(r"self\s*:", p) is not None
+
+
+def parse_fn_sig(code, name_end):
+    """Parse an fn signature whose name ends at name_end (generics may
+    follow). Returns (arity, has_self) or None when unparseable."""
+    i = skip_ws(code, name_end)
+    if i < len(code) and code[i] == "<":
+        i = skip_ws(code, skip_angles(code, i))
+    if i >= len(code) or code[i] != "(":
+        return None
+    parts, _ = split_delim(code, i, expr_mode=False)
+    if parts is None:
+        return None
+    parts = [strip_attrs(p.strip()) for p in parts]
+    parts = [p for p in parts if p]
+    has_self = False
+    if parts and _is_self_param(parts[0]):
+        has_self = True
+        parts = parts[1:]
+    return len(parts), has_self
+
+
+def _ident_at(code, i):
+    return i < len(code) and (code[i].isalnum() or code[i] == "_")
+
+
+def parse_struct_shape(code, name_end):
+    """Shape of a struct decl whose name ends at name_end:
+    ("named", [fields]) / ("tuple", arity) / ("unit",) / None."""
+    i = skip_ws(code, name_end)
+    if i < len(code) and code[i] == "<":
+        i = skip_ws(code, skip_angles(code, i))
+    if i >= len(code):
+        return None
+    if code[i] == ";":
+        return ("unit",)
+    if code[i] == "(":
+        parts, _ = split_delim(code, i, expr_mode=False)
+        if parts is None:
+            return None
+        return ("tuple", len([p for p in parts if p.strip()]))
+    if code.startswith("where", i) and not _ident_at(code, i + 5):
+        i = code.find("{", i)
+        if i == -1:
+            return None
+    if i < len(code) and code[i] == "{":
+        parts, _ = split_delim(code, i, expr_mode=False)
+        if parts is None:
+            return None
+        fields = []
+        for p in parts:
+            p = strip_attrs(p.strip())
+            if not p:
+                continue
+            m = re.match(r"(?:pub(?:\([^)]*\))?\s+)?([A-Za-z_]\w*)\s*:", p)
+            if m is None:
+                return None
+            fields.append(m.group(1))
+        return ("named", fields)
+    return None
+
+
+def parse_enum_variants(code, name_end):
+    """{variant: shape} for an enum decl whose name ends at name_end, or
+    None. Shapes as in parse_struct_shape."""
+    i = skip_ws(code, name_end)
+    if i < len(code) and code[i] == "<":
+        i = skip_ws(code, skip_angles(code, i))
+    if code.startswith("where", i) and not _ident_at(code, i + 5):
+        i = code.find("{", i)
+        if i == -1:
+            return None
+    if i >= len(code) or code[i] != "{":
+        return None
+    parts, _ = split_delim(code, i, expr_mode=False)
+    if parts is None:
+        return None
+    variants = {}
+    for p in parts:
+        p = strip_attrs(p.strip())
+        if not p:
+            continue
+        m = re.match(r"([A-Za-z_]\w*)", p)
+        if m is None:
+            return None
+        rest = p[m.end():].lstrip()
+        if not rest or rest.startswith("="):
+            variants[m.group(1)] = ("unit",)
+        elif rest.startswith("("):
+            sub, _ = split_delim(rest, 0, expr_mode=False)
+            if sub is None:
+                return None
+            variants[m.group(1)] = ("tuple",
+                                    len([q for q in sub if q.strip()]))
+        elif rest.startswith("{"):
+            sub, _ = split_delim(rest, 0, expr_mode=False)
+            if sub is None:
+                return None
+            fields = []
+            for q in sub:
+                q = strip_attrs(q.strip())
+                if not q:
+                    continue
+                fm = re.match(r"([A-Za-z_]\w*)\s*:", q)
+                if fm is None:
+                    return None
+                fields.append(fm.group(1))
+            variants[m.group(1)] = ("named", fields)
+        else:
+            return None
+    return variants
+
+
+def impl_blocks(code):
+    """All impl blocks as (target_type_name|None, is_trait_impl,
+    body_open, body_end). `impl Trait` in type position is skipped by the
+    preceding-char guard; the target name is the last path segment of the
+    implemented-on type with generics stripped."""
+    out = []
+    for m in IMPL_RE.finditer(code):
+        _p2, p1 = prev_nonws(code, m.start())
+        if p1 in (">", ":", "(", ",", "&", "<", "="):
+            continue  # `-> impl`, `: impl`, `(impl` ... — a type, not a block
+        i = skip_ws(code, m.end())
+        if i < len(code) and code[i] == "<":
+            i = skip_ws(code, skip_angles(code, i))
+        open_idx = code.find("{", i)
+        if open_idx == -1:
+            continue
+        header = code[i:open_idx]
+        fm = re.search(r"\bfor\b", header)
+        tgt = header[fm.end():] if fm else header
+        wm = re.search(r"\bwhere\b", tgt)
+        if wm:
+            tgt = tgt[:wm.start()]
+        tgt = tgt.strip().lstrip("&").strip()
+        name = None
+        if not tgt.startswith("<"):
+            tm = TYPE_HEAD_RE.match(tgt)
+            name = tm.group(1) if tm else None
+        out.append((name, fm is not None, open_idx, match_brace(code, open_idx)))
+    return out
+
+
+def trait_spans(code):
+    out = []
+    for m in TRAIT_RE.finditer(code):
+        open_idx = code.find("{", m.end())
+        semi = code.find(";", m.end())
+        if open_idx == -1 or (semi != -1 and semi < open_idx):
+            continue
+        out.append((open_idx, match_brace(code, open_idx)))
+    return out
+
+
+class SigIndex:
+    """Crate-wide signature index over the library sources (rust/src,
+    module-level items; impl/trait bodies outside #[cfg(test)])."""
+
+    def __init__(self):
+        self.fns = {}        # (module, name) -> (arity, has_self) | None
+        self.fn_names = {}   # name -> [(module, sig)] for unique fallback
+        self.methods = {}    # (type, name) -> sig | None  (inherent only)
+        self.dot = {}        # name -> set of self-arities | None poisoned
+        self.assoc = {}      # type -> set of assoc fn/const names, all impls
+        self.structs = {}    # name -> (module, shape) | None on conflict
+        self.enums = {}      # name -> (module, variants) | None on conflict
+
+
+def _merge_dot(dot, name, sig):
+    if dot.get(name, set()) is None:
+        return
+    if sig is None:
+        dot[name] = None
+    elif sig[1]:
+        dot.setdefault(name, set()).add(sig[0])
+
+
+def build_sig_index(meta):
+    """meta: {path: (code, depths, ...)} -> SigIndex."""
+    idx = SigIndex()
+    for path in sorted(meta):
+        mp = module_path_of(path)
+        if mp is None:
+            continue
+        code, depths = meta[path][0], meta[path][1]
+        test_lines = cfg_test_lines(code)
+        impls = impl_blocks(code)
+        for m in FN_RE.finditer(code):
+            if depths[m.start()] != 0:
+                continue
+            sig = parse_fn_sig(code, m.end())
+            key = (mp, m.group(1))
+            idx.fns[key] = None if (key in idx.fns and idx.fns[key] != sig) \
+                else sig
+            idx.fn_names.setdefault(m.group(1), []).append((mp, sig))
+        for m in STRUCT_RE.finditer(code):
+            if depths[m.start()] != 0:
+                continue
+            name = m.group(1)
+            shape = parse_struct_shape(code, m.end())
+            idx.structs[name] = None if name in idx.structs or shape is None \
+                else (mp, shape)
+        for m in ENUM_RE.finditer(code):
+            if depths[m.start()] != 0:
+                continue
+            name = m.group(1)
+            variants = parse_enum_variants(code, m.end())
+            idx.enums[name] = None if name in idx.enums or variants is None \
+                else (mp, variants)
+        for tname, is_trait_impl, o, e in impls:
+            if tname is None or line_of(code, o) in test_lines:
+                continue
+            d0 = depths[o] + 1
+            for m in FN_RE.finditer(code, o, e):
+                if depths[m.start()] != d0:
+                    continue
+                sig = parse_fn_sig(code, m.end())
+                idx.assoc.setdefault(tname, set()).add(m.group(1))
+                _merge_dot(idx.dot, m.group(1), sig)
+                if is_trait_impl:
+                    continue
+                key = (tname, m.group(1))
+                idx.methods[key] = None \
+                    if (key in idx.methods and idx.methods[key] != sig) else sig
+            for m in CONST_DECL_RE.finditer(code, o, e):
+                if depths[m.start()] == d0:
+                    idx.assoc.setdefault(tname, set()).add(m.group(1))
+        for o, e in trait_spans(code):
+            if line_of(code, o) in test_lines:
+                continue
+            d0 = depths[o] + 1
+            for m in FN_RE.finditer(code, o, e):
+                if depths[m.start()] == d0:
+                    _merge_dot(idx.dot, m.group(1), parse_fn_sig(code, m.end()))
+    return idx
+
+
+class FileSigs:
+    """Signatures declared by one file, for intra-file resolution (test,
+    bench and example files are not in the crate index)."""
+
+    def __init__(self, code, depths):
+        self.impls = impl_blocks(code)
+        tspans = trait_spans(code)
+        spans = [(o, e) for _n, _t, o, e in self.impls] + tspans
+        self.fns, self.structs, self.enums = {}, {}, {}
+        self.methods, self.dot, self.assoc = {}, {}, {}
+
+        def in_span(pos):
+            return any(o <= pos < e for o, e in spans)
+
+        for m in FN_RE.finditer(code):
+            if in_span(m.start()):
+                continue
+            sig = parse_fn_sig(code, m.end())
+            if sig is not None and sig[1]:
+                continue  # a stray self param outside impls: not callable
+            name = m.group(1)
+            self.fns[name] = None if (name in self.fns
+                                      and self.fns[name] != sig) else sig
+        for m in STRUCT_RE.finditer(code):
+            if in_span(m.start()):
+                continue
+            name = m.group(1)
+            shape = parse_struct_shape(code, m.end())
+            self.structs[name] = None if name in self.structs or shape is None \
+                else shape
+        for m in ENUM_RE.finditer(code):
+            if in_span(m.start()):
+                continue
+            name = m.group(1)
+            variants = parse_enum_variants(code, m.end())
+            self.enums[name] = None if name in self.enums or variants is None \
+                else variants
+        for tname, is_trait_impl, o, e in self.impls:
+            if tname is None:
+                continue
+            d0 = depths[o] + 1
+            for m in FN_RE.finditer(code, o, e):
+                if depths[m.start()] != d0:
+                    continue
+                sig = parse_fn_sig(code, m.end())
+                self.assoc.setdefault(tname, set()).add(m.group(1))
+                _merge_dot(self.dot, m.group(1), sig)
+                if is_trait_impl:
+                    continue
+                key = (tname, m.group(1))
+                self.methods[key] = None \
+                    if (key in self.methods and self.methods[key] != sig) \
+                    else sig
+        for o, e in tspans:
+            d0 = depths[o] + 1
+            for m in FN_RE.finditer(code, o, e):
+                if depths[m.start()] == d0:
+                    _merge_dot(self.dot, m.group(1), parse_fn_sig(code, m.end()))
+
+    def enclosing_impl(self, pos):
+        best = None
+        for tname, _t, o, e in self.impls:
+            if o <= pos < e and (best is None or o > best[1]):
+                best = (tname, o)
+        return best[0] if best else None
+
+
+def crate_bindings(uses, own, modules):
+    """Imported name -> absolute crate-module path tuple (last segment is
+    the item), plus glob-imported module paths. Crate-rooted only."""
+    binds, globs = {}, []
+    for u in uses:
+        for segs, alias in u.leaves:
+            root = segs[0]
+            if root in ("crate", "substrat"):
+                ab = list(segs[1:])
+            elif root == "self" and own is not None:
+                ab = list(own) + list(segs[1:])
+            elif root == "super" and own is not None:
+                base, rel = list(own), list(segs)
+                while rel and rel[0] == "super" and base:
+                    base.pop()
+                    rel.pop(0)
+                if rel and rel[0] == "super":
+                    continue
+                ab = base + rel
+            elif own is not None and modules.get(own) is not None \
+                    and root in modules[own].children:
+                ab = list(own) + list(segs)
+            else:
+                continue
+            if not ab:
+                continue
+            if ab[-1] == "*":
+                globs.append(tuple(ab[:-1]))
+                continue
+            if ab[-1] == "self":
+                ab = ab[:-1]
+                if not ab:
+                    continue
+            name = alias or ab[-1]
+            if name != "_":
+                binds[name] = tuple(ab)
+    return binds, globs
+
+
+def lookup_free_fn(idx, modules, ab):
+    """Resolve absolute segs (ending in the called name) to a free-fn
+    signature or a tuple-struct ctor. Returns ("fn"|"ctor", sig) or None
+    (not resolvable with confidence — skip)."""
+    mod, name = tuple(ab[:-1]), ab[-1]
+    if (mod, name) in idx.fns:
+        sig = idx.fns[(mod, name)]
+        return ("fn", sig) if sig is not None else None
+    ent = idx.structs.get(name)
+    if ent is not None and ent[0] == mod and ent[1][0] == "tuple":
+        return ("ctor", (ent[1][1], False))
+    m = modules.get(mod)
+    if m is not None and (name in m.items or m.glob_reexport):
+        # a re-export or an item we did not sig-index; fall back to the
+        # crate-unique fn of that name, else stay permissive
+        cands = idx.fn_names.get(name, [])
+        if len(cands) == 1 and cands[0][1] is not None:
+            return ("fn", cands[0][1])
+    return None
+
+
+def resolve_type(name, fs, binds, idx, qualified):
+    """Resolve a type name at a use site to ("struct"|"enum", shape_or_
+    variants, origin) or None. `qualified` means the name was reached via
+    a `::` path (accept a crate-unique index entry without an import)."""
+    if fs is not None and name in fs.structs:
+        shape = fs.structs[name]
+        return None if shape is None else ("struct", shape, "local")
+    if fs is not None and name in fs.enums:
+        variants = fs.enums[name]
+        return None if variants is None else ("enum", variants, "local")
+    target = None
+    if name in binds:
+        target = binds[name][-1]
+    elif qualified:
+        target = name
+    if target is None:
+        return None
+    ent = idx.structs.get(target)
+    if ent is not None:
+        return ("struct", ent[1], "crate")
+    ent = idx.enums.get(target)
+    if ent is not None:
+        return ("enum", ent[1], "crate")
+    return None
+
+
+def literal_field_names(code, open_idx):
+    """Field names used in the struct-literal/pattern body at open_idx
+    ('{'). Returns (names, has_rest) or (None, None) when unparseable."""
+    parts, _ = split_delim(code, open_idx, expr_mode=True)
+    if parts is None:
+        return None, None
+    names, has_rest = [], False
+    for p in parts:
+        p = strip_attrs(p.strip())
+        if not p:
+            continue
+        if p.startswith(".."):
+            has_rest = True
+            continue
+        m = re.match(r"(?:ref\s+)?(?:mut\s+)?([A-Za-z_]\w*)\s*(:(?!:)|@|$)", p)
+        if m is None:
+            return None, None
+        names.append(m.group(1))
+    return names, has_rest
+
+
+def sig_emit(out, rule, path, code, idx0, msg, origin):
+    """Report under the specific rule, or as pub-sig-drift when the shape
+    came from the crate index and the use site is an external surface
+    (tests / benches / examples) — the drift class ROADMAP item 1 names."""
+    if origin == "crate" and path.startswith(EXTERNAL_PREFIXES):
+        rule, msg = "pub-sig-drift", f"pub signature drift ({rule}): {msg}"
+    out.append(Finding(rule, path, line_of(code, idx0), col_of(code, idx0),
+                       msg))
+
+
+def check_field_body(kind, label, shape, code, open_idx, path, idx0, origin,
+                     out):
+    """Shared struct-literal / struct-variant field check. `shape` must be
+    ("named", fields); `label` is `Name` or `Enum::Variant`."""
+    fields = shape[1]
+    names, has_rest = literal_field_names(code, open_idx)
+    if names is None:
+        return
+    for nm in names:
+        if nm not in fields:
+            sig_emit(out, "struct-fields" if kind == "struct" else
+                     "enum-variant", path, code, idx0,
+                     f"{kind} `{label}` has no field `{nm}`", origin)
+    if not has_rest:
+        missing = [f for f in fields if f not in names]
+        if missing:
+            sig_emit(out, "struct-fields" if kind == "struct" else
+                     "enum-variant", path, code, idx0,
+                     f"{kind} literal `{label}` missing field(s) "
+                     f"`{', '.join(missing)}` without `..`", origin)
+
+
+def back_path_segments(code, i0):
+    """Collect the `a::b::` prefix segments ending at ident start i0,
+    walking backwards. Returns (segs, qualified_further) where
+    qualified_further means the walk stopped at something unresolvable
+    (`>::`, `)::` ...) rather than the path start."""
+    segs = []
+    i = i0
+    while True:
+        p2, p1 = prev_nonws(code, i)
+        if p1 != ":" or p2 != ":":
+            return segs, False
+        j = i - 1
+        while j >= 0 and code[j].isspace():
+            j -= 1
+        j -= 1  # first ':'
+        while j >= 0 and code[j].isspace():
+            j -= 1
+        j -= 1  # second ':'
+        while j >= 0 and code[j].isspace():
+            j -= 1
+        if j < 0 or not (code[j].isalnum() or code[j] == "_"):
+            return segs, True  # `<T as X>::f`, `Vec::<u8>::f` — give up
+        end = j + 1
+        while j >= 0 and (code[j].isalnum() or code[j] == "_"):
+            j -= 1
+        seg = code[j + 1:end]
+        if seg[0].isdigit():
+            return segs, True
+        segs.insert(0, seg)
+        i = j + 1
+
+
+def rule_sigcheck(path, code, depths, uses, modules, idx, out):
+    own = module_path_of(path)
+    fs = FileSigs(code, depths)
+    binds, globs = crate_bindings(uses, own, modules)
+
+    def absolutize(segs):
+        """Absolute crate path for leading segs of a `::` call path, or
+        None. segs excludes the final called/used name."""
+        s0 = segs[0]
+        if s0 in ("crate", "substrat"):
+            return segs[1:]
+        if s0 == "self" and own is not None:
+            return list(own) + segs[1:]
+        if s0 == "super" and own is not None:
+            base, rel = list(own), list(segs)
+            while rel and rel[0] == "super" and base:
+                base.pop()
+                rel.pop(0)
+            return None if rel and rel[0] == "super" else base + rel
+        if s0 in binds:
+            return list(binds[s0]) + segs[1:]
+        if own is not None and modules.get(own) is not None \
+                and s0 in modules[own].children:
+            return list(own) + segs
+        return None
+
+    def self_type(pos):
+        return fs.enclosing_impl(pos)
+
+    def method_sig(tname, name):
+        if (tname, name) in fs.methods:
+            return fs.methods[(tname, name)], "local"
+        if (tname, name) in idx.methods:
+            return idx.methods[(tname, name)], "crate"
+        return None, None
+
+    def is_enum_name(name, qualified):
+        r = resolve_type(name, fs, binds, idx, qualified)
+        return r is not None and r[0] == "enum"
+
+    def check_assoc_call(tname, fname, i0, open_idx, origin_hint):
+        r = resolve_type(tname, fs, binds, idx, qualified=True)
+        if r is not None and r[0] == "enum":
+            return  # Enum::Variant(..) is the enum-variant rule's job
+        sig, origin = method_sig(tname, fname)
+        if sig is None:
+            return
+        got = count_call_args(code, open_idx)
+        if got is None:
+            return
+        expected = sig[0] + (1 if sig[1] else 0)  # UFCS receiver is explicit
+        if got != expected:
+            sig_emit(out, "call-arity", path, code, i0,
+                     f"`{tname}::{fname}` takes {expected} argument(s), "
+                     f"call passes {got}", origin_hint or origin)
+
+    # --- call sites -------------------------------------------------------
+    for m in CALL_RE.finditer(code):
+        name = m.group(1)
+        i0 = m.start(1)
+        if name in KEYWORDS or (i0 > 0 and code[i0 - 1] == "$"):
+            continue
+        open_idx = m.end() - 1
+        p2, p1 = prev_nonws(code, i0)
+        if p1 == "." and p2 != ".":
+            # dot call: `self.m(..)` checks the enclosing impl's methods;
+            # any other receiver is arity-checked against every known
+            # self-method of that name, unless the name is std-shared
+            recv = prev_token(code, code.rfind(".", 0, i0))
+            got = count_call_args(code, open_idx)
+            if got is None:
+                continue
+            if recv == "self":
+                tname = self_type(i0)
+                if tname is None:
+                    continue
+                sig, origin = method_sig(tname, name)
+                if sig is not None and sig[1] and got != sig[0]:
+                    sig_emit(out, "call-arity", path, code, i0,
+                             f"method `{name}` takes {sig[0]} argument(s), "
+                             f"call passes {got}", origin)
+                continue
+            if name in std_dot_methods():
+                continue
+            cands = set()
+            for table in (idx.dot, fs.dot):
+                c = table.get(name)
+                if c is None and name in table:
+                    cands = None
+                    break
+                cands |= c or set()
+            if not cands:
+                continue
+            if got not in cands:
+                origin = "crate" if idx.dot.get(name) else "local"
+                sig_emit(out, "call-arity", path, code, i0,
+                         f"method `{name}` takes {sorted(cands)} argument(s), "
+                         f"call passes {got}", origin)
+            continue
+        if p1 == ":" and p2 == ":":
+            segs, broken = back_path_segments(code, i0)
+            if broken or not segs:
+                continue
+            if segs == ["Self"]:
+                tname = self_type(i0)
+                if tname is not None:
+                    check_assoc_call(tname, name, i0, open_idx, None)
+                continue
+            if segs[0] in ("std", "core", "alloc", "proc_macro"):
+                continue
+            if len(segs) == 1 and segs[0][0].isupper():
+                t = segs[0]
+                if t in binds:
+                    check_assoc_call(binds[t][-1], name, i0, open_idx, None)
+                elif t in fs.structs or t in fs.enums or t in fs.assoc:
+                    check_assoc_call(t, name, i0, open_idx, None)
+                continue  # neither local nor crate-bound: std or unknown
+            ab = absolutize(segs)
+            if ab is None:
+                continue
+            if ab and ab[-1][0].isupper():
+                check_assoc_call(ab[-1], name, i0, open_idx, None)
+                continue
+            hit = lookup_free_fn(idx, modules, list(ab) + [name])
+            if hit is None:
+                continue
+            got = count_call_args(code, open_idx)
+            if got is None:
+                continue
+            kind, sig = hit
+            if got != sig[0]:
+                what = f"`{name}` takes {sig[0]} argument(s), call passes " \
+                    f"{got}" if kind == "fn" else \
+                    f"tuple struct `{name}` has {sig[0]} field(s), " \
+                    f"constructor passes {got}"
+                sig_emit(out, "call-arity", path, code, i0, what, "crate")
+            continue
+        # bare call
+        if prev_token(code, i0) == "fn":
+            continue
+        sig, origin, kind = None, None, "fn"
+        if name in fs.fns:
+            sig, origin = fs.fns[name], "local"
+        elif name in fs.structs:
+            shape = fs.structs[name]
+            if shape is not None and shape[0] == "tuple":
+                sig, origin, kind = (shape[1], False), "local", "ctor"
+        elif name in binds:
+            hit = lookup_free_fn(idx, modules, list(binds[name]))
+            if hit is not None:
+                kind, sig = hit
+                origin = "crate"
+        else:
+            for g in globs:
+                if (g, name) in idx.fns:
+                    sig, origin = idx.fns[(g, name)], "crate"
+                    break
+        if sig is None:
+            continue
+        if re.search(r"\blet\s+(?:mut\s+)?%s\b" % name, code) or \
+                re.search(r"\b%s\s*:(?!:)" % name, code):
+            continue  # the name is (or may be) shadowed by a binding
+        got = count_call_args(code, open_idx)
+        if got is None or got == sig[0]:
+            continue
+        what = f"`{name}` takes {sig[0]} argument(s), call passes {got}" \
+            if kind == "fn" else \
+            f"tuple struct `{name}` has {sig[0]} field(s), " \
+            f"constructor passes {got}"
+        sig_emit(out, "call-arity", path, code, i0, what, origin)
+
+    # --- struct literals --------------------------------------------------
+    for m in LIT_RE.finditer(code):
+        name = m.group(1)
+        i0 = m.start(1)
+        if name == "Self" or (i0 > 0 and code[i0 - 1] == "$"):
+            continue
+        tok = prev_token(code, i0)
+        if tok in ("struct", "enum", "union", "trait", "impl", "for", "mod",
+                   "use", "fn", "dyn", "as", "type", "where", "if", "while",
+                   "match", "in", "loop", "unsafe"):
+            continue
+        p2, p1 = prev_nonws(code, i0)
+        if (p2, p1) == ("-", ">") or (p1 == ">" and p2 != "=") \
+                or (p1 == ":" and p2 != ":") or p1 == "+":
+            continue
+        qualified = p1 == ":" and p2 == ":"
+        if qualified:
+            segs, broken = back_path_segments(code, i0)
+            if broken or not segs:
+                continue
+            if is_enum_name(segs[-1], len(segs) > 1):
+                continue  # Enum::StructVariant — enum-variant rule's job
+        r = resolve_type(name, fs, binds, idx, qualified)
+        if r is None or r[0] != "struct" or r[1][0] != "named":
+            continue
+        check_field_body("struct", name, r[1], code, m.end() - 1, path, i0,
+                         r[2], out)
+
+    # --- Type::Variant paths ----------------------------------------------
+    for m in PAIR_RE.finditer(code):
+        a, b = m.group(1), m.group(2)
+        if not b[0].isupper() or (m.start() > 0 and code[m.start() - 1] == "$"):
+            continue
+        p2, p1 = prev_nonws(code, m.start(1))
+        qualified = p1 == ":" and p2 == ":"
+        if a == "Self":
+            a = self_type(m.start())
+            if a is None:
+                continue
+            qualified = True
+        r = resolve_type(a, fs, binds, idx, qualified)
+        if r is None or r[0] != "enum":
+            continue
+        variants, origin = r[1], r[2]
+        b_end = m.start(2) + len(b)
+        nxt = code[skip_ws(code, b_end)] if skip_ws(code, b_end) < len(code) \
+            else ""
+        assoc = set(idx.assoc.get(a, ())) | set(fs.assoc.get(a, ()))
+        if b not in variants:
+            if b in assoc:
+                continue
+            if SCREAMING_RE.fullmatch(b) and len(b) > 1:
+                continue  # assoc-const convention — unindexable via traits
+            sig_emit(out, "enum-variant", path, code, m.start(1),
+                     f"enum `{a}` has no variant `{b}`", origin)
+            continue
+        shape = variants[b]
+        if nxt == "(":
+            open_idx = skip_ws(code, b_end)
+            if shape[0] == "unit":
+                sig_emit(out, "enum-variant", path, code, m.start(1),
+                         f"variant `{a}::{b}` is a unit variant, not tuple",
+                         origin)
+            elif shape[0] == "named":
+                sig_emit(out, "enum-variant", path, code, m.start(1),
+                         f"variant `{a}::{b}` has named fields, not a "
+                         f"tuple form", origin)
+            else:
+                got = count_call_args(code, open_idx)
+                if got is not None and got != shape[1]:
+                    sig_emit(out, "enum-variant", path, code, m.start(1),
+                             f"variant `{a}::{b}` has {shape[1]} field(s), "
+                             f"{got} given", origin)
+        elif nxt == "{" and shape[0] == "named":
+            check_field_body("variant", f"{a}::{b}", shape, code,
+                             skip_ws(code, b_end), path, m.start(1), origin,
+                             out)
+
+
+# --------------------------------------------------------------------------
 # Driver.
 
 def lint_files(file_map):
@@ -712,6 +1715,7 @@ def lint_files(file_map):
         meta[path] = (code, depths, comments, raw)
     index_src = {p: (m[0], m[1]) for p, m in meta.items()}
     modules, macros = build_index(index_src)
+    sig_idx = build_sig_index(meta)
     findings = []
     for path in sorted(meta):
         code, depths, comments, raw = meta[path]
@@ -722,6 +1726,7 @@ def lint_files(file_map):
         rule_unused_import(path, code, uses, findings)
         rule_macro_import(path, code, uses, macros, findings)
         rule_line_cols(path, raw, findings)
+        rule_sigcheck(path, code, depths, uses, modules, sig_idx, findings)
         if path.startswith("rust/src/"):
             rule_timer(path, code, test_lines, findings)
             rule_rng(path, code, test_lines, findings)
@@ -788,10 +1793,12 @@ def main(argv):
 
 
 # --------------------------------------------------------------------------
-# Self-test: one positive + one negative snippet per rule, mirroring the
-# fixture tests in rust/src/analysis/lints.rs. `--self-test` is what the
-# no-cargo CI job runs before linting the tree, so a broken rule fails
-# CI even when the Rust test suite cannot build.
+# Self-test: run the shared per-rule fixture battery from
+# tools/lint_fixtures.txt. The same file drives `analysis::tests` in
+# Rust (via include_str!), so a rule that drifts between the two
+# implementations fails on whichever side disagrees with the manifest.
+# `--self-test` is what the no-cargo CI job runs before linting the
+# tree, so a broken rule fails CI even when the Rust suite cannot build.
 
 def expect(name, file_map, rule, want):
     got = [f for f in lint_files(file_map) if f.rule == rule]
@@ -803,101 +1810,26 @@ def expect(name, file_map, rule, want):
     return True
 
 
-LIB = "rust/src/lib.rs"
-
-
 def self_test():
+    std, cases = manifest()
     ok = True
-    # mod-file
-    ok &= expect("mod missing", {LIB: "pub mod gone;\n"}, "mod-file", True)
-    ok &= expect("mod present",
-                 {LIB: "pub mod here;\n", "rust/src/here.rs": "pub fn f() {}\n"},
-                 "mod-file", False)
-    # use-resolve
-    two = {LIB: "pub mod a;\n",
-           "rust/src/a.rs": "pub fn real() {}\n",
-           "rust/src/main.rs": "use substrat::a::real;\nfn main() { real(); }\n"}
-    ok &= expect("use resolves", two, "use-resolve", False)
-    bad = dict(two)
-    bad["rust/src/main.rs"] = "use substrat::a::fake;\nfn main() { fake(); }\n"
-    ok &= expect("use unresolved", bad, "use-resolve", True)
-    # unused-import
-    ok &= expect("unused import",
-                 {LIB: "use std::fmt::Debug;\npub fn f() {}\n"},
-                 "unused-import", True)
-    ok &= expect("used import",
-                 {LIB: "use std::fmt::Debug;\npub fn f(_x: &dyn Debug) {}\n"},
-                 "unused-import", False)
-    # macro-import
-    mac = ("#[macro_export]\nmacro_rules! chk {\n    () => {};\n}\n")
-    ok &= expect("macro no import",
-                 {LIB: "pub mod m;\n", "rust/src/m.rs": mac,
-                  "rust/src/u.rs": "pub fn f() { chk!(); }\n"},
-                 "macro-import", True)
-    ok &= expect("macro imported",
-                 {LIB: "pub mod m;\n", "rust/src/m.rs": mac,
-                  "rust/src/u.rs": "use crate::chk;\npub fn f() { chk!(); }\n"},
-                 "macro-import", False)
-    # line-length / trailing-ws
-    ok &= expect("long line", {LIB: "// " + "x" * 120 + "\n"}, "line-length", True)
-    ok &= expect("short line", {LIB: "// ok\n"}, "line-length", False)
-    ok &= expect("trailing ws", {LIB: "pub fn f() {} \n"}, "trailing-ws", True)
-    ok &= expect("no trailing ws", {LIB: "pub fn f() {}\n"}, "trailing-ws", False)
-    # timer-discipline (+ cfg(test) exemption and suppression)
-    clock = "use std::time::Instant;\npub fn f() { let _ = Instant::now(); }\n"
-    ok &= expect("clock in src", {LIB: clock}, "timer-discipline", True)
-    ok &= expect("clock in timer.rs",
-                 {LIB: "pub mod util;\n",
-                  "rust/src/util/mod.rs": "pub mod timer;\n",
-                  "rust/src/util/timer.rs": clock},
-                 "timer-discipline", False)
-    ok &= expect("clock in cfg(test)",
-                 {LIB: "#[cfg(test)]\nmod tests {\n    pub fn f() { let _ = "
-                       "std::time::Instant::now(); }\n}\n"},
-                 "timer-discipline", False)
-    ok &= expect("clock suppressed",
-                 {LIB: "pub fn f() {\n    // lint: allow(timer-discipline) "
-                       "wall-clock banner, not a measurement\n    let _ = "
-                       "std::time::Instant::now();\n}\n"},
-                 "timer-discipline", False)
-    ok &= expect("suppression needs reason",
-                 {LIB: "// lint: allow(timer-discipline)\n"},
-                 "suppression", True)
-    # iter-order
-    it = ("use std::collections::HashMap;\n"
-          "pub fn w(m: &HashMap<String, u32>) -> Vec<String> {\n"
-          "    let _ = crate::util::json::obj_to_line(&[]);\n"
-          "    m.keys().cloned().collect()\n}\n")
-    ok &= expect("map iteration in record writer", {LIB: it}, "iter-order", True)
-    ok &= expect("map lookup only",
-                 {LIB: it.replace("m.keys().cloned().collect()",
-                                  "vec![m.len().to_string()]")},
-                 "iter-order", False)
-    # rng-discipline
-    ok &= expect("adhoc rng",
-                 {LIB: "pub fn f() -> u64 { 0x9E37_79B9_7F4A_7C15 }\n"},
-                 "rng-discipline", True)
-    ok &= expect("rng via util", {LIB: "pub fn f() {}\n"}, "rng-discipline", False)
-    # fp-complete: the synthetic "field added to ExpConfig but not to the
-    # fingerprint" mutation from the acceptance criteria. The fixture
-    # mirrors the PR-8 field shapes (Vec-typed objectives, Option-typed
-    # operating point) so generic field types are known to parse.
-    fp_ok = ("pub struct ExpConfig {\n    pub scale: f64,\n"
-             "    pub objectives: Vec<Objective>,\n"
-             "    pub operating_point: Option<Vec<f64>>,\n"
-             "    // fp-exempt: speed only, never changes results\n"
-             "    pub threads: usize,\n}\n"
-             "pub fn config_fingerprint(cfg: &ExpConfig) -> String {\n"
-             "    format!(\"{}|{:?}|{:?}\", cfg.scale, cfg.objectives,"
-             " cfg.operating_point)\n}\n")
-    ok &= expect("fp complete", {LIB: fp_ok}, "fp-complete", False)
-    fp_bad = fp_ok.replace("    pub scale: f64,\n",
-                           "    pub scale: f64,\n    pub new_knob: bool,\n")
-    ok &= expect("fp mutation caught", {LIB: fp_bad}, "fp-complete", True)
-    fp_opt = fp_ok.replace(" cfg.operating_point)", ")")
-    assert fp_opt != fp_ok
-    ok &= expect("fp option field caught", {LIB: fp_opt}, "fp-complete", True)
-    print("self-test OK" if ok else "self-test FAILED")
+    if len(std) < 100 or "len" not in std or "push" not in std:
+        print("self-test FAILED: std-methods section did not load")
+        ok = False
+    if not cases:
+        print("self-test FAILED: no fixture cases in manifest")
+        ok = False
+    seen = set()
+    for name, rule, want, files in cases:
+        ok &= expect(name, files, rule, want)
+        seen.add(rule)
+    missing = [r for r in ALL_RULES if r not in seen]
+    if missing:
+        print("self-test FAILED: rules with no fixture case: "
+              + ", ".join(missing))
+        ok = False
+    print(f"self-test {'OK' if ok else 'FAILED'} "
+          f"({len(cases)} case(s), {len(seen)} rule(s))")
     return 0 if ok else 2
 
 
