@@ -515,7 +515,7 @@ pub fn leading_ident(s: &str) -> Option<&str> {
     Some(&s[..e])
 }
 
-fn ident_at(code: &str, i: usize) -> bool {
+pub(crate) fn ident_at(code: &str, i: usize) -> bool {
     let bytes = code.as_bytes();
     i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
 }
@@ -943,6 +943,392 @@ pub fn kw_decls<'a>(code: &'a str, kw: &str) -> Vec<(usize, &'a str, usize)> {
         }
     }
     out
+}
+
+// ------------------------------------------------------------------
+// Typed signature view (DESIGN.md §12): the crate-wide type index the
+// typeflow tier resolves bindings and call returns through. Every
+// helper mirrors its namesake in tools/srclint.py — edit both together.
+
+/// `(is_ref, head)`: a type reduced to reference-ness plus the last
+/// path-segment name of a plain concrete path; `head` is `None` when
+/// the type cannot be resolved with confidence (generic params,
+/// `impl`/`dyn`/`fn` types, tuples, slices, trait-bound sums, `Self`).
+pub type TypeInfo = (bool, Option<String>);
+
+/// One indexed fn: (param infos sans `self`, return info or `None` for
+/// unit, declares generics / has a `where` clause, takes `self`).
+pub type FnEnt = (Vec<TypeInfo>, Option<TypeInfo>, bool, bool);
+
+/// Type text -> [`TypeInfo`]. Mirrors `type_info` in srclint.py.
+pub fn type_info(t: &str, generics: &BTreeSet<String>) -> TypeInfo {
+    let mut t = t.trim();
+    let mut is_ref = false;
+    while t.starts_with('&') {
+        is_ref = true;
+        t = t[1..].trim_start();
+        if t.starts_with('\'') {
+            let bytes = t.as_bytes();
+            let mut e = 1;
+            while e < bytes.len() && (bytes[e].is_ascii_alphanumeric() || bytes[e] == b'_') {
+                e += 1;
+            }
+            if e > 1 {
+                t = t[e..].trim_start_matches(|c: char| c.is_ascii_whitespace());
+            }
+        }
+        if t.starts_with("mut") && !ident_at(t, 3) {
+            t = t[3..].trim_start();
+        }
+    }
+    let first = t.as_bytes().first().copied().unwrap_or(0);
+    if t.is_empty() || matches!(first, b'(' | b'[' | b'<' | b'*' | b'\'') {
+        return (is_ref, None);
+    }
+    for kw in ["impl", "dyn", "fn"] {
+        if t.starts_with(kw) && !ident_at(t, kw.len()) {
+            return (is_ref, None);
+        }
+    }
+    // `(?:[A-Za-z_]\w*::)*([A-Za-z_]\w*)` — a ws-free path; keep the
+    // last segment and the match end
+    let Some(mut head) = leading_ident(t) else {
+        return (is_ref, None);
+    };
+    let mut end = head.len();
+    while t[end..].starts_with("::") {
+        match leading_ident(&t[end + 2..]) {
+            Some(next) => {
+                end += 2 + next.len();
+                head = next;
+            }
+            None => break,
+        }
+    }
+    if generics.contains(head) || head == "Self" {
+        return (is_ref, None);
+    }
+    let rest = t[end..].trim_start();
+    if !rest.is_empty() && !rest.starts_with('<') {
+        return (is_ref, None); // `Foo + Send`, odd tails: not a plain path
+    }
+    (is_ref, Some(head.to_string()))
+}
+
+/// Type-parameter names declared in a `<...>` generics list body.
+pub fn generic_params(text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for part in text.split(',') {
+        let mut part = part.trim();
+        if part.is_empty() || part.starts_with('\'') {
+            continue;
+        }
+        if part.starts_with("const ") || part.starts_with("const\t") {
+            part = part[6..].trim_start();
+        }
+        if let Some(name) = leading_ident(part) {
+            out.insert(name.to_string());
+        }
+    }
+    out
+}
+
+/// Typed view of an fn signature whose name ends at `name_end`; `None`
+/// when the parameter list cannot be parsed. Mirrors `parse_fn_types`.
+#[derive(Debug, Clone)]
+pub struct FnTypes {
+    /// parameter infos, `self` receiver excluded
+    pub params: Vec<TypeInfo>,
+    /// return info; `None` for unit (no `->`)
+    pub ret: Option<TypeInfo>,
+    /// declares `<...>` generics or carries a `where` clause
+    pub generic: bool,
+    pub has_self: bool,
+    /// index of the body `{`; `None` for bodiless decls
+    pub body_open: Option<usize>,
+    /// parameter names aligned with `params` (`None` = pattern param)
+    pub param_names: Vec<Option<String>>,
+    /// generic parameter names in scope for this signature
+    pub generics: BTreeSet<String>,
+}
+
+/// `(?:mut\s+)?name\s*:(?!:)\s*type` — an annotated fn parameter.
+fn ann_arg(p: &str) -> Option<(&str, &str)> {
+    let mut s = p;
+    if let Some(rest) = s.strip_prefix("mut") {
+        if rest.starts_with(|c: char| c.is_ascii_whitespace()) {
+            s = rest.trim_start();
+        }
+    }
+    let name = leading_ident(s)?;
+    let after = s[name.len()..].trim_start();
+    let rest = after.strip_prefix(':')?;
+    if rest.starts_with(':') {
+        return None;
+    }
+    Some((name, rest.trim_start()))
+}
+
+/// Typed fn-signature parse; the typeflow counterpart of
+/// [`parse_fn_sig`].
+pub fn parse_fn_types(code: &str, name_end: usize) -> Option<FnTypes> {
+    let bytes = code.as_bytes();
+    let mut i = skip_ws(code, name_end);
+    let mut generics = BTreeSet::new();
+    let mut generic_fn = false;
+    if i < bytes.len() && bytes[i] == b'<' {
+        let j = skip_angles(code, i);
+        generics = generic_params(&code[i + 1..j - 1]);
+        generic_fn = true;
+        i = skip_ws(code, j);
+    }
+    if i >= bytes.len() || bytes[i] != b'(' {
+        return None;
+    }
+    let (parts, close) = split_delim(code, i, false)?;
+    let mut params = Vec::new();
+    let mut names = Vec::new();
+    let mut has_self = false;
+    for (k, raw) in parts.iter().enumerate() {
+        let p = strip_attrs(raw.trim());
+        if p.is_empty() {
+            continue;
+        }
+        if k == 0 && is_self_param(p) {
+            has_self = true;
+            continue;
+        }
+        match ann_arg(p) {
+            Some((name, ty)) => {
+                params.push(type_info(ty, &generics));
+                names.push(Some(name.to_string()));
+            }
+            None => {
+                params.push((false, None));
+                names.push(None);
+            }
+        }
+    }
+    let j = skip_ws(code, close + 1);
+    let mut ret = None;
+    if code[j..].starts_with("->") {
+        let mut stop = code.len();
+        for ch in ['{', ';'] {
+            if let Some(q) = code[j..].find(ch) {
+                stop = stop.min(j + q);
+            }
+        }
+        let mut rt = &code[j + 2..stop];
+        if let Some(&wp) = find_bounded(rt, "where").first() {
+            rt = &rt[..wp];
+            generic_fn = true;
+        }
+        ret = Some(type_info(rt, &generics));
+    }
+    let ob = code[close..].find('{').map(|k| close + k);
+    let semi = code[close..].find(';').map(|k| close + k);
+    let body_open = match (ob, semi) {
+        (Some(o), Some(s)) if s < o => None,
+        (Some(o), _) => Some(o),
+        (None, _) => None,
+    };
+    Some(FnTypes {
+        params,
+        ret,
+        generic: generic_fn,
+        has_self,
+        body_open,
+        param_names: names,
+        generics,
+    })
+}
+
+/// Name-keyed type view of every linted file. Duplicate names with
+/// differing typed signatures poison their entry to `None` — resolution
+/// through this index must be conservative, never guessed.
+#[derive(Debug, Default)]
+pub struct TypeIndex {
+    /// free-fn name -> entry (`None` = poisoned/unparseable)
+    pub fns: BTreeMap<String, Option<FnEnt>>,
+    /// impl/trait fn name -> entry (`None` = poisoned/unparseable)
+    pub methods: BTreeMap<String, Option<FnEnt>>,
+    /// every declared struct/enum name
+    pub types: BTreeSet<String>,
+    /// `#[derive(.. Copy ..)]` / `impl Copy for` names
+    pub copy: BTreeSet<String>,
+    /// `type N = T;` name -> target info (`None` = poisoned)
+    pub aliases: BTreeMap<String, Option<TypeInfo>>,
+}
+
+impl TypeIndex {
+    /// Resolve one level of type alias in a [`TypeInfo`]; alias chains
+    /// and poisoned aliases resolve to an unknown head.
+    pub fn resolve(&self, info: Option<TypeInfo>) -> Option<TypeInfo> {
+        let Some((is_ref, Some(head))) = &info else {
+            return info;
+        };
+        let Some(ent) = self.aliases.get(head) else {
+            return info;
+        };
+        match ent {
+            Some((ent_ref, ent_head)) => {
+                if let Some(h) = ent_head {
+                    if self.aliases.contains_key(h) {
+                        return Some((*is_ref, None));
+                    }
+                }
+                Some((*is_ref || *ent_ref, ent_head.clone()))
+            }
+            None => Some((*is_ref, None)),
+        }
+    }
+}
+
+fn tf_merge<E: Clone + PartialEq>(
+    table: &mut BTreeMap<String, Option<E>>,
+    name: &str,
+    ent: Option<E>,
+) {
+    if let Some(None) = table.get(name) {
+        return; // already poisoned
+    }
+    let existing = table.get(name).cloned().flatten();
+    if ent.is_none() || (existing.is_some() && existing != ent) {
+        table.insert(name.to_string(), None);
+    } else {
+        table.insert(name.to_string(), ent);
+    }
+}
+
+/// Harvest `#[derive(.. Copy ..)]` struct/enum names into `copy`.
+fn harvest_derive_copy(code: &str, copy: &mut BTreeSet<String>) {
+    let mut from = 0;
+    while let Some(rel) = code[from..].find("#[derive(") {
+        let start = from + rel;
+        from = start + 9;
+        let Some(close_rel) = code[from..].find(')') else {
+            break;
+        };
+        let close = from + close_rel;
+        if code.as_bytes().get(close + 1) != Some(&b']') {
+            continue;
+        }
+        let derives = &code[from..close];
+        if !derives.split(',').any(|t| t.trim() == "Copy") {
+            continue;
+        }
+        let rest = strip_attrs(&code[start..]);
+        // `^pub(?:\([^)]*\))?\s+` — a required-whitespace pub prefix
+        let mut r = rest;
+        if let Some(after) = r.strip_prefix("pub") {
+            let after = match after.strip_prefix('(') {
+                Some(inner) => match inner.find(')') {
+                    Some(k) => &inner[k + 1..],
+                    None => after,
+                },
+                None => after,
+            };
+            let trimmed = after.trim_start();
+            if trimmed.len() < after.len() {
+                r = trimmed;
+            }
+        }
+        for kw in ["struct", "enum"] {
+            if let Some(tail) = r.strip_prefix(kw) {
+                let t = tail.trim_start();
+                if t.len() < tail.len() {
+                    if let Some(name) = leading_ident(t) {
+                        copy.insert(name.to_string());
+                    }
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Harvest `\bimpl\s+Copy\s+for\s+NAME` targets into `copy`.
+fn harvest_impl_copy(code: &str, copy: &mut BTreeSet<String>) {
+    for pos in find_bounded(code, "impl") {
+        let i = skip_ws(code, pos + 4);
+        if i == pos + 4 || !code[i..].starts_with("Copy") {
+            continue;
+        }
+        let j = skip_ws(code, i + 4);
+        if j == i + 4 || !code[j..].starts_with("for") {
+            continue;
+        }
+        let k = skip_ws(code, j + 3);
+        if k == j + 3 {
+            continue;
+        }
+        if let Some(name) = leading_ident(&code[k..]) {
+            copy.insert(name.to_string());
+        }
+    }
+}
+
+/// Harvest `\btype\s+NAME\s*(<...>)?\s*=\s*TARGET;` aliases.
+fn harvest_aliases(code: &str, aliases: &mut BTreeMap<String, Option<TypeInfo>>) {
+    let bytes = code.as_bytes();
+    for (_pos, name, name_end) in kw_decls(code, "type") {
+        let mut i = skip_ws(code, name_end);
+        let mut generics = BTreeSet::new();
+        if i < bytes.len() && bytes[i] == b'<' {
+            // `<[^=;]*>`: the longest `=`/`;`-free span closed by `>`
+            let mut stop = i + 1;
+            while stop < bytes.len() && !matches!(bytes[stop], b'=' | b';') {
+                stop += 1;
+            }
+            let Some(g_rel) = code[i + 1..stop].rfind('>') else {
+                continue;
+            };
+            generics = generic_params(&code[i + 1..i + 1 + g_rel]);
+            i = skip_ws(code, i + 2 + g_rel);
+        }
+        if i >= bytes.len() || bytes[i] != b'=' {
+            continue;
+        }
+        let Some(semi_rel) = code[i + 1..].find(';') else {
+            continue;
+        };
+        if semi_rel == 0 {
+            continue; // `[^;]+` needs at least one target char
+        }
+        let target = &code[i + 1..i + 1 + semi_rel];
+        tf_merge(aliases, name, Some(type_info(target, &generics)));
+    }
+}
+
+/// Build the crate-wide [`TypeIndex`] over every linted file (already
+/// path-sorted by the driver). Mirrors `build_type_index`.
+pub fn build_type_index(files: &[Prepared]) -> TypeIndex {
+    let mut tf = TypeIndex::default();
+    for f in files {
+        let code = &f.code;
+        let mut spans: Vec<(usize, usize)> = impl_blocks(code)
+            .into_iter()
+            .map(|(_n, _t, o, e)| (o, e))
+            .collect();
+        spans.extend(trait_spans(code));
+        for (pos, name, name_end) in kw_decls(code, "fn") {
+            let ent = parse_fn_types(code, name_end)
+                .map(|ft| (ft.params, ft.ret, ft.generic, ft.has_self));
+            let in_span = spans.iter().any(|&(o, e)| o <= pos && pos < e);
+            let table = if in_span { &mut tf.methods } else { &mut tf.fns };
+            tf_merge(table, name, ent);
+        }
+        for (_pos, name, _end) in kw_decls(code, "struct") {
+            tf.types.insert(name.to_string());
+        }
+        for (_pos, name, _end) in kw_decls(code, "enum") {
+            tf.types.insert(name.to_string());
+        }
+        harvest_derive_copy(code, &mut tf.copy);
+        harvest_impl_copy(code, &mut tf.copy);
+        harvest_aliases(code, &mut tf.aliases);
+    }
+    tf
 }
 
 /// module path + item name → signature (`None` = conflict/unparseable)

@@ -268,6 +268,40 @@ pub fn find_bounded(code: &str, needle: &str) -> Vec<usize> {
     out
 }
 
+/// [`find_bounded`] restricted to matches lying fully inside
+/// `[lo, hi)` — the no-regex equivalent of `finditer(code, lo, hi)`
+/// over `\bneedle\b` (a match may not straddle either bound).
+pub fn find_bounded_in(code: &str, needle: &str, lo: usize, hi: usize) -> Vec<usize> {
+    find_bounded(code, needle)
+        .into_iter()
+        .filter(|&p| p >= lo && p + needle.len() <= hi)
+        .collect()
+}
+
+/// `(byte offset, token)` for every `[A-Za-z_]\w*` identifier starting
+/// in `[lo, hi)`, truncated at `hi` — the equivalent of
+/// `IDENT_RE.finditer(code, lo, hi)` in tools/srclint.py (unlike
+/// [`tokens`], a letter run after a digit run starts a fresh token,
+/// and digit-led runs are not tokens).
+pub fn idents_in(code: &str, lo: usize, hi: usize) -> Vec<(usize, &str)> {
+    let bytes = code.as_bytes();
+    let hi = hi.min(bytes.len());
+    let mut out = Vec::new();
+    let mut i = lo;
+    while i < hi {
+        if bytes[i].is_ascii_alphabetic() || bytes[i] == b'_' {
+            let start = i;
+            while i < hi && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+                i += 1;
+            }
+            out.push((start, &code[start..i]));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
 /// `(byte offset, token)` for every identifier-or-number token in the
 /// stripped code, in order.
 pub fn tokens(code: &str) -> Vec<(usize, &str)> {

@@ -39,6 +39,17 @@ pub const COMPILE_RULES: [&str; 6] = [
 pub const SIGCHECK_RULES: [&str; 4] =
     ["call-arity", "struct-fields", "enum-variant", "pub-sig-drift"];
 
+/// Typeflow tier (DESIGN.md §12): local move/borrow dataflow and type
+/// inference, run on every Rust file in the tree. Implemented in
+/// [`typeflow`](crate::analysis::typeflow).
+pub const TYPEFLOW_RULES: [&str; 5] = [
+    "use-after-move",
+    "double-mut-borrow",
+    "must-use-result",
+    "closure-capture-sync",
+    "type-mismatch-lite",
+];
+
 /// Discipline tier: runs on the library crate (rust/src) only, outside
 /// `#[cfg(test)]` blocks.
 pub const DISCIPLINE_RULES: [&str; 4] = [
@@ -55,6 +66,7 @@ pub const META_RULES: [&str; 1] = ["suppression"];
 pub fn all_rules() -> Vec<&'static str> {
     let mut all: Vec<&'static str> = COMPILE_RULES.to_vec();
     all.extend(SIGCHECK_RULES);
+    all.extend(TYPEFLOW_RULES);
     all.extend(DISCIPLINE_RULES);
     all.extend(META_RULES);
     all

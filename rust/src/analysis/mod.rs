@@ -9,11 +9,14 @@
 //!
 //! Layering: [`lexer`] classifies chars (code vs comment vs literal),
 //! [`items`] builds the crate model (use trees, module graph, item
-//! index, signature index), [`lints`] holds the compile-review and
-//! discipline rules, [`sigcheck`] holds the signature-analysis tier
-//! (DESIGN.md §11: call arity, struct fields, enum variants, pub
-//! signature drift), and this module is the driver — it prepares
-//! files, runs the rules, applies allow-comment suppressions (the lint
+//! index, signature index, type index), [`lints`] holds the
+//! compile-review and discipline rules, [`sigcheck`] holds the
+//! signature-analysis tier (DESIGN.md §11: call arity, struct fields,
+//! enum variants, pub signature drift), [`typeflow`] holds the local
+//! move/borrow dataflow tier (DESIGN.md §12), and this module is the
+//! driver — it prepares files, runs the requested tiers
+//! (`--tiers compile,discipline,sig,typeflow`), applies allow-comment
+//! suppressions (the lint
 //! marker followed by `allow(<rule>) <reason>`, see DESIGN.md §9), and
 //! renders findings as text or journal-style JSON lines
 //! (`util::json`).
@@ -28,11 +31,12 @@ pub mod items;
 pub mod lexer;
 pub mod lints;
 pub mod sigcheck;
+pub mod typeflow;
 
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
-use crate::analysis::items::{build_index, build_sig_index, prepare, Prepared};
+use crate::analysis::items::{build_index, build_sig_index, build_type_index, prepare, Prepared};
 use crate::util::json::{self, Json};
 
 /// Paths linted when `--paths` is not given (repo-relative).
@@ -138,33 +142,59 @@ pub fn validate_finding_record(rec: &[(String, Json)]) -> Result<(), String> {
 /// (path, line, col, rule). This is the engine both the CLI and the
 /// fixture tests drive.
 pub fn run_lint(files: &[(&str, &str)]) -> Vec<Finding> {
+    run_lint_tiers(files, None)
+}
+
+/// [`run_lint`] restricted to a subset of tiers (`compile`, `sig`,
+/// `typeflow`, `discipline`); `None` runs them all. The meta
+/// suppression rule always runs. Mirrors `lint_files` in srclint.py.
+pub fn run_lint_tiers(files: &[(&str, &str)], tiers: Option<&BTreeSet<String>>) -> Vec<Finding> {
+    let run = |t: &str| tiers.map(|set| set.contains(t)).unwrap_or(true);
     let mut sorted: Vec<(&str, &str)> = files.to_vec();
     sorted.sort_by_key(|&(p, _)| p);
     let prepared: Vec<Prepared> = sorted.iter().map(|&(p, s)| prepare(p, s)).collect();
     let have: BTreeSet<String> = prepared.iter().map(|f| f.path.clone()).collect();
     let index = build_index(&prepared);
-    let sig_idx = build_sig_index(&prepared);
+    let sig_idx = if run("sig") {
+        Some(build_sig_index(&prepared))
+    } else {
+        None
+    };
+    let type_idx = if run("typeflow") {
+        Some(build_type_index(&prepared))
+    } else {
+        None
+    };
     let std_methods = sigcheck::std_dot_methods();
     let mut findings: Vec<Finding> = Vec::new();
     for f in &prepared {
-        lints::rule_mod_file(f, &have, &mut findings);
-        lints::rule_use_resolve(f, &index, &mut findings);
-        lints::rule_unused_import(f, &mut findings);
-        lints::rule_macro_import(f, &index, &mut findings);
-        lints::rule_line_cols(f, &mut findings);
-        sigcheck::rule_sigcheck(f, &index, &sig_idx, &std_methods, &mut findings);
-        if f.path.starts_with("rust/src/") {
+        if run("compile") {
+            lints::rule_mod_file(f, &have, &mut findings);
+            lints::rule_use_resolve(f, &index, &mut findings);
+            lints::rule_unused_import(f, &mut findings);
+            lints::rule_macro_import(f, &index, &mut findings);
+            lints::rule_line_cols(f, &mut findings);
+        }
+        if let Some(sig_idx) = &sig_idx {
+            sigcheck::rule_sigcheck(f, &index, sig_idx, &std_methods, &mut findings);
+        }
+        if let Some(type_idx) = &type_idx {
+            typeflow::rule_typeflow(f, type_idx, &std_methods, &mut findings);
+        }
+        if f.path.starts_with("rust/src/") && run("discipline") {
             lints::rule_timer(f, &mut findings);
             lints::rule_rng(f, &mut findings);
             lints::rule_iter_order(f, &mut findings);
         }
         lints::rule_suppression_wellformed(f, &mut findings);
     }
-    let src: Vec<&Prepared> = prepared
-        .iter()
-        .filter(|f| f.path.starts_with("rust/src/"))
-        .collect();
-    lints::rule_fp_complete(&src, &mut findings);
+    if run("discipline") {
+        let src: Vec<&Prepared> = prepared
+            .iter()
+            .filter(|f| f.path.starts_with("rust/src/"))
+            .collect();
+        lints::rule_fp_complete(&src, &mut findings);
+    }
     let mut kept: Vec<Finding> = Vec::new();
     for fi in findings {
         if fi.rule != "suppression" {

@@ -26,7 +26,7 @@ use crate::analysis::Finding;
 pub const MANIFEST_TEXT: &str = include_str!("../../../tools/lint_fixtures.txt");
 
 /// Rust keywords a call scan must never treat as a function name.
-const KEYWORDS: [&str; 38] = [
+pub(crate) const KEYWORDS: [&str; 38] = [
     "as", "box", "break", "const", "continue", "crate", "dyn", "else", "enum", "extern", "fn",
     "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
     "return", "self", "Self", "static", "struct", "super", "trait", "true", "false", "type",
@@ -323,7 +323,7 @@ fn field_use_name(p: &str) -> Option<String> {
 }
 
 /// `[A-Z][A-Z0-9_]*` in full — the assoc-const naming convention.
-fn is_screaming(s: &str) -> bool {
+pub(crate) fn is_screaming(s: &str) -> bool {
     let bytes = s.as_bytes();
     !bytes.is_empty()
         && bytes[0].is_ascii_uppercase()
@@ -1037,9 +1037,48 @@ mod tests {
             assert_fired(&case.name, &files, &case.rule, case.want_fire);
             seen_rules.insert(case.rule.as_str());
         }
-        for rule in ["call-arity", "struct-fields", "enum-variant", "pub-sig-drift"] {
+        for rule in [
+            "call-arity",
+            "struct-fields",
+            "enum-variant",
+            "pub-sig-drift",
+            "use-after-move",
+            "double-mut-borrow",
+            "must-use-result",
+            "closure-capture-sync",
+            "type-mismatch-lite",
+        ] {
             assert!(seen_rules.contains(rule), "battery covers {rule}");
         }
+    }
+
+    #[test]
+    fn golden_transcript_matches_python_byte_for_byte() {
+        // regenerate the sorted-JSON transcript of the whole fixture
+        // battery and compare it against tools/lint_golden.jsonl, which
+        // srclint.py --self-test also regenerates and compares. Equal
+        // bytes on both sides proves the two linters' sorted --json
+        // outputs are byte-identical on the shared battery.
+        let want = include_str!("../../../tools/lint_golden.jsonl");
+        let m = parse_manifest(MANIFEST_TEXT);
+        let mut lines: Vec<String> = Vec::new();
+        for case in &m.cases {
+            lines.push(format!("# case: {}", case.name));
+            let files: Vec<(&str, &str)> = case
+                .files
+                .iter()
+                .map(|(p, s)| (p.as_str(), s.as_str()))
+                .collect();
+            for f in run_lint(&files) {
+                lines.push(crate::util::json::obj_to_line(&f.record()));
+            }
+        }
+        let got = lines.join("\n") + "\n";
+        assert_eq!(
+            got, want,
+            "tools/lint_golden.jsonl drifted from the Rust linter \
+             (regenerate with srclint.py --write-golden)"
+        );
     }
 
     #[test]

@@ -1,0 +1,1438 @@
+//! Typeflow tier (DESIGN.md §12): per-function, straight-line +
+//! branch-join dataflow with local type inference over the crate-wide
+//! [`TypeIndex`](crate::analysis::items::TypeIndex). Five rules —
+//! `use-after-move`, `double-mut-borrow`, `must-use-result`,
+//! `closure-capture-sync` and `type-mismatch-lite`. Mirrors the
+//! typeflow section of `tools/srclint.py` rule-for-rule — edit both
+//! together. The contract is the same as sigcheck's: a finding must
+//! mean a broken build — anything the local parse cannot resolve with
+//! confidence (generics, shadowed bindings, cross-arm flows, loops
+//! carrying state across iterations) bails out silently. §12 lists
+//! the bail-outs explicitly.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::items::{
+    col_of, ident_at, kw_decls, leading_ident, next_nonws, parse_fn_types, prev_nonws, prev_token,
+    skip_ws, split_delim, type_info, FnEnt, FnTypes, Prepared, TypeIndex, TypeInfo,
+};
+use crate::analysis::lexer::{find_bounded_in, idents_in, line_of, match_brace};
+use crate::analysis::sigcheck::{is_screaming, KEYWORDS};
+use crate::analysis::Finding;
+
+const PRIMITIVE_TYPES: [&str; 17] = [
+    "bool", "char", "str", "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64",
+    "i128", "isize", "f32", "f64",
+];
+const NONCOPY_STD: [&str; 16] = [
+    "String", "Vec", "Box", "VecDeque", "BTreeMap", "BTreeSet", "HashMap", "HashSet", "PathBuf",
+    "OsString", "Rc", "Arc", "RefCell", "Cell", "Mutex", "RwLock",
+];
+const NONSYNC_TYPES: [&str; 3] = ["RefCell", "Rc", "Cell"];
+/// deref-coercion targets (`&String` -> `&str` etc): never compared
+const COERCE_TARGETS: [&str; 3] = ["str", "Path", "OsStr"];
+/// smart pointers with `Deref`: skip by-ref comparisons involving them
+const DEREF_SOURCES: [&str; 4] = ["Box", "Rc", "Arc", "Cow"];
+const STD_TYPE_NEWS: [&str; 4] = ["new", "with_capacity", "from", "default"];
+const DIVERGE_WORDS: [&str; 6] = ["return", "break", "continue", "panic", "unreachable", "todo"];
+const COND_WORDS: [&str; 5] = ["if", "match", "for", "while", "loop"];
+
+/// `"copy"` / `"move"` / `None` (unknown) for a binding's info. Only
+/// `"move"` bindings participate in use-after-move: unknown types bail.
+fn copyness(info: &Option<TypeInfo>, tf: &TypeIndex) -> Option<&'static str> {
+    let (is_ref, head) = tf.resolve(info.clone())?;
+    if is_ref {
+        return Some("copy");
+    }
+    let head = head?;
+    if PRIMITIVE_TYPES.contains(&head.as_str()) || tf.copy.contains(&head) {
+        return Some("copy");
+    }
+    if NONCOPY_STD.contains(&head.as_str()) || tf.types.contains(&head) {
+        return Some("move");
+    }
+    None
+}
+
+/// Entry for a call through a (possibly `::`-qualified) callee, or
+/// `None`. Std modules/types resolve only via the few constructors
+/// whose return type is their own path head.
+fn resolve_call_ret(callee_path: &str, tf: &TypeIndex) -> Option<FnEnt> {
+    let segs: Vec<&str> = callee_path.split("::").collect();
+    if segs.iter().any(|s| s.is_empty()) || segs.contains(&"Self") {
+        return None;
+    }
+    let name = *segs.last().expect("split yields at least one segment");
+    if segs.len() >= 2 {
+        let ty = segs[segs.len() - 2];
+        if ty.as_bytes()[0].is_ascii_uppercase() {
+            if NONCOPY_STD.contains(&ty) || PRIMITIVE_TYPES.contains(&ty) {
+                if STD_TYPE_NEWS.contains(&name) {
+                    return Some((Vec::new(), Some((false, Some(ty.to_string()))), false, false));
+                }
+                return None;
+            }
+            if !tf.types.contains(ty) {
+                return None;
+            }
+            return tf.methods.get(name).cloned().flatten();
+        }
+    }
+    if matches!(segs[0], "std" | "core" | "alloc") {
+        return None;
+    }
+    tf.fns.get(name).cloned().flatten()
+}
+
+/// `NAME\s*\.\s*clone\s*\(\s*\)` spanning the whole string.
+fn clone_rhs(s: &str) -> Option<&str> {
+    let name = leading_ident(s)?;
+    let bytes = s.as_bytes();
+    let mut i = skip_ws(s, name.len());
+    if bytes.get(i) != Some(&b'.') {
+        return None;
+    }
+    i = skip_ws(s, i + 1);
+    if !s[i..].starts_with("clone") {
+        return None;
+    }
+    i = skip_ws(s, i + 5);
+    if bytes.get(i) != Some(&b'(') {
+        return None;
+    }
+    i = skip_ws(s, i + 1);
+    if bytes.get(i) != Some(&b')') || i + 1 != s.len() {
+        return None;
+    }
+    Some(name)
+}
+
+/// `([A-Za-z_][\w:]*)\s*\(` at the start of the string: the callee
+/// path text and the `(` index.
+fn type_call_rhs(s: &str) -> Option<(&str, usize)> {
+    let bytes = s.as_bytes();
+    if bytes.is_empty() || !(bytes[0].is_ascii_alphabetic() || bytes[0] == b'_') {
+        return None;
+    }
+    let mut e = 1;
+    while e < bytes.len()
+        && (bytes[e].is_ascii_alphanumeric() || bytes[e] == b'_' || bytes[e] == b':')
+    {
+        e += 1;
+    }
+    let open = skip_ws(s, e);
+    if bytes.get(open) != Some(&b'(') {
+        return None;
+    }
+    Some((&s[..e], open))
+}
+
+/// `&\s*mut\s+NAME` spanning the whole string: the borrowed name.
+fn mut_ref_rhs(s: &str) -> Option<&str> {
+    let r = s.strip_prefix('&')?.trim_start();
+    let r = r.strip_prefix("mut")?;
+    if !r.starts_with(|c: char| c.is_ascii_whitespace()) {
+        return None;
+    }
+    let r = r.trim_start();
+    let name = leading_ident(r)?;
+    if name.len() != r.len() {
+        return None;
+    }
+    Some(name)
+}
+
+/// `(&)?\s*(?:mut\s+)?([a-z_]\w*)` spanning the whole (pre-trimmed)
+/// argument: (had `&`, the bare lowercase binding name).
+fn bare_arg(s: &str) -> Option<(bool, &str)> {
+    let (amp, mut r) = match s.strip_prefix('&') {
+        Some(rest) => (true, rest.trim_start()),
+        None => (false, s),
+    };
+    if let Some(rest) = r.strip_prefix("mut") {
+        if rest.starts_with(|c: char| c.is_ascii_whitespace()) {
+            r = rest.trim_start();
+        }
+    }
+    let name = leading_ident(r)?;
+    if name.len() != r.len() || !(r.as_bytes()[0].is_ascii_lowercase() || r.as_bytes()[0] == b'_')
+    {
+        return None;
+    }
+    Some((amp, name))
+}
+
+/// `(is_ref, head)` inferred from a let initializer, or `None`. Only
+/// syntactic certainties and index-resolved whole-expression calls.
+fn infer_rhs(
+    rhs: &str,
+    tf: &TypeIndex,
+    local_types: &BTreeMap<String, Option<TypeInfo>>,
+) -> Option<TypeInfo> {
+    let mut rhs = rhs.trim();
+    let mut is_ref = false;
+    if let Some(rest) = rhs.strip_prefix('&') {
+        is_ref = true;
+        rhs = rest.trim_start();
+        if rhs.starts_with("mut") && !ident_at(rhs, 3) {
+            rhs = rhs[3..].trim_start();
+        }
+    }
+    if rhs.starts_with("vec!") {
+        return Some((is_ref, Some("Vec".to_string())));
+    }
+    if rhs.starts_with("format!") {
+        return Some((is_ref, Some("String".to_string())));
+    }
+    if rhs.starts_with('"') {
+        // literals are blanked; the next quote closes
+        let rest = match rhs[1..].find('"') {
+            Some(q) => rhs[1 + q + 1..].trim_start(),
+            None => "?",
+        };
+        if rest.starts_with(".to_string()") || rest.starts_with(".to_owned()") {
+            return Some((is_ref, Some("String".to_string())));
+        }
+        if rest.is_empty() {
+            return Some((true, Some("str".to_string())));
+        }
+        return None;
+    }
+    if let Some(name) = clone_rhs(rhs) {
+        if let Some(Some((_r, Some(h)))) = local_types.get(name) {
+            return Some((is_ref, Some(h.clone())));
+        }
+        return None;
+    }
+    if let Some((callee, open_idx)) = type_call_rhs(rhs) {
+        let (_parts, close) = split_delim(rhs, open_idx, true)?;
+        if !rhs[close + 1..].trim().is_empty() {
+            return None; // not a whole-expression call
+        }
+        if let Some((_params, Some((rref, Some(rh))), false, _hs)) = resolve_call_ret(callee, tf) {
+            return Some((is_ref || rref, Some(rh)));
+        }
+    }
+    None
+}
+
+/// First `{` at paren/bracket depth 0 in `code[i..end)`; `None` when a
+/// statement boundary or a match-arm arrow intervenes (match guards).
+fn find_body_open(code: &str, mut i: usize, end: usize) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut d: i64 = 0;
+    while i < end {
+        match bytes[i] {
+            b'(' | b'[' => d += 1,
+            b')' | b']' => d -= 1,
+            c if d == 0 => {
+                if c == b'{' {
+                    return Some(i);
+                }
+                if c == b';' || (c == b'=' && bytes.get(i + 1) == Some(&b'>')) {
+                    return None;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Control-flow regions of one fn body, byte spans into `code`.
+#[derive(Default)]
+struct BodySpans {
+    /// `[[(open, end), ...]]` — mutually exclusive if/else-if branches
+    if_groups: Vec<Vec<(usize, usize)>>,
+    /// maybe-not-executed regions
+    cond: Vec<(usize, usize)>,
+    /// match bodies — arms indistinguishable
+    match_bodies: Vec<(usize, usize)>,
+    /// (bar, params_text, body_open, body_end)
+    closures: Vec<(usize, String, usize, usize)>,
+    /// nested fn bodies: analyzed on their own
+    skip: Vec<(usize, usize)>,
+}
+
+fn collect_spans(code: &str, bo: usize, be: usize) -> BodySpans {
+    let bytes = code.as_bytes();
+    let mut sp = BodySpans::default();
+    for (pos, _name, name_end) in kw_decls(code, "fn") {
+        if pos < bo || name_end > be {
+            continue;
+        }
+        if let Some(ft) = parse_fn_types(code, name_end) {
+            if let Some(ob) = ft.body_open {
+                if ob < be {
+                    sp.skip.push((ob, match_brace(code, ob)));
+                }
+            }
+        }
+    }
+    let skip = sp.skip.clone();
+    let skipped = |pos: usize| skip.iter().any(|&(o, e)| o <= pos && pos < e);
+
+    let mut kws: Vec<(usize, &str)> = Vec::new();
+    for w in COND_WORDS {
+        for p in find_bounded_in(code, w, bo, be) {
+            kws.push((p, w));
+        }
+    }
+    kws.sort_unstable();
+    let mut consumed: BTreeSet<usize> = BTreeSet::new();
+    for (s, word) in kws {
+        if skipped(s) || consumed.contains(&s) {
+            continue;
+        }
+        if word == "if" && prev_token(code, s) == "else" {
+            continue; // walked from its chain head
+        }
+        let Some(ob) = find_body_open(code, s + word.len(), be) else {
+            continue;
+        };
+        let e = match_brace(code, ob);
+        if word == "match" {
+            sp.match_bodies.push((ob, e));
+            sp.cond.push((ob, e));
+            continue;
+        }
+        if matches!(word, "for" | "while" | "loop") {
+            sp.cond.push((ob, e));
+            continue;
+        }
+        let mut group = vec![(ob, e)];
+        sp.cond.push((ob, e));
+        let mut i = skip_ws(code, e);
+        while code[i..].starts_with("else") && !ident_at(code, i + 4) {
+            i = skip_ws(code, i + 4);
+            let (ob2, fin) = if code[i..].starts_with("if") && !ident_at(code, i + 2) {
+                consumed.insert(i);
+                (find_body_open(code, i + 2, be), false)
+            } else if i < be && bytes[i] == b'{' {
+                (Some(i), true)
+            } else {
+                break;
+            };
+            let Some(ob2) = ob2 else {
+                break;
+            };
+            let e2 = match_brace(code, ob2);
+            group.push((ob2, e2));
+            sp.cond.push((ob2, e2));
+            i = skip_ws(code, e2);
+            if fin {
+                break;
+            }
+        }
+        sp.if_groups.push(group);
+    }
+
+    let mut i = bo;
+    while i < be {
+        if bytes[i] != b'|' || skipped(i) {
+            i += 1;
+            continue;
+        }
+        if bytes.get(i + 1) == Some(&b'=') {
+            i += 2;
+            continue;
+        }
+        let (p2, p1) = prev_nonws(code, i);
+        let starts = matches!(p1, b'(' | b',' | b'{' | b';' | b'=')
+            || (p2 == b'=' && p1 == b'>')
+            || matches!(prev_token(code, i), "move" | "return" | "else");
+        if !starts {
+            i += 1;
+            continue;
+        }
+        let (pe, params) = if bytes.get(i + 1) == Some(&b'|') {
+            (i + 1, String::new())
+        } else {
+            let mut j = i + 1;
+            let mut d: i64 = 0;
+            while j < be {
+                match bytes[j] {
+                    b'(' | b'[' => d += 1,
+                    b')' | b']' => d -= 1,
+                    b'|' if d == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j >= be {
+                i += 1;
+                continue;
+            }
+            (j, code[i + 1..j].to_string())
+        };
+        let k = skip_ws(code, pe + 1);
+        let (cb, ce) = if k < be && bytes[k] == b'{' {
+            (k, match_brace(code, k))
+        } else {
+            let mut j = k;
+            let mut d: i64 = 0;
+            while j < be {
+                match bytes[j] {
+                    b'(' | b'[' | b'{' => d += 1,
+                    b')' | b']' | b'}' => {
+                        if d == 0 {
+                            break;
+                        }
+                        d -= 1;
+                    }
+                    b',' | b';' if d == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            (k, j)
+        };
+        sp.closures.push((i, params, cb, ce));
+        i = pe + 1;
+    }
+    sp
+}
+
+/// One `let` statement in a body (closures included).
+struct LetDecl {
+    pos: usize,
+    names: Vec<String>,
+    pattern_end: usize,
+    ann: Option<String>,
+    rhs_span: Option<(usize, usize)>,
+    refut: bool,
+}
+
+fn let_decls(code: &str, bo: usize, be: usize, sp: &BodySpans) -> Vec<LetDecl> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    for mpos in find_bounded_in(code, "let", bo, be) {
+        if sp.skip.iter().any(|&(o, e)| o <= mpos && mpos < e) {
+            continue;
+        }
+        let refut = matches!(prev_token(code, mpos), "if" | "while");
+        let m_end = mpos + 3;
+        let mut i = m_end;
+        let mut pend: Option<usize> = None;
+        let mut ann_s: Option<usize> = None;
+        let (mut par, mut brk): (i64, i64) = (0, 0);
+        while i < be {
+            let c = bytes[i];
+            if par == 0 && brk == 0 {
+                if c == b':' && bytes.get(i + 1) != Some(&b':') && bytes[i - 1] != b':' {
+                    pend = Some(i);
+                    ann_s = Some(i + 1);
+                    break;
+                }
+                if c == b'='
+                    && bytes.get(i + 1) != Some(&b'=')
+                    && !b"<>!+-*/%&|^=".contains(&bytes[i - 1])
+                {
+                    pend = Some(i);
+                    break;
+                }
+                if c == b';' || c == b'{' {
+                    pend = Some(i);
+                    break;
+                }
+            }
+            match c {
+                b'(' => par += 1,
+                b')' => par -= 1,
+                b'[' => brk += 1,
+                b']' => brk -= 1,
+                _ => {}
+            }
+            i += 1;
+        }
+        let Some(pend) = pend else {
+            continue;
+        };
+        let names: Vec<String> = idents_in(code, m_end, pend)
+            .into_iter()
+            .filter(|(_p, t)| !KEYWORDS.contains(t))
+            .map(|(_p, t)| t.to_string())
+            .collect();
+        let mut ann: Option<String> = None;
+        let mut eq: Option<usize> = if bytes[pend] == b'=' { Some(pend) } else { None };
+        if let Some(ann_s) = ann_s {
+            let (mut par, mut brk, mut brc, mut ang): (i64, i64, i64, i64) = (0, 0, 0, 0);
+            let mut j = ann_s;
+            while j < be {
+                let c = bytes[j];
+                if par == 0
+                    && brk == 0
+                    && brc == 0
+                    && ang == 0
+                    && (c == b';'
+                        || (c == b'='
+                            && bytes.get(j + 1) != Some(&b'=')
+                            && !b"<>!+-*/%&|^=".contains(&bytes[j - 1])))
+                {
+                    break;
+                }
+                match c {
+                    b'(' => par += 1,
+                    b')' => par -= 1,
+                    b'[' => brk += 1,
+                    b']' => brk -= 1,
+                    b'{' => brc += 1,
+                    b'}' => brc -= 1,
+                    b'<' => ang += 1,
+                    b'>' if !matches!(bytes[j - 1], b'-' | b'=') => ang = (ang - 1).max(0),
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j >= be {
+                continue;
+            }
+            ann = Some(code[ann_s..j].trim().to_string());
+            eq = if bytes[j] == b'=' { Some(j) } else { None };
+        }
+        let mut rhs_span: Option<(usize, usize)> = None;
+        if let (Some(eqp), false) = (eq, refut) {
+            let (mut par, mut brk, mut brc): (i64, i64, i64) = (0, 0, 0);
+            let mut j = eqp + 1;
+            let mut bad = false;
+            while j < be {
+                let c = bytes[j];
+                if c == b';' && par == 0 && brk == 0 && brc == 0 {
+                    break;
+                }
+                match c {
+                    b'(' => par += 1,
+                    b')' => par -= 1,
+                    b'[' => brk += 1,
+                    b']' => brk -= 1,
+                    b'{' => brc += 1,
+                    b'}' => brc -= 1,
+                    _ => {}
+                }
+                if par < 0 || brc < 0 {
+                    bad = true;
+                    break;
+                }
+                j += 1;
+            }
+            if !bad && j < be {
+                rhs_span = Some((eqp + 1, j));
+            }
+        }
+        out.push(LetDecl {
+            pos: mpos,
+            names,
+            pattern_end: pend,
+            ann: if refut { None } else { ann },
+            rhs_span,
+            refut,
+        });
+    }
+    out
+}
+
+fn closure_param_names(params: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    for part in params.split(',') {
+        let head = part.split(':').next().unwrap_or("");
+        for (_p, t) in idents_in(head, 0, head.len()) {
+            if !KEYWORDS.contains(&t) {
+                names.push(t.to_string());
+            }
+        }
+    }
+    names
+}
+
+/// Last non-whitespace index at or before `i`; -1 when none.
+fn nonws_back(bytes: &[u8], mut i: i64) -> i64 {
+    while i >= 0 && bytes[i as usize].is_ascii_whitespace() {
+        i -= 1;
+    }
+    i
+}
+
+/// True when `j` is in-bounds and sits on an identifier byte.
+fn word_at(bytes: &[u8], j: i64) -> bool {
+    j >= 0 && (bytes[j as usize].is_ascii_alphanumeric() || bytes[j as usize] == b'_')
+}
+
+/// True when the statement containing `p` starts with a control-flow
+/// exit — a move inside it never shares a path with later uses.
+fn stmt_diverges(code: &str, lo: usize, p: usize) -> bool {
+    let bytes = code.as_bytes();
+    let mut j = p as i64 - 1;
+    while j >= lo as i64 && !b";{}".contains(&bytes[j as usize]) {
+        j -= 1;
+    }
+    let k = skip_ws(code, (j + 1) as usize);
+    ["return", "break", "continue"]
+        .iter()
+        .any(|w| code[k..].starts_with(w) && !ident_at(code, k + w.len()))
+}
+
+/// Innermost unclosed `(`, `[` or `{` between `lo` and `pos`, or `None`.
+fn innermost_opener(code: &str, lo: usize, pos: usize) -> Option<usize> {
+    let mut stack: Vec<usize> = Vec::new();
+    for (i, &c) in code.as_bytes()[lo..pos].iter().enumerate() {
+        match c {
+            b'(' | b'[' | b'{' => stack.push(lo + i),
+            b')' | b']' | b'}' => {
+                stack.pop();
+            }
+            _ => {}
+        }
+    }
+    stack.last().copied()
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Opener {
+    Call,
+    Macro,
+    Group,
+    Index,
+    StructLit,
+    Block,
+}
+
+/// Classify the group opened at `pos`.
+fn opener_kind(code: &str, pos: usize) -> Opener {
+    let bytes = code.as_bytes();
+    match bytes[pos] {
+        b'[' => Opener::Index,
+        b'(' => {
+            let (_q2, q1) = prev_nonws(code, pos);
+            if q1 == b'!' {
+                return Opener::Macro;
+            }
+            let t = prev_token(code, pos);
+            if !t.is_empty() && !KEYWORDS.contains(&t) {
+                Opener::Call
+            } else {
+                Opener::Group
+            }
+        }
+        _ => {
+            let t = prev_token(code, pos);
+            if !t.is_empty()
+                && t.as_bytes()[0].is_ascii_uppercase()
+                && !KEYWORDS.contains(&t)
+                && !is_screaming(t)
+                && !matches!(
+                    prev_token(
+                        code,
+                        (nonws_back(bytes, pos as i64 - 1) - t.len() as i64 + 1) as usize,
+                    ),
+                    "struct" | "enum" | "union" | "trait" | "impl" | "fn" | "mod"
+                )
+            {
+                Opener::StructLit
+            } else {
+                Opener::Block
+            }
+        }
+    }
+}
+
+/// Start index of the `a::b::`-qualified path ending at ident `i0`.
+fn path_start(code: &str, i0: usize) -> usize {
+    let bytes = code.as_bytes();
+    let mut i = i0;
+    loop {
+        let (p2, p1) = prev_nonws(code, i);
+        if p1 != b':' || p2 != b':' {
+            return i;
+        }
+        let mut j = nonws_back(bytes, i as i64 - 1) - 1; // first ':'
+        j = nonws_back(bytes, j) - 1; // second ':'
+        j = nonws_back(bytes, j + 1);
+        if j < 0 || !(bytes[j as usize].is_ascii_alphanumeric() || bytes[j as usize] == b'_') {
+            return i;
+        }
+        while j >= 0 && (bytes[j as usize].is_ascii_alphanumeric() || bytes[j as usize] == b'_') {
+            j -= 1;
+        }
+        i = (j + 1) as usize;
+    }
+}
+
+/// Dataflow event kinds, ordered exactly as their python string
+/// counterparts sort ("borrow" < "capture" < "move" < "mutborrow" <
+/// "reassign" < "use").
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+enum Ev {
+    Borrow,
+    Capture,
+    Move,
+    MutBorrow,
+    Reassign,
+    Use,
+}
+
+type Events = BTreeMap<String, BTreeSet<(usize, Ev)>>;
+
+fn add_event(events: &mut Events, name: &str, pos: usize, kind: Ev) {
+    events.entry(name.to_string()).or_default().insert((pos, kind));
+}
+
+fn in_any(pos: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(o, e)| o <= pos && pos < e)
+}
+
+/// Sorted event list for `name` (empty when untracked).
+fn events_of(events: &Events, name: &str) -> Vec<(usize, Ev)> {
+    events.get(name).map(|s| s.iter().copied().collect()).unwrap_or_default()
+}
+
+/// Positions of the events of one kind, in order.
+fn positions(evs: &[(usize, Ev)], kind: Ev) -> Vec<usize> {
+    evs.iter().filter(|&&(_p, k)| k == kind).map(|&(p, _k)| p).collect()
+}
+
+fn analyze_fn(
+    path: &str,
+    code: &str,
+    ft: &FnTypes,
+    tf: &TypeIndex,
+    std_methods: &BTreeSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    let bytes = code.as_bytes();
+    let body_open = ft.body_open.expect("caller checks for a body");
+    let (bo, be) = (body_open + 1, match_brace(code, body_open));
+    let sp = collect_spans(code, bo, be);
+    let lets = let_decls(code, bo, be, &sp);
+
+    // -- binding table: names declared exactly once anywhere in the
+    // body (params, lets, for-patterns, closure params). Shadowing of
+    // any kind untracks the name — the dataflow is deliberately
+    // scope-blind.
+    let mut decl_count: BTreeMap<String, usize> = BTreeMap::new();
+    for name in ft.param_names.iter().flatten() {
+        *decl_count.entry(name.clone()).or_insert(0) += 1;
+    }
+    for ld in &lets {
+        for n in &ld.names {
+            *decl_count.entry(n.clone()).or_insert(0) += 1;
+        }
+    }
+    for fpos in find_bounded_in(code, "for", bo, be) {
+        if in_any(fpos, &sp.skip) {
+            continue;
+        }
+        if let Some(&in_pos) = find_bounded_in(code, "in", fpos + 3, be).first() {
+            for (_p, t) in idents_in(code, fpos + 3, in_pos) {
+                if !KEYWORDS.contains(&t) {
+                    *decl_count.entry(t.to_string()).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+    for (_bar, params, _cb, _ce) in &sp.closures {
+        for n in closure_param_names(params) {
+            *decl_count.entry(n).or_insert(0) += 1;
+        }
+    }
+
+    // name -> info | None (tracked but untyped)
+    let mut binds: BTreeMap<String, Option<TypeInfo>> = BTreeMap::new();
+    // r -> (let_pos, target, rhs_end)
+    let mut mut_ref_lets: BTreeMap<String, (usize, String, usize)> = BTreeMap::new();
+    for (name, info) in ft.param_names.iter().zip(ft.params.iter()) {
+        if let Some(n) = name {
+            if decl_count.get(n) == Some(&1) {
+                binds.insert(n.clone(), Some(info.clone()));
+            }
+        }
+    }
+    for ld in &lets {
+        if ld.refut || ld.names.len() != 1 || decl_count.get(&ld.names[0]) != Some(&1) {
+            continue;
+        }
+        let name = &ld.names[0];
+        let rhs: &str = match ld.rhs_span {
+            Some((a, b)) => code[a..b].trim(),
+            None => "",
+        };
+        if let Some(target) = mut_ref_rhs(rhs) {
+            let rhs_end = ld.rhs_span.expect("mut-ref rhs implies a span").1;
+            mut_ref_lets.insert(name.clone(), (ld.pos, target.to_string(), rhs_end));
+        }
+        let mut info: Option<TypeInfo> =
+            ld.ann.as_ref().map(|a| type_info(a, &ft.generics));
+        let unresolved = !matches!(&info, Some((_r, Some(_h))));
+        if unresolved && !rhs.is_empty() && ld.ann.is_none() {
+            info = infer_rhs(rhs, tf, &binds);
+        }
+        binds.insert(name.clone(), info);
+        // type-mismatch-lite (a): annotation vs whole-call initializer
+        if let Some(ann) = &ld.ann {
+            if !rhs.is_empty() {
+                let ai = tf.resolve(Some(type_info(ann, &ft.generics)));
+                let ri = tf.resolve(infer_rhs(rhs, tf, &binds));
+                if let (Some((ar, Some(ah))), Some((rr, Some(rh)))) = (&ai, &ri) {
+                    if ar == rr
+                        && ah != rh
+                        && !COERCE_TARGETS.contains(&ah.as_str())
+                        && !COERCE_TARGETS.contains(&rh.as_str())
+                        && !(*ar
+                            && (DEREF_SOURCES.contains(&ah.as_str())
+                                || DEREF_SOURCES.contains(&rh.as_str())))
+                    {
+                        out.push(Finding {
+                            rule: "type-mismatch-lite",
+                            path: path.to_string(),
+                            line: line_of(code, ld.pos),
+                            col: col_of(code, ld.pos),
+                            message: format!(
+                                "`{name}` is annotated `{ah}` but its initializer is `{rh}`"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // -- decl zones: ident occurrences that are declarations, not uses
+    let mut zones: Vec<(usize, usize)> = Vec::new();
+    for ld in &lets {
+        zones.push((
+            ld.pos,
+            match ld.rhs_span {
+                Some((a, _b)) => a - 1,
+                None => ld.pattern_end,
+            },
+        ));
+    }
+    for fpos in find_bounded_in(code, "for", bo, be) {
+        if let Some(&in_pos) = find_bounded_in(code, "in", fpos + 3, be).first() {
+            zones.push((fpos, in_pos));
+        }
+    }
+    for (bar, _params, cb, _ce) in &sp.closures {
+        zones.push((*bar, *cb));
+    }
+
+    let closure_at = |pos: usize| -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for &(bar, ref _p, _cb, ce) in &sp.closures {
+            if bar <= pos && pos < ce && best.map(|b| bar < b).unwrap_or(true) {
+                best = Some(bar);
+            }
+        }
+        best
+    };
+
+    // -- event scan
+    let mut events: Events = BTreeMap::new();
+    for (s, name) in idents_in(code, bo, be) {
+        if !binds.contains_key(name) && !mut_ref_lets.contains_key(name) {
+            continue;
+        }
+        let e = s + name.len();
+        if in_any(s, &sp.skip) || in_any(s, &zones) {
+            continue;
+        }
+        let (p2, p1) = prev_nonws(code, s);
+        if p1 == b'.' && p2 != b'.' {
+            continue; // field or method name, not this binding
+        }
+        if p1 == b':' && p2 == b':' {
+            continue; // path segment
+        }
+        let nx = skip_ws(code, e);
+        let nxc = bytes.get(nx).copied().unwrap_or(0);
+        if nxc == b':' {
+            continue; // path segment / struct-field name / pattern field
+        }
+        let pt = prev_token(code, s);
+        let mut amp_mut = false;
+        if pt == "mut" {
+            let j = nonws_back(bytes, nonws_back(bytes, s as i64 - 1) - 3);
+            amp_mut = j >= 0 && bytes[j as usize] == b'&';
+            if !amp_mut {
+                continue; // `let mut` / `ref mut` pattern position
+            }
+        }
+        if matches!(
+            pt,
+            "fn" | "struct"
+                | "enum"
+                | "mod"
+                | "use"
+                | "impl"
+                | "trait"
+                | "let"
+                | "for"
+                | "ref"
+                | "loop"
+                | "break"
+                | "continue"
+        ) {
+            continue;
+        }
+        if let Some(cl) = closure_at(s) {
+            add_event(&mut events, name, cl, Ev::Capture); // a use at closure birth
+            continue;
+        }
+        if amp_mut {
+            // a whole-binding &mut; `&mut x.f` / `&mut x[i]` borrow less
+            let kind = if matches!(nxc, b',' | b')' | b';' | b'}') {
+                Ev::MutBorrow
+            } else {
+                Ev::Use
+            };
+            add_event(&mut events, name, s, kind);
+            continue;
+        }
+        if p1 == b'&' {
+            add_event(&mut events, name, s, Ev::Borrow);
+            continue;
+        }
+        if nxc == b'=' && bytes.get(nx + 1) != Some(&b'=') && matches!(p1, b';' | b'{' | b'}') {
+            add_event(&mut events, name, s, Ev::Reassign);
+            continue;
+        }
+        if matches!(nxc, b'.' | b'?' | b'[') || !matches!(nxc, b',' | b')' | b';' | b'}') {
+            add_event(&mut events, name, s, Ev::Use);
+            continue;
+        }
+        // complete expression: move or use by context. A move inside a
+        // `return`/`break`/`continue` statement exits the path — no
+        // later use can follow it — so it is recorded as a plain use.
+        if pt == "return" || stmt_diverges(code, bo, s) {
+            add_event(&mut events, name, s, Ev::Use);
+            continue;
+        }
+        if p1 == b'=' && !b"=<>!+-*/%&|^".contains(&p2) {
+            add_event(&mut events, name, s, Ev::Move);
+            continue;
+        }
+        let kind = match innermost_opener(code, bo, s) {
+            None => {
+                if matches!(p1, b';' | b'{' | b'}') {
+                    Ev::Move
+                } else {
+                    Ev::Use
+                }
+            }
+            Some(op) => {
+                let k = opener_kind(code, op);
+                let is_move = (k == Opener::Call && matches!(p1, b'(' | b','))
+                    || (k == Opener::StructLit
+                        && (matches!(p1, b'{' | b',') || (p1 == b':' && p2 != b':')))
+                    || (k == Opener::Block && matches!(p1, b';' | b'{' | b'}'));
+                if is_move {
+                    Ev::Move
+                } else {
+                    Ev::Use
+                }
+            }
+        };
+        add_event(&mut events, name, s, kind);
+    }
+
+    let span_set = |pos: usize| -> Vec<(usize, usize)> {
+        sp.cond.iter().copied().filter(|&(o, e)| o <= pos && pos < e).collect()
+    };
+    let mut diverge: Vec<(usize, usize)> = Vec::new();
+    for w in DIVERGE_WORDS {
+        for p in find_bounded_in(code, w, bo, be) {
+            diverge.push((p, p + w.len()));
+        }
+    }
+    // May control flow definitely reach q with the effect at p applied?
+    // Conservative: exclusive branches / match arms bail.
+    let pair_allowed = |p: usize, q: usize| -> bool {
+        for &(o, e) in &sp.match_bodies {
+            if o <= p && p < e && o <= q && q < e {
+                return false;
+            }
+        }
+        for group in &sp.if_groups {
+            let pi = group.iter().position(|&(o, e)| o <= p && p < e);
+            let qi = group.iter().position(|&(o, e)| o <= q && q < e);
+            if let (Some(a), Some(b)) = (pi, qi) {
+                if a != b {
+                    return false;
+                }
+            }
+        }
+        for &(o, e) in &sp.cond {
+            if o <= p
+                && p < e
+                && !(o <= q && q < e)
+                && diverge.iter().any(|&(dp, de)| dp >= p && de <= e)
+            {
+                return false;
+            }
+        }
+        true
+    };
+
+    // -- use-after-move
+    for (name, info) in &binds {
+        if copyness(info, tf) != Some("move") {
+            continue;
+        }
+        let evs = events_of(&events, name);
+        let moves = positions(&evs, Ev::Move);
+        if moves.is_empty() {
+            continue;
+        }
+        let mut fired = false;
+        for &(q, k) in &evs {
+            if k == Ev::Reassign || fired {
+                continue;
+            }
+            for &p in &moves {
+                if p >= q {
+                    break;
+                }
+                if evs.iter().any(|&(r, rk)| rk == Ev::Reassign && p < r && r < q) {
+                    continue;
+                }
+                if !pair_allowed(p, q) {
+                    continue;
+                }
+                out.push(Finding {
+                    rule: "use-after-move",
+                    path: path.to_string(),
+                    line: line_of(code, q),
+                    col: col_of(code, q),
+                    message: format!(
+                        "`{name}` used after move (moved on line {})",
+                        line_of(code, p)
+                    ),
+                });
+                fired = true;
+                break;
+            }
+        }
+    }
+
+    // -- double-mut-borrow
+    for name in binds.keys() {
+        let evs = events_of(&events, name);
+        let mbs = positions(&evs, Ev::MutBorrow);
+        let mut fired = false;
+        for w in mbs.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let oa = innermost_opener(code, bo, a);
+            let ob = innermost_opener(code, bo, b);
+            if let (Some(oa), Some(ob)) = (oa, ob) {
+                if oa == ob && opener_kind(code, oa) == Opener::Call {
+                    out.push(Finding {
+                        rule: "double-mut-borrow",
+                        path: path.to_string(),
+                        line: line_of(code, b),
+                        col: col_of(code, b),
+                        message: format!(
+                            "`{name}` mutably borrowed twice in one call argument list"
+                        ),
+                    });
+                    fired = true;
+                    break;
+                }
+            }
+        }
+        if fired {
+            continue;
+        }
+        'rloop: for (r, &(lpos, ref target, rhs_end)) in &mut_ref_lets {
+            if target != name {
+                continue;
+            }
+            let revs = events_of(&events, r);
+            for &q in &mbs {
+                if q < rhs_end {
+                    continue; // the borrow that created `r` itself
+                }
+                let Some(&(u, _k)) = revs.iter().find(|&&(u, k)| u > q && k != Ev::Reassign)
+                else {
+                    continue;
+                };
+                if span_set(lpos) != span_set(q) || span_set(q) != span_set(u) {
+                    continue; // not straight-line: bail
+                }
+                if evs.iter().any(|&(rr, rk)| rk == Ev::Reassign && lpos < rr && rr < u) {
+                    continue;
+                }
+                out.push(Finding {
+                    rule: "double-mut-borrow",
+                    path: path.to_string(),
+                    line: line_of(code, q),
+                    col: col_of(code, q),
+                    message: format!(
+                        "`{name}` mutably borrowed again while `{r}` (line {}) is still live",
+                        line_of(code, lpos)
+                    ),
+                });
+                break 'rloop;
+            }
+        }
+    }
+
+    // -- must-use-result + type-mismatch-lite (b) at call sites
+    for (i0, cname) in idents_in(code, bo, be) {
+        if i0 > 0 {
+            let pb = bytes[i0 - 1];
+            if pb.is_ascii_alphanumeric() || pb == b'_' {
+                continue; // CALL_RE's \b: mid-word, not a callee name
+            }
+        }
+        let name_end = i0 + cname.len();
+        let Some((open_idx, nb)) = next_nonws(code, name_end) else {
+            continue;
+        };
+        if nb != b'(' || open_idx >= be {
+            continue;
+        }
+        if in_any(i0, &sp.skip) || KEYWORDS.contains(&cname) || binds.contains_key(cname) {
+            continue;
+        }
+        let (p2, p1) = prev_nonws(code, i0);
+        let mut is_dot = false;
+        let ent: Option<FnEnt> = if p1 == b'.' {
+            if p2 == b'.' || std_methods.contains(cname) {
+                continue;
+            }
+            is_dot = true;
+            let mut m = tf.methods.get(cname).cloned().flatten();
+            if let Some(ref e) = m {
+                if !e.3 {
+                    m = None; // assoc fn called through a dot: not this one
+                }
+            }
+            m
+        } else if p1 == b':' && p2 == b':' {
+            let ps = path_start(code, i0);
+            let joined = idents_in(code, ps, name_end)
+                .iter()
+                .map(|&(_p, t)| t)
+                .collect::<Vec<_>>()
+                .join("::");
+            resolve_call_ret(&joined, tf)
+        } else {
+            tf.fns.get(cname).cloned().flatten()
+        };
+        let Some((params, ret_info, generic_fn, _hs)) = ent else {
+            continue;
+        };
+        if matches!(&ret_info, Some((_r, Some(h))) if h == "Result") {
+            let stmt = if is_dot {
+                let j = nonws_back(bytes, nonws_back(bytes, i0 as i64 - 1) - 1);
+                let mut stmt = false;
+                if word_at(bytes, j) {
+                    let mut k = j;
+                    while word_at(bytes, k) {
+                        k -= 1;
+                    }
+                    let (_r2, r1) = prev_nonws(code, (k + 1) as usize);
+                    stmt = matches!(r1, b';' | b'{' | b'}');
+                }
+                stmt
+            } else {
+                let (_r2, r1) = prev_nonws(code, path_start(code, i0));
+                matches!(r1, b';' | b'{' | b'}')
+            };
+            if stmt {
+                if let Some((_parts, close)) = split_delim(code, open_idx, true) {
+                    let nx2 = skip_ws(code, close + 1);
+                    if nx2 < bytes.len() && bytes[nx2] == b';' {
+                        out.push(Finding {
+                            rule: "must-use-result",
+                            path: path.to_string(),
+                            line: line_of(code, i0),
+                            col: col_of(code, i0),
+                            message: format!(
+                                "result of `{cname}` (a `Result`) is discarded — use `?`, \
+                                 `let _ = …`, or match"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        if generic_fn {
+            continue;
+        }
+        let Some((parts_c, _close)) = split_delim(code, open_idx, true) else {
+            continue;
+        };
+        if parts_c.iter().filter(|p| !p.trim().is_empty()).count() != params.len() {
+            continue; // arity problems are call-arity's finding, not ours
+        }
+        let mut pos0 = open_idx + 1;
+        let mut ai = 0usize;
+        for p in &parts_c {
+            if p.trim().is_empty() {
+                pos0 += p.len() + 1;
+                continue;
+            }
+            let pi = &params[ai];
+            ai += 1;
+            let am = bare_arg(p.trim());
+            let arg_pos = pos0 + (p.len() - p.trim_start().len());
+            pos0 += p.len() + 1;
+            let Some((amp, aname)) = am else {
+                continue;
+            };
+            let Some(bind_info) = binds.get(aname) else {
+                continue;
+            };
+            let Some((b_ref, Some(b_head))) = tf.resolve(bind_info.clone()) else {
+                continue;
+            };
+            let Some((p_ref, Some(p_head))) = tf.resolve(Some(pi.clone())) else {
+                continue;
+            };
+            let mut a_ref = b_ref;
+            if amp {
+                if b_ref {
+                    continue; // `&x` where x is already a reference
+                }
+                a_ref = true;
+            }
+            if a_ref != p_ref {
+                continue; // autoref/deref territory: bail
+            }
+            let coerces = COERCE_TARGETS.contains(&b_head.as_str())
+                || COERCE_TARGETS.contains(&p_head.as_str());
+            if coerces {
+                continue;
+            }
+            if a_ref
+                && (DEREF_SOURCES.contains(&b_head.as_str())
+                    || DEREF_SOURCES.contains(&p_head.as_str()))
+            {
+                continue;
+            }
+            if b_head != p_head {
+                out.push(Finding {
+                    rule: "type-mismatch-lite",
+                    path: path.to_string(),
+                    line: line_of(code, arg_pos),
+                    col: col_of(code, arg_pos),
+                    message: format!(
+                        "`{aname}` is `{b_head}` but parameter {ai} of `{cname}` is `{p_head}`"
+                    ),
+                });
+            }
+        }
+    }
+
+    // -- closure-capture-sync: closures handed to pool::parallel_map
+    for (bar, params, cb, ce) in &sp.closures {
+        let (bar, cb, ce) = (*bar, *cb, *ce);
+        let Some(op) = innermost_opener(code, bo, bar) else {
+            continue;
+        };
+        if opener_kind(code, op) != Opener::Call || prev_token(code, op) != "parallel_map" {
+            continue;
+        }
+        let mut locals_: BTreeSet<String> = closure_param_names(params).into_iter().collect();
+        for ld in &lets {
+            if cb <= ld.pos && ld.pos < ce {
+                locals_.extend(ld.names.iter().cloned());
+            }
+        }
+        for (b2, p2s, _cb2, _ce2) in &sp.closures {
+            if bar < *b2 && cb <= *b2 && *b2 < ce {
+                locals_.extend(closure_param_names(p2s));
+            }
+        }
+        for mm in find_bounded_in(code, "mut", cb, ce) {
+            let (_q2, q1) = prev_nonws(code, mm);
+            if q1 != b'&' {
+                continue;
+            }
+            let ip = skip_ws(code, mm + 3);
+            let Some(id) = leading_ident(&code[ip..]) else {
+                continue;
+            };
+            if locals_.contains(id) {
+                continue;
+            }
+            out.push(Finding {
+                rule: "closure-capture-sync",
+                path: path.to_string(),
+                line: line_of(code, mm),
+                col: col_of(code, mm),
+                message: format!(
+                    "closure passed to `parallel_map` captures `&mut {id}` — parallel workers \
+                     need `Fn` + `Sync`"
+                ),
+            });
+            break;
+        }
+        for (ips, nm) in idents_in(code, cb, ce) {
+            if locals_.contains(nm) || !binds.contains_key(nm) {
+                continue;
+            }
+            let (q2, q1) = prev_nonws(code, ips);
+            if (q1 == b'.' && q2 != b'.') || (q1 == b':' && q2 == b':') {
+                continue;
+            }
+            if code[skip_ws(code, ips + nm.len())..].starts_with("::") {
+                continue;
+            }
+            let info = tf.resolve(binds.get(nm).cloned().flatten());
+            if let Some((false, Some(h))) = &info {
+                if NONSYNC_TYPES.contains(&h.as_str()) {
+                    out.push(Finding {
+                        rule: "closure-capture-sync",
+                        path: path.to_string(),
+                        line: line_of(code, ips),
+                        col: col_of(code, ips),
+                        message: format!(
+                            "closure passed to `parallel_map` captures `{nm}` of non-`Sync` \
+                             type `{h}`"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Run the typeflow tier over one prepared file.
+pub fn rule_typeflow(
+    f: &Prepared,
+    tf: &TypeIndex,
+    std_methods: &BTreeSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    for (_pos, _name, name_end) in kw_decls(&f.code, "fn") {
+        if let Some(ft) = parse_fn_types(&f.code, name_end) {
+            if ft.body_open.is_some() {
+                analyze_fn(&f.path, &f.code, &ft, tf, std_methods, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::run_lint;
+
+    const LIB: &str = "rust/src/lib.rs";
+
+    fn fired(src: &str, rule: &str) -> bool {
+        run_lint(&[(LIB, src)]).iter().any(|f| f.rule == rule)
+    }
+
+    #[test]
+    fn rhs_parsers_accept_and_reject() {
+        assert_eq!(mut_ref_rhs("&mut buf"), Some("buf"));
+        assert_eq!(mut_ref_rhs("& mut  buf"), Some("buf"));
+        assert_eq!(mut_ref_rhs("&mut buf.field"), None);
+        assert_eq!(mut_ref_rhs("&mutbuf"), None);
+        assert_eq!(clone_rhs("s.clone()"), Some("s"));
+        assert_eq!(clone_rhs("s . clone ( )"), Some("s"));
+        assert_eq!(clone_rhs("s.clone().len()"), None);
+        let qualified = type_call_rhs("util::json::obj_to_line(x)");
+        assert_eq!(qualified, Some(("util::json::obj_to_line", 23)));
+        assert_eq!(type_call_rhs("9u64(x)"), None);
+        assert_eq!(bare_arg("&mut total"), Some((true, "total")));
+        assert_eq!(bare_arg("x"), Some((false, "x")));
+        assert_eq!(bare_arg("Upper"), None);
+        assert_eq!(bare_arg("x.len()"), None);
+    }
+
+    #[test]
+    fn path_start_stays_on_the_last_segment() {
+        // the python mirror's `_path_start` arithmetic lands back on the
+        // ident it started from; the port must reproduce that exactly,
+        // or qualified-call resolution diverges from the golden file.
+        let code = "x = util::json::obj_to_line(";
+        assert_eq!(path_start(code, 16), 16);
+        assert_eq!(path_start("a::b", 3), 3);
+    }
+
+    #[test]
+    fn use_after_move_fires_and_respects_reassign() {
+        let bad = "pub fn broken() -> usize {\n    let s = String::from(\"token\");\n    \
+                   let n = absorb(s);\n    s.len() + n\n}\n\
+                   fn absorb(s: String) -> usize { s.len() }\n";
+        assert!(fired(bad, "use-after-move"));
+        let reassigned = "pub fn ok() -> usize {\n    let mut s = String::from(\"a\");\n    \
+                          let n = absorb(s);\n    s = String::from(\"b\");\n    s.len() + n\n}\n\
+                          fn absorb(s: String) -> usize { s.len() }\n";
+        assert!(!fired(reassigned, "use-after-move"));
+        let diverging = "pub fn keep(flag: bool) -> String {\n    \
+                         let s = String::from(\"token\");\n    if flag {\n        \
+                         return stamp(s);\n    }\n    s\n}\n\
+                         fn stamp(s: String) -> String { s }\n";
+        assert!(!fired(diverging, "use-after-move"));
+    }
+
+    #[test]
+    fn double_mut_borrow_fires_on_overlap_only() {
+        let bad = "pub fn rotate(n: usize) -> Vec<u64> {\n    let mut buf = vec![0u64; n];\n    \
+                   let first_ref = &mut buf;\n    let second_ref = &mut buf;\n    \
+                   first_ref.push(1);\n    second_ref.push(2);\n    buf\n}\n";
+        assert!(fired(bad, "double-mut-borrow"));
+        let sequential = "pub fn renumber(n: usize) -> Vec<u64> {\n    \
+                          let mut buf = vec![0u64; n];\n    let first_ref = &mut buf;\n    \
+                          first_ref.push(1);\n    let second_ref = &mut buf;\n    \
+                          second_ref.push(2);\n    buf\n}\n";
+        assert!(!fired(sequential, "double-mut-borrow"));
+    }
+
+    #[test]
+    fn must_use_result_wants_the_value_consumed() {
+        let sig = "pub fn save(n: usize) -> Result<usize, String> {\n    \
+                   if n > 0 { Ok(n) } else { Err(\"zero\".to_string()) }\n}\n";
+        let bad = format!("{sig}pub fn run() {{\n    save(3);\n}}\n");
+        assert!(fired(&bad, "must-use-result"));
+        let good = format!(
+            "{sig}pub fn commit(n: usize) -> Result<usize, String> {{\n    \
+             let saved = save(n)?;\n    let _ = save(saved);\n    save(saved)\n}}\n"
+        );
+        assert!(!fired(&good, "must-use-result"));
+    }
+
+    #[test]
+    fn closure_capture_sync_guards_parallel_map() {
+        let bad = "use std::cell::RefCell;\npub fn tally(items: &[u64]) -> Vec<u64> {\n    \
+                   let cache = RefCell::new(0u64);\n    \
+                   pool::parallel_map(items, 2, |x| *x + *cache.borrow())\n}\n";
+        assert!(fired(bad, "closure-capture-sync"));
+        let mut_cap = "pub fn sums(items: &[u64]) -> Vec<u64> {\n    let mut total = 0u64;\n    \
+                       pool::parallel_map(items, 1, |x| add(&mut total, *x))\n}\n\
+                       fn add(acc: &mut u64, x: u64) -> u64 { *acc += x; *acc }\n";
+        assert!(fired(mut_cap, "closure-capture-sync"));
+        let local = "pub fn scale(items: &[u64]) -> Vec<u64> {\n    let factor = 3u64;\n    \
+                     pool::parallel_map(items, 2, |x| {\n        \
+                     let mut acc = *x * factor;\n        \
+                     bump(&mut acc);\n        acc\n    })\n}\n\
+                     fn bump(n: &mut u64) { *n += 1; }\n";
+        assert!(!fired(local, "closure-capture-sync"));
+    }
+
+    #[test]
+    fn type_mismatch_lite_compares_resolved_heads_only() {
+        let bad = "fn width(v: &[u64]) -> usize { v.len() }\n\
+                   pub fn measure(v: &[u64]) -> u64 {\n    let w: u64 = width(v);\n    w + 1\n}\n";
+        assert!(fired(bad, "type-mismatch-lite"));
+        let generic = "fn first_of<T>(mut v: Vec<T>) -> T { v.remove(0) }\n\
+                       pub fn measure(nums: Vec<u64>) -> u64 {\n    \
+                       let x: u64 = first_of(nums);\n    x\n}\n";
+        assert!(!fired(generic, "type-mismatch-lite"));
+    }
+
+    #[test]
+    fn suppression_comment_silences_each_rule() {
+        let suppressed = "pub fn reuse() -> usize {\n    let s = String::from(\"token\");\n    \
+                          let n = absorb(s);\n    \
+                          // lint: allow(use-after-move) fixture: suppression\n    \
+                          s.len() + n\n}\nfn absorb(s: String) -> usize { s.len() }\n";
+        assert!(!fired(suppressed, "use-after-move"));
+    }
+}

@@ -10,11 +10,14 @@
 //!            (`exp fig3 --skyline [--dry-run]` = one multi-objective
 //!            run whose Pareto front replaces the multiplier sweep)
 //!   bench    [all|cells|micro|<suite>,...] [...]    benchmark trajectory
-//!   lint     [--paths a,b] [--json]   static analysis over the repo sources
+//!   lint     [--paths a,b] [--json] [--tiers compile,discipline,sig,typeflow]
+//!            static analysis over the repo sources
 //!
 //! Lint (DESIGN.md §9): runs the srclint pass (compile-review rules +
-//! determinism/fingerprint discipline) over rust/src, rust/tests,
-//! rust/benches and examples, from any cwd inside the repo. `--json`
+//! determinism/fingerprint discipline + signature analysis + typeflow
+//! dataflow) over rust/src, rust/tests, rust/benches and examples,
+//! from any cwd inside the repo. `--tiers` restricts to a subset of
+//! the four tiers (the suppression meta-rule always runs). `--json`
 //! emits one journal-style record per finding plus a summary line;
 //! exit code is 1 when findings remain, 2 when the repo root cannot be
 //! found. `tools/srclint.py` is the toolchain-free mirror.
@@ -63,6 +66,7 @@
 //!                       <out>/cells.jsonl (re-runs re-pay everything)
 //!   --fresh             delete an existing journal before starting
 
+use std::collections::BTreeSet;
 use std::path::PathBuf;
 
 use substrat::analysis;
@@ -452,13 +456,30 @@ fn cmd_lint(args: &Args) {
     let paths = args.list_opt("paths").unwrap_or_else(|| {
         analysis::DEFAULT_PATHS.iter().map(|s| s.to_string()).collect()
     });
+    let tiers: Option<BTreeSet<String>> = args.list_opt("tiers").map(|ts| {
+        const KNOWN: [&str; 4] = ["compile", "discipline", "sig", "typeflow"];
+        let bad: Vec<&str> = ts
+            .iter()
+            .map(String::as_str)
+            .filter(|t| !KNOWN.contains(t))
+            .collect();
+        if !bad.is_empty() {
+            eprintln!(
+                "srclint: unknown tier(s) {} (known: {})",
+                bad.join(", "),
+                KNOWN.join(", ")
+            );
+            std::process::exit(2);
+        }
+        ts.into_iter().collect()
+    });
     let files = analysis::collect_files(&root, &paths)
         .unwrap_or_else(|e| panic!("lint: reading sources under {}: {e}", root.display()));
     let refs: Vec<(&str, &str)> = files
         .iter()
         .map(|(p, s)| (p.as_str(), s.as_str()))
         .collect();
-    let findings = analysis::run_lint(&refs);
+    let findings = analysis::run_lint_tiers(&refs, tiers.as_ref());
     if args.flag("json") {
         for f in &findings {
             let line = obj_to_line(&f.record());

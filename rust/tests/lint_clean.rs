@@ -1,26 +1,32 @@
-//! The srclint pass (DESIGN.md §9, §11) must be clean on this
+//! The srclint pass (DESIGN.md §9, §11, §12) must be clean on this
 //! repository itself: the linted tree includes the linter's own
 //! sources, so this test is both the merge gate ("no findings at
 //! HEAD") and a live check that the rules — the compile-review tier,
-//! the discipline tier, and the sigcheck signature tier — do not
-//! false-positive on real code. A second test drives the `--json`
-//! surface: findings produced by the shared fixture battery must
-//! round-trip through `util::json` and pass the record schema check.
+//! the discipline tier, the sigcheck signature tier, and the typeflow
+//! dataflow tier — do not false-positive on real code. A second test
+//! drives the `--json` surface: findings produced by the shared
+//! fixture battery must round-trip through `util::json` and pass the
+//! record schema check.
 
 use std::collections::BTreeSet;
 
 use substrat::analysis::sigcheck::{parse_manifest, MANIFEST_TEXT};
 use substrat::analysis::{
-    collect_files, repo_root_from, run_lint, validate_finding_record, Finding, DEFAULT_PATHS,
+    collect_files, repo_root_from, run_lint, run_lint_tiers, validate_finding_record, Finding,
+    DEFAULT_PATHS,
 };
 use substrat::util::json;
 
-#[test]
-fn repo_sources_lint_clean() {
+fn repo_files() -> Vec<(String, String)> {
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     let root = repo_root_from(manifest).expect("repo root above CARGO_MANIFEST_DIR");
     let paths: Vec<String> = DEFAULT_PATHS.iter().map(|s| s.to_string()).collect();
-    let files = collect_files(&root, &paths).expect("collect repo sources");
+    collect_files(&root, &paths).expect("collect repo sources")
+}
+
+#[test]
+fn repo_sources_lint_clean() {
+    let files = repo_files();
     assert!(
         files.len() > 20,
         "expected a real tree, collected only {} file(s)",
@@ -38,6 +44,30 @@ fn repo_sources_lint_clean() {
     assert!(
         findings.is_empty(),
         "lint must be clean at HEAD; got {} finding(s):\n{}",
+        findings.len(),
+        findings
+            .iter()
+            .map(Finding::text)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// The typeflow tier alone, over the real tree: move/borrow dataflow
+/// and local type inference must not false-positive anywhere in the
+/// production sources (DESIGN.md §12's bail-out contract in action).
+#[test]
+fn repo_sources_clean_under_typeflow_tier_alone() {
+    let files = repo_files();
+    let refs: Vec<(&str, &str)> = files
+        .iter()
+        .map(|(p, s)| (p.as_str(), s.as_str()))
+        .collect();
+    let tiers: BTreeSet<String> = ["typeflow".to_string()].into_iter().collect();
+    let findings = run_lint_tiers(&refs, Some(&tiers));
+    assert!(
+        findings.is_empty(),
+        "typeflow tier must be clean at HEAD; got {} finding(s):\n{}",
         findings.len(),
         findings
             .iter()
@@ -73,7 +103,17 @@ fn fixture_findings_round_trip_through_json() {
         }
     }
     assert!(checked > 0, "fire cases must produce findings");
-    for rule in ["call-arity", "struct-fields", "enum-variant", "pub-sig-drift"] {
+    for rule in [
+        "call-arity",
+        "struct-fields",
+        "enum-variant",
+        "pub-sig-drift",
+        "use-after-move",
+        "double-mut-borrow",
+        "must-use-result",
+        "closure-capture-sync",
+        "type-mismatch-lite",
+    ] {
         assert!(seen.contains(rule), "round-tripped a {rule} finding");
     }
 }

@@ -12,6 +12,7 @@ edit `rust/src/analysis/lints.rs` in the same commit, and vice versa.
 
 Usage:
     python3 tools/srclint.py [--paths a,b] [--json] [--self-test]
+        [--tiers compile,discipline,sig,typeflow] [--write-golden]
 
 Exit status: 0 = clean, 1 = findings, 2 = usage/self-test failure.
 """
@@ -40,6 +41,13 @@ SIGCHECK_RULES = [
     "enum-variant",    # Type::Variant names a real variant, right arity
     "pub-sig-drift",   # pub shape used from tests/benches/examples drifted
 ]
+TYPEFLOW_RULES = [
+    "use-after-move",       # non-Copy binding read after a definite move
+    "double-mut-borrow",    # two overlapping &mut of one binding
+    "must-use-result",      # Result-returning call discarded as a statement
+    "closure-capture-sync", # parallel_map closure captures &mut / non-Sync
+    "type-mismatch-lite",   # annotated/inferred type vs indexed type head
+]
 DISCIPLINE_RULES = [
     "timer-discipline",  # raw clock reads outside util/timer.rs
     "iter-order",        # HashMap/HashSet iteration in record-writing files
@@ -47,7 +55,12 @@ DISCIPLINE_RULES = [
     "fp-complete",       # config fields missing from the fingerprint fn
 ]
 META_RULES = ["suppression"]  # malformed allow/fp-exempt comments
-ALL_RULES = COMPILE_RULES + SIGCHECK_RULES + DISCIPLINE_RULES + META_RULES
+ALL_RULES = (COMPILE_RULES + SIGCHECK_RULES + TYPEFLOW_RULES
+             + DISCIPLINE_RULES + META_RULES)
+
+# Tier names accepted by --tiers; meta (suppression) always runs.
+TIERS = {"compile": COMPILE_RULES, "sig": SIGCHECK_RULES,
+         "typeflow": TYPEFLOW_RULES, "discipline": DISCIPLINE_RULES}
 
 # struct -> fingerprint function that must name every non-exempt field
 FP_PAIRS = [("ExpConfig", "config_fingerprint"),
@@ -1704,10 +1717,998 @@ def rule_sigcheck(path, code, depths, uses, modules, idx, out):
 
 
 # --------------------------------------------------------------------------
+# Typeflow tier (DESIGN.md §12): per-function, straight-line + branch-join
+# dataflow with local type inference over a crate-wide type index. Five
+# rules: use-after-move, double-mut-borrow, must-use-result,
+# closure-capture-sync, type-mismatch-lite. Mirrors
+# rust/src/analysis/typeflow.rs rule-for-rule. The contract is the same
+# as sigcheck's: a finding must mean a broken build — anything the local
+# parse cannot resolve with confidence (generics, shadowed bindings,
+# cross-arm flows, loops carrying state across iterations) bails out
+# silently. §12 lists the bail-outs explicitly.
+
+PRIMITIVE_TYPES = frozenset(
+    "bool char str u8 u16 u32 u64 u128 usize "
+    "i8 i16 i32 i64 i128 isize f32 f64".split())
+NONCOPY_STD = frozenset(
+    "String Vec Box VecDeque BTreeMap BTreeSet HashMap HashSet PathBuf "
+    "OsString Rc Arc RefCell Cell Mutex RwLock".split())
+NONSYNC_TYPES = frozenset(["RefCell", "Rc", "Cell"])
+# deref-coercion targets (&String -> &str etc): never compared
+COERCE_TARGETS = frozenset(["str", "Path", "OsStr"])
+# smart pointers with Deref: skip by-ref comparisons involving them
+DEREF_SOURCES = frozenset(["Box", "Rc", "Arc", "Cow"])
+STD_TYPE_NEWS = frozenset(["new", "with_capacity", "from", "default"])
+
+LET_RE = re.compile(r"\blet\b")
+FOR_RE = re.compile(r"\bfor\b")
+IN_RE = re.compile(r"\bin\b")
+MUT_RE = re.compile(r"\bmut\b")
+DIVERGE_RE = re.compile(r"\b(?:return|break|continue|panic|unreachable|todo)\b")
+DERIVE_RE = re.compile(r"#\[derive\(([^)]*)\)\]")
+IMPL_COPY_RE = re.compile(r"\bimpl\s+Copy\s+for\s+([A-Za-z_]\w*)")
+COND_KW_RE = re.compile(r"\b(?:if|match|for|while|loop)\b")
+ANN_ARG_RE = re.compile(r"(?:mut\s+)?([A-Za-z_]\w*)\s*:(?!:)\s*(.*)$", re.S)
+BARE_ARG_RE = re.compile(r"(&)?\s*(?:mut\s+)?([a-z_]\w*)$")
+MUT_REF_RHS_RE = re.compile(r"&\s*mut\s+([A-Za-z_]\w*)$")
+CLONE_RHS_RE = re.compile(r"([A-Za-z_]\w*)\s*\.\s*clone\s*\(\s*\)$")
+TYPE_CALL_RHS_RE = re.compile(r"([A-Za-z_][\w:]*)\s*\(")
+TYPE_ALIAS_RE = re.compile(
+    r"\btype\s+([A-Za-z_]\w*)\s*(<[^=;]*>)?\s*=\s*([^;]+);")
+
+
+def type_info(t, generics=frozenset()):
+    """Type text -> (is_ref, head); head None when the type cannot be
+    resolved to a concrete last-segment name (generic params, impl/dyn,
+    tuples, slices, fn pointers, trait-bound sums, Self)."""
+    t = t.strip()
+    is_ref = False
+    while t.startswith("&"):
+        is_ref = True
+        t = t[1:].lstrip()
+        lm = re.match(r"'\w+\s*", t)
+        if lm:
+            t = t[lm.end():]
+        if t.startswith("mut") and not _ident_at(t, 3):
+            t = t[3:].lstrip()
+    if not t or t[0] in "([<*'":
+        return is_ref, None
+    for kw in ("impl", "dyn", "fn"):
+        if t.startswith(kw) and not _ident_at(t, len(kw)):
+            return is_ref, None
+    m = TYPE_HEAD_RE.match(t)
+    head = m.group(1) if m else None
+    if head is None or head in generics or head == "Self":
+        return is_ref, None
+    rest = t[m.end():].lstrip()
+    if rest and not rest.startswith("<"):
+        return is_ref, None  # `Foo + Send`, odd tails: not a plain path
+    return is_ref, head
+
+
+def _generic_params(text):
+    """Type-parameter names declared in a `<...>` generics list body."""
+    out = set()
+    for part in text.split(","):
+        part = part.strip()
+        if not part or part.startswith("'"):
+            continue
+        if part.startswith("const ") or part.startswith("const\t"):
+            part = part[6:].lstrip()
+        m = re.match(r"([A-Za-z_]\w*)", part)
+        if m:
+            out.add(m.group(1))
+    return out
+
+
+def parse_fn_types(code, name_end):
+    """Typed view of an fn signature whose name ends at name_end:
+    (param_infos, ret_info, generic_fn, has_self, body_open, param_names,
+    generics) or None. param_infos excludes self; each is (is_ref, head);
+    ret_info is (is_ref, head) or None for unit; body_open is the index
+    of the body `{` or None for bodiless decls."""
+    i = skip_ws(code, name_end)
+    generics = frozenset()
+    generic_fn = False
+    if i < len(code) and code[i] == "<":
+        j = skip_angles(code, i)
+        generics = frozenset(_generic_params(code[i + 1:j - 1]))
+        generic_fn = True
+        i = skip_ws(code, j)
+    if i >= len(code) or code[i] != "(":
+        return None
+    parts, close = split_delim(code, i, expr_mode=False)
+    if parts is None:
+        return None
+    infos, names, has_self = [], [], False
+    for k, p in enumerate(parts):
+        p = strip_attrs(p.strip())
+        if not p:
+            continue
+        if k == 0 and _is_self_param(p):
+            has_self = True
+            continue
+        m = ANN_ARG_RE.match(p)
+        infos.append(type_info(m.group(2), generics) if m else (False, None))
+        names.append(m.group(1) if m else None)
+    j = skip_ws(code, close + 1)
+    ret = None
+    if code.startswith("->", j):
+        stop = len(code)
+        for ch in ("{", ";"):
+            q = code.find(ch, j)
+            if q != -1:
+                stop = min(stop, q)
+        rt = code[j + 2:stop]
+        wm = re.search(r"\bwhere\b", rt)
+        if wm:
+            rt, generic_fn = rt[:wm.start()], True
+        ret = type_info(rt, generics)
+    ob, semi = code.find("{", close), code.find(";", close)
+    body = ob if ob != -1 and (semi == -1 or ob < semi) else None
+    return infos, ret, generic_fn, has_self, body, names, generics
+
+
+class TypeIndex:
+    """Name-keyed type view of every linted file. Duplicate names with
+    differing typed signatures poison their entry to None — resolution
+    through this index must be conservative, never guessed."""
+
+    def __init__(self):
+        self.fns = {}      # free-fn name -> (params, ret, generic, has_self)
+        self.methods = {}  # impl/trait fn name -> same | None (poisoned)
+        self.types = set()   # every declared struct/enum name
+        self.copy = set()    # #[derive(.. Copy ..)] / `impl Copy for` names
+        self.aliases = {}    # `type N = T;` name -> (is_ref, head) | None
+
+    def resolve(self, info):
+        """Resolve one level of type alias in a (is_ref, head) info;
+        alias chains and poisoned aliases resolve to an unknown head."""
+        if info is None or info[1] not in self.aliases:
+            return info
+        ent = self.aliases[info[1]]
+        if ent is None or ent[1] in self.aliases:
+            return (info[0], None)
+        return (info[0] or ent[0], ent[1])
+
+
+def _tf_merge(table, name, ent):
+    if table.get(name, ()) is None:
+        return
+    if ent is None or (name in table and table[name] != ent):
+        table[name] = None
+    else:
+        table[name] = ent
+
+
+def build_type_index(meta):
+    """meta: {path: (code, ...)} -> TypeIndex over every linted file."""
+    tf = TypeIndex()
+    for path in sorted(meta):
+        code = meta[path][0]
+        spans = [(o, e) for _n, _t, o, e in impl_blocks(code)] \
+            + trait_spans(code)
+        for m in FN_RE.finditer(code):
+            ft = parse_fn_types(code, m.end())
+            ent = None if ft is None else (tuple(ft[0]), ft[1], ft[2], ft[3])
+            table = tf.methods if any(o <= m.start() < e for o, e in spans) \
+                else tf.fns
+            _tf_merge(table, m.group(1), ent)
+        for m in STRUCT_RE.finditer(code):
+            tf.types.add(m.group(1))
+        for m in ENUM_RE.finditer(code):
+            tf.types.add(m.group(1))
+        for m in DERIVE_RE.finditer(code):
+            if "Copy" not in [t.strip() for t in m.group(1).split(",")]:
+                continue
+            rest = strip_attrs(code[m.start():])
+            rest = re.sub(r"^pub(?:\([^)]*\))?\s+", "", rest)
+            dm = re.match(r"(?:struct|enum)\s+([A-Za-z_]\w*)", rest)
+            if dm:
+                tf.copy.add(dm.group(1))
+        for m in IMPL_COPY_RE.finditer(code):
+            tf.copy.add(m.group(1))
+        for m in TYPE_ALIAS_RE.finditer(code):
+            generics = _generic_params(m.group(2)[1:-1]) if m.group(2) \
+                else frozenset()
+            _tf_merge(tf.aliases, m.group(1), type_info(m.group(3), generics))
+    return tf
+
+
+def copyness(info, tf):
+    """"copy" / "move" / None (unknown) for a (is_ref, head) info. Only
+    "move" bindings participate in use-after-move: unknown types bail."""
+    info = tf.resolve(info)
+    if info is None:
+        return None
+    is_ref, head = info
+    if is_ref:
+        return "copy"
+    if head is None:
+        return None
+    if head in PRIMITIVE_TYPES or head in tf.copy:
+        return "copy"
+    if head in NONCOPY_STD or head in tf.types:
+        return "move"
+    return None
+
+
+def _resolve_call_ret(callee_path, tf):
+    """(params, ret, generic, has_self) for a call through a (possibly
+    `::`-qualified) callee, or None. Std modules/types resolve only via
+    the few constructors whose type is their own path head."""
+    segs = callee_path.split("::")
+    if any(not s for s in segs) or "Self" in segs:
+        return None
+    name = segs[-1]
+    if len(segs) >= 2 and segs[-2][:1].isupper():
+        ty = segs[-2]
+        if ty in NONCOPY_STD or ty in PRIMITIVE_TYPES:
+            if name in STD_TYPE_NEWS:
+                return ((), (False, ty), False, False)
+            return None
+        if ty not in tf.types:
+            return None
+        return tf.methods.get(name)
+    if segs[0] in ("std", "core", "alloc"):
+        return None
+    return tf.fns.get(name)
+
+
+def infer_rhs(rhs, tf, local_types):
+    """(is_ref, head) inferred from a let initializer, or None. Only
+    syntactic certainties and index-resolved whole-expression calls."""
+    rhs = rhs.strip()
+    is_ref = False
+    if rhs.startswith("&"):
+        is_ref = True
+        rhs = rhs[1:].lstrip()
+        if rhs.startswith("mut") and not _ident_at(rhs, 3):
+            rhs = rhs[3:].lstrip()
+    if rhs.startswith("vec!"):
+        return is_ref, "Vec"
+    if rhs.startswith("format!"):
+        return is_ref, "String"
+    if rhs.startswith('"'):
+        q = rhs.find('"', 1)  # literals are blanked; next quote closes
+        rest = rhs[q + 1:].lstrip() if q != -1 else "?"
+        if rest.startswith(".to_string()") or rest.startswith(".to_owned()"):
+            return is_ref, "String"
+        return (True, "str") if not rest else None
+    m = CLONE_RHS_RE.match(rhs)
+    if m:
+        info = local_types.get(m.group(1))
+        return (is_ref, info[1]) if info and info[1] else None
+    m = TYPE_CALL_RHS_RE.match(rhs)
+    if m:
+        parts, close = split_delim(rhs, m.end() - 1, expr_mode=True)
+        if parts is None or rhs[close + 1:].strip():
+            return None  # not a whole-expression call
+        ent = _resolve_call_ret(m.group(1), tf)
+        if ent is not None and not ent[2] and ent[1] is not None \
+                and ent[1][1] is not None:
+            return (is_ref or ent[1][0], ent[1][1])
+    return None
+
+
+def _find_body_open(code, i, end):
+    """First '{' at paren/bracket depth 0 in code[i:end); None when a
+    statement boundary or a match-arm arrow intervenes (match guards)."""
+    d = 0
+    while i < end:
+        c = code[i]
+        if c in "([":
+            d += 1
+        elif c in ")]":
+            d -= 1
+        elif d == 0:
+            if c == "{":
+                return i
+            if c == ";" or (c == "=" and code[i + 1:i + 2] == ">"):
+                return None
+        i += 1
+    return None
+
+
+class BodySpans:
+    """Control-flow regions of one fn body, byte spans into `code`."""
+
+    def __init__(self):
+        self.if_groups = []  # [[(open, end), ...]] — mutually exclusive
+        self.cond = []       # (open, end) maybe-not-executed regions
+        self.match_bodies = []  # (open, end) — arms indistinguishable
+        self.closures = []   # (bar, params_text, body_open, body_end)
+        self.skip = []       # nested fn bodies: analyzed on their own
+
+
+def _collect_spans(code, bo, be):
+    sp = BodySpans()
+    for m in FN_RE.finditer(code, bo, be):
+        ft = parse_fn_types(code, m.end())
+        if ft is not None and ft[4] is not None and ft[4] < be:
+            sp.skip.append((ft[4], match_brace(code, ft[4])))
+
+    def skipped(pos):
+        return any(o <= pos < e for o, e in sp.skip)
+
+    consumed = set()
+    for m in COND_KW_RE.finditer(code, bo, be):
+        s = m.start()
+        if skipped(s) or s in consumed:
+            continue
+        word = m.group(0)
+        if word == "if" and prev_token(code, s) == "else":
+            continue  # walked from its chain head
+        ob = _find_body_open(code, m.end(), be)
+        if ob is None:
+            continue
+        e = match_brace(code, ob)
+        if word == "match":
+            sp.match_bodies.append((ob, e))
+            sp.cond.append((ob, e))
+            continue
+        if word in ("for", "while", "loop"):
+            sp.cond.append((ob, e))
+            continue
+        group = [(ob, e)]
+        sp.cond.append((ob, e))
+        i = skip_ws(code, e)
+        while code.startswith("else", i) and not _ident_at(code, i + 4):
+            i = skip_ws(code, i + 4)
+            if code.startswith("if", i) and not _ident_at(code, i + 2):
+                consumed.add(i)
+                ob2 = _find_body_open(code, i + 2, be)
+                final = False
+            elif i < be and code[i] == "{":
+                ob2, final = i, True
+            else:
+                break
+            if ob2 is None:
+                break
+            e2 = match_brace(code, ob2)
+            group.append((ob2, e2))
+            sp.cond.append((ob2, e2))
+            i = skip_ws(code, e2)
+            if final:
+                break
+        sp.if_groups.append(group)
+
+    i = bo
+    while i < be:
+        if code[i] != "|" or skipped(i):
+            i += 1
+            continue
+        if code[i + 1:i + 2] == "=":
+            i += 2
+            continue
+        p2, p1 = prev_nonws(code, i)
+        starts = p1 in "(,{;=" or (p2 == "=" and p1 == ">") \
+            or prev_token(code, i) in ("move", "return", "else")
+        if not starts:
+            i += 1
+            continue
+        if code[i + 1:i + 2] == "|":
+            pe, params = i + 1, ""
+        else:
+            j, d = i + 1, 0
+            while j < be:
+                cj = code[j]
+                if cj in "([":
+                    d += 1
+                elif cj in ")]":
+                    d -= 1
+                elif cj == "|" and d == 0:
+                    break
+                j += 1
+            if j >= be:
+                i += 1
+                continue
+            pe, params = j, code[i + 1:j]
+        k = skip_ws(code, pe + 1)
+        if k < be and code[k] == "{":
+            cb, ce = k, match_brace(code, k)
+        else:
+            cb, j, d = k, k, 0
+            while j < be:
+                cj = code[j]
+                if cj in "([{":
+                    d += 1
+                elif cj in ")]}":
+                    if d == 0:
+                        break
+                    d -= 1
+                elif cj in ",;" and d == 0:
+                    break
+                j += 1
+            ce = j
+        sp.closures.append((i, params, cb, ce))
+        i = pe + 1
+    return sp
+
+
+def _let_decls(code, bo, be, sp):
+    """`let` statements in the body (closures included): (let_pos, names,
+    pattern_end, ann_text|None, rhs_span|None, refutable)."""
+    out = []
+    for m in LET_RE.finditer(code, bo, be):
+        if any(o <= m.start() < e for o, e in sp.skip):
+            continue
+        refut = prev_token(code, m.start()) in ("if", "while")
+        i, pend, ann_s = m.end(), None, None
+        par = brk = 0
+        while i < be:
+            c = code[i]
+            if par == brk == 0:
+                if c == ":" and code[i + 1:i + 2] != ":" \
+                        and code[i - 1] != ":":
+                    pend, ann_s = i, i + 1
+                    break
+                if c == "=" and code[i + 1:i + 2] != "=" \
+                        and code[i - 1] not in "<>!+-*/%&|^=":
+                    pend = i
+                    break
+                if c in ";{":
+                    pend = i
+                    break
+            if c == "(":
+                par += 1
+            elif c == ")":
+                par -= 1
+            elif c == "[":
+                brk += 1
+            elif c == "]":
+                brk -= 1
+            i += 1
+        if pend is None:
+            continue
+        names = [t.group(0) for t in IDENT_RE.finditer(code, m.end(), pend)
+                 if t.group(0) not in KEYWORDS]
+        ann, eq = None, pend if code[pend] == "=" else None
+        if ann_s is not None:
+            j, par, brk, brc, ang = ann_s, 0, 0, 0, 0
+            while j < be:
+                c = code[j]
+                if par == brk == brc == ang == 0 and \
+                        (c == ";" or (c == "=" and code[j + 1:j + 2] != "="
+                                      and code[j - 1] not in "<>!+-*/%&|^=")):
+                    break
+                if c == "(":
+                    par += 1
+                elif c == ")":
+                    par -= 1
+                elif c == "[":
+                    brk += 1
+                elif c == "]":
+                    brk -= 1
+                elif c == "{":
+                    brc += 1
+                elif c == "}":
+                    brc -= 1
+                elif c == "<":
+                    ang += 1
+                elif c == ">" and code[j - 1] not in "-=":
+                    ang = max(0, ang - 1)
+                j += 1
+            if j >= be:
+                continue
+            ann = code[ann_s:j].strip()
+            eq = j if code[j] == "=" else None
+        rhs_span = None
+        if eq is not None and not refut:
+            j, par, brk, brc = eq + 1, 0, 0, 0
+            bad = False
+            while j < be:
+                c = code[j]
+                if c == ";" and par == brk == brc == 0:
+                    break
+                if c == "(":
+                    par += 1
+                elif c == ")":
+                    par -= 1
+                elif c == "[":
+                    brk += 1
+                elif c == "]":
+                    brk -= 1
+                elif c == "{":
+                    brc += 1
+                elif c == "}":
+                    brc -= 1
+                if par < 0 or brc < 0:
+                    bad = True
+                    break
+                j += 1
+            if not bad and j < be:
+                rhs_span = (eq + 1, j)
+        out.append((m.start(), names, pend,
+                    ann if not refut else None, rhs_span, refut))
+    return out
+
+
+def _closure_param_names(params):
+    names = []
+    for part in params.split(","):
+        head = part.split(":", 1)[0]
+        names.extend(t.group(0) for t in IDENT_RE.finditer(head)
+                     if t.group(0) not in KEYWORDS)
+    return names
+
+
+def _nonws_back(code, i):
+    while i >= 0 and code[i].isspace():
+        i -= 1
+    return i
+
+
+def _stmt_diverges(code, lo, p):
+    """True when the statement containing p starts with a control-flow
+    exit — a move inside it never shares a path with later uses."""
+    j = p - 1
+    while j >= lo and code[j] not in ";{}":
+        j -= 1
+    k = skip_ws(code, j + 1)
+    return any(code.startswith(w, k) and not _ident_at(code, k + len(w))
+               for w in ("return", "break", "continue"))
+
+
+def _innermost_opener(code, lo, pos):
+    """Innermost unclosed '(', '[' or '{' between lo and pos, or None."""
+    stack = []
+    for i in range(lo, pos):
+        c = code[i]
+        if c in "([{":
+            stack.append(i)
+        elif c in ")]}" and stack:
+            stack.pop()
+    return stack[-1] if stack else None
+
+
+def _opener_kind(code, pos):
+    """Classify the group opened at pos: call / macro / group / index /
+    structlit / block."""
+    c = code[pos]
+    if c == "[":
+        return "index"
+    if c == "(":
+        _q2, q1 = prev_nonws(code, pos)
+        if q1 == "!":
+            return "macro"
+        t = prev_token(code, pos)
+        return "call" if t and t not in KEYWORDS else "group"
+    t = prev_token(code, pos)
+    if t and t[0].isupper() and t not in KEYWORDS \
+            and not SCREAMING_RE.fullmatch(t) \
+            and prev_token(code, _nonws_back(code, pos - 1) - len(t) + 1) \
+            not in ("struct", "enum", "union", "trait", "impl", "fn", "mod"):
+        return "structlit"
+    return "block"
+
+
+def _path_start(code, i0):
+    """Start index of the `a::b::`-qualified path ending at ident i0."""
+    i = i0
+    while True:
+        p2, p1 = prev_nonws(code, i)
+        if p1 != ":" or p2 != ":":
+            return i
+        j = _nonws_back(code, i - 1) - 1   # first ':'
+        j = _nonws_back(code, j) - 1       # second ':'
+        j = _nonws_back(code, j + 1)
+        if j < 0 or not (code[j].isalnum() or code[j] == "_"):
+            return i
+        while j >= 0 and (code[j].isalnum() or code[j] == "_"):
+            j -= 1
+        i = j + 1
+
+
+def _analyze_fn(path, code, ft, tf, std_methods, out):
+    infos, _ret, _gen, _has_self, body_open, pnames, generics = ft
+    bo, be = body_open + 1, match_brace(code, body_open)
+    sp = _collect_spans(code, bo, be)
+    lets = _let_decls(code, bo, be, sp)
+
+    # -- binding table: names declared exactly once anywhere in the body
+    # (params, lets, for-patterns, closure params). Shadowing of any kind
+    # untracks the name — the dataflow is deliberately scope-blind.
+    decl_count = {}
+
+    def bump(n):
+        decl_count[n] = decl_count.get(n, 0) + 1
+
+    for name in pnames:
+        if name:
+            bump(name)
+    for _pos, names, _pe, _ann, _rhs, _ref in lets:
+        for n in names:
+            bump(n)
+    for m in FOR_RE.finditer(code, bo, be):
+        if any(o <= m.start() < e for o, e in sp.skip):
+            continue
+        inm = IN_RE.search(code, m.end(), be)
+        if inm:
+            for t in IDENT_RE.finditer(code, m.end(), inm.start()):
+                if t.group(0) not in KEYWORDS:
+                    bump(t.group(0))
+    for _bar, params, _cb, _ce in sp.closures:
+        for n in _closure_param_names(params):
+            bump(n)
+
+    binds = {}            # name -> (is_ref, head) | None (tracked, untyped)
+    mut_ref_lets = {}     # r -> (let_pos, target, rhs_end)
+    for name, info in zip(pnames, infos):
+        if name and decl_count.get(name) == 1:
+            binds[name] = info
+    for pos, names, _pe, ann, rhs_span, refut in lets:
+        if refut or len(names) != 1 or decl_count.get(names[0]) != 1:
+            continue
+        name = names[0]
+        rhs = code[rhs_span[0]:rhs_span[1]].strip() if rhs_span else ""
+        mm = MUT_REF_RHS_RE.match(rhs)
+        if mm:
+            mut_ref_lets[name] = (pos, mm.group(1), rhs_span[1])
+        info = type_info(ann, generics) if ann is not None else None
+        if (info is None or info[1] is None) and rhs:
+            inferred = infer_rhs(rhs, tf, binds)
+            if ann is None:
+                info = inferred
+            elif inferred is not None and info is not None and info[0] \
+                    and inferred[0] and info[1] is None:
+                pass  # annotated-but-unresolved stays unresolved
+        binds[name] = info
+        # type-mismatch-lite (a): annotation vs whole-call initializer
+        if ann is not None and rhs:
+            ai = tf.resolve(type_info(ann, generics))
+            ri = tf.resolve(infer_rhs(rhs, tf, binds))
+            if ai is not None and ri is not None \
+                    and ai[1] is not None and ri[1] is not None \
+                    and ai[0] == ri[0] and ai[1] != ri[1] \
+                    and ai[1] not in COERCE_TARGETS \
+                    and ri[1] not in COERCE_TARGETS \
+                    and not (ai[0] and (ai[1] in DEREF_SOURCES
+                                        or ri[1] in DEREF_SOURCES)):
+                out.append(Finding(
+                    "type-mismatch-lite", path, line_of(code, pos),
+                    col_of(code, pos),
+                    f"`{name}` is annotated `{ai[1]}` but its "
+                    f"initializer is `{ri[1]}`"))
+
+    # -- decl zones: ident occurrences that are declarations, not uses
+    zones = []
+    for pos, _names, pend, _ann, rhs_span, _refut in lets:
+        zones.append((pos, rhs_span[0] - 1 if rhs_span else pend))
+    for m in FOR_RE.finditer(code, bo, be):
+        inm = IN_RE.search(code, m.end(), be)
+        if inm:
+            zones.append((m.start(), inm.start()))
+    for bar, _params, cb, _ce in sp.closures:
+        zones.append((bar, cb))
+
+    def in_any(pos, spans):
+        return any(o <= pos < e for o, e in spans)
+
+    def closure_at(pos):
+        best = None
+        for bar, _p, _cb, ce in sp.closures:
+            if bar <= pos < ce and (best is None or bar < best):
+                best = bar
+        return best
+
+    # -- event scan
+    events = {}
+
+    def add(name, pos, kind):
+        events.setdefault(name, []).append((pos, kind))
+
+    for m in IDENT_RE.finditer(code, bo, be):
+        name = m.group(0)
+        if name not in binds and name not in mut_ref_lets:
+            continue
+        s, e = m.start(), m.end()
+        if in_any(s, sp.skip) or in_any(s, zones):
+            continue
+        p2, p1 = prev_nonws(code, s)
+        if p1 == "." and p2 != ".":
+            continue  # field or method name, not this binding
+        if p1 == ":" and p2 == ":":
+            continue  # path segment
+        nx = skip_ws(code, e)
+        nxc = code[nx] if nx < len(code) else ""
+        if nxc == ":":
+            continue  # path segment / struct-field name / pattern field
+        pt = prev_token(code, s)
+        amp_mut = False
+        if pt == "mut":
+            j = _nonws_back(code, _nonws_back(code, s - 1) - 3)
+            amp_mut = j >= 0 and code[j] == "&"
+            if not amp_mut:
+                continue  # `let mut` / `ref mut` pattern position
+        if pt in ("fn", "struct", "enum", "mod", "use", "impl", "trait",
+                  "let", "for", "ref", "loop", "break", "continue"):
+            continue
+        cl = closure_at(s)
+        if cl is not None:
+            add(name, cl, "capture")  # capture is a use at closure birth
+            continue
+        if amp_mut:
+            # a whole-binding &mut; `&mut x.f` / `&mut x[i]` borrow less
+            add(name, s, "mutborrow" if nxc in ",);}" else "use")
+            continue
+        if p1 == "&":
+            add(name, s, "borrow")
+            continue
+        if nxc == "=" and code[nx + 1:nx + 2] != "=" and p1 in ";{}":
+            add(name, s, "reassign")
+            continue
+        if nxc in ".?[" or nxc not in ",);}":
+            add(name, s, "use")
+            continue
+        # complete expression: move or use by context. A move inside a
+        # `return`/`break`/`continue` statement exits the path — no
+        # later use can follow it — so it is recorded as a plain use.
+        if pt == "return" or _stmt_diverges(code, bo, s):
+            add(name, s, "use")
+            continue
+        if p1 == "=" and p2 not in "=<>!+-*/%&|^":
+            add(name, s, "move")
+            continue
+        op = _innermost_opener(code, bo, s)
+        if op is None:
+            add(name, s, "move" if p1 in ";{}" else "use")
+            continue
+        k = _opener_kind(code, op)
+        if (k == "call" and p1 in "(,") \
+                or (k == "structlit"
+                    and (p1 in "{," or (p1 == ":" and p2 != ":"))) \
+                or (k == "block" and p1 in ";{}"):
+            add(name, s, "move")
+        else:
+            add(name, s, "use")
+
+    def span_set(pos):
+        return [(o, e) for o, e in sp.cond if o <= pos < e]
+
+    def pair_allowed(p, q):
+        """May control flow definitely reach q with the effect at p
+        applied? Conservative: exclusive branches / match arms bail."""
+        for o, e in sp.match_bodies:
+            if o <= p < e and o <= q < e:
+                return False
+        for group in sp.if_groups:
+            pi = [k for k, (o, e) in enumerate(group) if o <= p < e]
+            qi = [k for k, (o, e) in enumerate(group) if o <= q < e]
+            if pi and qi and pi[0] != qi[0]:
+                return False
+        for o, e in sp.cond:
+            if o <= p < e and not (o <= q < e) \
+                    and DIVERGE_RE.search(code, p, e):
+                return False
+        return True
+
+    # -- use-after-move
+    for name in sorted(binds):
+        if copyness(binds[name], tf) != "move":
+            continue
+        evs = sorted(set(events.get(name, [])))
+        moves = [p for p, k in evs if k == "move"]
+        if not moves:
+            continue
+        fired = False
+        for q, k in evs:
+            if k == "reassign" or fired:
+                continue
+            for p in moves:
+                if p >= q:
+                    break
+                if any(r for r, rk in evs if rk == "reassign" and p < r < q):
+                    continue
+                if not pair_allowed(p, q):
+                    continue
+                out.append(Finding(
+                    "use-after-move", path, line_of(code, q),
+                    col_of(code, q),
+                    f"`{name}` used after move "
+                    f"(moved on line {line_of(code, p)})"))
+                fired = True
+                break
+
+    # -- double-mut-borrow
+    for name in sorted(binds):
+        evs = sorted(set(events.get(name, [])))
+        mbs = [p for p, k in evs if k == "mutborrow"]
+        fired = False
+        for a, b in zip(mbs, mbs[1:]):
+            oa, ob = _innermost_opener(code, bo, a), \
+                _innermost_opener(code, bo, b)
+            if oa is not None and oa == ob \
+                    and _opener_kind(code, oa) == "call":
+                out.append(Finding(
+                    "double-mut-borrow", path, line_of(code, b),
+                    col_of(code, b),
+                    f"`{name}` mutably borrowed twice in one call "
+                    f"argument list"))
+                fired = True
+                break
+        if fired:
+            continue
+        for r in sorted(mut_ref_lets):
+            lpos, target, rhs_end = mut_ref_lets[r]
+            if target != name:
+                continue
+            revs = sorted(set(events.get(r, [])))
+            for q in mbs:
+                if q < rhs_end:
+                    continue  # the borrow that created `r` itself
+                uses_r = [u for u, k in revs if u > q and k != "reassign"]
+                if not uses_r:
+                    continue
+                u = uses_r[0]
+                if span_set(lpos) != span_set(q) \
+                        or span_set(q) != span_set(u):
+                    continue  # not straight-line: bail
+                if any(rr for rr, rk in evs
+                       if rk == "reassign" and lpos < rr < u):
+                    continue
+                out.append(Finding(
+                    "double-mut-borrow", path, line_of(code, q),
+                    col_of(code, q),
+                    f"`{name}` mutably borrowed again while `{r}` "
+                    f"(line {line_of(code, lpos)}) is still live"))
+                fired = True
+                break
+            if fired:
+                break
+
+    # -- must-use-result + type-mismatch-lite (b) at call sites
+    for m in CALL_RE.finditer(code, bo, be):
+        cname = m.group(1)
+        i0, open_idx = m.start(1), m.end() - 1
+        if in_any(i0, sp.skip) or cname in KEYWORDS or cname in binds:
+            continue
+        p2, p1 = prev_nonws(code, i0)
+        ent, is_dot = None, False
+        if p1 == ".":
+            if p2 == "." or cname in std_methods:
+                continue
+            ent, is_dot = tf.methods.get(cname), True
+            if ent is not None and not ent[3]:
+                ent = None  # assoc fn called through a dot: not this one
+        elif p1 == ":" and p2 == ":":
+            ps = _path_start(code, i0)
+            ent = _resolve_call_ret(
+                "::".join(t.group(0)
+                          for t in IDENT_RE.finditer(code, ps, m.end(1))),
+                tf)
+        else:
+            ent = tf.fns.get(cname)
+        if ent is None:
+            continue
+        params, ret_info, generic_fn, _hs = ent
+        if ret_info is not None and ret_info[1] == "Result":
+            if is_dot:
+                j = _nonws_back(code, _nonws_back(code, i0 - 1) - 1)
+                stmt = False
+                if j >= 0 and (code[j].isalnum() or code[j] == "_"):
+                    k = j
+                    while k >= 0 and (code[k].isalnum() or code[k] == "_"):
+                        k -= 1
+                    _r2, r1 = prev_nonws(code, k + 1)
+                    stmt = r1 in ";{}"
+            else:
+                _r2, r1 = prev_nonws(code, _path_start(code, i0))
+                stmt = r1 in ";{}"
+            if stmt:
+                parts_c, close = split_delim(code, open_idx, expr_mode=True)
+                if parts_c is not None:
+                    nx2 = skip_ws(code, close + 1)
+                    if nx2 < len(code) and code[nx2] == ";":
+                        out.append(Finding(
+                            "must-use-result", path, line_of(code, i0),
+                            col_of(code, i0),
+                            f"result of `{cname}` (a `Result`) is "
+                            f"discarded — use `?`, `let _ = …`, or match"))
+        if generic_fn:
+            continue
+        parts_c, close = split_delim(code, open_idx, expr_mode=True)
+        if parts_c is None:
+            continue
+        if len([p for p in parts_c if p.strip()]) != len(params):
+            continue  # arity problems are call-arity's finding, not ours
+        pos0, ai = open_idx + 1, 0
+        for p in parts_c:
+            if not p.strip():
+                pos0 += len(p) + 1
+                continue
+            pi = params[ai]
+            ai += 1
+            am = BARE_ARG_RE.match(p.strip())
+            arg_pos = pos0 + (len(p) - len(p.lstrip()))
+            pos0 += len(p) + 1
+            if am is None or am.group(2) not in binds:
+                continue
+            info = tf.resolve(binds[am.group(2)])
+            pi = tf.resolve(pi)
+            if info is None or info[1] is None or pi[1] is None:
+                continue
+            b_ref, b_head = info
+            a_ref = b_ref
+            if am.group(1):
+                if b_ref:
+                    continue  # `&x` where x is already a reference
+                a_ref = True
+            if a_ref != pi[0]:
+                continue  # autoref/deref territory: bail
+            if b_head in COERCE_TARGETS or pi[1] in COERCE_TARGETS:
+                continue
+            if a_ref and (b_head in DEREF_SOURCES
+                          or pi[1] in DEREF_SOURCES):
+                continue
+            if b_head != pi[1]:
+                out.append(Finding(
+                    "type-mismatch-lite", path, line_of(code, arg_pos),
+                    col_of(code, arg_pos),
+                    f"`{am.group(2)}` is `{b_head}` but parameter "
+                    f"{ai} of `{cname}` is `{pi[1]}`"))
+
+    # -- closure-capture-sync: closures handed to pool::parallel_map
+    for bar, params, cb, ce in sp.closures:
+        op = _innermost_opener(code, bo, bar)
+        if op is None or _opener_kind(code, op) != "call" \
+                or prev_token(code, op) != "parallel_map":
+            continue
+        locals_ = set(_closure_param_names(params))
+        for lpos, names, _pe, _ann, _rhs, _refut in lets:
+            if cb <= lpos < ce:
+                locals_.update(names)
+        for b2, p2_, _cb2, _ce2 in sp.closures:
+            if bar < b2 and cb <= b2 < ce:
+                locals_.update(_closure_param_names(p2_))
+        for mm in MUT_RE.finditer(code, cb, ce):
+            _q2, q1 = prev_nonws(code, mm.start())
+            if q1 != "&":
+                continue
+            im = IDENT_RE.match(code, skip_ws(code, mm.end()))
+            if im is None or im.group(0) in locals_:
+                continue
+            out.append(Finding(
+                "closure-capture-sync", path, line_of(code, mm.start()),
+                col_of(code, mm.start()),
+                f"closure passed to `parallel_map` captures "
+                f"`&mut {im.group(0)}` — parallel workers need "
+                f"`Fn` + `Sync`"))
+            break
+        for im in IDENT_RE.finditer(code, cb, ce):
+            nm = im.group(0)
+            if nm in locals_ or nm not in binds:
+                continue
+            q2, q1 = prev_nonws(code, im.start())
+            if (q1 == "." and q2 != ".") or (q1 == ":" and q2 == ":"):
+                continue
+            if code[skip_ws(code, im.end()):][:2] == "::":
+                continue
+            info = tf.resolve(binds[nm])
+            if info and not info[0] and info[1] in NONSYNC_TYPES:
+                out.append(Finding(
+                    "closure-capture-sync", path, line_of(code, im.start()),
+                    col_of(code, im.start()),
+                    f"closure passed to `parallel_map` captures `{nm}` "
+                    f"of non-`Sync` type `{info[1]}`"))
+                break
+
+
+def rule_typeflow(path, code, tf, std_methods, out):
+    for m in FN_RE.finditer(code):
+        ft = parse_fn_types(code, m.end())
+        if ft is not None and ft[4] is not None:
+            _analyze_fn(path, code, ft, tf, std_methods, out)
+
+
+# --------------------------------------------------------------------------
 # Driver.
 
-def lint_files(file_map):
-    """file_map: {repo-relative path: raw source text} -> [Finding]."""
+def lint_files(file_map, tiers=None):
+    """file_map: {repo-relative path: raw source text} -> [Finding].
+    `tiers` restricts to a subset of TIERS keys (None = all); the meta
+    suppression rule always runs."""
+    run = lambda t: tiers is None or t in tiers  # noqa: E731
     meta = {}
     for path, raw in file_map.items():
         code, comments = strip_source(raw)
@@ -1715,25 +2716,34 @@ def lint_files(file_map):
         meta[path] = (code, depths, comments, raw)
     index_src = {p: (m[0], m[1]) for p, m in meta.items()}
     modules, macros = build_index(index_src)
-    sig_idx = build_sig_index(meta)
+    sig_idx = build_sig_index(meta) if run("sig") else None
+    type_idx = build_type_index(meta) if run("typeflow") else None
+    std = std_dot_methods()
     findings = []
     for path in sorted(meta):
         code, depths, comments, raw = meta[path]
         uses = parse_uses(code, depths)
         test_lines = cfg_test_lines(code)
-        rule_mod_file(path, code, depths, comments, file_map, findings)
-        rule_use_resolve(path, code, depths, uses, modules, findings)
-        rule_unused_import(path, code, uses, findings)
-        rule_macro_import(path, code, uses, macros, findings)
-        rule_line_cols(path, raw, findings)
-        rule_sigcheck(path, code, depths, uses, modules, sig_idx, findings)
-        if path.startswith("rust/src/"):
+        if run("compile"):
+            rule_mod_file(path, code, depths, comments, file_map, findings)
+            rule_use_resolve(path, code, depths, uses, modules, findings)
+            rule_unused_import(path, code, uses, findings)
+            rule_macro_import(path, code, uses, macros, findings)
+            rule_line_cols(path, raw, findings)
+        if run("sig"):
+            rule_sigcheck(path, code, depths, uses, modules, sig_idx,
+                          findings)
+        if run("typeflow"):
+            rule_typeflow(path, code, type_idx, std, findings)
+        if path.startswith("rust/src/") and run("discipline"):
             rule_timer(path, code, test_lines, findings)
             rule_rng(path, code, test_lines, findings)
             rule_iter_order(path, code, test_lines, findings)
         rule_suppression_wellformed(path, comments, findings)
-    src_meta = {p: m for p, m in meta.items() if p.startswith("rust/src/")}
-    rule_fp_complete(src_meta, findings)
+    if run("discipline"):
+        src_meta = {p: m for p, m in meta.items()
+                    if p.startswith("rust/src/")}
+        rule_fp_complete(src_meta, findings)
     kept = []
     for f in findings:
         comments = meta[f.path][2]
@@ -1773,21 +2783,36 @@ def collect(root, paths):
     return file_map
 
 
+def record_json(rec):
+    """The byte-compatible JSON form shared with the Rust linter: compact
+    separators, raw (non-ascii-escaped) unicode, insertion key order."""
+    return json.dumps(rec, separators=(",", ":"), ensure_ascii=False)
+
+
 def main(argv):
     if "--self-test" in argv:
         return self_test()
+    if "--write-golden" in argv:
+        return write_golden()
     paths = DEFAULT_PATHS
     if "--paths" in argv:
         paths = argv[argv.index("--paths") + 1].split(",")
+    tiers = None
+    if "--tiers" in argv:
+        tiers = [t.strip() for t in argv[argv.index("--tiers") + 1].split(",")]
+        bad = [t for t in tiers if t not in TIERS]
+        if bad:
+            sys.exit(f"srclint: unknown tier(s) {', '.join(bad)} "
+                     f"(known: {', '.join(sorted(TIERS))})")
     root = repo_root()
     file_map = collect(root, paths)
-    findings = lint_files(file_map)
+    findings = lint_files(file_map, tiers)
     as_json = "--json" in argv
     for f in findings:
-        print(json.dumps(f.record()) if as_json else f.text())
+        print(record_json(f.record()) if as_json else f.text())
     summary = {"rec": "summary", "files": len(file_map),
                "findings": len(findings), "clean": not findings}
-    print(json.dumps(summary) if as_json
+    print(record_json(summary) if as_json
           else f"srclint: {len(file_map)} file(s), {len(findings)} finding(s)")
     return 1 if findings else 0
 
@@ -1810,6 +2835,33 @@ def expect(name, file_map, rule, want):
     return True
 
 
+def golden_path():
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "lint_golden.jsonl")
+
+
+def golden_text(cases):
+    """The sorted-JSON transcript of the whole fixture battery. Both
+    linters regenerate this text and compare it byte-for-byte against
+    tools/lint_golden.jsonl, which proves their sorted `--json` outputs
+    are byte-identical on the shared battery."""
+    lines = []
+    for name, _rule, _want, files in cases:
+        lines.append(f"# case: {name}")
+        for f in lint_files(files):
+            lines.append(record_json(f.record()))
+    return "\n".join(lines) + "\n"
+
+
+def write_golden():
+    text = golden_text(manifest()[1])
+    with open(golden_path(), "w", encoding="utf-8") as fh:
+        fh.write(text)
+    print(f"srclint: wrote {golden_path()} "
+          f"({len(text.splitlines())} line(s))")
+    return 0
+
+
 def self_test():
     std, cases = manifest()
     ok = True
@@ -1828,6 +2880,22 @@ def self_test():
         print("self-test FAILED: rules with no fixture case: "
               + ", ".join(missing))
         ok = False
+    try:
+        want_golden = open(golden_path(), encoding="utf-8").read()
+    except OSError as e:
+        print(f"self-test FAILED: missing golden transcript: {e}")
+        ok = False
+    else:
+        got = golden_text(cases)
+        if got != want_golden:
+            print("self-test FAILED: tools/lint_golden.jsonl is stale "
+                  "(regenerate with --write-golden; the Rust suite "
+                  "asserts the same bytes)")
+            for a, b in zip(want_golden.splitlines(), got.splitlines()):
+                if a != b:
+                    print(f"  golden: {a}\n  got:    {b}")
+                    break
+            ok = False
     print(f"self-test {'OK' if ok else 'FAILED'} "
           f"({len(cases)} case(s), {len(seen)} rule(s))")
     return 0 if ok else 2
